@@ -1,0 +1,50 @@
+//! Loss-landscape explorer (Fig. 1): dump the calibration-loss surface
+//! over the first two quantized conv layers' weight steps at a chosen
+//! bitwidth, as CSV for plotting.
+//!
+//!     cargo run --release --example loss_landscape -- [bits] [out.csv]
+
+use lapq::analysis::surface::scan_weight_surface;
+use lapq::config::{BitSpec, ExperimentConfig};
+use lapq::coordinator::jobs::Runner;
+use lapq::lapq::objective::{grids, CalibObjective, LayerMask};
+use lapq::lapq::pipeline::layerwise_deltas;
+use lapq::runtime::EngineHandle;
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let bits: u32 = args.first().map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let out = args.get(1).cloned().unwrap_or_else(|| format!("surface_{bits}bit.csv"));
+
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "cnn6".into();
+    cfg.train_steps = 200;
+    cfg.bits = BitSpec::new(bits, 32); // weight-only surface, like Fig. 1
+    cfg.lapq.exclude_first_last = false; // we scan layers 1 and 2
+
+    let spec = runner.eng.manifest().model("cnn6")?.clone();
+    let (sess, _val, calib) = runner.session_with_calib(&cfg)?;
+    let mask = LayerMask::all(spec.n_quant_layers(), cfg.bits);
+    let (qmw, qma) = grids(&spec, cfg.bits);
+    let mut obj = CalibObjective::new(
+        &runner.eng,
+        sess,
+        calib.loss_batches.clone(),
+        mask.clone(),
+        qmw.clone(),
+        qma.clone(),
+    );
+    let (dw, da) = layerwise_deltas(&calib, &mask, &qmw, &qma, 2.0);
+
+    let surface = scan_weight_surface(&mut obj, &dw, &da, 1, 2, 0.4, 3.0, 15)?;
+    std::fs::write(&out, surface.to_csv())?;
+    let (lo, hi) = surface.min_max();
+    println!(
+        "wrote {out}: loss range [{lo:.4}, {hi:.4}], interaction index {:.4} (0 = separable)",
+        surface.interaction_index()
+    );
+    Ok(())
+}

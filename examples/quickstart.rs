@@ -1,0 +1,40 @@
+//! Quickstart: train a small MLP on the synthetic task, quantize it to
+//! W4/A4 with LAPQ, and compare against the MMSE baseline.
+//!
+//!     cargo run --release --example quickstart
+
+use lapq::config::{BitSpec, ExperimentConfig, Method};
+use lapq::coordinator::jobs::Runner;
+use lapq::runtime::EngineHandle;
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+
+    // 1. Boot the PJRT engine over the AOT artifacts (`make artifacts`).
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+
+    // 2. Describe the experiment: model, training budget, quantization.
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp3".into();
+    cfg.train_steps = 150;
+    cfg.lr = 0.1;
+    cfg.bits = BitSpec::new(4, 4);
+
+    // 3. Run LAPQ and the MMSE baseline (training is cached across jobs).
+    for method in [Method::Lapq, Method::Mmse, Method::MinMax] {
+        cfg.method = method;
+        let res = runner.run(&cfg)?;
+        println!(
+            "{:<7} W{}/A{}  FP32 {:.1}% -> quant {:.1}%   calib loss {:.4} (fp32 {:.4})",
+            res.method,
+            cfg.bits.weights,
+            cfg.bits.acts,
+            res.fp32_metric * 100.0,
+            res.quant_metric * 100.0,
+            res.outcome.calib_loss,
+            res.outcome.fp32_calib_loss,
+        );
+    }
+    Ok(())
+}

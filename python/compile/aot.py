@@ -1,0 +1,181 @@
+"""AOT compiler: lower every Layer-2 entry point to HLO *text* artifacts.
+
+This is the only place Python runs — once, at build time (`make artifacts`).
+The Rust runtime loads the emitted ``artifacts/*.hlo.txt`` via
+``HloModuleProto::from_text_file`` and executes them on the PJRT CPU client.
+
+HLO **text** (not ``lowered.compile().serialize()`` / serialized protos) is
+the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Alongside the HLO files we write ``manifest.json`` — the ABI contract the
+Rust coordinator parses: parameter specs (shape/init), the quant-layer
+table, and the exact argument/output shapes of every entry point.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .models import REGISTRY
+from .models import ncf as ncf_mod
+from .models.common import (
+    make_acts,
+    make_fwd_fp32,
+    make_fwd_quant,
+    make_train_step,
+)
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), DTYPES[dtype])
+
+
+def _param_specs(model):
+    return [_spec(p.shape) for p in model.param_specs]
+
+
+def _batch_specs(model, entry):
+    return [_spec(s, d) for (s, d) in model.input_spec[entry].values()]
+
+
+def _quant_vec_specs(model):
+    n = len(model.quant_layers)
+    return [_spec((n,)) for _ in range(4)]  # dw, qmw, da, qma
+
+
+def _entry_arg_specs(model, entry):
+    p = _param_specs(model)
+    if entry == "train_step":
+        return p + p + _batch_specs(model, "train") + [_spec(())]
+    if entry == "fwd_quant":
+        return p + _quant_vec_specs(model) + _batch_specs(model, "eval")
+    if entry == "fwd_fp32":
+        return p + _batch_specs(model, "eval")
+    if entry == "acts":
+        specs = _batch_specs(model, "eval")
+        if model.task == "ncf":
+            specs = specs[:2]  # users, items (drop labels)
+        else:
+            specs = specs[:1]  # x (drop y)
+        return p + specs
+    if entry == "hitrate":
+        return p + _batch_specs(model, "hitrate")
+    if entry == "hitrate_quant":
+        return p + _quant_vec_specs(model) + _batch_specs(model, "hitrate")
+    raise ValueError(entry)
+
+
+def _entry_fn(model, entry):
+    if entry == "train_step":
+        return make_train_step(model)
+    if entry == "fwd_quant":
+        return make_fwd_quant(model)
+    if entry == "fwd_fp32":
+        return make_fwd_fp32(model)
+    if entry == "acts":
+        return make_acts(model)
+    if entry == "hitrate":
+        return ncf_mod.make_hitrate(model)
+    if entry == "hitrate_quant":
+        return ncf_mod.make_hitrate_quant(model)
+    raise ValueError(entry)
+
+
+def entries_for(model):
+    base = ["train_step", "fwd_quant", "fwd_fp32", "acts"]
+    if model.task == "ncf":
+        base += ["hitrate", "hitrate_quant"]
+    return base
+
+
+def build_model(model, out_dir):
+    """Lower all entry points of ``model``; return its manifest fragment."""
+    man = {
+        "task": model.task,
+        "params": [
+            {"name": p.name, "shape": list(p.shape), "init": p.init, "fan_in": p.fan_in}
+            for p in model.param_specs
+        ],
+        "quant_layers": [
+            {
+                "name": q.name,
+                "weight_param": q.weight_param,
+                "act_signed": q.act_signed,
+                "kind": q.kind,
+            }
+            for q in model.quant_layers
+        ],
+        # NOTE: emitted as an ordered *list* — argument order is ABI.
+        "input_spec": {
+            e: [{"name": k, "shape": list(s), "dtype": d} for k, (s, d) in spec.items()]
+            for e, spec in model.input_spec.items()
+        },
+        "entries": {},
+    }
+    for entry in entries_for(model):
+        fn = _entry_fn(model, entry)
+        specs = _entry_arg_specs(model, entry)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{model.name}_{entry}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = [
+            {"shape": list(o.shape), "dtype": "f32" if o.dtype == jnp.float32 else "i32"}
+            for o in jax.eval_shape(fn, *specs)
+        ]
+        man["entries"][entry] = {
+            "file": fname,
+            "n_args": len(specs),
+            "outputs": out_shapes,
+        }
+        print(f"  {fname}: {len(text) / 1e6:.2f} MB, {len(specs)} args, {len(out_shapes)} outputs")
+    return man
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--model", default=None, help="build a single model")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"models": {}}
+    for name, model in REGISTRY.items():
+        if args.model and name != args.model:
+            continue
+        print(f"[aot] {name}")
+        manifest["models"][name] = build_model(model, args.out)
+
+    path = os.path.join(args.out, "manifest.json")
+    # Merge with an existing manifest when building a subset.
+    if args.model and os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f)
+        old["models"].update(manifest["models"])
+        manifest = old
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

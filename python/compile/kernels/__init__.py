@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels (interpret=True) + pure-jnp reference oracles."""
+
+from .fake_quant import fake_quant, grid_qmax
+from .lp_error import lp_error, lp_error_sum
+from .quant_matmul import quant_matmul
+
+__all__ = ["fake_quant", "grid_qmax", "lp_error", "lp_error_sum", "quant_matmul"]

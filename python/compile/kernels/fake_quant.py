@@ -1,0 +1,96 @@
+"""Layer-1 Pallas kernel: symmetric uniform fake-quantization (Eq. 1 of the
+LAPQ paper).
+
+``Q_{Δ,qmax}(x) = clip(round(x / Δ), lo, qmax) · Δ`` with ``lo = -qmax`` for
+signed (weight) grids and ``lo = 0`` for unsigned (post-ReLU activation)
+grids.  ``Δ`` and ``qmax`` are *runtime* scalars, so a single lowered HLO
+serves every bitwidth and every candidate step size the Layer-3 optimizer
+proposes.  ``Δ == 0`` bypasses quantization (the paper's "do not quantize
+first/last layer" convention is expressed by the coordinator passing 0).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the tensor is tiled into
+VMEM-resident blocks; Δ/qmax are broadcast scalars (SMEM); the body is pure
+VPU element-wise work.  On this image Pallas MUST run with
+``interpret=True`` (the CPU PJRT plugin cannot execute Mosaic custom-calls),
+so the BlockSpec schedule documents the TPU plan while numerics are
+validated on CPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane-aligned block width.  On a real TPU this would be an (8k, 128) VMEM
+# tile; under interpret=True the block is simply the unit of the grid loop,
+# so we keep the number of grid steps small (<= MAX_BLOCKS) to bound the
+# size of the lowered HLO while-loop on the CPU hot path.
+LANE = 128
+MAX_BLOCKS = 8
+
+
+def _block_layout(n: int) -> tuple[int, int]:
+    """Choose (block_len, n_blocks) for a flat tensor of ``n`` elements."""
+    block = max(LANE, -(-n // MAX_BLOCKS))  # ceil-div, then lane-align up
+    block = -(-block // LANE) * LANE
+    n_blocks = -(-n // block)
+    return block, n_blocks
+
+
+def _fq_kernel(x_ref, d_ref, q_ref, o_ref, *, signed: bool):
+    """One VMEM block of quantize-dequantize."""
+    x = x_ref[...]
+    d = d_ref[0]
+    qmax = q_ref[0]
+    # Guard Δ == 0 (pass-through layer): divide by a safe value, then select.
+    safe = jnp.where(d > 0.0, d, 1.0)
+    q = jnp.round(x / safe)
+    lo = -qmax if signed else jnp.float32(0.0)
+    q = jnp.clip(q, lo, qmax)
+    y = q * safe
+    o_ref[...] = jnp.where(d > 0.0, y, x)
+
+
+@functools.partial(jax.jit, static_argnames=("signed",))
+def fake_quant(x, delta, qmax, signed: bool = True):
+    """Quantize-dequantize ``x`` on a uniform grid of step ``delta``.
+
+    Args:
+      x: any-shape float32 tensor.
+      delta: scalar float32 step size; ``0`` disables quantization.
+      qmax: scalar float32, largest integer level (``2^{M-1}-1`` signed,
+        ``2^M - 1`` unsigned for ``M`` bits).
+      signed: weight grid (symmetric) vs. post-ReLU activation grid.
+
+    Returns:
+      Tensor of the same shape/dtype as ``x``.
+    """
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    block, n_blocks = _block_layout(n)
+    pad = block * n_blocks - n
+    flat = jnp.pad(flat, (0, pad))
+    tiled = flat.reshape(n_blocks, block)
+    d = jnp.asarray(delta, jnp.float32).reshape(1)
+    q = jnp.asarray(qmax, jnp.float32).reshape(1)
+
+    out = pl.pallas_call(
+        functools.partial(_fq_kernel, signed=signed),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, block), jnp.float32),
+        interpret=True,
+    )(tiled, d, q)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def grid_qmax(bits: int, signed: bool = True) -> float:
+    """Largest integer level of an ``bits``-bit uniform grid."""
+    return float(2 ** (bits - 1) - 1) if signed else float(2**bits - 1)

@@ -1,0 +1,66 @@
+"""Layer-1 Pallas kernel: blockwise L_p quantization-error reduction.
+
+Computes ``sum(|Q_{Δ,qmax}(x) - x|^p)`` (Eq. 12 of the paper, without the
+final ``1/p`` root, which the caller applies).  Used by the layer-wise phase
+of LAPQ and by the MMSE baseline; the Layer-3 coordinator golden-sections
+over Δ with this as the inner objective.
+
+Blocks reduce into per-block partial sums; the final reduction happens in
+plain XLA outside the kernel.  Zero padding is invariant: ``Q(0) = 0`` so
+padded elements contribute nothing.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fake_quant import _block_layout
+
+
+def _lp_kernel(x_ref, d_ref, q_ref, p_ref, o_ref, *, signed: bool):
+    x = x_ref[...]
+    d = d_ref[0]
+    qmax = q_ref[0]
+    p = p_ref[0]
+    safe = jnp.where(d > 0.0, d, 1.0)
+    qv = jnp.round(x / safe)
+    lo = -qmax if signed else jnp.float32(0.0)
+    qv = jnp.clip(qv, lo, qmax)
+    y = jnp.where(d > 0.0, qv * safe, x)
+    err = jnp.abs(y - x)
+    o_ref[0, 0] = jnp.sum(err**p)
+
+
+@functools.partial(jax.jit, static_argnames=("signed",))
+def lp_error_sum(x, delta, qmax, p, signed: bool = True):
+    """``sum(|Q(x) - x|^p)`` as a scalar float32."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    block, n_blocks = _block_layout(n)
+    pad = block * n_blocks - n
+    tiled = jnp.pad(flat, (0, pad)).reshape(n_blocks, block)
+    d = jnp.asarray(delta, jnp.float32).reshape(1)
+    q = jnp.asarray(qmax, jnp.float32).reshape(1)
+    pv = jnp.asarray(p, jnp.float32).reshape(1)
+
+    partials = pl.pallas_call(
+        functools.partial(_lp_kernel, signed=signed),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, 1), jnp.float32),
+        interpret=True,
+    )(tiled, d, q, pv)
+    return jnp.sum(partials)
+
+
+def lp_error(x, delta, qmax, p, signed: bool = True):
+    """Eq. 12: ``(sum |Q(x)-x|^p)^{1/p}``."""
+    return lp_error_sum(x, delta, qmax, p, signed=signed) ** (1.0 / p)

@@ -1,0 +1,75 @@
+"""Layer-1 Pallas kernel: quantized matmul.
+
+``qmm(a, b) = FQ_{Δa,qa}(a) @ FQ_{Δw,qw}(b)`` — both operands are
+fake-quantized *inside* the tile so the (TPU) MXU consumes quantized
+operands straight from VMEM without an HBM round-trip.  The dense layers of
+every Layer-2 model route through this kernel, which is how the paper's
+compute hot-spot lowers into the model HLO.
+
+Grid is (M/bm, N/bn, K/bk) with accumulation over the K axis; tiles are
+lane-aligned and zero-padded (FQ(0) = 0, so padding is exact).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _fq(x, d, qmax, lo_signed: bool):
+    safe = jnp.where(d > 0.0, d, 1.0)
+    q = jnp.round(x / safe)
+    lo = -qmax if lo_signed else jnp.float32(0.0)
+    q = jnp.clip(q, lo, qmax)
+    return jnp.where(d > 0.0, q * safe, x)
+
+
+def _qmm_kernel(a_ref, b_ref, da_ref, qa_ref, dw_ref, qw_ref, o_ref, *, signed_a: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = _fq(a_ref[...], da_ref[0], qa_ref[0], lo_signed=signed_a)
+    b = _fq(b_ref[...], dw_ref[0], qw_ref[0], lo_signed=True)
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("signed_a",))
+def quant_matmul(a, b, d_act, qmax_act, d_w, qmax_w, signed_a: bool = True):
+    """Fake-quantized ``a @ b`` for 2-D operands.
+
+    ``d_act``/``d_w`` are runtime scalar step sizes (0 = pass-through);
+    ``qmax_*`` the integer grid bounds.  ``signed_a`` selects the activation
+    grid sign (images / embeddings are signed, post-ReLU tensors unsigned).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = min(_ceil_to(m, 8), 128), min(_ceil_to(k, 128), 512), min(_ceil_to(n, 128), 128)
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    scal = lambda v: jnp.asarray(v, jnp.float32).reshape(1)
+    sspec = pl.BlockSpec((1,), lambda i, j, l: (0,))
+
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, signed_a=signed_a),
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            sspec,
+            sspec,
+            sspec,
+            sspec,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p, scal(d_act), scal(qmax_act), scal(d_w), scal(qmax_w))
+    return out[:m, :n]

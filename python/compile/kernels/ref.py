@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the correctness ground truth: pytest (and the hypothesis sweeps)
+assert the Pallas kernels match these to float32 tolerance across shapes,
+step sizes, grid bounds and signedness.  They are also what the Rust
+`quant::quantizer` module mirrors bit-for-bit on the host side.
+"""
+
+import jax.numpy as jnp
+
+
+def fake_quant_ref(x, delta, qmax, signed: bool = True):
+    """Reference quantize-dequantize (paper Eq. 1, runtime-Δ form)."""
+    delta = jnp.asarray(delta, jnp.float32)
+    qmax = jnp.asarray(qmax, jnp.float32)
+    safe = jnp.where(delta > 0.0, delta, 1.0)
+    q = jnp.round(x / safe)
+    lo = -qmax if signed else jnp.float32(0.0)
+    q = jnp.clip(q, lo, qmax)
+    return jnp.where(delta > 0.0, q * safe, x)
+
+
+def lp_error_sum_ref(x, delta, qmax, p, signed: bool = True):
+    """Reference ``sum(|Q(x) - x|^p)``."""
+    y = fake_quant_ref(x, delta, qmax, signed=signed)
+    return jnp.sum(jnp.abs(y - x) ** jnp.asarray(p, jnp.float32))
+
+
+def lp_error_ref(x, delta, qmax, p, signed: bool = True):
+    """Reference Eq. 12 ``(sum |Q(x)-x|^p)^{1/p}``."""
+    return lp_error_sum_ref(x, delta, qmax, p, signed=signed) ** (1.0 / p)
+
+
+def quant_matmul_ref(a, b, d_act, qmax_act, d_w, qmax_w, signed_a: bool = True):
+    """Reference fake-quantized matmul."""
+    aq = fake_quant_ref(a, d_act, qmax_act, signed=signed_a)
+    bq = fake_quant_ref(b, d_w, qmax_w, signed=True)
+    return aq @ bq

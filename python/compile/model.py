@@ -1,0 +1,3 @@
+"""Back-compat shim: the Layer-2 model zoo lives in ``compile.models``."""
+
+from .models import REGISTRY, Model  # noqa: F401

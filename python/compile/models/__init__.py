@@ -1,0 +1,15 @@
+"""Layer-2 model zoo (JAX graphs that call the Layer-1 Pallas kernels).
+
+Each model module exposes a ``MODEL`` object (see ``common.Model``); the
+registry below is what ``aot.py`` iterates to emit artifacts.
+"""
+
+from . import cnn, mlp, mobile, ncf, resnet
+from .common import Model
+
+REGISTRY = {
+    m.name: m
+    for m in [mlp.MODEL, cnn.MODEL, resnet.MODEL, mobile.MODEL, ncf.MODEL]
+}
+
+__all__ = ["REGISTRY", "Model"]

@@ -1,0 +1,70 @@
+"""cnn6 — 6-layer plain CNN on 32x32x3 synthetic images.
+
+Stand-in for ResNet-18 in the paper's tables: the main vehicle for
+Tables 1/3/4, the loss-surface figures (first two conv layers), and the
+Hessian/curvature analysis.  Quant layers: conv1..conv5 + fc (6 sites).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    Model,
+    ParamSpec,
+    QuantLayer,
+    conv2d,
+    dense,
+    global_avg_pool,
+    vision_loss_and_correct,
+)
+
+N_CLASSES = 10
+
+PARAMS = [
+    ParamSpec("conv1_w", (3, 3, 3, 16), "he", 27),
+    ParamSpec("conv1_b", (16,), "zeros"),
+    ParamSpec("conv2_w", (3, 3, 16, 32), "he", 144),
+    ParamSpec("conv2_b", (32,), "zeros"),
+    ParamSpec("conv3_w", (3, 3, 32, 32), "he", 288),
+    ParamSpec("conv3_b", (32,), "zeros"),
+    ParamSpec("conv4_w", (3, 3, 32, 64), "he", 288),
+    ParamSpec("conv4_b", (64,), "zeros"),
+    ParamSpec("conv5_w", (3, 3, 64, 64), "he", 576),
+    ParamSpec("conv5_b", (64,), "zeros"),
+    ParamSpec("fc_w", (64, N_CLASSES), "glorot", 64),
+    ParamSpec("fc_b", (N_CLASSES,), "zeros"),
+]
+
+QUANT_LAYERS = [
+    QuantLayer("conv1", 0, act_signed=True, kind="conv"),
+    QuantLayer("conv2", 2, act_signed=False, kind="conv"),
+    QuantLayer("conv3", 4, act_signed=False, kind="conv"),
+    QuantLayer("conv4", 6, act_signed=False, kind="conv"),
+    QuantLayer("conv5", 8, act_signed=False, kind="conv"),
+    QuantLayer("fc", 10, act_signed=False, kind="dense"),
+]
+
+
+def apply(params, x, quant, tape=None):
+    (w1, b1, w2, b2, w3, b3, w4, b4, w5, b5, wf, bf) = params
+    h = jax.nn.relu(conv2d(x, w1, b1, quant, 0, act_signed=True, tape=tape))
+    h = jax.nn.relu(conv2d(h, w2, b2, quant, 1, act_signed=False, stride=2, tape=tape))
+    h = jax.nn.relu(conv2d(h, w3, b3, quant, 2, act_signed=False, tape=tape))
+    h = jax.nn.relu(conv2d(h, w4, b4, quant, 3, act_signed=False, stride=2, tape=tape))
+    h = jax.nn.relu(conv2d(h, w5, b5, quant, 4, act_signed=False, tape=tape))
+    pooled = global_avg_pool(h)
+    return dense(pooled, wf, bf, quant, 5, act_signed=False, tape=tape)
+
+
+MODEL = Model(
+    name="cnn6",
+    param_specs=PARAMS,
+    quant_layers=QUANT_LAYERS,
+    apply=apply,
+    loss_and_correct=vision_loss_and_correct(apply),
+    input_spec={
+        "train": {"x": ((128, 32, 32, 3), "f32"), "y": ((128,), "i32")},
+        "eval": {"x": ((256, 32, 32, 3), "f32"), "y": ((256,), "i32")},
+    },
+    task="vision",
+)

@@ -1,0 +1,250 @@
+"""Shared Layer-2 machinery: quantized layer primitives, entry-point builders.
+
+A ``Model`` couples
+
+  * ``param_specs`` — names/shapes/init kinds, mirrored by the Rust
+    coordinator's host-side parameter store (it initializes and owns the
+    weights; Python never sees them at run time);
+  * ``quant_layers`` — the per-layer quantization table (paper §3: one
+    weight step Δw and one input-activation step Δa per layer);
+  * ``apply`` — the forward pass, optionally quantized via the Layer-1
+    Pallas kernels with *runtime* Δ vectors.
+
+Entry points lowered by ``aot.py`` (argument order is the ABI the Rust
+runtime relies on — see artifacts/manifest.json):
+
+  train_step : [*params, *momentum, x, y, lr]          -> (*params', *mom', loss)
+  fwd_quant  : [*params, dw, qmw, da, qma, x, y]       -> (loss, correct)
+  fwd_fp32   : [*params, x, y]                         -> (loss, correct)
+  acts       : [*params, x]                            -> (act_0, ..., act_{n-1})
+
+where ``dw/qmw/da/qma`` are float32[n_quant_layers] vectors; entry ``i`` of
+``dw`` equal to 0 disables weight quantization of layer ``i`` (ditto ``da``
+for activations) — the first/last-layer convention is pure coordinator
+policy, never baked into the graph.
+"""
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import fake_quant, quant_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One host-owned parameter tensor."""
+
+    name: str
+    shape: tuple
+    init: str  # "he" | "glorot" | "zeros" | "embed"
+    fan_in: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantLayer:
+    """One quantization site: a weight tensor + its input activation."""
+
+    name: str
+    weight_param: int  # index into param_specs
+    act_signed: bool  # input activation grid sign (image/embedding vs ReLU)
+    kind: str  # "conv" | "dense" | "dwconv" | "embed"
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    name: str
+    param_specs: Sequence[ParamSpec]
+    quant_layers: Sequence[QuantLayer]
+    # apply(params, inputs, quant) -> (logits, acts); quant is None (fp32)
+    # or a 4-tuple (dw, qmw, da, qma) of f32[n] vectors.
+    apply: Callable
+    # loss_and_correct(params, quant, *batch) -> (loss, correct)
+    loss_and_correct: Callable
+    input_spec: dict  # name -> (shape, dtype) for one batch, per entry point
+    task: str = "vision"  # "vision" | "ncf"
+
+
+# ---------------------------------------------------------------------------
+# Quantized layer primitives
+# ---------------------------------------------------------------------------
+
+
+def qdq_w(w, quant, i):
+    """Fake-quantize weight tensor of quant-layer ``i`` (signed grid)."""
+    if quant is None:
+        return w
+    dw, qmw, _, _ = quant
+    return fake_quant(w, dw[i], qmw[i], signed=True)
+
+
+def qdq_a(x, quant, i, signed):
+    """Fake-quantize the input activation of quant-layer ``i``."""
+    if quant is None:
+        return x
+    _, _, da, qma = quant
+    return fake_quant(x, da[i], qma[i], signed=signed)
+
+
+def dense(x, w, b, quant, i, act_signed, tape=None):
+    """Quantized dense layer; routes through the Pallas quant_matmul kernel.
+
+    ``tape`` (dict) records the FP32 input activation under the quant-layer
+    index — the ``acts`` entry point uses it so that activation calibration
+    data aligns 1:1 with the quant-layer table.
+    """
+    if tape is not None:
+        tape[i] = x
+    if quant is None:
+        return x @ w + b
+    dw, qmw, da, qma = quant
+    return quant_matmul(x, w, da[i], qma[i], dw[i], qmw[i], signed_a=act_signed) + b
+
+
+def conv2d(x, w, b, quant, i, act_signed, stride=1, groups=1, tape=None):
+    """Quantized 3x3/1x1 conv (NHWC, HWIO, SAME)."""
+    if tape is not None:
+        tape[i] = x
+    xq = qdq_a(x, quant, i, act_signed)
+    wq = qdq_w(w, quant, i)
+    y = lax.conv_general_dilated(
+        xq,
+        wq,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    return y + b
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits, y):
+    """Mean cross-entropy over the batch; ``y`` int32 class ids."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logz, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def vision_loss_and_correct(apply):
+    def f(params, quant, x, y):
+        logits = apply(params, x, quant)
+        loss = softmax_xent(logits, y)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return loss, correct
+
+    return f
+
+
+def bce_with_logits(logits, labels):
+    """Numerically stable binary cross-entropy; labels float32 in {0,1}."""
+    return jnp.mean(
+        jnp.maximum(logits, 0.0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Entry-point builders (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: Model, lr_wd: float = 1e-4, momentum: float = 0.9):
+    """SGD-with-momentum step over the FP32 graph (quant=None).
+
+    Flat ABI: [*params, *mom, *batch, lr] -> (*params', *mom', loss).
+    """
+    n = len(model.param_specs)
+
+    def step(*args):
+        params = tuple(args[:n])
+        mom = tuple(args[n : 2 * n])
+        *batch, lr = args[2 * n :]
+
+        def loss_fn(ps):
+            loss, _ = model.loss_and_correct(ps, None, *batch)
+            return loss
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_mom = tuple(momentum * m + g + lr_wd * p for m, g, p in zip(mom, grads, params))
+        new_params = tuple(p - lr * m for p, m in zip(params, new_mom))
+        return (*new_params, *new_mom, loss)
+
+    return step
+
+
+def make_fwd_quant(model: Model):
+    n = len(model.param_specs)
+
+    def fwd(*args):
+        params = tuple(args[:n])
+        dw, qmw, da, qma = args[n : n + 4]
+        batch = args[n + 4 :]
+        loss, correct = model.loss_and_correct(params, (dw, qmw, da, qma), *batch)
+        return loss, correct
+
+    return fwd
+
+
+def make_fwd_fp32(model: Model):
+    n = len(model.param_specs)
+
+    def fwd(*args):
+        params = tuple(args[:n])
+        batch = args[n:]
+        loss, correct = model.loss_and_correct(params, None, *batch)
+        return loss, correct
+
+    return fwd
+
+
+def make_acts(model: Model):
+    """FP32 forward returning the input activation of every quant layer."""
+    n = len(model.param_specs)
+
+    def acts(*args):
+        params = tuple(args[:n])
+        inputs = args[n:]
+        tape = {}
+        arg = inputs if model.task == "ncf" else inputs[0]
+        logits = model.apply(params, arg, None, tape=tape)
+        # Anchor: depend on the logits so no parameter is dead — jax would
+        # otherwise prune unused tail-layer weights from the lowered HLO
+        # signature, breaking the positional ABI the Rust engine assembles.
+        anchor = jnp.sum(logits) * 0.0
+        return tuple(tape[i] + anchor for i in range(len(model.quant_layers)))
+
+    return acts
+
+
+# Init helpers shared by python tests (the Rust store re-implements these).
+
+
+def init_params(model: Model, key):
+    out = []
+    for spec in model.param_specs:
+        key, sub = jax.random.split(key)
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, jnp.float32))
+        elif spec.init == "he":
+            std = (2.0 / max(spec.fan_in, 1)) ** 0.5
+            out.append(std * jax.random.normal(sub, spec.shape, jnp.float32))
+        elif spec.init == "glorot":
+            fan_out = spec.shape[-1]
+            std = (2.0 / (spec.fan_in + fan_out)) ** 0.5
+            out.append(std * jax.random.normal(sub, spec.shape, jnp.float32))
+        elif spec.init == "embed":
+            out.append(0.05 * jax.random.normal(sub, spec.shape, jnp.float32))
+        else:
+            raise ValueError(spec.init)
+    return tuple(out)

@@ -1,0 +1,55 @@
+"""mlp3 — 3-layer MLP on 64-d synthetic features (quickstart model).
+
+Smallest member of the zoo; used by the quickstart example and as the fast
+target for integration tests.  Quant layers: fc1, fc2, fc3 (fc1 input is the
+signed feature vector, later inputs are post-ReLU / unsigned).
+"""
+
+from .common import (
+    Model,
+    ParamSpec,
+    QuantLayer,
+    dense,
+    vision_loss_and_correct,
+)
+
+import jax
+import jax.numpy as jnp
+
+D_IN, H1, H2, N_CLASSES = 64, 128, 96, 16
+
+PARAMS = [
+    ParamSpec("fc1_w", (D_IN, H1), "he", D_IN),
+    ParamSpec("fc1_b", (H1,), "zeros"),
+    ParamSpec("fc2_w", (H1, H2), "he", H1),
+    ParamSpec("fc2_b", (H2,), "zeros"),
+    ParamSpec("fc3_w", (H2, N_CLASSES), "glorot", H2),
+    ParamSpec("fc3_b", (N_CLASSES,), "zeros"),
+]
+
+QUANT_LAYERS = [
+    QuantLayer("fc1", 0, act_signed=True, kind="dense"),
+    QuantLayer("fc2", 2, act_signed=False, kind="dense"),
+    QuantLayer("fc3", 4, act_signed=False, kind="dense"),
+]
+
+
+def apply(params, x, quant, tape=None):
+    w1, b1, w2, b2, w3, b3 = params
+    h = jax.nn.relu(dense(x, w1, b1, quant, 0, act_signed=True, tape=tape))
+    h = jax.nn.relu(dense(h, w2, b2, quant, 1, act_signed=False, tape=tape))
+    return dense(h, w3, b3, quant, 2, act_signed=False, tape=tape)
+
+
+MODEL = Model(
+    name="mlp3",
+    param_specs=PARAMS,
+    quant_layers=QUANT_LAYERS,
+    apply=apply,
+    loss_and_correct=vision_loss_and_correct(apply),
+    input_spec={
+        "train": {"x": ((128, D_IN), "f32"), "y": ((128,), "i32")},
+        "eval": {"x": ((512, D_IN), "f32"), "y": ((512,), "i32")},
+    },
+    task="vision",
+)

@@ -1,0 +1,84 @@
+"""dwsep — depthwise-separable CNN (MobileNet-V2 stand-in).
+
+Depthwise convolutions concentrate few weights per channel with widely
+varying per-channel ranges, which is exactly what makes MobileNets fragile
+under post-training quantization and what makes bias correction matter
+(paper Table 4).  Quant sites: stem + 3x (depthwise, pointwise) + fc = 8.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    Model,
+    ParamSpec,
+    QuantLayer,
+    conv2d,
+    dense,
+    global_avg_pool,
+    vision_loss_and_correct,
+)
+
+N_CLASSES = 10
+
+PARAMS = [
+    ParamSpec("stem_w", (3, 3, 3, 16), "he", 27),
+    ParamSpec("stem_b", (16,), "zeros"),
+    ParamSpec("dw1_w", (3, 3, 1, 16), "he", 9),
+    ParamSpec("dw1_b", (16,), "zeros"),
+    ParamSpec("pw1_w", (1, 1, 16, 32), "he", 16),
+    ParamSpec("pw1_b", (32,), "zeros"),
+    ParamSpec("dw2_w", (3, 3, 1, 32), "he", 9),
+    ParamSpec("dw2_b", (32,), "zeros"),
+    ParamSpec("pw2_w", (1, 1, 32, 64), "he", 32),
+    ParamSpec("pw2_b", (64,), "zeros"),
+    ParamSpec("dw3_w", (3, 3, 1, 64), "he", 9),
+    ParamSpec("dw3_b", (64,), "zeros"),
+    ParamSpec("pw3_w", (1, 1, 64, 64), "he", 64),
+    ParamSpec("pw3_b", (64,), "zeros"),
+    ParamSpec("fc_w", (64, N_CLASSES), "glorot", 64),
+    ParamSpec("fc_b", (N_CLASSES,), "zeros"),
+]
+
+QUANT_LAYERS = [
+    QuantLayer("stem", 0, act_signed=True, kind="conv"),
+    QuantLayer("dw1", 2, act_signed=False, kind="dwconv"),
+    QuantLayer("pw1", 4, act_signed=False, kind="conv"),
+    QuantLayer("dw2", 6, act_signed=False, kind="dwconv"),
+    QuantLayer("pw2", 8, act_signed=False, kind="conv"),
+    QuantLayer("dw3", 10, act_signed=False, kind="dwconv"),
+    QuantLayer("pw3", 12, act_signed=False, kind="conv"),
+    QuantLayer("fc", 14, act_signed=False, kind="dense"),
+]
+
+
+def apply(params, x, quant, tape=None):
+    h = jax.nn.relu(conv2d(x, params[0], params[1], quant, 0, act_signed=True, tape=tape))
+    h = jax.nn.relu(
+        conv2d(h, params[2], params[3], quant, 1, act_signed=False, stride=2, groups=16, tape=tape)
+    )
+    h = jax.nn.relu(conv2d(h, params[4], params[5], quant, 2, act_signed=False, tape=tape))
+    h = jax.nn.relu(
+        conv2d(h, params[6], params[7], quant, 3, act_signed=False, stride=2, groups=32, tape=tape)
+    )
+    h = jax.nn.relu(conv2d(h, params[8], params[9], quant, 4, act_signed=False, tape=tape))
+    h = jax.nn.relu(
+        conv2d(h, params[10], params[11], quant, 5, act_signed=False, groups=64, tape=tape)
+    )
+    h = jax.nn.relu(conv2d(h, params[12], params[13], quant, 6, act_signed=False, tape=tape))
+    pooled = global_avg_pool(h)
+    return dense(pooled, params[14], params[15], quant, 7, act_signed=False, tape=tape)
+
+
+MODEL = Model(
+    name="dwsep",
+    param_specs=PARAMS,
+    quant_layers=QUANT_LAYERS,
+    apply=apply,
+    loss_and_correct=vision_loss_and_correct(apply),
+    input_spec={
+        "train": {"x": ((128, 32, 32, 3), "f32"), "y": ((128,), "i32")},
+        "eval": {"x": ((256, 32, 32, 3), "f32"), "y": ((256,), "i32")},
+    },
+    task="vision",
+)

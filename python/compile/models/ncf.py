@@ -1,0 +1,145 @@
+"""ncf — Neural Collaborative Filtering (NCF-1B stand-in, paper §5.2).
+
+GMF + MLP two-tower NCF [He et al. 2017] over synthetic implicit feedback.
+Trained with BCE on sampled negatives; evaluated with the mlperf protocol
+(hit-rate@10 against 99 sampled negatives), matching Table 2's metric.
+
+Quant sites: 4 embedding tables (weight-only; Δa fixed to 0 by the
+coordinator since their "input" is an index) + fc1 + fc2 + out = 7.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    Model,
+    ParamSpec,
+    QuantLayer,
+    bce_with_logits,
+    dense,
+    qdq_w,
+)
+
+N_USERS, N_ITEMS, DIM = 2000, 1000, 16
+
+PARAMS = [
+    ParamSpec("emb_gmf_u", (N_USERS, DIM), "embed"),
+    ParamSpec("emb_gmf_i", (N_ITEMS, DIM), "embed"),
+    ParamSpec("emb_mlp_u", (N_USERS, DIM), "embed"),
+    ParamSpec("emb_mlp_i", (N_ITEMS, DIM), "embed"),
+    ParamSpec("fc1_w", (2 * DIM, 32), "he", 2 * DIM),
+    ParamSpec("fc1_b", (32,), "zeros"),
+    ParamSpec("fc2_w", (32, 16), "he", 32),
+    ParamSpec("fc2_b", (16,), "zeros"),
+    ParamSpec("out_w", (DIM + 16, 1), "glorot", DIM + 16),
+    ParamSpec("out_b", (1,), "zeros"),
+]
+
+QUANT_LAYERS = [
+    QuantLayer("emb_gmf_u", 0, act_signed=True, kind="embed"),
+    QuantLayer("emb_gmf_i", 1, act_signed=True, kind="embed"),
+    QuantLayer("emb_mlp_u", 2, act_signed=True, kind="embed"),
+    QuantLayer("emb_mlp_i", 3, act_signed=True, kind="embed"),
+    QuantLayer("fc1", 4, act_signed=True, kind="dense"),
+    QuantLayer("fc2", 6, act_signed=False, kind="dense"),
+    QuantLayer("out", 8, act_signed=True, kind="dense"),
+]
+
+
+def _embed(table, idx, quant, i, tape):
+    tq = qdq_w(table, quant, i)
+    e = jnp.take(tq, idx, axis=0)
+    if tape is not None:
+        tape[i] = e  # record looked-up vectors (Δa stays 0 for embeds)
+    return e
+
+
+def apply(params, batch, quant, tape=None):
+    """``batch = (users, items)`` int32 vectors -> logits (B,)."""
+    users, items = batch
+    gu, gi, mu, mi, w1, b1, w2, b2, wo, bo = params
+    eg_u = _embed(gu, users, quant, 0, tape)
+    eg_i = _embed(gi, items, quant, 1, tape)
+    em_u = _embed(mu, users, quant, 2, tape)
+    em_i = _embed(mi, items, quant, 3, tape)
+    gmf = eg_u * eg_i
+    h = jnp.concatenate([em_u, em_i], axis=-1)
+    h = jax.nn.relu(dense(h, w1, b1, quant, 4, act_signed=True, tape=tape))
+    h = jax.nn.relu(dense(h, w2, b2, quant, 5, act_signed=False, tape=tape))
+    z = jnp.concatenate([gmf, h], axis=-1)
+    return dense(z, wo, bo, quant, 6, act_signed=True, tape=tape)[:, 0]
+
+
+def loss_and_correct(params, quant, users, items, labels):
+    logits = apply(params, (users, items), quant)
+    loss = bce_with_logits(logits, labels)
+    pred = (logits > 0.0).astype(jnp.float32)
+    correct = jnp.sum((pred == labels).astype(jnp.float32))
+    return loss, correct
+
+
+def make_hitrate(model):
+    """mlperf NCF eval: hit-rate@10 with 99 sampled negatives.
+
+    ABI: [*params, users(B,), pos(B,), negs(B,99)] -> (hits,)
+    """
+    n = len(model.param_specs)
+
+    def hitrate(*args):
+        params = tuple(args[:n])
+        users, pos, negs = args[n], args[n + 1], args[n + 2]
+        b, k = negs.shape
+        all_items = jnp.concatenate([pos[:, None], negs], axis=1)  # (B, 1+K)
+        users_rep = jnp.repeat(users[:, None], k + 1, axis=1).reshape(-1)
+        logits = apply(params, (users_rep, all_items.reshape(-1)), None)
+        scores = logits.reshape(b, k + 1)
+        rank = jnp.sum((scores[:, 1:] > scores[:, :1]).astype(jnp.int32), axis=1)
+        return (jnp.sum((rank < 10).astype(jnp.float32)),)
+
+    return hitrate
+
+
+def make_hitrate_quant(model):
+    """Quantized hit-rate@10: [*params, dw, qmw, da, qma, users, pos, negs]."""
+    n = len(model.param_specs)
+
+    def hitrate(*args):
+        params = tuple(args[:n])
+        quant = args[n : n + 4]
+        users, pos, negs = args[n + 4], args[n + 5], args[n + 6]
+        b, k = negs.shape
+        all_items = jnp.concatenate([pos[:, None], negs], axis=1)
+        users_rep = jnp.repeat(users[:, None], k + 1, axis=1).reshape(-1)
+        logits = apply(params, (users_rep, all_items.reshape(-1)), quant)
+        scores = logits.reshape(b, k + 1)
+        rank = jnp.sum((scores[:, 1:] > scores[:, :1]).astype(jnp.int32), axis=1)
+        return (jnp.sum((rank < 10).astype(jnp.float32)),)
+
+    return hitrate
+
+
+MODEL = Model(
+    name="ncf",
+    param_specs=PARAMS,
+    quant_layers=QUANT_LAYERS,
+    apply=apply,
+    loss_and_correct=loss_and_correct,
+    input_spec={
+        "train": {
+            "users": ((2048,), "i32"),
+            "items": ((2048,), "i32"),
+            "labels": ((2048,), "f32"),
+        },
+        "eval": {
+            "users": ((4096,), "i32"),
+            "items": ((4096,), "i32"),
+            "labels": ((4096,), "f32"),
+        },
+        "hitrate": {
+            "users": ((256,), "i32"),
+            "pos": ((256,), "i32"),
+            "negs": ((256, 99), "i32"),
+        },
+    },
+    task="ncf",
+)

@@ -1,0 +1,99 @@
+"""resmini — mini residual network on 32x32x3 synthetic images.
+
+Stand-in for ResNet-50/101: deeper (11 quant sites) with skip connections,
+exercising the cross-layer coupling the paper attributes to depth
+(Fig. A.1: adjacent layers interact most).  Two stages of two residual
+blocks each, channel widths 16 -> 32.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    Model,
+    ParamSpec,
+    QuantLayer,
+    conv2d,
+    dense,
+    global_avg_pool,
+    vision_loss_and_correct,
+)
+
+N_CLASSES = 10
+
+PARAMS = [
+    ParamSpec("stem_w", (3, 3, 3, 16), "he", 27),
+    ParamSpec("stem_b", (16,), "zeros"),
+    # stage 1: two residual blocks @16
+    ParamSpec("s1b1c1_w", (3, 3, 16, 16), "he", 144),
+    ParamSpec("s1b1c1_b", (16,), "zeros"),
+    ParamSpec("s1b1c2_w", (3, 3, 16, 16), "he", 144),
+    ParamSpec("s1b1c2_b", (16,), "zeros"),
+    ParamSpec("s1b2c1_w", (3, 3, 16, 16), "he", 144),
+    ParamSpec("s1b2c1_b", (16,), "zeros"),
+    ParamSpec("s1b2c2_w", (3, 3, 16, 16), "he", 144),
+    ParamSpec("s1b2c2_b", (16,), "zeros"),
+    # downsample to 32 channels, stride 2
+    ParamSpec("down_w", (3, 3, 16, 32), "he", 144),
+    ParamSpec("down_b", (32,), "zeros"),
+    # stage 2: two residual blocks @32
+    ParamSpec("s2b1c1_w", (3, 3, 32, 32), "he", 288),
+    ParamSpec("s2b1c1_b", (32,), "zeros"),
+    ParamSpec("s2b1c2_w", (3, 3, 32, 32), "he", 288),
+    ParamSpec("s2b1c2_b", (32,), "zeros"),
+    ParamSpec("s2b2c1_w", (3, 3, 32, 32), "he", 288),
+    ParamSpec("s2b2c1_b", (32,), "zeros"),
+    ParamSpec("s2b2c2_w", (3, 3, 32, 32), "he", 288),
+    ParamSpec("s2b2c2_b", (32,), "zeros"),
+    ParamSpec("fc_w", (32, N_CLASSES), "glorot", 32),
+    ParamSpec("fc_b", (N_CLASSES,), "zeros"),
+]
+
+QUANT_LAYERS = [
+    QuantLayer("stem", 0, act_signed=True, kind="conv"),
+    QuantLayer("s1b1c1", 2, act_signed=False, kind="conv"),
+    QuantLayer("s1b1c2", 4, act_signed=False, kind="conv"),
+    QuantLayer("s1b2c1", 6, act_signed=False, kind="conv"),
+    QuantLayer("s1b2c2", 8, act_signed=False, kind="conv"),
+    QuantLayer("down", 10, act_signed=False, kind="conv"),
+    QuantLayer("s2b1c1", 12, act_signed=False, kind="conv"),
+    QuantLayer("s2b1c2", 14, act_signed=False, kind="conv"),
+    QuantLayer("s2b2c1", 16, act_signed=False, kind="conv"),
+    QuantLayer("s2b2c2", 18, act_signed=False, kind="conv"),
+    QuantLayer("fc", 20, act_signed=False, kind="dense"),
+]
+
+
+def _block(h, params, quant, pi, qi, tape):
+    """Residual block: relu(conv) -> conv, + skip, relu."""
+    w1, b1, w2, b2 = params[pi : pi + 4]
+    y = jax.nn.relu(conv2d(h, w1, b1, quant, qi, act_signed=False, tape=tape))
+    y = conv2d(y, w2, b2, quant, qi + 1, act_signed=False, tape=tape)
+    return jax.nn.relu(h + y)
+
+
+def apply(params, x, quant, tape=None):
+    h = jax.nn.relu(conv2d(x, params[0], params[1], quant, 0, act_signed=True, tape=tape))
+    h = _block(h, params, quant, 2, 1, tape)
+    h = _block(h, params, quant, 6, 3, tape)
+    h = jax.nn.relu(
+        conv2d(h, params[10], params[11], quant, 5, act_signed=False, stride=2, tape=tape)
+    )
+    h = _block(h, params, quant, 12, 6, tape)
+    h = _block(h, params, quant, 16, 8, tape)
+    pooled = global_avg_pool(h)
+    return dense(pooled, params[20], params[21], quant, 10, act_signed=False, tape=tape)
+
+
+MODEL = Model(
+    name="resmini",
+    param_specs=PARAMS,
+    quant_layers=QUANT_LAYERS,
+    apply=apply,
+    loss_and_correct=vision_loss_and_correct(apply),
+    input_spec={
+        "train": {"x": ((128, 32, 32, 3), "f32"), "y": ((128,), "i32")},
+        "eval": {"x": ((256, 32, 32, 3), "f32"), "y": ((256,), "i32")},
+    },
+    task="vision",
+)

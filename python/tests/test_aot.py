@@ -1,0 +1,62 @@
+"""AOT path: HLO-text emission and manifest ABI consistency."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile.aot import (
+    _entry_arg_specs,
+    build_model,
+    entries_for,
+    to_hlo_text,
+)
+from compile.models import REGISTRY
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_emission_smoke(tmp_path):
+    """mlp3 end-to-end lowering produces parseable-looking HLO text."""
+    man = build_model(REGISTRY["mlp3"], str(tmp_path))
+    for entry, info in man["entries"].items():
+        text = (tmp_path / info["file"]).read_text()
+        assert text.startswith("HloModule"), entry
+        assert "ENTRY" in text, entry
+        # 64-bit ids would break xla_extension 0.5.1; text ids are small.
+        assert info["n_args"] >= 1
+
+
+@pytest.mark.parametrize("name", list(REGISTRY))
+def test_entry_arg_counts(name):
+    m = REGISTRY[name]
+    n_p = len(m.param_specs)
+    n_q = len(m.quant_layers)
+    specs = _entry_arg_specs(m, "fwd_quant")
+    n_batch = len(m.input_spec["eval"])
+    assert len(specs) == n_p + 4 + n_batch
+    for s in specs[n_p : n_p + 4]:
+        assert s.shape == (n_q,)
+    train = _entry_arg_specs(m, "train_step")
+    assert len(train) == 2 * n_p + len(m.input_spec["train"]) + 1
+
+
+@pytest.mark.parametrize("name", list(REGISTRY))
+def test_manifest_matches_models(name):
+    """If artifacts/ exists, its manifest must agree with the live ABI."""
+    path = os.path.join(ARTIFACTS, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        man = json.load(f)
+    assert name in man["models"]
+    mm = man["models"][name]
+    m = REGISTRY[name]
+    assert len(mm["params"]) == len(m.param_specs)
+    assert len(mm["quant_layers"]) == len(m.quant_layers)
+    for entry in entries_for(m):
+        assert entry in mm["entries"]
+        assert mm["entries"][entry]["n_args"] == len(_entry_arg_specs(m, entry))
+        f = os.path.join(ARTIFACTS, mm["entries"][entry]["file"])
+        assert os.path.exists(f)

@@ -1,0 +1,185 @@
+"""Layer-1 kernel correctness: Pallas vs. pure-jnp oracle.
+
+The hypothesis sweeps are the "shapes/dtypes fuzzing" contract: any shape,
+any step size, any grid bound must match ``ref.py`` to float32 tolerance.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fake_quant, grid_qmax, lp_error, lp_error_sum, quant_matmul
+from compile.kernels.ref import (
+    fake_quant_ref,
+    lp_error_ref,
+    lp_error_sum_ref,
+    quant_matmul_ref,
+)
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand(shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# fake_quant
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("signed", [True, False])
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize(
+    "shape", [(7,), (128,), (1000,), (37, 53), (3, 3, 16, 32), (2, 32, 32, 3)]
+)
+def test_fake_quant_matches_ref(signed, bits, shape):
+    x = _rand(shape)
+    qmax = grid_qmax(bits, signed)
+    for delta in (0.0, 0.01, 0.1, 0.7):
+        got = fake_quant(x, delta, qmax, signed=signed)
+        want = fake_quant_ref(x, delta, qmax, signed=signed)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_fake_quant_zero_delta_is_identity():
+    x = _rand((257,))
+    np.testing.assert_array_equal(fake_quant(x, 0.0, 7.0), x)
+
+
+def test_fake_quant_idempotent():
+    """Q(Q(x)) == Q(x): quantized values lie exactly on the grid."""
+    x = _rand((513,))
+    once = fake_quant(x, 0.07, 7.0)
+    twice = fake_quant(once, 0.07, 7.0)
+    np.testing.assert_allclose(once, twice, rtol=0, atol=1e-7)
+
+
+def test_fake_quant_error_bound():
+    """|Q(x)-x| <= Δ/2 inside the clip range (round-to-nearest)."""
+    delta, qmax = 0.05, 7.0
+    x = jnp.linspace(-delta * qmax, delta * qmax, 1001)
+    err = jnp.abs(fake_quant(x, delta, qmax) - x)
+    assert float(jnp.max(err)) <= delta / 2 + 1e-6
+
+
+def test_fake_quant_clips():
+    delta, qmax = 0.1, 7.0
+    x = jnp.asarray([100.0, -100.0, 0.69, -0.74])
+    y = fake_quant(x, delta, qmax)
+    np.testing.assert_allclose(y[:2], [0.7, -0.7], atol=1e-6)
+    y_u = fake_quant(x, delta, 15.0, signed=False)
+    np.testing.assert_allclose(y_u[1], 0.0, atol=1e-6)  # unsigned clips negatives
+
+
+def test_fake_quant_level_count():
+    """An M-bit signed grid uses at most 2^M - 1 distinct levels."""
+    x = _rand((4096,), scale=3.0)
+    for bits in (2, 3, 4):
+        y = fake_quant(x, 0.2, grid_qmax(bits, True))
+        assert len(np.unique(np.asarray(y))) <= 2**bits - 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 3000),
+    delta=st.floats(1e-4, 2.0),
+    bits=st.integers(2, 8),
+    signed=st.booleans(),
+    scale=st.floats(0.01, 10.0),
+)
+def test_fake_quant_hypothesis(n, delta, bits, signed, scale):
+    x = jnp.asarray(np.random.default_rng(n).normal(size=(n,)).astype(np.float32) * scale)
+    qmax = grid_qmax(bits, signed)
+    got = fake_quant(x, delta, qmax, signed=signed)
+    want = fake_quant_ref(x, delta, qmax, signed=signed)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# lp_error
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", [1.0, 2.0, 2.4, 3.0, 3.5, 4.0])
+def test_lp_error_matches_ref(p):
+    x = _rand((777,))
+    got = lp_error(x, 0.05, 7.0, p)
+    want = lp_error_ref(x, 0.05, 7.0, p)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_lp_error_zero_delta_is_zero():
+    x = _rand((100,))
+    assert float(lp_error_sum(x, 0.0, 7.0, 2.0)) == 0.0
+
+
+def test_lp_error_padding_invariant():
+    """Block padding must not contribute to the reduction."""
+    x = _rand((1,))  # heavy padding case
+    got = lp_error_sum(x, 0.3, 3.0, 2.0)
+    want = lp_error_sum_ref(x, 0.3, 3.0, 2.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-8)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 2000),
+    delta=st.floats(1e-3, 1.0),
+    p=st.floats(1.0, 5.0),
+    signed=st.booleans(),
+)
+def test_lp_error_hypothesis(n, delta, p, signed):
+    x = jnp.asarray(np.random.default_rng(n + 7).normal(size=(n,)).astype(np.float32))
+    got = lp_error_sum(x, delta, 7.0, p, signed=signed)
+    want = lp_error_sum_ref(x, delta, 7.0, p, signed=signed)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-6)
+
+
+def test_lp_error_tradeoff_has_interior_minimum():
+    """Fig. 4: e_p(Δ) decreases then increases -> interior optimum."""
+    x = _rand((4096,))
+    deltas = np.linspace(0.005, 1.0, 60)
+    errs = [float(lp_error(x, d, 7.0, 2.0)) for d in deltas]
+    best = int(np.argmin(errs))
+    assert 0 < best < len(deltas) - 1
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("signed_a", [True, False])
+@pytest.mark.parametrize("mkn", [(4, 8, 4), (64, 128, 10), (45, 70, 33), (256, 96, 16)])
+def test_quant_matmul_matches_ref(signed_a, mkn):
+    m, k, n = mkn
+    a, b = _rand((m, k)), _rand((k, n))
+    got = quant_matmul(a, b, 0.05, 15.0, 0.02, 7.0, signed_a=signed_a)
+    want = quant_matmul_ref(a, b, 0.05, 15.0, 0.02, 7.0, signed_a=signed_a)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_quant_matmul_passthrough_matches_plain():
+    a, b = _rand((16, 32)), _rand((32, 8))
+    got = quant_matmul(a, b, 0.0, 7.0, 0.0, 7.0)
+    np.testing.assert_allclose(got, a @ b, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 160),
+    n=st.integers(1, 48),
+    da=st.floats(0.0, 0.5),
+    dw=st.floats(0.0, 0.5),
+)
+def test_quant_matmul_hypothesis(m, k, n, da, dw):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    got = quant_matmul(a, b, da, 15.0, dw, 7.0)
+    want = quant_matmul_ref(a, b, da, 15.0, dw, 7.0)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)

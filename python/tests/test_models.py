@@ -1,0 +1,188 @@
+"""Layer-2 model zoo: shapes, training smoke, quantization behaviour."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import grid_qmax
+from compile.models import REGISTRY
+from compile.models import ncf as ncf_mod
+from compile.models.common import (
+    init_params,
+    make_acts,
+    make_fwd_fp32,
+    make_fwd_quant,
+    make_train_step,
+)
+
+KEY = jax.random.PRNGKey(42)
+VISION = ["mlp3", "cnn6", "resmini", "dwsep"]
+
+
+def _vision_batch(model, b):
+    shape, _ = model.input_spec["eval"]["x"]
+    x = jax.random.normal(KEY, (b, *shape[1:]))
+    n_cls = model.param_specs[-1].shape[0]
+    y = jax.random.randint(KEY, (b,), 0, n_cls)
+    return x, y
+
+
+def _quant_vecs(model, bits_w=4, bits_a=4):
+    n = len(model.quant_layers)
+    dw = jnp.full((n,), 0.02)
+    qmw = jnp.full((n,), grid_qmax(bits_w, True))
+    da = jnp.full((n,), 0.05)
+    qma = jnp.asarray(
+        [grid_qmax(bits_a, q.act_signed) for q in model.quant_layers], jnp.float32
+    )
+    return dw, qmw, da, qma
+
+
+@pytest.mark.parametrize("name", VISION)
+def test_param_specs_consistent(name):
+    m = REGISTRY[name]
+    params = init_params(m, KEY)
+    assert len(params) == len(m.param_specs)
+    for p, spec in zip(params, m.param_specs):
+        assert p.shape == tuple(spec.shape)
+    # every quant layer points at a real weight tensor
+    for q in m.quant_layers:
+        assert len(m.param_specs[q.weight_param].shape) >= 2
+
+
+@pytest.mark.parametrize("name", VISION)
+def test_acts_align_with_quant_layers(name):
+    m = REGISTRY[name]
+    params = init_params(m, KEY)
+    b = m.input_spec["eval"]["x"][0][0]
+    x, _ = _vision_batch(m, b)
+    acts = jax.jit(make_acts(m))(*params, x)
+    assert len(acts) == len(m.quant_layers)
+    for a in acts:
+        assert a.shape[0] == b
+
+
+@pytest.mark.parametrize("name", VISION)
+def test_tiny_delta_quant_close_to_fp32(name):
+    """As Δ -> small with a huge grid, the quantized loss converges to FP32."""
+    m = REGISTRY[name]
+    params = init_params(m, KEY)
+    b = m.input_spec["eval"]["x"][0][0]
+    x, y = _vision_batch(m, b)
+    n = len(m.quant_layers)
+    dw = jnp.full((n,), 1e-4)
+    qmw = jnp.full((n,), 2.0**20)
+    da = jnp.full((n,), 1e-4)
+    qma = jnp.full((n,), 2.0**20)
+    lq, cq = jax.jit(make_fwd_quant(m))(*params, dw, qmw, da, qma, x, y)
+    lf, cf = jax.jit(make_fwd_fp32(m))(*params, x, y)
+    np.testing.assert_allclose(lq, lf, rtol=1e-2, atol=1e-3)
+    assert abs(float(cq) - float(cf)) <= b * 0.02 + 1
+
+
+@pytest.mark.parametrize("name", VISION)
+def test_zero_delta_equals_fp32_exactly(name):
+    m = REGISTRY[name]
+    params = init_params(m, KEY)
+    b = m.input_spec["eval"]["x"][0][0]
+    x, y = _vision_batch(m, b)
+    n = len(m.quant_layers)
+    z = jnp.zeros((n,))
+    q = jnp.full((n,), 7.0)
+    lq, cq = jax.jit(make_fwd_quant(m))(*params, z, q, z, q, x, y)
+    lf, cf = jax.jit(make_fwd_fp32(m))(*params, x, y)
+    np.testing.assert_allclose(lq, lf, rtol=1e-5, atol=1e-6)
+    assert float(cq) == float(cf)
+
+
+@pytest.mark.parametrize("name", ["mlp3", "cnn6"])
+def test_train_step_learns(name):
+    """A few SGD steps on a fixed batch must reduce the loss (overfit smoke)."""
+    m = REGISTRY[name]
+    params = init_params(m, KEY)
+    bt = m.input_spec["train"]["x"][0][0]
+    x, y = _vision_batch(m, bt)
+    mom = tuple(jnp.zeros_like(p) for p in params)
+    step = jax.jit(make_train_step(m))
+    n = len(params)
+    first = None
+    for i in range(60):
+        out = step(*params, *mom, x, y, jnp.float32(0.1))
+        params, mom, loss = out[:n], out[n : 2 * n], out[-1]
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first - 0.1, (first, float(loss))
+
+
+def test_coarse_quant_perturbs_loss_more():
+    """2-bit min-max steps shift the loss away from FP32 more than 8-bit ones
+    (paper §3.2: coarser grids sit in steeper territory)."""
+    m = REGISTRY["cnn6"]
+    params = init_params(m, KEY)
+    x, y = _vision_batch(m, 256)
+    n = len(m.quant_layers)
+    fwd = jax.jit(make_fwd_quant(m))
+    l_fp = float(jax.jit(make_fwd_fp32(m))(*params, x, y)[0])
+
+    def minmax_loss(bits):
+        qmw = jnp.full((n,), grid_qmax(bits, True))
+        qma = jnp.asarray(
+            [grid_qmax(bits, q.act_signed) for q in m.quant_layers], jnp.float32
+        )
+        dw = jnp.asarray(
+            [float(jnp.max(jnp.abs(params[q.weight_param]))) for q in m.quant_layers]
+        ) / qmw
+        da = jnp.full((n,), 6.0) / qma  # generous activation range
+        return float(fwd(*params, dw, qmw, da, qma, x, y)[0])
+
+    dev8 = abs(minmax_loss(8) - l_fp)
+    dev2 = abs(minmax_loss(2) - l_fp)
+    assert dev2 > dev8, (dev2, dev8)
+
+
+# ---------------------------------------------------------------------------
+# NCF
+# ---------------------------------------------------------------------------
+
+
+def test_ncf_shapes_and_hitrate_bounds():
+    m = REGISTRY["ncf"]
+    params = init_params(m, KEY)
+    u = jax.random.randint(KEY, (256,), 0, ncf_mod.N_USERS)
+    pos = jax.random.randint(KEY, (256,), 0, ncf_mod.N_ITEMS)
+    negs = jax.random.randint(KEY, (256, 99), 0, ncf_mod.N_ITEMS)
+    (hits,) = jax.jit(ncf_mod.make_hitrate(m))(*params, u, pos, negs)
+    assert 0.0 <= float(hits) <= 256.0
+
+
+def test_ncf_quant_hitrate_matches_fp32_at_zero_delta():
+    m = REGISTRY["ncf"]
+    params = init_params(m, KEY)
+    n = len(m.quant_layers)
+    z, q = jnp.zeros((n,)), jnp.full((n,), 7.0)
+    u = jax.random.randint(KEY, (256,), 0, ncf_mod.N_USERS)
+    pos = jax.random.randint(KEY, (256,), 0, ncf_mod.N_ITEMS)
+    negs = jax.random.randint(KEY, (256, 99), 0, ncf_mod.N_ITEMS)
+    (h_fp,) = jax.jit(ncf_mod.make_hitrate(m))(*params, u, pos, negs)
+    (h_q,) = jax.jit(ncf_mod.make_hitrate_quant(m))(*params, z, q, z, q, u, pos, negs)
+    assert float(h_fp) == float(h_q)
+
+
+def test_ncf_train_learns():
+    m = REGISTRY["ncf"]
+    params = init_params(m, KEY)
+    bt = m.input_spec["train"]["users"][0][0]
+    u = jax.random.randint(KEY, (bt,), 0, ncf_mod.N_USERS)
+    it = jax.random.randint(KEY, (bt,), 0, ncf_mod.N_ITEMS)
+    lab = jax.random.bernoulli(KEY, 0.4, (bt,)).astype(jnp.float32)
+    mom = tuple(jnp.zeros_like(p) for p in params)
+    step = jax.jit(make_train_step(m))
+    n = len(params)
+    first = None
+    for _ in range(60):
+        out = step(*params, *mom, u, it, lab, jnp.float32(0.5))
+        params, mom, loss = out[:n], out[n : 2 * n], out[-1]
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.9

@@ -1,0 +1,65 @@
+//! Figs. 1–2: the loss surface over (Δ₁, Δ₂) of two adjacent conv layers
+//! at 2/3/4-bit weight quantization, plus the quantization-interaction
+//! index (Eq. 7 made measurable).  Paper shape: near-separable at 4 bits,
+//! strongly coupled at 2 bits.
+
+use lapq::analysis::surface::scan_weight_surface;
+use lapq::benchkit::Table;
+use lapq::config::{BitSpec, ExperimentConfig};
+use lapq::coordinator::jobs::Runner;
+use lapq::lapq::objective::{grids, CalibObjective, LayerMask};
+use lapq::lapq::pipeline::layerwise_deltas;
+use lapq::runtime::EngineHandle;
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+    let spec = runner.eng.manifest().model("cnn6")?.clone();
+
+    let mut t = Table::new(
+        "Figs. 1-2 — loss-surface interaction vs bitwidth (cnn6 conv2/conv3)",
+        &["bits", "min loss", "max loss", "interaction idx"],
+    );
+
+    for bits in [4u32, 3, 2] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = "cnn6".into();
+        cfg.train_steps = 300;
+        cfg.bits = BitSpec::new(bits, 32); // weight-only, like Fig. 1
+        cfg.lapq.exclude_first_last = false;
+        let (sess, _val, calib) = runner.session_with_calib(&cfg)?;
+        // Fig. 1 scans the steps of two layers: quantize ONLY those two
+        // (everything else FP32) so the surface isolates their interaction.
+        let mut mask = LayerMask::all(spec.n_quant_layers(), cfg.bits);
+        for (i, m) in mask.weights.iter_mut().enumerate() {
+            *m = i == 1 || i == 2;
+        }
+        let (qmw, qma) = grids(&spec, cfg.bits);
+        let mut obj = CalibObjective::new(
+            &runner.eng,
+            sess,
+            calib.loss_batches.clone(),
+            mask.clone(),
+            qmw.clone(),
+            qma.clone(),
+        );
+        let (dw, da) = layerwise_deltas(&calib, &mask, &qmw, &qma, 2.0);
+        let s = scan_weight_surface(&mut obj, &dw, &da, 1, 2, 0.4, 2.5, 11)?;
+        let (lo, hi) = s.min_max();
+        t.row(&[
+            bits.to_string(),
+            format!("{lo:.4}"),
+            format!("{hi:.4}"),
+            format!("{:.4}", s.interaction_index()),
+        ]);
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(dir.join(format!("fig1_surface_{bits}bit.csv")), s.to_csv())?;
+        calib.release(&runner.eng);
+        runner.eng.drop_session(sess)?;
+    }
+    t.print();
+    let _ = t.write_csv("fig1_2.csv");
+    Ok(())
+}

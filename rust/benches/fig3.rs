@@ -1,0 +1,61 @@
+//! Fig. 3: accuracy as a function of the L_p-optimization norm p, at 2-bit
+//! and 4-bit quantization (resmini = ResNet-50 stand-in).
+//! Paper shape: at 4 bits the curve is flat (any p works); at 2 bits it
+//! swings by tens of points and the best p is > 2 (not MSE).
+
+use lapq::benchkit::{pct, Table};
+use lapq::config::{BitSpec, ExperimentConfig};
+use lapq::coordinator::evaluator::EvalSet;
+use lapq::coordinator::jobs::Runner;
+use lapq::lapq::objective::{grids, CalibObjective, LayerMask};
+use lapq::lapq::pipeline::layerwise_deltas;
+use lapq::runtime::EngineHandle;
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+    let spec = runner.eng.manifest().model("cnn6")?.clone();
+
+    let ps = [1.5f32, 2.0, 2.5, 3.0, 3.5, 4.0];
+    let mut t = Table::new(
+        "Fig. 3 — accuracy vs p-norm of the layer-wise objective (cnn6, A4)",
+        &["bits", "p", "accuracy"],
+    );
+
+    for bits in [4u32, 2] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = "cnn6".into();
+        cfg.train_steps = 300;
+        cfg.bits = BitSpec::new(bits, 4);
+        cfg.val_size = 1024;
+        let (sess, val, calib) = runner.session_with_calib(&cfg)?;
+        let mask = LayerMask::all(spec.n_quant_layers(), cfg.bits)
+            .exclude_first_last(&[]);
+        let (qmw, qma) = grids(&spec, cfg.bits);
+        let obj = CalibObjective::new(
+            &runner.eng,
+            sess,
+            calib.loss_batches.clone(),
+            mask.clone(),
+            qmw.clone(),
+            qma.clone(),
+        );
+        let mut accs = Vec::new();
+        for &p in &ps {
+            let (dw, da) = layerwise_deltas(&calib, &mask, &qmw, &qma, p);
+            let q = obj.quant_params(&dw, &da);
+            let acc = EvalSet::metric(&val, &runner.eng, sess, Some(&q))?;
+            accs.push(acc);
+            t.row(&[bits.to_string(), format!("{p}"), pct(acc)]);
+        }
+        let spread = accs.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+            - accs.iter().cloned().fold(f32::INFINITY, f32::min);
+        println!("[fig3] {bits}-bit accuracy spread over p: {:.1} points", spread * 100.0);
+        calib.release(&runner.eng);
+        runner.eng.drop_session(sess)?;
+    }
+    t.print();
+    let _ = t.write_csv("fig3.csv");
+    Ok(())
+}

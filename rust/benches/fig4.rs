@@ -1,0 +1,62 @@
+//! Fig. 4: the L_p quantization-error curves e_p(Δ) for several p on one
+//! weight tensor — pure Layer-1-mirror math, no PJRT needed.
+//! Paper shape: each p has an interior optimum and the optimal Δ grows
+//! with p (the clipping/rounding trade-off).
+
+use lapq::benchkit::Table;
+use lapq::quant::lp::lp_error;
+use lapq::quant::GridKind;
+use lapq::util::rng::Pcg32;
+
+fn main() {
+    lapq::util::logging::init();
+    // A realistic weight population: mixture of Gaussians like a trained
+    // conv layer (heavier tails than pure Gaussian).
+    let mut rng = Pcg32::seeded(42);
+    let mut w: Vec<f32> = rng.normal_vec(16_384).iter().map(|x| x * 0.05).collect();
+    w.extend(rng.normal_vec(2_048).iter().map(|x| x * 0.15));
+
+    let qmax = GridKind::Signed.qmax(4);
+    let ps = [1.0f32, 2.0, 3.0, 4.0];
+    let deltas: Vec<f32> = (1..=80).map(|i| i as f32 * 0.002).collect();
+
+    let mut t = Table::new("Fig. 4 — e_p(Δ) curves (4-bit grid)", &["p", "argmin Δ", "min e_p"]);
+    let mut csv = String::from("delta");
+    for &p in &ps {
+        csv += &format!(",p{p}");
+    }
+    csv.push('\n');
+    let mut curves: Vec<Vec<f64>> = Vec::new();
+    for &p in &ps {
+        curves.push(deltas.iter().map(|&d| lp_error(&w, d, qmax, p, GridKind::Signed)).collect());
+    }
+    for (i, &d) in deltas.iter().enumerate() {
+        csv += &format!("{d}");
+        for c in &curves {
+            csv += &format!(",{}", c[i]);
+        }
+        csv.push('\n');
+    }
+    let mut argmins = Vec::new();
+    for (k, &p) in ps.iter().enumerate() {
+        let (i, v) = curves[k]
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        argmins.push(deltas[i]);
+        t.row(&[format!("{p}"), format!("{:.4}", deltas[i]), format!("{v:.4}")]);
+    }
+    t.print();
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("fig4_curves.csv"), csv).unwrap();
+    let _ = t.write_csv("fig4.csv");
+
+    // shape check: optimal Δ non-decreasing in p
+    assert!(
+        argmins.windows(2).all(|w| w[1] >= w[0] - 1e-6),
+        "optimal Δ should grow with p: {argmins:?}"
+    );
+    println!("[fig4] optimal Δ grows with p: {argmins:?}");
+}

@@ -1,0 +1,94 @@
+//! Fig. 5: the loss is locally quadratic around the LAPQ optimum Δ* —
+//! sample L(Δ* + t·u) along directions u and fit a quadratic in t,
+//! reporting R².  Paper shape: high R² near Δ*, both along a random
+//! direction and along the p-trajectory.
+
+use lapq::benchkit::Table;
+use lapq::config::{BitSpec, ExperimentConfig, Method};
+use lapq::coordinator::jobs::Runner;
+use lapq::lapq::objective::{grids, CalibObjective, LayerMask};
+use lapq::lapq::pipeline::{calibrate, layerwise_deltas};
+use lapq::optim::quadfit::fit_quadratic;
+use lapq::runtime::EngineHandle;
+use lapq::util::rng::Pcg32;
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+    let spec = runner.eng.manifest().model("cnn6")?.clone();
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "cnn6".into();
+    cfg.train_steps = 300;
+    cfg.bits = BitSpec::new(4, 4);
+    cfg.method = Method::Lapq;
+    cfg.val_size = 512;
+    cfg.lapq.max_evals = 60;
+    cfg.lapq.powell_iters = 1;
+    cfg.lapq.bias_correction = false;
+
+    let (sess, _val, calib) = runner.session_with_calib(&cfg)?;
+    let outcome = calibrate(&runner.eng, sess, &spec, &cfg, &calib)?;
+    let dw_star: Vec<f32> = outcome.quant.dw.clone();
+    let da_star: Vec<f32> = outcome.quant.da.clone();
+
+    let mask = LayerMask::all(spec.n_quant_layers(), cfg.bits).exclude_first_last(&[]);
+    let (qmw, qma) = grids(&spec, cfg.bits);
+    let mut obj = CalibObjective::new(
+        &runner.eng,
+        sess,
+        calib.loss_batches.clone(),
+        mask.clone(),
+        qmw,
+        qma,
+    );
+
+    let mut t = Table::new(
+        "Fig. 5 — quadratic fit of L along directions through Δ* (cnn6, 4/4)",
+        &["direction", "R²", "a (curv)", "min loss"],
+    );
+
+    // (a) random perturbation directions in Δ-space
+    let mut rng = Pcg32::seeded(7);
+    for k in 0..3 {
+        let dir_w: Vec<f32> = dw_star.iter().map(|&d| d * rng.normal() * 0.12).collect();
+        let dir_a: Vec<f32> = da_star.iter().map(|&d| d * rng.normal() * 0.12).collect();
+        let ts: Vec<f64> = (-4..=4).map(|i| i as f64 / 4.0).collect();
+        let mut ys = Vec::new();
+        for &tv in &ts {
+            let dw: Vec<f32> =
+                dw_star.iter().zip(&dir_w).map(|(&d, &u)| (d + tv as f32 * u).max(1e-6)).collect();
+            let da: Vec<f32> =
+                da_star.iter().zip(&dir_a).map(|(&d, &u)| (d + tv as f32 * u).max(1e-6)).collect();
+            ys.push(obj.loss(&dw, &da)?);
+        }
+        if let Some(q) = fit_quadratic(&ts, &ys) {
+            t.row(&[
+                format!("random-{k}"),
+                format!("{:.3}", q.r2),
+                format!("{:.4}", q.a),
+                format!("{:.4}", ys.iter().cloned().fold(f64::INFINITY, f64::min)),
+            ]);
+        }
+    }
+
+    // (b) along the p-trajectory (Fig. 5b): loss of Δ_p as a function of p
+    let ps: Vec<f64> = vec![1.5, 2.0, 2.5, 3.0, 3.5, 4.0];
+    let mut ys = Vec::new();
+    for &p in &ps {
+        let (dw, da) = layerwise_deltas(&calib, &mask, &obj.qmw.clone(), &obj.qma.clone(), p as f32);
+        ys.push(obj.loss(&dw, &da)?);
+    }
+    if let Some(q) = fit_quadratic(&ps, &ys) {
+        t.row(&[
+            "p-trajectory".into(),
+            format!("{:.3}", q.r2),
+            format!("{:.4}", q.a),
+            format!("{:.4}", ys.iter().cloned().fold(f64::INFINITY, f64::min)),
+        ]);
+    }
+    t.print();
+    let _ = t.write_csv("fig5.csv");
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Fig. B.2: accuracy vs calibration-set size at several bitwidths —
+//! the generalization/running-time trade-off behind the paper's choice
+//! of 512 calibration images.
+
+use lapq::benchkit::{pct, Table};
+use lapq::config::{BitSpec, ExperimentConfig, Method};
+use lapq::coordinator::jobs::Runner;
+use lapq::runtime::EngineHandle;
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+
+    let mut t = Table::new(
+        "Fig. B.2 — accuracy vs calibration set size (cnn6)",
+        &["W/A", "calib size", "accuracy", "seconds"],
+    );
+    for bits in [BitSpec::new(4, 4), BitSpec::new(8, 3)] {
+        for calib in [128usize, 256, 512, 1024] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.model = "cnn6".into();
+            cfg.train_steps = 300;
+            cfg.bits = bits;
+            cfg.method = Method::Lapq;
+            cfg.calib_size = calib;
+            cfg.val_size = 1024;
+            cfg.lapq.max_evals = 60;
+            cfg.lapq.powell_iters = 1;
+            let res = runner.run(&cfg)?;
+            t.row(&[
+                bits.label(),
+                calib.to_string(),
+                pct(res.quant_metric),
+                format!("{:.1}", res.seconds),
+            ]);
+        }
+    }
+    t.print();
+    let _ = t.write_csv("figb2.csv");
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Perf: the Layer-3 hot path — compiled-artifact execution latency for
+//! every entry point, objective evaluation throughput (what Powell pays
+//! per step), memoization hit rate, and train-step throughput.
+//! Feeds EXPERIMENTS.md §Perf.
+
+use lapq::benchkit::bench;
+use lapq::config::{BitSpec, ExperimentConfig};
+use lapq::coordinator::jobs::Runner;
+use lapq::lapq::objective::{grids, CalibObjective, LayerMask};
+use lapq::lapq::pipeline::layerwise_deltas;
+use lapq::runtime::EngineHandle;
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+
+    for model in ["mlp3", "cnn6", "resmini", "ncf"] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = model.into();
+        cfg.train_steps = 30;
+        cfg.bits = BitSpec::new(4, 4);
+        cfg.val_size = 512;
+        let spec = runner.eng.manifest().model(model)?.clone();
+        let (sess, val, calib) = runner.session_with_calib(&cfg)?;
+        let b0 = calib.loss_batches[0];
+
+        // raw artifact execution latencies
+        let eng = runner.eng.clone();
+        bench(&format!("{model}/fwd_fp32 (B={})", spec.eval_batch()), 2, 10, || {
+            eng.eval(sess, None, b0).unwrap();
+        });
+        let mask = LayerMask::all(spec.n_quant_layers(), cfg.bits).exclude_first_last(&[]);
+        let (qmw, qma) = grids(&spec, cfg.bits);
+        let mut obj = CalibObjective::new(&eng, sess, calib.loss_batches.clone(), mask.clone(), qmw.clone(), qma.clone());
+        let (dw, da) = layerwise_deltas(&calib, &mask, &qmw, &qma, 2.0);
+        let q = obj.quant_params(&dw, &da);
+        bench(&format!("{model}/fwd_quant (B={})", spec.eval_batch()), 2, 10, || {
+            eng.eval(sess, Some(q.clone()), b0).unwrap();
+        });
+
+        // full objective eval (all calib batches) — Powell's unit of work
+        let mut i = 0u32;
+        bench(&format!("{model}/objective ({} batches)", obj.batches.len()), 1, 10, || {
+            // perturb to defeat the memo cache: measures real evals
+            i += 1;
+            let mut dwp = dw.clone();
+            if let Some(v) = dwp.iter_mut().find(|v| **v > 0.0) {
+                *v *= 1.0 + i as f32 * 1e-4;
+            }
+            obj.loss(&dwp, &da).unwrap();
+        });
+        // memoized objective eval (cache hit)
+        bench(&format!("{model}/objective cached"), 1, 50, || {
+            obj.loss(&dw, &da).unwrap();
+        });
+
+        // train-step throughput
+        let spec_tb = spec.train_batch();
+        let wl = lapq::coordinator::workload::Workload::for_model(&spec, 1)?;
+        let tb = eng.register_batch(wl.train_batch(&spec, 0))?;
+        bench(&format!("{model}/train_step (B={spec_tb})"), 2, 10, || {
+            eng.train_step(sess, tb, 0.01).unwrap();
+        });
+
+        let _ = val;
+        calib.release(&eng);
+        eng.drop_session(sess)?;
+    }
+
+    let stats = runner.eng.stats()?;
+    println!(
+        "\nengine totals: {} executions, {:.2}s XLA time, {:.2} ms/exec mean",
+        stats.executions,
+        stats.exec_seconds,
+        1e3 * stats.exec_seconds / stats.executions.max(1) as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Table 3: initialization ablation — Random vs LW (layer-wise p=2) vs
+//! LW+QA (layer-wise + quadratic approximation), each before and after
+//! the joint (Powell) phase, on cnn6 at W4/A4 and W32/A2.
+//! Paper shape: LW+QA init > LW init > Random, and joint improves all.
+
+use lapq::benchkit::{pct, Table};
+use lapq::config::{BitSpec, ExperimentConfig, Method};
+use lapq::coordinator::jobs::Runner;
+use lapq::lapq::InitKind;
+use lapq::runtime::EngineHandle;
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+
+    let mut t = Table::new(
+        "Table 3 — initialization ablation (cnn6)",
+        &["W/A", "Init", "Initial acc", "Joint acc", "Initial loss", "Joint loss"],
+    );
+
+    for bits in [BitSpec::new(4, 4), BitSpec::new(32, 2)] {
+        for (name, init) in [
+            ("Random", InitKind::Random(17)),
+            ("LW", InitKind::Layerwise),
+            ("LW + QA", InitKind::LapqQuadratic),
+        ] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.model = "cnn6".into();
+            cfg.train_steps = 300;
+            cfg.bits = bits;
+            cfg.method = Method::Lapq;
+            cfg.val_size = 1024;
+            cfg.lapq.max_evals = 60;
+            cfg.lapq.powell_iters = 1;
+
+            let before = runner.run_with_init(&cfg, init, false)?;
+            let after = runner.run_with_init(&cfg, init, true)?;
+            t.row(&[
+                bits.label(),
+                name.to_string(),
+                pct(before.quant_metric),
+                pct(after.quant_metric),
+                format!("{:.4}", before.outcome.calib_loss),
+                format!("{:.4}", after.outcome.calib_loss),
+            ]);
+        }
+    }
+    t.print();
+    let _ = t.write_csv("table3.csv");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Table 4: bias-correction ablation — LAPQ with and without Banner-style
+//! per-channel correction at W/A ∈ {32/4, 32/2, 4/32, 4/4} on cnn6,
+//! resmini and dwsep (MobileNet stand-in).
+//! Paper shape: bias correction matters most for the depthwise model.
+
+use lapq::benchkit::{pct, Table};
+use lapq::config::{BitSpec, ExperimentConfig, Method};
+use lapq::coordinator::jobs::Runner;
+use lapq::coordinator::scheduler::Scheduler;
+use lapq::runtime::EngineHandle;
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+    let mut sched = Scheduler::new();
+
+    // weight-quantizing settings where bias correction applies
+    let settings = [BitSpec::new(4, 32), BitSpec::new(4, 4)];
+    for model in ["cnn6", "resmini", "dwsep"] {
+        for bits in settings {
+            for bc in [false, true] {
+                let mut cfg = ExperimentConfig::default();
+                cfg.model = model.into();
+                cfg.train_steps = 300;
+                cfg.bits = bits;
+                cfg.method = Method::Lapq;
+                cfg.val_size = 1024;
+                cfg.lapq.max_evals = 60;
+                cfg.lapq.powell_iters = 1;
+                cfg.lapq.bias_correction = bc;
+                sched.push(cfg);
+            }
+        }
+    }
+    sched.run_all(&mut runner)?;
+
+    let mut t = Table::new(
+        "Table 4 — bias correction on top of LAPQ",
+        &["Model", "W/A", "LAPQ", "LAPQ + bias corr", "FP32"],
+    );
+    let mut it = sched.results.iter();
+    while let (Some(off), Some(on)) = (it.next(), it.next()) {
+        t.row(&[
+            off.model.clone(),
+            off.bits_label.clone(),
+            pct(off.quant_metric),
+            pct(on.quant_metric),
+            pct(off.fp32_metric),
+        ]);
+    }
+    t.print();
+    let _ = t.write_csv("table4.csv");
+    if !sched.failures.is_empty() {
+        anyhow::bail!("{} jobs failed", sched.failures.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Table C.1 (appendix): the extreme settings — W8/A2 (LAPQ vs ACIQ) and
+//! W4/A32 (LAPQ vs MMSE/OCS-analog) on cnn6 and resmini.
+//! Paper shape: at A2 every layer-wise method collapses far below LAPQ.
+
+use lapq::config::{BitSpec, ExperimentConfig, Method};
+use lapq::coordinator::jobs::Runner;
+use lapq::coordinator::scheduler::Scheduler;
+use lapq::runtime::EngineHandle;
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+    let mut sched = Scheduler::new();
+
+    for model in ["cnn6", "resmini"] {
+        for (w, a, methods) in [
+            (8u32, 2u32, vec![Method::Lapq, Method::Aciq]),
+            (4, 32, vec![Method::Lapq, Method::Mmse, Method::MinMax]),
+        ] {
+            for method in methods {
+                let mut cfg = ExperimentConfig::default();
+                cfg.model = model.into();
+                cfg.train_steps = 300;
+                cfg.bits = BitSpec::new(w, a);
+                cfg.method = method;
+                cfg.val_size = 1024;
+                cfg.lapq.max_evals = 60;
+                cfg.lapq.powell_iters = 1;
+                sched.push(cfg);
+            }
+        }
+    }
+    sched.run_all(&mut runner)?;
+    let t = sched.summary_table("Table C.1 — appendix settings (W8/A2, W4/A32)");
+    t.print();
+    let _ = t.write_csv("tablec1.csv");
+    if !sched.failures.is_empty() {
+        anyhow::bail!("{} jobs failed", sched.failures.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! Finite-difference Hessian of the calibration loss with respect to the
+//! per-layer quantization steps (paper Eq. 8 / Fig. A.1).
+
+use crate::lapq::objective::CalibObjective;
+use anyhow::Result;
+
+/// Symmetric Hessian estimate plus the gradient at the same point.
+#[derive(Clone, Debug)]
+pub struct HessianReport {
+    pub h: Vec<Vec<f64>>,
+    pub grad: Vec<f64>,
+    pub f0: f64,
+}
+
+/// Central-difference Hessian of `loss(dw)` over the **active weight**
+/// coordinates, activations held at `da`.  Step `rel` is relative to each
+/// coordinate's magnitude.
+pub fn weight_hessian(
+    obj: &mut CalibObjective,
+    dw: &[f32],
+    da: &[f32],
+    rel: f64,
+) -> Result<HessianReport> {
+    let active = obj.mask.active_w();
+    let n = active.len();
+    let h_steps: Vec<f64> = active.iter().map(|&i| (dw[i] as f64 * rel).max(1e-6)).collect();
+    let mut eval = |offsets: &[(usize, f64)]| -> Result<f64> {
+        let mut v = dw.to_vec();
+        for &(k, s) in offsets {
+            v[active[k]] = (dw[active[k]] as f64 + s) as f32;
+        }
+        obj.loss(&v, da)
+    };
+    let f0 = eval(&[])?;
+    let mut grad = vec![0.0f64; n];
+    let mut h = vec![vec![0.0f64; n]; n];
+    // diagonal + gradient
+    for k in 0..n {
+        let s = h_steps[k];
+        let fp = eval(&[(k, s)])?;
+        let fm = eval(&[(k, -s)])?;
+        grad[k] = (fp - fm) / (2.0 * s);
+        h[k][k] = (fp - 2.0 * f0 + fm) / (s * s);
+    }
+    // off-diagonals
+    for a in 0..n {
+        for b in (a + 1)..n {
+            let (sa, sb) = (h_steps[a], h_steps[b]);
+            let fpp = eval(&[(a, sa), (b, sb)])?;
+            let fpm = eval(&[(a, sa), (b, -sb)])?;
+            let fmp = eval(&[(a, -sa), (b, sb)])?;
+            let fmm = eval(&[(a, -sa), (b, -sb)])?;
+            let v = (fpp - fpm - fmp + fmm) / (4.0 * sa * sb);
+            h[a][b] = v;
+            h[b][a] = v;
+        }
+    }
+    Ok(HessianReport { h, grad, f0 })
+}
+
+impl HessianReport {
+    /// Ratio of off-diagonal mass to total mass — the separability measure
+    /// behind Fig. A.1 (0 = perfectly separable loss).
+    pub fn coupling_ratio(&self) -> f64 {
+        let n = self.h.len();
+        let mut diag = 0.0;
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    diag += self.h[i][j].abs();
+                } else {
+                    off += self.h[i][j].abs();
+                }
+            }
+        }
+        off / (off + diag).max(1e-18)
+    }
+
+    /// Mean |H_ij| at |i-j| = d — adjacency profile (closer layers couple
+    /// more strongly, per the paper's appendix).
+    pub fn band_mean(&self, d: usize) -> f64 {
+        let n = self.h.len();
+        if d >= n {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        let mut cnt = 0usize;
+        for i in 0..n - d {
+            acc += self.h[i][i + d].abs();
+            cnt += 1;
+        }
+        acc / cnt.max(1) as f64
+    }
+
+    pub fn csv(&self) -> String {
+        let mut s = String::new();
+        for row in &self.h {
+            let cells: Vec<String> = row.iter().map(|v| format!("{v:.6e}")).collect();
+            s += &cells.join(",");
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coupling_ratio_extremes() {
+        let diag = HessianReport {
+            h: vec![vec![2.0, 0.0], vec![0.0, 3.0]],
+            grad: vec![0.0; 2],
+            f0: 0.0,
+        };
+        assert!(diag.coupling_ratio() < 1e-12);
+        let coupled = HessianReport {
+            h: vec![vec![1.0, 1.0], vec![1.0, 1.0]],
+            grad: vec![0.0; 2],
+            f0: 0.0,
+        };
+        assert!((coupled.coupling_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn band_mean_profile() {
+        let r = HessianReport {
+            h: vec![
+                vec![4.0, 2.0, 1.0],
+                vec![2.0, 4.0, 2.0],
+                vec![1.0, 2.0, 4.0],
+            ],
+            grad: vec![0.0; 3],
+            f0: 0.0,
+        };
+        assert_eq!(r.band_mean(0), 4.0);
+        assert_eq!(r.band_mean(1), 2.0);
+        assert_eq!(r.band_mean(2), 1.0);
+        assert!(r.band_mean(1) > r.band_mean(2));
+    }
+}

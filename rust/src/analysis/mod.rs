@@ -1,0 +1,6 @@
+//! Loss-landscape analysis (paper §3, Figs. 1–2, 5, A.1 and Eq. 8–11):
+//! 2-D surfaces, finite-difference Hessians, Gaussian curvature.
+
+pub mod curvature;
+pub mod hessian;
+pub mod surface;

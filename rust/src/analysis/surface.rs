@@ -1,0 +1,151 @@
+//! Loss-surface scans (Figs. 1–2): grid the calibration loss over the
+//! quantization steps of two chosen layers while the others stay fixed,
+//! and quantify the quantization interaction term (Eq. 7).
+
+use crate::lapq::objective::CalibObjective;
+use anyhow::Result;
+
+/// A scanned 2-D loss surface.
+#[derive(Clone, Debug)]
+pub struct Surface {
+    pub d1: Vec<f32>,
+    pub d2: Vec<f32>,
+    /// loss[i][j] at (d1[i], d2[j])
+    pub loss: Vec<Vec<f64>>,
+}
+
+/// Scan layers `(l1, l2)`'s **weight** steps over multiplicative ranges of
+/// `base` (the Δ vector the other layers keep).
+pub fn scan_weight_surface(
+    obj: &mut CalibObjective,
+    base_dw: &[f32],
+    base_da: &[f32],
+    l1: usize,
+    l2: usize,
+    lo: f32,
+    hi: f32,
+    n: usize,
+) -> Result<Surface> {
+    let mults: Vec<f32> =
+        (0..n).map(|i| lo + (hi - lo) * i as f32 / (n - 1).max(1) as f32).collect();
+    let d1: Vec<f32> = mults.iter().map(|m| base_dw[l1] * m).collect();
+    let d2: Vec<f32> = mults.iter().map(|m| base_dw[l2] * m).collect();
+    let mut loss = vec![vec![0.0f64; n]; n];
+    let mut dw = base_dw.to_vec();
+    for (i, &a) in d1.iter().enumerate() {
+        for (j, &b) in d2.iter().enumerate() {
+            dw[l1] = a;
+            dw[l2] = b;
+            loss[i][j] = obj.loss(&dw, base_da)?;
+        }
+    }
+    Ok(Surface { d1, d2, loss })
+}
+
+impl Surface {
+    /// Quantization-interaction measure: how far the surface is from
+    /// additive separability.  For a separable surface
+    /// `L(a,b) = f(a) + g(b)` the quantity
+    /// `L(a,b) - L(a,b0) - L(a0,b) + L(a0,b0)` vanishes everywhere; we
+    /// report its mean |value| relative to the surface's loss range.
+    pub fn interaction_index(&self) -> f64 {
+        let n = self.loss.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let l00 = self.loss[0][0];
+        let mut acc = 0.0f64;
+        let mut count = 0usize;
+        for i in 1..n {
+            for j in 1..n {
+                let qit =
+                    self.loss[i][j] - self.loss[i][0] - self.loss[0][j] + l00;
+                acc += qit.abs();
+                count += 1;
+            }
+        }
+        let (lo, hi) = self.min_max();
+        let range = (hi - lo).max(1e-12);
+        acc / count as f64 / range
+    }
+
+    pub fn min_max(&self) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for row in &self.loss {
+            for &v in row {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+        (lo, hi)
+    }
+
+    /// Location of the minimum (i, j).
+    pub fn argmin(&self) -> (usize, usize) {
+        let mut best = (0, 0);
+        let mut bv = f64::INFINITY;
+        for (i, row) in self.loss.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                if v < bv {
+                    bv = v;
+                    best = (i, j);
+                }
+            }
+        }
+        best
+    }
+
+    /// CSV dump: header d2 values, then one row per d1.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("d1\\d2");
+        for v in &self.d2 {
+            s += &format!(",{v}");
+        }
+        s.push('\n');
+        for (i, row) in self.loss.iter().enumerate() {
+            s += &format!("{}", self.d1[i]);
+            for v in row {
+                s += &format!(",{v}");
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic(f: impl Fn(f64, f64) -> f64, n: usize) -> Surface {
+        let d: Vec<f32> = (0..n).map(|i| 0.1 + i as f32 * 0.1).collect();
+        let loss = d
+            .iter()
+            .map(|&a| d.iter().map(|&b| f(a as f64, b as f64)).collect())
+            .collect();
+        Surface { d1: d.clone(), d2: d, loss }
+    }
+
+    #[test]
+    fn separable_surface_has_zero_interaction() {
+        let s = synthetic(|a, b| (a - 0.3).powi(2) + (b - 0.4).powi(2), 8);
+        assert!(s.interaction_index() < 1e-9, "{}", s.interaction_index());
+    }
+
+    #[test]
+    fn coupled_surface_has_interaction() {
+        let s = synthetic(|a, b| (a - 0.3).powi(2) + (b - 0.4).powi(2) + 3.0 * a * b, 8);
+        assert!(s.interaction_index() > 0.05, "{}", s.interaction_index());
+    }
+
+    #[test]
+    fn argmin_and_csv() {
+        let s = synthetic(|a, b| (a - 0.3).powi(2) + (b - 0.5).powi(2), 8);
+        let (i, j) = s.argmin();
+        assert_eq!((i, j), (2, 4));
+        let csv = s.to_csv();
+        assert!(csv.lines().count() == 9);
+        assert!(csv.starts_with("d1\\d2,"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Bench harness (substrate for the absent `criterion`): warmup + timed
+//! iterations with mean/p50/p95, plus the table/CSV formatting every
+//! paper-figure bench uses.  Benches are `harness = false` binaries.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// Timing result for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+/// Time `f` with `warmup` unrecorded and `iters` recorded runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() as f32);
+    }
+    let t = Timing {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&samples) as f64,
+        p50_s: stats::percentile(&samples, 50.0) as f64,
+        p95_s: stats::percentile(&samples, 95.0) as f64,
+    };
+    println!(
+        "[bench] {:<40} mean {:>9.3} ms  p50 {:>9.3} ms  p95 {:>9.3} ms  ({} iters)",
+        t.name,
+        t.mean_s * 1e3,
+        t.p50_s * 1e3,
+        t.p95_s * 1e3,
+        t.iters
+    );
+    t
+}
+
+/// Fixed-width table printer for paper-style result tables.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line: Vec<String> =
+            self.headers.iter().zip(&widths).map(|(h, w)| format!("{h:<w$}")).collect();
+        println!("| {} |", line.join(" | "));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for r in &self.rows {
+            let line: Vec<String> =
+                r.iter().zip(&widths).map(|(c, w)| format!("{c:<w$}")).collect();
+            println!("| {} |", line.join(" | "));
+        }
+    }
+
+    /// Write the table as CSV under `bench_results/<file>`.
+    pub fn write_csv(&self, file: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(file);
+        let mut out = self.headers.join(",") + "\n";
+        for r in &self.rows {
+            out += &(r.join(",") + "\n");
+        }
+        std::fs::write(&path, out)?;
+        println!("[csv] wrote {path:?}");
+        Ok(path)
+    }
+}
+
+/// `fmt` helpers used across benches.
+pub fn pct(x: f32) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let t = bench("noop", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(t.iters, 5);
+        assert!(t.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // smoke: no panic
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.123), "12.3%");
+    }
+}

@@ -1,0 +1,149 @@
+//! Command-line interface (substrate for the absent `clap`): subcommands
+//! with `--flag value` options and `-s key=value` config overrides.
+
+pub mod parser;
+
+use crate::config::{ExperimentConfig, Method};
+use crate::coordinator::jobs::Runner;
+use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::service::Service;
+use crate::runtime::{EngineHandle, Manifest};
+use anyhow::{bail, Result};
+use parser::Args;
+
+pub const USAGE: &str = "\
+repro — Loss Aware Post-training Quantization (LAPQ) coordinator
+
+USAGE: repro <command> [options] [-s key=value ...]
+
+COMMANDS:
+  info                          list models and artifacts
+  train      --model M [--steps N] [--lr F]
+  quantize   --model M [--wbits N] [--abits N] [--method lapq|mmse|aciq|kld|minmax]
+  sweep      --model M          run all methods at the config's bitwidths
+  serve      [--addr HOST:PORT] start the TCP job service
+  metrics                       dump the metrics registry
+
+Config overrides (-s): model seed train_steps lr calib_size val_size
+  bits_w bits_a method powell_iters max_evals bias_correction
+  exclude_first_last
+";
+
+/// Entry point for the `repro` binary.
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_deref() {
+        None | Some("help") => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some("info") => info(),
+        Some("train") => train(&args),
+        Some("quantize") => quantize(&args),
+        Some("sweep") => sweep(&args),
+        Some("serve") => serve(&args),
+        Some("metrics") => {
+            println!("{}", crate::coordinator::metrics::dump().dump());
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn config_from(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(path) = args.flag("config") {
+        cfg = ExperimentConfig::load(path, &[])?;
+    }
+    if let Some(m) = args.flag("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(s) = args.flag("steps") {
+        cfg.train_steps = s.parse()?;
+    }
+    if let Some(l) = args.flag("lr") {
+        cfg.lr = l.parse()?;
+    }
+    if let Some(w) = args.flag("wbits") {
+        cfg.bits.weights = w.parse()?;
+    }
+    if let Some(a) = args.flag("abits") {
+        cfg.bits.acts = a.parse()?;
+    }
+    if let Some(m) = args.flag("method") {
+        cfg.method = Method::parse(m)?;
+    }
+    cfg.apply_overrides(&args.overrides)?;
+    Ok(cfg)
+}
+
+fn info() -> Result<()> {
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    println!("artifacts: {:?}", manifest.dir);
+    for (name, spec) in &manifest.models {
+        println!(
+            "  {name:<10} task={:<7} params={:<9} quant_layers={:<3} entries={}",
+            spec.task,
+            spec.n_weights(),
+            spec.n_quant_layers(),
+            spec.entries.keys().cloned().collect::<Vec<_>>().join(",")
+        );
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+    let (_, report) = runner.trained_params(&cfg)?;
+    println!("trained {} for {} steps in {:.1}s", cfg.model, report.steps, report.seconds);
+    for (step, loss) in &report.losses {
+        println!("  step {step:>5}  loss {loss:.4}");
+    }
+    Ok(())
+}
+
+fn quantize(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+    let res = runner.run(&cfg)?;
+    println!(
+        "{} W/A {}  {}: FP32 {:.2}% -> quant {:.2}%  (calib loss {:.4} vs fp32 {:.4}, {} joint evals, {:.1}s)",
+        res.model,
+        res.bits_label,
+        res.method,
+        res.fp32_metric * 100.0,
+        res.quant_metric * 100.0,
+        res.outcome.calib_loss,
+        res.outcome.fp32_calib_loss,
+        res.outcome.joint_evals,
+        res.seconds,
+    );
+    Ok(())
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+    let mut sched = Scheduler::new();
+    for method in [Method::Lapq, Method::Mmse, Method::Aciq, Method::Kld, Method::MinMax] {
+        let mut c = cfg.clone();
+        c.method = method;
+        sched.push(c);
+    }
+    sched.run_all(&mut runner)?;
+    sched.summary_table(&format!("sweep {} W/A {}", cfg.model, cfg.bits.label())).print();
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let addr = args.flag("addr").unwrap_or("127.0.0.1:7070");
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+    let service = Service::bind(addr)?;
+    println!("serving on {}", service.addr);
+    service.serve(&mut runner, usize::MAX)
+}

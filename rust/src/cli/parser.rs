@@ -1,0 +1,82 @@
+//! Tiny argv parser: `command --flag value --switch -s key=value`.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    /// `-s key=value` config overrides, in order.
+    pub overrides: Vec<String>,
+    /// bare positional args after the command
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "-s" {
+                let Some(v) = it.next() else { bail!("-s needs key=value") };
+                out.overrides.push(v.clone());
+            } else if let Some(name) = a.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") && *v != "-s" => {
+                        out.flags.insert(name.to_string(), it.next().unwrap().clone());
+                    }
+                    _ => {
+                        out.flags.insert(name.to_string(), "true".to_string());
+                    }
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_overrides() {
+        let a = Args::parse(&sv(&[
+            "quantize", "--model", "cnn6", "--wbits", "4", "-s", "seed=7", "--verbose",
+        ]))
+        .unwrap();
+        assert_eq!(a.command.as_deref(), Some("quantize"));
+        assert_eq!(a.flag("model"), Some("cnn6"));
+        assert_eq!(a.flag("wbits"), Some("4"));
+        assert_eq!(a.overrides, vec!["seed=7"]);
+        assert!(a.flag_bool("verbose"));
+    }
+
+    #[test]
+    fn empty_ok() {
+        let a = Args::parse(&[]).unwrap();
+        assert!(a.command.is_none());
+    }
+
+    #[test]
+    fn dangling_s_errors() {
+        assert!(Args::parse(&sv(&["x", "-s"])).is_err());
+    }
+}

@@ -1,0 +1,303 @@
+//! Experiment configuration: typed schema + JSON file loading + `k=v`
+//! CLI overrides.  One [`ExperimentConfig`] fully describes a run
+//! (model, training budget, quantization setting, method, pipeline knobs),
+//! which is what the job scheduler, the CLI and the benches all construct.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Calibration method under test (Table 1 columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Full LAPQ: layer-wise Lp + quadratic approx + Powell joint opt.
+    Lapq,
+    /// Layer-wise MMSE (p=2), no joint phase.
+    Mmse,
+    /// ACIQ analytic clipping.
+    Aciq,
+    /// TensorRT-style KL calibration.
+    Kld,
+    /// Min-max (no clipping).
+    MinMax,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "lapq" => Method::Lapq,
+            "mmse" => Method::Mmse,
+            "aciq" => Method::Aciq,
+            "kld" => Method::Kld,
+            "minmax" | "min-max" => Method::MinMax,
+            other => bail!("unknown method '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Lapq => "LAPQ",
+            Method::Mmse => "MMSE",
+            Method::Aciq => "ACIQ",
+            Method::Kld => "KLD",
+            Method::MinMax => "MinMax",
+        }
+    }
+}
+
+/// W/A bitwidths; 32 means "leave FP32" (Δ = 0 everywhere on that side).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitSpec {
+    pub weights: u32,
+    pub acts: u32,
+}
+
+impl BitSpec {
+    pub fn new(weights: u32, acts: u32) -> Self {
+        BitSpec { weights, acts }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{} / {}", self.weights, self.acts)
+    }
+
+    pub fn quant_weights(&self) -> bool {
+        self.weights < 32
+    }
+
+    pub fn quant_acts(&self) -> bool {
+        self.acts < 32
+    }
+}
+
+/// LAPQ pipeline knobs (paper defaults in `Default`).
+#[derive(Clone, Debug)]
+pub struct LapqCfg {
+    /// p grid for phase 1 (paper sweeps ~[2, 4]).
+    pub p_grid: Vec<f32>,
+    /// Powell outer iterations.
+    pub powell_iters: usize,
+    /// Powell objective-eval budget.
+    pub max_evals: usize,
+    /// Multiplicative search box around the initialization, per layer.
+    pub box_lo: f64,
+    pub box_hi: f64,
+    /// Skip quantizing first/last quant layers (paper convention).
+    pub exclude_first_last: bool,
+    /// Apply Banner-style per-channel bias correction to weights.
+    pub bias_correction: bool,
+}
+
+impl Default for LapqCfg {
+    fn default() -> Self {
+        LapqCfg {
+            // Wider than the paper's [2,4]: on small stand-ins the whole
+            // [2,4] trajectory can sit inside the low-bit collapse plateau
+            // while large p (≈ min-max) survives; the quadratic fit then
+            // interpolates in the informative region.
+            p_grid: vec![2.0, 2.5, 3.0, 4.0, 6.0, 8.0],
+            powell_iters: 2,
+            max_evals: 600,
+            box_lo: 0.3,
+            box_hi: 3.0,
+            exclude_first_last: true,
+            bias_correction: true,
+        }
+    }
+}
+
+/// A full experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub model: String,
+    pub seed: u64,
+    /// Training budget (steps) for producing the FP32 model.
+    pub train_steps: usize,
+    pub lr: f32,
+    /// Calibration set size in samples (paper: 512 images).
+    pub calib_size: usize,
+    /// Validation set size in samples.
+    pub val_size: usize,
+    pub bits: BitSpec,
+    pub method: Method,
+    pub lapq: LapqCfg,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            model: "cnn6".into(),
+            seed: 42,
+            train_steps: 300,
+            lr: 0.02,
+            calib_size: 512,
+            val_size: 2048,
+            bits: BitSpec::new(4, 4),
+            method: Method::Lapq,
+            lapq: LapqCfg::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a JSON file, then apply `k=v` overrides.
+    pub fn load(path: &str, overrides: &[String]) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+        let mut cfg = Self::from_json(&json)?;
+        cfg.apply_overrides(overrides)?;
+        Ok(cfg)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        let get_f = |k: &str| j.get(k).and_then(|v| v.as_f64());
+        if let Some(m) = j.get("model").and_then(|v| v.as_str()) {
+            cfg.model = m.to_string();
+        }
+        if let Some(v) = get_f("seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = get_f("train_steps") {
+            cfg.train_steps = v as usize;
+        }
+        if let Some(v) = get_f("lr") {
+            cfg.lr = v as f32;
+        }
+        if let Some(v) = get_f("calib_size") {
+            cfg.calib_size = v as usize;
+        }
+        if let Some(v) = get_f("val_size") {
+            cfg.val_size = v as usize;
+        }
+        if let Some(v) = get_f("bits_w") {
+            cfg.bits.weights = v as u32;
+        }
+        if let Some(v) = get_f("bits_a") {
+            cfg.bits.acts = v as u32;
+        }
+        if let Some(m) = j.get("method").and_then(|v| v.as_str()) {
+            cfg.method = Method::parse(m)?;
+        }
+        if let Some(l) = j.get("lapq") {
+            if let Some(arr) = l.get("p_grid").and_then(|v| v.as_arr()) {
+                cfg.lapq.p_grid = arr.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect();
+            }
+            if let Some(v) = l.get("powell_iters").and_then(|v| v.as_f64()) {
+                cfg.lapq.powell_iters = v as usize;
+            }
+            if let Some(v) = l.get("max_evals").and_then(|v| v.as_f64()) {
+                cfg.lapq.max_evals = v as usize;
+            }
+            if let Some(v) = l.get("bias_correction").and_then(|v| v.as_bool()) {
+                cfg.lapq.bias_correction = v;
+            }
+            if let Some(v) = l.get("exclude_first_last").and_then(|v| v.as_bool()) {
+                cfg.lapq.exclude_first_last = v;
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// `key=value` overrides (the CLI's `-s` flags).
+    pub fn apply_overrides(&mut self, kvs: &[String]) -> Result<()> {
+        for kv in kvs {
+            let (k, v) = kv.split_once('=').with_context(|| format!("bad override '{kv}'"))?;
+            match k {
+                "model" => self.model = v.to_string(),
+                "seed" => self.seed = v.parse()?,
+                "train_steps" => self.train_steps = v.parse()?,
+                "lr" => self.lr = v.parse()?,
+                "calib_size" => self.calib_size = v.parse()?,
+                "val_size" => self.val_size = v.parse()?,
+                "bits_w" => self.bits.weights = v.parse()?,
+                "bits_a" => self.bits.acts = v.parse()?,
+                "method" => self.method = Method::parse(v)?,
+                "powell_iters" => self.lapq.powell_iters = v.parse()?,
+                "max_evals" => self.lapq.max_evals = v.parse()?,
+                "bias_correction" => self.lapq.bias_correction = v.parse()?,
+                "exclude_first_last" => self.lapq.exclude_first_last = v.parse()?,
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize (for job-service responses and EXPERIMENTS.md records).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("train_steps", Json::Num(self.train_steps as f64)),
+            ("lr", Json::Num(self.lr as f64)),
+            ("calib_size", Json::Num(self.calib_size as f64)),
+            ("val_size", Json::Num(self.val_size as f64)),
+            ("bits_w", Json::Num(self.bits.weights as f64)),
+            ("bits_a", Json::Num(self.bits.acts as f64)),
+            ("method", Json::Str(self.method.name().into())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.bits.label(), "4 / 4");
+        assert!(c.lapq.p_grid.len() >= 4);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = ExperimentConfig::default();
+        c.apply_overrides(&[
+            "model=resmini".into(),
+            "bits_w=8".into(),
+            "bits_a=3".into(),
+            "method=aciq".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.model, "resmini");
+        assert_eq!(c.bits, BitSpec::new(8, 3));
+        assert_eq!(c.method, Method::Aciq);
+    }
+
+    #[test]
+    fn bad_override_rejected() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.apply_overrides(&["nope=1".into()]).is_err());
+        assert!(c.apply_overrides(&["noequals".into()]).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_core_fields() {
+        let c = ExperimentConfig::default();
+        let j = c.to_json();
+        let c2 = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c2.model, c.model);
+        assert_eq!(c2.bits, c.bits);
+        assert_eq!(c2.method, c.method);
+    }
+
+    #[test]
+    fn method_parse_all() {
+        for (s, m) in [
+            ("lapq", Method::Lapq),
+            ("MMSE", Method::Mmse),
+            ("aciq", Method::Aciq),
+            ("kld", Method::Kld),
+            ("minmax", Method::MinMax),
+        ] {
+            assert_eq!(Method::parse(s).unwrap(), m);
+        }
+        assert!(Method::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn bitspec_fp32_flags() {
+        assert!(!BitSpec::new(32, 8).quant_weights());
+        assert!(BitSpec::new(32, 8).quant_acts());
+    }
+}

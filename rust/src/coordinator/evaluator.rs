@@ -1,0 +1,67 @@
+//! Batched validation evaluation: task metric (accuracy / hit-rate@10)
+//! and mean loss over a registered batch set.
+
+use super::workload::{MetricKind, Split, Workload};
+use crate::runtime::manifest::ModelSpec;
+use crate::runtime::{BatchId, EngineHandle, QuantParams, SessionId};
+use anyhow::Result;
+
+/// A registered evaluation set (metric batches stay resident in the
+/// engine so repeated evaluations ship no data).
+pub struct EvalSet {
+    pub batches: Vec<BatchId>,
+    pub kind: MetricKind,
+    /// Samples per batch.
+    pub per_batch: usize,
+}
+
+impl EvalSet {
+    /// Build + register `count` metric batches from a split.
+    pub fn register(
+        eng: &EngineHandle,
+        spec: &ModelSpec,
+        workload: &Workload,
+        split: Split,
+        count: usize,
+    ) -> Result<EvalSet> {
+        let (raw, kind) = workload.metric_batches(spec, split, count);
+        let per_batch = raw[0][0].shape[0];
+        let batches = raw.into_iter().map(|b| eng.register_batch(b)).collect::<Result<_>>()?;
+        Ok(EvalSet { batches, kind, per_batch })
+    }
+
+    pub fn total(&self) -> usize {
+        self.batches.len() * self.per_batch
+    }
+
+    /// Task metric in [0,1] under optional quantization.
+    pub fn metric(
+        &self,
+        eng: &EngineHandle,
+        sess: SessionId,
+        quant: Option<&QuantParams>,
+    ) -> Result<f32> {
+        let mut good = 0.0f32;
+        for &b in &self.batches {
+            good += match self.kind {
+                MetricKind::Accuracy => eng.eval(sess, quant.cloned(), b)?.1,
+                MetricKind::HitRate => eng.hitrate(sess, quant.cloned(), b)?,
+            };
+        }
+        Ok(good / self.total() as f32)
+    }
+}
+
+/// Mean loss over a set of loss batches (vision: (x,y); ncf: (u,i,l)).
+pub fn mean_loss(
+    eng: &EngineHandle,
+    sess: SessionId,
+    quant: Option<&QuantParams>,
+    batches: &[BatchId],
+) -> Result<f64> {
+    let mut acc = 0.0f64;
+    for &b in batches {
+        acc += eng.eval(sess, quant.cloned(), b)?.0 as f64;
+    }
+    Ok(acc / batches.len().max(1) as f64)
+}

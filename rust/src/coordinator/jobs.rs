@@ -1,0 +1,150 @@
+//! Quantization jobs: one [`ExperimentConfig`] in, one [`JobResult`] out.
+//!
+//! The [`Runner`] owns the engine handle and a **trained-model cache** —
+//! every (model, seed, steps) FP32 training run happens once and is shared
+//! by all methods/bitwidths that quantize it (exactly how the paper reuses
+//! one pretrained checkpoint across its table rows).
+
+use super::evaluator::EvalSet;
+use super::trainer::{train_full, TrainCfg, TrainReport};
+use super::workload::{Split, Workload};
+use crate::config::ExperimentConfig;
+use crate::lapq::calibration::{collect, CalibData};
+use crate::lapq::pipeline::{calibrate, calibrate_with_init, InitKind, QuantOutcome};
+use crate::runtime::{EngineHandle, SessionId};
+use crate::tensor::HostTensor;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Outcome of a full quantization job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub model: String,
+    pub bits_label: String,
+    pub method: String,
+    /// Task metric (accuracy or hit-rate) of the FP32 model.
+    pub fp32_metric: f32,
+    /// Task metric under the calibrated quantization.
+    pub quant_metric: f32,
+    pub outcome: QuantOutcome,
+    pub seconds: f64,
+}
+
+pub struct Runner {
+    pub eng: EngineHandle,
+    /// (model, seed, steps) -> trained FP32 params.
+    trained: HashMap<(String, u64, usize), (Vec<HostTensor>, TrainReport)>,
+    /// cached val sets per (model, seed, val_size)
+    val_batches: usize,
+}
+
+impl Runner {
+    pub fn new(eng: EngineHandle) -> Self {
+        Runner { eng, trained: HashMap::new(), val_batches: 0 }
+    }
+
+    /// Train (or fetch cached) FP32 parameters for a config.
+    pub fn trained_params(
+        &mut self,
+        cfg: &ExperimentConfig,
+    ) -> Result<(Vec<HostTensor>, TrainReport)> {
+        let key = (cfg.model.clone(), cfg.seed, cfg.train_steps);
+        if let Some(hit) = self.trained.get(&key) {
+            return Ok(hit.clone());
+        }
+        let spec = self.eng.manifest().model(&cfg.model)?.clone();
+        let workload = Workload::for_model(&spec, cfg.seed)?;
+        let tcfg = TrainCfg { steps: cfg.train_steps, base_lr: cfg.lr, ..Default::default() };
+        let (sess, report) = train_full(&self.eng, &cfg.model, &workload, cfg.seed, &tcfg)?;
+        let params = self.eng.get_params(sess)?;
+        self.eng.drop_session(sess)?;
+        self.trained.insert(key.clone(), (params, report));
+        Ok(self.trained[&key].clone())
+    }
+
+    /// Set up (session, workload, val set, calib data) for a config.
+    fn prepare(
+        &mut self,
+        cfg: &ExperimentConfig,
+    ) -> Result<(SessionId, Workload, EvalSet, CalibData)> {
+        let spec = self.eng.manifest().model(&cfg.model)?.clone();
+        let workload = Workload::for_model(&spec, cfg.seed)?;
+        let (params, _) = self.trained_params(cfg)?;
+        let sess = self.eng.create_session(&cfg.model, params)?;
+        let n_val = cfg.val_size.div_ceil(spec.eval_batch()).max(1);
+        let val = EvalSet::register(&self.eng, &spec, &workload, Split::Val, n_val)?;
+        let calib = collect(&self.eng, sess, &spec, &workload, cfg.calib_size)?;
+        self.val_batches = val.batches.len();
+        Ok((sess, workload, val, calib))
+    }
+
+    fn finish(
+        &self,
+        cfg: &ExperimentConfig,
+        sess: SessionId,
+        val: &EvalSet,
+        calib: &CalibData,
+        outcome: QuantOutcome,
+        t0: std::time::Instant,
+    ) -> Result<JobResult> {
+        let fp32_metric = val.metric(&self.eng, sess, None)?;
+        let quant_metric = val.metric(&self.eng, sess, Some(&outcome.quant))?;
+        calib.release(&self.eng);
+        for &b in &val.batches {
+            let _ = self.eng.drop_batch(b);
+        }
+        self.eng.drop_session(sess)?;
+        Ok(JobResult {
+            model: cfg.model.clone(),
+            bits_label: cfg.bits.label(),
+            method: outcome.method.name().to_string(),
+            fp32_metric,
+            quant_metric,
+            outcome,
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Run a full job with the configured method.
+    pub fn run(&mut self, cfg: &ExperimentConfig) -> Result<JobResult> {
+        let t0 = std::time::Instant::now();
+        let spec = self.eng.manifest().model(&cfg.model)?.clone();
+        let (sess, _w, val, calib) = self.prepare(cfg)?;
+        let outcome = calibrate(&self.eng, sess, &spec, cfg, &calib)?;
+        let mut res = self.finish(cfg, sess, &val, &calib, outcome, t0)?;
+        res.method = cfg.method.name().to_string();
+        log::info!(
+            "job {} {} {}: fp32 {:.3} -> quant {:.3} ({:.1}s)",
+            res.model,
+            res.bits_label,
+            res.method,
+            res.fp32_metric,
+            res.quant_metric,
+            res.seconds
+        );
+        Ok(res)
+    }
+
+    /// Table-3 ablation entry: explicit init, joint phase optional.
+    pub fn run_with_init(
+        &mut self,
+        cfg: &ExperimentConfig,
+        init: InitKind,
+        run_joint: bool,
+    ) -> Result<JobResult> {
+        let t0 = std::time::Instant::now();
+        let spec = self.eng.manifest().model(&cfg.model)?.clone();
+        let (sess, _w, val, calib) = self.prepare(cfg)?;
+        let outcome = calibrate_with_init(&self.eng, sess, &spec, cfg, &calib, init, run_joint)?;
+        self.finish(cfg, sess, &val, &calib, outcome, t0)
+    }
+
+    /// Lower-level access for analysis benches: trained session + calib.
+    pub fn session_with_calib(
+        &mut self,
+        cfg: &ExperimentConfig,
+    ) -> Result<(SessionId, EvalSet, CalibData)> {
+        let (sess, _w, val, calib) = self.prepare(cfg)?;
+        Ok((sess, val, calib))
+    }
+}

@@ -1,0 +1,84 @@
+//! Global metrics registry: counters and timers every subsystem can bump,
+//! dumped as JSON for EXPERIMENTS.md and the job service.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+static REGISTRY: Mutex<Option<BTreeMap<String, f64>>> = Mutex::new(None);
+
+fn with<R>(f: impl FnOnce(&mut BTreeMap<String, f64>) -> R) -> R {
+    let mut guard = REGISTRY.lock().unwrap();
+    f(guard.get_or_insert_with(BTreeMap::new))
+}
+
+/// Add `v` to counter `name`.
+pub fn add(name: &str, v: f64) {
+    with(|m| *m.entry(name.to_string()).or_insert(0.0) += v);
+}
+
+/// Increment counter by one.
+pub fn inc(name: &str) {
+    add(name, 1.0);
+}
+
+/// Set a gauge.
+pub fn set(name: &str, v: f64) {
+    with(|m| {
+        m.insert(name.to_string(), v);
+    });
+}
+
+/// Read a metric (0 if absent).
+pub fn get(name: &str) -> f64 {
+    with(|m| m.get(name).copied().unwrap_or(0.0))
+}
+
+/// Time a closure into `<name>_seconds` (accumulating) and count calls.
+pub fn timed<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    add(&format!("{name}_seconds"), t0.elapsed().as_secs_f64());
+    inc(&format!("{name}_calls"));
+    out
+}
+
+/// Snapshot as JSON.
+pub fn dump() -> Json {
+    with(|m| Json::Obj(m.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect()))
+}
+
+/// Clear everything (tests).
+pub fn reset() {
+    with(|m| m.clear());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        reset();
+        inc("jobs");
+        inc("jobs");
+        add("loss", 1.5);
+        set("gauge", 7.0);
+        assert_eq!(get("jobs"), 2.0);
+        assert_eq!(get("loss"), 1.5);
+        assert_eq!(get("gauge"), 7.0);
+        let j = dump();
+        assert_eq!(j.req("jobs").as_f64(), Some(2.0));
+        reset();
+        assert_eq!(get("jobs"), 0.0);
+    }
+
+    #[test]
+    fn timed_records() {
+        reset();
+        let v = timed("op", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(get("op_calls"), 1.0);
+        assert!(get("op_seconds") >= 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Layer-3 coordinator: training, evaluation, job orchestration, metrics
+//! and the TCP job service — the deployment-facing half of the system.
+
+pub mod evaluator;
+pub mod jobs;
+pub mod metrics;
+pub mod scheduler;
+pub mod service;
+pub mod trainer;
+pub mod workload;

@@ -1,0 +1,94 @@
+//! Job queue: run a batch of experiment configs through one [`Runner`],
+//! with failure isolation (one bad job doesn't sink the sweep) and a
+//! printed/CSV summary — this is what every table bench drives.
+
+use super::jobs::{JobResult, Runner};
+use super::metrics;
+use crate::benchkit::Table;
+use crate::config::ExperimentConfig;
+use anyhow::Result;
+
+pub struct Scheduler {
+    pub queue: Vec<ExperimentConfig>,
+    pub results: Vec<JobResult>,
+    pub failures: Vec<(ExperimentConfig, String)>,
+}
+
+impl Scheduler {
+    pub fn new() -> Self {
+        Scheduler { queue: Vec::new(), results: Vec::new(), failures: Vec::new() }
+    }
+
+    pub fn push(&mut self, cfg: ExperimentConfig) -> &mut Self {
+        self.queue.push(cfg);
+        self
+    }
+
+    /// Run everything sequentially (XLA is internally parallel; jobs share
+    /// the trained-model cache inside `runner`).
+    pub fn run_all(&mut self, runner: &mut Runner) -> Result<()> {
+        let jobs = std::mem::take(&mut self.queue);
+        let total = jobs.len();
+        for (i, cfg) in jobs.into_iter().enumerate() {
+            log::info!(
+                "[{}/{}] {} {} {}",
+                i + 1,
+                total,
+                cfg.model,
+                cfg.bits.label(),
+                cfg.method.name()
+            );
+            metrics::inc("scheduler_jobs");
+            match runner.run(&cfg) {
+                Ok(res) => self.results.push(res),
+                Err(e) => {
+                    metrics::inc("scheduler_failures");
+                    log::error!("job failed: {e:#}");
+                    self.failures.push((cfg, format!("{e:#}")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Paper-style comparison table of all results.
+    pub fn summary_table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &["Model", "W/A", "Method", "FP32", "Quant", "Δcalib loss", "evals", "sec"],
+        );
+        for r in &self.results {
+            t.row(&[
+                r.model.clone(),
+                r.bits_label.clone(),
+                r.method.clone(),
+                crate::benchkit::pct(r.fp32_metric),
+                crate::benchkit::pct(r.quant_metric),
+                format!("{:+.4}", r.outcome.calib_loss - r.outcome.fp32_calib_loss),
+                r.outcome.joint_evals.to_string(),
+                format!("{:.1}", r.seconds),
+            ]);
+        }
+        t
+    }
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_and_summary_shape() {
+        let mut s = Scheduler::new();
+        s.push(ExperimentConfig::default());
+        assert_eq!(s.queue.len(), 1);
+        let t = s.summary_table("t");
+        assert!(t.rows.is_empty());
+    }
+}

@@ -1,0 +1,147 @@
+//! TCP job service: JSON-lines protocol for submitting quantization jobs
+//! to a running coordinator (the "deployment" face of the system).
+//!
+//! Protocol (one JSON object per line):
+//!   {"cmd":"ping"}                         -> {"ok":true,"pong":true}
+//!   {"cmd":"models"}                       -> {"ok":true,"models":[...]}
+//!   {"cmd":"metrics"}                      -> {"ok":true,"metrics":{...}}
+//!   {"cmd":"quantize", ...config fields}   -> {"ok":true,"result":{...}}
+//!
+//! The listener thread accepts connections and forwards jobs to the
+//! single Runner (PJRT engine behind it); responses stream back on the
+//! same connection.  `max_requests` bounds the serve loop for tests.
+
+use super::jobs::Runner;
+use super::metrics;
+use crate::config::ExperimentConfig;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+pub struct Service {
+    listener: TcpListener,
+    pub addr: std::net::SocketAddr,
+}
+
+impl Service {
+    /// Bind to `addr` (use port 0 for ephemeral).
+    pub fn bind(addr: &str) -> Result<Service> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let addr = listener.local_addr()?;
+        log::info!("service listening on {addr}");
+        Ok(Service { listener, addr })
+    }
+
+    /// Serve until `max_requests` requests have been handled
+    /// (`usize::MAX` for forever).  Connections are handled sequentially:
+    /// quantization jobs are minutes-long and own the PJRT engine.
+    pub fn serve(&self, runner: &mut Runner, max_requests: usize) -> Result<()> {
+        let mut handled = 0usize;
+        for stream in self.listener.incoming() {
+            let stream = stream?;
+            handled += self.handle_conn(stream, runner, max_requests - handled)?;
+            if handled >= max_requests {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    fn handle_conn(
+        &self,
+        stream: TcpStream,
+        runner: &mut Runner,
+        budget: usize,
+    ) -> Result<usize> {
+        let peer = stream.peer_addr()?;
+        log::info!("conn from {peer}");
+        let mut writer = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        let mut handled = 0usize;
+        for line in reader.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(_) => break,
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            metrics::inc("service_requests");
+            let resp = self.dispatch(&line, runner);
+            writer.write_all(resp.dump().as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            handled += 1;
+            if handled >= budget {
+                break;
+            }
+        }
+        Ok(handled)
+    }
+
+    fn dispatch(&self, line: &str, runner: &mut Runner) -> Json {
+        match self.dispatch_inner(line, runner) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(format!("{e:#}"))),
+            ]),
+        }
+    }
+
+    fn dispatch_inner(&self, line: &str, runner: &mut Runner) -> Result<Json> {
+        let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
+        let cmd = req.get("cmd").and_then(|c| c.as_str()).unwrap_or("");
+        match cmd {
+            "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
+            "models" => {
+                let models: Vec<Json> = runner
+                    .eng
+                    .manifest()
+                    .models
+                    .keys()
+                    .map(|k| Json::Str(k.clone()))
+                    .collect();
+                Ok(Json::obj(vec![("ok", Json::Bool(true)), ("models", Json::Arr(models))]))
+            }
+            "metrics" => {
+                Ok(Json::obj(vec![("ok", Json::Bool(true)), ("metrics", metrics::dump())]))
+            }
+            "quantize" => {
+                let cfg = ExperimentConfig::from_json(&req)?;
+                let res = runner.run(&cfg)?;
+                Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    (
+                        "result",
+                        Json::obj(vec![
+                            ("model", Json::Str(res.model)),
+                            ("bits", Json::Str(res.bits_label)),
+                            ("method", Json::Str(res.method)),
+                            ("fp32_metric", Json::Num(res.fp32_metric as f64)),
+                            ("quant_metric", Json::Num(res.quant_metric as f64)),
+                            ("calib_loss", Json::Num(res.outcome.calib_loss)),
+                            ("fp32_calib_loss", Json::Num(res.outcome.fp32_calib_loss)),
+                            ("joint_evals", Json::Num(res.outcome.joint_evals as f64)),
+                            ("seconds", Json::Num(res.seconds)),
+                        ]),
+                    ),
+                ]))
+            }
+            other => anyhow::bail!("unknown cmd '{other}'"),
+        }
+    }
+}
+
+/// Minimal client for tests and scripting.
+pub fn request(addr: &std::net::SocketAddr, body: &Json) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(body.dump().as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+}

@@ -1,0 +1,101 @@
+//! FP32 training loop: produces the pretrained models that post-training
+//! quantization starts from (the paper downloads torchvision checkpoints;
+//! we train our stand-ins from scratch through the AOT `train_step`
+//! artifact — Python never runs).
+
+use super::workload::Workload;
+use crate::runtime::{EngineHandle, SessionId};
+use crate::tensor::init::init_params;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub steps: usize,
+    pub base_lr: f32,
+    /// Linear warmup steps, then cosine decay to `base_lr * min_lr_frac`.
+    pub warmup: usize,
+    pub min_lr_frac: f32,
+    pub log_every: usize,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg { steps: 300, base_lr: 0.05, warmup: 20, min_lr_frac: 0.05, log_every: 50 }
+    }
+}
+
+/// Loss curve + timing of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub losses: Vec<(usize, f32)>,
+    pub final_loss: f32,
+    pub seconds: f64,
+    pub steps: usize,
+}
+
+/// Cosine schedule with warmup.
+pub fn lr_at(cfg: &TrainCfg, step: usize) -> f32 {
+    if step < cfg.warmup {
+        return cfg.base_lr * (step + 1) as f32 / cfg.warmup as f32;
+    }
+    let t = (step - cfg.warmup) as f32 / (cfg.steps.saturating_sub(cfg.warmup)).max(1) as f32;
+    let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+    cfg.base_lr * (cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos)
+}
+
+/// Create a fresh session for `model`, train it, return (session, report).
+pub fn train_full(
+    eng: &EngineHandle,
+    model: &str,
+    workload: &Workload,
+    seed: u64,
+    cfg: &TrainCfg,
+) -> Result<(SessionId, TrainReport)> {
+    let spec = eng.manifest().model(model)?.clone();
+    let sess = eng.create_session(model, init_params(&spec.params, seed))?;
+    let t0 = std::time::Instant::now();
+    let mut losses = Vec::new();
+    let mut final_loss = f32::NAN;
+    for step in 0..cfg.steps {
+        let batch = workload.train_batch(&spec, step as u64);
+        let bid = eng.register_batch(batch)?;
+        let lr = lr_at(cfg, step);
+        let loss = eng.train_step(sess, bid, lr)?;
+        eng.drop_batch(bid)?;
+        final_loss = loss;
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            log::info!("train {model} step {step:>5} lr {lr:.4} loss {loss:.4}");
+            losses.push((step, loss));
+        }
+    }
+    Ok((
+        sess,
+        TrainReport { losses, final_loss, seconds: t0.elapsed().as_secs_f64(), steps: cfg.steps },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let cfg = TrainCfg { steps: 100, base_lr: 1.0, warmup: 10, min_lr_frac: 0.1, log_every: 10 };
+        assert!(lr_at(&cfg, 0) < 0.2); // warmup start
+        assert!((lr_at(&cfg, 9) - 1.0).abs() < 1e-6); // warmup end
+        assert!(lr_at(&cfg, 50) < 1.0);
+        let end = lr_at(&cfg, 99);
+        assert!(end >= 0.1 - 1e-6 && end < 0.15, "{end}");
+    }
+
+    #[test]
+    fn lr_monotone_after_warmup() {
+        let cfg = TrainCfg::default();
+        let mut prev = f32::INFINITY;
+        for s in cfg.warmup..cfg.steps {
+            let lr = lr_at(&cfg, s);
+            assert!(lr <= prev + 1e-6);
+            prev = lr;
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Workload abstraction: couples a model to its data substrate and batch
+//! shapes, so the trainer / evaluator / LAPQ pipeline are task-agnostic.
+
+use crate::data::ncf::SynthNcf;
+use crate::data::vision::SynthVision;
+use crate::runtime::manifest::ModelSpec;
+use crate::tensor::HostTensor;
+use anyhow::{bail, Result};
+
+/// Index-space layout (samples are generated on demand; splits are ranges).
+const TRAIN_BASE: u64 = 0;
+const VAL_BASE: u64 = 10_000_000;
+const CALIB_BASE: u64 = 20_000_000;
+
+pub enum Workload {
+    Vision {
+        data: SynthVision,
+        /// For mlp3: random-project images to this many features.
+        feature_dim: Option<usize>,
+    },
+    Ncf {
+        data: SynthNcf,
+    },
+}
+
+impl Workload {
+    /// Build the standard workload for a model.
+    pub fn for_model(spec: &ModelSpec, seed: u64) -> Result<Workload> {
+        match spec.task.as_str() {
+            "vision" => {
+                let feature_dim = if spec.input_spec["eval"][0].shape.len() == 2 {
+                    Some(spec.input_spec["eval"][0].shape[1])
+                } else {
+                    None
+                };
+                Ok(Workload::Vision { data: SynthVision::new(seed), feature_dim })
+            }
+            "ncf" => Ok(Workload::Ncf { data: SynthNcf::new(seed, 2000, 1000, 12) }),
+            other => bail!("unknown task {other}"),
+        }
+    }
+
+    /// Training batch for global step `step`.
+    pub fn train_batch(&self, spec: &ModelSpec, step: u64) -> Vec<HostTensor> {
+        let n = spec.train_batch();
+        match self {
+            Workload::Vision { data, feature_dim } => {
+                let start = TRAIN_BASE + step * n as u64;
+                let (x, y) = match feature_dim {
+                    Some(d) => data.batch_features(start, n, *d),
+                    None => data.batch(start, n),
+                };
+                vec![x, y]
+            }
+            Workload::Ncf { data } => {
+                let (u, i, l) = data.train_batch(step, n, 4);
+                vec![u, i, l]
+            }
+        }
+    }
+
+    /// `count` evaluation batches (inputs + labels) from a named split.
+    pub fn eval_batches(&self, spec: &ModelSpec, split: Split, count: usize) -> Vec<Vec<HostTensor>> {
+        let n = spec.eval_batch();
+        let base = split.base();
+        (0..count)
+            .map(|k| match self {
+                Workload::Vision { data, feature_dim } => {
+                    let start = base + (k * n) as u64;
+                    let (x, y) = match feature_dim {
+                        Some(d) => data.batch_features(start, n, *d),
+                        None => data.batch(start, n),
+                    };
+                    vec![x, y]
+                }
+                Workload::Ncf { data } => {
+                    let (u, i, l) = data.train_batch(base + 1000 + k as u64, n, 4);
+                    vec![u, i, l]
+                }
+            })
+            .collect()
+    }
+
+    /// Activation-collection batches (inputs only) from the calib split.
+    pub fn acts_batches(&self, spec: &ModelSpec, count: usize) -> Vec<Vec<HostTensor>> {
+        self.eval_batches(spec, Split::Calib, count)
+            .into_iter()
+            .map(|mut b| match self {
+                Workload::Vision { .. } => {
+                    b.truncate(1);
+                    b
+                }
+                Workload::Ncf { .. } => {
+                    b.truncate(2);
+                    b
+                }
+            })
+            .collect()
+    }
+
+    /// Task metric batches: vision reuses eval batches (accuracy); NCF
+    /// builds mlperf hit-rate batches.  Returns (batches, entry_kind).
+    pub fn metric_batches(
+        &self,
+        spec: &ModelSpec,
+        split: Split,
+        count: usize,
+    ) -> (Vec<Vec<HostTensor>>, MetricKind) {
+        match self {
+            Workload::Vision { .. } => (self.eval_batches(spec, split, count), MetricKind::Accuracy),
+            Workload::Ncf { data } => {
+                let n = spec.input_spec["hitrate"][0].shape[0];
+                let start = match split {
+                    Split::Val => 0,
+                    Split::Calib => 1000,
+                    Split::Train => 500,
+                };
+                let batches = (0..count)
+                    .map(|k| {
+                        let (u, p, negs) = data.eval_batch(start + k * n, n);
+                        vec![u, p, negs]
+                    })
+                    .collect();
+                (batches, MetricKind::HitRate)
+            }
+        }
+    }
+}
+
+/// Which metric a metric-batch evaluates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Accuracy,
+    HitRate,
+}
+
+/// Disjoint sample splits (index-space offsets).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Calib,
+}
+
+impl Split {
+    fn base(self) -> u64 {
+        match self {
+            Split::Train => TRAIN_BASE,
+            Split::Val => VAL_BASE,
+            Split::Calib => CALIB_BASE,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn spec(name: &str) -> Option<ModelSpec> {
+        Manifest::load(Manifest::default_dir()).ok()?.model(name).ok().cloned()
+    }
+
+    #[test]
+    fn vision_batches_shape() {
+        let Some(spec) = spec("cnn6") else { return };
+        let w = Workload::for_model(&spec, 1).unwrap();
+        let tb = w.train_batch(&spec, 0);
+        assert_eq!(tb.len(), 2);
+        assert_eq!(tb[0].shape[0], spec.train_batch());
+        let eb = w.eval_batches(&spec, Split::Val, 2);
+        assert_eq!(eb.len(), 2);
+        assert_eq!(eb[0][0].shape[0], spec.eval_batch());
+        // acts batches drop labels
+        assert_eq!(w.acts_batches(&spec, 1)[0].len(), 1);
+    }
+
+    #[test]
+    fn mlp_uses_features() {
+        let Some(spec) = spec("mlp3") else { return };
+        let w = Workload::for_model(&spec, 1).unwrap();
+        let tb = w.train_batch(&spec, 0);
+        assert_eq!(tb[0].shape, vec![spec.train_batch(), 64]);
+    }
+
+    #[test]
+    fn splits_disjoint_batches() {
+        let Some(spec) = spec("cnn6") else { return };
+        let w = Workload::for_model(&spec, 1).unwrap();
+        let a = w.eval_batches(&spec, Split::Val, 1);
+        let b = w.eval_batches(&spec, Split::Calib, 1);
+        assert_ne!(a[0][0].f(), b[0][0].f());
+    }
+
+    #[test]
+    fn ncf_metric_batches() {
+        let Some(spec) = spec("ncf") else { return };
+        let w = Workload::for_model(&spec, 1).unwrap();
+        let (mb, kind) = w.metric_batches(&spec, Split::Val, 2);
+        assert_eq!(kind, MetricKind::HitRate);
+        assert_eq!(mb[0].len(), 3);
+        assert_eq!(mb[0][2].shape[1], 99);
+    }
+}

@@ -1,0 +1,8 @@
+//! Synthetic data substrates standing in for the paper's datasets
+//! (ImageNet → procedural textures; MovieLens-1B → latent-factor implicit
+//! feedback).  See DESIGN.md §Substitutions for why these preserve the
+//! behaviour the paper measures.
+
+pub mod batcher;
+pub mod ncf;
+pub mod vision;

@@ -1,0 +1,207 @@
+//! Synthetic implicit-feedback dataset for NCF (MovieLens-1B stand-in).
+//!
+//! Generative model: latent user/item factors `u, v ~ N(0, I_8/√8)` plus an
+//! item popularity bias; the affinity is `2.5·u·v + pop`.  For each user we
+//! sample `k` positive items by affinity-weighted softmax sampling.
+//! Evaluation follows the mlperf NCF protocol: per user, one held-out
+//! positive is ranked against 99 sampled negatives (hit-rate@10).
+
+use crate::tensor::HostTensor;
+use crate::util::rng::Pcg32;
+
+pub const DIM: usize = 8;
+
+pub struct SynthNcf {
+    pub n_users: usize,
+    pub n_items: usize,
+    user_f: Vec<f32>,
+    item_f: Vec<f32>,
+    pop: Vec<f32>,
+    /// positives per user: [user][k]
+    pub positives: Vec<Vec<u32>>,
+    /// last positive per user, held out for eval
+    pub holdout: Vec<u32>,
+    seed: u64,
+}
+
+impl SynthNcf {
+    pub fn new(seed: u64, n_users: usize, n_items: usize, pos_per_user: usize) -> Self {
+        let mut rng = Pcg32::new(seed, 0x4ecf);
+        let scale = (1.0 / DIM as f32).sqrt();
+        let user_f: Vec<f32> = (0..n_users * DIM).map(|_| rng.normal() * scale).collect();
+        let item_f: Vec<f32> = (0..n_items * DIM).map(|_| rng.normal() * scale).collect();
+        let pop: Vec<f32> = (0..n_items).map(|_| rng.normal() * 0.5).collect();
+
+        let mut positives = Vec::with_capacity(n_users);
+        let mut holdout = Vec::with_capacity(n_users);
+        for u in 0..n_users {
+            // affinity-weighted sampling without replacement via Gumbel-top-k
+            let uf = &user_f[u * DIM..(u + 1) * DIM];
+            let mut keyed: Vec<(f32, u32)> = (0..n_items)
+                .map(|i| {
+                    let vf = &item_f[i * DIM..(i + 1) * DIM];
+                    let aff: f32 = uf.iter().zip(vf).map(|(a, b)| a * b).sum::<f32>() * 2.5
+                        + pop[i];
+                    let gumbel = -(-rng.uniform().max(1e-9).ln()).ln();
+                    (aff + 0.8 * gumbel, i as u32)
+                })
+                .collect();
+            keyed.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            let mut pos: Vec<u32> = keyed[..pos_per_user + 1].iter().map(|k| k.1).collect();
+            holdout.push(pos.pop().unwrap());
+            positives.push(pos);
+        }
+        SynthNcf { n_users, n_items, user_f, item_f, pop, positives, holdout, seed }
+    }
+
+    /// Training batch of (users, items, labels) with `neg_ratio` sampled
+    /// negatives per positive.  Deterministic in `epoch_index`.
+    pub fn train_batch(
+        &self,
+        epoch_index: u64,
+        n: usize,
+        neg_ratio: usize,
+    ) -> (HostTensor, HostTensor, HostTensor) {
+        let mut rng = Pcg32::new(self.seed ^ epoch_index.wrapping_mul(0x2545f491), 0x7ea1);
+        let mut users = Vec::with_capacity(n);
+        let mut items = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let u = rng.below(self.n_users as u32);
+            let pos_list = &self.positives[u as usize];
+            if rng.below((neg_ratio + 1) as u32) == 0 {
+                // positive
+                let p = pos_list[rng.below(pos_list.len() as u32) as usize];
+                users.push(u as i32);
+                items.push(p as i32);
+                labels.push(1.0);
+            } else {
+                // negative: rejection-sample an item not in the positives
+                let mut it = rng.below(self.n_items as u32);
+                let mut guard = 0;
+                while (pos_list.contains(&it) || self.holdout[u as usize] == it) && guard < 16 {
+                    it = rng.below(self.n_items as u32);
+                    guard += 1;
+                }
+                users.push(u as i32);
+                items.push(it as i32);
+                labels.push(0.0);
+            }
+        }
+        (
+            HostTensor::i32(vec![n], users),
+            HostTensor::i32(vec![n], items),
+            HostTensor::f32(vec![n], labels),
+        )
+    }
+
+    /// mlperf eval batch: `n` users starting at `start`, each with the
+    /// held-out positive and 99 negatives.  Returns (users, pos, negs).
+    pub fn eval_batch(&self, start: usize, n: usize) -> (HostTensor, HostTensor, HostTensor) {
+        let mut rng = Pcg32::new(self.seed ^ 0xeba1, 0x99);
+        let mut users = Vec::with_capacity(n);
+        let mut pos = Vec::with_capacity(n);
+        let mut negs = Vec::with_capacity(n * 99);
+        for k in 0..n {
+            let u = (start + k) % self.n_users;
+            users.push(u as i32);
+            pos.push(self.holdout[u] as i32);
+            let pos_list = &self.positives[u];
+            let mut count = 0;
+            while count < 99 {
+                let it = rng.below(self.n_items as u32);
+                if it != self.holdout[u] && !pos_list.contains(&it) {
+                    negs.push(it as i32);
+                    count += 1;
+                }
+            }
+        }
+        (
+            HostTensor::i32(vec![n], users),
+            HostTensor::i32(vec![n], pos),
+            HostTensor::i32(vec![n, 99], negs),
+        )
+    }
+
+    /// Oracle hit-rate@10 using the true latent factors — the ceiling any
+    /// learned model can approach (used to sanity-check training).
+    pub fn oracle_hitrate(&self, n_users: usize) -> f32 {
+        let (users, pos, negs) = self.eval_batch(0, n_users);
+        let mut hits = 0;
+        for k in 0..n_users {
+            let u = users.i()[k] as usize;
+            let uf = &self.user_f[u * DIM..(u + 1) * DIM];
+            let score = |i: usize| -> f32 {
+                let vf = &self.item_f[i * DIM..(i + 1) * DIM];
+                uf.iter().zip(vf).map(|(a, b)| a * b).sum::<f32>() * 2.5 + self.pop[i]
+            };
+            let sp = score(pos.i()[k] as usize);
+            let rank = (0..99)
+                .filter(|&j| score(negs.i()[k * 99 + j] as usize) > sp)
+                .count();
+            if rank < 10 {
+                hits += 1;
+            }
+        }
+        hits as f32 / n_users as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SynthNcf {
+        SynthNcf::new(3, 200, 100, 8)
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let d = small();
+        let (u, i, l) = d.train_batch(0, 256, 4);
+        assert_eq!(u.shape, vec![256]);
+        assert!(u.i().iter().all(|&x| (0..200).contains(&x)));
+        assert!(i.i().iter().all(|&x| (0..100).contains(&x)));
+        assert!(l.f().iter().all(|&x| x == 0.0 || x == 1.0));
+    }
+
+    #[test]
+    fn label_balance_matches_neg_ratio() {
+        let d = small();
+        let (_, _, l) = d.train_batch(1, 8192, 4);
+        let pos_frac = l.f().iter().sum::<f32>() / 8192.0;
+        assert!((pos_frac - 0.2).abs() < 0.03, "{pos_frac}");
+    }
+
+    #[test]
+    fn eval_batch_protocol() {
+        let d = small();
+        let (u, p, n) = d.eval_batch(0, 32);
+        assert_eq!(n.shape, vec![32, 99]);
+        for k in 0..32 {
+            let user = u.i()[k] as usize;
+            assert_eq!(p.i()[k] as u32, d.holdout[user]);
+            for j in 0..99 {
+                let neg = n.i()[k * 99 + j] as u32;
+                assert_ne!(neg, d.holdout[user]);
+                assert!(!d.positives[user].contains(&neg));
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_beats_chance() {
+        let d = small();
+        let hr = d.oracle_hitrate(200);
+        // chance = 10/100 = 0.1; the latent model must be far above it
+        assert!(hr > 0.4, "oracle hitrate {hr}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = SynthNcf::new(5, 100, 80, 4);
+        let b = SynthNcf::new(5, 100, 80, 4);
+        assert_eq!(a.holdout, b.holdout);
+        assert_eq!(a.train_batch(3, 64, 4), b.train_batch(3, 64, 4));
+    }
+}

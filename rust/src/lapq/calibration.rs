@@ -1,0 +1,113 @@
+//! Calibration data collection: weight tensors, activation samples and
+//! registered calibration-loss batches — everything phases 1–3 of LAPQ
+//! (and every baseline) consume.
+
+use crate::coordinator::workload::{Split, Workload};
+use crate::quant::GridKind;
+use crate::runtime::manifest::ModelSpec;
+use crate::runtime::{BatchId, EngineHandle, SessionId};
+use crate::tensor::HostTensor;
+use anyhow::Result;
+
+/// Cap on retained activation samples per layer (deterministic stride
+/// subsampling keeps the Δ search fast without biasing the distribution).
+pub const MAX_ACT_SAMPLES: usize = 32_768;
+
+pub struct CalibData {
+    /// Per quant layer: the (FP32) weight tensor, cloned from the session.
+    pub weights: Vec<HostTensor>,
+    /// Per quant layer: subsampled input-activation values.
+    pub act_samples: Vec<Vec<f32>>,
+    /// Per quant layer: activation grid kind.
+    pub act_kind: Vec<GridKind>,
+    /// Registered calibration-loss batches (drive `fwd_quant`).
+    pub loss_batches: Vec<BatchId>,
+}
+
+/// Gather calibration data for `sess`.
+///
+/// `calib_size` samples are split into `ceil(size / eval_batch)` batches;
+/// the same batches serve the loss objective, while `acts` executions on
+/// inputs-only variants provide the activation populations.
+pub fn collect(
+    eng: &EngineHandle,
+    sess: SessionId,
+    spec: &ModelSpec,
+    workload: &Workload,
+    calib_size: usize,
+) -> Result<CalibData> {
+    let per = spec.eval_batch();
+    let n_batches = calib_size.div_ceil(per).max(1);
+
+    // weights
+    let params = eng.get_params(sess)?;
+    let weights: Vec<HostTensor> =
+        spec.quant_layers.iter().map(|q| params[q.weight_param].clone()).collect();
+    let act_kind: Vec<GridKind> =
+        spec.quant_layers.iter().map(|q| GridKind::from_signed(q.act_signed)).collect();
+
+    // loss batches
+    let raw = workload.eval_batches(spec, Split::Calib, n_batches);
+    let loss_batches: Vec<BatchId> =
+        raw.into_iter().map(|b| eng.register_batch(b)).collect::<Result<_>>()?;
+
+    // activation samples
+    let n_layers = spec.quant_layers.len();
+    let mut act_samples: Vec<Vec<f32>> = vec![Vec::new(); n_layers];
+    for batch in workload.acts_batches(spec, n_batches) {
+        let bid = eng.register_batch(batch)?;
+        let acts = eng.acts(sess, bid)?;
+        eng.drop_batch(bid)?;
+        for (i, a) in acts.into_iter().enumerate() {
+            act_samples[i].extend_from_slice(a.f());
+        }
+    }
+    for s in &mut act_samples {
+        subsample(s, MAX_ACT_SAMPLES);
+    }
+
+    Ok(CalibData { weights, act_samples, act_kind, loss_batches })
+}
+
+impl CalibData {
+    /// Release the registered loss batches.
+    pub fn release(&self, eng: &EngineHandle) {
+        for &b in &self.loss_batches {
+            let _ = eng.drop_batch(b);
+        }
+    }
+}
+
+/// Deterministic stride subsampling in place.
+pub fn subsample(xs: &mut Vec<f32>, cap: usize) {
+    if xs.len() <= cap {
+        return;
+    }
+    let stride = xs.len() as f64 / cap as f64;
+    let picked: Vec<f32> = (0..cap).map(|i| xs[(i as f64 * stride) as usize]).collect();
+    *xs = picked;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subsample_cap_and_determinism() {
+        let mut a: Vec<f32> = (0..100_000).map(|i| i as f32).collect();
+        let mut b = a.clone();
+        subsample(&mut a, 1000);
+        subsample(&mut b, 1000);
+        assert_eq!(a.len(), 1000);
+        assert_eq!(a, b);
+        // spans the full range
+        assert!(a[0] < 200.0 && *a.last().unwrap() > 98_000.0);
+    }
+
+    #[test]
+    fn subsample_noop_below_cap() {
+        let mut a = vec![1.0f32, 2.0, 3.0];
+        subsample(&mut a, 10);
+        assert_eq!(a, vec![1.0, 2.0, 3.0]);
+    }
+}

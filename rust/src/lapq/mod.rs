@@ -1,0 +1,9 @@
+//! LAPQ — the paper's contribution: loss-aware post-training calibration
+//! of per-layer quantization steps (layer-wise Lp → quadratic
+//! approximation over p → Powell joint optimization).
+
+pub mod calibration;
+pub mod objective;
+pub mod pipeline;
+
+pub use pipeline::{calibrate, calibrate_with_init, InitKind, QuantOutcome};

@@ -1,0 +1,166 @@
+//! The joint objective L(Δ): mean cross-entropy (or BCE) over the
+//! calibration batches, evaluated by executing the compiled `fwd_quant`
+//! artifact.  This is the hot path of LAPQ phase 3 — Powell calls it
+//! hundreds of times — so results are memoized on the quantized bit
+//! pattern of the Δ vectors.
+
+use crate::config::BitSpec;
+use crate::quant::GridKind;
+use crate::runtime::manifest::ModelSpec;
+use crate::runtime::{BatchId, EngineHandle, QuantParams, SessionId};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Which layers are quantized (the paper leaves first/last at FP32).
+#[derive(Clone, Debug)]
+pub struct LayerMask {
+    pub weights: Vec<bool>,
+    pub acts: Vec<bool>,
+}
+
+impl LayerMask {
+    pub fn all(n: usize, bits: BitSpec) -> Self {
+        LayerMask { weights: vec![bits.quant_weights(); n], acts: vec![bits.quant_acts(); n] }
+    }
+
+    /// Paper convention: exclude the first and last quant layer.
+    pub fn exclude_first_last(mut self, embeds_are_first: &[usize]) -> Self {
+        let n = self.weights.len();
+        if n == 0 {
+            return self;
+        }
+        for v in [&mut self.weights, &mut self.acts] {
+            v[0] = false;
+            v[n - 1] = false;
+            // embedding layers listed as "first" (NCF has 4 parallel ones)
+            for &i in embeds_are_first {
+                if i < v.len() {
+                    v[i] = false;
+                }
+            }
+        }
+        self
+    }
+
+    pub fn active_w(&self) -> Vec<usize> {
+        self.weights.iter().enumerate().filter(|(_, &b)| b).map(|(i, _)| i).collect()
+    }
+
+    pub fn active_a(&self) -> Vec<usize> {
+        self.acts.iter().enumerate().filter(|(_, &b)| b).map(|(i, _)| i).collect()
+    }
+}
+
+/// Grid bounds per layer for a bit spec.
+pub fn grids(spec: &ModelSpec, bits: BitSpec) -> (Vec<f32>, Vec<f32>) {
+    let qmw = spec
+        .quant_layers
+        .iter()
+        .map(|_| if bits.quant_weights() { GridKind::Signed.qmax(bits.weights) } else { 1.0 })
+        .collect();
+    let qma = spec
+        .quant_layers
+        .iter()
+        .map(|q| {
+            if bits.quant_acts() {
+                GridKind::from_signed(q.act_signed).qmax(bits.acts)
+            } else {
+                1.0
+            }
+        })
+        .collect();
+    (qmw, qma)
+}
+
+/// Memoizing calibration-loss objective.
+pub struct CalibObjective<'a> {
+    pub eng: &'a EngineHandle,
+    pub sess: SessionId,
+    pub batches: Vec<BatchId>,
+    pub mask: LayerMask,
+    pub qmw: Vec<f32>,
+    pub qma: Vec<f32>,
+    pub evals: usize,
+    pub cache_hits: usize,
+    cache: HashMap<Vec<u32>, f64>,
+}
+
+impl<'a> CalibObjective<'a> {
+    pub fn new(
+        eng: &'a EngineHandle,
+        sess: SessionId,
+        batches: Vec<BatchId>,
+        mask: LayerMask,
+        qmw: Vec<f32>,
+        qma: Vec<f32>,
+    ) -> Self {
+        CalibObjective { eng, sess, batches, mask, qmw, qma, evals: 0, cache_hits: 0, cache: HashMap::new() }
+    }
+
+    /// Build the graph-side QuantParams from full-length Δ vectors,
+    /// zeroing masked-out layers.
+    pub fn quant_params(&self, dw: &[f32], da: &[f32]) -> QuantParams {
+        let n = self.mask.weights.len();
+        assert_eq!(dw.len(), n);
+        assert_eq!(da.len(), n);
+        QuantParams {
+            dw: dw.iter().zip(&self.mask.weights).map(|(&d, &m)| if m { d } else { 0.0 }).collect(),
+            qmw: self.qmw.clone(),
+            da: da.iter().zip(&self.mask.acts).map(|(&d, &m)| if m { d } else { 0.0 }).collect(),
+            qma: self.qma.clone(),
+        }
+    }
+
+    /// Mean calibration loss under (dw, da); memoized.
+    pub fn loss(&mut self, dw: &[f32], da: &[f32]) -> Result<f64> {
+        let q = self.quant_params(dw, da);
+        let key: Vec<u32> =
+            q.dw.iter().chain(q.da.iter()).map(|f| f.to_bits()).collect();
+        if let Some(&v) = self.cache.get(&key) {
+            self.cache_hits += 1;
+            return Ok(v);
+        }
+        self.evals += 1;
+        let mut acc = 0.0f64;
+        for &b in &self.batches {
+            acc += self.eng.eval(self.sess, Some(q.clone()), b)?.0 as f64;
+        }
+        let v = acc / self.batches.len().max(1) as f64;
+        self.cache.insert(key, v);
+        Ok(v)
+    }
+
+    /// FP32 reference loss on the same batches.
+    pub fn fp32_loss(&self) -> Result<f64> {
+        let mut acc = 0.0f64;
+        for &b in &self.batches {
+            acc += self.eng.eval(self.sess, None, b)?.0 as f64;
+        }
+        Ok(acc / self.batches.len().max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_excludes_first_last() {
+        let m = LayerMask::all(6, BitSpec::new(4, 4)).exclude_first_last(&[]);
+        assert_eq!(m.weights, vec![false, true, true, true, true, false]);
+        assert_eq!(m.active_w(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn mask_fp32_sides() {
+        let m = LayerMask::all(4, BitSpec::new(32, 4));
+        assert!(m.weights.iter().all(|&b| !b));
+        assert!(m.acts.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn mask_embeds() {
+        let m = LayerMask::all(7, BitSpec::new(8, 8)).exclude_first_last(&[1, 2, 3]);
+        assert_eq!(m.weights, vec![false, false, false, false, true, true, false]);
+    }
+}

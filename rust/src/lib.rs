@@ -1,0 +1,37 @@
+//! # LAPQ — Loss Aware Post-training Quantization
+//!
+//! A production-grade reproduction of *"Loss Aware Post-training
+//! Quantization"* (Nahshan et al., 2019) as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **Layer 1** (build time): Pallas fake-quant / Lp-error / quant-matmul
+//!   kernels (`python/compile/kernels/`).
+//! * **Layer 2** (build time): JAX model graphs whose quantization step
+//!   sizes are *runtime inputs*, lowered once to HLO text
+//!   (`python/compile/models/`, `python/compile/aot.py`).
+//! * **Layer 3** (this crate): the coordinator — PJRT runtime, synthetic
+//!   data substrates, the LAPQ calibration pipeline (layer-wise Lp →
+//!   quadratic approximation → Powell joint optimization), the
+//!   post-training-quantization baselines it is compared against (MMSE,
+//!   ACIQ, KLD, min-max), trainer, evaluator, loss-landscape analysis and
+//!   a job service.
+//!
+//! Python never runs after `make artifacts`; the `repro` binary is
+//! self-contained.
+
+pub mod analysis;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod lapq;
+pub mod optim;
+pub mod prop;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate result alias (anyhow-based; all layers bubble rich context).
+pub type Result<T> = anyhow::Result<T>;

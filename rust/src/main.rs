@@ -1,0 +1,10 @@
+//! `repro` — the LAPQ coordinator binary.
+
+fn main() {
+    lapq::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = lapq::cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

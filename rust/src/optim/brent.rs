@@ -1,0 +1,136 @@
+//! Brent's line minimization (parabolic interpolation + golden fallback),
+//! the inner loop of Powell's method.  Port of the classic Numerical
+//! Recipes formulation with a bounded interval.
+
+const GOLD: f64 = 0.381_966_011_250_105; // 2 - φ
+
+/// Minimize `f` on `[a, b]`; returns (x*, f(x*)).
+pub fn brent_min(
+    a: f64,
+    b: f64,
+    tol: f64,
+    max_iter: usize,
+    f: &mut impl FnMut(f64) -> f64,
+) -> (f64, f64) {
+    let (mut a, mut b) = if a < b { (a, b) } else { (b, a) };
+    let mut x = a + GOLD * (b - a);
+    let mut w = x;
+    let mut v = x;
+    let mut fx = f(x);
+    let mut fw = fx;
+    let mut fv = fx;
+    let mut d: f64 = 0.0;
+    let mut e: f64 = 0.0;
+
+    for _ in 0..max_iter {
+        let m = 0.5 * (a + b);
+        let tol1 = tol * x.abs() + 1e-12;
+        let tol2 = 2.0 * tol1;
+        if (x - m).abs() <= tol2 - 0.5 * (b - a) {
+            break;
+        }
+        let mut use_golden = true;
+        if e.abs() > tol1 {
+            // parabolic fit through (v, fv), (w, fw), (x, fx)
+            let r = (x - w) * (fx - fv);
+            let q0 = (x - v) * (fx - fw);
+            let mut p = (x - v) * q0 - (x - w) * r;
+            let mut q = 2.0 * (q0 - r);
+            if q > 0.0 {
+                p = -p;
+            }
+            q = q.abs();
+            let e_old = e;
+            e = d;
+            if p.abs() < (0.5 * q * e_old).abs() && p > q * (a - x) && p < q * (b - x) {
+                d = p / q;
+                let u = x + d;
+                if (u - a) < tol2 || (b - u) < tol2 {
+                    d = if m > x { tol1 } else { -tol1 };
+                }
+                use_golden = false;
+            }
+        }
+        if use_golden {
+            e = if x < m { b - x } else { a - x };
+            d = GOLD * e;
+        }
+        let u = if d.abs() >= tol1 { x + d } else { x + if d > 0.0 { tol1 } else { -tol1 } };
+        let fu = f(u);
+        if fu <= fx {
+            if u < x {
+                b = x;
+            } else {
+                a = x;
+            }
+            v = w;
+            fv = fw;
+            w = x;
+            fw = fx;
+            x = u;
+            fx = fu;
+        } else {
+            if u < x {
+                a = u;
+            } else {
+                b = u;
+            }
+            if fu <= fw || w == x {
+                v = w;
+                fv = fw;
+                w = u;
+                fw = fu;
+            } else if fu <= fv || v == x || v == w {
+                v = u;
+                fv = fu;
+            }
+        }
+    }
+    (x, fx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_exact() {
+        let mut f = |x: f64| (x - 2.5).powi(2);
+        let (x, fx) = brent_min(-10.0, 10.0, 1e-10, 100, &mut f);
+        assert!((x - 2.5).abs() < 1e-6);
+        assert!(fx < 1e-10);
+    }
+
+    #[test]
+    fn quartic_with_flat_bottom() {
+        let mut f = |x: f64| (x - 1.0).powi(4) + 3.0;
+        let (x, fx) = brent_min(-5.0, 5.0, 1e-10, 200, &mut f);
+        assert!((x - 1.0).abs() < 1e-2);
+        assert!((fx - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn min_at_boundary() {
+        let mut f = |x: f64| x; // decreasing: min at left bound... min at a
+        let (x, _) = brent_min(0.0, 4.0, 1e-9, 100, &mut f);
+        assert!(x < 0.01, "{x}");
+    }
+
+    #[test]
+    fn nonsmooth_objective() {
+        let mut f = |x: f64| (x - 0.7).abs() + 0.1 * ((x * 8.0).floor() / 8.0 - x).abs();
+        let (x, _) = brent_min(0.0, 2.0, 1e-8, 200, &mut f);
+        assert!((x - 0.7).abs() < 0.02, "{x}");
+    }
+
+    #[test]
+    fn eval_count_bounded() {
+        let mut n = 0usize;
+        let mut f = |x: f64| {
+            n += 1;
+            (x + 1.0).powi(2)
+        };
+        brent_min(-3.0, 3.0, 1e-6, 60, &mut f);
+        assert!(n <= 62, "{n}");
+    }
+}

@@ -1,0 +1,51 @@
+//! Gradient-free optimization substrate (re-implements what the paper got
+//! from `scipy.optimize`): Brent line minimization, Powell's direction-set
+//! method (§4.3 / Algorithm 1), quadratic least-squares interpolation
+//! (§4.2), plus Nelder–Mead and cyclic coordinate descent used by the
+//! ablation benches.
+
+pub mod brent;
+pub mod coordinate;
+pub mod nelder_mead;
+pub mod powell;
+pub mod quadfit;
+
+/// Objective wrapper that counts evaluations and tracks the incumbent.
+pub struct Counted<'a> {
+    f: Box<dyn FnMut(&[f64]) -> f64 + 'a>,
+    pub evals: usize,
+    pub best_x: Vec<f64>,
+    pub best_f: f64,
+}
+
+impl<'a> Counted<'a> {
+    pub fn new(f: impl FnMut(&[f64]) -> f64 + 'a) -> Self {
+        Counted { f: Box::new(f), evals: 0, best_x: Vec::new(), best_f: f64::INFINITY }
+    }
+
+    pub fn eval(&mut self, x: &[f64]) -> f64 {
+        self.evals += 1;
+        let v = (self.f)(x);
+        if v < self.best_f {
+            self.best_f = v;
+            self.best_x = x.to_vec();
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counted_tracks_best() {
+        let mut c = Counted::new(|x: &[f64]| x[0] * x[0]);
+        c.eval(&[3.0]);
+        c.eval(&[-1.0]);
+        c.eval(&[2.0]);
+        assert_eq!(c.evals, 3);
+        assert_eq!(c.best_x, vec![-1.0]);
+        assert_eq!(c.best_f, 1.0);
+    }
+}

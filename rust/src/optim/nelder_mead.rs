@@ -1,0 +1,171 @@
+//! Nelder–Mead downhill simplex: the alternative joint optimizer used by
+//! the ablation benches to show LAPQ's result is not an artifact of
+//! Powell's method specifically.
+
+use super::Counted;
+
+#[derive(Clone, Debug)]
+pub struct NmCfg {
+    pub max_evals: usize,
+    pub ftol: f64,
+    /// Initial simplex size as a fraction of the box.
+    pub init_frac: f64,
+}
+
+impl Default for NmCfg {
+    fn default() -> Self {
+        NmCfg { max_evals: 2000, ftol: 1e-6, init_frac: 0.1 }
+    }
+}
+
+/// Minimize `f` from `x0` in box `[lo, hi]`; returns (x*, f*, evals).
+pub fn nelder_mead(
+    x0: &[f64],
+    lo: &[f64],
+    hi: &[f64],
+    cfg: &NmCfg,
+    f: impl FnMut(&[f64]) -> f64,
+) -> (Vec<f64>, f64, usize) {
+    let n = x0.len();
+    let mut obj = Counted::new(f);
+    let clamp = |x: &mut Vec<f64>| {
+        for i in 0..n {
+            x[i] = x[i].clamp(lo[i], hi[i]);
+        }
+    };
+
+    // initial simplex: x0 plus per-axis offsets
+    let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(n + 1);
+    let mut first = x0.to_vec();
+    clamp(&mut first);
+    let f0 = obj.eval(&first);
+    simplex.push((first.clone(), f0));
+    for i in 0..n {
+        let mut p = first.clone();
+        let span = (hi[i] - lo[i]) * cfg.init_frac;
+        p[i] = (p[i] + span).clamp(lo[i], hi[i]);
+        if (p[i] - first[i]).abs() < 1e-12 {
+            p[i] = (first[i] - span).clamp(lo[i], hi[i]);
+        }
+        let fp = obj.eval(&p);
+        simplex.push((p, fp));
+    }
+
+    const ALPHA: f64 = 1.0; // reflect
+    const GAMMA: f64 = 2.0; // expand
+    const RHO: f64 = 0.5; // contract
+    const SIGMA: f64 = 0.5; // shrink
+
+    while obj.evals < cfg.max_evals {
+        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let best = simplex[0].1;
+        let worst = simplex[n].1;
+        if (worst - best).abs() <= cfg.ftol * (best.abs() + 1e-12) {
+            break;
+        }
+        // centroid excluding worst
+        let mut cen = vec![0.0; n];
+        for (p, _) in &simplex[..n] {
+            for i in 0..n {
+                cen[i] += p[i] / n as f64;
+            }
+        }
+        let refl: Vec<f64> = {
+            let mut r: Vec<f64> =
+                cen.iter().zip(&simplex[n].0).map(|(c, w)| c + ALPHA * (c - w)).collect();
+            clamp(&mut r);
+            r
+        };
+        let f_refl = obj.eval(&refl);
+        if f_refl < simplex[0].1 {
+            // try expansion
+            let mut exp: Vec<f64> =
+                cen.iter().zip(&simplex[n].0).map(|(c, w)| c + GAMMA * (c - w)).collect();
+            clamp(&mut exp);
+            let f_exp = obj.eval(&exp);
+            simplex[n] = if f_exp < f_refl { (exp, f_exp) } else { (refl, f_refl) };
+        } else if f_refl < simplex[n - 1].1 {
+            simplex[n] = (refl, f_refl);
+        } else {
+            // contraction
+            let mut con: Vec<f64> =
+                cen.iter().zip(&simplex[n].0).map(|(c, w)| c + RHO * (w - c)).collect();
+            clamp(&mut con);
+            let f_con = obj.eval(&con);
+            if f_con < simplex[n].1 {
+                simplex[n] = (con, f_con);
+            } else {
+                // shrink toward best
+                let best_p = simplex[0].0.clone();
+                for item in simplex.iter_mut().skip(1) {
+                    let mut p: Vec<f64> = item
+                        .0
+                        .iter()
+                        .zip(&best_p)
+                        .map(|(x, b)| b + SIGMA * (x - b))
+                        .collect();
+                    clamp(&mut p);
+                    let fp = obj.eval(&p);
+                    *item = (p, fp);
+                }
+            }
+        }
+    }
+    simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let evals = obj.evals;
+    if obj.best_f < simplex[0].1 {
+        return (obj.best_x, obj.best_f, evals);
+    }
+    (simplex[0].0.clone(), simplex[0].1, evals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_bowl() {
+        let (x, fx, _) = nelder_mead(
+            &[2.0, -2.0],
+            &[-5.0, -5.0],
+            &[5.0, 5.0],
+            &NmCfg::default(),
+            |v| (v[0] - 1.0).powi(2) + (v[1] + 0.5).powi(2),
+        );
+        assert!(fx < 1e-4, "{fx} at {x:?}");
+    }
+
+    #[test]
+    fn coupled_objective() {
+        // analytic minimum of this coupled quadratic is 0.5
+        let (_, fx, _) = nelder_mead(
+            &[0.0, 0.0, 0.0],
+            &[-3.0; 3],
+            &[3.0; 3],
+            &NmCfg { max_evals: 4000, ftol: 1e-10, ..Default::default() },
+            |v| (v[0] + v[1] - 1.0).powi(2) + (v[1] + v[2] - 2.0).powi(2) + (v[0] - v[2]).powi(2),
+        );
+        assert!(fx < 0.5 + 1e-3, "{fx}");
+    }
+
+    #[test]
+    fn bounds_hold() {
+        let (x, _, _) = nelder_mead(
+            &[0.9, 0.9],
+            &[0.5, 0.5],
+            &[1.0, 1.0],
+            &NmCfg::default(),
+            |v| v.iter().sum::<f64>(), // pushes toward lower corner
+        );
+        assert!(x.iter().all(|&v| (0.5..=1.0).contains(&v)), "{x:?}");
+        assert!(x.iter().all(|&v| v < 0.55));
+    }
+
+    #[test]
+    fn respects_eval_budget() {
+        let cfg = NmCfg { max_evals: 100, ..Default::default() };
+        let (_, _, evals) =
+            nelder_mead(&[1.0; 6], &[-2.0; 6], &[2.0; 6], &cfg, |v| v.iter().map(|x| x * x).sum());
+        assert!(evals <= 100 + 7, "{evals}");
+    }
+}

@@ -1,0 +1,257 @@
+//! Powell's conjugate-direction method [Powell 1964] — the joint optimizer
+//! of LAPQ (paper §4.3, Algorithm 1).
+//!
+//! Each iteration line-minimizes along every direction in the set
+//! (Brent inside a trust window), then replaces the direction of largest
+//! decrease with the net displacement `t_N - t_0` (Algorithm 1, lines
+//! 15–20).  Coordinates are box-bounded: the quantization steps live in a
+//! multiplicative window around the initialization.
+
+use super::brent::brent_min;
+use super::Counted;
+
+#[derive(Clone, Debug)]
+pub struct PowellCfg {
+    /// Maximum outer iterations (full direction sweeps).
+    pub max_iter: usize,
+    /// Stop when a sweep improves the objective by less than `ftol`
+    /// (relative).
+    pub ftol: f64,
+    /// Line-search window half-width as a fraction of the box size.
+    pub line_frac: f64,
+    /// Brent iterations per line search.
+    pub line_iters: usize,
+    /// Hard cap on objective evaluations.
+    pub max_evals: usize,
+}
+
+impl Default for PowellCfg {
+    fn default() -> Self {
+        PowellCfg { max_iter: 3, ftol: 1e-4, line_frac: 0.5, line_iters: 12, max_evals: 10_000 }
+    }
+}
+
+/// Result of a Powell run.
+#[derive(Clone, Debug)]
+pub struct PowellResult {
+    pub x: Vec<f64>,
+    pub fx: f64,
+    pub evals: usize,
+    pub iters: usize,
+    /// Objective value after each outer iteration (for Fig. 5-style plots).
+    pub history: Vec<f64>,
+}
+
+/// Minimize `f` from `x0` inside `[lo_i, hi_i]` boxes.
+pub fn powell(
+    x0: &[f64],
+    lo: &[f64],
+    hi: &[f64],
+    cfg: &PowellCfg,
+    f: impl FnMut(&[f64]) -> f64,
+) -> PowellResult {
+    let n = x0.len();
+    assert!(n > 0 && lo.len() == n && hi.len() == n);
+    let mut obj = Counted::new(f);
+    let mut x: Vec<f64> = x0
+        .iter()
+        .zip(lo.iter().zip(hi))
+        .map(|(&v, (&l, &h))| v.clamp(l, h))
+        .collect();
+    let mut fx = obj.eval(&x);
+    let mut dirs: Vec<Vec<f64>> = (0..n)
+        .map(|i| {
+            let mut d = vec![0.0; n];
+            d[i] = 1.0;
+            d
+        })
+        .collect();
+    let mut history = vec![fx];
+    let mut iters = 0;
+
+    'outer: for _ in 0..cfg.max_iter {
+        iters += 1;
+        let f_start = fx;
+        let x_start = x.clone();
+        let mut biggest_drop = 0.0f64;
+        let mut biggest_idx = 0usize;
+
+        for (di, d) in dirs.iter().enumerate() {
+            if obj.evals >= cfg.max_evals {
+                break 'outer;
+            }
+            let f_before = fx;
+            let (x_new, f_new) = line_min(&x, d, lo, hi, cfg, &mut obj);
+            if f_new < fx {
+                x = x_new;
+                fx = f_new;
+            }
+            if f_before - fx > biggest_drop {
+                biggest_drop = f_before - fx;
+                biggest_idx = di;
+            }
+        }
+
+        // Direction replacement (Alg. 1 lines 15–20): drop the direction of
+        // biggest decrease, append the net displacement, and line-minimize
+        // along it.
+        let disp: Vec<f64> = x.iter().zip(&x_start).map(|(a, b)| a - b).collect();
+        let disp_norm = disp.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if disp_norm > 1e-12 {
+            let disp: Vec<f64> = disp.iter().map(|v| v / disp_norm).collect();
+            let (x_new, f_new) = line_min(&x, &disp, lo, hi, cfg, &mut obj);
+            if f_new < fx {
+                x = x_new;
+                fx = f_new;
+            }
+            dirs.remove(biggest_idx);
+            dirs.push(disp);
+        }
+
+        history.push(fx);
+        let rel = (f_start - fx) / f_start.abs().max(1e-12);
+        if rel < cfg.ftol {
+            break;
+        }
+    }
+
+    // `Counted` may have seen a better point mid-line-search.
+    if obj.best_f < fx {
+        fx = obj.best_f;
+        x = obj.best_x.clone();
+    }
+    PowellResult { x, fx, evals: obj.evals, iters, history }
+}
+
+/// Bounded line minimization: find λ range keeping `x + λ d` inside the
+/// box, shrink to the trust window, Brent it.
+fn line_min(
+    x: &[f64],
+    d: &[f64],
+    lo: &[f64],
+    hi: &[f64],
+    cfg: &PowellCfg,
+    obj: &mut Counted,
+) -> (Vec<f64>, f64) {
+    let (mut lam_lo, mut lam_hi) = (f64::NEG_INFINITY, f64::INFINITY);
+    for i in 0..x.len() {
+        if d[i].abs() < 1e-15 {
+            continue;
+        }
+        let a = (lo[i] - x[i]) / d[i];
+        let b = (hi[i] - x[i]) / d[i];
+        let (a, b) = if a < b { (a, b) } else { (b, a) };
+        lam_lo = lam_lo.max(a);
+        lam_hi = lam_hi.min(b);
+    }
+    if !lam_lo.is_finite() || !lam_hi.is_finite() || lam_hi <= lam_lo {
+        return (x.to_vec(), obj.eval(x));
+    }
+    // trust window around 0
+    let span = (lam_hi - lam_lo) * cfg.line_frac;
+    let w_lo = lam_lo.max(-span);
+    let w_hi = lam_hi.min(span);
+    if w_hi <= w_lo {
+        return (x.to_vec(), obj.eval(x));
+    }
+    let mut g = |lam: f64| {
+        let cand: Vec<f64> = x
+            .iter()
+            .zip(d)
+            .zip(lo.iter().zip(hi))
+            .map(|((&xi, &di), (&l, &h))| (xi + lam * di).clamp(l, h))
+            .collect();
+        obj.eval(&cand)
+    };
+    let (lam, flam) = brent_min(w_lo, w_hi, 1e-4, cfg.line_iters, &mut g);
+    let cand: Vec<f64> = x
+        .iter()
+        .zip(d)
+        .zip(lo.iter().zip(hi))
+        .map(|((&xi, &di), (&l, &h))| (xi + lam * di).clamp(l, h))
+        .collect();
+    (cand, flam)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn boxed(n: usize, lo: f64, hi: f64) -> (Vec<f64>, Vec<f64>) {
+        (vec![lo; n], vec![hi; n])
+    }
+
+    #[test]
+    fn separable_quadratic() {
+        let target = [1.0, -2.0, 0.5, 3.0];
+        let (lo, hi) = boxed(4, -5.0, 5.0);
+        let r = powell(
+            &[0.0; 4],
+            &lo,
+            &hi,
+            &PowellCfg { max_iter: 6, ..Default::default() },
+            |x| x.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum(),
+        );
+        for (a, b) in r.x.iter().zip(&target) {
+            assert!((a - b).abs() < 1e-2, "{:?}", r.x);
+        }
+        assert!(r.fx < 1e-3);
+    }
+
+    #[test]
+    fn coupled_quadratic_rosenbrock_lite() {
+        // non-separable: f = (x0-1)^2 + 10(x1 - x0)^2 — coupling is exactly
+        // what Powell's direction replacement is for.
+        let (lo, hi) = boxed(2, -4.0, 4.0);
+        let r = powell(
+            &[-2.0, 2.0],
+            &lo,
+            &hi,
+            &PowellCfg { max_iter: 10, ftol: 1e-10, ..Default::default() },
+            |x| (x[0] - 1.0).powi(2) + 10.0 * (x[1] - x[0]).powi(2),
+        );
+        assert!(r.fx < 1e-2, "fx={} x={:?}", r.fx, r.x);
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let (lo, hi) = boxed(3, 0.5, 2.0);
+        let r = powell(&[1.0; 3], &lo, &hi, &PowellCfg::default(), |x| {
+            x.iter().map(|v| (v + 10.0).powi(2)).sum() // min far below box
+        });
+        for v in &r.x {
+            assert!(*v >= 0.5 - 1e-9 && *v <= 2.0 + 1e-9);
+        }
+        // optimum inside the box is the lower corner
+        assert!(r.x.iter().all(|v| (*v - 0.5).abs() < 1e-2), "{:?}", r.x);
+    }
+
+    #[test]
+    fn history_monotone_nonincreasing() {
+        let (lo, hi) = boxed(5, -3.0, 3.0);
+        let r = powell(&[2.0; 5], &lo, &hi, &PowellCfg::default(), |x| {
+            x.iter().enumerate().map(|(i, v)| (v - 0.1 * i as f64).powi(2)).sum()
+        });
+        for w in r.history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn eval_budget_respected() {
+        let (lo, hi) = boxed(8, -1.0, 1.0);
+        let cfg = PowellCfg { max_evals: 120, max_iter: 50, ..Default::default() };
+        let r = powell(&[0.9; 8], &lo, &hi, &cfg, |x| x.iter().map(|v| v * v).sum());
+        assert!(r.evals <= 140, "{}", r.evals); // small slack for final sweep
+    }
+
+    #[test]
+    fn noisy_plateau_objective() {
+        // quantization-like stairs superimposed on a quadratic
+        let (lo, hi) = boxed(3, -2.0, 2.0);
+        let r = powell(&[1.5, -1.5, 1.0], &lo, &hi, &PowellCfg::default(), |x| {
+            x.iter().map(|v| ((v * 20.0).round() / 20.0).powi(2)).sum()
+        });
+        assert!(r.fx <= 0.0225 + 1e-9, "fx={}", r.fx);
+    }
+}

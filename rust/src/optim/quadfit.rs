@@ -1,0 +1,168 @@
+//! Least-squares quadratic interpolation (paper §4.2): fit
+//! `f(p) ≈ a·p² + b·p + c` to sampled (p, loss) pairs and take the vertex
+//! as the predicted-optimal p*.
+
+/// Fitted quadratic with goodness-of-fit.
+#[derive(Clone, Copy, Debug)]
+pub struct Quad {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub r2: f64,
+}
+
+impl Quad {
+    pub fn eval(&self, x: f64) -> f64 {
+        self.a * x * x + self.b * x + self.c
+    }
+
+    /// Vertex (minimum if a > 0).
+    pub fn vertex(&self) -> Option<f64> {
+        if self.a.abs() < 1e-18 {
+            None
+        } else {
+            Some(-self.b / (2.0 * self.a))
+        }
+    }
+}
+
+/// Fit by solving the 3x3 normal equations.
+pub fn fit_quadratic(xs: &[f64], ys: &[f64]) -> Option<Quad> {
+    let n = xs.len();
+    if n < 3 || ys.len() != n {
+        return None;
+    }
+    // moments
+    let (mut s1, mut s2, mut s3, mut s4) = (0.0, 0.0, 0.0, 0.0);
+    let (mut sy, mut sxy, mut sx2y) = (0.0, 0.0, 0.0);
+    for (&x, &y) in xs.iter().zip(ys) {
+        let x2 = x * x;
+        s1 += x;
+        s2 += x2;
+        s3 += x2 * x;
+        s4 += x2 * x2;
+        sy += y;
+        sxy += x * y;
+        sx2y += x2 * y;
+    }
+    let nf = n as f64;
+    // solve [s4 s3 s2; s3 s2 s1; s2 s1 n] [a b c]^T = [sx2y sxy sy]^T
+    let m = [[s4, s3, s2], [s3, s2, s1], [s2, s1, nf]];
+    let rhs = [sx2y, sxy, sy];
+    let sol = solve3(m, rhs)?;
+    let (a, b, c) = (sol[0], sol[1], sol[2]);
+    // R²
+    let mean_y = sy / nf;
+    let mut ss_res = 0.0;
+    let mut ss_tot = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        let pred = a * x * x + b * x + c;
+        ss_res += (y - pred).powi(2);
+        ss_tot += (y - mean_y).powi(2);
+    }
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    Some(Quad { a, b, c, r2 })
+}
+
+/// Gaussian elimination with partial pivoting for 3x3 systems.
+fn solve3(mut m: [[f64; 3]; 3], mut b: [f64; 3]) -> Option<[f64; 3]> {
+    for col in 0..3 {
+        // pivot
+        let piv = (col..3).max_by(|&i, &j| {
+            m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap()
+        })?;
+        if m[piv][col].abs() < 1e-14 {
+            return None;
+        }
+        m.swap(col, piv);
+        b.swap(col, piv);
+        for row in (col + 1)..3 {
+            let f = m[row][col] / m[col][col];
+            for k in col..3 {
+                m[row][k] -= f * m[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0f64; 3];
+    for row in (0..3).rev() {
+        let mut acc = b[row];
+        for k in (row + 1)..3 {
+            acc -= m[row][k] * x[k];
+        }
+        x[row] = acc / m[row][row];
+    }
+    Some(x)
+}
+
+/// §4.2 helper: given the sampled (p, loss(Δ_p)) trajectory, return the
+/// p* minimizing the fitted quadratic, clamped to the sampled range.
+pub fn interpolate_pstar(ps: &[f64], losses: &[f64]) -> Option<(f64, Quad)> {
+    let q = fit_quadratic(ps, losses)?;
+    let lo = ps.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = ps.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let p = match q.vertex() {
+        Some(v) if q.a > 0.0 => v.clamp(lo, hi),
+        _ => {
+            // concave/degenerate fit: fall back to the best sample
+            let i = losses
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())?
+                .0;
+            ps[i]
+        }
+    };
+    Some((p, q))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_quadratic_recovered() {
+        let xs: Vec<f64> = (0..7).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x * x - 8.0 * x + 3.0).collect();
+        let q = fit_quadratic(&xs, &ys).unwrap();
+        assert!((q.a - 2.0).abs() < 1e-9);
+        assert!((q.b + 8.0).abs() < 1e-9);
+        assert!((q.c - 3.0).abs() < 1e-8);
+        assert!((q.vertex().unwrap() - 2.0).abs() < 1e-9);
+        assert!(q.r2 > 0.999999);
+    }
+
+    #[test]
+    fn noisy_fit_reasonable() {
+        let mut rng = crate::util::rng::Pcg32::seeded(77);
+        let xs: Vec<f64> = (0..20).map(|i| 1.0 + 0.2 * i as f64).collect();
+        let ys: Vec<f64> =
+            xs.iter().map(|x| (x - 3.0) * (x - 3.0) + 0.01 * rng.normal() as f64).collect();
+        let (p, q) = interpolate_pstar(&xs, &ys).unwrap();
+        assert!((p - 3.0).abs() < 0.2, "{p}");
+        assert!(q.r2 > 0.95);
+    }
+
+    #[test]
+    fn concave_falls_back_to_best_sample() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [1.0, 2.0, 1.5]; // peak in the middle: concave
+        let (p, _) = interpolate_pstar(&xs, &ys).unwrap();
+        assert_eq!(p, 1.0);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(fit_quadratic(&[1.0, 2.0], &[1.0, 2.0]).is_none());
+        // collinear duplicated x's make the system singular
+        assert!(fit_quadratic(&[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn vertex_clamped_to_range() {
+        let xs = [2.0, 3.0, 4.0, 5.0];
+        let ys: Vec<f64> = xs.iter().map(|x| (x - 10.0) * (x - 10.0)).collect();
+        let (p, _) = interpolate_pstar(&xs, &ys).unwrap();
+        assert_eq!(p, 5.0); // vertex at 10 clamps to sampled max
+    }
+}

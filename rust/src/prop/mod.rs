@@ -1,0 +1,142 @@
+//! Mini property-testing framework (substrate for the absent `proptest`).
+//!
+//! A [`Gen`] draws random cases from a [`Pcg32`]; [`forall`] runs `N`
+//! cases and, on failure, greedily shrinks the failing case via
+//! [`Shrink::shrink`] candidates before panicking with the minimal
+//! reproduction and its seed.
+
+use crate::util::rng::Pcg32;
+
+/// Case generator.
+pub trait Gen<T> {
+    fn gen(&self, rng: &mut Pcg32) -> T;
+}
+
+impl<T, F: Fn(&mut Pcg32) -> T> Gen<T> for F {
+    fn gen(&self, rng: &mut Pcg32) -> T {
+        self(rng)
+    }
+}
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone {
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for f32 {
+    fn shrink(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+            if self.fract() != 0.0 {
+                out.push(self.trunc());
+            }
+        }
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        let n = self.len();
+        if n > 0 {
+            out.push(self[..n / 2].to_vec());
+            out.push(self[1..].to_vec());
+            // shrink one element
+            for (i, x) in self.iter().enumerate().take(4) {
+                for s in x.shrink() {
+                    let mut v = self.clone();
+                    v[i] = s;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Run `n_cases` random cases of `prop`; shrink + panic on failure.
+pub fn forall<T: Shrink + std::fmt::Debug>(
+    seed: u64,
+    n_cases: usize,
+    gen: impl Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Pcg32::seeded(seed);
+    for case_i in 0..n_cases {
+        let case = gen.gen(&mut rng);
+        if !prop(&case) {
+            // greedy shrink
+            let mut min = case;
+            'outer: loop {
+                for cand in min.shrink() {
+                    if !prop(&cand) {
+                        min = cand;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!("property failed (seed={seed}, case #{case_i}); minimal case: {min:?}");
+        }
+    }
+}
+
+/// Common generators.
+pub mod gens {
+    use super::*;
+
+    /// Vector of standard normals with random length in [1, max_len].
+    pub fn normal_vec(max_len: usize) -> impl Gen<Vec<f32>> {
+        move |rng: &mut Pcg32| {
+            let n = 1 + rng.below(max_len as u32) as usize;
+            rng.normal_vec(n)
+        }
+    }
+
+    /// Uniform float in [lo, hi].
+    pub fn uniform(lo: f32, hi: f32) -> impl Gen<f32> {
+        move |rng: &mut Pcg32| rng.range(lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(1, 200, gens::normal_vec(64), |v: &Vec<f32>| !v.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal case")]
+    fn failing_property_shrinks() {
+        // fails whenever the vec contains a value > 1; shrinker should
+        // reduce the witness aggressively.
+        forall(2, 500, gens::normal_vec(64), |v: &Vec<f32>| v.iter().all(|&x| x < 1.0));
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller() {
+        let v = vec![3.0f32, -2.0, 5.5];
+        for s in v.shrink() {
+            assert!(s.len() < v.len() || s.iter().zip(&v).any(|(a, b)| a != b));
+        }
+    }
+}

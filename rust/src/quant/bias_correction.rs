@@ -1,0 +1,156 @@
+//! Per-channel quantization bias correction — Banner et al. [1], applied
+//! on top of any calibration method (paper §5.3, Table 4).
+//!
+//! Quantization shifts the mean of each output channel's weights:
+//! `E[Q(W_c)] != E[W_c]`.  The correction adds the difference back so the
+//! quantized channel keeps the FP32 mean, which matters most for compact
+//! (depthwise) layers with few weights per channel.
+
+use super::quantizer::fake_quant_one;
+use super::GridKind;
+use crate::tensor::HostTensor;
+
+/// Compute a corrected weight tensor: for each output channel c (last
+/// axis, HWIO / (in,out) layouts), shift `W_c` so that `mean(Q(W_c))`
+/// matches the original `mean(W_c)`.
+///
+/// Because the graph re-quantizes the corrected FP32 weights at run time
+/// (the correction cannot be applied post-quantization as in Banner et
+/// al.'s deployment), a single shift can stall below the bin width; we
+/// iterate the fixed point a few times, keeping the shift that best
+/// matches the target mean.
+pub fn bias_corrected_weights(w: &HostTensor, delta: f32, qmax: f32) -> HostTensor {
+    let k = w.last_axis();
+    let mut out = w.clone();
+    if delta <= 0.0 || k == 0 {
+        return out;
+    }
+    let n_rows = w.len() / k;
+    let data = out.f_mut();
+    for c in 0..k {
+        // target: the FP32 channel mean
+        let mut target = 0.0f64;
+        for r in 0..n_rows {
+            target += data[r * k + c] as f64;
+        }
+        target /= n_rows as f64;
+
+        let q_mean = |shift: f64, data: &[f32]| -> f64 {
+            let mut s = 0.0f64;
+            for r in 0..n_rows {
+                let x = (data[r * k + c] as f64 + shift) as f32;
+                s += fake_quant_one(x, delta, qmax, GridKind::Signed) as f64;
+            }
+            s / n_rows as f64
+        };
+
+        // fixed-point iteration on the channel shift, keeping the best
+        let mut shift = 0.0f64;
+        let mut best_shift = 0.0f64;
+        let mut best_err = (q_mean(0.0, data) - target).abs();
+        for _ in 0..6 {
+            let err = target - q_mean(shift, data);
+            if err.abs() < best_err {
+                best_err = err.abs();
+                best_shift = shift;
+            }
+            if err.abs() < 1e-9 {
+                break;
+            }
+            shift += err;
+        }
+        let err = target - q_mean(shift, data);
+        if err.abs() < best_err {
+            best_shift = shift;
+        }
+        for r in 0..n_rows {
+            data[r * k + c] += best_shift as f32;
+        }
+    }
+    out
+}
+
+/// Channel-mean shift between W and Q(W) — the statistic the correction
+/// removes.  Exposed for tests and the Table-4 bench.
+pub fn channel_mean_shift(w: &HostTensor, delta: f32, qmax: f32) -> Vec<f32> {
+    let k = w.last_axis();
+    let data = w.f();
+    let n_rows = data.len() / k;
+    (0..k)
+        .map(|c| {
+            let mut s = 0.0f64;
+            for r in 0..n_rows {
+                let x = data[r * k + c];
+                s += (fake_quant_one(x, delta, qmax, GridKind::Signed) - x) as f64;
+            }
+            (s / n_rows as f64) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn weight(seed: u64) -> HostTensor {
+        let mut rng = Pcg32::seeded(seed);
+        // biased channels: channel c has mean 0.02*c
+        let (rows, k) = (64usize, 8usize);
+        let mut data = vec![0.0f32; rows * k];
+        for r in 0..rows {
+            for c in 0..k {
+                data[r * k + c] = rng.normal() * 0.1 + 0.02 * c as f32;
+            }
+        }
+        HostTensor::f32(vec![rows, k], data)
+    }
+
+    /// |mean(Q(W'_c)) - mean(W_c)| per channel, vs the original tensor.
+    fn mean_err_vs_original(corrected: &HostTensor, orig: &HostTensor, d: f32, q: f32) -> f32 {
+        let k = orig.last_axis();
+        let n_rows = orig.len() / k;
+        let mut total = 0.0f32;
+        for c in 0..k {
+            let target: f64 =
+                (0..n_rows).map(|r| orig.f()[r * k + c] as f64).sum::<f64>() / n_rows as f64;
+            let got: f64 = (0..n_rows)
+                .map(|r| fake_quant_one(corrected.f()[r * k + c], d, q, GridKind::Signed) as f64)
+                .sum::<f64>()
+                / n_rows as f64;
+            total += (got - target).abs() as f32;
+        }
+        total
+    }
+
+    #[test]
+    fn correction_reduces_mean_shift() {
+        let w = weight(41);
+        let (delta, qmax) = (0.15f32, 1.0f32); // aggressive 2-bit-ish grid
+        let before = mean_err_vs_original(&w, &w, delta, qmax);
+        let corrected = bias_corrected_weights(&w, delta, qmax);
+        let after = mean_err_vs_original(&corrected, &w, delta, qmax);
+        assert!(after <= before * 0.5, "shift before {before} after {after}");
+    }
+
+    #[test]
+    fn zero_delta_noop() {
+        let w = weight(42);
+        assert_eq!(bias_corrected_weights(&w, 0.0, 7.0), w);
+    }
+
+    #[test]
+    fn preserves_shape_and_fp32_direction() {
+        let w = weight(43);
+        let c = bias_corrected_weights(&w, 0.05, 7.0);
+        assert_eq!(c.shape, w.shape);
+        // correction is small relative to the weights themselves
+        let max_diff = w
+            .f()
+            .iter()
+            .zip(c.f())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 0.05, "{max_diff}");
+    }
+}

@@ -1,0 +1,92 @@
+//! Fixed-bin histograms over absolute values — the density substrate for
+//! the KLD calibrator (TensorRT uses 2048 bins of |x|; so do we).
+
+/// Histogram of |x| over `[0, max_abs]` with `n_bins` equal bins.
+#[derive(Clone, Debug)]
+pub struct AbsHistogram {
+    pub counts: Vec<u64>,
+    pub bin_width: f64,
+    pub total: u64,
+}
+
+impl AbsHistogram {
+    pub fn build(xs: &[f32], n_bins: usize) -> Self {
+        let max_abs = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs())) as f64;
+        let bin_width = if max_abs > 0.0 { max_abs / n_bins as f64 } else { 1.0 };
+        let mut counts = vec![0u64; n_bins];
+        for &x in xs {
+            let mut b = ((x.abs() as f64) / bin_width) as usize;
+            if b >= n_bins {
+                b = n_bins - 1;
+            }
+            counts[b] += 1;
+        }
+        AbsHistogram { counts, bin_width, total: xs.len() as u64 }
+    }
+
+    pub fn n_bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Upper edge of bin `i` (a candidate clip threshold).
+    pub fn edge(&self, i: usize) -> f64 {
+        (i + 1) as f64 * self.bin_width
+    }
+}
+
+/// KL(P‖Q) between two (unnormalized) discrete distributions, with the
+/// TensorRT smoothing convention: bins where P=0 contribute nothing;
+/// Q gets a tiny epsilon where P>0 but Q=0.
+pub fn kl_divergence(p: &[f64], q: &[f64]) -> f64 {
+    let ps: f64 = p.iter().sum();
+    let qs: f64 = q.iter().sum();
+    if ps == 0.0 || qs == 0.0 {
+        return 0.0;
+    }
+    let mut kl = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        if pi > 0.0 {
+            let pn = pi / ps;
+            let qn = (qi / qs).max(1e-12);
+            kl += pn * (pn / qn).ln();
+        }
+    }
+    kl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_everything() {
+        let xs = [0.1f32, -0.2, 0.85, -0.95, 0.5];
+        let h = AbsHistogram::build(&xs, 10);
+        assert_eq!(h.counts.iter().sum::<u64>(), 5);
+        assert_eq!(h.total, 5);
+        // max |x| = 0.95 lands in the last bin; 0.85 in bin 8
+        assert_eq!(h.counts[9], 1);
+        assert_eq!(h.counts[8], 1);
+    }
+
+    #[test]
+    fn kl_zero_for_identical() {
+        let p = [0.25, 0.25, 0.5];
+        assert!(kl_divergence(&p, &p).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_positive_for_different() {
+        let p = [0.9, 0.1];
+        let q = [0.1, 0.9];
+        assert!(kl_divergence(&p, &q) > 0.5);
+    }
+
+    #[test]
+    fn kl_ignores_p_zero_bins() {
+        let p = [0.0, 1.0];
+        let q = [0.5, 0.5];
+        let kl = kl_divergence(&p, &q);
+        assert!((kl - (1.0f64 / 0.5).ln()).abs() < 1e-9);
+    }
+}

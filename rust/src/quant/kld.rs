@@ -1,0 +1,109 @@
+//! KL-divergence calibration — Migacz [19] (the TensorRT INT8 scheme),
+//! generalized to arbitrary bitwidths.
+//!
+//! Build a 2048-bin histogram of |x|; for every candidate clip threshold T
+//! (bin edge), form the clipped reference distribution P (outliers folded
+//! into the last kept bin) and the quantized distribution Q (kept bins
+//! merged into `2^{M-1}` levels, then re-expanded); pick T minimizing
+//! KL(P‖Q).  Returns the implied step size Δ = T / qmax.
+
+use super::histogram::{kl_divergence, AbsHistogram};
+use super::GridKind;
+
+pub const N_BINS: usize = 2048;
+
+/// Step size chosen by KL calibration for an M-bit grid.
+pub fn kld_delta(xs: &[f32], bits: u32, kind: GridKind) -> f32 {
+    let qmax = kind.qmax(bits);
+    if crate::util::stats::max_abs(xs) == 0.0 {
+        return 0.0;
+    }
+    let hist = AbsHistogram::build(xs, N_BINS);
+    if hist.total == 0 {
+        return 0.0;
+    }
+    // Number of representable magnitude levels.
+    let n_levels = match kind {
+        GridKind::Signed => 1usize << (bits - 1),
+        GridKind::Unsigned => 1usize << bits,
+    };
+    let start = (n_levels * 2).min(hist.n_bins());
+    let mut best_t = hist.edge(hist.n_bins() - 1);
+    let mut best_kl = f64::INFINITY;
+
+    for end in (start..=hist.n_bins()).step_by(16) {
+        // Reference P: bins [0, end) plus all outliers folded into bin end-1.
+        let mut p: Vec<f64> = hist.counts[..end].iter().map(|&c| c as f64).collect();
+        let outliers: u64 = hist.counts[end..].iter().sum();
+        *p.last_mut().unwrap() += outliers as f64;
+
+        // Quantized Q: merge `end` bins into n_levels groups, spread back
+        // proportionally to P's support (empty source bins stay empty).
+        let mut q = vec![0.0f64; end];
+        for lvl in 0..n_levels {
+            let lo = lvl * end / n_levels;
+            let hi = ((lvl + 1) * end / n_levels).max(lo + 1);
+            let total: f64 = p[lo..hi].iter().sum();
+            let support = p[lo..hi].iter().filter(|&&v| v > 0.0).count();
+            if support > 0 {
+                let share = total / support as f64;
+                for i in lo..hi {
+                    if p[i] > 0.0 {
+                        q[i] = share;
+                    }
+                }
+            }
+        }
+        let kl = kl_divergence(&p, &q);
+        if kl < best_kl {
+            best_kl = kl;
+            best_t = hist.edge(end - 1);
+        }
+    }
+    (best_t / qmax as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::lp::lp_error_sum;
+    use crate::quant::minmax::minmax_delta;
+
+    fn heavy_tailed(n: usize) -> Vec<f32> {
+        // Laplace has heavier tails than Gaussian: clipping should win.
+        let mut rng = crate::util::rng::Pcg32::seeded(21);
+        (0..n).map(|_| rng.laplace(1.0)).collect()
+    }
+
+    #[test]
+    fn clips_below_minmax_on_heavy_tails() {
+        let xs = heavy_tailed(16384);
+        let d_kld = kld_delta(&xs, 4, GridKind::Signed);
+        let d_mm = minmax_delta(&xs, GridKind::Signed.qmax(4), GridKind::Signed);
+        assert!(d_kld > 0.0);
+        assert!(d_kld < d_mm, "kld {d_kld} should clip vs minmax {d_mm}");
+    }
+
+    #[test]
+    fn reasonable_mse_vs_minmax_at_4bit() {
+        let xs = heavy_tailed(16384);
+        let qmax = GridKind::Signed.qmax(4);
+        let d_kld = kld_delta(&xs, 4, GridKind::Signed);
+        let d_mm = minmax_delta(&xs, qmax, GridKind::Signed);
+        let e_kld = lp_error_sum(&xs, d_kld, qmax, 2.0, GridKind::Signed);
+        let e_mm = lp_error_sum(&xs, d_mm, qmax, 2.0, GridKind::Signed);
+        assert!(e_kld < e_mm * 1.5, "KLD wildly off: {e_kld} vs {e_mm}");
+    }
+
+    #[test]
+    fn zero_input() {
+        assert_eq!(kld_delta(&[0.0; 64], 4, GridKind::Signed), 0.0);
+    }
+
+    #[test]
+    fn works_unsigned() {
+        let xs: Vec<f32> = heavy_tailed(8192).into_iter().map(|x| x.abs()).collect();
+        let d = kld_delta(&xs, 4, GridKind::Unsigned);
+        assert!(d > 0.0);
+    }
+}

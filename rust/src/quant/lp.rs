@@ -1,0 +1,91 @@
+//! Layer-wise L_p quantization error (paper Eq. 12) on host tensors.
+//!
+//! Host mirror of `kernels/lp_error.py`; the scalar-Δ minimization that
+//! LAPQ phase 1 performs thousands of times runs here (microseconds per
+//! call on weight tensors) rather than through PJRT — the *loss* metric is
+//! what needs the compiled graph, not the tensor-local error.
+
+use super::quantizer::fake_quant_one;
+use super::GridKind;
+
+/// `sum(|Q(x) - x|^p)` — the inner objective of Eq. 12.
+pub fn lp_error_sum(xs: &[f32], delta: f32, qmax: f32, p: f32, kind: GridKind) -> f64 {
+    let mut acc = 0.0f64;
+    for &x in xs {
+        let err = (fake_quant_one(x, delta, qmax, kind) - x).abs() as f64;
+        if err > 0.0 {
+            acc += err.powf(p as f64);
+        }
+    }
+    acc
+}
+
+/// Eq. 12: `(sum |Q(x)-x|^p)^{1/p}`.
+pub fn lp_error(xs: &[f32], delta: f32, qmax: f32, p: f32, kind: GridKind) -> f64 {
+    lp_error_sum(xs, delta, qmax, p, kind).powf(1.0 / p as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples() -> Vec<f32> {
+        let mut rng = crate::util::rng::Pcg32::seeded(11);
+        rng.normal_vec(4096)
+    }
+
+    #[test]
+    fn zero_delta_zero_error() {
+        assert_eq!(lp_error_sum(&samples(), 0.0, 7.0, 2.0, GridKind::Signed), 0.0);
+    }
+
+    #[test]
+    fn interior_minimum_exists() {
+        // Fig. 4: too-small Δ clips hard, too-large Δ rounds hard.
+        let xs = samples();
+        let deltas: Vec<f32> = (1..=60).map(|i| i as f32 * 0.02).collect();
+        let errs: Vec<f64> =
+            deltas.iter().map(|&d| lp_error_sum(&xs, d, 7.0, 2.0, GridKind::Signed)).collect();
+        let best = errs
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(best > 0 && best < deltas.len() - 1, "best at edge: {best}");
+    }
+
+    #[test]
+    fn optimal_delta_grows_with_p() {
+        // Larger p weights outliers more -> wider clip range -> larger Δ*
+        // (the monotone trade-off behind Fig. 4 / the p-trajectory).
+        let xs = samples();
+        let grid: Vec<f32> = (1..=300).map(|i| i as f32 * 0.004).collect();
+        let best_for = |p: f32| -> f32 {
+            grid.iter()
+                .copied()
+                .min_by(|&a, &b| {
+                    lp_error_sum(&xs, a, 7.0, p, GridKind::Signed)
+                        .partial_cmp(&lp_error_sum(&xs, b, 7.0, p, GridKind::Signed))
+                        .unwrap()
+                })
+                .unwrap()
+        };
+        let d2 = best_for(2.0);
+        let d4 = best_for(4.0);
+        assert!(d4 >= d2, "Δ*(p=4)={d4} < Δ*(p=2)={d2}");
+    }
+
+    #[test]
+    fn matches_bruteforce_small() {
+        let xs = [0.1f32, -0.2, 0.35, 1.4];
+        let (delta, qmax, p) = (0.1f32, 7.0f32, 2.0f32);
+        let mut want = 0.0f64;
+        for &x in &xs {
+            let q = (x / delta).round().clamp(-qmax, qmax) * delta;
+            want += ((q - x).abs() as f64).powi(2);
+        }
+        let got = lp_error_sum(&xs, delta, qmax, p, GridKind::Signed);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+}

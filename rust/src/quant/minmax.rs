@@ -1,0 +1,52 @@
+//! Min-max (L_inf) calibration — Gong et al. [8]: the clip range is the
+//! largest absolute value, i.e. no clipping at all.  The weakest baseline
+//! at low bits (outliers dictate a huge step) but lossless at the tails.
+
+use super::GridKind;
+use crate::util::stats;
+
+/// Step size from the max-abs statistic.
+pub fn minmax_delta(xs: &[f32], qmax: f32, kind: GridKind) -> f32 {
+    let c = match kind {
+        GridKind::Signed => stats::max_abs(xs),
+        GridKind::Unsigned => stats::min_max(xs).1.max(0.0),
+    };
+    if qmax > 0.0 {
+        c / qmax
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantizer::fake_quant_one;
+
+    #[test]
+    fn covers_full_range() {
+        let xs = [0.5f32, -2.0, 1.0];
+        let qmax = 7.0;
+        let d = minmax_delta(&xs, qmax, GridKind::Signed);
+        // no value may clip: |x| <= Δ·qmax
+        for &x in &xs {
+            assert!(x.abs() <= d * qmax + 1e-6);
+        }
+    }
+
+    #[test]
+    fn unsigned_uses_max_only() {
+        let xs = [-5.0f32, 0.2, 0.9];
+        let d = minmax_delta(&xs, 15.0, GridKind::Unsigned);
+        assert!((d - 0.9 / 15.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn max_value_roundtrips_exactly_at_high_bits() {
+        let xs = [0.31f32, -1.7, 0.05];
+        let qmax = GridKind::Signed.qmax(8);
+        let d = minmax_delta(&xs, qmax, GridKind::Signed);
+        let q = fake_quant_one(-1.7, d, qmax, GridKind::Signed);
+        assert!((q + 1.7).abs() < d);
+    }
+}

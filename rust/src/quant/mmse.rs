@@ -1,0 +1,109 @@
+//! L_p-optimal layer-wise calibration (LAPQ phase 1; MMSE baseline at p=2).
+//!
+//! For a tensor population `xs` and grid bound `qmax`, finds the step size
+//! minimizing Eq. 12's `e_p(Δ)` by coarse grid + golden-section
+//! ([`search::grid_then_golden`]).  The search interval is
+//! `[max|x| / (8·qmax), max|x| / qmax]` — from aggressive clipping to
+//! min-max — which brackets the optimum for every p in the paper's grid.
+
+use super::lp::lp_error_sum;
+use super::search::grid_then_golden;
+use super::GridKind;
+use crate::util::stats;
+
+/// Configuration of the scalar Δ search.
+#[derive(Clone, Copy, Debug)]
+pub struct LpSearch {
+    pub n_grid: usize,
+    pub tol: f64,
+    /// Lower bound of the search window as a fraction of the min-max step.
+    pub lo_frac: f64,
+}
+
+impl Default for LpSearch {
+    fn default() -> Self {
+        LpSearch { n_grid: 48, tol: 1e-5, lo_frac: 1.0 / 8.0 }
+    }
+}
+
+/// Δ minimizing `sum(|Q(x)-x|^p)`; returns (delta, error_sum).
+pub fn lp_optimal_delta(
+    xs: &[f32],
+    qmax: f32,
+    p: f32,
+    kind: GridKind,
+    cfg: LpSearch,
+) -> (f32, f64) {
+    let max_abs = match kind {
+        GridKind::Signed => stats::max_abs(xs),
+        GridKind::Unsigned => stats::min_max(xs).1.max(0.0),
+    };
+    if max_abs == 0.0 || qmax <= 0.0 {
+        return (0.0, 0.0);
+    }
+    let hi = (max_abs / qmax) as f64;
+    let lo = hi * cfg.lo_frac;
+    let mut f = |d: f64| lp_error_sum(xs, d as f32, qmax, p, kind);
+    let (d, e) = grid_then_golden(lo, hi, cfg.n_grid, tol_abs(cfg.tol, hi), &mut f);
+    (d as f32, e)
+}
+
+fn tol_abs(rel: f64, scale: f64) -> f64 {
+    (rel * scale).max(1e-12)
+}
+
+/// MMSE baseline: p = 2.
+pub fn mmse_delta(xs: &[f32], qmax: f32, kind: GridKind) -> f32 {
+    lp_optimal_delta(xs, qmax, 2.0, kind, LpSearch::default()).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gauss(n: usize, seed: u64) -> Vec<f32> {
+        crate::util::rng::Pcg32::seeded(seed).normal_vec(n)
+    }
+
+    #[test]
+    fn beats_minmax_at_low_bits() {
+        let xs = gauss(8192, 3);
+        let qmax = GridKind::Signed.qmax(3);
+        let d_mmse = mmse_delta(&xs, qmax, GridKind::Signed);
+        let d_minmax = super::super::minmax::minmax_delta(&xs, qmax, GridKind::Signed);
+        let e_mmse = lp_error_sum(&xs, d_mmse, qmax, 2.0, GridKind::Signed);
+        let e_minmax = lp_error_sum(&xs, d_minmax, qmax, 2.0, GridKind::Signed);
+        assert!(e_mmse < e_minmax, "{e_mmse} !< {e_minmax}");
+        assert!(d_mmse < d_minmax);
+    }
+
+    #[test]
+    fn near_bruteforce_optimum() {
+        let xs = gauss(4096, 4);
+        let qmax = 7.0;
+        let (d, e) = lp_optimal_delta(&xs, qmax, 2.0, GridKind::Signed, LpSearch::default());
+        // dense brute-force reference
+        let mut best = f64::INFINITY;
+        for i in 1..=600 {
+            let cand = i as f32 * 0.002;
+            best = best.min(lp_error_sum(&xs, cand, qmax, 2.0, GridKind::Signed));
+        }
+        assert!(e <= best * 1.02, "search {e} vs brute {best} (d={d})");
+    }
+
+    #[test]
+    fn zero_tensor_gives_zero_delta() {
+        let xs = vec![0.0f32; 128];
+        assert_eq!(mmse_delta(&xs, 7.0, GridKind::Signed), 0.0);
+    }
+
+    #[test]
+    fn unsigned_population() {
+        let xs: Vec<f32> = gauss(4096, 5).into_iter().map(|x| x.max(0.0)).collect();
+        let d = mmse_delta(&xs, GridKind::Unsigned.qmax(4), GridKind::Unsigned);
+        assert!(d > 0.0);
+        let e = lp_error_sum(&xs, d, 15.0, 2.0, GridKind::Unsigned);
+        let e_wide = lp_error_sum(&xs, d * 3.0, 15.0, 2.0, GridKind::Unsigned);
+        assert!(e < e_wide);
+    }
+}

@@ -1,0 +1,61 @@
+//! Quantization substrate: the host-side mirror of the Layer-1 kernels
+//! plus every clipping-threshold selection method the paper compares.
+//!
+//! * [`quantizer`] — bit-exact mirror of `kernels/fake_quant.py` (Eq. 1).
+//! * [`lp`] + [`search`] — Eq. 12 layer-wise L_p minimization.
+//! * [`minmax`] / [`mmse`] / [`aciq`] / [`kld`] — the baselines of Table 1.
+//! * [`bias_correction`] — Banner et al.'s per-channel mean correction.
+//! * [`histogram`] — fixed-bin histograms for the KLD calibrator.
+
+pub mod aciq;
+pub mod bias_correction;
+pub mod histogram;
+pub mod kld;
+pub mod lp;
+pub mod minmax;
+pub mod mmse;
+pub mod quantizer;
+pub mod search;
+
+/// Which tensor population a step size is calibrated for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GridKind {
+    /// Symmetric signed grid (weights; signed activations).
+    Signed,
+    /// Non-negative grid (post-ReLU activations).
+    Unsigned,
+}
+
+impl GridKind {
+    pub fn from_signed(signed: bool) -> Self {
+        if signed {
+            GridKind::Signed
+        } else {
+            GridKind::Unsigned
+        }
+    }
+
+    /// Largest integer level of an M-bit grid (`qmax`), matching
+    /// `kernels.fake_quant.grid_qmax`.
+    pub fn qmax(self, bits: u32) -> f32 {
+        match self {
+            GridKind::Signed => (2i64.pow(bits - 1) - 1) as f32,
+            GridKind::Unsigned => (2i64.pow(bits) - 1) as f32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(GridKind::Signed.qmax(2), 1.0);
+        assert_eq!(GridKind::Signed.qmax(4), 7.0);
+        assert_eq!(GridKind::Signed.qmax(8), 127.0);
+        assert_eq!(GridKind::Unsigned.qmax(2), 3.0);
+        assert_eq!(GridKind::Unsigned.qmax(4), 15.0);
+        assert_eq!(GridKind::Unsigned.qmax(8), 255.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Host mirror of the Pallas fake-quant kernel (paper Eq. 1).
+//!
+//! Bit-exact with `python/compile/kernels/ref.py::fake_quant_ref`:
+//! `jnp.round` is round-half-to-even, while Rust's `f32::round` is
+//! round-half-away-from-zero, so the tie-breaking is implemented
+//! explicitly in [`round_half_even`].
+
+use super::GridKind;
+
+/// Round-half-to-even, matching `jnp.round` / HLO `round-nearest-even`.
+#[inline]
+pub fn round_half_even(x: f32) -> f32 {
+    let r = x.round(); // round-half-away-from-zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // halfway case: pick the even neighbour
+        let lo = x.floor();
+        let hi = x.ceil();
+        if (lo as i64) % 2 == 0 {
+            lo
+        } else {
+            hi
+        }
+    } else {
+        r
+    }
+}
+
+/// Quantize one value to the `delta` grid bounded by `qmax` levels.
+#[inline]
+pub fn fake_quant_one(x: f32, delta: f32, qmax: f32, kind: GridKind) -> f32 {
+    if delta <= 0.0 {
+        return x;
+    }
+    let q = round_half_even(x / delta);
+    let lo = match kind {
+        GridKind::Signed => -qmax,
+        GridKind::Unsigned => 0.0,
+    };
+    q.clamp(lo, qmax) * delta
+}
+
+/// Quantize-dequantize a slice into a new vector.
+pub fn fake_quant(xs: &[f32], delta: f32, qmax: f32, kind: GridKind) -> Vec<f32> {
+    xs.iter().map(|&x| fake_quant_one(x, delta, qmax, kind)).collect()
+}
+
+/// In-place variant used by bias correction.
+pub fn fake_quant_inplace(xs: &mut [f32], delta: f32, qmax: f32, kind: GridKind) {
+    for x in xs {
+        *x = fake_quant_one(*x, delta, qmax, kind);
+    }
+}
+
+/// Clipping range `c` implied by a step size (c = Δ·qmax).
+pub fn clip_range(delta: f32, qmax: f32) -> f32 {
+    delta * qmax
+}
+
+/// Step size implied by a clipping range.
+pub fn delta_from_clip(c: f32, qmax: f32) -> f32 {
+    if qmax > 0.0 {
+        c / qmax
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_delta_identity() {
+        let xs = [0.3, -1.7, 42.0];
+        assert_eq!(fake_quant(&xs, 0.0, 7.0, GridKind::Signed), xs.to_vec());
+    }
+
+    #[test]
+    fn grid_snap() {
+        // Δ=0.5, signed 4-bit (qmax=7): x=0.74 -> 1.5·0.5? no: 0.74/0.5=1.48 -> 1 -> 0.5
+        assert_eq!(fake_quant_one(0.74, 0.5, 7.0, GridKind::Signed), 0.5);
+        assert_eq!(fake_quant_one(0.76, 0.5, 7.0, GridKind::Signed), 1.0);
+        assert_eq!(fake_quant_one(-0.76, 0.5, 7.0, GridKind::Signed), -1.0);
+    }
+
+    #[test]
+    fn clipping() {
+        assert_eq!(fake_quant_one(100.0, 0.1, 7.0, GridKind::Signed), 0.7);
+        assert_eq!(fake_quant_one(-100.0, 0.1, 7.0, GridKind::Signed), -0.7);
+        assert_eq!(fake_quant_one(-1.0, 0.1, 15.0, GridKind::Unsigned), 0.0);
+    }
+
+    #[test]
+    fn round_half_even_matches_numpy() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(0.4999), 0.0);
+        assert_eq!(round_half_even(1.2), 1.0);
+    }
+
+    #[test]
+    fn idempotent() {
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.037).collect();
+        let once = fake_quant(&xs, 0.07, 7.0, GridKind::Signed);
+        let twice = fake_quant(&once, 0.07, 7.0, GridKind::Signed);
+        for (a, b) in once.iter().zip(&twice) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn error_bounded_inside_range() {
+        let delta = 0.05f32;
+        let qmax = 7.0f32;
+        for i in 0..1000 {
+            let x = -delta * qmax + (2.0 * delta * qmax) * (i as f32 / 999.0);
+            let err = (fake_quant_one(x, delta, qmax, GridKind::Signed) - x).abs();
+            assert!(err <= delta / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn level_count_bound() {
+        use std::collections::HashSet;
+        let xs: Vec<f32> = (0..4096).map(|i| ((i * 2654435761u32 as usize) as f32).sin() * 3.0).collect();
+        for bits in [2u32, 3, 4] {
+            let qmax = GridKind::Signed.qmax(bits);
+            let q = fake_quant(&xs, 0.2, qmax, GridKind::Signed);
+            let levels: HashSet<i64> = q.iter().map(|&v| (v / 0.2).round() as i64).collect();
+            assert!(levels.len() <= (1usize << bits) - 1, "bits={bits}: {}", levels.len());
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Scalar minimizers for the per-layer Δ search: coarse grid scan followed
+//! by golden-section refinement.  Robust to the piecewise-flat objectives
+//! fake-quantization induces (many Δ map to the same rounding pattern).
+
+/// Golden-section minimization of `f` on `[lo, hi]`.
+pub fn golden_section(mut lo: f64, mut hi: f64, tol: f64, f: &mut impl FnMut(f64) -> f64) -> f64 {
+    const INV_PHI: f64 = 0.618_033_988_749_894_8;
+    let mut c = hi - INV_PHI * (hi - lo);
+    let mut d = lo + INV_PHI * (hi - lo);
+    let mut fc = f(c);
+    let mut fd = f(d);
+    while (hi - lo).abs() > tol {
+        if fc < fd {
+            hi = d;
+            d = c;
+            fd = fc;
+            c = hi - INV_PHI * (hi - lo);
+            fc = f(c);
+        } else {
+            lo = c;
+            c = d;
+            fc = fd;
+            d = lo + INV_PHI * (hi - lo);
+            fd = f(d);
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Coarse-to-fine scalar minimization: scan `n_grid` points of `[lo, hi]`,
+/// then golden-section around the best cell.  Returns (x*, f(x*)).
+pub fn grid_then_golden(
+    lo: f64,
+    hi: f64,
+    n_grid: usize,
+    tol: f64,
+    f: &mut impl FnMut(f64) -> f64,
+) -> (f64, f64) {
+    assert!(hi > lo && n_grid >= 3);
+    let step = (hi - lo) / (n_grid - 1) as f64;
+    let mut best_i = 0;
+    let mut best_v = f64::INFINITY;
+    for i in 0..n_grid {
+        let v = f(lo + step * i as f64);
+        if v < best_v {
+            best_v = v;
+            best_i = i;
+        }
+    }
+    let wlo = lo + step * best_i.saturating_sub(1) as f64;
+    let whi = (lo + step * (best_i + 1) as f64).min(hi);
+    let x = golden_section(wlo, whi, tol, f);
+    let fx = f(x);
+    if fx <= best_v {
+        (x, fx)
+    } else {
+        (lo + step * best_i as f64, best_v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_finds_parabola_min() {
+        let mut f = |x: f64| (x - 1.3).powi(2) + 0.5;
+        let x = golden_section(-10.0, 10.0, 1e-8, &mut f);
+        assert!((x - 1.3).abs() < 1e-6, "{x}");
+    }
+
+    #[test]
+    fn grid_then_golden_handles_multimodal() {
+        // global min at x≈4.9, local min near 1.2
+        let mut f = |x: f64| (x - 4.9).powi(2).min((x - 1.2).powi(2) + 0.8);
+        let (x, v) = grid_then_golden(0.0, 8.0, 33, 1e-8, &mut f);
+        assert!((x - 4.9).abs() < 1e-4, "{x}");
+        assert!(v < 1e-6);
+    }
+
+    #[test]
+    fn grid_then_golden_flat_regions() {
+        // stair-like objective (mimics quantization plateaus)
+        let mut f = |x: f64| ((x * 3.0).floor() - 6.0).abs();
+        let (x, v) = grid_then_golden(0.0, 5.0, 26, 1e-6, &mut f);
+        assert_eq!(v, 0.0);
+        assert!((2.0..2.4).contains(&x), "{x}");
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let mut f = |x: f64| -x; // min at upper bound
+        let (x, _) = grid_then_golden(0.0, 2.0, 11, 1e-9, &mut f);
+        assert!(x <= 2.0 + 1e-9 && x > 1.7);
+    }
+}

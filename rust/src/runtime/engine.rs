@@ -1,0 +1,372 @@
+//! The PJRT engine thread: owns the client, compiled executables, model
+//! sessions (device-resident parameters/optimizer state) and registered
+//! calibration batches.  Requests arrive over an mpsc mailbox from
+//! [`super::handle::EngineHandle`].
+//!
+//! Design notes:
+//! * Executables are compiled lazily per (model, entry) and cached — the
+//!   Powell hot loop re-executes `fwd_quant` thousands of times against
+//!   one compiled artifact.
+//! * Calibration batches are registered once and kept as `Literal`s, so
+//!   an objective evaluation ships only the 4 tiny Δ vectors.
+//! * Sessions own parameters + momentum as `Literal`s; `train_step`
+//!   swaps them wholesale from the executable outputs (state never
+//!   round-trips through the caller).
+
+use super::manifest::Manifest;
+use crate::tensor::{Data, HostTensor};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Per-layer quantization runtime parameters (the graph's dw/qmw/da/qma).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantParams {
+    pub dw: Vec<f32>,
+    pub qmw: Vec<f32>,
+    pub da: Vec<f32>,
+    pub qma: Vec<f32>,
+}
+
+impl QuantParams {
+    /// All-zero steps: every layer passes through (FP32 behaviour).
+    pub fn passthrough(n: usize) -> Self {
+        QuantParams { dw: vec![0.0; n], qmw: vec![1.0; n], da: vec![0.0; n], qma: vec![1.0; n] }
+    }
+}
+
+pub type SessionId = u64;
+pub type BatchId = u64;
+
+/// Mailbox requests.  Every variant carries its own reply channel.
+pub enum Request {
+    CreateSession { model: String, params: Vec<HostTensor>, reply: Sender<Result<SessionId>> },
+    DropSession { sess: SessionId, reply: Sender<Result<()>> },
+    GetParams { sess: SessionId, reply: Sender<Result<Vec<HostTensor>>> },
+    SetParams { sess: SessionId, params: Vec<HostTensor>, reply: Sender<Result<()>> },
+    RegisterBatch { batch: Vec<HostTensor>, reply: Sender<Result<BatchId>> },
+    DropBatch { batch: BatchId, reply: Sender<Result<()>> },
+    TrainStep { sess: SessionId, batch: BatchId, lr: f32, reply: Sender<Result<f32>> },
+    /// fwd_quant / fwd_fp32: returns (loss, correct).
+    Eval {
+        sess: SessionId,
+        quant: Option<QuantParams>,
+        batch: BatchId,
+        reply: Sender<Result<(f32, f32)>>,
+    },
+    /// NCF hit-rate entries: returns hit count.
+    Hitrate {
+        sess: SessionId,
+        quant: Option<QuantParams>,
+        batch: BatchId,
+        reply: Sender<Result<f32>>,
+    },
+    Acts { sess: SessionId, batch: BatchId, reply: Sender<Result<Vec<HostTensor>>> },
+    Stats { reply: Sender<Result<EngineStats>> },
+    Shutdown,
+}
+
+/// Counters for the metrics registry / perf bench.
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub executions: u64,
+    pub compiled: u64,
+    pub sessions: u64,
+    pub batches: u64,
+    pub exec_seconds: f64,
+}
+
+struct Session {
+    model: String,
+    params: Vec<Literal>,
+    momentum: Vec<Literal>,
+}
+
+pub(super) struct Engine {
+    client: PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<(String, String), PjRtLoadedExecutable>,
+    sessions: HashMap<SessionId, Session>,
+    batches: HashMap<BatchId, Vec<Literal>>,
+    next_id: u64,
+    stats: EngineStats,
+}
+
+impl Engine {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        log::info!(
+            "engine: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine {
+            client,
+            manifest,
+            executables: HashMap::new(),
+            sessions: HashMap::new(),
+            batches: HashMap::new(),
+            next_id: 1,
+            stats: EngineStats::default(),
+        })
+    }
+
+    /// Main loop; returns when `Shutdown` arrives or all senders drop.
+    pub fn run(mut self, rx: Receiver<Request>) {
+        while let Ok(req) = rx.recv() {
+            match req {
+                Request::Shutdown => break,
+                Request::CreateSession { model, params, reply } => {
+                    let _ = reply.send(self.create_session(&model, params));
+                }
+                Request::DropSession { sess, reply } => {
+                    self.sessions.remove(&sess);
+                    let _ = reply.send(Ok(()));
+                }
+                Request::GetParams { sess, reply } => {
+                    let _ = reply.send(self.get_params(sess));
+                }
+                Request::SetParams { sess, params, reply } => {
+                    let _ = reply.send(self.set_params(sess, params));
+                }
+                Request::RegisterBatch { batch, reply } => {
+                    let _ = reply.send(self.register_batch(batch));
+                }
+                Request::DropBatch { batch, reply } => {
+                    self.batches.remove(&batch);
+                    let _ = reply.send(Ok(()));
+                }
+                Request::TrainStep { sess, batch, lr, reply } => {
+                    let _ = reply.send(self.train_step(sess, batch, lr));
+                }
+                Request::Eval { sess, quant, batch, reply } => {
+                    let _ = reply.send(self.eval(sess, quant, batch));
+                }
+                Request::Hitrate { sess, quant, batch, reply } => {
+                    let _ = reply.send(self.hitrate(sess, quant, batch));
+                }
+                Request::Acts { sess, batch, reply } => {
+                    let _ = reply.send(self.acts(sess, batch));
+                }
+                Request::Stats { reply } => {
+                    let mut s = self.stats.clone();
+                    s.sessions = self.sessions.len() as u64;
+                    s.batches = self.batches.len() as u64;
+                    let _ = reply.send(Ok(s));
+                }
+            }
+        }
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    fn executable(&mut self, model: &str, entry: &str) -> Result<&PjRtLoadedExecutable> {
+        let key = (model.to_string(), entry.to_string());
+        if !self.executables.contains_key(&key) {
+            let path = self.manifest.hlo_path(model, entry)?;
+            let t0 = std::time::Instant::now();
+            let proto = HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe =
+                self.client.compile(&comp).map_err(|e| anyhow!("compile {model}/{entry}: {e:?}"))?;
+            log::info!("compiled {model}/{entry} in {:.2}s", t0.elapsed().as_secs_f64());
+            self.stats.compiled += 1;
+            self.executables.insert(key.clone(), exe);
+        }
+        Ok(&self.executables[&key])
+    }
+
+    fn create_session(&mut self, model: &str, params: Vec<HostTensor>) -> Result<SessionId> {
+        let spec = self.manifest.model(model)?;
+        if params.len() != spec.params.len() {
+            bail!("session: expected {} params, got {}", spec.params.len(), params.len());
+        }
+        for (t, p) in params.iter().zip(&spec.params) {
+            if t.shape != p.shape {
+                bail!("param {} shape {:?} != spec {:?}", p.name, t.shape, p.shape);
+            }
+        }
+        let momentum: Vec<Literal> =
+            params.iter().map(|t| literal_of(&HostTensor::zeros(t.shape.clone()))).collect::<Result<_>>()?;
+        let params: Vec<Literal> = params.iter().map(literal_of).collect::<Result<_>>()?;
+        let id = self.fresh_id();
+        self.sessions.insert(id, Session { model: model.to_string(), params, momentum });
+        Ok(id)
+    }
+
+    fn session(&self, sess: SessionId) -> Result<&Session> {
+        self.sessions.get(&sess).context("unknown session")
+    }
+
+    fn get_params(&self, sess: SessionId) -> Result<Vec<HostTensor>> {
+        self.session(sess)?.params.iter().map(host_of).collect()
+    }
+
+    fn set_params(&mut self, sess: SessionId, params: Vec<HostTensor>) -> Result<()> {
+        let s = self.sessions.get_mut(&sess).context("unknown session")?;
+        if params.len() != s.params.len() {
+            bail!("set_params: wrong count");
+        }
+        s.params = params.iter().map(literal_of).collect::<Result<_>>()?;
+        Ok(())
+    }
+
+    fn register_batch(&mut self, batch: Vec<HostTensor>) -> Result<BatchId> {
+        let lits: Vec<Literal> = batch.iter().map(literal_of).collect::<Result<_>>()?;
+        let id = self.fresh_id();
+        self.batches.insert(id, lits);
+        Ok(id)
+    }
+
+    /// Execute `entry` with args = session params ++ extra ++ batch.
+    fn execute(
+        &mut self,
+        sess: SessionId,
+        entry: &str,
+        extra: &[Literal],
+        batch: BatchId,
+        include_momentum: bool,
+        extra_after_batch: bool,
+    ) -> Result<Vec<Literal>> {
+        let model = self.session(sess)?.model.clone();
+        let n_expected = self.manifest.model(&model)?.entry(entry)?.n_args;
+        // ensure the executable is compiled before borrowing session state
+        self.executable(&model, entry)?;
+        // assemble argument references in ABI order
+        let s = &self.sessions[&sess];
+        let b = self.batches.get(&batch).context("unknown batch")?;
+        let mut args: Vec<&Literal> = Vec::with_capacity(n_expected);
+        args.extend(s.params.iter());
+        if include_momentum {
+            args.extend(s.momentum.iter());
+        }
+        if extra_after_batch {
+            args.extend(b.iter());
+            args.extend(extra.iter());
+        } else {
+            args.extend(extra.iter());
+            args.extend(b.iter());
+        }
+        if args.len() != n_expected {
+            bail!("{model}/{entry}: assembled {} args, artifact wants {n_expected}", args.len());
+        }
+        let exe = &self.executables[&(model.clone(), entry.to_string())];
+        let t0 = std::time::Instant::now();
+        let mut out = exe
+            .execute::<&Literal>(&args)
+            .map_err(|e| anyhow!("execute {model}/{entry}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.executions += 1;
+        self.stats.exec_seconds += dt;
+        // The artifact returns a single tuple (return_tuple=True): fetch,
+        // then decompose into leaves.
+        let buf = out
+            .first_mut()
+            .and_then(|v| v.first_mut())
+            .context("no output buffer")?;
+        let mut lit = buf.to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let leaves = lit.decompose_tuple().map_err(|e| anyhow!("decompose: {e:?}"))?;
+        if leaves.is_empty() {
+            Ok(vec![lit])
+        } else {
+            Ok(leaves)
+        }
+    }
+
+    fn train_step(&mut self, sess: SessionId, batch: BatchId, lr: f32) -> Result<f32> {
+        let extra = vec![Literal::scalar(lr)];
+        let out = self.execute(sess, "train_step", &extra, batch, true, true)?;
+        let n = self.session(sess)?.params.len();
+        if out.len() != 2 * n + 1 {
+            bail!("train_step returned {} outputs, want {}", out.len(), 2 * n + 1);
+        }
+        let mut it = out.into_iter();
+        let new_params: Vec<Literal> = it.by_ref().take(n).collect();
+        let new_mom: Vec<Literal> = it.by_ref().take(n).collect();
+        let loss = it.next().unwrap();
+        let s = self.sessions.get_mut(&sess).unwrap();
+        s.params = new_params;
+        s.momentum = new_mom;
+        scalar_f32(&loss)
+    }
+
+    fn quant_literals(q: &QuantParams) -> Result<Vec<Literal>> {
+        Ok(vec![
+            literal_of(&HostTensor::f32(vec![q.dw.len()], q.dw.clone()))?,
+            literal_of(&HostTensor::f32(vec![q.qmw.len()], q.qmw.clone()))?,
+            literal_of(&HostTensor::f32(vec![q.da.len()], q.da.clone()))?,
+            literal_of(&HostTensor::f32(vec![q.qma.len()], q.qma.clone()))?,
+        ])
+    }
+
+    fn eval(
+        &mut self,
+        sess: SessionId,
+        quant: Option<QuantParams>,
+        batch: BatchId,
+    ) -> Result<(f32, f32)> {
+        let (entry, extra) = match &quant {
+            Some(q) => ("fwd_quant", Self::quant_literals(q)?),
+            None => ("fwd_fp32", vec![]),
+        };
+        let out = self.execute(sess, entry, &extra, batch, false, false)?;
+        if out.len() != 2 {
+            bail!("eval returned {} outputs", out.len());
+        }
+        Ok((scalar_f32(&out[0])?, scalar_f32(&out[1])?))
+    }
+
+    fn hitrate(
+        &mut self,
+        sess: SessionId,
+        quant: Option<QuantParams>,
+        batch: BatchId,
+    ) -> Result<f32> {
+        let (entry, extra) = match &quant {
+            Some(q) => ("hitrate_quant", Self::quant_literals(q)?),
+            None => ("hitrate", vec![]),
+        };
+        let out = self.execute(sess, entry, &extra, batch, false, false)?;
+        scalar_f32(&out[0])
+    }
+
+    fn acts(&mut self, sess: SessionId, batch: BatchId) -> Result<Vec<HostTensor>> {
+        let out = self.execute(sess, "acts", &[], batch, false, false)?;
+        out.iter().map(host_of).collect()
+    }
+}
+
+/// HostTensor -> xla::Literal.
+pub(super) fn literal_of(t: &HostTensor) -> Result<Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        Data::F32(v) => Literal::vec1(v.as_slice()),
+        Data::I32(v) => Literal::vec1(v.as_slice()),
+    };
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape {:?}: {e:?}", t.shape))
+}
+
+/// xla::Literal -> HostTensor.
+pub(super) fn host_of(lit: &Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            Ok(HostTensor::f32(dims, lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?))
+        }
+        xla::ElementType::S32 => {
+            Ok(HostTensor::i32(dims, lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?))
+        }
+        other => bail!("unsupported element type {other:?}"),
+    }
+}
+
+fn scalar_f32(lit: &Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(|e| anyhow!("scalar: {e:?}"))
+}

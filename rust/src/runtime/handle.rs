@@ -1,0 +1,146 @@
+//! `EngineHandle` — the `Send + Clone` facade over the engine thread.
+//!
+//! Spawning a handle boots the engine thread (PJRT client + artifact
+//! registry); dropping the last handle shuts it down.  All methods are
+//! synchronous request/reply over mpsc channels — the XLA CPU executor is
+//! internally multi-threaded, so a single in-flight execution already
+//! saturates the machine; concurrency above this layer is about job
+//! orchestration (see `coordinator::scheduler`), not parallel PJRT calls.
+
+use super::engine::{Engine, EngineStats, Request};
+use super::manifest::Manifest;
+use crate::tensor::HostTensor;
+use anyhow::{Context, Result};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+pub use super::engine::{BatchId, QuantParams, SessionId};
+
+/// Cloneable handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<Request>,
+    manifest: Arc<Manifest>,
+    _joiner: Arc<Joiner>,
+}
+
+struct Joiner {
+    tx: Sender<Request>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for Joiner {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl EngineHandle {
+    /// Boot an engine over the given artifacts directory.
+    pub fn start(artifacts_dir: impl AsRef<std::path::Path>) -> Result<EngineHandle> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Self::start_with_manifest(manifest)
+    }
+
+    /// Boot an engine over [`Manifest::default_dir`].
+    pub fn start_default() -> Result<EngineHandle> {
+        Self::start(Manifest::default_dir())
+    }
+
+    pub fn start_with_manifest(manifest: Manifest) -> Result<EngineHandle> {
+        let (tx, rx) = channel();
+        let m2 = manifest.clone();
+        let (boot_tx, boot_rx) = channel();
+        let thread = std::thread::Builder::new()
+            .name("lapq-engine".into())
+            .spawn(move || match Engine::new(m2) {
+                Ok(engine) => {
+                    let _ = boot_tx.send(Ok(()));
+                    engine.run(rx);
+                }
+                Err(e) => {
+                    let _ = boot_tx.send(Err(e));
+                }
+            })
+            .context("spawning engine thread")?;
+        boot_rx.recv().context("engine boot reply")??;
+        Ok(EngineHandle {
+            tx: tx.clone(),
+            manifest: Arc::new(manifest),
+            _joiner: Arc::new(Joiner { tx, thread: Some(thread) }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn call<T>(&self, make: impl FnOnce(Sender<Result<T>>) -> Request) -> Result<T> {
+        let (rtx, rrx) = channel();
+        self.tx.send(make(rtx)).ok().context("engine thread gone")?;
+        rrx.recv().context("engine dropped reply")?
+    }
+
+    /// Create a model session owning `params` (+ zero momentum).
+    pub fn create_session(&self, model: &str, params: Vec<HostTensor>) -> Result<SessionId> {
+        self.call(|reply| Request::CreateSession { model: model.into(), params, reply })
+    }
+
+    pub fn drop_session(&self, sess: SessionId) -> Result<()> {
+        self.call(|reply| Request::DropSession { sess, reply })
+    }
+
+    pub fn get_params(&self, sess: SessionId) -> Result<Vec<HostTensor>> {
+        self.call(|reply| Request::GetParams { sess, reply })
+    }
+
+    pub fn set_params(&self, sess: SessionId, params: Vec<HostTensor>) -> Result<()> {
+        self.call(|reply| Request::SetParams { sess, params, reply })
+    }
+
+    /// Register a batch for repeated use (calibration / eval sets).
+    pub fn register_batch(&self, batch: Vec<HostTensor>) -> Result<BatchId> {
+        self.call(|reply| Request::RegisterBatch { batch, reply })
+    }
+
+    pub fn drop_batch(&self, batch: BatchId) -> Result<()> {
+        self.call(|reply| Request::DropBatch { batch, reply })
+    }
+
+    /// One SGD-with-momentum step; updates session state, returns loss.
+    pub fn train_step(&self, sess: SessionId, batch: BatchId, lr: f32) -> Result<f32> {
+        self.call(|reply| Request::TrainStep { sess, batch, lr, reply })
+    }
+
+    /// Quantized (Some) or FP32 (None) forward: (mean loss, #correct).
+    pub fn eval(
+        &self,
+        sess: SessionId,
+        quant: Option<QuantParams>,
+        batch: BatchId,
+    ) -> Result<(f32, f32)> {
+        self.call(|reply| Request::Eval { sess, quant, batch, reply })
+    }
+
+    /// NCF hit-rate@10 hits for a (users, pos, negs) batch.
+    pub fn hitrate(
+        &self,
+        sess: SessionId,
+        quant: Option<QuantParams>,
+        batch: BatchId,
+    ) -> Result<f32> {
+        self.call(|reply| Request::Hitrate { sess, quant, batch, reply })
+    }
+
+    /// FP32 input activations of every quant layer for a batch.
+    pub fn acts(&self, sess: SessionId, batch: BatchId) -> Result<Vec<HostTensor>> {
+        self.call(|reply| Request::Acts { sess, batch, reply })
+    }
+
+    pub fn stats(&self) -> Result<EngineStats> {
+        self.call(|reply| Request::Stats { reply })
+    }
+}

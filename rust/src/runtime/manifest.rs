@@ -1,0 +1,245 @@
+//! `artifacts/manifest.json` — the ABI contract between `aot.py` and the
+//! Rust runtime: parameter specs, quant-layer table, entry-point files and
+//! exact argument/output shapes.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+    pub fan_in: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct QuantLayerSpec {
+    pub name: String,
+    /// Index of the weight tensor in `params`.
+    pub weight_param: usize,
+    /// Input-activation grid sign (images/embeddings signed, ReLU unsigned).
+    pub act_signed: bool,
+    pub kind: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub file: String,
+    pub n_args: usize,
+    pub outputs: Vec<(Vec<usize>, String)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub task: String,
+    pub params: Vec<ParamSpec>,
+    pub quant_layers: Vec<QuantLayerSpec>,
+    pub entries: BTreeMap<String, EntrySpec>,
+    /// Ordered batch-input specs per logical entry ("train", "eval", ...).
+    pub input_spec: BTreeMap<String, Vec<TensorSpec>>,
+}
+
+impl ModelSpec {
+    pub fn n_quant_layers(&self) -> usize {
+        self.quant_layers.len()
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries.get(name).with_context(|| format!("model {} has no entry {name}", self.name))
+    }
+
+    /// Total parameter count (for reporting).
+    pub fn n_weights(&self) -> usize {
+        self.params.iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+
+    /// Batch size of the eval entry (leading dim of its first input).
+    pub fn eval_batch(&self) -> usize {
+        self.input_spec["eval"][0].shape[0]
+    }
+
+    pub fn train_batch(&self) -> usize {
+        self.input_spec["train"][0].shape[0]
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let mut models = BTreeMap::new();
+        let Some(model_objs) = json.req("models").as_obj() else {
+            bail!("manifest: models is not an object")
+        };
+        for (name, m) in model_objs {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    /// Locate the artifacts directory: `$LAPQ_ARTIFACTS`, else
+    /// `<crate>/artifacts`, else `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("LAPQ_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let here = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if here.join("manifest.json").exists() {
+            return here;
+        }
+        PathBuf::from("artifacts")
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models.get(name).with_context(|| format!("unknown model '{name}'"))
+    }
+
+    pub fn hlo_path(&self, model: &str, entry: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.model(model)?.entry(entry)?.file))
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelSpec> {
+    let params = m
+        .req("params")
+        .as_arr()
+        .context("params")?
+        .iter()
+        .map(|p| ParamSpec {
+            name: p.req("name").as_str().unwrap_or_default().to_string(),
+            shape: p.req("shape").usize_arr(),
+            init: p.req("init").as_str().unwrap_or("zeros").to_string(),
+            fan_in: p.req("fan_in").as_usize().unwrap_or(0),
+        })
+        .collect();
+    let quant_layers = m
+        .req("quant_layers")
+        .as_arr()
+        .context("quant_layers")?
+        .iter()
+        .map(|q| QuantLayerSpec {
+            name: q.req("name").as_str().unwrap_or_default().to_string(),
+            weight_param: q.req("weight_param").as_usize().unwrap_or(0),
+            act_signed: q.req("act_signed").as_bool().unwrap_or(true),
+            kind: q.req("kind").as_str().unwrap_or("conv").to_string(),
+        })
+        .collect();
+    let mut entries = BTreeMap::new();
+    for (ename, e) in m.req("entries").as_obj().context("entries")? {
+        let outputs = e
+            .req("outputs")
+            .as_arr()
+            .context("outputs")?
+            .iter()
+            .map(|o| {
+                (o.req("shape").usize_arr(), o.req("dtype").as_str().unwrap_or("f32").to_string())
+            })
+            .collect();
+        entries.insert(
+            ename.clone(),
+            EntrySpec {
+                file: e.req("file").as_str().unwrap_or_default().to_string(),
+                n_args: e.req("n_args").as_usize().unwrap_or(0),
+                outputs,
+            },
+        );
+    }
+    let mut input_spec = BTreeMap::new();
+    for (ename, list) in m.req("input_spec").as_obj().context("input_spec")? {
+        let specs = list
+            .as_arr()
+            .context("input list")?
+            .iter()
+            .map(|t| TensorSpec {
+                name: t.req("name").as_str().unwrap_or_default().to_string(),
+                shape: t.req("shape").usize_arr(),
+                dtype: t.req("dtype").as_str().unwrap_or("f32").to_string(),
+            })
+            .collect();
+        input_spec.insert(ename.clone(), specs);
+    }
+    Ok(ModelSpec {
+        name: name.to_string(),
+        task: m.req("task").as_str().unwrap_or("vision").to_string(),
+        params,
+        quant_layers,
+        entries,
+        input_spec,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        Manifest::load(dir).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = manifest() else { return };
+        assert!(m.models.len() >= 5, "{:?}", m.models.keys());
+        let cnn = m.model("cnn6").unwrap();
+        assert_eq!(cnn.n_quant_layers(), 6);
+        assert_eq!(cnn.params.len(), 12);
+        assert_eq!(cnn.task, "vision");
+        assert!(cnn.n_weights() > 50_000);
+    }
+
+    #[test]
+    fn arg_count_abi() {
+        let Some(m) = manifest() else { return };
+        for spec in m.models.values() {
+            let n_p = spec.params.len();
+            let fq = spec.entry("fwd_quant").unwrap();
+            assert_eq!(fq.n_args, n_p + 4 + spec.input_spec["eval"].len(), "{}", spec.name);
+            let ts = spec.entry("train_step").unwrap();
+            assert_eq!(ts.n_args, 2 * n_p + spec.input_spec["train"].len() + 1);
+            // train_step returns params' + mom' + loss
+            assert_eq!(ts.outputs.len(), 2 * n_p + 1);
+        }
+    }
+
+    #[test]
+    fn ncf_input_order_preserved() {
+        let Some(m) = manifest() else { return };
+        let ncf = m.model("ncf").unwrap();
+        let names: Vec<&str> =
+            ncf.input_spec["train"].iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, vec!["users", "items", "labels"]);
+    }
+
+    #[test]
+    fn hlo_files_exist() {
+        let Some(m) = manifest() else { return };
+        for (name, spec) in &m.models {
+            for entry in spec.entries.keys() {
+                let p = m.hlo_path(name, entry).unwrap();
+                assert!(p.exists(), "{p:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! The PJRT runtime layer: loads the AOT HLO-text artifacts and executes
+//! them for the Layer-3 coordinator.
+//!
+//! PJRT wrapper types (`xla::PjRtClient`, `Literal`, …) hold raw pointers
+//! and are `!Send`, so all PJRT state lives on a dedicated **engine
+//! thread** ([`engine`]); the rest of the system talks to it through the
+//! cloneable, `Send` [`handle::EngineHandle`] (an actor/mailbox design —
+//! the same shape a serving router uses to own model replicas).
+
+pub mod engine;
+pub mod handle;
+pub mod manifest;
+
+pub use handle::{BatchId, EngineHandle, QuantParams, SessionId};
+pub use manifest::{Manifest, ModelSpec};

@@ -1,0 +1,73 @@
+//! Parameter initialization mirroring `python/compile/models/common.py`.
+//!
+//! The Rust coordinator owns the weights: it initializes them from the
+//! manifest's `ParamSpec`s (shape + init kind) and feeds them to the AOT
+//! `train_step` artifact.  Exact bit-parity with the Python initializers
+//! is *not* required (training happens here, not there) — only the same
+//! families: He / Glorot normal, zeros, small-normal embeddings.
+
+use super::HostTensor;
+use crate::runtime::manifest::ParamSpec;
+use crate::util::rng::Pcg32;
+
+/// Initialize one parameter tensor.
+pub fn init_param(spec: &ParamSpec, rng: &mut Pcg32) -> HostTensor {
+    let n: usize = spec.shape.iter().product();
+    let data = match spec.init.as_str() {
+        "zeros" => vec![0.0; n],
+        "he" => {
+            let std = (2.0 / spec.fan_in.max(1) as f32).sqrt();
+            (0..n).map(|_| rng.normal() * std).collect()
+        }
+        "glorot" => {
+            let fan_out = *spec.shape.last().unwrap_or(&1);
+            let std = (2.0 / (spec.fan_in + fan_out).max(1) as f32).sqrt();
+            (0..n).map(|_| rng.normal() * std).collect()
+        }
+        "embed" => (0..n).map(|_| rng.normal() * 0.05).collect(),
+        other => panic!("unknown init kind '{other}'"),
+    };
+    HostTensor::f32(spec.shape.clone(), data)
+}
+
+/// Initialize the full parameter list of a model.
+pub fn init_params(specs: &[ParamSpec], seed: u64) -> Vec<HostTensor> {
+    let mut rng = Pcg32::seeded(seed);
+    specs.iter().map(|s| init_param(s, &mut rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn spec(init: &str, shape: Vec<usize>, fan_in: usize) -> ParamSpec {
+        ParamSpec { name: "t".into(), shape, init: init.into(), fan_in }
+    }
+
+    #[test]
+    fn he_scale_matches() {
+        let mut rng = Pcg32::seeded(1);
+        let t = init_param(&spec("he", vec![64, 512], 64), &mut rng);
+        let std = stats::std_dev(t.f());
+        let expect = (2.0f32 / 64.0).sqrt();
+        assert!((std - expect).abs() / expect < 0.05, "std {std} vs {expect}");
+    }
+
+    #[test]
+    fn zeros_is_zero() {
+        let mut rng = Pcg32::seeded(1);
+        let t = init_param(&spec("zeros", vec![16], 0), &mut rng);
+        assert!(t.f().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let specs = vec![spec("he", vec![8, 8], 8), spec("embed", vec![10, 4], 0)];
+        let a = init_params(&specs, 42);
+        let b = init_params(&specs, 42);
+        assert_eq!(a, b);
+        let c = init_params(&specs, 43);
+        assert_ne!(a, c);
+    }
+}

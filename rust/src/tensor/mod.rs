@@ -1,0 +1,127 @@
+//! Host tensors: the coordinator-side value type.
+//!
+//! Everything the Rust side owns — model parameters, calibration batches,
+//! activation samples — lives as a [`HostTensor`] and crosses into PJRT as
+//! an `xla::Literal` only at the runtime boundary (`runtime::engine`).
+
+pub mod init;
+
+/// Dense row-major f32 or i32 host tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: Data::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: Data::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::f32(vec![], vec![v])
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow as f32 slice; panics on dtype mismatch.
+    pub fn f(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            Data::I32(_) => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn f_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            Data::F32(v) => v,
+            Data::I32(_) => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn i(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            Data::F32(_) => panic!("expected i32 tensor"),
+        }
+    }
+
+    /// Scalar value of a 0-d / 1-element f32 tensor.
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.len(), 1, "item() on non-scalar {:?}", self.shape);
+        self.f()[0]
+    }
+
+    /// Iterate rows of the last axis when interpreting the tensor as a
+    /// matrix `(prod(shape[..-1]), shape[-1])` — used for per-channel
+    /// statistics on HWIO conv weights (last axis = output channel).
+    pub fn last_axis(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+
+    /// Slice of every element whose last-axis index equals `c`.
+    pub fn channel_values(&self, c: usize) -> Vec<f32> {
+        let k = self.last_axis();
+        self.f().iter().skip(c).step_by(k).copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = HostTensor::f32(vec![2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.f()[4], 4.0);
+        assert_eq!(HostTensor::scalar_f32(7.0).item(), 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn channel_values_stride() {
+        // shape (2, 3): channels are columns
+        let t = HostTensor::f32(vec![2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.channel_values(1), vec![1.0, 4.0]);
+        assert_eq!(t.channel_values(2), vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let t = HostTensor::zeros(vec![4, 5]);
+        assert_eq!(t.len(), 20);
+        assert!(t.f().iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,11 @@
+//! Host-side substrates: RNG, JSON, statistics, timing, logging.
+//!
+//! The build environment is fully offline with a fixed crate universe, so
+//! the usual suspects (`rand`, `serde_json`, `tracing`, `criterion`) are
+//! re-implemented here at the scale this project needs.
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;

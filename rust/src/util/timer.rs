@@ -1,0 +1,65 @@
+//! Wall-clock timing helpers (used by benches and the metrics registry).
+
+use std::time::Instant;
+
+/// A running stopwatch that accumulates labelled laps.
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+    pub laps: Vec<(String, f64)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, last: now, laps: Vec::new() }
+    }
+
+    /// Record the time since the previous lap under `label`.
+    pub fn lap(&mut self, label: &str) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.laps.push((label.to_string(), dt));
+        dt
+    }
+
+    pub fn total(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let dt = sw.lap("a");
+        assert!(dt >= 0.004);
+        assert_eq!(sw.laps.len(), 1);
+        assert!(sw.total() >= dt);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, dt) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Integration: the full LAPQ pipeline on the fast mlp3 model — phases,
+//! baselines, ablation hooks and coordinator state management compose.
+
+use lapq::config::{BitSpec, ExperimentConfig, Method};
+use lapq::coordinator::jobs::Runner;
+use lapq::lapq::InitKind;
+use lapq::runtime::EngineHandle;
+
+fn fast_cfg(method: Method, bits: BitSpec) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp3".into();
+    cfg.train_steps = 60;
+    cfg.lr = 0.1;
+    cfg.calib_size = 512;
+    cfg.val_size = 1024;
+    cfg.bits = bits;
+    cfg.method = method;
+    cfg.lapq.max_evals = 120;
+    cfg.lapq.powell_iters = 1;
+    cfg
+}
+
+#[test]
+fn lapq_beats_or_matches_baselines_on_calib_loss() {
+    let eng = EngineHandle::start_default().expect("artifacts built");
+    let mut runner = Runner::new(eng);
+    let bits = BitSpec::new(4, 4);
+
+    let lapq = runner.run(&fast_cfg(Method::Lapq, bits)).unwrap();
+    let mmse = runner.run(&fast_cfg(Method::Mmse, bits)).unwrap();
+    let minmax = runner.run(&fast_cfg(Method::MinMax, bits)).unwrap();
+
+    // the joint optimizer directly minimizes calibration loss: it must not
+    // be worse than the layer-wise baselines on its own objective
+    assert!(
+        lapq.outcome.calib_loss <= mmse.outcome.calib_loss + 1e-6,
+        "lapq {} vs mmse {}",
+        lapq.outcome.calib_loss,
+        mmse.outcome.calib_loss
+    );
+    assert!(lapq.outcome.calib_loss <= minmax.outcome.calib_loss + 1e-6);
+
+    // diagnostics populated
+    assert!(lapq.outcome.p_star.is_some());
+    assert!(lapq.outcome.joint_evals > 0);
+    assert!(mmse.outcome.joint_evals == 0);
+
+    // metrics are probabilities
+    for r in [&lapq, &mmse, &minmax] {
+        assert!((0.0..=1.0).contains(&r.fp32_metric));
+        assert!((0.0..=1.0).contains(&r.quant_metric));
+    }
+    // quantized never beats FP32 by much (sanity)
+    assert!(lapq.quant_metric <= lapq.fp32_metric + 0.05);
+}
+
+#[test]
+fn joint_phase_improves_over_init() {
+    let eng = EngineHandle::start_default().unwrap();
+    let mut runner = Runner::new(eng);
+    let cfg = fast_cfg(Method::Lapq, BitSpec::new(4, 4));
+
+    // Table-3 machinery: random init, no joint vs joint
+    let rand_only = runner.run_with_init(&cfg, InitKind::Random(5), false).unwrap();
+    let rand_joint = runner.run_with_init(&cfg, InitKind::Random(5), true).unwrap();
+    assert!(
+        rand_joint.outcome.calib_loss <= rand_only.outcome.calib_loss + 1e-9,
+        "joint {} !<= init {}",
+        rand_joint.outcome.calib_loss,
+        rand_only.outcome.calib_loss
+    );
+
+    // LW+QA init should already be decent: better than random init
+    let lwqa = runner.run_with_init(&cfg, InitKind::LapqQuadratic, false).unwrap();
+    assert!(lwqa.outcome.init_loss <= rand_only.outcome.init_loss + 1e-9);
+}
+
+#[test]
+fn fp32_bits_skip_that_side() {
+    let eng = EngineHandle::start_default().unwrap();
+    let mut runner = Runner::new(eng);
+    // weights FP32, acts 8-bit: all dw must be 0
+    let res = runner.run(&fast_cfg(Method::Mmse, BitSpec::new(32, 8))).unwrap();
+    assert!(res.outcome.quant.dw.iter().all(|&d| d == 0.0));
+    assert!(res.outcome.quant.da.iter().any(|&d| d > 0.0));
+    // 8-bit quantization is near-lossless
+    assert!(res.quant_metric >= res.fp32_metric - 0.02, "{res:?}");
+}
+
+#[test]
+fn exclude_first_last_respected() {
+    let eng = EngineHandle::start_default().unwrap();
+    let mut runner = Runner::new(eng);
+    let cfg = fast_cfg(Method::Mmse, BitSpec::new(4, 4));
+    let res = runner.run(&cfg).unwrap();
+    let dw = &res.outcome.quant.dw;
+    assert_eq!(dw[0], 0.0);
+    assert_eq!(*dw.last().unwrap(), 0.0);
+    assert!(dw[1] > 0.0);
+
+    let mut cfg_all = cfg.clone();
+    cfg_all.lapq.exclude_first_last = false;
+    let res_all = runner.run(&cfg_all).unwrap();
+    assert!(res_all.outcome.quant.dw[0] > 0.0);
+}
+
+#[test]
+fn ncf_pipeline_hitrate() {
+    let eng = EngineHandle::start_default().unwrap();
+    let mut runner = Runner::new(eng);
+    let mut cfg = fast_cfg(Method::Mmse, BitSpec::new(8, 8));
+    cfg.model = "ncf".into();
+    cfg.train_steps = 80;
+    cfg.lr = 0.5;
+    cfg.calib_size = 4096;
+    let res = runner.run(&cfg).unwrap();
+    // hit-rate in [0,1]; 8/8 close to fp32
+    assert!((0.0..=1.0).contains(&res.quant_metric));
+    assert!(res.quant_metric >= res.fp32_metric - 0.1);
+}

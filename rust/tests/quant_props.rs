@@ -1,0 +1,164 @@
+//! Property-based tests (in-repo `prop` framework) over the quantization
+//! and optimization substrates.
+
+use lapq::prop::{forall, Shrink};
+use lapq::quant::lp::lp_error_sum;
+use lapq::quant::minmax::minmax_delta;
+use lapq::quant::mmse::{lp_optimal_delta, LpSearch};
+use lapq::quant::quantizer::{fake_quant, fake_quant_one};
+use lapq::quant::GridKind;
+use lapq::util::json::Json;
+use lapq::util::rng::Pcg32;
+
+#[derive(Clone, Debug)]
+struct Case {
+    xs: Vec<f32>,
+    delta: f32,
+    bits: u32,
+}
+
+impl Shrink for Case {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        for xs in self.xs.shrink() {
+            if !xs.is_empty() {
+                out.push(Case { xs, ..self.clone() })
+            }
+        }
+        out
+    }
+}
+
+fn case_gen(rng: &mut Pcg32) -> Case {
+    let n = 1 + rng.below(512) as usize;
+    Case { xs: rng.normal_vec(n), delta: rng.range(1e-3, 1.0), bits: 2 + rng.below(7) }
+}
+
+#[test]
+fn prop_idempotent() {
+    forall(11, 300, case_gen, |c: &Case| {
+        let qmax = GridKind::Signed.qmax(c.bits);
+        let once = fake_quant(&c.xs, c.delta, qmax, GridKind::Signed);
+        let twice = fake_quant(&once, c.delta, qmax, GridKind::Signed);
+        once.iter().zip(&twice).all(|(a, b)| (a - b).abs() < 1e-6)
+    });
+}
+
+#[test]
+fn prop_output_bounded_by_clip() {
+    forall(12, 300, case_gen, |c: &Case| {
+        let qmax = GridKind::Signed.qmax(c.bits);
+        let clip = c.delta * qmax;
+        fake_quant(&c.xs, c.delta, qmax, GridKind::Signed)
+            .iter()
+            .all(|&v| v.abs() <= clip + 1e-5)
+    });
+}
+
+#[test]
+fn prop_error_bounded_inside_range() {
+    forall(13, 300, case_gen, |c: &Case| {
+        let qmax = GridKind::Signed.qmax(c.bits);
+        let clip = c.delta * qmax;
+        c.xs.iter().all(|&x| {
+            let err = (fake_quant_one(x, c.delta, qmax, GridKind::Signed) - x).abs();
+            if x.abs() <= clip {
+                err <= c.delta / 2.0 + 1e-5
+            } else {
+                (err - (x.abs() - clip)).abs() <= c.delta / 2.0 + 1e-5
+            }
+        })
+    });
+}
+
+#[test]
+fn prop_unsigned_never_negative() {
+    forall(14, 200, case_gen, |c: &Case| {
+        let qmax = GridKind::Unsigned.qmax(c.bits);
+        fake_quant(&c.xs, c.delta, qmax, GridKind::Unsigned).iter().all(|&v| v >= 0.0)
+    });
+}
+
+#[test]
+fn prop_lp_search_beats_minmax_and_random_probe() {
+    forall(15, 60, case_gen, |c: &Case| {
+        if c.xs.iter().all(|&x| x == 0.0) {
+            return true;
+        }
+        let qmax = GridKind::Signed.qmax(c.bits);
+        let (d, e) = lp_optimal_delta(&c.xs, qmax, 2.0, GridKind::Signed, LpSearch::default());
+        if d == 0.0 {
+            return true;
+        }
+        let d_mm = minmax_delta(&c.xs, qmax, GridKind::Signed);
+        let e_mm = lp_error_sum(&c.xs, d_mm, qmax, 2.0, GridKind::Signed);
+        let e_probe = lp_error_sum(&c.xs, d * 1.37, qmax, 2.0, GridKind::Signed);
+        e <= e_mm * 1.0001 && e <= e_probe * 1.0001
+    });
+}
+
+#[test]
+fn prop_powell_reaches_quadratic_minimum() {
+    use lapq::optim::powell::{powell, PowellCfg};
+    forall(
+        16,
+        25,
+        |rng: &mut Pcg32| {
+            let n = 2 + rng.below(5) as usize;
+            rng.normal_vec(n)
+        },
+        |target: &Vec<f32>| {
+            let n = target.len();
+            let r = powell(
+                &vec![0.0; n],
+                &vec![-5.0; n],
+                &vec![5.0; n],
+                &PowellCfg { max_iter: 8, ftol: 1e-10, ..Default::default() },
+                |x| {
+                    x.iter()
+                        .zip(target)
+                        .map(|(a, &b)| (a - b.clamp(-4.9, 4.9) as f64).powi(2))
+                        .sum()
+                },
+            );
+            r.fx < 1e-2
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Pcg32, depth: u32) -> Json {
+        match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 1),
+            2 => Json::Num((rng.normal() * 100.0).round() as f64),
+            3 => Json::Str(format!("s{}\"\\\n{}", rng.below(100), rng.below(100))),
+            4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(
+        17,
+        300,
+        |rng: &mut Pcg32| vec![rng.uniform()],
+        |v: &Vec<f32>| {
+            let mut rng = Pcg32::seeded((v[0] * 1e9) as u64);
+            let j = random_json(&mut rng, 0);
+            Json::parse(&j.dump()) == Ok(j)
+        },
+    );
+}
+
+#[test]
+fn prop_histogram_mass_conserved() {
+    use lapq::quant::histogram::AbsHistogram;
+    forall(18, 200, case_gen, |c: &Case| {
+        let h = AbsHistogram::build(&c.xs, 64);
+        h.counts.iter().sum::<u64>() == c.xs.len() as u64
+    });
+}

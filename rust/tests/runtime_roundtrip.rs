@@ -1,0 +1,148 @@
+//! Integration: the Rust engine loads the AOT artifacts, creates sessions,
+//! trains, evaluates (FP32 and quantized) and collects activations — the
+//! full python-AOT → rust-PJRT bridge.
+
+use lapq::data::vision::SynthVision;
+use lapq::runtime::{EngineHandle, QuantParams};
+use lapq::tensor::init::init_params;
+use lapq::tensor::HostTensor;
+
+fn engine() -> EngineHandle {
+    EngineHandle::start_default().expect("engine boots (run `make artifacts` first)")
+}
+
+#[test]
+fn mlp3_full_roundtrip() {
+    let eng = engine();
+    let spec = eng.manifest().model("mlp3").unwrap().clone();
+    let params = init_params(&spec.params, 1);
+    let sess = eng.create_session("mlp3", params.clone()).unwrap();
+
+    // batches from the synthetic vision set, projected to 64 features
+    let data = SynthVision::new(7);
+    let (x, y) = data.batch_features(0, spec.train_batch(), 64);
+    let train_b = eng.register_batch(vec![x, y]).unwrap();
+    let (xe, ye) = data.batch_features(10_000, spec.eval_batch(), 64);
+    let eval_b = eng.register_batch(vec![xe, ye]).unwrap();
+
+    // fp32 eval baseline
+    let (loss0, correct0) = eng.eval(sess, None, eval_b).unwrap();
+    assert!(loss0.is_finite() && loss0 > 0.0);
+    assert!((0.0..=spec.eval_batch() as f32).contains(&correct0));
+
+    // train several steps: loss must drop
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        losses.push(eng.train_step(sess, train_b, 0.1).unwrap());
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] - 0.05),
+        "train loss did not drop: {losses:?}"
+    );
+
+    // params actually changed and round-trip through get/set
+    let trained = eng.get_params(sess).unwrap();
+    assert_eq!(trained.len(), params.len());
+    assert_ne!(trained[0].f(), params[0].f());
+    eng.set_params(sess, trained.clone()).unwrap();
+
+    // quantized eval with pass-through Δ == fp32 exactly
+    let n = spec.n_quant_layers();
+    let (lq, cq) = eng.eval(sess, Some(QuantParams::passthrough(n)), eval_b).unwrap();
+    let (lf, cf) = eng.eval(sess, None, eval_b).unwrap();
+    assert!((lq - lf).abs() < 1e-5, "{lq} vs {lf}");
+    assert_eq!(cq, cf);
+
+    // coarse quantization must change the loss
+    let q = QuantParams {
+        dw: vec![0.3; n],
+        qmw: vec![1.0; n], // 2-bit signed
+        da: vec![0.5; n],
+        qma: vec![3.0; n],
+    };
+    let (lcoarse, _) = eng.eval(sess, Some(q), eval_b).unwrap();
+    assert!((lcoarse - lf).abs() > 1e-3, "coarse {lcoarse} == fp32 {lf}");
+
+    // acts takes only the inputs (no labels): one tensor per quant layer
+    let (xa, _) = data.batch_features(10_000, spec.eval_batch(), 64);
+    let acts_b = eng.register_batch(vec![xa]).unwrap();
+    let acts = eng.acts(sess, acts_b).unwrap();
+    assert_eq!(acts.len(), n);
+    for a in &acts {
+        assert_eq!(a.shape[0], spec.eval_batch());
+    }
+
+    let stats = eng.stats().unwrap();
+    assert!(stats.executions >= 35);
+    assert!(stats.compiled >= 3);
+}
+
+#[test]
+fn cnn6_train_and_quant_eval() {
+    let eng = engine();
+    let spec = eng.manifest().model("cnn6").unwrap().clone();
+    let sess = eng.create_session("cnn6", init_params(&spec.params, 2)).unwrap();
+    let data = SynthVision::new(7);
+    let (x, y) = data.batch(0, spec.train_batch());
+    let tb = eng.register_batch(vec![x, y]).unwrap();
+    let l0 = eng.train_step(sess, tb, 0.05).unwrap();
+    for _ in 0..14 {
+        eng.train_step(sess, tb, 0.05).unwrap();
+    }
+    let l1 = eng.train_step(sess, tb, 0.05).unwrap();
+    assert!(l1 < l0, "{l1} !< {l0}");
+
+    let (xe, ye) = data.batch(50_000, spec.eval_batch());
+    let eb = eng.register_batch(vec![xe, ye]).unwrap();
+    let n = spec.n_quant_layers();
+    let (lq, cq) = eng.eval(sess, Some(QuantParams::passthrough(n)), eb).unwrap();
+    assert!(lq.is_finite());
+    assert!(cq >= 0.0);
+}
+
+#[test]
+fn ncf_hitrate_paths() {
+    let eng = engine();
+    let spec = eng.manifest().model("ncf").unwrap().clone();
+    let sess = eng.create_session("ncf", init_params(&spec.params, 3)).unwrap();
+    let data = lapq::data::ncf::SynthNcf::new(11, 2000, 1000, 8);
+
+    let hr_spec = &spec.input_spec["hitrate"];
+    let nb = hr_spec[0].shape[0];
+    let (u, p, negs) = data.eval_batch(0, nb);
+    let hb = eng.register_batch(vec![u, p, negs]).unwrap();
+
+    let hits = eng.hitrate(sess, None, hb).unwrap();
+    assert!((0.0..=nb as f32).contains(&hits));
+
+    let n = spec.n_quant_layers();
+    let hits_q = eng.hitrate(sess, Some(QuantParams::passthrough(n)), hb).unwrap();
+    assert_eq!(hits, hits_q);
+
+    // train a bit; BCE loss drops
+    let tb_spec = &spec.input_spec["train"];
+    let (u, i, l) = data.train_batch(0, tb_spec[0].shape[0], 4);
+    let tb = eng.register_batch(vec![u, i, l]).unwrap();
+    let l0 = eng.train_step(sess, tb, 0.5).unwrap();
+    for _ in 0..20 {
+        eng.train_step(sess, tb, 0.5).unwrap();
+    }
+    let l1 = eng.train_step(sess, tb, 0.5).unwrap();
+    assert!(l1 < l0, "{l1} !< {l0}");
+}
+
+#[test]
+fn error_paths_are_errors() {
+    let eng = engine();
+    // wrong param count
+    assert!(eng.create_session("cnn6", vec![]).is_err());
+    // wrong shape
+    let spec = eng.manifest().model("mlp3").unwrap().clone();
+    let mut params = init_params(&spec.params, 1);
+    params[0] = HostTensor::zeros(vec![2, 2]);
+    assert!(eng.create_session("mlp3", params).is_err());
+    // unknown model
+    assert!(eng.create_session("nope", vec![]).is_err());
+    // unknown session / batch ids
+    assert!(eng.train_step(999, 999, 0.1).is_err());
+}

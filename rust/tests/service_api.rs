@@ -1,0 +1,57 @@
+//! Integration: the TCP job service end-to-end — bind, serve, submit a
+//! quantization job over the wire, read the structured response.
+
+use lapq::coordinator::jobs::Runner;
+use lapq::coordinator::service::{request, Service};
+use lapq::runtime::EngineHandle;
+use lapq::util::json::Json;
+
+#[test]
+fn service_roundtrip() {
+    let eng = EngineHandle::start_default().expect("artifacts built");
+    let service = Service::bind("127.0.0.1:0").unwrap();
+    let addr = service.addr;
+
+    let server = std::thread::spawn(move || {
+        let mut runner = Runner::new(eng);
+        service.serve(&mut runner, 4).unwrap();
+    });
+
+    // ping
+    let pong = request(&addr, &Json::obj(vec![("cmd", Json::Str("ping".into()))])).unwrap();
+    assert_eq!(pong.req("ok").as_bool(), Some(true));
+    assert_eq!(pong.req("pong").as_bool(), Some(true));
+
+    // models
+    let models = request(&addr, &Json::obj(vec![("cmd", Json::Str("models".into()))])).unwrap();
+    let names: Vec<&str> =
+        models.req("models").as_arr().unwrap().iter().filter_map(|j| j.as_str()).collect();
+    assert!(names.contains(&"mlp3"));
+
+    // bad command: structured error, connection stays usable
+    let bad = request(&addr, &Json::obj(vec![("cmd", Json::Str("nope".into()))])).unwrap();
+    assert_eq!(bad.req("ok").as_bool(), Some(false));
+    assert!(bad.req("error").as_str().unwrap().contains("unknown"));
+
+    // quantize job over the wire (fast config)
+    let job = Json::obj(vec![
+        ("cmd", Json::Str("quantize".into())),
+        ("model", Json::Str("mlp3".into())),
+        ("train_steps", Json::Num(40.0)),
+        ("lr", Json::Num(0.1)),
+        ("val_size", Json::Num(512.0)),
+        ("bits_w", Json::Num(8.0)),
+        ("bits_a", Json::Num(8.0)),
+        ("method", Json::Str("mmse".into())),
+    ]);
+    let resp = request(&addr, &job).unwrap();
+    assert_eq!(resp.req("ok").as_bool(), Some(true), "{resp:?}");
+    let result = resp.req("result");
+    assert_eq!(result.req("model").as_str(), Some("mlp3"));
+    let fp32 = result.req("fp32_metric").as_f64().unwrap();
+    let quant = result.req("quant_metric").as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&fp32));
+    assert!(quant >= fp32 - 0.05, "8/8 should be near-lossless: {quant} vs {fp32}");
+
+    server.join().unwrap();
+}
