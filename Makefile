@@ -1,0 +1,37 @@
+# LAPQ workspace driver.  `make verify` is the tier-1 gate CI mirrors.
+
+CARGO ?= cargo
+
+.PHONY: build test fmt fmt-check clippy verify bench-smoke artifacts clean
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt
+
+fmt-check:
+	$(CARGO) fmt --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+# Tier-1 verify: what the CI build+test jobs run on a clean machine with
+# no Python or PJRT installed (pure-Rust CPU backend).
+verify: build test
+
+# Perf trajectory smoke: a bounded perf_hotpath run that writes
+# rust/bench_results/BENCH_hotpath.json (uploaded as a CI artifact).
+bench-smoke:
+	BENCH_SMOKE=1 $(CARGO) bench --bench perf_hotpath
+
+# Layer-1/2 AOT artifacts (optional; requires Python + JAX).  The default
+# build never needs them: the CPU backend executes the model zoo natively.
+artifacts:
+	cd python && python -m compile.aot --out ../rust/artifacts
+
+clean:
+	$(CARGO) clean

@@ -1,47 +1,79 @@
-//! Perf: the Layer-3 hot path — compiled-artifact execution latency for
-//! every entry point, objective evaluation throughput (what Powell pays
-//! per step), memoization hit rate, and train-step throughput.
-//! Feeds EXPERIMENTS.md §Perf.
+//! Perf: the Layer-3 hot path — backend execution latency for every entry
+//! point, objective evaluation throughput (what Powell pays per step),
+//! memoization hit rate, and train-step throughput.  Feeds
+//! EXPERIMENTS.md §Perf.
+//!
+//! `BENCH_SMOKE=1` runs a bounded subset (CI-sized) — either way the
+//! timings land in `bench_results/BENCH_hotpath.json` so the perf
+//! trajectory accumulates PR over PR.
 
-use lapq::benchkit::bench;
+use lapq::benchkit::{bench, Timing};
 use lapq::config::{BitSpec, ExperimentConfig};
 use lapq::coordinator::jobs::Runner;
 use lapq::lapq::objective::{grids, CalibObjective, LayerMask};
 use lapq::lapq::pipeline::layerwise_deltas;
 use lapq::runtime::EngineHandle;
+use lapq::util::json::Json;
+
+fn timing_json(t: &Timing) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(t.name.clone())),
+        ("iters", Json::Num(t.iters as f64)),
+        ("mean_s", Json::Num(t.mean_s)),
+        ("p50_s", Json::Num(t.p50_s)),
+        ("p95_s", Json::Num(t.p95_s)),
+    ])
+}
 
 fn main() -> lapq::Result<()> {
     lapq::util::logging::init();
+    let smoke_var = std::env::var("BENCH_SMOKE");
+    let smoke = matches!(smoke_var.as_deref(), Ok(v) if !v.is_empty() && v != "0");
+    let models: &[&str] =
+        if smoke { &["mlp3", "ncf"] } else { &["mlp3", "cnn6", "resmini", "ncf"] };
+    let (warmup, iters) = if smoke { (1, 3) } else { (2, 10) };
+
     let eng = EngineHandle::start_default()?;
     let mut runner = Runner::new(eng);
+    let mut timings: Vec<Timing> = Vec::new();
 
-    for model in ["mlp3", "cnn6", "resmini", "ncf"] {
+    for &model in models {
         let mut cfg = ExperimentConfig::default();
         cfg.model = model.into();
-        cfg.train_steps = 30;
+        cfg.train_steps = if smoke { 10 } else { 30 };
         cfg.bits = BitSpec::new(4, 4);
         cfg.val_size = 512;
         let spec = runner.eng.manifest().model(model)?.clone();
         let (sess, val, calib) = runner.session_with_calib(&cfg)?;
         let b0 = calib.loss_batches[0];
 
-        // raw artifact execution latencies
+        // raw entry-point execution latencies
         let eng = runner.eng.clone();
-        bench(&format!("{model}/fwd_fp32 (B={})", spec.eval_batch()), 2, 10, || {
+        let name = format!("{model}/fwd_fp32 (B={})", spec.eval_batch());
+        timings.push(bench(&name, warmup, iters, || {
             eng.eval(sess, None, b0).unwrap();
-        });
+        }));
         let mask = LayerMask::all(spec.n_quant_layers(), cfg.bits).exclude_first_last(&[]);
         let (qmw, qma) = grids(&spec, cfg.bits);
-        let mut obj = CalibObjective::new(&eng, sess, calib.loss_batches.clone(), mask.clone(), qmw.clone(), qma.clone());
+        let mut obj = CalibObjective::new(
+            &eng,
+            sess,
+            calib.loss_batches.clone(),
+            mask.clone(),
+            qmw.clone(),
+            qma.clone(),
+        );
         let (dw, da) = layerwise_deltas(&calib, &mask, &qmw, &qma, 2.0);
         let q = obj.quant_params(&dw, &da);
-        bench(&format!("{model}/fwd_quant (B={})", spec.eval_batch()), 2, 10, || {
+        let name = format!("{model}/fwd_quant (B={})", spec.eval_batch());
+        timings.push(bench(&name, warmup, iters, || {
             eng.eval(sess, Some(q.clone()), b0).unwrap();
-        });
+        }));
 
         // full objective eval (all calib batches) — Powell's unit of work
         let mut i = 0u32;
-        bench(&format!("{model}/objective ({} batches)", obj.batches.len()), 1, 10, || {
+        let name = format!("{model}/objective ({} batches)", obj.batches.len());
+        timings.push(bench(&name, 1, iters, || {
             // perturb to defeat the memo cache: measures real evals
             i += 1;
             let mut dwp = dw.clone();
@@ -49,19 +81,19 @@ fn main() -> lapq::Result<()> {
                 *v *= 1.0 + i as f32 * 1e-4;
             }
             obj.loss(&dwp, &da).unwrap();
-        });
+        }));
         // memoized objective eval (cache hit)
-        bench(&format!("{model}/objective cached"), 1, 50, || {
+        timings.push(bench(&format!("{model}/objective cached"), 1, 5 * iters, || {
             obj.loss(&dw, &da).unwrap();
-        });
+        }));
 
         // train-step throughput
         let spec_tb = spec.train_batch();
         let wl = lapq::coordinator::workload::Workload::for_model(&spec, 1)?;
         let tb = eng.register_batch(wl.train_batch(&spec, 0))?;
-        bench(&format!("{model}/train_step (B={spec_tb})"), 2, 10, || {
+        timings.push(bench(&format!("{model}/train_step (B={spec_tb})"), warmup, iters, || {
             eng.train_step(sess, tb, 0.01).unwrap();
-        });
+        }));
 
         let _ = val;
         calib.release(&eng);
@@ -70,10 +102,31 @@ fn main() -> lapq::Result<()> {
 
     let stats = runner.eng.stats()?;
     println!(
-        "\nengine totals: {} executions, {:.2}s XLA time, {:.2} ms/exec mean",
+        "\nengine totals: {} executions, {:.2}s exec time, {:.2} ms/exec mean",
         stats.executions,
         stats.exec_seconds,
         1e3 * stats.exec_seconds / stats.executions.max(1) as f64
     );
+
+    // Perf-trajectory artifact (uploaded by CI).
+    let report = Json::obj(vec![
+        ("bench", Json::Str("perf_hotpath".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("backend", Json::Str(runner.eng.backend_name().into())),
+        ("benches", Json::Arr(timings.iter().map(timing_json).collect())),
+        (
+            "engine",
+            Json::obj(vec![
+                ("executions", Json::Num(stats.executions as f64)),
+                ("compiled", Json::Num(stats.compiled as f64)),
+                ("exec_seconds", Json::Num(stats.exec_seconds)),
+            ]),
+        ),
+    ]);
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_hotpath.json");
+    std::fs::write(&path, report.dump())?;
+    println!("[json] wrote {path:?}");
     Ok(())
 }

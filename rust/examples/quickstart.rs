@@ -10,7 +10,8 @@ use lapq::runtime::EngineHandle;
 fn main() -> lapq::Result<()> {
     lapq::util::logging::init();
 
-    // 1. Boot the PJRT engine over the AOT artifacts (`make artifacts`).
+    // 1. Boot the default backend (pure-Rust CPU; PJRT with --features
+    //    xla over `make artifacts`).
     let eng = EngineHandle::start_default()?;
     let mut runner = Runner::new(eng);
 

@@ -7,7 +7,7 @@ use crate::config::{ExperimentConfig, Method};
 use crate::coordinator::jobs::Runner;
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::service::Service;
-use crate::runtime::{EngineHandle, Manifest};
+use crate::runtime::EngineHandle;
 use anyhow::{bail, Result};
 use parser::Args;
 
@@ -78,8 +78,11 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
 }
 
 fn info() -> Result<()> {
-    let manifest = Manifest::load(Manifest::default_dir())?;
-    println!("artifacts: {:?}", manifest.dir);
+    // Report the manifest of the backend that will actually execute, not
+    // whatever happens to sit on disk.
+    let eng = EngineHandle::start_default()?;
+    let manifest = eng.manifest();
+    println!("backend: {}  artifacts: {:?}", eng.backend_name(), manifest.dir);
     for (name, spec) in &manifest.models {
         println!(
             "  {name:<10} task={:<7} params={:<9} quant_layers={:<3} entries={}",

@@ -158,7 +158,7 @@ mod tests {
     use crate::runtime::Manifest;
 
     fn spec(name: &str) -> Option<ModelSpec> {
-        Manifest::load(Manifest::default_dir()).ok()?.model(name).ok().cloned()
+        Manifest::builtin().model(name).ok().cloned()
     }
 
     #[test]

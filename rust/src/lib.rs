@@ -1,23 +1,42 @@
 //! # LAPQ — Loss Aware Post-training Quantization
 //!
 //! A production-grade reproduction of *"Loss Aware Post-training
-//! Quantization"* (Nahshan et al., 2019) as a three-layer Rust + JAX +
-//! Pallas system:
+//! Quantization"* (Nahshan et al., 2019) built around a pluggable
+//! execution runtime:
 //!
-//! * **Layer 1** (build time): Pallas fake-quant / Lp-error / quant-matmul
-//!   kernels (`python/compile/kernels/`).
-//! * **Layer 2** (build time): JAX model graphs whose quantization step
-//!   sizes are *runtime inputs*, lowered once to HLO text
-//!   (`python/compile/models/`, `python/compile/aot.py`).
-//! * **Layer 3** (this crate): the coordinator — PJRT runtime, synthetic
-//!   data substrates, the LAPQ calibration pipeline (layer-wise Lp →
-//!   quadratic approximation → Powell joint optimization), the
-//!   post-training-quantization baselines it is compared against (MMSE,
-//!   ACIQ, KLD, min-max), trainer, evaluator, loss-landscape analysis and
-//!   a job service.
-//!
-//! Python never runs after `make artifacts`; the `repro` binary is
-//! self-contained.
+//! * **Runtime** (`runtime::backend`): the [`runtime::Backend`] trait
+//!   abstracts sessions, batches, `train_step`, `eval`, `hitrate` and
+//!   `acts`.  The **default backend is a pure-Rust CPU executor**
+//!   (`runtime::cpu`) that runs the builtin model zoo — `mlp3`, `cnn6`,
+//!   `dwsep`, `resmini`, `ncf` — natively: dense/conv/embedding forward,
+//!   reverse-mode gradients for training, and fake-quant with runtime Δ
+//!   vectors (paper Eq. 1).  `cargo build && cargo test` need no Python,
+//!   no PJRT and no network.
+//! * **Optional PJRT engine** (`--features xla`): executes the AOT
+//!   HLO-text artifacts produced by `python/compile/aot.py` (JAX + Pallas
+//!   kernels) through the `xla` bindings.  The workspace vendors a typed
+//!   stub of those bindings so the feature always compiles; patch in the
+//!   real crate to run it.
+//! * **Coordinator** (`coordinator`, `lapq`, `quant`, `optim`,
+//!   `analysis`): synthetic data substrates, the LAPQ calibration
+//!   pipeline (layer-wise Lp → quadratic approximation → Powell joint
+//!   optimization), the post-training-quantization baselines it is
+//!   compared against (MMSE, ACIQ, KLD, min-max), trainer, evaluator,
+//!   loss-landscape analysis and a TCP job service.
+
+// The crate is clippy-clean under `-D warnings` with these scoped
+// exceptions (numerical code indexes freely; `lapq::lapq` is deliberate).
+#![allow(unknown_lints)]
+#![allow(
+    clippy::module_inception,
+    clippy::too_many_arguments,
+    clippy::many_single_char_names,
+    clippy::needless_range_loop,
+    clippy::manual_range_contains,
+    clippy::unnecessary_map_or,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if
+)]
 
 pub mod analysis;
 pub mod benchkit;

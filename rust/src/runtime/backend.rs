@@ -1,0 +1,238 @@
+//! The pluggable execution-backend abstraction.
+//!
+//! A [`Backend`] owns model sessions (parameters + optimizer state) and
+//! registered batches, and evaluates the engine operations the
+//! coordinator needs: `create_session`, `register_batch`, `train_step`,
+//! `eval`, `hitrate`, `acts`, `stats`.  Two implementations exist:
+//!
+//! * [`super::cpu::CpuBackend`] — the default: a dependency-free pure-Rust
+//!   executor that runs the model zoo natively (dense/conv/embedding
+//!   forward + reverse-mode gradients, fake-quant per [`QuantParams`]).
+//! * The PJRT engine (`--features xla`) — executes the AOT HLO artifacts
+//!   through the `xla` bindings on a dedicated engine thread.
+//!
+//! [`EngineHandle`] is the cloneable, `Send + Sync` facade the rest of the
+//! system talks to; it delegates to whichever backend it was started
+//! with.
+
+use super::manifest::Manifest;
+use crate::tensor::HostTensor;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Session identifier (device-resident parameters + momentum).
+pub type SessionId = u64;
+
+/// Registered-batch identifier.
+pub type BatchId = u64;
+
+/// Per-layer quantization runtime parameters (the graph's dw/qmw/da/qma).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantParams {
+    pub dw: Vec<f32>,
+    pub qmw: Vec<f32>,
+    pub da: Vec<f32>,
+    pub qma: Vec<f32>,
+}
+
+impl QuantParams {
+    /// All-zero steps: every layer passes through (FP32 behaviour).
+    pub fn passthrough(n: usize) -> Self {
+        QuantParams { dw: vec![0.0; n], qmw: vec![1.0; n], da: vec![0.0; n], qma: vec![1.0; n] }
+    }
+}
+
+/// Counters for the metrics registry / perf bench.
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    /// Entry-point executions (train/eval/hitrate/acts).
+    pub executions: u64,
+    /// Distinct (model, entry) graphs instantiated/compiled.
+    pub compiled: u64,
+    pub sessions: u64,
+    pub batches: u64,
+    /// Total seconds spent executing graphs.
+    pub exec_seconds: f64,
+}
+
+/// An execution backend: the mailbox-operation surface the coordinator,
+/// LAPQ pipeline, analysis and job service are written against.
+pub trait Backend: Send + Sync {
+    /// Short name for logs and `repro info` ("cpu", "pjrt", ...).
+    fn name(&self) -> &'static str;
+
+    /// The model/ABI registry this backend executes against.
+    fn manifest(&self) -> &Manifest;
+
+    /// Create a model session owning `params` (+ zero momentum).
+    fn create_session(&self, model: &str, params: Vec<HostTensor>) -> Result<SessionId>;
+
+    fn drop_session(&self, sess: SessionId) -> Result<()>;
+
+    fn get_params(&self, sess: SessionId) -> Result<Vec<HostTensor>>;
+
+    fn set_params(&self, sess: SessionId, params: Vec<HostTensor>) -> Result<()>;
+
+    /// Register a batch for repeated use (calibration / eval sets).
+    fn register_batch(&self, batch: Vec<HostTensor>) -> Result<BatchId>;
+
+    fn drop_batch(&self, batch: BatchId) -> Result<()>;
+
+    /// One SGD-with-momentum step; updates session state, returns loss.
+    fn train_step(&self, sess: SessionId, batch: BatchId, lr: f32) -> Result<f32>;
+
+    /// Quantized (Some) or FP32 (None) forward: (mean loss, #correct).
+    fn eval(&self, sess: SessionId, quant: Option<QuantParams>, batch: BatchId)
+        -> Result<(f32, f32)>;
+
+    /// NCF hit-rate@10 hits for a (users, pos, negs) batch.
+    fn hitrate(&self, sess: SessionId, quant: Option<QuantParams>, batch: BatchId) -> Result<f32>;
+
+    /// FP32 input activations of every quant layer for a batch.
+    fn acts(&self, sess: SessionId, batch: BatchId) -> Result<Vec<HostTensor>>;
+
+    fn stats(&self) -> Result<EngineStats>;
+}
+
+/// Cloneable facade over the active [`Backend`].
+#[derive(Clone)]
+pub struct EngineHandle {
+    inner: Arc<dyn Backend>,
+}
+
+impl EngineHandle {
+    /// Wrap an explicit backend.
+    pub fn from_backend(inner: Arc<dyn Backend>) -> EngineHandle {
+        log::info!("engine: backend={}", inner.name());
+        EngineHandle { inner }
+    }
+
+    /// Boot the pure-Rust CPU backend over the builtin model zoo.
+    pub fn cpu() -> Result<EngineHandle> {
+        Ok(Self::from_backend(Arc::new(super::cpu::CpuBackend::new(Manifest::builtin()))))
+    }
+
+    /// Boot over an artifacts directory.  With the `xla` feature this
+    /// starts the PJRT engine on those artifacts; without it the CPU
+    /// backend is used (it executes the builtin zoo natively and needs no
+    /// artifacts).
+    pub fn start(artifacts_dir: impl AsRef<std::path::Path>) -> Result<EngineHandle> {
+        Self::start_impl(artifacts_dir.as_ref())
+    }
+
+    #[cfg(feature = "xla")]
+    fn start_impl(dir: &std::path::Path) -> Result<EngineHandle> {
+        let pjrt = super::handle::PjrtEngine::start(dir)?;
+        Ok(Self::from_backend(Arc::new(pjrt)))
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn start_impl(_dir: &std::path::Path) -> Result<EngineHandle> {
+        Self::cpu()
+    }
+
+    /// Boot the default backend: PJRT over [`Manifest::default_dir`] when
+    /// built with `--features xla` (falling back to CPU if the engine
+    /// cannot boot), the CPU backend otherwise.
+    pub fn start_default() -> Result<EngineHandle> {
+        #[cfg(feature = "xla")]
+        {
+            match super::handle::PjrtEngine::start(Manifest::default_dir()) {
+                Ok(pjrt) => return Ok(Self::from_backend(Arc::new(pjrt))),
+                Err(e) => {
+                    log::warn!("pjrt engine unavailable ({e:#}); falling back to cpu backend");
+                }
+            }
+        }
+        Self::cpu()
+    }
+
+    /// Name of the active backend.
+    pub fn backend_name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    /// Create a model session owning `params` (+ zero momentum).
+    pub fn create_session(&self, model: &str, params: Vec<HostTensor>) -> Result<SessionId> {
+        self.inner.create_session(model, params)
+    }
+
+    pub fn drop_session(&self, sess: SessionId) -> Result<()> {
+        self.inner.drop_session(sess)
+    }
+
+    pub fn get_params(&self, sess: SessionId) -> Result<Vec<HostTensor>> {
+        self.inner.get_params(sess)
+    }
+
+    pub fn set_params(&self, sess: SessionId, params: Vec<HostTensor>) -> Result<()> {
+        self.inner.set_params(sess, params)
+    }
+
+    /// Register a batch for repeated use (calibration / eval sets).
+    pub fn register_batch(&self, batch: Vec<HostTensor>) -> Result<BatchId> {
+        self.inner.register_batch(batch)
+    }
+
+    pub fn drop_batch(&self, batch: BatchId) -> Result<()> {
+        self.inner.drop_batch(batch)
+    }
+
+    /// One SGD-with-momentum step; updates session state, returns loss.
+    pub fn train_step(&self, sess: SessionId, batch: BatchId, lr: f32) -> Result<f32> {
+        self.inner.train_step(sess, batch, lr)
+    }
+
+    /// Quantized (Some) or FP32 (None) forward: (mean loss, #correct).
+    pub fn eval(
+        &self,
+        sess: SessionId,
+        quant: Option<QuantParams>,
+        batch: BatchId,
+    ) -> Result<(f32, f32)> {
+        self.inner.eval(sess, quant, batch)
+    }
+
+    /// NCF hit-rate@10 hits for a (users, pos, negs) batch.
+    pub fn hitrate(
+        &self,
+        sess: SessionId,
+        quant: Option<QuantParams>,
+        batch: BatchId,
+    ) -> Result<f32> {
+        self.inner.hitrate(sess, quant, batch)
+    }
+
+    /// FP32 input activations of every quant layer for a batch.
+    pub fn acts(&self, sess: SessionId, batch: BatchId) -> Result<Vec<HostTensor>> {
+        self.inner.acts(sess, batch)
+    }
+
+    pub fn stats(&self) -> Result<EngineStats> {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passthrough_shape() {
+        let q = QuantParams::passthrough(3);
+        assert_eq!(q.dw, vec![0.0; 3]);
+        assert_eq!(q.qmw, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn cpu_handle_boots_and_clones() {
+        let eng = EngineHandle::cpu().unwrap();
+        let eng2 = eng.clone();
+        assert_eq!(eng2.backend_name(), "cpu");
+        assert!(eng.manifest().models.len() >= 5);
+    }
+}

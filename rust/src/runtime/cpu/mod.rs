@@ -1,0 +1,247 @@
+//! The pure-Rust CPU reference backend: executes the builtin model zoo
+//! natively (no Python, no PJRT, no external crates).
+//!
+//! State (sessions, registered batches, counters) lives behind one mutex;
+//! the coordinator drives the engine sequentially, and heavy kernels
+//! parallelize internally across the batch dimension (`ops::par_items`),
+//! so a single in-flight execution already uses the machine — the same
+//! concurrency contract the PJRT engine documents.
+
+pub mod ops;
+pub mod zoo;
+
+use super::backend::{Backend, BatchId, EngineStats, QuantParams, SessionId};
+use super::manifest::Manifest;
+use crate::tensor::HostTensor;
+use anyhow::{bail, Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+
+struct CpuSession {
+    model: String,
+    params: Vec<HostTensor>,
+    momentum: Vec<Vec<f32>>,
+}
+
+#[derive(Default)]
+struct State {
+    sessions: HashMap<SessionId, CpuSession>,
+    batches: HashMap<BatchId, Vec<HostTensor>>,
+    next_id: u64,
+    stats: EngineStats,
+    /// Distinct (model, entry) graphs executed — the CPU analogue of the
+    /// PJRT executable cache, reported as `stats.compiled`.
+    instantiated: HashSet<(String, &'static str)>,
+}
+
+/// Dependency-free CPU execution backend over the builtin model zoo.
+pub struct CpuBackend {
+    manifest: Manifest,
+    state: Mutex<State>,
+}
+
+impl CpuBackend {
+    pub fn new(manifest: Manifest) -> CpuBackend {
+        let state = State { next_id: 1, ..Default::default() };
+        CpuBackend { manifest, state: Mutex::new(state) }
+    }
+
+    /// Lock the state, recovering from poisoning: a panic inside one
+    /// execution (e.g. a shape assert on a malformed batch) must not
+    /// brick every other session sharing the handle — sessions/batches
+    /// are plain data and stay consistent across such panics except for
+    /// the one being mutated.
+    fn state(&self) -> std::sync::MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    fn validate_params(&self, model: &str, params: &[HostTensor]) -> Result<()> {
+        let spec = self.manifest.model(model)?;
+        if params.len() != spec.params.len() {
+            bail!("expected {} params, got {}", spec.params.len(), params.len());
+        }
+        for (ts, ps) in params.iter().zip(&spec.params) {
+            if ts.shape != ps.shape {
+                bail!("param {} shape {:?} != spec {:?}", ps.name, ts.shape, ps.shape);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl State {
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    fn note_exec(&mut self, model: &str, entry: &'static str, seconds: f64) {
+        self.stats.executions += 1;
+        self.stats.exec_seconds += seconds;
+        if self.instantiated.insert((model.to_string(), entry)) {
+            self.stats.compiled += 1;
+        }
+    }
+}
+
+impl Backend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn create_session(&self, model: &str, params: Vec<HostTensor>) -> Result<SessionId> {
+        self.validate_params(model, &params)
+            .map_err(|e| e.context(format!("create_session {model}")))?;
+        let momentum = params.iter().map(|ts| vec![0.0f32; ts.len()]).collect();
+        let mut st = self.state();
+        let id = st.fresh_id();
+        st.sessions.insert(id, CpuSession { model: model.to_string(), params, momentum });
+        Ok(id)
+    }
+
+    fn drop_session(&self, sess: SessionId) -> Result<()> {
+        self.state().sessions.remove(&sess);
+        Ok(())
+    }
+
+    fn get_params(&self, sess: SessionId) -> Result<Vec<HostTensor>> {
+        let st = self.state();
+        Ok(st.sessions.get(&sess).context("unknown session")?.params.clone())
+    }
+
+    fn set_params(&self, sess: SessionId, params: Vec<HostTensor>) -> Result<()> {
+        let mut st = self.state();
+        let s = st.sessions.get_mut(&sess).context("unknown session")?;
+        self.validate_params(&s.model.clone(), &params).map_err(|e| e.context("set_params"))?;
+        s.params = params;
+        Ok(())
+    }
+
+    fn register_batch(&self, batch: Vec<HostTensor>) -> Result<BatchId> {
+        let mut st = self.state();
+        let id = st.fresh_id();
+        st.batches.insert(id, batch);
+        Ok(id)
+    }
+
+    fn drop_batch(&self, batch: BatchId) -> Result<()> {
+        self.state().batches.remove(&batch);
+        Ok(())
+    }
+
+    fn train_step(&self, sess: SessionId, batch: BatchId, lr: f32) -> Result<f32> {
+        let t0 = std::time::Instant::now();
+        let mut guard = self.state();
+        let st = &mut *guard;
+        let s = st.sessions.get_mut(&sess).context("unknown session")?;
+        let b = st.batches.get(&batch).context("unknown batch")?;
+        let spec = self.manifest.model(&s.model)?;
+        let loss = zoo::train_step(spec, &mut s.params, &mut s.momentum, b, lr)?;
+        let model = s.model.clone();
+        st.note_exec(&model, "train_step", t0.elapsed().as_secs_f64());
+        Ok(loss)
+    }
+
+    fn eval(
+        &self,
+        sess: SessionId,
+        quant: Option<QuantParams>,
+        batch: BatchId,
+    ) -> Result<(f32, f32)> {
+        let t0 = std::time::Instant::now();
+        let mut guard = self.state();
+        let st = &mut *guard;
+        let s = st.sessions.get(&sess).context("unknown session")?;
+        let b = st.batches.get(&batch).context("unknown batch")?;
+        let spec = self.manifest.model(&s.model)?;
+        let out = zoo::eval(spec, &s.params, quant.as_ref(), b)?;
+        let model = s.model.clone();
+        let entry = if quant.is_some() { "fwd_quant" } else { "fwd_fp32" };
+        st.note_exec(&model, entry, t0.elapsed().as_secs_f64());
+        Ok(out)
+    }
+
+    fn hitrate(&self, sess: SessionId, quant: Option<QuantParams>, batch: BatchId) -> Result<f32> {
+        let t0 = std::time::Instant::now();
+        let mut guard = self.state();
+        let st = &mut *guard;
+        let s = st.sessions.get(&sess).context("unknown session")?;
+        let b = st.batches.get(&batch).context("unknown batch")?;
+        let spec = self.manifest.model(&s.model)?;
+        let hits = zoo::hitrate(spec, &s.params, quant.as_ref(), b)?;
+        let model = s.model.clone();
+        let entry = if quant.is_some() { "hitrate_quant" } else { "hitrate" };
+        st.note_exec(&model, entry, t0.elapsed().as_secs_f64());
+        Ok(hits)
+    }
+
+    fn acts(&self, sess: SessionId, batch: BatchId) -> Result<Vec<HostTensor>> {
+        let t0 = std::time::Instant::now();
+        let mut guard = self.state();
+        let st = &mut *guard;
+        let s = st.sessions.get(&sess).context("unknown session")?;
+        let b = st.batches.get(&batch).context("unknown batch")?;
+        let spec = self.manifest.model(&s.model)?;
+        let out = zoo::acts(spec, &s.params, b)?;
+        let model = s.model.clone();
+        st.note_exec(&model, "acts", t0.elapsed().as_secs_f64());
+        Ok(out)
+    }
+
+    fn stats(&self) -> Result<EngineStats> {
+        let st = self.state();
+        let mut stats = st.stats.clone();
+        stats.sessions = st.sessions.len() as u64;
+        stats.batches = st.batches.len() as u64;
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::init::init_params;
+
+    fn backend() -> CpuBackend {
+        CpuBackend::new(Manifest::builtin())
+    }
+
+    #[test]
+    fn session_lifecycle_and_errors() {
+        let be = backend();
+        let spec = be.manifest().model("mlp3").unwrap().clone();
+        let params = init_params(&spec.params, 1);
+        let sess = be.create_session("mlp3", params.clone()).unwrap();
+        assert_eq!(be.get_params(sess).unwrap().len(), params.len());
+        assert!(be.create_session("nope", vec![]).is_err());
+        assert!(be.create_session("mlp3", vec![]).is_err());
+        assert!(be.get_params(999).is_err());
+        assert!(be.train_step(999, 999, 0.1).is_err());
+        be.drop_session(sess).unwrap();
+        assert!(be.get_params(sess).is_err());
+    }
+
+    #[test]
+    fn stats_track_compiled_entries() {
+        let be = backend();
+        let spec = be.manifest().model("mlp3").unwrap().clone();
+        let sess = be.create_session("mlp3", init_params(&spec.params, 2)).unwrap();
+        let data = crate::data::vision::SynthVision::new(1);
+        let (x, y) = data.batch_features(0, 32, 64);
+        let bid = be.register_batch(vec![x, y]).unwrap();
+        be.eval(sess, None, bid).unwrap();
+        be.eval(sess, None, bid).unwrap();
+        be.train_step(sess, bid, 0.05).unwrap();
+        let stats = be.stats().unwrap();
+        assert_eq!(stats.executions, 3);
+        assert_eq!(stats.compiled, 2); // fwd_fp32 + train_step
+        assert_eq!(stats.sessions, 1);
+        assert_eq!(stats.batches, 1);
+        assert!(stats.exec_seconds >= 0.0);
+    }
+}

@@ -1,0 +1,909 @@
+//! Dense tensor math + a minimal reverse-mode tape for the CPU backend.
+//!
+//! Everything is f32, row-major, shape-carrying ([`Arr`]).  The op set is
+//! exactly what the model zoo needs: matmul, bias broadcast, ReLU,
+//! SAME-padded strided/grouped conv (NHWC / HWIO), global average pool,
+//! residual add, elementwise mul, last-axis concat, embedding gather,
+//! fake-quant (mirroring `quant::quantizer`), softmax cross-entropy and
+//! BCE-with-logits.
+//!
+//! [`Tape`] records the forward graph; [`Tape::backward`] walks it in
+//! reverse accumulating gradients — only `train_step` differentiates, so
+//! fake-quant (eval-only) uses a straight-through backward.  Inner loops
+//! are written scalar-times-contiguous-row so LLVM auto-vectorizes them;
+//! batch-parallel sections use scoped threads (no external thread pool).
+
+use crate::quant::quantizer::fake_quant_one;
+use crate::quant::GridKind;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Arr {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Arr {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Arr {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Arr { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Arr {
+        let n = shape.iter().product();
+        Arr { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Arr {
+        Arr { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Scalar value of a 1-element tensor.
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on non-scalar {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// Size of the last axis (1 for scalars).
+    pub fn last_dim(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+}
+
+/// Worker-thread budget for batch-parallel sections.
+pub fn n_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// Run `f(item_index, item_slice)` over consecutive `item`-sized chunks of
+/// `data`, splitting the items across scoped threads.
+fn par_items<F>(data: &mut [f32], item: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(item > 0 && data.len() % item == 0);
+    let n = data.len() / item;
+    let threads = n_threads().min(n.max(1));
+    if threads <= 1 {
+        for (i, c) in data.chunks_mut(item).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, block) in data.chunks_mut(per * item).enumerate() {
+            let fr = &f;
+            s.spawn(move || {
+                for (j, c) in block.chunks_mut(item).enumerate() {
+                    fr(t * per + j, c);
+                }
+            });
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Matmul kernels
+// ---------------------------------------------------------------------------
+
+fn mm_row(a_row: &[f32], b: &[f32], n: usize, out_row: &mut [f32]) {
+    for (kk, &av) in a_row.iter().enumerate() {
+        if av != 0.0 {
+            let b_row = &b[kk * n..kk * n + n];
+            for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `(M,K) @ (K,N)` — parallel over rows when the work is substantial.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    if m * k * n >= (1 << 21) && n_threads() > 1 {
+        par_items(&mut out, n, |row, o| mm_row(&a[row * k..(row + 1) * k], b, n, o));
+    } else {
+        for (row, o) in out.chunks_mut(n).enumerate() {
+            mm_row(&a[row * k..(row + 1) * k], b, n, o);
+        }
+    }
+    out
+}
+
+/// `(M,N) @ (K,N)^T -> (M,K)` (gradient w.r.t. the left matmul operand).
+fn mat_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * k];
+    for mi in 0..m {
+        let a_row = &a[mi * n..(mi + 1) * n];
+        let o_row = &mut out[mi * k..(mi + 1) * k];
+        for (kk, o) in o_row.iter_mut().enumerate() {
+            let b_row = &b[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for (x, y) in a_row.iter().zip(b_row) {
+                acc += x * y;
+            }
+            *o = acc;
+        }
+    }
+    out
+}
+
+/// `(M,K)^T @ (M,N) -> (K,N)` (gradient w.r.t. the right matmul operand).
+fn mat_tn(a: &[f32], g: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; k * n];
+    for mi in 0..m {
+        let g_row = &g[mi * n..(mi + 1) * n];
+        for kk in 0..k {
+            let av = a[mi * k + kk];
+            if av != 0.0 {
+                let o_row = &mut out[kk * n..(kk + 1) * n];
+                for (o, &gv) in o_row.iter_mut().zip(g_row) {
+                    *o += av * gv;
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Convolution (NHWC x HWIO, SAME padding, stride, feature groups)
+// ---------------------------------------------------------------------------
+
+struct ConvDims {
+    n: usize,
+    h: usize,
+    w: usize,
+    ci: usize,
+    kh: usize,
+    kw: usize,
+    cpg: usize,
+    co: usize,
+    stride: usize,
+    groups: usize,
+    ho: usize,
+    wo: usize,
+    pad_t: usize,
+    pad_l: usize,
+}
+
+fn conv_dims(xs: &[usize], ws: &[usize], stride: usize, groups: usize) -> ConvDims {
+    assert_eq!(xs.len(), 4, "conv input must be NHWC, got {xs:?}");
+    assert_eq!(ws.len(), 4, "conv weight must be HWIO, got {ws:?}");
+    let (n, h, w, ci) = (xs[0], xs[1], xs[2], xs[3]);
+    let (kh, kw, cpg, co) = (ws[0], ws[1], ws[2], ws[3]);
+    assert_eq!(ci, cpg * groups, "channels {ci} != {cpg}x{groups}");
+    assert_eq!(co % groups, 0, "out channels {co} not divisible by groups {groups}");
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let pad_h = ((ho - 1) * stride + kh).saturating_sub(h);
+    let pad_w = ((wo - 1) * stride + kw).saturating_sub(w);
+    ConvDims {
+        n,
+        h,
+        w,
+        ci,
+        kh,
+        kw,
+        cpg,
+        co,
+        stride,
+        groups,
+        ho,
+        wo,
+        pad_t: pad_h / 2,
+        pad_l: pad_w / 2,
+    }
+}
+
+fn conv_fwd_img(xi: &[f32], wd: &[f32], d: &ConvDims, o: &mut [f32]) {
+    let copg = d.co / d.groups;
+    for oy in 0..d.ho {
+        for ox in 0..d.wo {
+            let obase = (oy * d.wo + ox) * d.co;
+            for ky in 0..d.kh {
+                let iy = (oy * d.stride + ky) as isize - d.pad_t as isize;
+                if iy < 0 || iy >= d.h as isize {
+                    continue;
+                }
+                for kx in 0..d.kw {
+                    let ix = (ox * d.stride + kx) as isize - d.pad_l as isize;
+                    if ix < 0 || ix >= d.w as isize {
+                        continue;
+                    }
+                    let xbase = (iy as usize * d.w + ix as usize) * d.ci;
+                    let wbase = (ky * d.kw + kx) * d.cpg * d.co;
+                    if d.groups == 1 {
+                        for ic in 0..d.ci {
+                            let xv = xi[xbase + ic];
+                            if xv != 0.0 {
+                                let w_row = &wd[wbase + ic * d.co..wbase + (ic + 1) * d.co];
+                                let o_px = &mut o[obase..obase + d.co];
+                                for (ov, &wv) in o_px.iter_mut().zip(w_row) {
+                                    *ov += xv * wv;
+                                }
+                            }
+                        }
+                    } else {
+                        for oc in 0..d.co {
+                            let g = oc / copg;
+                            let mut acc = 0.0f32;
+                            for icg in 0..d.cpg {
+                                acc += xi[xbase + g * d.cpg + icg] * wd[wbase + icg * d.co + oc];
+                            }
+                            o[obase + oc] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// SAME-padded conv forward; `x` NHWC, `w` HWIO.
+pub fn conv2d(x: &Arr, w: &Arr, stride: usize, groups: usize) -> Arr {
+    let d = conv_dims(&x.shape, &w.shape, stride, groups);
+    let mut out = Arr::zeros(vec![d.n, d.ho, d.wo, d.co]);
+    let per_x = d.h * d.w * d.ci;
+    let per_o = d.ho * d.wo * d.co;
+    let (xd, wd, dr) = (&x.data, &w.data, &d);
+    par_items(&mut out.data, per_o, |img, o| {
+        conv_fwd_img(&xd[img * per_x..(img + 1) * per_x], wd, dr, o);
+    });
+    out
+}
+
+fn conv_bwd_img(
+    xi: &[f32],
+    wd: &[f32],
+    gi: &[f32],
+    d: &ConvDims,
+    dxi: &mut [f32],
+    dwl: &mut [f32],
+) {
+    let copg = d.co / d.groups;
+    for oy in 0..d.ho {
+        for ox in 0..d.wo {
+            let gbase = (oy * d.wo + ox) * d.co;
+            for ky in 0..d.kh {
+                let iy = (oy * d.stride + ky) as isize - d.pad_t as isize;
+                if iy < 0 || iy >= d.h as isize {
+                    continue;
+                }
+                for kx in 0..d.kw {
+                    let ix = (ox * d.stride + kx) as isize - d.pad_l as isize;
+                    if ix < 0 || ix >= d.w as isize {
+                        continue;
+                    }
+                    let xbase = (iy as usize * d.w + ix as usize) * d.ci;
+                    let wbase = (ky * d.kw + kx) * d.cpg * d.co;
+                    if d.groups == 1 {
+                        let g_px = &gi[gbase..gbase + d.co];
+                        for ic in 0..d.ci {
+                            let xv = xi[xbase + ic];
+                            let w_row = &wd[wbase + ic * d.co..wbase + (ic + 1) * d.co];
+                            let dw_row = &mut dwl[wbase + ic * d.co..wbase + (ic + 1) * d.co];
+                            let mut acc_dx = 0.0f32;
+                            for oc in 0..d.co {
+                                let gv = g_px[oc];
+                                acc_dx += gv * w_row[oc];
+                                dw_row[oc] += gv * xv;
+                            }
+                            dxi[xbase + ic] += acc_dx;
+                        }
+                    } else {
+                        for oc in 0..d.co {
+                            let gv = gi[gbase + oc];
+                            if gv == 0.0 {
+                                continue;
+                            }
+                            let gq = oc / copg;
+                            for icg in 0..d.cpg {
+                                let ic = gq * d.cpg + icg;
+                                dxi[xbase + ic] += gv * wd[wbase + icg * d.co + oc];
+                                dwl[wbase + icg * d.co + oc] += gv * xi[xbase + ic];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Conv backward: gradients w.r.t. input and weights.
+pub fn conv2d_bwd(x: &Arr, w: &Arr, dy: &Arr, stride: usize, groups: usize) -> (Arr, Arr) {
+    let d = conv_dims(&x.shape, &w.shape, stride, groups);
+    let per_x = d.h * d.w * d.ci;
+    let per_y = d.ho * d.wo * d.co;
+    let dw_len = w.data.len();
+    let mut dx = Arr::zeros(x.shape.clone());
+    let threads = n_threads().min(d.n.max(1));
+    let chunk = d.n.div_ceil(threads.max(1)).max(1);
+    let (xd, wd, gd, dr) = (&x.data, &w.data, &dy.data, &d);
+    let mut partial_dw: Vec<Vec<f32>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (t, dx_block) in dx.data.chunks_mut(chunk * per_x).enumerate() {
+            handles.push(s.spawn(move || {
+                let mut dwl = vec![0.0f32; dw_len];
+                for (j, dxi) in dx_block.chunks_mut(per_x).enumerate() {
+                    let img = t * chunk + j;
+                    conv_bwd_img(
+                        &xd[img * per_x..(img + 1) * per_x],
+                        wd,
+                        &gd[img * per_y..(img + 1) * per_y],
+                        dr,
+                        dxi,
+                        &mut dwl,
+                    );
+                }
+                dwl
+            }));
+        }
+        for h in handles {
+            partial_dw.push(h.join().expect("conv backward worker panicked"));
+        }
+    });
+    let mut dw = Arr::zeros(w.shape.clone());
+    for dwl in &partial_dw {
+        for (a, b) in dw.data.iter_mut().zip(dwl) {
+            *a += b;
+        }
+    }
+    (dx, dw)
+}
+
+// ---------------------------------------------------------------------------
+// Losses / metrics (forward parts; backward lives in Tape::backward)
+// ---------------------------------------------------------------------------
+
+/// Mean softmax cross-entropy of `(B,C)` logits against int labels.
+pub fn softmax_xent(logits: &Arr, labels: &[i32]) -> f32 {
+    let c = logits.last_dim();
+    let b = logits.numel() / c;
+    assert_eq!(labels.len(), b);
+    let mut acc = 0.0f64;
+    for (r, &y) in labels.iter().enumerate() {
+        let row = &logits.data[r * c..(r + 1) * c];
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let sum: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+        acc += (sum.ln() + mx - row[y as usize]) as f64;
+    }
+    (acc / b as f64) as f32
+}
+
+/// Count of rows whose argmax equals the label (first max wins, like
+/// `jnp.argmax`).
+pub fn argmax_correct(logits: &Arr, labels: &[i32]) -> f32 {
+    let c = logits.last_dim();
+    let b = logits.numel() / c;
+    let mut good = 0u32;
+    for (r, &y) in labels.iter().enumerate() {
+        let row = &logits.data[r * c..(r + 1) * c];
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        if best == y as usize {
+            good += 1;
+        }
+    }
+    good as f32
+}
+
+/// Numerically stable mean binary cross-entropy with logits.
+pub fn bce_logits(logits: &Arr, labels: &[f32]) -> f32 {
+    assert_eq!(logits.numel(), labels.len());
+    let mut acc = 0.0f64;
+    for (&z, &y) in logits.data.iter().zip(labels) {
+        acc += (z.max(0.0) - z * y + (-z.abs()).exp().ln_1p()) as f64;
+    }
+    (acc / labels.len().max(1) as f64) as f32
+}
+
+/// Count of `(logit > 0) == label` agreements.
+pub fn bce_correct(logits: &Arr, labels: &[f32]) -> f32 {
+    logits
+        .data
+        .iter()
+        .zip(labels)
+        .filter(|(&z, &y)| (z > 0.0) == (y > 0.5))
+        .count() as f32
+}
+
+// ---------------------------------------------------------------------------
+// The tape
+// ---------------------------------------------------------------------------
+
+/// Handle to a tape node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Var(pub usize);
+
+enum Op {
+    Leaf,
+    Matmul(Var, Var),
+    AddBias(Var, Var),
+    Relu(Var),
+    Conv { x: Var, w: Var, stride: usize, groups: usize },
+    Gap(Var),
+    Add(Var, Var),
+    Mul(Var, Var),
+    Concat(Var, Var),
+    Embed { table: Var, idx: Vec<i32> },
+    FakeQuant(Var),
+    SoftmaxXent { logits: Var, labels: Vec<i32> },
+    BceLogits { logits: Var, labels: Vec<f32> },
+}
+
+struct Node {
+    val: Arr,
+    op: Op,
+}
+
+/// Forward-recording tape with reverse-mode gradients.
+#[derive(Default)]
+pub struct Tape {
+    nodes: Vec<Node>,
+}
+
+impl Tape {
+    pub fn new() -> Tape {
+        Tape { nodes: Vec::new() }
+    }
+
+    fn push(&mut self, val: Arr, op: Op) -> Var {
+        self.nodes.push(Node { val, op });
+        Var(self.nodes.len() - 1)
+    }
+
+    /// Value of a node.
+    pub fn val(&self, v: Var) -> &Arr {
+        &self.nodes[v.0].val
+    }
+
+    pub fn leaf(&mut self, val: Arr) -> Var {
+        self.push(val, Op::Leaf)
+    }
+
+    /// `(M,K) @ (K,N)`.
+    pub fn matmul(&mut self, a: Var, b: Var) -> Var {
+        let (av, bv) = (&self.nodes[a.0].val, &self.nodes[b.0].val);
+        assert_eq!(av.shape.len(), 2, "matmul lhs {:?}", av.shape);
+        assert_eq!(bv.shape.len(), 2, "matmul rhs {:?}", bv.shape);
+        assert_eq!(av.shape[1], bv.shape[0], "matmul {:?} x {:?}", av.shape, bv.shape);
+        let (m, k, n) = (av.shape[0], av.shape[1], bv.shape[1]);
+        let out = Arr::new(vec![m, n], matmul(&av.data, &bv.data, m, k, n));
+        self.push(out, Op::Matmul(a, b))
+    }
+
+    /// Broadcast-add a `(C,)` bias over the last axis.
+    pub fn add_bias(&mut self, x: Var, b: Var) -> Var {
+        let (xv, bv) = (&self.nodes[x.0].val, &self.nodes[b.0].val);
+        let c = xv.last_dim();
+        assert_eq!(bv.numel(), c, "bias {:?} vs x {:?}", bv.shape, xv.shape);
+        let mut out = xv.clone();
+        for row in out.data.chunks_mut(c) {
+            for (o, &add) in row.iter_mut().zip(&bv.data) {
+                *o += add;
+            }
+        }
+        self.push(out, Op::AddBias(x, b))
+    }
+
+    pub fn relu(&mut self, x: Var) -> Var {
+        let xv = &self.nodes[x.0].val;
+        let out = Arr::new(xv.shape.clone(), xv.data.iter().map(|&v| v.max(0.0)).collect());
+        self.push(out, Op::Relu(x))
+    }
+
+    /// SAME-padded NHWC/HWIO conv.
+    pub fn conv(&mut self, x: Var, w: Var, stride: usize, groups: usize) -> Var {
+        let out = conv2d(&self.nodes[x.0].val, &self.nodes[w.0].val, stride, groups);
+        self.push(out, Op::Conv { x, w, stride, groups })
+    }
+
+    /// Global average pool `(N,H,W,C) -> (N,C)`.
+    pub fn gap(&mut self, x: Var) -> Var {
+        let xv = &self.nodes[x.0].val;
+        assert_eq!(xv.shape.len(), 4, "gap input {:?}", xv.shape);
+        let (n, h, w, c) = (xv.shape[0], xv.shape[1], xv.shape[2], xv.shape[3]);
+        let inv = 1.0 / (h * w) as f32;
+        let mut out = Arr::zeros(vec![n, c]);
+        for img in 0..n {
+            let o_row = &mut out.data[img * c..(img + 1) * c];
+            for px in xv.data[img * h * w * c..(img + 1) * h * w * c].chunks(c) {
+                for (o, &v) in o_row.iter_mut().zip(px) {
+                    *o += v * inv;
+                }
+            }
+        }
+        self.push(out, Op::Gap(x))
+    }
+
+    /// Elementwise sum of same-shape tensors (residual connections).
+    pub fn add(&mut self, a: Var, b: Var) -> Var {
+        let (av, bv) = (&self.nodes[a.0].val, &self.nodes[b.0].val);
+        assert_eq!(av.shape, bv.shape, "add {:?} vs {:?}", av.shape, bv.shape);
+        let data = av.data.iter().zip(&bv.data).map(|(x, y)| x + y).collect();
+        let out = Arr::new(av.shape.clone(), data);
+        self.push(out, Op::Add(a, b))
+    }
+
+    /// Elementwise product of same-shape tensors (GMF interaction).
+    pub fn mul(&mut self, a: Var, b: Var) -> Var {
+        let (av, bv) = (&self.nodes[a.0].val, &self.nodes[b.0].val);
+        assert_eq!(av.shape, bv.shape, "mul {:?} vs {:?}", av.shape, bv.shape);
+        let data = av.data.iter().zip(&bv.data).map(|(x, y)| x * y).collect();
+        let out = Arr::new(av.shape.clone(), data);
+        self.push(out, Op::Mul(a, b))
+    }
+
+    /// Concatenate two `(R,Ca)` / `(R,Cb)` tensors along the last axis.
+    pub fn concat(&mut self, a: Var, b: Var) -> Var {
+        let (av, bv) = (&self.nodes[a.0].val, &self.nodes[b.0].val);
+        let (ca, cb) = (av.last_dim(), bv.last_dim());
+        let r = av.numel() / ca;
+        assert_eq!(r, bv.numel() / cb, "concat rows {:?} vs {:?}", av.shape, bv.shape);
+        let mut data = Vec::with_capacity(r * (ca + cb));
+        for row in 0..r {
+            data.extend_from_slice(&av.data[row * ca..(row + 1) * ca]);
+            data.extend_from_slice(&bv.data[row * cb..(row + 1) * cb]);
+        }
+        let out = Arr::new(vec![r, ca + cb], data);
+        self.push(out, Op::Concat(a, b))
+    }
+
+    /// Gather rows of a `(V,D)` table: `out[r] = table[idx[r]]`.
+    pub fn embed(&mut self, table: Var, idx: &[i32]) -> Var {
+        let tv = &self.nodes[table.0].val;
+        assert_eq!(tv.shape.len(), 2, "embed table {:?}", tv.shape);
+        let (v, d) = (tv.shape[0], tv.shape[1]);
+        let mut data = Vec::with_capacity(idx.len() * d);
+        for &i in idx {
+            let i = i as usize;
+            assert!(i < v, "embedding index {i} out of range {v}");
+            data.extend_from_slice(&tv.data[i * d..(i + 1) * d]);
+        }
+        let out = Arr::new(vec![idx.len(), d], data);
+        self.push(out, Op::Embed { table, idx: idx.to_vec() })
+    }
+
+    /// Quantize-dequantize (paper Eq. 1); bit-exact with
+    /// `quant::quantizer::fake_quant`.  Backward is straight-through.
+    pub fn fake_quant(&mut self, x: Var, delta: f32, qmax: f32, kind: GridKind) -> Var {
+        let xv = &self.nodes[x.0].val;
+        let data = xv.data.iter().map(|&v| fake_quant_one(v, delta, qmax, kind)).collect();
+        let out = Arr::new(xv.shape.clone(), data);
+        self.push(out, Op::FakeQuant(x))
+    }
+
+    /// Mean softmax cross-entropy scalar.
+    pub fn softmax_xent(&mut self, logits: Var, labels: &[i32]) -> Var {
+        let loss = softmax_xent(&self.nodes[logits.0].val, labels);
+        self.push(Arr::scalar(loss), Op::SoftmaxXent { logits, labels: labels.to_vec() })
+    }
+
+    /// Mean BCE-with-logits scalar.
+    pub fn bce_logits(&mut self, logits: Var, labels: &[f32]) -> Var {
+        let loss = bce_logits(&self.nodes[logits.0].val, labels);
+        self.push(Arr::scalar(loss), Op::BceLogits { logits, labels: labels.to_vec() })
+    }
+
+    /// Reverse-mode sweep from scalar `root`; returns one gradient slot per
+    /// node (leaves keep theirs, interior grads are consumed).
+    pub fn backward(&self, root: Var) -> Vec<Option<Arr>> {
+        let mut grads: Vec<Option<Arr>> = Vec::with_capacity(self.nodes.len());
+        grads.resize_with(self.nodes.len(), || None);
+        grads[root.0] = Some(Arr::scalar(1.0));
+        for i in (0..self.nodes.len()).rev() {
+            if matches!(self.nodes[i].op, Op::Leaf) {
+                continue;
+            }
+            let Some(g) = grads[i].take() else { continue };
+            match &self.nodes[i].op {
+                Op::Leaf => {}
+                Op::Matmul(a, b) => {
+                    let (av, bv) = (&self.nodes[a.0].val, &self.nodes[b.0].val);
+                    let (m, k, n) = (av.shape[0], av.shape[1], bv.shape[1]);
+                    let da = mat_nt(&g.data, &bv.data, m, n, k);
+                    let db = mat_tn(&av.data, &g.data, m, k, n);
+                    acc(&mut grads, *a, Arr::new(av.shape.clone(), da));
+                    acc(&mut grads, *b, Arr::new(bv.shape.clone(), db));
+                }
+                Op::AddBias(x, b) => {
+                    let bv = &self.nodes[b.0].val;
+                    let c = bv.numel();
+                    let mut db = vec![0.0f32; c];
+                    for row in g.data.chunks(c) {
+                        for (o, &gv) in db.iter_mut().zip(row) {
+                            *o += gv;
+                        }
+                    }
+                    acc(&mut grads, *b, Arr::new(bv.shape.clone(), db));
+                    acc(&mut grads, *x, g);
+                }
+                Op::Relu(x) => {
+                    let yv = &self.nodes[i].val;
+                    let data =
+                        g.data.iter().zip(&yv.data).map(|(&gv, &y)| if y > 0.0 { gv } else { 0.0 });
+                    acc(&mut grads, *x, Arr::new(yv.shape.clone(), data.collect()));
+                }
+                Op::Conv { x, w, stride, groups } => {
+                    let (xv, wv) = (&self.nodes[x.0].val, &self.nodes[w.0].val);
+                    let (dx, dw) = conv2d_bwd(xv, wv, &g, *stride, *groups);
+                    acc(&mut grads, *x, dx);
+                    acc(&mut grads, *w, dw);
+                }
+                Op::Gap(x) => {
+                    let xv = &self.nodes[x.0].val;
+                    let (n, h, w, c) = (xv.shape[0], xv.shape[1], xv.shape[2], xv.shape[3]);
+                    let inv = 1.0 / (h * w) as f32;
+                    let mut dx = Arr::zeros(xv.shape.clone());
+                    for img in 0..n {
+                        let g_row = &g.data[img * c..(img + 1) * c];
+                        for px in dx.data[img * h * w * c..(img + 1) * h * w * c].chunks_mut(c) {
+                            for (o, &gv) in px.iter_mut().zip(g_row) {
+                                *o += gv * inv;
+                            }
+                        }
+                    }
+                    acc(&mut grads, *x, dx);
+                }
+                Op::Add(a, b) => {
+                    acc(&mut grads, *a, g.clone());
+                    acc(&mut grads, *b, g);
+                }
+                Op::Mul(a, b) => {
+                    let (av, bv) = (&self.nodes[a.0].val, &self.nodes[b.0].val);
+                    let da = g.data.iter().zip(&bv.data).map(|(gv, bvv)| gv * bvv).collect();
+                    let db = g.data.iter().zip(&av.data).map(|(gv, avv)| gv * avv).collect();
+                    acc(&mut grads, *a, Arr::new(av.shape.clone(), da));
+                    acc(&mut grads, *b, Arr::new(bv.shape.clone(), db));
+                }
+                Op::Concat(a, b) => {
+                    let (av, bv) = (&self.nodes[a.0].val, &self.nodes[b.0].val);
+                    let (ca, cb) = (av.last_dim(), bv.last_dim());
+                    let r = av.numel() / ca;
+                    let mut da = Vec::with_capacity(r * ca);
+                    let mut db = Vec::with_capacity(r * cb);
+                    for row in g.data.chunks(ca + cb) {
+                        da.extend_from_slice(&row[..ca]);
+                        db.extend_from_slice(&row[ca..]);
+                    }
+                    acc(&mut grads, *a, Arr::new(av.shape.clone(), da));
+                    acc(&mut grads, *b, Arr::new(bv.shape.clone(), db));
+                }
+                Op::Embed { table, idx } => {
+                    let tv = &self.nodes[table.0].val;
+                    let d = tv.shape[1];
+                    let mut dt = Arr::zeros(tv.shape.clone());
+                    for (r, &i) in idx.iter().enumerate() {
+                        let dst = &mut dt.data[i as usize * d..(i as usize + 1) * d];
+                        for (o, &gv) in dst.iter_mut().zip(&g.data[r * d..(r + 1) * d]) {
+                            *o += gv;
+                        }
+                    }
+                    acc(&mut grads, *table, dt);
+                }
+                Op::FakeQuant(x) => {
+                    // Straight-through estimator; only reachable if a
+                    // quantized graph is ever differentiated.
+                    acc(&mut grads, *x, g);
+                }
+                Op::SoftmaxXent { logits, labels } => {
+                    let lv = &self.nodes[logits.0].val;
+                    let c = lv.last_dim();
+                    let b = lv.numel() / c;
+                    let scale = g.item() / b as f32;
+                    let mut dl = Arr::zeros(lv.shape.clone());
+                    for (r, &y) in labels.iter().enumerate() {
+                        let row = &lv.data[r * c..(r + 1) * c];
+                        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                        let sum: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+                        let d_row = &mut dl.data[r * c..(r + 1) * c];
+                        for (j, o) in d_row.iter_mut().enumerate() {
+                            let p = (row[j] - mx).exp() / sum;
+                            let onehot = if j == y as usize { 1.0 } else { 0.0 };
+                            *o = (p - onehot) * scale;
+                        }
+                    }
+                    acc(&mut grads, *logits, dl);
+                }
+                Op::BceLogits { logits, labels } => {
+                    let lv = &self.nodes[logits.0].val;
+                    let scale = g.item() / labels.len().max(1) as f32;
+                    let data = lv
+                        .data
+                        .iter()
+                        .zip(labels)
+                        .map(|(&z, &y)| (sigmoid(z) - y) * scale)
+                        .collect();
+                    acc(&mut grads, *logits, Arr::new(lv.shape.clone(), data));
+                }
+            }
+        }
+        grads
+    }
+}
+
+fn sigmoid(z: f32) -> f32 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+fn acc(grads: &mut [Option<Arr>], v: Var, g: Arr) {
+    match &mut grads[v.0] {
+        Some(cur) => {
+            debug_assert_eq!(cur.shape, g.shape);
+            for (a, b) in cur.data.iter_mut().zip(&g.data) {
+                *a += b;
+            }
+        }
+        slot => *slot = Some(g),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finite_diff(mut f: impl FnMut(&[f32]) -> f32, x: &[f32], eps: f32) -> Vec<f32> {
+        let mut g = Vec::with_capacity(x.len());
+        for i in 0..x.len() {
+            let mut xp = x.to_vec();
+            xp[i] += eps;
+            let fp = f(&xp);
+            xp[i] -= 2.0 * eps;
+            let fm = f(&xp);
+            g.push((fp - fm) / (2.0 * eps));
+        }
+        g
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "[{i}] {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_small() {
+        // (2,3) x (3,2)
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let c = matmul(&a, &b, 2, 3, 2);
+        assert_eq!(c, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn dense_grads_match_finite_diff() {
+        let xs = [0.5, -1.0, 2.0, 0.3, -0.7, 1.1];
+        let ws = [0.2, -0.4, 0.9, 0.1, -0.3, 0.8];
+        let bs = [0.05, -0.02];
+        let labels = [1i32, 0];
+        let run = |x: &[f32], w: &[f32], b: &[f32]| -> (f32, Vec<Option<Arr>>, Var, Var, Var) {
+            let mut t = Tape::new();
+            let xv = t.leaf(Arr::new(vec![2, 3], x.to_vec()));
+            let wv = t.leaf(Arr::new(vec![3, 2], w.to_vec()));
+            let bv = t.leaf(Arr::new(vec![2], b.to_vec()));
+            let mm = t.matmul(xv, wv);
+            let z = t.add_bias(mm, bv);
+            let h = t.relu(z);
+            let loss = t.softmax_xent(h, &labels);
+            let l = t.val(loss).item();
+            let g = t.backward(loss);
+            (l, g, xv, wv, bv)
+        };
+        let (_, g, xv, wv, bv) = run(&xs, &ws, &bs);
+        let num_w = finite_diff(|w| run(&xs, w, &bs).0, &ws, 1e-3);
+        assert_close(&g[wv.0].as_ref().unwrap().data, &num_w, 2e-2);
+        let num_x = finite_diff(|x| run(x, &ws, &bs).0, &xs, 1e-3);
+        assert_close(&g[xv.0].as_ref().unwrap().data, &num_x, 2e-2);
+        let num_b = finite_diff(|b| run(&xs, &ws, b).0, &bs, 1e-3);
+        assert_close(&g[bv.0].as_ref().unwrap().data, &num_b, 2e-2);
+    }
+
+    #[test]
+    fn conv_grads_match_finite_diff() {
+        // 1 image 4x4x2, 3x3 kernel to 3 channels, stride 2
+        let mut rngx = crate::util::rng::Pcg32::seeded(1);
+        let x: Vec<f32> = (0..32).map(|_| rngx.normal()).collect();
+        let w: Vec<f32> = (0..54).map(|_| rngx.normal() * 0.5).collect();
+        let labels = [2i32];
+        let run = |x: &[f32], w: &[f32]| -> (f32, Vec<Option<Arr>>, Var, Var) {
+            let mut t = Tape::new();
+            let xv = t.leaf(Arr::new(vec![1, 4, 4, 2], x.to_vec()));
+            let wv = t.leaf(Arr::new(vec![3, 3, 2, 3], w.to_vec()));
+            let y = t.conv(xv, wv, 2, 1);
+            let p = t.gap(y);
+            let loss = t.softmax_xent(p, &labels);
+            let l = t.val(loss).item();
+            let g = t.backward(loss);
+            (l, g, xv, wv)
+        };
+        let (_, g, xv, wv) = run(&x, &w);
+        let num_w = finite_diff(|wp| run(&x, wp).0, &w, 1e-3);
+        assert_close(&g[wv.0].as_ref().unwrap().data, &num_w, 3e-2);
+        let num_x = finite_diff(|xp| run(xp, &w).0, &x, 1e-3);
+        assert_close(&g[xv.0].as_ref().unwrap().data, &num_x, 3e-2);
+    }
+
+    #[test]
+    fn grouped_conv_matches_manual_depthwise() {
+        // depthwise 2-channel 1x1-image: out[c] = x[c] * w[c]
+        let x = Arr::new(vec![1, 1, 1, 2], vec![3.0, 5.0]);
+        let w = Arr::new(vec![1, 1, 1, 2], vec![2.0, -1.0]);
+        let y = conv2d(&x, &w, 1, 2);
+        assert_eq!(y.shape, vec![1, 1, 1, 2]);
+        assert_eq!(y.data, vec![6.0, -5.0]);
+    }
+
+    #[test]
+    fn same_padding_shapes() {
+        let x = Arr::zeros(vec![2, 32, 32, 3]);
+        let w = Arr::zeros(vec![3, 3, 3, 16]);
+        assert_eq!(conv2d(&x, &w, 1, 1).shape, vec![2, 32, 32, 16]);
+        assert_eq!(conv2d(&x, &w, 2, 1).shape, vec![2, 16, 16, 16]);
+    }
+
+    #[test]
+    fn embed_mul_concat_bce_grads() {
+        let table = [0.1f32, -0.2, 0.3, 0.4, -0.5, 0.6];
+        let idx = [2i32, 0];
+        let labels = [1.0f32, 0.0];
+        let run = |tb: &[f32]| -> (f32, Vec<Option<Arr>>, Var) {
+            let mut t = Tape::new();
+            let tv = t.leaf(Arr::new(vec![3, 2], tb.to_vec()));
+            let e1 = t.embed(tv, &idx);
+            let e2 = t.embed(tv, &[1, 1]);
+            let m = t.mul(e1, e2);
+            let cat = t.concat(m, e1);
+            let wv = t.leaf(Arr::new(vec![4, 1], vec![0.3, -0.2, 0.5, 0.7]));
+            let z = t.matmul(cat, wv);
+            let loss = t.bce_logits(z, &labels);
+            let l = t.val(loss).item();
+            let g = t.backward(loss);
+            (l, g, tv)
+        };
+        let (_, g, tv) = run(&table);
+        let num = finite_diff(|tb| run(tb).0, &table, 1e-3);
+        assert_close(&g[tv.0].as_ref().unwrap().data, &num, 2e-2);
+    }
+
+    #[test]
+    fn fake_quant_matches_reference() {
+        let mut t = Tape::new();
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.13).collect();
+        let x = t.leaf(Arr::new(vec![64], xs.clone()));
+        let q = t.fake_quant(x, 0.25, 7.0, GridKind::Signed);
+        let reference = crate::quant::quantizer::fake_quant(&xs, 0.25, 7.0, GridKind::Signed);
+        assert_eq!(t.val(q).data, reference);
+    }
+
+    #[test]
+    fn losses_sane() {
+        let logits = Arr::new(vec![2, 3], vec![5.0, 0.0, 0.0, 0.0, 5.0, 0.0]);
+        let loss = softmax_xent(&logits, &[0, 1]);
+        assert!(loss < 0.05, "{loss}");
+        assert_eq!(argmax_correct(&logits, &[0, 1]), 2.0);
+        assert_eq!(argmax_correct(&logits, &[1, 1]), 1.0);
+        let z = Arr::new(vec![2], vec![10.0, -10.0]);
+        assert!(bce_logits(&z, &[1.0, 0.0]) < 1e-3);
+        assert_eq!(bce_correct(&z, &[1.0, 1.0]), 1.0);
+    }
+}

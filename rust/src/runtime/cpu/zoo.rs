@@ -1,0 +1,830 @@
+//! The builtin model zoo: Rust-native definitions of the five paper
+//! stand-ins (`mlp3`, `cnn6`, `dwsep`, `resmini`, `ncf`) — both their
+//! [`ModelSpec`] metadata (mirroring `python/compile/models/*.py` and the
+//! manifest fragments `aot.py` emits) and their executable graphs on the
+//! CPU tape.
+//!
+//! Entry-point semantics match the AOT artifacts:
+//!
+//! * `train_step` — FP32 forward/backward + SGD-with-momentum update
+//!   (momentum 0.9, weight decay 1e-4), returns the pre-update loss.
+//! * `fwd_quant` / `fwd_fp32` — (mean loss, #correct) under optional
+//!   fake-quant with runtime Δ vectors.
+//! * `acts` — FP32 input activation of every quant layer.
+//! * `hitrate` / `hitrate_quant` — NCF mlperf hit-rate@10 hits.
+
+use super::ops::{argmax_correct, bce_correct, Arr, Tape, Var};
+use crate::quant::GridKind;
+use crate::runtime::backend::QuantParams;
+use crate::runtime::manifest::{
+    EntrySpec, ModelSpec, ParamSpec, QuantLayerSpec, TensorSpec, BUILTIN_DIR,
+};
+use crate::tensor::{Data, HostTensor};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// SGD hyper-parameters baked into the `train_step` graph (matching
+/// `make_train_step` in `python/compile/models/common.py`).
+const MOMENTUM: f32 = 0.9;
+const WEIGHT_DECAY: f32 = 1e-4;
+
+// ---------------------------------------------------------------------------
+// Builtin ModelSpecs
+// ---------------------------------------------------------------------------
+
+fn p(name: &str, shape: &[usize], init: &str, fan_in: usize) -> ParamSpec {
+    ParamSpec { name: name.into(), shape: shape.to_vec(), init: init.into(), fan_in }
+}
+
+fn q(name: &str, weight_param: usize, act_signed: bool, kind: &str) -> QuantLayerSpec {
+    QuantLayerSpec { name: name.into(), weight_param, act_signed, kind: kind.into() }
+}
+
+fn t(name: &str, shape: &[usize], dtype: &str) -> TensorSpec {
+    TensorSpec { name: name.into(), shape: shape.to_vec(), dtype: dtype.into() }
+}
+
+/// Assemble a [`ModelSpec`] with the same entry table / argument counts
+/// `aot.py` would write for it.
+fn finish(
+    name: &str,
+    task: &str,
+    params: Vec<ParamSpec>,
+    quant_layers: Vec<QuantLayerSpec>,
+    input_spec: BTreeMap<String, Vec<TensorSpec>>,
+    act_shapes: Vec<Vec<usize>>,
+) -> ModelSpec {
+    let n = params.len();
+    let scalar = (Vec::new(), "f32".to_string());
+    let param_outputs: Vec<(Vec<usize>, String)> =
+        params.iter().map(|ps| (ps.shape.clone(), "f32".to_string())).collect();
+    let n_in = |entry: &str| input_spec[entry].len();
+    let mut entries = BTreeMap::new();
+    let mut train_outputs = param_outputs.clone();
+    train_outputs.extend(param_outputs.clone());
+    train_outputs.push(scalar.clone());
+    entries.insert(
+        "train_step".to_string(),
+        EntrySpec {
+            file: BUILTIN_DIR.into(),
+            n_args: 2 * n + n_in("train") + 1,
+            outputs: train_outputs,
+        },
+    );
+    entries.insert(
+        "fwd_quant".to_string(),
+        EntrySpec {
+            file: BUILTIN_DIR.into(),
+            n_args: n + 4 + n_in("eval"),
+            outputs: vec![scalar.clone(), scalar.clone()],
+        },
+    );
+    entries.insert(
+        "fwd_fp32".to_string(),
+        EntrySpec {
+            file: BUILTIN_DIR.into(),
+            n_args: n + n_in("eval"),
+            outputs: vec![scalar.clone(), scalar.clone()],
+        },
+    );
+    let acts_inputs = if task == "ncf" { 2 } else { 1 };
+    entries.insert(
+        "acts".to_string(),
+        EntrySpec {
+            file: BUILTIN_DIR.into(),
+            n_args: n + acts_inputs,
+            outputs: act_shapes.into_iter().map(|s| (s, "f32".to_string())).collect(),
+        },
+    );
+    if task == "ncf" {
+        entries.insert(
+            "hitrate".to_string(),
+            EntrySpec {
+                file: BUILTIN_DIR.into(),
+                n_args: n + n_in("hitrate"),
+                outputs: vec![scalar.clone()],
+            },
+        );
+        entries.insert(
+            "hitrate_quant".to_string(),
+            EntrySpec {
+                file: BUILTIN_DIR.into(),
+                n_args: n + 4 + n_in("hitrate"),
+                outputs: vec![scalar],
+            },
+        );
+    }
+    ModelSpec { name: name.into(), task: task.into(), params, quant_layers, entries, input_spec }
+}
+
+fn mlp3() -> ModelSpec {
+    let (d_in, h1, h2, classes) = (64, 128, 96, 16);
+    let params = vec![
+        p("fc1_w", &[d_in, h1], "he", d_in),
+        p("fc1_b", &[h1], "zeros", 0),
+        p("fc2_w", &[h1, h2], "he", h1),
+        p("fc2_b", &[h2], "zeros", 0),
+        p("fc3_w", &[h2, classes], "glorot", h2),
+        p("fc3_b", &[classes], "zeros", 0),
+    ];
+    let quant = vec![
+        q("fc1", 0, true, "dense"),
+        q("fc2", 2, false, "dense"),
+        q("fc3", 4, false, "dense"),
+    ];
+    let mut input_spec = BTreeMap::new();
+    input_spec
+        .insert("train".into(), vec![t("x", &[128, d_in], "f32"), t("y", &[128], "i32")]);
+    input_spec
+        .insert("eval".into(), vec![t("x", &[512, d_in], "f32"), t("y", &[512], "i32")]);
+    let acts = vec![vec![512, d_in], vec![512, h1], vec![512, h2]];
+    finish("mlp3", "vision", params, quant, input_spec, acts)
+}
+
+fn cnn6() -> ModelSpec {
+    let params = vec![
+        p("conv1_w", &[3, 3, 3, 16], "he", 27),
+        p("conv1_b", &[16], "zeros", 0),
+        p("conv2_w", &[3, 3, 16, 32], "he", 144),
+        p("conv2_b", &[32], "zeros", 0),
+        p("conv3_w", &[3, 3, 32, 32], "he", 288),
+        p("conv3_b", &[32], "zeros", 0),
+        p("conv4_w", &[3, 3, 32, 64], "he", 288),
+        p("conv4_b", &[64], "zeros", 0),
+        p("conv5_w", &[3, 3, 64, 64], "he", 576),
+        p("conv5_b", &[64], "zeros", 0),
+        p("fc_w", &[64, 10], "glorot", 64),
+        p("fc_b", &[10], "zeros", 0),
+    ];
+    let quant = vec![
+        q("conv1", 0, true, "conv"),
+        q("conv2", 2, false, "conv"),
+        q("conv3", 4, false, "conv"),
+        q("conv4", 6, false, "conv"),
+        q("conv5", 8, false, "conv"),
+        q("fc", 10, false, "dense"),
+    ];
+    let mut input_spec = BTreeMap::new();
+    input_spec
+        .insert("train".into(), vec![t("x", &[128, 32, 32, 3], "f32"), t("y", &[128], "i32")]);
+    input_spec
+        .insert("eval".into(), vec![t("x", &[256, 32, 32, 3], "f32"), t("y", &[256], "i32")]);
+    let b = 256;
+    let acts = vec![
+        vec![b, 32, 32, 3],
+        vec![b, 32, 32, 16],
+        vec![b, 16, 16, 32],
+        vec![b, 16, 16, 32],
+        vec![b, 8, 8, 64],
+        vec![b, 64],
+    ];
+    finish("cnn6", "vision", params, quant, input_spec, acts)
+}
+
+fn dwsep() -> ModelSpec {
+    let params = vec![
+        p("stem_w", &[3, 3, 3, 16], "he", 27),
+        p("stem_b", &[16], "zeros", 0),
+        p("dw1_w", &[3, 3, 1, 16], "he", 9),
+        p("dw1_b", &[16], "zeros", 0),
+        p("pw1_w", &[1, 1, 16, 32], "he", 16),
+        p("pw1_b", &[32], "zeros", 0),
+        p("dw2_w", &[3, 3, 1, 32], "he", 9),
+        p("dw2_b", &[32], "zeros", 0),
+        p("pw2_w", &[1, 1, 32, 64], "he", 32),
+        p("pw2_b", &[64], "zeros", 0),
+        p("dw3_w", &[3, 3, 1, 64], "he", 9),
+        p("dw3_b", &[64], "zeros", 0),
+        p("pw3_w", &[1, 1, 64, 64], "he", 64),
+        p("pw3_b", &[64], "zeros", 0),
+        p("fc_w", &[64, 10], "glorot", 64),
+        p("fc_b", &[10], "zeros", 0),
+    ];
+    let quant = vec![
+        q("stem", 0, true, "conv"),
+        q("dw1", 2, false, "dwconv"),
+        q("pw1", 4, false, "conv"),
+        q("dw2", 6, false, "dwconv"),
+        q("pw2", 8, false, "conv"),
+        q("dw3", 10, false, "dwconv"),
+        q("pw3", 12, false, "conv"),
+        q("fc", 14, false, "dense"),
+    ];
+    let mut input_spec = BTreeMap::new();
+    input_spec
+        .insert("train".into(), vec![t("x", &[128, 32, 32, 3], "f32"), t("y", &[128], "i32")]);
+    input_spec
+        .insert("eval".into(), vec![t("x", &[256, 32, 32, 3], "f32"), t("y", &[256], "i32")]);
+    let b = 256;
+    let acts = vec![
+        vec![b, 32, 32, 3],
+        vec![b, 32, 32, 16],
+        vec![b, 16, 16, 16],
+        vec![b, 16, 16, 32],
+        vec![b, 8, 8, 32],
+        vec![b, 8, 8, 64],
+        vec![b, 8, 8, 64],
+        vec![b, 64],
+    ];
+    finish("dwsep", "vision", params, quant, input_spec, acts)
+}
+
+fn resmini() -> ModelSpec {
+    let mut params = vec![p("stem_w", &[3, 3, 3, 16], "he", 27), p("stem_b", &[16], "zeros", 0)];
+    for blk in ["s1b1", "s1b2"] {
+        for conv in ["c1", "c2"] {
+            params.push(p(&format!("{blk}{conv}_w"), &[3, 3, 16, 16], "he", 144));
+            params.push(p(&format!("{blk}{conv}_b"), &[16], "zeros", 0));
+        }
+    }
+    params.push(p("down_w", &[3, 3, 16, 32], "he", 144));
+    params.push(p("down_b", &[32], "zeros", 0));
+    for blk in ["s2b1", "s2b2"] {
+        for conv in ["c1", "c2"] {
+            params.push(p(&format!("{blk}{conv}_w"), &[3, 3, 32, 32], "he", 288));
+            params.push(p(&format!("{blk}{conv}_b"), &[32], "zeros", 0));
+        }
+    }
+    params.push(p("fc_w", &[32, 10], "glorot", 32));
+    params.push(p("fc_b", &[10], "zeros", 0));
+    let quant = vec![
+        q("stem", 0, true, "conv"),
+        q("s1b1c1", 2, false, "conv"),
+        q("s1b1c2", 4, false, "conv"),
+        q("s1b2c1", 6, false, "conv"),
+        q("s1b2c2", 8, false, "conv"),
+        q("down", 10, false, "conv"),
+        q("s2b1c1", 12, false, "conv"),
+        q("s2b1c2", 14, false, "conv"),
+        q("s2b2c1", 16, false, "conv"),
+        q("s2b2c2", 18, false, "conv"),
+        q("fc", 20, false, "dense"),
+    ];
+    let mut input_spec = BTreeMap::new();
+    input_spec
+        .insert("train".into(), vec![t("x", &[128, 32, 32, 3], "f32"), t("y", &[128], "i32")]);
+    input_spec
+        .insert("eval".into(), vec![t("x", &[256, 32, 32, 3], "f32"), t("y", &[256], "i32")]);
+    let b = 256;
+    let mut acts = vec![vec![b, 32, 32, 3]];
+    for _ in 0..4 {
+        acts.push(vec![b, 32, 32, 16]);
+    }
+    acts.push(vec![b, 32, 32, 16]); // down input
+    for _ in 0..4 {
+        acts.push(vec![b, 16, 16, 32]);
+    }
+    acts.push(vec![b, 32]); // fc input
+    finish("resmini", "vision", params, quant, input_spec, acts)
+}
+
+fn ncf() -> ModelSpec {
+    let (users, items, dim) = (2000, 1000, 16);
+    let params = vec![
+        p("emb_gmf_u", &[users, dim], "embed", 0),
+        p("emb_gmf_i", &[items, dim], "embed", 0),
+        p("emb_mlp_u", &[users, dim], "embed", 0),
+        p("emb_mlp_i", &[items, dim], "embed", 0),
+        p("fc1_w", &[2 * dim, 32], "he", 2 * dim),
+        p("fc1_b", &[32], "zeros", 0),
+        p("fc2_w", &[32, 16], "he", 32),
+        p("fc2_b", &[16], "zeros", 0),
+        p("out_w", &[dim + 16, 1], "glorot", dim + 16),
+        p("out_b", &[1], "zeros", 0),
+    ];
+    let quant = vec![
+        q("emb_gmf_u", 0, true, "embed"),
+        q("emb_gmf_i", 1, true, "embed"),
+        q("emb_mlp_u", 2, true, "embed"),
+        q("emb_mlp_i", 3, true, "embed"),
+        q("fc1", 4, true, "dense"),
+        q("fc2", 6, false, "dense"),
+        q("out", 8, true, "dense"),
+    ];
+    let mut input_spec = BTreeMap::new();
+    input_spec.insert(
+        "train".into(),
+        vec![
+            t("users", &[2048], "i32"),
+            t("items", &[2048], "i32"),
+            t("labels", &[2048], "f32"),
+        ],
+    );
+    input_spec.insert(
+        "eval".into(),
+        vec![
+            t("users", &[4096], "i32"),
+            t("items", &[4096], "i32"),
+            t("labels", &[4096], "f32"),
+        ],
+    );
+    input_spec.insert(
+        "hitrate".into(),
+        vec![
+            t("users", &[256], "i32"),
+            t("pos", &[256], "i32"),
+            t("negs", &[256, 99], "i32"),
+        ],
+    );
+    let b = 4096;
+    let acts = vec![
+        vec![b, dim],
+        vec![b, dim],
+        vec![b, dim],
+        vec![b, dim],
+        vec![b, 2 * dim],
+        vec![b, 32],
+        vec![b, dim + 16],
+    ];
+    finish("ncf", "ncf", params, quant, input_spec, acts)
+}
+
+/// All builtin models, keyed by name.
+pub fn builtin_models() -> BTreeMap<String, ModelSpec> {
+    let mut out = BTreeMap::new();
+    for m in [mlp3(), cnn6(), dwsep(), resmini(), ncf()] {
+        out.insert(m.name.clone(), m);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Graph construction
+// ---------------------------------------------------------------------------
+
+fn f32_of<'a>(ts: &'a HostTensor, what: &str) -> Result<&'a [f32]> {
+    match &ts.data {
+        Data::F32(v) => Ok(v),
+        Data::I32(_) => bail!("{what}: expected f32 tensor"),
+    }
+}
+
+fn i32_of<'a>(ts: &'a HostTensor, what: &str) -> Result<&'a [i32]> {
+    match &ts.data {
+        Data::I32(v) => Ok(v),
+        Data::F32(_) => bail!("{what}: expected i32 tensor"),
+    }
+}
+
+/// Per-run graph context: tape + quantization + activation recording.
+struct Ctx<'a> {
+    t: Tape,
+    spec: &'a ModelSpec,
+    quant: Option<&'a QuantParams>,
+    record: bool,
+    acts: Vec<Option<Arr>>,
+}
+
+impl<'a> Ctx<'a> {
+    fn new(spec: &'a ModelSpec, quant: Option<&'a QuantParams>, record: bool) -> Ctx<'a> {
+        let n = spec.quant_layers.len();
+        Ctx { t: Tape::new(), spec, quant, record, acts: vec![None; n] }
+    }
+
+    fn leaves(&mut self, params: &[HostTensor]) -> Result<Vec<Var>> {
+        params
+            .iter()
+            .map(|ts| Ok(self.t.leaf(Arr::new(ts.shape.clone(), f32_of(ts, "param")?.to_vec()))))
+            .collect()
+    }
+
+    fn rec(&mut self, qi: usize, v: Var) {
+        if self.record {
+            self.acts[qi] = Some(self.t.val(v).clone());
+        }
+    }
+
+    fn fq_w(&mut self, w: Var, qi: usize) -> Var {
+        match self.quant {
+            Some(qp) if qp.dw[qi] > 0.0 => {
+                self.t.fake_quant(w, qp.dw[qi], qp.qmw[qi], GridKind::Signed)
+            }
+            _ => w,
+        }
+    }
+
+    fn fq_a(&mut self, x: Var, qi: usize) -> Var {
+        match self.quant {
+            Some(qp) if qp.da[qi] > 0.0 => {
+                let kind = GridKind::from_signed(self.spec.quant_layers[qi].act_signed);
+                self.t.fake_quant(x, qp.da[qi], qp.qma[qi], kind)
+            }
+            _ => x,
+        }
+    }
+
+    /// Quantized dense layer: `fq(x) @ fq(w) + b`.
+    fn dense(&mut self, x: Var, w: Var, b: Var, qi: usize) -> Var {
+        self.rec(qi, x);
+        let xq = self.fq_a(x, qi);
+        let wq = self.fq_w(w, qi);
+        let y = self.t.matmul(xq, wq);
+        self.t.add_bias(y, b)
+    }
+
+    /// Quantized SAME conv (+ bias).
+    fn conv(&mut self, x: Var, w: Var, b: Var, qi: usize, stride: usize, groups: usize) -> Var {
+        self.rec(qi, x);
+        let xq = self.fq_a(x, qi);
+        let wq = self.fq_w(w, qi);
+        let y = self.t.conv(xq, wq, stride, groups);
+        self.t.add_bias(y, b)
+    }
+
+    /// Embedding lookup with weight-grid fake-quant (Δa stays 0).
+    fn embed(&mut self, table: Var, idx: &[i32], qi: usize) -> Var {
+        let e = self.t.embed(table, idx);
+        let eq = self.fq_w(e, qi);
+        self.rec(qi, eq);
+        eq
+    }
+
+    fn relu(&mut self, x: Var) -> Var {
+        self.t.relu(x)
+    }
+}
+
+/// Residual block: `relu(h + conv(relu(conv(h))))` (resmini).
+fn res_block(cx: &mut Ctx, h: Var, pv: &[Var], pi: usize, qi: usize) -> Var {
+    let y = cx.conv(h, pv[pi], pv[pi + 1], qi, 1, 1);
+    let y = cx.relu(y);
+    let y = cx.conv(y, pv[pi + 2], pv[pi + 3], qi + 1, 1, 1);
+    let s = cx.t.add(h, y);
+    cx.relu(s)
+}
+
+/// Vision forward: input `x` to logits.
+fn vision_logits(cx: &mut Ctx, pv: &[Var], x: Var) -> Result<Var> {
+    match cx.spec.name.as_str() {
+        "mlp3" => {
+            let h = cx.dense(x, pv[0], pv[1], 0);
+            let h = cx.relu(h);
+            let h = cx.dense(h, pv[2], pv[3], 1);
+            let h = cx.relu(h);
+            Ok(cx.dense(h, pv[4], pv[5], 2))
+        }
+        "cnn6" => {
+            let strides = [1usize, 2, 1, 2, 1];
+            let mut h = x;
+            for (i, &s) in strides.iter().enumerate() {
+                h = cx.conv(h, pv[2 * i], pv[2 * i + 1], i, s, 1);
+                h = cx.relu(h);
+            }
+            let pooled = cx.t.gap(h);
+            Ok(cx.dense(pooled, pv[10], pv[11], 5))
+        }
+        "dwsep" => {
+            // (stride, groups) per conv quant site, mirroring mobile.py.
+            let plan = [(1usize, 1usize), (2, 16), (1, 1), (2, 32), (1, 1), (1, 64), (1, 1)];
+            let mut h = x;
+            for (i, &(s, g)) in plan.iter().enumerate() {
+                h = cx.conv(h, pv[2 * i], pv[2 * i + 1], i, s, g);
+                h = cx.relu(h);
+            }
+            let pooled = cx.t.gap(h);
+            Ok(cx.dense(pooled, pv[14], pv[15], 7))
+        }
+        "resmini" => {
+            let h = cx.conv(x, pv[0], pv[1], 0, 1, 1);
+            let mut h = cx.relu(h);
+            h = res_block(cx, h, pv, 2, 1);
+            h = res_block(cx, h, pv, 6, 3);
+            let d = cx.conv(h, pv[10], pv[11], 5, 2, 1);
+            let mut h = cx.relu(d);
+            h = res_block(cx, h, pv, 12, 6);
+            h = res_block(cx, h, pv, 16, 8);
+            let pooled = cx.t.gap(h);
+            Ok(cx.dense(pooled, pv[20], pv[21], 10))
+        }
+        other => bail!("cpu backend: unknown vision model '{other}'"),
+    }
+}
+
+/// NCF forward: (users, items) to `(B,1)` logits.
+fn ncf_logits(cx: &mut Ctx, pv: &[Var], users: &[i32], items: &[i32]) -> Result<Var> {
+    if cx.spec.name != "ncf" {
+        bail!("cpu backend: unknown ncf model '{}'", cx.spec.name);
+    }
+    let eg_u = cx.embed(pv[0], users, 0);
+    let eg_i = cx.embed(pv[1], items, 1);
+    let em_u = cx.embed(pv[2], users, 2);
+    let em_i = cx.embed(pv[3], items, 3);
+    let gmf = cx.t.mul(eg_u, eg_i);
+    let h = cx.t.concat(em_u, em_i);
+    let h = cx.dense(h, pv[4], pv[5], 4);
+    let h = cx.relu(h);
+    let h = cx.dense(h, pv[6], pv[7], 5);
+    let h = cx.relu(h);
+    let z = cx.t.concat(gmf, h);
+    Ok(cx.dense(z, pv[8], pv[9], 6))
+}
+
+/// Reject mis-sized Δ vectors up front (the PJRT engine fails the same
+/// way via its argument-count check) instead of panicking mid-graph.
+fn check_quant(spec: &ModelSpec, quant: Option<&QuantParams>) -> Result<()> {
+    if let Some(qp) = quant {
+        let n = spec.n_quant_layers();
+        let lens = [qp.dw.len(), qp.qmw.len(), qp.da.len(), qp.qma.len()];
+        if lens.iter().any(|&l| l != n) {
+            bail!("quant params sized {lens:?}, model {} has {n} quant layers", spec.name);
+        }
+    }
+    Ok(())
+}
+
+/// Reject vision inputs whose trailing dims disagree with the model's
+/// input spec (any batch size is fine) — a shape assert deeper in the
+/// graph would panic instead of erroring.
+fn check_vision_input(spec: &ModelSpec, x: &HostTensor) -> Result<()> {
+    let want = &spec.input_spec["eval"][0].shape[1..];
+    if x.shape.len() != want.len() + 1 || x.shape[1..] != *want {
+        bail!("input shape {:?} incompatible with {} (want [B, {want:?}])", x.shape, spec.name);
+    }
+    Ok(())
+}
+
+/// Reject out-of-range NCF ids up front (the embed gather asserts).
+fn check_ids(spec: &ModelSpec, users: &[i32], items: &[i32]) -> Result<()> {
+    let n_users = spec.params[0].shape[0] as i32;
+    let n_items = spec.params[1].shape[0] as i32;
+    if users.iter().any(|&u| u < 0 || u >= n_users) {
+        bail!("user id out of range 0..{n_users}");
+    }
+    if items.iter().any(|&i| i < 0 || i >= n_items) {
+        bail!("item id out of range 0..{n_items}");
+    }
+    Ok(())
+}
+
+/// Build the loss graph for a full (inputs, labels) batch.  Returns
+/// (ctx, loss var, correct count).
+fn loss_graph<'a>(
+    spec: &'a ModelSpec,
+    params: &[HostTensor],
+    quant: Option<&'a QuantParams>,
+    batch: &[HostTensor],
+    record: bool,
+) -> Result<(Ctx<'a>, Var, f32)> {
+    check_quant(spec, quant)?;
+    let mut cx = Ctx::new(spec, quant, record);
+    let pv = cx.leaves(params)?;
+    if spec.task == "ncf" {
+        if batch.len() != 3 {
+            bail!("ncf batch needs (users, items, labels), got {} tensors", batch.len());
+        }
+        let users = i32_of(&batch[0], "users")?;
+        let items = i32_of(&batch[1], "items")?;
+        let labels = f32_of(&batch[2], "labels")?;
+        if users.len() != items.len() || users.len() != labels.len() {
+            bail!("ncf batch length mismatch");
+        }
+        check_ids(spec, users, items)?;
+        let logits = ncf_logits(&mut cx, &pv, users, items)?;
+        let correct = bce_correct(cx.t.val(logits), labels);
+        let loss = cx.t.bce_logits(logits, labels);
+        Ok((cx, loss, correct))
+    } else {
+        if batch.len() != 2 {
+            bail!("vision batch needs (x, y), got {} tensors", batch.len());
+        }
+        let xs = f32_of(&batch[0], "x")?;
+        let ys = i32_of(&batch[1], "y")?;
+        if batch[0].shape.first().copied().unwrap_or(0) != ys.len() {
+            bail!("vision batch length mismatch: x {:?} vs y {:?}", batch[0].shape, batch[1].shape);
+        }
+        check_vision_input(spec, &batch[0])?;
+        let x = cx.t.leaf(Arr::new(batch[0].shape.clone(), xs.to_vec()));
+        let logits = vision_logits(&mut cx, &pv, x)?;
+        let correct = argmax_correct(cx.t.val(logits), ys);
+        let loss = cx.t.softmax_xent(logits, ys);
+        Ok((cx, loss, correct))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------------
+
+/// One SGD-with-momentum step; mutates `params`/`momentum` in place and
+/// returns the pre-update loss.
+pub fn train_step(
+    spec: &ModelSpec,
+    params: &mut [HostTensor],
+    momentum: &mut [Vec<f32>],
+    batch: &[HostTensor],
+    lr: f32,
+) -> Result<f32> {
+    let (cx, loss, _) = loss_graph(spec, params, None, batch, false)?;
+    let loss_val = cx.t.val(loss).item();
+    let grads = cx.t.backward(loss);
+    for (i, (ts, mom)) in params.iter_mut().zip(momentum.iter_mut()).enumerate() {
+        // Param leaves are the first `n` tape nodes (see Ctx::leaves).
+        let g = grads[i].as_ref();
+        let pdata = match &mut ts.data {
+            Data::F32(v) => v,
+            Data::I32(_) => bail!("param {i}: expected f32"),
+        };
+        for (j, (pw, m)) in pdata.iter_mut().zip(mom.iter_mut()).enumerate() {
+            let gv = g.map_or(0.0, |a| a.data[j]);
+            *m = MOMENTUM * *m + gv + WEIGHT_DECAY * *pw;
+            *pw -= lr * *m;
+        }
+    }
+    Ok(loss_val)
+}
+
+/// Quantized (Some) / FP32 (None) forward: (mean loss, #correct).
+pub fn eval(
+    spec: &ModelSpec,
+    params: &[HostTensor],
+    quant: Option<&QuantParams>,
+    batch: &[HostTensor],
+) -> Result<(f32, f32)> {
+    let (cx, loss, correct) = loss_graph(spec, params, quant, batch, false)?;
+    Ok((cx.t.val(loss).item(), correct))
+}
+
+/// FP32 input activations of every quant layer, from an inputs-only batch.
+pub fn acts(
+    spec: &ModelSpec,
+    params: &[HostTensor],
+    batch: &[HostTensor],
+) -> Result<Vec<HostTensor>> {
+    let mut cx = Ctx::new(spec, None, true);
+    let pv = cx.leaves(params)?;
+    if spec.task == "ncf" {
+        if batch.len() != 2 {
+            bail!("ncf acts batch needs (users, items), got {} tensors", batch.len());
+        }
+        let users = i32_of(&batch[0], "users")?;
+        let items = i32_of(&batch[1], "items")?;
+        check_ids(spec, users, items)?;
+        ncf_logits(&mut cx, &pv, users, items)?;
+    } else {
+        if batch.len() != 1 {
+            bail!("vision acts batch needs (x,), got {} tensors", batch.len());
+        }
+        let xs = f32_of(&batch[0], "x")?;
+        check_vision_input(spec, &batch[0])?;
+        let x = cx.t.leaf(Arr::new(batch[0].shape.clone(), xs.to_vec()));
+        vision_logits(&mut cx, &pv, x)?;
+    }
+    cx.acts
+        .into_iter()
+        .enumerate()
+        .map(|(i, a)| {
+            let a = a.with_context(|| format!("quant layer {i} recorded no activation"))?;
+            Ok(HostTensor::f32(a.shape, a.data))
+        })
+        .collect()
+}
+
+/// NCF mlperf hit-rate@10 hits for a (users, pos, negs) batch.
+pub fn hitrate(
+    spec: &ModelSpec,
+    params: &[HostTensor],
+    quant: Option<&QuantParams>,
+    batch: &[HostTensor],
+) -> Result<f32> {
+    if spec.task != "ncf" {
+        bail!("hitrate: model {} is not an ncf task", spec.name);
+    }
+    check_quant(spec, quant)?;
+    if batch.len() != 3 {
+        bail!("hitrate batch needs (users, pos, negs), got {} tensors", batch.len());
+    }
+    let users = i32_of(&batch[0], "users")?;
+    let pos = i32_of(&batch[1], "pos")?;
+    let negs = i32_of(&batch[2], "negs")?;
+    let b = users.len();
+    if b == 0 || pos.len() != b || negs.is_empty() || negs.len() % b != 0 {
+        bail!("hitrate batch shape mismatch");
+    }
+    check_ids(spec, users, pos)?;
+    check_ids(spec, &[], negs)?;
+    let k = negs.len() / b;
+    // Flatten to one (B*(K+1)) scoring pass: per row, positive first.
+    let mut users_rep = Vec::with_capacity(b * (k + 1));
+    let mut all_items = Vec::with_capacity(b * (k + 1));
+    for r in 0..b {
+        for _ in 0..=k {
+            users_rep.push(users[r]);
+        }
+        all_items.push(pos[r]);
+        all_items.extend_from_slice(&negs[r * k..(r + 1) * k]);
+    }
+    let mut cx = Ctx::new(spec, quant, false);
+    let pv = cx.leaves(params)?;
+    let logits = ncf_logits(&mut cx, &pv, &users_rep, &all_items)?;
+    let scores = &cx.t.val(logits).data;
+    let mut hits = 0.0f32;
+    for r in 0..b {
+        let row = &scores[r * (k + 1)..(r + 1) * (k + 1)];
+        let rank = row[1..].iter().filter(|&&s| s > row[0]).count();
+        if rank < 10 {
+            hits += 1.0;
+        }
+    }
+    Ok(hits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::init::init_params;
+
+    #[test]
+    fn builtin_zoo_is_complete() {
+        let zoo = builtin_models();
+        assert_eq!(
+            zoo.keys().cloned().collect::<Vec<_>>(),
+            vec!["cnn6", "dwsep", "mlp3", "ncf", "resmini"]
+        );
+        for spec in zoo.values() {
+            assert!(spec.n_quant_layers() >= 3);
+            assert_eq!(spec.entry("acts").unwrap().outputs.len(), spec.n_quant_layers());
+            for ql in &spec.quant_layers {
+                assert!(ql.weight_param < spec.params.len());
+            }
+        }
+    }
+
+    #[test]
+    fn mlp3_train_reduces_loss_and_eval_matches() {
+        let zoo = builtin_models();
+        let spec = &zoo["mlp3"];
+        let mut params = init_params(&spec.params, 7);
+        let mut momentum: Vec<Vec<f32>> =
+            params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let data = crate::data::vision::SynthVision::new(3);
+        let (x, y) = data.batch_features(0, 64, 64);
+        let batch = vec![x, y];
+        let l0 = train_step(spec, &mut params, &mut momentum, &batch, 0.1).unwrap();
+        for _ in 0..25 {
+            train_step(spec, &mut params, &mut momentum, &batch, 0.1).unwrap();
+        }
+        let (l1, correct) = eval(spec, &params, None, &batch).unwrap();
+        assert!(l1 < l0 - 0.05, "loss did not drop: {l0} -> {l1}");
+        assert!((0.0..=64.0).contains(&correct));
+    }
+
+    #[test]
+    fn passthrough_quant_is_exact() {
+        let zoo = builtin_models();
+        let spec = &zoo["mlp3"];
+        let params = init_params(&spec.params, 5);
+        let data = crate::data::vision::SynthVision::new(4);
+        let (x, y) = data.batch_features(0, 32, 64);
+        let batch = vec![x, y];
+        let (lf, cf) = eval(spec, &params, None, &batch).unwrap();
+        let q = QuantParams::passthrough(spec.n_quant_layers());
+        let (lq, cq) = eval(spec, &params, Some(&q), &batch).unwrap();
+        assert_eq!(lf, lq);
+        assert_eq!(cf, cq);
+    }
+
+    #[test]
+    fn acts_shapes_follow_quant_layers() {
+        let zoo = builtin_models();
+        let spec = &zoo["mlp3"];
+        let params = init_params(&spec.params, 5);
+        let data = crate::data::vision::SynthVision::new(4);
+        let (x, _) = data.batch_features(0, 16, 64);
+        let out = acts(spec, &params, &[x]).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].shape, vec![16, 64]);
+        assert_eq!(out[1].shape, vec![16, 128]);
+        assert_eq!(out[2].shape, vec![16, 96]);
+    }
+
+    #[test]
+    fn ncf_hitrate_bounds() {
+        let zoo = builtin_models();
+        let spec = &zoo["ncf"];
+        let params = init_params(&spec.params, 9);
+        let data = crate::data::ncf::SynthNcf::new(2, 2000, 1000, 6);
+        let (u, pos, negs) = data.eval_batch(0, 64);
+        let hits = hitrate(spec, &params, None, &[u, pos, negs]).unwrap();
+        assert!((0.0..=64.0).contains(&hits));
+    }
+
+    #[test]
+    fn coarse_quant_changes_vision_loss() {
+        let zoo = builtin_models();
+        let spec = &zoo["mlp3"];
+        let params = init_params(&spec.params, 5);
+        let data = crate::data::vision::SynthVision::new(4);
+        let (x, y) = data.batch_features(0, 32, 64);
+        let batch = vec![x, y];
+        let (lf, _) = eval(spec, &params, None, &batch).unwrap();
+        let n = spec.n_quant_layers();
+        let q = QuantParams {
+            dw: vec![0.3; n],
+            qmw: vec![1.0; n],
+            da: vec![0.5; n],
+            qma: vec![3.0; n],
+        };
+        let (lq, _) = eval(spec, &params, Some(&q), &batch).unwrap();
+        assert!((lq - lf).abs() > 1e-4, "coarse quant left loss at {lf}");
+    }
+}

@@ -1,7 +1,7 @@
 //! The PJRT engine thread: owns the client, compiled executables, model
 //! sessions (device-resident parameters/optimizer state) and registered
 //! calibration batches.  Requests arrive over an mpsc mailbox from
-//! [`super::handle::EngineHandle`].
+//! [`super::handle::PjrtEngine`].
 //!
 //! Design notes:
 //! * Executables are compiled lazily per (model, entry) and cached — the
@@ -13,31 +13,13 @@
 //!   swaps them wholesale from the executable outputs (state never
 //!   round-trips through the caller).
 
+use super::backend::{BatchId, EngineStats, QuantParams, SessionId};
 use super::manifest::Manifest;
 use crate::tensor::{Data, HostTensor};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
-
-/// Per-layer quantization runtime parameters (the graph's dw/qmw/da/qma).
-#[derive(Clone, Debug, PartialEq)]
-pub struct QuantParams {
-    pub dw: Vec<f32>,
-    pub qmw: Vec<f32>,
-    pub da: Vec<f32>,
-    pub qma: Vec<f32>,
-}
-
-impl QuantParams {
-    /// All-zero steps: every layer passes through (FP32 behaviour).
-    pub fn passthrough(n: usize) -> Self {
-        QuantParams { dw: vec![0.0; n], qmw: vec![1.0; n], da: vec![0.0; n], qma: vec![1.0; n] }
-    }
-}
-
-pub type SessionId = u64;
-pub type BatchId = u64;
 
 /// Mailbox requests.  Every variant carries its own reply channel.
 pub enum Request {
@@ -65,16 +47,6 @@ pub enum Request {
     Acts { sess: SessionId, batch: BatchId, reply: Sender<Result<Vec<HostTensor>>> },
     Stats { reply: Sender<Result<EngineStats>> },
     Shutdown,
-}
-
-/// Counters for the metrics registry / perf bench.
-#[derive(Clone, Debug, Default)]
-pub struct EngineStats {
-    pub executions: u64,
-    pub compiled: u64,
-    pub sessions: u64,
-    pub batches: u64,
-    pub exec_seconds: f64,
 }
 
 struct Session {

@@ -1,24 +1,24 @@
-//! `EngineHandle` — the `Send + Clone` facade over the engine thread.
+//! `PjrtEngine` — the `Send + Sync` facade over the PJRT engine thread
+//! (`--features xla`), implementing [`Backend`].
 //!
-//! Spawning a handle boots the engine thread (PJRT client + artifact
-//! registry); dropping the last handle shuts it down.  All methods are
-//! synchronous request/reply over mpsc channels — the XLA CPU executor is
-//! internally multi-threaded, so a single in-flight execution already
-//! saturates the machine; concurrency above this layer is about job
-//! orchestration (see `coordinator::scheduler`), not parallel PJRT calls.
+//! Spawning boots the engine thread (PJRT client + artifact registry);
+//! dropping the last handle shuts it down.  All methods are synchronous
+//! request/reply over mpsc channels — the XLA CPU executor is internally
+//! multi-threaded, so a single in-flight execution already saturates the
+//! machine; concurrency above this layer is about job orchestration (see
+//! `coordinator::scheduler`), not parallel PJRT calls.
 
-use super::engine::{Engine, EngineStats, Request};
+use super::backend::{Backend, BatchId, EngineStats, QuantParams, SessionId};
+use super::engine::{Engine, Request};
 use super::manifest::Manifest;
 use crate::tensor::HostTensor;
 use anyhow::{Context, Result};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 
-pub use super::engine::{BatchId, QuantParams, SessionId};
-
-/// Cloneable handle to the engine thread.
+/// Cloneable handle to the PJRT engine thread.
 #[derive(Clone)]
-pub struct EngineHandle {
+pub struct PjrtEngine {
     tx: Sender<Request>,
     manifest: Arc<Manifest>,
     _joiner: Arc<Joiner>,
@@ -38,19 +38,14 @@ impl Drop for Joiner {
     }
 }
 
-impl EngineHandle {
+impl PjrtEngine {
     /// Boot an engine over the given artifacts directory.
-    pub fn start(artifacts_dir: impl AsRef<std::path::Path>) -> Result<EngineHandle> {
+    pub fn start(artifacts_dir: impl AsRef<std::path::Path>) -> Result<PjrtEngine> {
         let manifest = Manifest::load(artifacts_dir)?;
         Self::start_with_manifest(manifest)
     }
 
-    /// Boot an engine over [`Manifest::default_dir`].
-    pub fn start_default() -> Result<EngineHandle> {
-        Self::start(Manifest::default_dir())
-    }
-
-    pub fn start_with_manifest(manifest: Manifest) -> Result<EngineHandle> {
+    pub fn start_with_manifest(manifest: Manifest) -> Result<PjrtEngine> {
         let (tx, rx) = channel();
         let m2 = manifest.clone();
         let (boot_tx, boot_rx) = channel();
@@ -67,15 +62,11 @@ impl EngineHandle {
             })
             .context("spawning engine thread")?;
         boot_rx.recv().context("engine boot reply")??;
-        Ok(EngineHandle {
+        Ok(PjrtEngine {
             tx: tx.clone(),
             manifest: Arc::new(manifest),
             _joiner: Arc::new(Joiner { tx, thread: Some(thread) }),
         })
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
     }
 
     fn call<T>(&self, make: impl FnOnce(Sender<Result<T>>) -> Request) -> Result<T> {
@@ -83,40 +74,46 @@ impl EngineHandle {
         self.tx.send(make(rtx)).ok().context("engine thread gone")?;
         rrx.recv().context("engine dropped reply")?
     }
+}
 
-    /// Create a model session owning `params` (+ zero momentum).
-    pub fn create_session(&self, model: &str, params: Vec<HostTensor>) -> Result<SessionId> {
+impl Backend for PjrtEngine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn create_session(&self, model: &str, params: Vec<HostTensor>) -> Result<SessionId> {
         self.call(|reply| Request::CreateSession { model: model.into(), params, reply })
     }
 
-    pub fn drop_session(&self, sess: SessionId) -> Result<()> {
+    fn drop_session(&self, sess: SessionId) -> Result<()> {
         self.call(|reply| Request::DropSession { sess, reply })
     }
 
-    pub fn get_params(&self, sess: SessionId) -> Result<Vec<HostTensor>> {
+    fn get_params(&self, sess: SessionId) -> Result<Vec<HostTensor>> {
         self.call(|reply| Request::GetParams { sess, reply })
     }
 
-    pub fn set_params(&self, sess: SessionId, params: Vec<HostTensor>) -> Result<()> {
+    fn set_params(&self, sess: SessionId, params: Vec<HostTensor>) -> Result<()> {
         self.call(|reply| Request::SetParams { sess, params, reply })
     }
 
-    /// Register a batch for repeated use (calibration / eval sets).
-    pub fn register_batch(&self, batch: Vec<HostTensor>) -> Result<BatchId> {
+    fn register_batch(&self, batch: Vec<HostTensor>) -> Result<BatchId> {
         self.call(|reply| Request::RegisterBatch { batch, reply })
     }
 
-    pub fn drop_batch(&self, batch: BatchId) -> Result<()> {
+    fn drop_batch(&self, batch: BatchId) -> Result<()> {
         self.call(|reply| Request::DropBatch { batch, reply })
     }
 
-    /// One SGD-with-momentum step; updates session state, returns loss.
-    pub fn train_step(&self, sess: SessionId, batch: BatchId, lr: f32) -> Result<f32> {
+    fn train_step(&self, sess: SessionId, batch: BatchId, lr: f32) -> Result<f32> {
         self.call(|reply| Request::TrainStep { sess, batch, lr, reply })
     }
 
-    /// Quantized (Some) or FP32 (None) forward: (mean loss, #correct).
-    pub fn eval(
+    fn eval(
         &self,
         sess: SessionId,
         quant: Option<QuantParams>,
@@ -125,22 +122,15 @@ impl EngineHandle {
         self.call(|reply| Request::Eval { sess, quant, batch, reply })
     }
 
-    /// NCF hit-rate@10 hits for a (users, pos, negs) batch.
-    pub fn hitrate(
-        &self,
-        sess: SessionId,
-        quant: Option<QuantParams>,
-        batch: BatchId,
-    ) -> Result<f32> {
+    fn hitrate(&self, sess: SessionId, quant: Option<QuantParams>, batch: BatchId) -> Result<f32> {
         self.call(|reply| Request::Hitrate { sess, quant, batch, reply })
     }
 
-    /// FP32 input activations of every quant layer for a batch.
-    pub fn acts(&self, sess: SessionId, batch: BatchId) -> Result<Vec<HostTensor>> {
+    fn acts(&self, sess: SessionId, batch: BatchId) -> Result<Vec<HostTensor>> {
         self.call(|reply| Request::Acts { sess, batch, reply })
     }
 
-    pub fn stats(&self) -> Result<EngineStats> {
+    fn stats(&self) -> Result<EngineStats> {
         self.call(|reply| Request::Stats { reply })
     }
 }

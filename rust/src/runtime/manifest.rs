@@ -80,7 +80,33 @@ pub struct Manifest {
     pub models: BTreeMap<String, ModelSpec>,
 }
 
+/// Directory marker used by the builtin (CPU-native) manifest.
+pub const BUILTIN_DIR: &str = "<builtin>";
+
 impl Manifest {
+    /// The builtin model zoo, constructed in Rust with the same specs and
+    /// entry ABI `aot.py` would emit — what the CPU backend executes (no
+    /// artifacts on disk required).
+    pub fn builtin() -> Manifest {
+        let models = crate::runtime::cpu::zoo::builtin_models();
+        Manifest { dir: PathBuf::from(BUILTIN_DIR), models }
+    }
+
+    /// Load the default artifacts directory when present, else fall back
+    /// to the builtin zoo.
+    pub fn resolve() -> Manifest {
+        let dir = Self::default_dir();
+        if dir.join("manifest.json").exists() {
+            match Self::load(&dir) {
+                Ok(m) => return m,
+                Err(e) => {
+                    log::warn!("ignoring unreadable artifacts at {dir:?} ({e:#}); using builtin");
+                }
+            }
+        }
+        Self::builtin()
+    }
+
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
@@ -193,14 +219,9 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelSpec> {
 mod tests {
     use super::*;
 
-    fn manifest() -> Option<Manifest> {
-        let dir = Manifest::default_dir();
-        Manifest::load(dir).ok()
-    }
-
     #[test]
-    fn loads_real_manifest() {
-        let Some(m) = manifest() else { return };
+    fn builtin_manifest_has_the_zoo() {
+        let m = Manifest::builtin();
         assert!(m.models.len() >= 5, "{:?}", m.models.keys());
         let cnn = m.model("cnn6").unwrap();
         assert_eq!(cnn.n_quant_layers(), 6);
@@ -211,7 +232,8 @@ mod tests {
 
     #[test]
     fn arg_count_abi() {
-        let Some(m) = manifest() else { return };
+        // The builtin zoo is what the default (CPU) backend executes.
+        let m = Manifest::builtin();
         for spec in m.models.values() {
             let n_p = spec.params.len();
             let fq = spec.entry("fwd_quant").unwrap();
@@ -225,7 +247,7 @@ mod tests {
 
     #[test]
     fn ncf_input_order_preserved() {
-        let Some(m) = manifest() else { return };
+        let m = Manifest::builtin();
         let ncf = m.model("ncf").unwrap();
         let names: Vec<&str> =
             ncf.input_spec["train"].iter().map(|t| t.name.as_str()).collect();
@@ -233,13 +255,27 @@ mod tests {
     }
 
     #[test]
-    fn hlo_files_exist() {
-        let Some(m) = manifest() else { return };
+    fn entry_files_declared() {
+        // Builtin entries carry the marker; on-disk manifests must point
+        // at real HLO files.
+        let m = Manifest::resolve();
         for (name, spec) in &m.models {
-            for entry in spec.entries.keys() {
-                let p = m.hlo_path(name, entry).unwrap();
-                assert!(p.exists(), "{p:?}");
+            for (ename, e) in &spec.entries {
+                assert!(!e.file.is_empty(), "{name}/{ename} has no file");
+                if e.file != BUILTIN_DIR {
+                    let p = m.hlo_path(name, ename).unwrap();
+                    assert!(p.exists(), "{p:?}");
+                }
             }
         }
+    }
+
+    #[test]
+    fn builtin_matches_default_eval_batches() {
+        let m = Manifest::builtin();
+        assert_eq!(m.model("mlp3").unwrap().eval_batch(), 512);
+        assert_eq!(m.model("cnn6").unwrap().eval_batch(), 256);
+        assert_eq!(m.model("ncf").unwrap().train_batch(), 2048);
+        assert_eq!(m.dir, PathBuf::from(BUILTIN_DIR));
     }
 }

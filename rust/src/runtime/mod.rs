@@ -1,15 +1,27 @@
-//! The PJRT runtime layer: loads the AOT HLO-text artifacts and executes
-//! them for the Layer-3 coordinator.
+//! The runtime layer: pluggable execution backends behind one facade.
 //!
-//! PJRT wrapper types (`xla::PjRtClient`, `Literal`, …) hold raw pointers
-//! and are `!Send`, so all PJRT state lives on a dedicated **engine
-//! thread** ([`engine`]); the rest of the system talks to it through the
-//! cloneable, `Send` [`handle::EngineHandle`] (an actor/mailbox design —
-//! the same shape a serving router uses to own model replicas).
+//! [`backend::Backend`] abstracts the engine operations (`CreateSession`,
+//! `RegisterBatch`, `TrainStep`, `Eval`, `Hitrate`, `Acts`, …) the
+//! coordinator is written against; [`backend::EngineHandle`] is the
+//! cloneable `Send + Sync` facade everything holds.
+//!
+//! * [`cpu`] — the default backend: a dependency-free pure-Rust executor
+//!   that runs the builtin model zoo natively (dense matmul + conv +
+//!   fake-quant per the manifest's `QuantParams`), with reverse-mode
+//!   gradients for `train_step`.  Works on a clean machine with no Python
+//!   or PJRT installed.
+//! * [`engine`] / [`handle`] (`--features xla`) — the PJRT engine: loads
+//!   the AOT HLO-text artifacts and executes them on a dedicated engine
+//!   thread (PJRT wrapper types hold raw pointers and are `!Send`, so all
+//!   PJRT state lives on that thread behind an actor/mailbox handle).
 
+pub mod backend;
+pub mod cpu;
+#[cfg(feature = "xla")]
 pub mod engine;
+#[cfg(feature = "xla")]
 pub mod handle;
 pub mod manifest;
 
-pub use handle::{BatchId, EngineHandle, QuantParams, SessionId};
+pub use backend::{Backend, BatchId, EngineHandle, EngineStats, QuantParams, SessionId};
 pub use manifest::{Manifest, ModelSpec};

@@ -1,0 +1,119 @@
+//! Integration: the pure-Rust CPU backend against the host-side
+//! quantization reference — fake-quant parity, idempotence through the
+//! eval path, and backend bookkeeping.
+
+use lapq::quant::quantizer::fake_quant;
+use lapq::quant::GridKind;
+use lapq::runtime::{EngineHandle, QuantParams};
+use lapq::tensor::init::init_params;
+use lapq::tensor::HostTensor;
+
+fn mlp_session(eng: &EngineHandle, seed: u64) -> (lapq::runtime::SessionId, Vec<HostTensor>) {
+    let spec = eng.manifest().model("mlp3").unwrap().clone();
+    let params = init_params(&spec.params, seed);
+    let sess = eng.create_session("mlp3", params.clone()).unwrap();
+    (sess, params)
+}
+
+fn mlp_batch(eng: &EngineHandle, n: usize) -> lapq::runtime::BatchId {
+    let data = lapq::data::vision::SynthVision::new(5);
+    let (x, y) = data.batch_features(0, n, 64);
+    eng.register_batch(vec![x, y]).unwrap()
+}
+
+/// Weight fake-quant inside the backend must match `quant::quantizer`
+/// exactly: evaluating original weights under (dw, qmw) equals evaluating
+/// host-side quantize→dequantize'd weights in FP32.
+#[test]
+fn weight_fake_quant_matches_host_reference() {
+    let eng = EngineHandle::cpu().unwrap();
+    let (sess, params) = mlp_session(&eng, 11);
+    let batch = mlp_batch(&eng, 128);
+    let spec = eng.manifest().model("mlp3").unwrap().clone();
+    let n = spec.n_quant_layers();
+
+    // per-layer min-max-ish steps over the weight tensors
+    let mut q = QuantParams::passthrough(n);
+    let qmax = GridKind::Signed.qmax(4);
+    for (i, ql) in spec.quant_layers.iter().enumerate() {
+        let w = params[ql.weight_param].f();
+        let absmax = w.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        q.dw[i] = absmax / qmax;
+        q.qmw[i] = qmax;
+    }
+    let (loss_backend, correct_backend) = eng.eval(sess, Some(q.clone()), batch).unwrap();
+
+    // quantize the weights host-side with the reference quantizer
+    let mut quantized = params.clone();
+    for (i, ql) in spec.quant_layers.iter().enumerate() {
+        let w = &quantized[ql.weight_param];
+        let qw = fake_quant(w.f(), q.dw[i], q.qmw[i], GridKind::Signed);
+        quantized[ql.weight_param] = HostTensor::f32(w.shape.clone(), qw);
+    }
+    eng.set_params(sess, quantized).unwrap();
+    let (loss_host, correct_host) = eng.eval(sess, None, batch).unwrap();
+
+    assert_eq!(loss_backend, loss_host, "weight fake-quant diverges from quant::quantizer");
+    assert_eq!(correct_backend, correct_host);
+}
+
+/// Quantize→dequantize is idempotent end-to-end: evaluating
+/// already-quantized weights under the same (dw, qmw) changes nothing.
+#[test]
+fn roundtrip_idempotent_through_eval() {
+    let eng = EngineHandle::cpu().unwrap();
+    let (sess, params) = mlp_session(&eng, 13);
+    let batch = mlp_batch(&eng, 128);
+    let spec = eng.manifest().model("mlp3").unwrap().clone();
+    let n = spec.n_quant_layers();
+
+    let mut q = QuantParams::passthrough(n);
+    for i in 0..n {
+        q.dw[i] = 0.02;
+        q.qmw[i] = 127.0;
+    }
+    let (l1, _) = eng.eval(sess, Some(q.clone()), batch).unwrap();
+
+    let mut quantized = params.clone();
+    for (i, ql) in spec.quant_layers.iter().enumerate() {
+        let w = &quantized[ql.weight_param];
+        let qw = fake_quant(w.f(), q.dw[i], q.qmw[i], GridKind::Signed);
+        quantized[ql.weight_param] = HostTensor::f32(w.shape.clone(), qw);
+    }
+    eng.set_params(sess, quantized).unwrap();
+    let (l2, _) = eng.eval(sess, Some(q), batch).unwrap();
+    assert_eq!(l1, l2, "fake-quant not idempotent through the eval path");
+}
+
+/// Activation quantization must respect the per-layer grid sign: with an
+/// unsigned-layer Δa engaged, loss moves; with Δa = 0 it is exact FP32.
+#[test]
+fn activation_quant_engages_per_layer() {
+    let eng = EngineHandle::cpu().unwrap();
+    let (sess, _) = mlp_session(&eng, 17);
+    let batch = mlp_batch(&eng, 128);
+    let n = eng.manifest().model("mlp3").unwrap().n_quant_layers();
+
+    let (lf, _) = eng.eval(sess, None, batch).unwrap();
+    let mut q = QuantParams::passthrough(n);
+    q.da[1] = 0.4; // fc2 input is post-ReLU (unsigned grid)
+    q.qma[1] = 3.0;
+    let (lq, _) = eng.eval(sess, Some(q), batch).unwrap();
+    assert!((lq - lf).abs() > 1e-5, "coarse activation quant had no effect: {lf} vs {lq}");
+}
+
+#[test]
+fn backend_name_and_stats() {
+    let eng = EngineHandle::cpu().unwrap();
+    assert_eq!(eng.backend_name(), "cpu");
+    let (sess, _) = mlp_session(&eng, 19);
+    let batch = mlp_batch(&eng, 64);
+    eng.eval(sess, None, batch).unwrap();
+    let data = lapq::data::vision::SynthVision::new(5);
+    let (x, _) = data.batch_features(0, 64, 64);
+    let acts_batch = eng.register_batch(vec![x]).unwrap();
+    eng.acts(sess, acts_batch).unwrap();
+    let stats = eng.stats().unwrap();
+    assert!(stats.executions >= 2);
+    assert!(stats.compiled >= 2);
+}

@@ -22,7 +22,7 @@ fn fast_cfg(method: Method, bits: BitSpec) -> ExperimentConfig {
 
 #[test]
 fn lapq_beats_or_matches_baselines_on_calib_loss() {
-    let eng = EngineHandle::start_default().expect("artifacts built");
+    let eng = EngineHandle::start_default().expect("engine boots");
     let mut runner = Runner::new(eng);
     let bits = BitSpec::new(4, 4);
 
@@ -102,6 +102,18 @@ fn exclude_first_last_respected() {
     cfg_all.lapq.exclude_first_last = false;
     let res_all = runner.run(&cfg_all).unwrap();
     assert!(res_all.outcome.quant.dw[0] > 0.0);
+}
+
+#[test]
+fn int8_mlp_smoke_near_lossless() {
+    // INT8/INT8 LAPQ on the MLP: the full pipeline (layer-wise -> quad fit
+    // -> Powell) must complete and stay near the FP32 metric.
+    let eng = EngineHandle::start_default().unwrap();
+    let mut runner = Runner::new(eng);
+    let res = runner.run(&fast_cfg(Method::Lapq, BitSpec::new(8, 8))).unwrap();
+    assert!(res.outcome.joint_evals > 0);
+    assert!(res.outcome.calib_loss.is_finite());
+    assert!(res.quant_metric >= res.fp32_metric - 0.03, "{res:?}");
 }
 
 #[test]

@@ -8,7 +8,7 @@ use lapq::util::json::Json;
 
 #[test]
 fn service_roundtrip() {
-    let eng = EngineHandle::start_default().expect("artifacts built");
+    let eng = EngineHandle::start_default().expect("engine boots");
     let service = Service::bind("127.0.0.1:0").unwrap();
     let addr = service.addr;
 

@@ -1,0 +1,207 @@
+//! Offline stand-in for the `log` facade crate: levels, `Record` /
+//! `Metadata`, a global logger slot, and the five logging macros.
+//!
+//! Matches the parts of the real crate this workspace touches, including
+//! `Level <= LevelFilter` comparisons.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity of a single log record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+/// Global maximum-verbosity filter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Target/level pair describing a record before formatting.
+#[derive(Clone, Copy, Debug)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log event: metadata plus preformatted arguments.
+#[derive(Clone, Copy)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// Sink for log records.
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0);
+
+/// Error returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+/// Install the global logger (first caller wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global maximum level.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// Current global maximum level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+/// Macro plumbing: dispatch one record to the installed logger.
+pub fn __log(level: Level, target: &str, args: fmt::Arguments) {
+    if (level as usize) > MAX_LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        let metadata = Metadata { level, target };
+        if logger.enabled(&metadata) {
+            logger.log(&Record { metadata, args });
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Error, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Warn, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Info, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Debug, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Trace, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_vs_filter_ordering() {
+        assert!(Level::Info <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(Level::Error <= LevelFilter::Trace);
+        assert!(!(Level::Error <= LevelFilter::Off));
+    }
+
+    #[test]
+    fn max_level_roundtrip() {
+        set_max_level(LevelFilter::Debug);
+        assert_eq!(max_level(), LevelFilter::Debug);
+        set_max_level(LevelFilter::Info);
+        assert_eq!(max_level(), LevelFilter::Info);
+    }
+
+    #[test]
+    fn macros_expand_without_logger() {
+        // No logger installed in this test binary: must be a silent no-op.
+        info!("hello {}", 1);
+        error!("bad {}", "thing");
+        warn!("warn");
+        debug!("debug");
+        trace!("trace");
+    }
+}

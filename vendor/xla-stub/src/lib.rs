@@ -1,0 +1,178 @@
+//! Typed stub of the `xla` PJRT bindings used by `lapq`'s optional PJRT
+//! engine (`--features xla`).
+//!
+//! The signatures mirror the real crate closely enough that
+//! `rust/src/runtime/engine.rs` compiles unmodified; every runtime entry
+//! point returns [`Error::StubUnavailable`], so `PjRtClient::cpu()` (and
+//! therefore engine boot) fails cleanly and the coordinator falls back to
+//! the pure-Rust CPU backend.  To execute real HLO artifacts, replace this
+//! path dependency with actual PJRT bindings via `[patch]`.
+
+use std::path::Path;
+
+/// Stub error: every operation reports PJRT as unavailable.
+#[derive(Debug, Clone)]
+pub enum Error {
+    StubUnavailable(&'static str),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::StubUnavailable(what))
+}
+
+/// Element types the engine understands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    Pred,
+}
+
+/// Scalar types that can cross the Literal boundary.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+/// Host-side tensor value (stub: shape metadata only).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+/// Array shape (dims + element type).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal { dims: vec![], ty: T::TY }
+    }
+
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], ty: T::TY }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { dims: dims.to_vec(), ty: self.ty })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone(), ty: self.ty })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        unavailable("Literal::get_first_element")
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable("Literal::decompose_tuple")
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-resident buffer (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu (xla stub: patch in real PJRT bindings)")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_boot_fails_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+
+    #[test]
+    fn literal_metadata_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2, 1]).unwrap();
+        let s = l.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 1]);
+        assert_eq!(s.ty(), ElementType::F32);
+    }
+}
