@@ -23,10 +23,12 @@ clippy:
 # no Python or PJRT installed (pure-Rust CPU backend).
 verify: build test
 
-# Perf trajectory smoke: a bounded perf_hotpath run that writes
-# rust/bench_results/BENCH_hotpath.json (uploaded as a CI artifact).
+# Perf trajectory smoke: bounded perf runs that write
+# rust/bench_results/BENCH_hotpath.json and BENCH_int_infer.json
+# (uploaded as CI artifacts).
 bench-smoke:
 	BENCH_SMOKE=1 $(CARGO) bench --bench perf_hotpath
+	BENCH_SMOKE=1 $(CARGO) bench --bench perf_int_gemm
 
 # Layer-1/2 AOT artifacts (optional; requires Python + JAX).  The default
 # build never needs them: the CPU backend executes the model zoo natively.

@@ -1,0 +1,139 @@
+//! Perf: the integer path vs the f32 path — i8×i8→i32 GEMM against the
+//! f32 matmul on the same shapes (INT8 and nibble-packed INT4), plus an
+//! end-to-end INT8 `mlp3` infer against the fake-quant eval it replaces.
+//!
+//! `BENCH_SMOKE=1` runs a bounded subset (CI-sized) — either way the
+//! timings land in `bench_results/BENCH_int_infer.json`, starting the
+//! integer-path perf trajectory.
+
+use lapq::benchkit::{bench, f3, Table};
+use lapq::quant::{minmax, GridKind};
+use lapq::runtime::cpu::{ops, zoo};
+use lapq::runtime::int::kernels;
+use lapq::runtime::int::model::{pack, snap_po2, PackOpts};
+use lapq::runtime::int::packed::{pack_i4, unpack_i4};
+use lapq::runtime::int::{ExecMode, InferSession};
+use lapq::runtime::{Manifest, QuantParams};
+use lapq::tensor::init::init_params;
+use lapq::util::json::Json;
+use lapq::util::rng::Pcg32;
+use std::hint::black_box;
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+    let smoke_var = std::env::var("BENCH_SMOKE");
+    let smoke = matches!(smoke_var.as_deref(), Ok(v) if !v.is_empty() && v != "0");
+    let shapes: &[(usize, usize, usize)] = if smoke {
+        &[(128, 256, 256)]
+    } else {
+        &[(256, 512, 512), (512, 768, 768), (256, 1024, 1024)]
+    };
+    let (warmup, iters) = if smoke { (1, 3) } else { (2, 10) };
+    let mut rng = Pcg32::seeded(17);
+
+    let mut table =
+        Table::new("i8 GEMM vs f32 matmul", &["shape", "f32 ms", "i8 ms", "i4 ms", "i8 speedup"]);
+    let mut gemm_rows: Vec<Json> = Vec::new();
+    for &(m, k, n) in shapes {
+        let a8: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let b8: Vec<i8> = (0..k * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let af: Vec<f32> = a8.iter().map(|&v| v as f32 * 0.05).collect();
+        let bf: Vec<f32> = b8.iter().map(|&v| v as f32 * 0.05).collect();
+        let t_f32 = bench(&format!("f32 matmul {m}x{k}x{n}"), warmup, iters, || {
+            black_box(ops::matmul(&af, &bf, m, k, n));
+        });
+        let t_i8 = bench(&format!("i8 gemm {m}x{k}x{n}"), warmup, iters, || {
+            black_box(kernels::gemm(&a8, &b8, m, k, n));
+        });
+        // INT4: weights stay nibble-packed in memory, unpacked per call
+        // (the bandwidth-bound deployment shape).
+        let a4: Vec<i8> = a8.iter().map(|&v| v.clamp(-7, 7)).collect();
+        let b4src: Vec<i8> = b8.iter().map(|&v| v.clamp(-7, 7)).collect();
+        let b4 = pack_i4(&b4src);
+        let t_i4 = bench(&format!("i4 unpack+gemm {m}x{k}x{n}"), warmup, iters, || {
+            let bu = unpack_i4(&b4, k * n);
+            black_box(kernels::gemm(&a4, &bu, m, k, n));
+        });
+        let speedup = t_f32.mean_s / t_i8.mean_s.max(1e-12);
+        table.row(&[
+            format!("{m}x{k}x{n}"),
+            f3(t_f32.mean_s * 1e3),
+            f3(t_i8.mean_s * 1e3),
+            f3(t_i4.mean_s * 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+        gemm_rows.push(Json::obj(vec![
+            ("m", Json::Num(m as f64)),
+            ("k", Json::Num(k as f64)),
+            ("n", Json::Num(n as f64)),
+            ("f32_ms", Json::Num(t_f32.mean_s * 1e3)),
+            ("i8_ms", Json::Num(t_i8.mean_s * 1e3)),
+            ("i4_ms", Json::Num(t_i4.mean_s * 1e3)),
+            ("i8_speedup", Json::Num(speedup)),
+        ]));
+    }
+    table.print();
+
+    // End-to-end: packed INT8 mlp3 infer vs the fake-quant eval it
+    // replaces, same batch, all layers quantized.
+    let manifest = Manifest::builtin();
+    let spec = manifest.model("mlp3")?.clone();
+    let params = init_params(&spec.params, 7);
+    let data = lapq::data::vision::SynthVision::new(7);
+    let rows = if smoke { 256 } else { 512 };
+    let (x, y) = data.batch_features(0, rows, 64);
+    let acts = zoo::acts(&spec, &params, &[x.clone()])?;
+    let nq = spec.n_quant_layers();
+    let mut q = QuantParams {
+        dw: vec![0.0; nq],
+        qmw: vec![127.0; nq],
+        da: vec![0.0; nq],
+        qma: vec![0.0; nq],
+    };
+    for (i, ql) in spec.quant_layers.iter().enumerate() {
+        let w = params[ql.weight_param].f();
+        q.dw[i] = snap_po2(minmax::minmax_delta(w, 127.0, GridKind::Signed));
+        let kind = GridKind::from_signed(ql.act_signed);
+        q.qma[i] = kind.qmax(8);
+        q.da[i] = snap_po2(minmax::minmax_delta(acts[i].f(), q.qma[i], kind));
+    }
+    let qm = pack(&spec, &params, &q, None, &PackOpts::default())?;
+    let sess = InferSession::new(&spec, &qm)?;
+    let infer_batch = [x.clone()];
+    let eval_batch = vec![x, y];
+    let t_int = bench(&format!("mlp3 int8 infer (B={rows})"), warmup, 2 * iters, || {
+        black_box(sess.infer(&infer_batch, ExecMode::Int).unwrap());
+    });
+    let t_fq = bench(&format!("mlp3 fake-quant eval (B={rows})"), warmup, 2 * iters, || {
+        black_box(zoo::eval(&spec, &params, Some(&qm.quant), &eval_batch).unwrap());
+    });
+    println!(
+        "\nmlp3 INT8: {:.0} rows/s integer vs {:.0} rows/s fake-quant ({:.2}x)",
+        rows as f64 / t_int.mean_s.max(1e-12),
+        rows as f64 / t_fq.mean_s.max(1e-12),
+        t_fq.mean_s / t_int.mean_s.max(1e-12),
+    );
+
+    // Perf-trajectory artifact (uploaded by CI).
+    let report = Json::obj(vec![
+        ("bench", Json::Str("perf_int_gemm".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("gemm", Json::Arr(gemm_rows)),
+        (
+            "infer",
+            Json::obj(vec![
+                ("model", Json::Str("mlp3".into())),
+                ("rows", Json::Num(rows as f64)),
+                ("int8_ms", Json::Num(t_int.mean_s * 1e3)),
+                ("fake_quant_ms", Json::Num(t_fq.mean_s * 1e3)),
+                ("speedup", Json::Num(t_fq.mean_s / t_int.mean_s.max(1e-12))),
+            ]),
+        ),
+    ]);
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_int_infer.json");
+    std::fs::write(&path, report.dump())?;
+    println!("[json] wrote {path:?}");
+    Ok(())
+}

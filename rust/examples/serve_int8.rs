@@ -1,0 +1,88 @@
+//! Serving walkthrough: calibrate → pack → save/load → integer infer.
+//!
+//! Trains the small MLP, calibrates it with LAPQ at W8/A8, packs the
+//! session into a deployable integer artifact (i8 weights, power-of-two
+//! scales), round-trips it through disk, and serves predictions with the
+//! integer engine — verifying bit-for-bit parity against the fake-quant
+//! reference along the way.
+//!
+//!     cargo run --release --example serve_int8
+
+use lapq::config::{BitSpec, ExperimentConfig, Method};
+use lapq::coordinator::jobs::Runner;
+use lapq::coordinator::workload::{Split, Workload};
+use lapq::runtime::cpu::ops::argmax_correct;
+use lapq::runtime::int::{ExecMode, InferSession, PackOpts, QuantizedModel};
+use lapq::runtime::EngineHandle;
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+
+    // 1. Calibrate: train the FP32 model and run LAPQ at INT8.
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp3".into();
+    cfg.train_steps = 150;
+    cfg.lr = 0.1;
+    cfg.bits = BitSpec::new(8, 8);
+    cfg.method = Method::Lapq;
+
+    // 2. Pack: quantize the calibrated session into a deployable
+    //    artifact (i8 weights, per-channel scales, i32 bias).
+    let (sum, _qm) = runner.pack(&cfg, &PackOpts::default())?;
+    println!(
+        "packed {}: {} int tensors, {} -> {} weight bytes ({:.2}x smaller)",
+        sum.key,
+        sum.int_params,
+        sum.f32_bytes,
+        sum.packed_bytes,
+        sum.f32_bytes as f64 / sum.packed_bytes.max(1) as f64,
+    );
+    println!(
+        "val metric: fp32 {:.1}% -> packed int grid {:.1}%",
+        sum.fp32_metric * 100.0,
+        sum.quant_metric * 100.0
+    );
+
+    // 3. Ship it: the artifact is two files, quantized.json + weights.bin.
+    let dir = std::env::temp_dir().join("lapq_serve_int8_example");
+    let cached = runner.packed_get(&sum.key).expect("just packed");
+    cached.save(&dir)?;
+    let deployed = QuantizedModel::load(&dir)?;
+    println!("artifact round-tripped through {dir:?}");
+
+    // 4. Serve: integer forward passes, no engine or session required.
+    let spec = runner.eng.manifest().model(&deployed.model)?.clone();
+    let sess = InferSession::new(&spec, &deployed)?;
+    let workload = Workload::for_model(&spec, cfg.seed)?;
+    let mut rows = 0usize;
+    let mut correct = 0.0f32;
+    let t0 = std::time::Instant::now();
+    for batch in workload.eval_batches(&spec, Split::Val, 4) {
+        let res = sess.infer(&batch[..1], ExecMode::Int)?;
+        correct += argmax_correct(&res.logits, batch[1].i());
+        rows += res.logits.shape[0];
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "integer engine: {rows} rows in {dt:.3}s ({:.0} rows/s), accuracy {:.1}%",
+        rows as f64 / dt.max(1e-9),
+        100.0 * correct / rows.max(1) as f32
+    );
+
+    // 5. Trust it: the integer path matches the fake-quant reference
+    //    bit-for-bit (power-of-two scales, dense INT8).
+    let check = workload.eval_batches(&spec, Split::Val, 1);
+    let int_res = sess.infer(&check[0][..1], ExecMode::Int)?;
+    let sim_res = sess.infer(&check[0][..1], ExecMode::Simulated)?;
+    let exact = int_res
+        .logits
+        .data
+        .iter()
+        .zip(&sim_res.logits.data)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    println!("parity vs fake-quant reference: {}", if exact { "bit-exact" } else { "DIVERGED" });
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

@@ -7,9 +7,13 @@ use crate::config::{ExperimentConfig, Method};
 use crate::coordinator::jobs::Runner;
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::service::Service;
-use crate::runtime::EngineHandle;
-use anyhow::{bail, Result};
+use crate::coordinator::workload::{Split, Workload};
+use crate::runtime::cpu::ops::{argmax_correct, bce_correct};
+use crate::runtime::int::{ExecMode, InferSession, PackOpts, QuantizedModel};
+use crate::runtime::{EngineHandle, Manifest};
+use anyhow::{bail, Context, Result};
 use parser::Args;
+use std::path::{Path, PathBuf};
 
 pub const USAGE: &str = "\
 repro — Loss Aware Post-training Quantization (LAPQ) coordinator
@@ -21,6 +25,13 @@ COMMANDS:
   train      --model M [--steps N] [--lr F]
   quantize   --model M [--wbits N] [--abits N] [--method lapq|mmse|aciq|kld|minmax]
   sweep      --model M          run all methods at the config's bitwidths
+  pack       --model M [--wbits N] [--abits N] [--out DIR] [--no-po2]
+                                calibrate, quantize the weights and write a
+                                deployable integer artifact (mlp3/cnn6/ncf)
+  infer      --packed DIR [--batches N] [--check] [--tol F] [--seed N]
+                                run the packed integer engine on synthetic
+                                val batches; --check verifies against the
+                                fake-quant reference (bit-exact at tol 0)
   serve      [--addr HOST:PORT] start the TCP job service
   metrics                       dump the metrics registry
 
@@ -41,6 +52,8 @@ pub fn run(argv: &[String]) -> Result<()> {
         Some("train") => train(&args),
         Some("quantize") => quantize(&args),
         Some("sweep") => sweep(&args),
+        Some("pack") => pack(&args),
+        Some("infer") => infer(&args),
         Some("serve") => serve(&args),
         Some("metrics") => {
             println!("{}", crate::coordinator::metrics::dump().dump());
@@ -139,6 +152,98 @@ fn sweep(args: &Args) -> Result<()> {
     }
     sched.run_all(&mut runner)?;
     sched.summary_table(&format!("sweep {} W/A {}", cfg.model, cfg.bits.label())).print();
+    Ok(())
+}
+
+fn pack(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let out = args.flag("out").map(PathBuf::from).unwrap_or_else(|| {
+        PathBuf::from(format!("packed/{}_w{}a{}", cfg.model, cfg.bits.weights, cfg.bits.acts))
+    });
+    let opts = PackOpts { po2_scales: !args.flag_bool("no-po2") };
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+    let (sum, qm) = runner.pack(&cfg, &opts)?;
+    qm.save(&out)?;
+    println!("packed {} W/A {} ({}) -> {:?}", sum.model, sum.bits_label, sum.method, out);
+    println!(
+        "  {} int tensors, {} -> {} weight bytes ({:.2}x), fp32 {:.2}% -> int-grid {:.2}% ({:.1}s)",
+        sum.int_params,
+        sum.f32_bytes,
+        sum.packed_bytes,
+        sum.f32_bytes as f64 / sum.packed_bytes.max(1) as f64,
+        sum.fp32_metric * 100.0,
+        sum.quant_metric * 100.0,
+        sum.seconds,
+    );
+    println!("  serve it: repro infer --packed {:?} --check", out);
+    Ok(())
+}
+
+fn infer(args: &Args) -> Result<()> {
+    let dir = args.flag("packed").context("--packed DIR is required (see `repro pack`)")?;
+    let qm = QuantizedModel::load(Path::new(dir))?;
+    let manifest = Manifest::builtin();
+    let spec = manifest.model(&qm.model)?;
+    let seed: u64 = args.flag("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+    let n_batches: usize = args.flag("batches").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let tol: f32 = args.flag("tol").map(|s| s.parse()).transpose()?.unwrap_or(0.0);
+    let check = args.flag_bool("check");
+    let workload = Workload::for_model(spec, seed)?;
+    let sess = InferSession::new(spec, &qm)?;
+
+    let mut rows_total = 0usize;
+    let mut correct_total = 0.0f32;
+    let mut seconds_total = 0.0f64;
+    let mut int_layers = 0usize;
+    for batch in workload.eval_batches(spec, Split::Val, n_batches) {
+        // labels ride last in every eval batch; inputs are the rest
+        let inputs = &batch[..batch.len() - 1];
+        let labels = &batch[batch.len() - 1];
+        let t0 = std::time::Instant::now();
+        let res = sess.infer(inputs, ExecMode::Int)?;
+        int_layers = res.int_layers;
+        seconds_total += t0.elapsed().as_secs_f64();
+        let rows = res.logits.shape.first().copied().unwrap_or(0);
+        rows_total += rows;
+        correct_total += if spec.task == "ncf" {
+            bce_correct(&res.logits, labels.f())
+        } else {
+            argmax_correct(&res.logits, labels.i())
+        };
+        if check {
+            let reference = sess.infer(inputs, ExecMode::Simulated)?;
+            let mut max_diff = 0.0f32;
+            let mut n_diff = 0usize;
+            for (a, b) in res.logits.data.iter().zip(&reference.logits.data) {
+                if a.to_bits() != b.to_bits() {
+                    n_diff += 1;
+                }
+                max_diff = max_diff.max((a - b).abs());
+            }
+            if n_diff == 0 {
+                println!("  parity: bit-exact with the fake-quant reference ({rows} rows)");
+            } else {
+                println!(
+                    "  parity: {n_diff}/{} logits differ, max |diff| {max_diff:.3e}",
+                    res.logits.numel()
+                );
+            }
+            if max_diff > tol {
+                bail!("integer engine diverges from fake-quant reference: {max_diff} > {tol}");
+            }
+        }
+    }
+    println!(
+        "{}: {} rows in {:.3}s ({:.0} rows/s), metric {:.2}%, int layers {}/{}",
+        qm.model,
+        rows_total,
+        seconds_total,
+        rows_total as f64 / seconds_total.max(1e-9),
+        100.0 * correct_total / rows_total.max(1) as f32,
+        int_layers,
+        qm.active_w.len(),
+    );
     Ok(())
 }
 

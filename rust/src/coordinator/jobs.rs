@@ -3,18 +3,25 @@
 //! The [`Runner`] owns the engine handle and a **trained-model cache** —
 //! every (model, seed, steps) FP32 training run happens once and is shared
 //! by all methods/bitwidths that quantize it (exactly how the paper reuses
-//! one pretrained checkpoint across its table rows).
+//! one pretrained checkpoint across its table rows).  It also owns the
+//! serving state: a small MRU cache of packed [`QuantizedModel`]s keyed
+//! by `model:wN aN:method`, fed by [`Runner::pack`] and consumed by
+//! [`Runner::infer`] (the `pack`/`infer` service endpoints).
 
 use super::evaluator::EvalSet;
+use super::metrics;
 use super::trainer::{train_full, TrainCfg, TrainReport};
 use super::workload::{Split, Workload};
 use crate::config::ExperimentConfig;
 use crate::lapq::calibration::{collect, CalibData};
 use crate::lapq::pipeline::{calibrate, calibrate_with_init, InitKind, QuantOutcome};
+use crate::runtime::cpu::ops::Arr;
+use crate::runtime::int::{ExecMode, InferSession, PackOpts, QuantizedModel};
 use crate::runtime::{EngineHandle, SessionId};
 use crate::tensor::HostTensor;
 use anyhow::Result;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Outcome of a full quantization job.
 #[derive(Clone, Debug)]
@@ -30,17 +37,50 @@ pub struct JobResult {
     pub seconds: f64,
 }
 
+/// Capacity of the packed-model MRU cache.
+pub const PACKED_CACHE_CAP: usize = 4;
+
+/// What a `pack` job reports back (the artifact itself lands in the
+/// Runner's cache and optionally on disk).
+#[derive(Clone, Debug)]
+pub struct PackSummary {
+    pub key: String,
+    pub model: String,
+    pub bits_label: String,
+    pub method: String,
+    pub int_params: usize,
+    pub f32_bytes: usize,
+    pub packed_bytes: usize,
+    /// Task metric of the FP32 model on the val set.
+    pub fp32_metric: f32,
+    /// Task metric under the *effective* (packed, po2-snapped) grids.
+    pub quant_metric: f32,
+    pub seconds: f64,
+}
+
+/// One integer-engine forward pass served from the cache.
+#[derive(Clone, Debug)]
+pub struct InferReply {
+    pub key: String,
+    pub logits: Arr,
+    pub rows: usize,
+    pub int_layers: usize,
+    pub seconds: f64,
+}
+
 pub struct Runner {
     pub eng: EngineHandle,
     /// (model, seed, steps) -> trained FP32 params.
     trained: HashMap<(String, u64, usize), (Vec<HostTensor>, TrainReport)>,
     /// cached val sets per (model, seed, val_size)
     val_batches: usize,
+    /// MRU cache of packed models (front = most recent).
+    packed: Vec<(String, Arc<QuantizedModel>)>,
 }
 
 impl Runner {
     pub fn new(eng: EngineHandle) -> Self {
-        Runner { eng, trained: HashMap::new(), val_batches: 0 }
+        Runner { eng, trained: HashMap::new(), val_batches: 0, packed: Vec::new() }
     }
 
     /// Train (or fetch cached) FP32 parameters for a config.
@@ -78,6 +118,17 @@ impl Runner {
         Ok((sess, workload, val, calib))
     }
 
+    /// Release everything a job acquired: calib batches, val batches,
+    /// the session.  Must run on success, error and panic paths alike —
+    /// the service outlives all three.
+    fn cleanup(&self, sess: SessionId, val: &EvalSet, calib: &CalibData) {
+        calib.release(&self.eng);
+        for &b in &val.batches {
+            let _ = self.eng.drop_batch(b);
+        }
+        let _ = self.eng.drop_session(sess);
+    }
+
     fn finish(
         &self,
         cfg: &ExperimentConfig,
@@ -89,11 +140,7 @@ impl Runner {
     ) -> Result<JobResult> {
         let fp32_metric = val.metric(&self.eng, sess, None)?;
         let quant_metric = val.metric(&self.eng, sess, Some(&outcome.quant))?;
-        calib.release(&self.eng);
-        for &b in &val.batches {
-            let _ = self.eng.drop_batch(b);
-        }
-        self.eng.drop_session(sess)?;
+        self.cleanup(sess, val, calib);
         Ok(JobResult {
             model: cfg.model.clone(),
             bits_label: cfg.bits.label(),
@@ -146,5 +193,118 @@ impl Runner {
     ) -> Result<(SessionId, EvalSet, CalibData)> {
         let (sess, _w, val, calib) = self.prepare(cfg)?;
         Ok((sess, val, calib))
+    }
+
+    /// Cache key for a pack job.
+    pub fn pack_key(cfg: &ExperimentConfig) -> String {
+        format!("{}:w{}a{}:{}", cfg.model, cfg.bits.weights, cfg.bits.acts, cfg.method.name())
+    }
+
+    /// Full pack job: train (cached) → calibrate → quantize the session
+    /// parameters into a [`QuantizedModel`], report fp32 vs packed-grid
+    /// metrics, and park the artifact in the MRU cache under
+    /// [`Runner::pack_key`].
+    pub fn pack(
+        &mut self,
+        cfg: &ExperimentConfig,
+        opts: &PackOpts,
+    ) -> Result<(PackSummary, Arc<QuantizedModel>)> {
+        let t0 = std::time::Instant::now();
+        let spec = self.eng.manifest().model(&cfg.model)?.clone();
+        let (sess, _w, val, calib) = self.prepare(cfg)?;
+        // Catch unwinds too: the service survives kernel panics via its
+        // own catch_unwind, so cleanup must not be skipped or the engine
+        // would leak this job's session and batches on every bad request.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let outcome = calibrate(&self.eng, sess, &spec, cfg, &calib)?;
+            let active = (outcome.mask.weights.as_slice(), outcome.mask.acts.as_slice());
+            let qm = self.eng.pack(&cfg.model, sess, &outcome.quant, Some(active), opts)?;
+            // Metrics under the grids the artifact actually encodes.
+            let fp32_metric = val.metric(&self.eng, sess, None)?;
+            let quant_metric = val.metric(&self.eng, sess, Some(&qm.quant))?;
+            Ok::<_, anyhow::Error>((qm, fp32_metric, quant_metric))
+        }));
+        self.cleanup(sess, &val, &calib);
+        let (qm, fp32_metric, quant_metric) = match result {
+            Ok(r) => r?,
+            Err(payload) => std::panic::resume_unwind(payload),
+        };
+        let key = Self::pack_key(cfg);
+        let summary = PackSummary {
+            key: key.clone(),
+            model: qm.model.clone(),
+            bits_label: cfg.bits.label(),
+            method: cfg.method.name().to_string(),
+            int_params: qm.int_params(),
+            f32_bytes: qm.f32_bytes(),
+            packed_bytes: qm.packed_bytes(),
+            fp32_metric,
+            quant_metric,
+            seconds: t0.elapsed().as_secs_f64(),
+        };
+        let arc = Arc::new(qm);
+        self.cache_put(key, arc.clone());
+        metrics::observe("pack", summary.seconds, 1);
+        log::info!(
+            "pack {}: {} int params, {} -> {} bytes, fp32 {:.3} -> int-grid {:.3} ({:.1}s)",
+            summary.key,
+            summary.int_params,
+            summary.f32_bytes,
+            summary.packed_bytes,
+            summary.fp32_metric,
+            summary.quant_metric,
+            summary.seconds
+        );
+        Ok((summary, arc))
+    }
+
+    fn cache_put(&mut self, key: String, qm: Arc<QuantizedModel>) {
+        self.packed.retain(|(k, _)| *k != key);
+        self.packed.insert(0, (key, qm));
+        while self.packed.len() > PACKED_CACHE_CAP {
+            let (evicted, _) = self.packed.pop().expect("non-empty");
+            metrics::inc("packed_cache_evictions");
+            log::info!("packed cache evicted {evicted}");
+        }
+        metrics::set("packed_cache_size", self.packed.len() as f64);
+    }
+
+    /// Look up a packed model by exact key or bare model name (most
+    /// recently used wins), refreshing its MRU position.
+    pub fn packed_get(&mut self, key: &str) -> Option<Arc<QuantizedModel>> {
+        let pos = self.packed.iter().position(|(k, m)| k == key || m.model == key)?;
+        let entry = self.packed.remove(pos);
+        let qm = entry.1.clone();
+        self.packed.insert(0, entry);
+        metrics::inc("packed_cache_hits");
+        Some(qm)
+    }
+
+    /// Serve one batched prediction from a cached packed model with the
+    /// integer engine.  `inputs` is `(x,)` for vision, `(users, items)`
+    /// for NCF.
+    pub fn infer(&mut self, key: &str, inputs: &[HostTensor]) -> Result<InferReply> {
+        let qm = match self.packed_get(key) {
+            Some(qm) => qm,
+            None => {
+                metrics::inc("packed_cache_misses");
+                anyhow::bail!("no packed model '{key}' in cache (run pack first)");
+            }
+        };
+        let spec = self.eng.manifest().model(&qm.model)?;
+        let t0 = std::time::Instant::now();
+        let sess = InferSession::new(spec, &qm)?;
+        let res = sess.infer(inputs, ExecMode::Int)?;
+        let seconds = t0.elapsed().as_secs_f64();
+        let rows = res.logits.shape.first().copied().unwrap_or(0);
+        metrics::observe("infer", seconds, rows);
+        metrics::inc(&format!("infer_{}", qm.model));
+        Ok(InferReply {
+            key: key.to_string(),
+            logits: res.logits,
+            rows,
+            int_layers: res.int_layers,
+            seconds,
+        })
     }
 }

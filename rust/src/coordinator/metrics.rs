@@ -34,6 +34,19 @@ pub fn get(name: &str) -> f64 {
     with(|m| m.get(name).copied().unwrap_or(0.0))
 }
 
+/// Record one latency observation for a serving path: accumulates
+/// `<name>_seconds` / `<name>_calls` / `<name>_items` and refreshes the
+/// `<name>_last_ms` gauge, so `dump()` exposes mean latency and
+/// throughput (`items / seconds`) without a histogram.
+pub fn observe(name: &str, seconds: f64, items: usize) {
+    with(|m| {
+        *m.entry(format!("{name}_seconds")).or_insert(0.0) += seconds;
+        *m.entry(format!("{name}_calls")).or_insert(0.0) += 1.0;
+        *m.entry(format!("{name}_items")).or_insert(0.0) += items as f64;
+        m.insert(format!("{name}_last_ms"), seconds * 1e3);
+    });
+}
+
 /// Time a closure into `<name>_seconds` (accumulating) and count calls.
 pub fn timed<T>(name: &str, f: impl FnOnce() -> T) -> T {
     let t0 = std::time::Instant::now();
@@ -80,5 +93,12 @@ mod tests {
         assert_eq!(v, 42);
         assert_eq!(get("op_calls"), 1.0);
         assert!(get("op_seconds") >= 0.0);
+        // observe(): latency + throughput counters for the serving paths
+        observe("obs_test", 0.5, 128);
+        observe("obs_test", 0.25, 64);
+        assert_eq!(get("obs_test_calls"), 2.0);
+        assert_eq!(get("obs_test_items"), 192.0);
+        assert_eq!(get("obs_test_seconds"), 0.75);
+        assert_eq!(get("obs_test_last_ms"), 250.0);
     }
 }

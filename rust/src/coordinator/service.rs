@@ -1,19 +1,29 @@
-//! TCP job service: JSON-lines protocol for submitting quantization jobs
-//! to a running coordinator (the "deployment" face of the system).
+//! TCP job service: JSON-lines protocol for submitting quantization and
+//! serving jobs to a running coordinator (the "deployment" face of the
+//! system).
 //!
 //! Protocol (one JSON object per line):
 //!   {"cmd":"ping"}                         -> {"ok":true,"pong":true}
 //!   {"cmd":"models"}                       -> {"ok":true,"models":[...]}
 //!   {"cmd":"metrics"}                      -> {"ok":true,"metrics":{...}}
 //!   {"cmd":"quantize", ...config fields}   -> {"ok":true,"result":{...}}
+//!   {"cmd":"pack", ...config fields,       -> {"ok":true,"packed":{...}}
+//!        "po2":bool?}                         (artifact cached under "key")
+//!   {"cmd":"infer", "key":"...",           -> {"ok":true,"result":
+//!        "x":[[...]] | "x":[...]+"shape",        {"logits":[[...]],
+//!        or "users":[...],"items":[...]}          "predictions":[...],...}}
 //!
+//! Every error — malformed JSON, unknown `cmd`, a failing job, even a
+//! panic inside a kernel — comes back as `{"ok":false,"error":...}` on
+//! the same connection; the line loop and the listener keep serving.
 //! The listener thread accepts connections and forwards jobs to the
-//! single Runner (PJRT engine behind it); responses stream back on the
-//! same connection.  `max_requests` bounds the serve loop for tests.
+//! single Runner; responses stream back on the same connection.
+//! `max_requests` bounds the serve loop for tests.
 
 use super::jobs::Runner;
 use super::metrics;
 use crate::config::ExperimentConfig;
+use crate::tensor::HostTensor;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -35,12 +45,30 @@ impl Service {
 
     /// Serve until `max_requests` requests have been handled
     /// (`usize::MAX` for forever).  Connections are handled sequentially:
-    /// quantization jobs are minutes-long and own the PJRT engine.
+    /// quantization jobs are minutes-long and own the engine.  A broken
+    /// connection never takes the listener down.
     pub fn serve(&self, runner: &mut Runner, max_requests: usize) -> Result<()> {
         let mut handled = 0usize;
+        let mut accept_failures = 0u32;
         for stream in self.listener.incoming() {
-            let stream = stream?;
-            handled += self.handle_conn(stream, runner, max_requests - handled)?;
+            let stream = match stream {
+                Ok(s) => s,
+                Err(e) => {
+                    // Transient accept errors (ECONNABORTED, brief fd
+                    // pressure) are throttled and retried; a listener
+                    // that fails persistently is surfaced instead of
+                    // spinning forever.
+                    accept_failures += 1;
+                    if accept_failures >= 32 {
+                        return Err(e).context("accept failing persistently");
+                    }
+                    log::warn!("accept failed ({accept_failures}): {e}");
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                    continue;
+                }
+            };
+            accept_failures = 0;
+            handled += self.handle_conn(stream, runner, max_requests - handled);
             if handled >= max_requests {
                 break;
             }
@@ -48,15 +76,21 @@ impl Service {
         Ok(())
     }
 
-    fn handle_conn(
-        &self,
-        stream: TcpStream,
-        runner: &mut Runner,
-        budget: usize,
-    ) -> Result<usize> {
-        let peer = stream.peer_addr()?;
+    /// Serve one connection; returns how many requests it consumed.
+    /// I/O errors end the connection (logged), not the service.
+    fn handle_conn(&self, stream: TcpStream, runner: &mut Runner, budget: usize) -> usize {
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "<unknown>".to_string());
         log::info!("conn from {peer}");
-        let mut writer = stream.try_clone()?;
+        let mut writer = match stream.try_clone() {
+            Ok(w) => w,
+            Err(e) => {
+                log::warn!("conn {peer}: clone failed: {e}");
+                return 0;
+            }
+        };
         let reader = BufReader::new(stream);
         let mut handled = 0usize;
         for line in reader.lines() {
@@ -69,24 +103,38 @@ impl Service {
             }
             metrics::inc("service_requests");
             let resp = self.dispatch(&line, runner);
-            writer.write_all(resp.dump().as_bytes())?;
-            writer.write_all(b"\n")?;
-            writer.flush()?;
+            let ok = writer
+                .write_all(resp.dump().as_bytes())
+                .and_then(|_| writer.write_all(b"\n"))
+                .and_then(|_| writer.flush());
+            if let Err(e) = ok {
+                log::warn!("conn {peer}: write failed: {e}");
+                break;
+            }
             handled += 1;
             if handled >= budget {
                 break;
             }
         }
-        Ok(handled)
+        handled
     }
 
+    /// Every failure mode becomes a structured `{"ok":false}` response:
+    /// parse/config errors, job errors, and panics unwinding out of a
+    /// kernel (the CPU backend recovers its mutex from poisoning, so the
+    /// runner stays usable afterwards).
     fn dispatch(&self, line: &str, runner: &mut Runner) -> Json {
-        match self.dispatch_inner(line, runner) {
-            Ok(j) => j,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::Str(format!("{e:#}"))),
-            ]),
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.dispatch_inner(line, runner)
+        }));
+        let err = |msg: String| {
+            metrics::inc("service_errors");
+            Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg))])
+        };
+        match caught {
+            Ok(Ok(j)) => j,
+            Ok(Err(e)) => err(format!("{e:#}")),
+            Err(payload) => err(format!("internal panic: {}", panic_text(payload.as_ref()))),
         }
     }
 
@@ -111,6 +159,7 @@ impl Service {
             "quantize" => {
                 let cfg = ExperimentConfig::from_json(&req)?;
                 let res = runner.run(&cfg)?;
+                let bools = |v: &[bool]| Json::Arr(v.iter().map(|&b| Json::Bool(b)).collect());
                 Ok(Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     (
@@ -124,7 +173,79 @@ impl Service {
                             ("calib_loss", Json::Num(res.outcome.calib_loss)),
                             ("fp32_calib_loss", Json::Num(res.outcome.fp32_calib_loss)),
                             ("joint_evals", Json::Num(res.outcome.joint_evals as f64)),
+                            ("active_w", bools(&res.outcome.mask.weights)),
+                            ("active_a", bools(&res.outcome.mask.acts)),
                             ("seconds", Json::Num(res.seconds)),
+                        ]),
+                    ),
+                ]))
+            }
+            "pack" => {
+                let cfg = ExperimentConfig::from_json(&req)?;
+                let opts = crate::runtime::int::PackOpts {
+                    po2_scales: req.get("po2").and_then(|v| v.as_bool()).unwrap_or(true),
+                };
+                // Deliberately no write-to-disk option here: letting a
+                // network client choose a server-side path would be a
+                // remote file-write primitive.  Saving artifacts is the
+                // CLI's job (`repro pack --out DIR`).
+                let (sum, _qm) = runner.pack(&cfg, &opts)?;
+                Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    (
+                        "packed",
+                        Json::obj(vec![
+                            ("key", Json::Str(sum.key)),
+                            ("model", Json::Str(sum.model)),
+                            ("bits", Json::Str(sum.bits_label)),
+                            ("method", Json::Str(sum.method)),
+                            ("int_params", Json::Num(sum.int_params as f64)),
+                            ("f32_bytes", Json::Num(sum.f32_bytes as f64)),
+                            ("packed_bytes", Json::Num(sum.packed_bytes as f64)),
+                            ("fp32_metric", Json::Num(sum.fp32_metric as f64)),
+                            ("quant_metric", Json::Num(sum.quant_metric as f64)),
+                            ("seconds", Json::Num(sum.seconds)),
+                        ]),
+                    ),
+                ]))
+            }
+            "infer" => {
+                let key = req
+                    .get("key")
+                    .or_else(|| req.get("model"))
+                    .and_then(|v| v.as_str())
+                    .context("infer needs 'key' (from pack) or 'model'")?;
+                let inputs = parse_infer_inputs(&req)?;
+                let reply = runner.infer(key, &inputs)?;
+                let c = reply.logits.last_dim().max(1);
+                let mut logits_rows = Vec::new();
+                let mut predictions = Vec::new();
+                for row in reply.logits.data.chunks(c) {
+                    logits_rows.push(Json::arr_f32(row));
+                    if c > 1 {
+                        let mut best = 0usize;
+                        for (j, &v) in row.iter().enumerate() {
+                            if v > row[best] {
+                                best = j;
+                            }
+                        }
+                        predictions.push(Json::Num(best as f64));
+                    } else {
+                        let hit = row.first().is_some_and(|&v| v > 0.0);
+                        predictions.push(Json::Num(if hit { 1.0 } else { 0.0 }));
+                    }
+                }
+                Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    (
+                        "result",
+                        Json::obj(vec![
+                            ("key", Json::Str(reply.key)),
+                            ("rows", Json::Num(reply.rows as f64)),
+                            ("int_layers", Json::Num(reply.int_layers as f64)),
+                            ("seconds", Json::Num(reply.seconds)),
+                            ("logits", Json::Arr(logits_rows)),
+                            ("predictions", Json::Arr(predictions)),
                         ]),
                     ),
                 ]))
@@ -132,6 +253,66 @@ impl Service {
             other => anyhow::bail!("unknown cmd '{other}'"),
         }
     }
+}
+
+fn panic_text(p: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s
+    } else {
+        "opaque panic payload"
+    }
+}
+
+/// Decode the wire form of an infer batch: `users`+`items` i32 arrays
+/// (NCF), nested `x` rows (feature models), or flat `x` + `shape`
+/// (images).
+fn parse_infer_inputs(req: &Json) -> Result<Vec<HostTensor>> {
+    if let (Some(u), Some(it)) = (req.get("users"), req.get("items")) {
+        let to_i32 = |j: &Json, what: &str| -> Result<Vec<i32>> {
+            let arr = j.as_arr().with_context(|| format!("'{what}' must be an array"))?;
+            let out: Vec<i32> = arr.iter().filter_map(|v| v.as_f64()).map(|v| v as i32).collect();
+            if out.len() != arr.len() {
+                anyhow::bail!("non-numeric entries in '{what}'");
+            }
+            Ok(out)
+        };
+        let users = to_i32(u, "users")?;
+        let items = to_i32(it, "items")?;
+        let ut = HostTensor::i32(vec![users.len()], users);
+        let it = HostTensor::i32(vec![items.len()], items);
+        return Ok(vec![ut, it]);
+    }
+    let x = req.get("x").context("infer needs 'x' (vision) or 'users'+'items' (ncf)")?;
+    let rows = x.as_arr().context("'x' must be an array")?;
+    if rows.is_empty() {
+        anyhow::bail!("'x' is empty");
+    }
+    if rows[0].as_arr().is_some() {
+        let cols = rows[0].as_arr().unwrap_or(&[]).len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            let rr = r.as_arr().context("'x' rows must all be arrays")?;
+            if rr.len() != cols {
+                anyhow::bail!("ragged 'x' rows ({} vs {cols})", rr.len());
+            }
+            data.extend(rr.iter().filter_map(|v| v.as_f64()).map(|v| v as f32));
+        }
+        if data.len() != rows.len() * cols {
+            anyhow::bail!("non-numeric entries in 'x'");
+        }
+        return Ok(vec![HostTensor::f32(vec![rows.len(), cols], data)]);
+    }
+    let data: Vec<f32> = rows.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect();
+    if data.len() != rows.len() {
+        anyhow::bail!("non-numeric entries in 'x'");
+    }
+    let shape = req.get("shape").context("flat 'x' needs a 'shape' array")?.usize_arr();
+    if shape.iter().product::<usize>() != data.len() {
+        anyhow::bail!("shape {shape:?} does not cover {} values", data.len());
+    }
+    Ok(vec![HostTensor::f32(shape, data)])
 }
 
 /// Minimal client for tests and scripting.

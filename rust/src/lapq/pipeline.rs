@@ -26,6 +26,10 @@ pub struct QuantOutcome {
     pub method: Method,
     pub bits: BitSpec,
     pub quant: QuantParams,
+    /// Which layers were active in the joint phase (weights/activations),
+    /// so `pack` and downstream tooling can tell "masked off" apart from
+    /// "calibrated to Δ=0" without re-deriving the config's mask.
+    pub mask: LayerMask,
     /// Calibration loss of the final Δ.
     pub calib_loss: f64,
     /// FP32 loss on the same calibration batches.
@@ -298,6 +302,7 @@ pub fn calibrate_with_init(
         method: Method::Lapq,
         bits: cfg.bits,
         quant: obj.quant_params(&dw, &da),
+        mask: mask.clone(),
         calib_loss,
         fp32_calib_loss,
         init_loss,
@@ -344,6 +349,7 @@ pub fn calibrate(
                 method: m,
                 bits: cfg.bits,
                 quant: obj.quant_params(&dw, &da),
+                mask: mask.clone(),
                 calib_loss,
                 fp32_calib_loss,
                 init_loss: calib_loss,

@@ -17,6 +17,12 @@
 //!   kernels) through the `xla` bindings.  The workspace vendors a typed
 //!   stub of those bindings so the feature always compiles; patch in the
 //!   real crate to run it.
+//! * **Integer inference engine** (`runtime::int`): packs a calibrated
+//!   session into a deployable artifact (i8 / nibble-packed i4 weights,
+//!   per-channel scales, i32 bias) and executes `mlp3`/`cnn6`/`ncf` with
+//!   real integer kernels — bit-compatible with the fake-quant reference
+//!   under the power-of-two scales `pack` emits.  Served through the
+//!   coordinator's `pack`/`infer` endpoints and the CLI.
 //! * **Coordinator** (`coordinator`, `lapq`, `quant`, `optim`,
 //!   `analysis`): synthetic data substrates, the LAPQ calibration
 //!   pipeline (layer-wise Lp → quadratic approximation → Powell joint

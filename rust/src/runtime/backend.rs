@@ -215,6 +215,23 @@ impl EngineHandle {
     pub fn stats(&self) -> Result<EngineStats> {
         self.inner.stats()
     }
+
+    /// Pack a calibrated session into a deployable integer artifact:
+    /// quantize its parameters onto the effective Δ grids (backend-
+    /// agnostic — it only needs `get_params` and the manifest spec).
+    /// `active` optionally records the calibration's layer mask.
+    pub fn pack(
+        &self,
+        model: &str,
+        sess: SessionId,
+        quant: &QuantParams,
+        active: Option<(&[bool], &[bool])>,
+        opts: &super::int::PackOpts,
+    ) -> Result<super::int::QuantizedModel> {
+        let spec = self.manifest().model(model)?;
+        let params = self.get_params(sess)?;
+        super::int::model::pack(spec, &params, quant, active, opts)
+    }
 }
 
 #[cfg(test)]

@@ -60,10 +60,13 @@ pub fn n_threads() -> usize {
 }
 
 /// Run `f(item_index, item_slice)` over consecutive `item`-sized chunks of
-/// `data`, splitting the items across scoped threads.
-fn par_items<F>(data: &mut [f32], item: usize, f: F)
+/// `data`, splitting the items across scoped threads.  Generic over the
+/// element type so the integer kernels (`runtime/int/kernels.rs`) share
+/// the same scheduling.
+pub(crate) fn par_items<T, F>(data: &mut [T], item: usize, f: F)
 where
-    F: Fn(usize, &mut [f32]) + Sync,
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
 {
     assert!(item > 0 && data.len() % item == 0);
     let n = data.len() / item;

@@ -534,8 +534,9 @@ fn check_quant(spec: &ModelSpec, quant: Option<&QuantParams>) -> Result<()> {
 
 /// Reject vision inputs whose trailing dims disagree with the model's
 /// input spec (any batch size is fine) — a shape assert deeper in the
-/// graph would panic instead of erroring.
-fn check_vision_input(spec: &ModelSpec, x: &HostTensor) -> Result<()> {
+/// graph would panic instead of erroring.  Shared with the integer
+/// engine (`runtime/int/session.rs`), which enforces the same contract.
+pub(crate) fn check_vision_input(spec: &ModelSpec, x: &HostTensor) -> Result<()> {
     let want = &spec.input_spec["eval"][0].shape[1..];
     if x.shape.len() != want.len() + 1 || x.shape[1..] != *want {
         bail!("input shape {:?} incompatible with {} (want [B, {want:?}])", x.shape, spec.name);
@@ -544,7 +545,8 @@ fn check_vision_input(spec: &ModelSpec, x: &HostTensor) -> Result<()> {
 }
 
 /// Reject out-of-range NCF ids up front (the embed gather asserts).
-fn check_ids(spec: &ModelSpec, users: &[i32], items: &[i32]) -> Result<()> {
+/// Shared with the integer engine.
+pub(crate) fn check_ids(spec: &ModelSpec, users: &[i32], items: &[i32]) -> Result<()> {
     let n_users = spec.params[0].shape[0] as i32;
     let n_items = spec.params[1].shape[0] as i32;
     if users.iter().any(|&u| u < 0 || u >= n_users) {

@@ -1,0 +1,350 @@
+//! Integer forward kernels: activation quantization, i8×i8→i32 GEMM
+//! (batch-parallel on scoped threads, like `runtime/cpu/ops.rs`), im2col
+//! convolution, the dequantize+bias epilogue, and a fixed-point
+//! requantization multiplier for pure-integer targets.
+//!
+//! Numerics contract: activation quantization uses the same
+//! `round_half_even(x / Δ)` + clamp as `quant::quantizer::fake_quant_one`,
+//! and the epilogue computes `acc as f32 * (Δa·Δw[c]) + bias[c]` with
+//! plain (non-fused) f32 ops.  With power-of-two scales — the `pack`
+//! default — every f32 step is exact while the i32 accumulator stays
+//! below 2²⁴, which is what makes the integer engine bit-compatible with
+//! the fake-quant reference on the dense models (see `tests/int_parity`).
+
+use crate::quant::quantizer::round_half_even;
+use crate::runtime::cpu::ops::{n_threads, par_items};
+
+/// Quantized-activation element: `i8` (signed grids) or `u8` (post-ReLU
+/// unsigned grids, qmax ≤ 255).
+pub trait QAct: Copy + Default + Send + Sync {
+    fn widen(self) -> i32;
+}
+
+impl QAct for i8 {
+    fn widen(self) -> i32 {
+        self as i32
+    }
+}
+
+impl QAct for u8 {
+    fn widen(self) -> i32 {
+        self as i32
+    }
+}
+
+/// Quantize to a signed grid: `clamp(round_half_even(x/Δ), -qmax, qmax)`.
+/// The integer returned is exactly the grid index `fake_quant_one` snaps
+/// to (it multiplies the same index back by Δ).
+pub fn quantize_signed(xs: &[f32], delta: f32, qmax: f32) -> Vec<i8> {
+    assert!(delta > 0.0 && qmax <= 127.0, "signed grid Δ={delta} qmax={qmax}");
+    xs.iter().map(|&x| round_half_even(x / delta).clamp(-qmax, qmax) as i8).collect()
+}
+
+/// Quantize to an unsigned grid: `clamp(round_half_even(x/Δ), 0, qmax)`.
+pub fn quantize_unsigned(xs: &[f32], delta: f32, qmax: f32) -> Vec<u8> {
+    assert!(delta > 0.0 && qmax <= 255.0, "unsigned grid Δ={delta} qmax={qmax}");
+    xs.iter().map(|&x| round_half_even(x / delta).clamp(0.0, qmax) as u8).collect()
+}
+
+fn gemm_row<A: QAct>(a_row: &[A], b: &[i8], n: usize, out: &mut [i32]) {
+    for (k, &av) in a_row.iter().enumerate() {
+        let a = av.widen();
+        if a != 0 {
+            let b_row = &b[k * n..k * n + n];
+            for (o, &bv) in out.iter_mut().zip(b_row) {
+                *o += a * bv as i32;
+            }
+        }
+    }
+}
+
+/// `(M,K) quantized acts @ (K,N) i8 weights -> (M,N) i32` — row-blocked,
+/// parallel over output rows when the work is substantial.  Skips
+/// zero-valued activations (common post-ReLU), like the f32 `matmul`.
+pub fn gemm<A: QAct>(a: &[A], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0i32; m * n];
+    if m * k * n >= (1 << 21) && n_threads() > 1 {
+        par_items(&mut out, n, |row, o| gemm_row(&a[row * k..(row + 1) * k], b, n, o));
+    } else {
+        for (row, o) in out.chunks_mut(n).enumerate() {
+            gemm_row(&a[row * k..(row + 1) * k], b, n, o);
+        }
+    }
+    out
+}
+
+/// SAME-padding geometry for the integer conv (groups = 1), mirroring
+/// `ops::conv_dims` exactly.
+#[derive(Clone, Debug)]
+pub struct ConvShape {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub ci: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub co: usize,
+    pub stride: usize,
+    pub ho: usize,
+    pub wo: usize,
+    pub pad_t: usize,
+    pub pad_l: usize,
+}
+
+pub fn conv_shape(xs: &[usize], ws: &[usize], stride: usize) -> ConvShape {
+    assert_eq!(xs.len(), 4, "conv input must be NHWC, got {xs:?}");
+    assert_eq!(ws.len(), 4, "conv weight must be HWIO, got {ws:?}");
+    let (n, h, w, ci) = (xs[0], xs[1], xs[2], xs[3]);
+    let (kh, kw, wci, co) = (ws[0], ws[1], ws[2], ws[3]);
+    assert_eq!(ci, wci, "channels {ci} != weight {wci} (integer conv has groups=1)");
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let pad_h = ((ho - 1) * stride + kh).saturating_sub(h);
+    let pad_w = ((wo - 1) * stride + kw).saturating_sub(w);
+    ConvShape { n, h, w, ci, kh, kw, co, stride, ho, wo, pad_t: pad_h / 2, pad_l: pad_w / 2 }
+}
+
+/// Gather one image's receptive fields into im2col rows of length
+/// `kh*kw*ci`, zero-padded at the borders (the symmetric grid has no
+/// zero-point, so padding is exactly `q = 0`).
+pub fn im2col<A: QAct>(xq: &[A], d: &ConvShape) -> Vec<A> {
+    let kk = d.kh * d.kw * d.ci;
+    let mut out = vec![A::default(); d.ho * d.wo * kk];
+    for oy in 0..d.ho {
+        for ox in 0..d.wo {
+            let rbase = (oy * d.wo + ox) * kk;
+            for ky in 0..d.kh {
+                let iy = (oy * d.stride + ky) as isize - d.pad_t as isize;
+                if iy < 0 || iy >= d.h as isize {
+                    continue;
+                }
+                for kx in 0..d.kw {
+                    let ix = (ox * d.stride + kx) as isize - d.pad_l as isize;
+                    if ix < 0 || ix >= d.w as isize {
+                        continue;
+                    }
+                    let src = (iy as usize * d.w + ix as usize) * d.ci;
+                    let dst = rbase + (ky * d.kw + kx) * d.ci;
+                    out[dst..dst + d.ci].copy_from_slice(&xq[src..src + d.ci]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Integer SAME conv over a quantized NHWC batch: per image, im2col +
+/// i8 GEMM against the HWIO weight viewed as `(kh*kw*ci, co)`.  Parallel
+/// over images on scoped threads.
+pub fn conv_int<A: QAct>(xq: &[A], wq: &[i8], d: &ConvShape) -> Vec<i32> {
+    let kk = d.kh * d.kw * d.ci;
+    assert_eq!(xq.len(), d.n * d.h * d.w * d.ci);
+    assert_eq!(wq.len(), kk * d.co);
+    let per_x = d.h * d.w * d.ci;
+    let per_o = d.ho * d.wo * d.co;
+    let mut out = vec![0i32; d.n * per_o];
+    par_items(&mut out, per_o, |img, o| {
+        let cols = im2col(&xq[img * per_x..(img + 1) * per_x], d);
+        for (row, orow) in o.chunks_mut(d.co).enumerate() {
+            gemm_row(&cols[row * kk..(row + 1) * kk], wq, d.co, orow);
+        }
+    });
+    out
+}
+
+/// Dequantize+bias epilogue: `out[r,c] = acc[r,c] as f32 * combined[c] +
+/// bias[c]`, where `combined[c] = Δa · Δw[c]`.  The multiply and add are
+/// deliberately separate (no `mul_add`) so the rounding matches the
+/// reference's matmul-then-`add_bias` sequence.
+pub fn dequant_bias(acc: &[i32], co: usize, combined: &[f32], bias: &[f32], out: &mut [f32]) {
+    assert_eq!(acc.len(), out.len());
+    assert!(co > 0 && acc.len() % co == 0);
+    assert_eq!(combined.len(), co);
+    assert_eq!(bias.len(), co);
+    for (arow, orow) in acc.chunks(co).zip(out.chunks_mut(co)) {
+        for c in 0..co {
+            orow[c] = arow[c] as f32 * combined[c] + bias[c];
+        }
+    }
+}
+
+/// Right-shift with round-half-to-even on the shifted-out bits (the
+/// integer mirror of `quantizer::round_half_even`).
+pub fn rshift_rhe(x: i64, b: u32) -> i64 {
+    if b == 0 {
+        return x;
+    }
+    if b >= 63 {
+        // |x| < 2^62 everywhere we call this, so the value is < 0.5.
+        return 0;
+    }
+    let floor = x >> b;
+    let rem = x - (floor << b);
+    let half = 1i64 << (b - 1);
+    floor + if rem > half || (rem == half && (floor & 1) != 0) { 1 } else { 0 }
+}
+
+/// A positive real multiplier in fixed-point `mult · 2^-shift` form
+/// (`mult` ∈ [2³⁰, 2³¹]): the classic requantization constant for
+/// pure-integer targets that cannot afford a float epilogue.  With the
+/// power-of-two scales `pack` emits, `apply` is exact (a pure shift).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FixedMult {
+    pub mult: i64,
+    pub shift: i32,
+}
+
+impl FixedMult {
+    pub fn from_f32(m: f32) -> FixedMult {
+        assert!(m > 0.0 && m.is_finite(), "fixed-point multiplier {m}");
+        let mut v = m as f64;
+        let mut e = 0i32;
+        while v < 0.5 {
+            v *= 2.0;
+            e -= 1;
+        }
+        while v >= 1.0 {
+            v /= 2.0;
+            e += 1;
+        }
+        let mult = (v * (1u64 << 31) as f64).round() as i64;
+        FixedMult { mult, shift: 31 - e }
+    }
+
+    /// `round_half_even(acc · m)` computed entirely in integers.
+    pub fn apply(&self, acc: i32) -> i64 {
+        let p = acc as i64 * self.mult;
+        if self.shift >= 0 {
+            rshift_rhe(p, self.shift as u32)
+        } else {
+            p << (-self.shift).min(31)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantizer::fake_quant_one;
+    use crate::quant::GridKind;
+    use crate::runtime::cpu::ops::matmul;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn quantize_matches_fake_quant_grid() {
+        let mut rng = Pcg32::seeded(3);
+        let xs: Vec<f32> = (0..512).map(|_| rng.normal() * 2.0).collect();
+        let (d, qmax) = (0.125f32, 127.0f32);
+        let qs = quantize_signed(&xs, d, qmax);
+        for (&x, &q) in xs.iter().zip(&qs) {
+            assert_eq!(q as f32 * d, fake_quant_one(x, d, qmax, GridKind::Signed));
+        }
+        let qu = quantize_unsigned(&xs, d, 255.0);
+        for (&x, &q) in xs.iter().zip(&qu) {
+            assert_eq!(q as f32 * d, fake_quant_one(x, d, 255.0, GridKind::Unsigned));
+        }
+    }
+
+    #[test]
+    fn gemm_matches_f32_matmul_on_integer_data() {
+        let mut rng = Pcg32::seeded(5);
+        let (m, k, n) = (7, 33, 11);
+        let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+        let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+        let acc = gemm(&a, &b, m, k, n);
+        let reference = matmul(&af, &bf, m, k, n);
+        for (x, y) in acc.iter().zip(&reference) {
+            assert_eq!(*x as f32, *y);
+        }
+    }
+
+    #[test]
+    fn gemm_unsigned_acts() {
+        let a: Vec<u8> = vec![0, 1, 2, 255, 0, 3];
+        let b: Vec<i8> = vec![1, -1, 2, -2, 3, -3];
+        // (2,3) @ (3,2)
+        let acc = gemm(&a, &b, 2, 3, 2);
+        // row0 = [0,1,2]·cols, row1 = [255,0,3]·cols
+        assert_eq!(acc, vec![8, -8, 264, -264]);
+    }
+
+    #[test]
+    fn conv_int_matches_f32_conv() {
+        use crate::runtime::cpu::ops::{conv2d, Arr};
+        let mut rng = Pcg32::seeded(9);
+        for stride in [1usize, 2] {
+            let (n, h, w, ci, kh, kw, co) = (2, 5, 4, 3, 3, 3, 4);
+            let mut draw = |count: usize| -> Vec<i8> {
+                (0..count).map(|_| (rng.below(15) as i32 - 7) as i8).collect()
+            };
+            let xq = draw(n * h * w * ci);
+            let wq = draw(kh * kw * ci * co);
+            let xf = Arr::new(vec![n, h, w, ci], xq.iter().map(|&v| v as f32).collect());
+            let wf = Arr::new(vec![kh, kw, ci, co], wq.iter().map(|&v| v as f32).collect());
+            let d = conv_shape(&xf.shape, &wf.shape, stride);
+            let acc = conv_int(&xq, &wq, &d);
+            let reference = conv2d(&xf, &wf, stride, 1);
+            assert_eq!(reference.shape, vec![n, d.ho, d.wo, co]);
+            for (x, y) in acc.iter().zip(&reference.data) {
+                assert_eq!(*x as f32, *y);
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_bias_applies_per_channel() {
+        let acc = vec![4i32, -8, 2, 0];
+        let mut out = vec![0.0f32; 4];
+        dequant_bias(&acc, 2, &[0.5, 0.25], &[1.0, -1.0], &mut out);
+        assert_eq!(out, vec![3.0, -3.0, 2.0, -1.0]);
+    }
+
+    #[test]
+    fn rshift_rhe_ties_to_even() {
+        assert_eq!(rshift_rhe(3, 1), 2); // 1.5 -> 2
+        assert_eq!(rshift_rhe(5, 1), 2); // 2.5 -> 2
+        assert_eq!(rshift_rhe(-3, 1), -2); // -1.5 -> -2
+        assert_eq!(rshift_rhe(-5, 1), -2); // -2.5 -> -2
+        assert_eq!(rshift_rhe(7, 2), 2); // 1.75 -> 2
+        assert_eq!(rshift_rhe(100, 0), 100);
+        assert_eq!(rshift_rhe(1, 63), 0);
+    }
+
+    #[test]
+    fn fixed_mult_exact_for_power_of_two() {
+        let fm = FixedMult::from_f32(2.0f32.powi(-7));
+        for acc in [-100_000i32, -129, -1, 0, 1, 64, 65, 127, 192, 100_000] {
+            let want = round_half_even(acc as f32 * 2.0f32.powi(-7)) as i64;
+            assert_eq!(fm.apply(acc), want, "acc={acc}");
+        }
+        // multiplier above 1 still lands on an exact shift
+        let fm2 = FixedMult::from_f32(4.0);
+        assert_eq!(fm2.apply(3), 12);
+    }
+
+    #[test]
+    fn fixed_mult_close_for_arbitrary_scale() {
+        let m = 0.0123456f32;
+        let fm = FixedMult::from_f32(m);
+        for acc in [-10_000i32, -7, 0, 13, 9999] {
+            let exact = acc as f64 * m as f64;
+            let got = fm.apply(acc) as f64;
+            assert!((got - exact).abs() <= 0.5 + exact.abs() * 1e-6, "{got} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn im2col_zero_pads() {
+        // 1 image 2x2x1, 3x3 kernel, stride 1 -> 4 rows of 9, corners padded
+        let xq: Vec<i8> = vec![1, 2, 3, 4];
+        let d = conv_shape(&[1, 2, 2, 1], &[3, 3, 1, 1], 1);
+        let cols = im2col(&xq, &d);
+        assert_eq!(cols.len(), 4 * 9);
+        // first output pixel (0,0): top row and left column are padding
+        assert_eq!(&cols[0..9], &[0, 0, 0, 0, 1, 2, 0, 3, 4]);
+    }
+}

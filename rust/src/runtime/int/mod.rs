@@ -1,0 +1,32 @@
+//! The integer inference engine: *true* quantized execution, closing the
+//! loop the fake-quant simulator leaves open.
+//!
+//! `quant::quantizer::fake_quant` rounds a value to the Δ grid and
+//! immediately dequantizes, so a calibrated model still runs at fp32
+//! speed.  This subsystem turns a calibrated `lapq::QuantOutcome` into a
+//! deployable artifact and executes it with packed integer arithmetic:
+//!
+//! * [`model`] — [`model::pack`] quantizes a session's fp32 parameters
+//!   onto the calibrated grids (i8 in memory, nibble-packed i4 on disk,
+//!   per-output-channel scales, i32 bias), producing a
+//!   [`model::QuantizedModel`] that serializes to `quantized.json` +
+//!   `weights.bin`.
+//! * [`kernels`] — i8×i8→i32 GEMM, im2col conv and embedding gather,
+//!   batch-parallel on scoped threads; activation quantization and the
+//!   requantization epilogue are round-half-even, bit-compatible with
+//!   `quant::quantizer`.
+//! * [`session`] — [`session::InferSession`] walks the zoo graphs
+//!   (`mlp3`, `cnn6`, `ncf`) over a packed model, integer kernels where
+//!   both sides are quantized, fake-quant f32 fallback elsewhere.
+//! * [`packed`] — the little-endian byte codecs.
+//!
+//! The serving face is `coordinator::service` (`{"cmd":"pack"}` /
+//! `{"cmd":"infer"}`) and the `repro pack` / `repro infer` CLI.
+
+pub mod kernels;
+pub mod model;
+pub mod packed;
+pub mod session;
+
+pub use model::{pack, PackOpts, QuantizedModel};
+pub use session::{ExecMode, InferResult, InferSession};

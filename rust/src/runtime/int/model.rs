@@ -1,0 +1,561 @@
+//! The deployable quantized-model artifact.
+//!
+//! [`pack`] consumes a calibrated session's fp32 parameters plus the
+//! effective [`QuantParams`] (a `lapq::QuantOutcome` in practice) and
+//! produces a [`QuantizedModel`]: per-layer i8 weight tensors with
+//! per-output-channel scales and pre-quantized i32 biases, with fp32
+//! passthrough for layers the calibration left unquantized.  The
+//! artifact serializes to `<dir>/quantized.json` (metadata, via
+//! `util::json`) plus `<dir>/weights.bin` (a little-endian binary blob;
+//! ≤4-bit grids are nibble-packed two per byte).
+//!
+//! By default `pack` snaps every Δ to the nearest power of two
+//! (`PackOpts::po2_scales`).  That is a real deployment technique —
+//! requantization degenerates to a bit-shift — and it is also what makes
+//! the integer engine *bit-compatible* with the fake-quant reference:
+//! with power-of-two scales the reference's f32 accumulation is exact
+//! wherever the i32 accumulator stays below 2²⁴ (see `int::kernels`).
+//! The artifact records the snapped Δ vectors, so the fake-quant
+//! reference for a packed model is `eval` with `QuantizedModel::quant`.
+
+use super::packed::{f32s_to_le, i8s_to_le, le_to_f32s, le_to_i8s, pack_i4, unpack_i4};
+use crate::quant::quantizer::round_half_even;
+use crate::quant::GridKind;
+use crate::runtime::backend::QuantParams;
+use crate::runtime::manifest::ModelSpec;
+use crate::tensor::HostTensor;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Models the integer engine executes natively; `pack` refuses others
+/// (their graphs — grouped conv, residual adds — fall back to the
+/// fake-quant backend until covered).
+pub const SUPPORTED_MODELS: [&str; 3] = ["mlp3", "cnn6", "ncf"];
+
+/// Packing options.
+#[derive(Clone, Debug)]
+pub struct PackOpts {
+    /// Snap every Δ to the nearest power of two (default).  Disable to
+    /// keep the raw calibrated scales; the integer path then matches the
+    /// fake-quant reference only to within accumulation rounding.
+    pub po2_scales: bool,
+}
+
+impl Default for PackOpts {
+    fn default() -> Self {
+        PackOpts { po2_scales: true }
+    }
+}
+
+/// One stored parameter tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    /// Symmetric signed integer weights, one i8 per value in memory
+    /// (`bits` ≤ 4 payloads serialize nibble-packed).  `scale` has one
+    /// entry per output channel (the tensor's last axis).
+    Int { bits: u32, q: Vec<i8>, scale: Vec<f32> },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedParam {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub payload: Payload,
+}
+
+impl PackedParam {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Per-quant-layer execution metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerPlan {
+    pub name: String,
+    pub kind: String,
+    pub weight_param: usize,
+    pub bias_param: Option<usize>,
+    /// Bias pre-quantized to accumulator units (`round_half_even(b /
+    /// (Δw·Δa))`), for pure-integer targets whose epilogue is a
+    /// [`super::kernels::FixedMult`] shift.  The CPU engine's epilogue
+    /// uses the exact f32 bias instead, to stay bit-compatible with the
+    /// fake-quant reference (which never quantizes biases).
+    pub bias_q: Option<Vec<i32>>,
+}
+
+/// A packed, deployable model: what `pack` emits, what `infer` serves.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedModel {
+    pub model: String,
+    /// Effective quantization parameters (post power-of-two snapping,
+    /// masked layers zeroed) — the fake-quant reference grid.
+    pub quant: QuantParams,
+    pub active_w: Vec<bool>,
+    pub active_a: Vec<bool>,
+    pub params: Vec<PackedParam>,
+    pub layers: Vec<LayerPlan>,
+}
+
+/// Nearest power of two (0 stays 0, i.e. "not quantized").
+pub fn snap_po2(d: f32) -> f32 {
+    if d <= 0.0 {
+        return 0.0;
+    }
+    2.0f32.powi(d.log2().round() as i32)
+}
+
+fn bits_for(qmax: f32) -> Result<u32> {
+    for b in 2..=8u32 {
+        if GridKind::Signed.qmax(b) == qmax {
+            return Ok(b);
+        }
+    }
+    bail!("weight grid qmax {qmax} is not a supported ≤8-bit signed grid")
+}
+
+/// Quantize fp32 parameters onto the calibrated grids.  `active`
+/// overrides the per-layer weight/activation flags (defaults to Δ > 0);
+/// pass the calibration's `LayerMask` vectors so the artifact records
+/// which layers the joint phase actually optimized.
+pub fn pack(
+    spec: &ModelSpec,
+    params: &[HostTensor],
+    quant: &QuantParams,
+    active: Option<(&[bool], &[bool])>,
+    opts: &PackOpts,
+) -> Result<QuantizedModel> {
+    if !SUPPORTED_MODELS.contains(&spec.name.as_str()) {
+        bail!(
+            "integer engine does not cover '{}' yet (supported: {})",
+            spec.name,
+            SUPPORTED_MODELS.join(", ")
+        );
+    }
+    if params.len() != spec.params.len() {
+        bail!("expected {} params, got {}", spec.params.len(), params.len());
+    }
+    for (ts, ps) in params.iter().zip(&spec.params) {
+        if ts.shape != ps.shape {
+            bail!("param {} shape {:?} != spec {:?}", ps.name, ts.shape, ps.shape);
+        }
+    }
+    let n = spec.n_quant_layers();
+    let lens = [quant.dw.len(), quant.qmw.len(), quant.da.len(), quant.qma.len()];
+    if lens.iter().any(|&l| l != n) {
+        bail!("quant params sized {lens:?}, model {} has {n} quant layers", spec.name);
+    }
+
+    let mut eff = quant.clone();
+    if opts.po2_scales {
+        for d in eff.dw.iter_mut() {
+            *d = snap_po2(*d);
+        }
+        for d in eff.da.iter_mut() {
+            *d = snap_po2(*d);
+        }
+    }
+    let active_w: Vec<bool> = match active {
+        Some((w, _)) => w.to_vec(),
+        None => eff.dw.iter().map(|&d| d > 0.0).collect(),
+    };
+    let active_a: Vec<bool> = match active {
+        Some((_, a)) => a.to_vec(),
+        None => eff.da.iter().map(|&d| d > 0.0).collect(),
+    };
+    if active_w.len() != n || active_a.len() != n {
+        bail!("active flags sized {}/{}, want {n}", active_w.len(), active_a.len());
+    }
+    for i in 0..n {
+        if !active_w[i] {
+            eff.dw[i] = 0.0;
+        }
+        if !active_a[i] {
+            eff.da[i] = 0.0;
+        }
+        if eff.da[i] > 0.0 {
+            let kind = GridKind::from_signed(spec.quant_layers[i].act_signed);
+            if eff.qma[i] > kind.qmax(8) {
+                bail!(
+                    "layer {}: activation qmax {} exceeds the 8-bit grid",
+                    spec.quant_layers[i].name,
+                    eff.qma[i]
+                );
+            }
+        }
+    }
+
+    // Which quant layer owns each weight param.
+    let mut owner: Vec<Option<usize>> = vec![None; params.len()];
+    for (qi, ql) in spec.quant_layers.iter().enumerate() {
+        owner[ql.weight_param] = Some(qi);
+    }
+
+    let mut packed = Vec::with_capacity(params.len());
+    for (i, (ts, ps)) in params.iter().zip(&spec.params).enumerate() {
+        let payload = match owner[i] {
+            Some(qi) if eff.dw[qi] > 0.0 => {
+                let d = eff.dw[qi];
+                let qmax = eff.qmw[qi];
+                let bits = bits_for(qmax)
+                    .with_context(|| format!("packing layer {}", spec.quant_layers[qi].name))?;
+                let quantize = |&w: &f32| round_half_even(w / d).clamp(-qmax, qmax) as i8;
+                let q: Vec<i8> = ts.f().iter().map(quantize).collect();
+                let co = *ts.shape.last().unwrap_or(&1);
+                Payload::Int { bits, q, scale: vec![d; co] }
+            }
+            _ => Payload::F32(ts.f().to_vec()),
+        };
+        packed.push(PackedParam { name: ps.name.clone(), shape: ts.shape.clone(), payload });
+    }
+
+    let mut layers = Vec::with_capacity(n);
+    for (qi, ql) in spec.quant_layers.iter().enumerate() {
+        let bias_param = if ql.kind == "embed" {
+            None
+        } else {
+            let bi = ql.weight_param + 1;
+            (bi < params.len() && params[bi].shape.len() == 1).then_some(bi)
+        };
+        let bias_q = match bias_param {
+            Some(bi) if eff.dw[qi] > 0.0 && eff.da[qi] > 0.0 => {
+                let s = eff.dw[qi] * eff.da[qi];
+                Some(
+                    params[bi]
+                        .f()
+                        .iter()
+                        .map(|&b| {
+                            let v = round_half_even(b / s) as i64;
+                            v.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+                        })
+                        .collect(),
+                )
+            }
+            _ => None,
+        };
+        layers.push(LayerPlan {
+            name: ql.name.clone(),
+            kind: ql.kind.clone(),
+            weight_param: ql.weight_param,
+            bias_param,
+            bias_q,
+        });
+    }
+
+    Ok(QuantizedModel {
+        model: spec.name.clone(),
+        quant: eff,
+        active_w,
+        active_a,
+        params: packed,
+        layers,
+    })
+}
+
+impl QuantizedModel {
+    /// Serialized payload size (i4 nibble-packed), for compression stats.
+    pub fn packed_bytes(&self) -> usize {
+        self.params
+            .iter()
+            .map(|p| match &p.payload {
+                Payload::F32(v) => v.len() * 4,
+                Payload::Int { bits, q, .. } => {
+                    if *bits <= 4 {
+                        q.len().div_ceil(2)
+                    } else {
+                        q.len()
+                    }
+                }
+            })
+            .sum()
+    }
+
+    /// What the same parameters occupy at fp32.
+    pub fn f32_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.numel() * 4).sum()
+    }
+
+    /// Count of integer-packed parameter tensors.
+    pub fn int_params(&self) -> usize {
+        self.params.iter().filter(|p| matches!(p.payload, Payload::Int { .. })).count()
+    }
+
+    /// Write `<dir>/quantized.json` + `<dir>/weights.bin`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        let mut blob: Vec<u8> = Vec::new();
+        let mut pjson: Vec<Json> = Vec::new();
+        for p in &self.params {
+            let offset = blob.len();
+            let mut entry = vec![
+                ("name", Json::Str(p.name.clone())),
+                ("shape", Json::Arr(p.shape.iter().map(|&s| Json::Num(s as f64)).collect())),
+            ];
+            match &p.payload {
+                Payload::F32(v) => {
+                    f32s_to_le(v, &mut blob);
+                    entry.push(("enc", Json::Str("f32".into())));
+                }
+                Payload::Int { bits, q, scale } => {
+                    if *bits <= 4 {
+                        blob.extend_from_slice(&pack_i4(q));
+                        entry.push(("enc", Json::Str("i4".into())));
+                    } else {
+                        i8s_to_le(q, &mut blob);
+                        entry.push(("enc", Json::Str("i8".into())));
+                    }
+                    entry.push(("bits", Json::Num(*bits as f64)));
+                    entry.push(("scale", Json::arr_f32(scale)));
+                }
+            }
+            entry.push(("offset", Json::Num(offset as f64)));
+            entry.push(("bytes", Json::Num((blob.len() - offset) as f64)));
+            pjson.push(Json::obj(entry));
+        }
+        let bools = |v: &[bool]| Json::Arr(v.iter().map(|&b| Json::Bool(b)).collect());
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("name", Json::Str(l.name.clone())),
+                    ("kind", Json::Str(l.kind.clone())),
+                    ("weight_param", Json::Num(l.weight_param as f64)),
+                    ("bias_param", l.bias_param.map_or(Json::Null, |b| Json::Num(b as f64))),
+                    (
+                        "bias_q",
+                        l.bias_q.as_ref().map_or(Json::Null, |b| {
+                            Json::Arr(b.iter().map(|&v| Json::Num(v as f64)).collect())
+                        }),
+                    ),
+                ])
+            })
+            .collect();
+        let meta = Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("model", Json::Str(self.model.clone())),
+            (
+                "quant",
+                Json::obj(vec![
+                    ("dw", Json::arr_f32(&self.quant.dw)),
+                    ("qmw", Json::arr_f32(&self.quant.qmw)),
+                    ("da", Json::arr_f32(&self.quant.da)),
+                    ("qma", Json::arr_f32(&self.quant.qma)),
+                ]),
+            ),
+            ("active_w", bools(&self.active_w)),
+            ("active_a", bools(&self.active_a)),
+            ("layers", Json::Arr(layers)),
+            ("params", Json::Arr(pjson)),
+        ]);
+        std::fs::write(dir.join("quantized.json"), meta.dump())
+            .with_context(|| format!("writing {dir:?}/quantized.json"))?;
+        std::fs::write(dir.join("weights.bin"), &blob)
+            .with_context(|| format!("writing {dir:?}/weights.bin"))?;
+        Ok(())
+    }
+
+    /// Load an artifact written by [`QuantizedModel::save`].
+    pub fn load(dir: &Path) -> Result<QuantizedModel> {
+        let meta_path = dir.join("quantized.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?}"))?;
+        let meta = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse {meta_path:?}: {e}"))?;
+        let blob = std::fs::read(dir.join("weights.bin"))
+            .with_context(|| format!("reading {dir:?}/weights.bin"))?;
+
+        // Strict array decoding: a truncated or hand-edited artifact
+        // must fail here with a clean error, not index-panic at infer.
+        let f32v = |j: &Json, key: &str| -> Result<Vec<f32>> {
+            let arr =
+                j.get(key).and_then(|v| v.as_arr()).with_context(|| format!("array '{key}'"))?;
+            let out: Vec<f32> = arr.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect();
+            if out.len() != arr.len() {
+                bail!("non-numeric entries in '{key}'");
+            }
+            Ok(out)
+        };
+        let boolv = |j: &Json, key: &str| -> Result<Vec<bool>> {
+            let arr =
+                j.get(key).and_then(|v| v.as_arr()).with_context(|| format!("array '{key}'"))?;
+            let out: Vec<bool> = arr.iter().filter_map(|x| x.as_bool()).collect();
+            if out.len() != arr.len() {
+                bail!("non-boolean entries in '{key}'");
+            }
+            Ok(out)
+        };
+
+        let q = meta.get("quant").context("missing 'quant'")?;
+        let quant = QuantParams {
+            dw: f32v(q, "dw")?,
+            qmw: f32v(q, "qmw")?,
+            da: f32v(q, "da")?,
+            qma: f32v(q, "qma")?,
+        };
+
+        let mut params = Vec::new();
+        for p in meta.get("params").and_then(|v| v.as_arr()).context("missing 'params'")? {
+            let name = p.get("name").and_then(|v| v.as_str()).context("param name")?.to_string();
+            let shape = p.get("shape").context("param shape")?.usize_arr();
+            let numel: usize = shape.iter().product();
+            let offset = p.get("offset").and_then(|v| v.as_usize()).context("param offset")?;
+            let bytes = p.get("bytes").and_then(|v| v.as_usize()).context("param bytes")?;
+            let slice = blob
+                .get(offset..offset + bytes)
+                .with_context(|| format!("param {name}: blob range {offset}+{bytes}"))?;
+            let enc = p.get("enc").and_then(|v| v.as_str()).unwrap_or("f32");
+            let payload = match enc {
+                "f32" => {
+                    let v = le_to_f32s(slice);
+                    if v.len() != numel {
+                        bail!("param {name}: {} f32 values for shape {shape:?}", v.len());
+                    }
+                    Payload::F32(v)
+                }
+                "i8" | "i4" => {
+                    let q = if enc == "i4" { unpack_i4(slice, numel) } else { le_to_i8s(slice) };
+                    if q.len() != numel {
+                        bail!("param {name}: {} int values for shape {shape:?}", q.len());
+                    }
+                    let bits = p.get("bits").and_then(|v| v.as_usize()).unwrap_or(8) as u32;
+                    let scale = f32v(p, "scale")?;
+                    let co = *shape.last().unwrap_or(&1);
+                    if scale.len() != co {
+                        bail!("param {name}: {} scales for {co} output channels", scale.len());
+                    }
+                    Payload::Int { bits, q, scale }
+                }
+                other => bail!("param {name}: unknown encoding '{other}'"),
+            };
+            params.push(PackedParam { name, shape, payload });
+        }
+
+        let mut layers = Vec::new();
+        for l in meta.get("layers").and_then(|v| v.as_arr()).context("missing 'layers'")? {
+            let bias_q = match l.get("bias_q") {
+                Some(Json::Arr(v)) => {
+                    Some(v.iter().filter_map(|x| x.as_f64()).map(|x| x as i32).collect())
+                }
+                _ => None,
+            };
+            layers.push(LayerPlan {
+                name: l.get("name").and_then(|v| v.as_str()).unwrap_or_default().to_string(),
+                kind: l.get("kind").and_then(|v| v.as_str()).unwrap_or_default().to_string(),
+                weight_param: l.get("weight_param").and_then(|v| v.as_usize()).context("layer")?,
+                bias_param: l.get("bias_param").and_then(|v| v.as_usize()),
+                bias_q,
+            });
+        }
+
+        let qm = QuantizedModel {
+            model: meta.get("model").and_then(|v| v.as_str()).context("missing 'model'")?.into(),
+            quant,
+            active_w: boolv(&meta, "active_w")?,
+            active_a: boolv(&meta, "active_a")?,
+            params,
+            layers,
+        };
+        let n = qm.layers.len();
+        let lens = [
+            qm.quant.dw.len(),
+            qm.quant.qmw.len(),
+            qm.quant.da.len(),
+            qm.quant.qma.len(),
+            qm.active_w.len(),
+            qm.active_a.len(),
+        ];
+        if lens.iter().any(|&l| l != n) {
+            bail!("artifact has {n} layers but per-layer arrays sized {lens:?}");
+        }
+        for l in &qm.layers {
+            if l.weight_param >= qm.params.len()
+                || l.bias_param.is_some_and(|b| b >= qm.params.len())
+            {
+                bail!("layer {} references a missing param", l.name);
+            }
+        }
+        Ok(qm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use crate::tensor::init::init_params;
+
+    fn int8_all(n: usize) -> QuantParams {
+        // qma 127 is valid on both signed and unsigned activation grids
+        QuantParams {
+            dw: vec![0.0625; n],
+            qmw: vec![127.0; n],
+            da: vec![0.25; n],
+            qma: vec![127.0; n],
+        }
+    }
+
+    #[test]
+    fn pack_quantizes_weight_params_only() {
+        let m = Manifest::builtin();
+        let spec = m.model("mlp3").unwrap();
+        let params = init_params(&spec.params, 1);
+        let qm = pack(spec, &params, &int8_all(3), None, &PackOpts::default()).unwrap();
+        assert_eq!(qm.params.len(), 6);
+        assert!(matches!(qm.params[0].payload, Payload::Int { bits: 8, .. }));
+        assert!(matches!(qm.params[1].payload, Payload::F32(_))); // bias
+        assert_eq!(qm.int_params(), 3);
+        assert_eq!(qm.layers.len(), 3);
+        assert!(qm.layers[0].bias_q.is_some());
+        assert!(qm.packed_bytes() < qm.f32_bytes());
+    }
+
+    #[test]
+    fn pack_respects_masked_layers() {
+        let m = Manifest::builtin();
+        let spec = m.model("mlp3").unwrap();
+        let params = init_params(&spec.params, 1);
+        let mut q = int8_all(3);
+        q.dw[0] = 0.0; // first layer left fp32
+        let qm = pack(spec, &params, &q, None, &PackOpts::default()).unwrap();
+        assert!(matches!(qm.params[0].payload, Payload::F32(_)));
+        assert!(matches!(qm.params[2].payload, Payload::Int { .. }));
+        assert!(!qm.active_w[0]);
+        assert!(qm.layers[0].bias_q.is_none());
+    }
+
+    #[test]
+    fn pack_rejects_uncovered_models() {
+        let m = Manifest::builtin();
+        let spec = m.model("dwsep").unwrap();
+        let params = init_params(&spec.params, 1);
+        let n = spec.n_quant_layers();
+        let err = pack(spec, &params, &int8_all(n), None, &PackOpts::default());
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn snap_po2_hits_nearest_power() {
+        assert_eq!(snap_po2(0.0), 0.0);
+        assert_eq!(snap_po2(0.25), 0.25);
+        assert_eq!(snap_po2(0.3), 0.25);
+        assert_eq!(snap_po2(0.4), 0.5);
+        assert_eq!(snap_po2(3.0), 4.0); // log2(3)≈1.58 rounds to 2
+    }
+
+    #[test]
+    fn po2_snapping_recorded_in_effective_quant() {
+        let m = Manifest::builtin();
+        let spec = m.model("mlp3").unwrap();
+        let params = init_params(&spec.params, 2);
+        let mut q = int8_all(3);
+        q.dw = vec![0.3, 0.3, 0.3];
+        q.da = vec![0.7, 0.7, 0.7];
+        let qm = pack(spec, &params, &q, None, &PackOpts::default()).unwrap();
+        assert_eq!(qm.quant.dw, vec![0.25; 3]);
+        assert_eq!(qm.quant.da, vec![0.5; 3]);
+        let raw = pack(spec, &params, &q, None, &PackOpts { po2_scales: false }).unwrap();
+        assert_eq!(raw.quant.dw, vec![0.3; 3]);
+    }
+}

@@ -1,0 +1,101 @@
+//! Byte-level codecs for the quantized-model blob: little-endian f32/i8
+//! payloads and the 2-per-byte INT4 nibble packing.
+//!
+//! The in-memory representation always holds one `i8` per weight (the
+//! kernels index it directly); `pack_i4`/`unpack_i4` are the
+//! serialization form for ≤4-bit grids, halving the on-disk artifact.
+
+/// Pack signed 4-bit values (range −8..=7; LAPQ grids use −7..=7) two per
+/// byte: even index in the low nibble, odd index in the high nibble.  An
+/// odd-length tail leaves the final high nibble zero.
+pub fn pack_i4(q: &[i8]) -> Vec<u8> {
+    debug_assert!(q.iter().all(|&v| (-8..=7).contains(&v)), "value outside i4 range");
+    let mut out = Vec::with_capacity(q.len().div_ceil(2));
+    for pair in q.chunks(2) {
+        let lo = (pair[0] as u8) & 0x0f;
+        let hi = if pair.len() > 1 { (pair[1] as u8) & 0x0f } else { 0 };
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+/// Inverse of [`pack_i4`]: expand `n` sign-extended values.
+pub fn unpack_i4(bytes: &[u8], n: usize) -> Vec<i8> {
+    assert_eq!(bytes.len(), n.div_ceil(2), "i4 payload is {} bytes for {} values", bytes.len(), n);
+    let mut out = Vec::with_capacity(n);
+    for &b in bytes {
+        out.push((((b & 0x0f) << 4) as i8) >> 4);
+        if out.len() < n {
+            out.push((b as i8) >> 4);
+        }
+    }
+    out
+}
+
+/// Append `xs` to `out` as little-endian f32 bytes.
+pub fn f32s_to_le(xs: &[f32], out: &mut Vec<u8>) {
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Decode a little-endian f32 payload (length must be a multiple of 4).
+pub fn le_to_f32s(bytes: &[u8]) -> Vec<f32> {
+    assert_eq!(bytes.len() % 4, 0, "f32 payload length {}", bytes.len());
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+/// Append `q` to `out` as raw two's-complement bytes.
+pub fn i8s_to_le(q: &[i8], out: &mut Vec<u8>) {
+    out.extend(q.iter().map(|&v| v as u8));
+}
+
+/// Decode a raw i8 payload.
+pub fn le_to_i8s(bytes: &[u8]) -> Vec<i8> {
+    bytes.iter().map(|&b| b as i8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn i4_roundtrip_even_and_odd() {
+        for n in [0usize, 1, 2, 3, 8, 17] {
+            let value = |i: usize| ((i as i64 * 5 - 7).rem_euclid(15) - 7) as i8;
+            let q: Vec<i8> = (0..n).map(value).collect();
+            let packed = pack_i4(&q);
+            assert_eq!(packed.len(), n.div_ceil(2));
+            assert_eq!(unpack_i4(&packed, n), q);
+        }
+    }
+
+    #[test]
+    fn i4_roundtrip_random() {
+        let mut rng = Pcg32::seeded(11);
+        for _ in 0..50 {
+            let n = rng.below(64) as usize;
+            let q: Vec<i8> = (0..n).map(|_| (rng.below(16) as i8) - 8).collect();
+            assert_eq!(unpack_i4(&pack_i4(&q), n), q);
+        }
+    }
+
+    #[test]
+    fn i4_extremes() {
+        let q = vec![-8i8, 7, -1, 0, 1, -7];
+        assert_eq!(unpack_i4(&pack_i4(&q), 6), q);
+    }
+
+    #[test]
+    fn f32_and_i8_payloads_roundtrip() {
+        let xs = [0.0f32, -1.5, 3.25e-7, f32::MAX];
+        let mut b = Vec::new();
+        f32s_to_le(&xs, &mut b);
+        assert_eq!(le_to_f32s(&b), xs.to_vec());
+        let qs = [-128i8, -1, 0, 1, 127];
+        let mut b2 = Vec::new();
+        i8s_to_le(&qs, &mut b2);
+        assert_eq!(le_to_i8s(&b2), qs.to_vec());
+    }
+}

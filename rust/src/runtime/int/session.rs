@@ -1,0 +1,484 @@
+//! `InferSession` — executes a packed [`QuantizedModel`] natively.
+//!
+//! Two modes share one graph walk per model (`mlp3`, `cnn6`, `ncf`,
+//! mirroring `runtime/cpu/zoo.rs` layer by layer):
+//!
+//! * [`ExecMode::Int`] — layers whose weights *and* input activations are
+//!   quantized run the integer kernels: quantize the f32 input onto its
+//!   grid, i8×i8→i32 GEMM / im2col conv / i8 embedding gather, then the
+//!   dequantize+bias epilogue.  Everything else (first/last layers the
+//!   paper leaves at FP32, pooling, residual glue) falls back to the
+//!   fake-quant f32 path.
+//! * [`ExecMode::Simulated`] — the fake-quant reference, computed with
+//!   the exact ops (`ops::matmul`, `ops::conv2d`, `fake_quant_one`) and
+//!   accumulation order of the CPU backend, so it is bit-identical to
+//!   `Backend::eval` under `QuantizedModel::quant`.
+//!
+//! With the power-of-two scales `pack` emits, the two modes agree
+//! bit-for-bit wherever the i32 accumulator stays below 2²⁴ (all of
+//! `mlp3`/`ncf`; `cnn6`'s widest conv can differ by one grid step) —
+//! asserted by `tests/int_parity.rs`.
+
+use super::kernels;
+use super::model::{Payload, QuantizedModel};
+use crate::quant::quantizer::fake_quant_one;
+use crate::quant::GridKind;
+use crate::runtime::cpu::ops::{self, Arr};
+use crate::runtime::cpu::zoo::{check_ids, check_vision_input};
+use crate::runtime::manifest::ModelSpec;
+use crate::tensor::{Data, HostTensor};
+use anyhow::{bail, Result};
+
+/// Which kernels execute the quantized layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Packed integer kernels, f32 fallback for uncovered layers.
+    Int,
+    /// Fake-quant f32 reference (bit-identical to the CPU backend).
+    Simulated,
+}
+
+/// Per-quant-layer probe recorded when `record_taps` is set.
+#[derive(Clone, Debug)]
+pub struct LayerTap {
+    pub name: String,
+    /// Grid indices of the quantized input (empty when the layer's
+    /// activations ran f32).
+    pub qx: Vec<i32>,
+    /// Layer output (bias added, pre-ReLU).
+    pub y: Arr,
+}
+
+/// Result of one forward pass.
+#[derive(Clone, Debug)]
+pub struct InferResult {
+    pub logits: Arr,
+    pub taps: Vec<LayerTap>,
+    /// How many quant layers executed with integer kernels.
+    pub int_layers: usize,
+}
+
+struct Run {
+    record: bool,
+    taps: Vec<LayerTap>,
+    int_layers: usize,
+}
+
+impl Run {
+    fn tap(&mut self, name: &str, qx: Vec<i32>, y: &Arr) {
+        if self.record {
+            self.taps.push(LayerTap { name: name.to_string(), qx, y: y.clone() });
+        }
+    }
+}
+
+/// A ready-to-serve view over a packed model.
+pub struct InferSession<'a> {
+    spec: &'a ModelSpec,
+    model: &'a QuantizedModel,
+    /// Record per-layer probes (parity tests); off for serving.
+    pub record_taps: bool,
+}
+
+fn f32s<'a>(ts: &'a HostTensor, what: &str) -> Result<&'a [f32]> {
+    match &ts.data {
+        Data::F32(v) => Ok(v),
+        Data::I32(_) => bail!("{what}: expected f32 tensor"),
+    }
+}
+
+fn i32s<'a>(ts: &'a HostTensor, what: &str) -> Result<&'a [i32]> {
+    match &ts.data {
+        Data::I32(v) => Ok(v),
+        Data::F32(_) => bail!("{what}: expected i32 tensor"),
+    }
+}
+
+fn relu(x: &Arr) -> Arr {
+    Arr::new(x.shape.clone(), x.data.iter().map(|&v| v.max(0.0)).collect())
+}
+
+/// Global average pool `(N,H,W,C) -> (N,C)` — same accumulation order as
+/// `Tape::gap`.
+fn gap(x: &Arr) -> Arr {
+    assert_eq!(x.shape.len(), 4, "gap input {:?}", x.shape);
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let inv = 1.0 / (h * w) as f32;
+    let mut out = Arr::zeros(vec![n, c]);
+    for img in 0..n {
+        let o_row = &mut out.data[img * c..(img + 1) * c];
+        for px in x.data[img * h * w * c..(img + 1) * h * w * c].chunks(c) {
+            for (o, &v) in o_row.iter_mut().zip(px) {
+                *o += v * inv;
+            }
+        }
+    }
+    out
+}
+
+fn mul(a: &Arr, b: &Arr) -> Arr {
+    assert_eq!(a.shape, b.shape, "mul {:?} vs {:?}", a.shape, b.shape);
+    Arr::new(a.shape.clone(), a.data.iter().zip(&b.data).map(|(x, y)| x * y).collect())
+}
+
+fn concat(a: &Arr, b: &Arr) -> Arr {
+    let (ca, cb) = (a.last_dim(), b.last_dim());
+    let r = a.numel() / ca;
+    assert_eq!(r, b.numel() / cb, "concat rows {:?} vs {:?}", a.shape, b.shape);
+    let mut data = Vec::with_capacity(r * (ca + cb));
+    for row in 0..r {
+        data.extend_from_slice(&a.data[row * ca..(row + 1) * ca]);
+        data.extend_from_slice(&b.data[row * cb..(row + 1) * cb]);
+    }
+    Arr::new(vec![r, ca + cb], data)
+}
+
+/// Broadcast-add a bias over the last axis, like `Tape::add_bias`.
+fn add_bias(y: &mut Arr, b: &[f32]) {
+    let c = y.last_dim();
+    assert_eq!(b.len(), c);
+    for row in y.data.chunks_mut(c) {
+        for (o, &add) in row.iter_mut().zip(b) {
+            *o += add;
+        }
+    }
+}
+
+fn qx_ints(x: &[f32], da: f32, qma: f32, signed: bool) -> Vec<i32> {
+    if signed {
+        kernels::quantize_signed(x, da, qma).iter().map(|&v| v as i32).collect()
+    } else {
+        kernels::quantize_unsigned(x, da, qma).iter().map(|&v| v as i32).collect()
+    }
+}
+
+/// Widen a quantized buffer for a tap, only when recording.
+fn tap_ints<A: kernels::QAct>(run: &Run, q: &[A]) -> Vec<i32> {
+    if run.record {
+        q.iter().map(|&v| v.widen()).collect()
+    } else {
+        Vec::new()
+    }
+}
+
+impl<'a> InferSession<'a> {
+    pub fn new(spec: &'a ModelSpec, model: &'a QuantizedModel) -> Result<InferSession<'a>> {
+        if spec.name != model.model {
+            bail!("spec is for '{}', packed model is '{}'", spec.name, model.model);
+        }
+        if model.params.len() != spec.params.len() {
+            bail!("packed model has {} params, spec {}", model.params.len(), spec.params.len());
+        }
+        for (p, ps) in model.params.iter().zip(&spec.params) {
+            if p.shape != ps.shape {
+                bail!("param {} shape {:?} != spec {:?}", ps.name, p.shape, ps.shape);
+            }
+        }
+        let (have, want) = (model.layers.len(), spec.n_quant_layers());
+        if have != want {
+            bail!("packed model has {have} layers, spec {want}");
+        }
+        let q = &model.quant;
+        let lens = [q.dw.len(), q.qmw.len(), q.da.len(), q.qma.len()];
+        if lens.iter().any(|&l| l != want) {
+            bail!("packed model Δ vectors sized {lens:?}, spec has {want} quant layers");
+        }
+        Ok(InferSession { spec, model, record_taps: false })
+    }
+
+    /// Batched forward pass: vision batches are `(x,)`, NCF batches are
+    /// `(users, items)`.  Any batch size.
+    pub fn infer(&self, batch: &[HostTensor], mode: ExecMode) -> Result<InferResult> {
+        let mut run = Run { record: self.record_taps, taps: Vec::new(), int_layers: 0 };
+        let logits = if self.spec.task == "ncf" {
+            if batch.len() != 2 {
+                bail!("ncf infer batch needs (users, items), got {} tensors", batch.len());
+            }
+            let users = i32s(&batch[0], "users")?;
+            let items = i32s(&batch[1], "items")?;
+            if users.len() != items.len() {
+                bail!("users ({}) vs items ({}) length mismatch", users.len(), items.len());
+            }
+            check_ids(self.spec, users, items)?;
+            self.ncf_logits(users, items, mode, &mut run)?
+        } else {
+            if batch.len() != 1 {
+                bail!("vision infer batch needs (x,), got {} tensors", batch.len());
+            }
+            check_vision_input(self.spec, &batch[0])?;
+            let x = Arr::new(batch[0].shape.clone(), f32s(&batch[0], "x")?.to_vec());
+            self.vision_logits(&x, mode, &mut run)?
+        };
+        Ok(InferResult { logits, taps: run.taps, int_layers: run.int_layers })
+    }
+
+    /// Fake-quant of an activation tensor (no-op when Δa = 0).
+    fn fq_act(&self, x: &Arr, qi: usize) -> Arr {
+        let da = self.model.quant.da[qi];
+        if da <= 0.0 {
+            return x.clone();
+        }
+        let qma = self.model.quant.qma[qi];
+        let kind = GridKind::from_signed(self.spec.quant_layers[qi].act_signed);
+        let data = x.data.iter().map(|&v| fake_quant_one(v, da, qma, kind)).collect();
+        Arr::new(x.shape.clone(), data)
+    }
+
+    /// Materialize a parameter as f32 (dequantizing Int payloads; the
+    /// dequantized values are exactly the fake-quant reference weights).
+    fn weight_f32(&self, pi: usize) -> Vec<f32> {
+        match &self.model.params[pi].payload {
+            Payload::F32(v) => v.clone(),
+            Payload::Int { q, scale, .. } => {
+                let co = scale.len();
+                q.iter().enumerate().map(|(i, &qv)| qv as f32 * scale[i % co]).collect()
+            }
+        }
+    }
+
+    fn bias_vec(&self, qi: usize, co: usize) -> Result<Vec<f32>> {
+        let plan = &self.model.layers[qi];
+        match plan.bias_param {
+            Some(bi) => match &self.model.params[bi].payload {
+                Payload::F32(v) => {
+                    if v.len() != co {
+                        bail!("layer {}: bias len {} != {co}", plan.name, v.len());
+                    }
+                    Ok(v.clone())
+                }
+                Payload::Int { .. } => bail!("layer {}: bias unexpectedly quantized", plan.name),
+            },
+            None => Ok(vec![0.0; co]),
+        }
+    }
+
+    /// Quantized dense layer `fq(x) @ fq(w) + b`.
+    fn dense(&self, x: &Arr, qi: usize, mode: ExecMode, run: &mut Run) -> Result<Arr> {
+        let plan = &self.model.layers[qi];
+        let wp = &self.model.params[plan.weight_param];
+        if wp.shape.len() != 2 {
+            bail!("dense {}: weight {:?} is not a matrix", plan.name, wp.shape);
+        }
+        let (k, n) = (wp.shape[0], wp.shape[1]);
+        if x.shape.len() != 2 || x.shape[1] != k {
+            bail!("dense {}: input {:?} vs weight {:?}", plan.name, x.shape, wp.shape);
+        }
+        let m = x.shape[0];
+        let bias = self.bias_vec(qi, n)?;
+        let da = self.model.quant.da[qi];
+        let qma = self.model.quant.qma[qi];
+        let signed = self.spec.quant_layers[qi].act_signed;
+
+        if mode == ExecMode::Int && da > 0.0 {
+            if let Payload::Int { q, scale, .. } = &wp.payload {
+                let combined: Vec<f32> = scale.iter().map(|&s| s * da).collect();
+                let (acc, qx) = if signed {
+                    let qxv = kernels::quantize_signed(&x.data, da, qma);
+                    let tap = tap_ints(run, &qxv);
+                    (kernels::gemm(&qxv, q, m, k, n), tap)
+                } else {
+                    let qxv = kernels::quantize_unsigned(&x.data, da, qma);
+                    let tap = tap_ints(run, &qxv);
+                    (kernels::gemm(&qxv, q, m, k, n), tap)
+                };
+                let mut y = Arr::zeros(vec![m, n]);
+                kernels::dequant_bias(&acc, n, &combined, &bias, &mut y.data);
+                run.int_layers += 1;
+                run.tap(&plan.name, qx, &y);
+                return Ok(y);
+            }
+        }
+        let xa = self.fq_act(x, qi);
+        let wf = self.weight_f32(plan.weight_param);
+        let mut y = Arr::new(vec![m, n], ops::matmul(&xa.data, &wf, m, k, n));
+        add_bias(&mut y, &bias);
+        let qx =
+            if run.record && da > 0.0 { qx_ints(&x.data, da, qma, signed) } else { Vec::new() };
+        run.tap(&plan.name, qx, &y);
+        Ok(y)
+    }
+
+    /// Quantized SAME conv (+ bias), groups = 1.
+    fn conv(
+        &self,
+        x: &Arr,
+        qi: usize,
+        stride: usize,
+        mode: ExecMode,
+        run: &mut Run,
+    ) -> Result<Arr> {
+        let plan = &self.model.layers[qi];
+        let wp = &self.model.params[plan.weight_param];
+        if wp.shape.len() != 4 || x.shape.len() != 4 {
+            bail!("conv {}: input {:?} / weight {:?}", plan.name, x.shape, wp.shape);
+        }
+        let d = kernels::conv_shape(&x.shape, &wp.shape, stride);
+        let bias = self.bias_vec(qi, d.co)?;
+        let da = self.model.quant.da[qi];
+        let qma = self.model.quant.qma[qi];
+        let signed = self.spec.quant_layers[qi].act_signed;
+
+        if mode == ExecMode::Int && da > 0.0 {
+            if let Payload::Int { q, scale, .. } = &wp.payload {
+                let combined: Vec<f32> = scale.iter().map(|&s| s * da).collect();
+                let (acc, qx) = if signed {
+                    let qxv = kernels::quantize_signed(&x.data, da, qma);
+                    let tap = tap_ints(run, &qxv);
+                    (kernels::conv_int(&qxv, q, &d), tap)
+                } else {
+                    let qxv = kernels::quantize_unsigned(&x.data, da, qma);
+                    let tap = tap_ints(run, &qxv);
+                    (kernels::conv_int(&qxv, q, &d), tap)
+                };
+                let mut y = Arr::zeros(vec![d.n, d.ho, d.wo, d.co]);
+                kernels::dequant_bias(&acc, d.co, &combined, &bias, &mut y.data);
+                run.int_layers += 1;
+                run.tap(&plan.name, qx, &y);
+                return Ok(y);
+            }
+        }
+        let xa = self.fq_act(x, qi);
+        let wf = Arr::new(wp.shape.clone(), self.weight_f32(plan.weight_param));
+        let mut y = ops::conv2d(&xa, &wf, stride, 1);
+        add_bias(&mut y, &bias);
+        let qx =
+            if run.record && da > 0.0 { qx_ints(&x.data, da, qma, signed) } else { Vec::new() };
+        run.tap(&plan.name, qx, &y);
+        Ok(y)
+    }
+
+    /// Embedding gather; the CPU-backend graph fake-quants the *gathered*
+    /// rows on the weight grid (Δa stays 0), so gathering i8 rows and
+    /// dequantizing per channel is exactly the reference.
+    fn embed(&self, idx: &[i32], qi: usize, mode: ExecMode, run: &mut Run) -> Result<Arr> {
+        let plan = &self.model.layers[qi];
+        let wp = &self.model.params[plan.weight_param];
+        if wp.shape.len() != 2 {
+            bail!("embed {}: table {:?}", plan.name, wp.shape);
+        }
+        let dim = wp.shape[1];
+        let mut data = Vec::with_capacity(idx.len() * dim);
+        let mut qx = Vec::new();
+        match &wp.payload {
+            Payload::Int { q, scale, .. } => {
+                for &i in idx {
+                    let row = &q[i as usize * dim..(i as usize + 1) * dim];
+                    for (j, &qv) in row.iter().enumerate() {
+                        data.push(qv as f32 * scale[j]);
+                    }
+                    if run.record {
+                        qx.extend(row.iter().map(|&v| v as i32));
+                    }
+                }
+                if mode == ExecMode::Int {
+                    run.int_layers += 1;
+                }
+            }
+            Payload::F32(v) => {
+                for &i in idx {
+                    data.extend_from_slice(&v[i as usize * dim..(i as usize + 1) * dim]);
+                }
+            }
+        }
+        let y = Arr::new(vec![idx.len(), dim], data);
+        run.tap(&plan.name, qx, &y);
+        Ok(y)
+    }
+
+    fn vision_logits(&self, x: &Arr, mode: ExecMode, run: &mut Run) -> Result<Arr> {
+        match self.spec.name.as_str() {
+            "mlp3" => {
+                let h = self.dense(x, 0, mode, run)?;
+                let h = relu(&h);
+                let h = self.dense(&h, 1, mode, run)?;
+                let h = relu(&h);
+                self.dense(&h, 2, mode, run)
+            }
+            "cnn6" => {
+                let strides = [1usize, 2, 1, 2, 1];
+                let mut h = x.clone();
+                for (i, &s) in strides.iter().enumerate() {
+                    h = self.conv(&h, i, s, mode, run)?;
+                    h = relu(&h);
+                }
+                let pooled = gap(&h);
+                self.dense(&pooled, 5, mode, run)
+            }
+            other => bail!("integer engine does not cover vision model '{other}'"),
+        }
+    }
+
+    fn ncf_logits(
+        &self,
+        users: &[i32],
+        items: &[i32],
+        mode: ExecMode,
+        run: &mut Run,
+    ) -> Result<Arr> {
+        if self.spec.name != "ncf" {
+            bail!("integer engine does not cover ncf model '{}'", self.spec.name);
+        }
+        let eg_u = self.embed(users, 0, mode, run)?;
+        let eg_i = self.embed(items, 1, mode, run)?;
+        let em_u = self.embed(users, 2, mode, run)?;
+        let em_i = self.embed(items, 3, mode, run)?;
+        let gmf = mul(&eg_u, &eg_i);
+        let h = concat(&em_u, &em_i);
+        let h = self.dense(&h, 4, mode, run)?;
+        let h = relu(&h);
+        let h = self.dense(&h, 5, mode, run)?;
+        let h = relu(&h);
+        let z = concat(&gmf, &h);
+        self.dense(&z, 6, mode, run)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::QuantParams;
+    use crate::runtime::int::model::{pack, PackOpts};
+    use crate::runtime::manifest::Manifest;
+    use crate::tensor::init::init_params;
+
+    fn int8_quant(n: usize) -> QuantParams {
+        QuantParams {
+            dw: vec![0.0625; n],
+            qmw: vec![127.0; n],
+            da: vec![0.25; n],
+            qma: vec![127.0; n],
+        }
+    }
+
+    #[test]
+    fn mlp3_int_forward_shapes_and_counts() {
+        let m = Manifest::builtin();
+        let spec = m.model("mlp3").unwrap();
+        let params = init_params(&spec.params, 3);
+        let qm = pack(spec, &params, &int8_quant(3), None, &PackOpts::default()).unwrap();
+        let sess = InferSession::new(spec, &qm).unwrap();
+        let data = crate::data::vision::SynthVision::new(4);
+        let (x, _) = data.batch_features(0, 16, 64);
+        let res = sess.infer(&[x], ExecMode::Int).unwrap();
+        assert_eq!(res.logits.shape, vec![16, 16]);
+        assert_eq!(res.int_layers, 3);
+        assert!(res.logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn session_rejects_bad_inputs() {
+        let m = Manifest::builtin();
+        let spec = m.model("mlp3").unwrap();
+        let params = init_params(&spec.params, 3);
+        let qm = pack(spec, &params, &int8_quant(3), None, &PackOpts::default()).unwrap();
+        let sess = InferSession::new(spec, &qm).unwrap();
+        // wrong arity
+        assert!(sess.infer(&[], ExecMode::Int).is_err());
+        // wrong feature width
+        let bad = HostTensor::zeros(vec![4, 63]);
+        assert!(sess.infer(&[bad], ExecMode::Int).is_err());
+        // spec/model mismatch
+        let other = m.model("cnn6").unwrap();
+        assert!(InferSession::new(other, &qm).is_err());
+    }
+}

@@ -14,6 +14,10 @@
 //!   the AOT HLO-text artifacts and executes them on a dedicated engine
 //!   thread (PJRT wrapper types hold raw pointers and are `!Send`, so all
 //!   PJRT state lives on that thread behind an actor/mailbox handle).
+//! * [`int`] — the integer inference engine: packs a calibrated session
+//!   into i8/i4 weight artifacts and executes them with real integer
+//!   kernels (`EngineHandle::pack` + `int::InferSession`), serving the
+//!   coordinator's `pack`/`infer` endpoints.
 
 pub mod backend;
 pub mod cpu;
@@ -21,7 +25,9 @@ pub mod cpu;
 pub mod engine;
 #[cfg(feature = "xla")]
 pub mod handle;
+pub mod int;
 pub mod manifest;
 
 pub use backend::{Backend, BatchId, EngineHandle, EngineStats, QuantParams, SessionId};
+pub use int::{ExecMode, InferSession, PackOpts, QuantizedModel};
 pub use manifest::{Manifest, ModelSpec};

@@ -1,0 +1,212 @@
+//! Integration: the integer inference engine against the fake-quant CPU
+//! backend.
+//!
+//! With the power-of-two scales `pack` emits, the fake-quant reference's
+//! f32 arithmetic is exact wherever the i32 accumulator stays below 2²⁴,
+//! so the integer engine must match it **bit-for-bit** on `mlp3` and
+//! `ncf` (INT8 and INT4).  `cnn6`'s widest conv can exceed that bound,
+//! so its per-layer quantized activations are allowed to differ by one
+//! grid step.
+
+use lapq::config::{BitSpec, ExperimentConfig, Method};
+use lapq::coordinator::jobs::Runner;
+use lapq::data::ncf::SynthNcf;
+use lapq::data::vision::SynthVision;
+use lapq::quant::{minmax, GridKind};
+use lapq::runtime::cpu::{ops, zoo};
+use lapq::runtime::int::model::{pack, snap_po2, PackOpts, Payload, QuantizedModel};
+use lapq::runtime::int::{ExecMode, InferSession};
+use lapq::runtime::{EngineHandle, Manifest, ModelSpec, QuantParams};
+use lapq::tensor::init::init_params;
+use lapq::tensor::HostTensor;
+
+/// Per-layer power-of-two grids from the actual weight/activation ranges
+/// (min-max, snapped) — what a calibration-then-pack run would produce.
+fn po2_quant(
+    spec: &ModelSpec,
+    params: &[HostTensor],
+    acts_batch: &[HostTensor],
+    wbits: u32,
+    abits: u32,
+) -> QuantParams {
+    let acts = zoo::acts(spec, params, acts_batch).expect("acts");
+    let n = spec.n_quant_layers();
+    let mut q = QuantParams {
+        dw: vec![0.0; n],
+        qmw: vec![GridKind::Signed.qmax(wbits); n],
+        da: vec![0.0; n],
+        qma: vec![0.0; n],
+    };
+    for (i, ql) in spec.quant_layers.iter().enumerate() {
+        let w = params[ql.weight_param].f();
+        q.dw[i] = snap_po2(minmax::minmax_delta(w, q.qmw[i], GridKind::Signed));
+        let kind = GridKind::from_signed(ql.act_signed);
+        q.qma[i] = kind.qmax(abits);
+        q.da[i] = snap_po2(minmax::minmax_delta(acts[i].f(), q.qma[i], kind));
+    }
+    q
+}
+
+fn assert_bits_equal(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("lapq_int_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn int8_mlp3_bit_exact_with_fake_quant_backend() {
+    let manifest = Manifest::builtin();
+    let spec = manifest.model("mlp3").unwrap();
+    for seed in [1u64, 7, 23] {
+        let params = init_params(&spec.params, seed);
+        let data = SynthVision::new(seed);
+        let (x, y) = data.batch_features(0, 64, 64);
+        let q = po2_quant(spec, &params, &[x.clone()], 8, 8);
+        let qm = pack(spec, &params, &q, None, &PackOpts::default()).unwrap();
+        let mut sess = InferSession::new(spec, &qm).unwrap();
+        sess.record_taps = true;
+        let int_res = sess.infer(&[x.clone()], ExecMode::Int).unwrap();
+        let sim_res = sess.infer(&[x.clone()], ExecMode::Simulated).unwrap();
+        assert_eq!(int_res.int_layers, 3, "seed {seed}");
+        assert_eq!(sim_res.int_layers, 0);
+
+        // per-layer: quantized inputs and outputs bit-for-bit
+        assert_eq!(int_res.taps.len(), 3);
+        for (ti, si) in int_res.taps.iter().zip(&sim_res.taps) {
+            assert_eq!(ti.qx, si.qx, "seed {seed} layer {} quantized inputs", ti.name);
+            assert_bits_equal(&ti.y.data, &si.y.data, &format!("seed {seed} layer {}", ti.name));
+        }
+        assert_bits_equal(&int_res.logits.data, &sim_res.logits.data, "logits");
+
+        // ...and the simulated reference IS the CPU backend's graph: the
+        // loss computed from these logits matches `zoo::eval` bitwise.
+        let my_loss = ops::softmax_xent(&sim_res.logits, y.i());
+        let (ref_loss, _) = zoo::eval(spec, &params, Some(&qm.quant), &[x, y]).unwrap();
+        assert_eq!(my_loss.to_bits(), ref_loss.to_bits(), "seed {seed} loss");
+    }
+}
+
+#[test]
+fn int8_cnn6_within_one_grid_step() {
+    let manifest = Manifest::builtin();
+    let spec = manifest.model("cnn6").unwrap();
+    let params = init_params(&spec.params, 5);
+    let data = SynthVision::new(5);
+    let (x, _) = data.batch(0, 8);
+    let q = po2_quant(spec, &params, &[x.clone()], 8, 8);
+    let qm = pack(spec, &params, &q, None, &PackOpts::default()).unwrap();
+    let mut sess = InferSession::new(spec, &qm).unwrap();
+    sess.record_taps = true;
+    let int_res = sess.infer(&[x.clone()], ExecMode::Int).unwrap();
+    let sim_res = sess.infer(&[x], ExecMode::Simulated).unwrap();
+    assert_eq!(int_res.int_layers, 6);
+
+    // The widest conv's accumulator can cross 2^24, where the f32
+    // reference itself rounds — allow one grid step ("1 ULP of grid").
+    for (ti, si) in int_res.taps.iter().zip(&sim_res.taps) {
+        assert_eq!(ti.qx.len(), si.qx.len(), "layer {}", ti.name);
+        let max_dq = ti.qx.iter().zip(&si.qx).map(|(a, b)| (a - b).abs()).max().unwrap_or(0);
+        assert!(max_dq <= 1, "layer {}: quantized inputs differ by {max_dq}", ti.name);
+    }
+    let scale = sim_res.logits.data.iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+    for (a, b) in int_res.logits.data.iter().zip(&sim_res.logits.data) {
+        assert!((a - b).abs() <= 1e-3 * scale, "logits {a} vs {b}");
+    }
+}
+
+#[test]
+fn int8_ncf_bit_exact_with_fake_quant_backend() {
+    let manifest = Manifest::builtin();
+    let spec = manifest.model("ncf").unwrap();
+    let params = init_params(&spec.params, 3);
+    let data = SynthNcf::new(3, 2000, 1000, 6);
+    let (u, items, labels) = data.train_batch(0, 256, 4);
+    let q = po2_quant(spec, &params, &[u.clone(), items.clone()], 8, 8);
+    let qm = pack(spec, &params, &q, None, &PackOpts::default()).unwrap();
+    let sess = InferSession::new(spec, &qm).unwrap();
+    let int_res = sess.infer(&[u.clone(), items.clone()], ExecMode::Int).unwrap();
+    let sim_res = sess.infer(&[u.clone(), items.clone()], ExecMode::Simulated).unwrap();
+    assert_eq!(int_res.int_layers, 7); // 4 embeds + 3 dense
+    assert_bits_equal(&int_res.logits.data, &sim_res.logits.data, "ncf logits");
+
+    let my_loss = ops::bce_logits(&sim_res.logits, labels.f());
+    let (ref_loss, _) = zoo::eval(spec, &params, Some(&qm.quant), &[u, items, labels]).unwrap();
+    assert_eq!(my_loss.to_bits(), ref_loss.to_bits(), "ncf loss");
+}
+
+#[test]
+fn int4_mlp3_artifact_roundtrip_and_parity() {
+    let manifest = Manifest::builtin();
+    let spec = manifest.model("mlp3").unwrap();
+    let params = init_params(&spec.params, 11);
+    let data = SynthVision::new(11);
+    let (x, _) = data.batch_features(0, 32, 64);
+    let q = po2_quant(spec, &params, &[x.clone()], 4, 4);
+    let qm = pack(spec, &params, &q, None, &PackOpts::default()).unwrap();
+
+    // serialize through the nibble-packed blob and back
+    let dir = tmp_dir("i4");
+    qm.save(&dir).unwrap();
+    let loaded = QuantizedModel::load(&dir).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(loaded, qm);
+    for p in &loaded.params {
+        if let Payload::Int { bits, q, .. } = &p.payload {
+            assert_eq!(*bits, 4, "param {}", p.name);
+            assert!(q.iter().all(|&v| (-7..=7).contains(&v)), "param {}", p.name);
+        }
+    }
+
+    // INT4 accumulators are tiny: bit-exact parity again
+    let sess = InferSession::new(spec, &loaded).unwrap();
+    let int_res = sess.infer(&[x.clone()], ExecMode::Int).unwrap();
+    let sim_res = sess.infer(&[x], ExecMode::Simulated).unwrap();
+    assert_eq!(int_res.int_layers, 3);
+    assert_bits_equal(&int_res.logits.data, &sim_res.logits.data, "int4 logits");
+}
+
+#[test]
+fn runner_pack_infer_roundtrip_int8_lapq() {
+    let eng = EngineHandle::start_default().unwrap();
+    let mut runner = Runner::new(eng);
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp3".into();
+    cfg.train_steps = 60;
+    cfg.lr = 0.1;
+    cfg.calib_size = 512;
+    cfg.val_size = 1024;
+    cfg.bits = BitSpec::new(8, 8);
+    cfg.method = Method::Lapq;
+    cfg.lapq.max_evals = 120;
+    cfg.lapq.powell_iters = 1;
+
+    let (sum, qm) = runner.pack(&cfg, &PackOpts::default()).unwrap();
+    assert_eq!(sum.key, Runner::pack_key(&cfg));
+    assert!(sum.packed_bytes < sum.f32_bytes, "{} vs {}", sum.packed_bytes, sum.f32_bytes);
+    assert!(sum.quant_metric >= sum.fp32_metric - 0.05, "{sum:?}");
+    // the calibration's layer mask rode along into the artifact
+    assert_eq!(qm.active_w, vec![false, true, false]);
+
+    // serve a batch from the cache with the integer engine
+    let data = SynthVision::new(42);
+    let (x, _) = data.batch_features(0, 32, 64);
+    let reply = runner.infer(&sum.key, &[x.clone()]).unwrap();
+    assert_eq!(reply.rows, 32);
+    assert_eq!(reply.logits.shape, vec![32, 16]);
+    assert_eq!(reply.int_layers, 1); // exclude_first_last leaves fc2
+
+    // bit-for-bit against the fake-quant reference on the same batch
+    let spec = runner.eng.manifest().model("mlp3").unwrap().clone();
+    let sess = InferSession::new(&spec, &qm).unwrap();
+    let sim = sess.infer(&[x.clone()], ExecMode::Simulated).unwrap();
+    assert_bits_equal(&reply.logits.data, &sim.logits.data, "served logits");
+
+    // bare model name resolves through the MRU cache; unknown keys error
+    assert!(runner.infer("mlp3", &[x]).is_ok());
+    assert!(runner.infer("nope", &[HostTensor::zeros(vec![1, 64])]).is_err());
+}

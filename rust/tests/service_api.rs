@@ -1,10 +1,13 @@
-//! Integration: the TCP job service end-to-end — bind, serve, submit a
-//! quantization job over the wire, read the structured response.
+//! Integration: the TCP job service end-to-end — bind, serve, submit
+//! quantization / pack / infer jobs over the wire, read the structured
+//! responses, and verify that malformed input never kills a connection.
 
 use lapq::coordinator::jobs::Runner;
 use lapq::coordinator::service::{request, Service};
 use lapq::runtime::EngineHandle;
 use lapq::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 
 #[test]
 fn service_roundtrip() {
@@ -52,6 +55,126 @@ fn service_roundtrip() {
     let quant = result.req("quant_metric").as_f64().unwrap();
     assert!((0.0..=1.0).contains(&fp32));
     assert!(quant >= fp32 - 0.05, "8/8 should be near-lossless: {quant} vs {fp32}");
+    // the calibration layer mask rides along in the response
+    let active_w = result.req("active_w").as_arr().unwrap();
+    assert_eq!(active_w.len(), 3);
+
+    server.join().unwrap();
+}
+
+/// Regression: a malformed JSON line or unknown `cmd` must produce
+/// `{"ok":false,"error":...}` and keep the *same* connection serving.
+#[test]
+fn malformed_requests_keep_the_connection_alive() {
+    let eng = EngineHandle::start_default().expect("engine boots");
+    let service = Service::bind("127.0.0.1:0").unwrap();
+    let addr = service.addr;
+
+    let server = std::thread::spawn(move || {
+        let mut runner = Runner::new(eng);
+        service.serve(&mut runner, 5).unwrap();
+    });
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut roundtrip = |line: &str| -> Json {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(&resp).expect("structured response")
+    };
+
+    // not JSON at all
+    let r = roundtrip("this is { not json");
+    assert_eq!(r.req("ok").as_bool(), Some(false));
+    assert!(r.req("error").as_str().unwrap().contains("bad request"));
+
+    // unknown command
+    let r = roundtrip("{\"cmd\":\"frobnicate\"}");
+    assert_eq!(r.req("ok").as_bool(), Some(false));
+    assert!(r.req("error").as_str().unwrap().contains("unknown cmd"));
+
+    // missing command
+    let r = roundtrip("{\"x\":1}");
+    assert_eq!(r.req("ok").as_bool(), Some(false));
+
+    // a failing job (unknown model) — still a structured error
+    let r = roundtrip("{\"cmd\":\"quantize\",\"model\":\"nope\"}");
+    assert_eq!(r.req("ok").as_bool(), Some(false));
+
+    // ...and the very same connection still answers pings
+    let r = roundtrip("{\"cmd\":\"ping\"}");
+    assert_eq!(r.req("ok").as_bool(), Some(true));
+    assert_eq!(r.req("pong").as_bool(), Some(true));
+
+    server.join().unwrap();
+}
+
+/// The serving loop: pack an INT8 mlp3 over the wire, then stream
+/// predictions from the cached artifact.
+#[test]
+fn pack_and_infer_over_the_wire() {
+    let eng = EngineHandle::start_default().expect("engine boots");
+    let service = Service::bind("127.0.0.1:0").unwrap();
+    let addr = service.addr;
+
+    let server = std::thread::spawn(move || {
+        let mut runner = Runner::new(eng);
+        service.serve(&mut runner, 3).unwrap();
+    });
+
+    // infer before any pack: structured error, service keeps going
+    let miss = request(
+        &addr,
+        &Json::obj(vec![
+            ("cmd", Json::Str("infer".into())),
+            ("key", Json::Str("mlp3".into())),
+            ("x", Json::Arr(vec![Json::arr_f32(&[0.0; 64])])),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(miss.req("ok").as_bool(), Some(false));
+
+    let packed = request(
+        &addr,
+        &Json::obj(vec![
+            ("cmd", Json::Str("pack".into())),
+            ("model", Json::Str("mlp3".into())),
+            ("train_steps", Json::Num(40.0)),
+            ("lr", Json::Num(0.1)),
+            ("val_size", Json::Num(512.0)),
+            ("bits_w", Json::Num(8.0)),
+            ("bits_a", Json::Num(8.0)),
+            ("method", Json::Str("mmse".into())),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(packed.req("ok").as_bool(), Some(true), "{packed:?}");
+    let key = packed.req("packed").req("key").as_str().unwrap().to_string();
+    let f32_bytes = packed.req("packed").req("f32_bytes").as_f64().unwrap();
+    let packed_bytes = packed.req("packed").req("packed_bytes").as_f64().unwrap();
+    assert!(packed_bytes < f32_bytes);
+
+    // two feature rows -> two predictions from the integer engine
+    let rows = vec![Json::arr_f32(&[0.25; 64]), Json::arr_f32(&[-0.25; 64])];
+    let infer = request(
+        &addr,
+        &Json::obj(vec![
+            ("cmd", Json::Str("infer".into())),
+            ("key", Json::Str(key)),
+            ("x", Json::Arr(rows)),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(infer.req("ok").as_bool(), Some(true), "{infer:?}");
+    let result = infer.req("result");
+    assert_eq!(result.req("rows").as_f64(), Some(2.0));
+    assert_eq!(result.req("logits").as_arr().unwrap().len(), 2);
+    assert_eq!(result.req("logits").as_arr().unwrap()[0].as_arr().unwrap().len(), 16);
+    assert_eq!(result.req("predictions").as_arr().unwrap().len(), 2);
 
     server.join().unwrap();
 }
