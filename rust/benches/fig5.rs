@@ -7,7 +7,8 @@ use lapq::benchkit::Table;
 use lapq::config::{BitSpec, ExperimentConfig, Method};
 use lapq::coordinator::jobs::Runner;
 use lapq::lapq::objective::{grids, CalibObjective, LayerMask};
-use lapq::lapq::pipeline::{calibrate, layerwise_deltas};
+use lapq::lapq::stages::layerwise_deltas;
+use lapq::lapq::{Calibrator, NullObserver};
 use lapq::optim::quadfit::fit_quadratic;
 use lapq::runtime::EngineHandle;
 use lapq::util::rng::Pcg32;
@@ -24,12 +25,13 @@ fn main() -> lapq::Result<()> {
     cfg.bits = BitSpec::new(4, 4);
     cfg.method = Method::Lapq;
     cfg.val_size = 512;
-    cfg.lapq.max_evals = 60;
-    cfg.lapq.powell_iters = 1;
+    cfg.lapq.joint.max_evals = 60;
+    cfg.lapq.joint.iters = 1;
     cfg.lapq.bias_correction = false;
 
     let (sess, _val, calib) = runner.session_with_calib(&cfg)?;
-    let outcome = calibrate(&runner.eng, sess, &spec, &cfg, &calib)?;
+    let cal = Calibrator::from_config(&cfg);
+    let outcome = cal.run(&runner.eng, sess, &spec, &cfg, &calib, &mut NullObserver)?;
     let dw_star: Vec<f32> = outcome.quant.dw.clone();
     let da_star: Vec<f32> = outcome.quant.da.clone();
 

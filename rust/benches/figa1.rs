@@ -10,7 +10,7 @@ use lapq::benchkit::Table;
 use lapq::config::{BitSpec, ExperimentConfig};
 use lapq::coordinator::jobs::Runner;
 use lapq::lapq::objective::{grids, CalibObjective, LayerMask};
-use lapq::lapq::pipeline::layerwise_deltas;
+use lapq::lapq::stages::layerwise_deltas;
 use lapq::runtime::EngineHandle;
 
 fn main() -> lapq::Result<()> {
@@ -29,7 +29,7 @@ fn main() -> lapq::Result<()> {
         cfg.model = "cnn6".into();
         cfg.train_steps = 300;
         cfg.bits = BitSpec::new(bits, 32);
-        cfg.lapq.max_evals = 50;
+        cfg.lapq.joint.max_evals = 50;
         let (sess, _val, calib) = runner.session_with_calib(&cfg)?;
         let mask = LayerMask::all(spec.n_quant_layers(), cfg.bits).exclude_first_last(&[]);
         let (qmw, qma) = grids(&spec, cfg.bits);
@@ -47,7 +47,7 @@ fn main() -> lapq::Result<()> {
         // the 2-vs-4-bit curvature contrast the figure is about.
         let (dw0, da0) = layerwise_deltas(&calib, &mask, &qmw, &qma, 2.0);
         let (dw, da, _, _) =
-            lapq::lapq::pipeline::joint_optimize(&mut obj, &dw0, &da0, &cfg.lapq)?;
+            lapq::lapq::calibrator::joint_optimize(&mut obj, &dw0, &da0, &cfg.lapq)?;
         let rep = weight_hessian(&mut obj, &dw, &da, 0.08)?;
         let k = gaussian_curvature(&rep);
         ks.push(k);

@@ -25,8 +25,8 @@ fn main() -> lapq::Result<()> {
             cfg.method = Method::Lapq;
             cfg.calib_size = calib;
             cfg.val_size = 1024;
-            cfg.lapq.max_evals = 60;
-            cfg.lapq.powell_iters = 1;
+            cfg.lapq.joint.max_evals = 60;
+            cfg.lapq.joint.iters = 1;
             let res = runner.run(&cfg)?;
             t.row(&[
                 bits.label(),

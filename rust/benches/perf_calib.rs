@@ -1,0 +1,81 @@
+//! Perf: the calibration-speed trajectory — one full LAPQ calibration of
+//! mlp3 at W4/A4 per joint optimizer (Powell / Nelder–Mead / coordinate
+//! descent), recording objective evals, wall seconds and final loss.
+//! Feeds EXPERIMENTS.md §Perf next to the hot-path and int-infer
+//! trajectories.
+//!
+//! `BENCH_SMOKE=1` runs a bounded budget (CI-sized) — either way the
+//! numbers land in `bench_results/BENCH_calib.json` so calibration speed
+//! accumulates PR over PR.
+
+use lapq::config::{BitSpec, ExperimentConfig, JointOpt, Method};
+use lapq::coordinator::jobs::Runner;
+use lapq::lapq::EventLog;
+use lapq::runtime::EngineHandle;
+use lapq::util::json::Json;
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+    let smoke_var = std::env::var("BENCH_SMOKE");
+    let smoke = matches!(smoke_var.as_deref(), Ok(v) if !v.is_empty() && v != "0");
+
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+    let mut entries: Vec<Json> = Vec::new();
+
+    for opt in JointOpt::ALL {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = "mlp3".into();
+        cfg.train_steps = if smoke { 40 } else { 150 };
+        cfg.lr = 0.1;
+        cfg.val_size = 1024;
+        cfg.bits = BitSpec::new(4, 4);
+        cfg.method = Method::Lapq;
+        cfg.lapq.joint.optimizer = opt;
+        cfg.lapq.joint.max_evals = if smoke { 80 } else { 400 };
+        cfg.lapq.joint.iters = if smoke { 1 } else { 2 };
+
+        // Training is cached across optimizers, so the seconds delta is
+        // calibration alone; the EventLog trace rides along for free.
+        let mut events = EventLog::default();
+        let res = runner.run_observed(&cfg, &mut events)?;
+        println!(
+            "{:<18} evals {:>5}  loss {:.5} (init {:.5})  acc {:.3}  {:.2}s",
+            opt.name(),
+            res.outcome.joint_evals,
+            res.outcome.calib_loss,
+            res.outcome.init_loss,
+            res.quant_metric,
+            res.outcome.seconds,
+        );
+        entries.push(Json::obj(vec![
+            ("optimizer", Json::Str(opt.name().into())),
+            ("joint_evals", Json::Num(res.outcome.joint_evals as f64)),
+            ("events", Json::Num(events.events.len() as f64)),
+            ("seconds", Json::Num(res.outcome.seconds)),
+            ("calib_loss", Json::Num(res.outcome.calib_loss)),
+            ("init_loss", Json::Num(res.outcome.init_loss)),
+            ("fp32_calib_loss", Json::Num(res.outcome.fp32_calib_loss)),
+            ("quant_metric", Json::Num(res.quant_metric as f64)),
+            (
+                "trace",
+                Json::Arr(res.outcome.trace.iter().map(|t| t.to_json()).collect()),
+            ),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("perf_calib".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("model", Json::Str("mlp3".into())),
+        ("bits", Json::Str("4 / 4".into())),
+        ("backend", Json::Str(runner.eng.backend_name().into())),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_calib.json");
+    std::fs::write(&path, report.dump())?;
+    println!("[json] wrote {path:?}");
+    Ok(())
+}

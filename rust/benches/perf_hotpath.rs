@@ -11,7 +11,7 @@ use lapq::benchkit::{bench, Timing};
 use lapq::config::{BitSpec, ExperimentConfig};
 use lapq::coordinator::jobs::Runner;
 use lapq::lapq::objective::{grids, CalibObjective, LayerMask};
-use lapq::lapq::pipeline::layerwise_deltas;
+use lapq::lapq::stages::layerwise_deltas;
 use lapq::runtime::EngineHandle;
 use lapq::util::json::Json;
 

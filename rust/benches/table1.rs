@@ -24,8 +24,8 @@ fn main() -> lapq::Result<()> {
                 cfg.bits = BitSpec::new(w, a);
                 cfg.method = method;
                 cfg.val_size = 1024;
-                cfg.lapq.max_evals = 60;
-                cfg.lapq.powell_iters = 1;
+                cfg.lapq.joint.max_evals = 60;
+                cfg.lapq.joint.iters = 1;
                 sched.push(cfg);
             }
         }

@@ -23,8 +23,8 @@ fn main() -> lapq::Result<()> {
             cfg.val_size = 2048;
             cfg.bits = BitSpec::new(w, a);
             cfg.method = method;
-            cfg.lapq.max_evals = 60;
-            cfg.lapq.powell_iters = 1;
+            cfg.lapq.joint.max_evals = 60;
+            cfg.lapq.joint.iters = 1;
             sched.push(cfg);
         }
     }

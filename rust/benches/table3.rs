@@ -2,12 +2,28 @@
 //! LW+QA (layer-wise + quadratic approximation), each before and after
 //! the joint (Powell) phase, on cnn6 at W4/A4 and W32/A2.
 //! Paper shape: LW+QA init > LW init > Random, and joint improves all.
+//!
+//! Each ablation arm is an explicit [`Calibrator`] composition — the
+//! builder is the ablation surface — and runs under an [`EventLog`]
+//! observer, so the eval trace (phases, eval counts) comes for free.
 
 use lapq::benchkit::{pct, Table};
 use lapq::config::{BitSpec, ExperimentConfig, Method};
 use lapq::coordinator::jobs::Runner;
-use lapq::lapq::InitKind;
+use lapq::lapq::stages::{BiasCorrection, LayerwiseLp, MinMaxFallback, QuadraticPStar, RandomInit};
+use lapq::lapq::{Calibrator, CalibratorBuilder, EventLog};
 use lapq::runtime::EngineHandle;
+
+/// The three Table-3 init arms as builder compositions.
+fn arm(name: &str) -> CalibratorBuilder {
+    let b = Calibrator::builder();
+    match name {
+        "Random" => b.init(RandomInit { seed: 17 }),
+        "LW" => b.init(LayerwiseLp::fixed(vec![2.0])),
+        "LW + QA" => b.init(LayerwiseLp::grid()).init(MinMaxFallback).init(QuadraticPStar::grid()),
+        other => panic!("unknown arm {other}"),
+    }
+}
 
 fn main() -> lapq::Result<()> {
     lapq::util::logging::init();
@@ -16,26 +32,36 @@ fn main() -> lapq::Result<()> {
 
     let mut t = Table::new(
         "Table 3 — initialization ablation (cnn6)",
-        &["W/A", "Init", "Initial acc", "Joint acc", "Initial loss", "Joint loss"],
+        &["W/A", "Init", "Initial acc", "Joint acc", "Initial loss", "Joint loss", "evals"],
     );
 
     for bits in [BitSpec::new(4, 4), BitSpec::new(32, 2)] {
-        for (name, init) in [
-            ("Random", InitKind::Random(17)),
-            ("LW", InitKind::Layerwise),
-            ("LW + QA", InitKind::LapqQuadratic),
-        ] {
+        for name in ["Random", "LW", "LW + QA"] {
             let mut cfg = ExperimentConfig::default();
             cfg.model = "cnn6".into();
             cfg.train_steps = 300;
             cfg.bits = bits;
             cfg.method = Method::Lapq;
             cfg.val_size = 1024;
-            cfg.lapq.max_evals = 60;
-            cfg.lapq.powell_iters = 1;
+            cfg.lapq.joint.max_evals = 60;
+            cfg.lapq.joint.iters = 1;
 
-            let before = runner.run_with_init(&cfg, init, false)?;
-            let after = runner.run_with_init(&cfg, init, true)?;
+            let post = |b: CalibratorBuilder| {
+                if cfg.lapq.bias_correction {
+                    b.post(BiasCorrection)
+                } else {
+                    b
+                }
+            };
+            let init_only = post(arm(name)).build();
+            let with_joint = post(arm(name).joint_cfg(&cfg.lapq.joint)).build();
+
+            // Separate logs: the evals column is the cost of the joint
+            // run alone, not the sum of both ablation arms.
+            let mut before_ev = EventLog::default();
+            let before = runner.run_with(&cfg, &init_only, &mut before_ev)?;
+            let mut after_ev = EventLog::default();
+            let after = runner.run_with(&cfg, &with_joint, &mut after_ev)?;
             t.row(&[
                 bits.label(),
                 name.to_string(),
@@ -43,6 +69,7 @@ fn main() -> lapq::Result<()> {
                 pct(after.quant_metric),
                 format!("{:.4}", before.outcome.calib_loss),
                 format!("{:.4}", after.outcome.calib_loss),
+                format!("{}", after_ev.evals()),
             ]);
         }
     }

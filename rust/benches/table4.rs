@@ -26,8 +26,8 @@ fn main() -> lapq::Result<()> {
                 cfg.bits = bits;
                 cfg.method = Method::Lapq;
                 cfg.val_size = 1024;
-                cfg.lapq.max_evals = 60;
-                cfg.lapq.powell_iters = 1;
+                cfg.lapq.joint.max_evals = 60;
+                cfg.lapq.joint.iters = 1;
                 cfg.lapq.bias_correction = bc;
                 sched.push(cfg);
             }

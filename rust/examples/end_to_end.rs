@@ -24,7 +24,7 @@ fn main() -> lapq::Result<()> {
     base.lr = 0.02;
     base.calib_size = 512;
     base.val_size = 2048;
-    base.lapq.max_evals = 150;
+    base.lapq.joint.max_evals = 150;
 
     // 1. Train (cached for all subsequent jobs) and show the loss curve.
     let (_, report) = runner.trained_params(&base)?;

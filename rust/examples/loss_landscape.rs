@@ -8,7 +8,7 @@ use lapq::analysis::surface::scan_weight_surface;
 use lapq::config::{BitSpec, ExperimentConfig};
 use lapq::coordinator::jobs::Runner;
 use lapq::lapq::objective::{grids, CalibObjective, LayerMask};
-use lapq::lapq::pipeline::layerwise_deltas;
+use lapq::lapq::stages::layerwise_deltas;
 use lapq::runtime::EngineHandle;
 
 fn main() -> lapq::Result<()> {

@@ -1,10 +1,12 @@
 //! Quickstart: train a small MLP on the synthetic task, quantize it to
-//! W4/A4 with LAPQ, and compare against the MMSE baseline.
+//! W4/A4 with LAPQ (watching the calibration phases live), and compare
+//! against the MMSE baseline.
 //!
 //!     cargo run --release --example quickstart
 
 use lapq::config::{BitSpec, ExperimentConfig, Method};
 use lapq::coordinator::jobs::Runner;
+use lapq::lapq::events::{CalibEvent, FnObserver};
 use lapq::runtime::EngineHandle;
 
 fn main() -> lapq::Result<()> {
@@ -22,10 +24,16 @@ fn main() -> lapq::Result<()> {
     cfg.lr = 0.1;
     cfg.bits = BitSpec::new(4, 4);
 
-    // 3. Run LAPQ and the MMSE baseline (training is cached across jobs).
+    // 3. Run LAPQ and the baselines (training is cached across jobs).
+    //    Any `FnMut(&CalibEvent)` can watch a calibration run.
     for method in [Method::Lapq, Method::Mmse, Method::MinMax] {
         cfg.method = method;
-        let res = runner.run(&cfg)?;
+        let mut obs = FnObserver(|ev: &CalibEvent| {
+            if let CalibEvent::PhaseEnd { phase, evals, loss, .. } = ev {
+                println!("    [{phase}] {evals} evals -> loss {loss:.4}");
+            }
+        });
+        let res = runner.run_observed(&cfg, &mut obs)?;
         println!(
             "{:<7} W{}/A{}  FP32 {:.1}% -> quant {:.1}%   calib loss {:.4} (fp32 {:.4})",
             res.method,

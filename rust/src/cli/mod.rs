@@ -3,11 +3,12 @@
 
 pub mod parser;
 
-use crate::config::{ExperimentConfig, Method};
+use crate::config::{ExperimentConfig, Method, OVERRIDES};
 use crate::coordinator::jobs::Runner;
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::service::Service;
 use crate::coordinator::workload::{Split, Workload};
+use crate::lapq::events::LogObserver;
 use crate::runtime::cpu::ops::{argmax_correct, bce_correct};
 use crate::runtime::int::{ExecMode, InferSession, PackOpts, QuantizedModel};
 use crate::runtime::{EngineHandle, Manifest};
@@ -15,7 +16,7 @@ use anyhow::{bail, Context, Result};
 use parser::Args;
 use std::path::{Path, PathBuf};
 
-pub const USAGE: &str = "\
+const USAGE_HEAD: &str = "\
 repro — Loss Aware Post-training Quantization (LAPQ) coordinator
 
 USAGE: repro <command> [options] [-s key=value ...]
@@ -34,18 +35,26 @@ COMMANDS:
                                 fake-quant reference (bit-exact at tol 0)
   serve      [--addr HOST:PORT] start the TCP job service
   metrics                       dump the metrics registry
-
-Config overrides (-s): model seed train_steps lr calib_size val_size
-  bits_w bits_a method powell_iters max_evals bias_correction
-  exclude_first_last
 ";
+
+/// Full help text.  The override list is generated from
+/// [`crate::config::OVERRIDES`] — the same table `apply_overrides`
+/// dispatches on — so this text cannot drift from behaviour.
+pub fn usage() -> String {
+    let mut s = String::from(USAGE_HEAD);
+    s.push_str("\nConfig overrides (-s key=value):\n");
+    for o in OVERRIDES {
+        s.push_str(&format!("  {:<20} {}\n", o.key, o.help));
+    }
+    s
+}
 
 /// Entry point for the `repro` binary.
 pub fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_deref() {
         None | Some("help") => {
-            println!("{USAGE}");
+            println!("{}", usage());
             Ok(())
         }
         Some("info") => info(),
@@ -59,7 +68,7 @@ pub fn run(argv: &[String]) -> Result<()> {
             println!("{}", crate::coordinator::metrics::dump().dump());
             Ok(())
         }
-        Some(other) => bail!("unknown command '{other}'\n{USAGE}"),
+        Some(other) => bail!("unknown command '{other}'\n{}", usage()),
     }
 }
 
@@ -124,7 +133,14 @@ fn quantize(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
     let eng = EngineHandle::start_default()?;
     let mut runner = Runner::new(eng);
-    let res = runner.run(&cfg)?;
+    // Live progress: phase starts/ends and throttled eval lines.
+    let res = runner.run_observed(&cfg, &mut LogObserver::default())?;
+    for t in &res.outcome.trace {
+        println!(
+            "  phase {:<24} {:>5} evals  loss {:<10.4} {:>6.1}s",
+            t.phase, t.evals, t.loss, t.seconds
+        );
+    }
     println!(
         "{} W/A {}  {}: FP32 {:.2}% -> quant {:.2}%  (calib loss {:.4} vs fp32 {:.4}, {} joint evals, {:.1}s)",
         res.model,

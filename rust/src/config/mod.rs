@@ -2,6 +2,12 @@
 //! CLI overrides.  One [`ExperimentConfig`] fully describes a run
 //! (model, training budget, quantization setting, method, pipeline knobs),
 //! which is what the job scheduler, the CLI and the benches all construct.
+//!
+//! `to_json`/`from_json` round-trip **losslessly** (including the whole
+//! `lapq` sub-config) so service job responses and EXPERIMENTS records
+//! can reproduce a run exactly.  The `-s key=value` override surface is a
+//! single table ([`OVERRIDES`]) that both `apply_overrides` and the CLI
+//! help text derive from, so docs can't drift from behaviour.
 
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -9,7 +15,7 @@ use anyhow::{bail, Context, Result};
 /// Calibration method under test (Table 1 columns).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
-    /// Full LAPQ: layer-wise Lp + quadratic approx + Powell joint opt.
+    /// Full LAPQ: layer-wise Lp + quadratic approx + joint optimization.
     Lapq,
     /// Layer-wise MMSE (p=2), no joint phase.
     Mmse,
@@ -22,6 +28,9 @@ pub enum Method {
 }
 
 impl Method {
+    pub const ALL: [Method; 5] =
+        [Method::Lapq, Method::Mmse, Method::Aciq, Method::Kld, Method::MinMax];
+
     pub fn parse(s: &str) -> Result<Method> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "lapq" => Method::Lapq,
@@ -69,15 +78,73 @@ impl BitSpec {
     }
 }
 
+/// Joint-phase optimizer choice (Alg. 1 lines 13–21).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JointOpt {
+    /// Powell's direction-set method (the paper's choice).
+    Powell,
+    /// Nelder–Mead downhill simplex.
+    NelderMead,
+    /// Cyclic coordinate descent (the "separable view" ablation).
+    CoordinateDescent,
+}
+
+impl JointOpt {
+    pub const ALL: [JointOpt; 3] =
+        [JointOpt::Powell, JointOpt::NelderMead, JointOpt::CoordinateDescent];
+
+    pub fn parse(s: &str) -> Result<JointOpt> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "powell" => JointOpt::Powell,
+            "nm" | "nelder-mead" | "neldermead" => JointOpt::NelderMead,
+            "cd" | "coordinate" | "coordinate-descent" => JointOpt::CoordinateDescent,
+            other => bail!("unknown joint optimizer '{other}' (powell|nm|cd)"),
+        })
+    }
+
+    /// Canonical wire/override key.
+    pub fn key(&self) -> &'static str {
+        match self {
+            JointOpt::Powell => "powell",
+            JointOpt::NelderMead => "nm",
+            JointOpt::CoordinateDescent => "cd",
+        }
+    }
+
+    /// Display name (tables, service responses).
+    pub fn name(&self) -> &'static str {
+        match self {
+            JointOpt::Powell => "Powell",
+            JointOpt::NelderMead => "NelderMead",
+            JointOpt::CoordinateDescent => "CoordinateDescent",
+        }
+    }
+}
+
+/// Joint-phase configuration: which optimizer and how much budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JointCfg {
+    pub optimizer: JointOpt,
+    /// Outer iterations (Powell direction sweeps / CD sweeps; unused by
+    /// Nelder–Mead, which runs to `max_evals`).
+    pub iters: usize,
+    /// Hard cap on joint-phase objective evaluations.
+    pub max_evals: usize,
+}
+
+impl Default for JointCfg {
+    fn default() -> Self {
+        JointCfg { optimizer: JointOpt::Powell, iters: 2, max_evals: 600 }
+    }
+}
+
 /// LAPQ pipeline knobs (paper defaults in `Default`).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LapqCfg {
     /// p grid for phase 1 (paper sweeps ~[2, 4]).
     pub p_grid: Vec<f32>,
-    /// Powell outer iterations.
-    pub powell_iters: usize,
-    /// Powell objective-eval budget.
-    pub max_evals: usize,
+    /// Joint phase: optimizer choice + budget.
+    pub joint: JointCfg,
     /// Multiplicative search box around the initialization, per layer.
     pub box_lo: f64,
     pub box_hi: f64,
@@ -95,8 +162,7 @@ impl Default for LapqCfg {
             // while large p (≈ min-max) survives; the quadratic fit then
             // interpolates in the informative region.
             p_grid: vec![2.0, 2.5, 3.0, 4.0, 6.0, 8.0],
-            powell_iters: 2,
-            max_evals: 600,
+            joint: JointCfg::default(),
             box_lo: 0.3,
             box_hi: 3.0,
             exclude_first_last: true,
@@ -106,7 +172,7 @@ impl Default for LapqCfg {
 }
 
 /// A full experiment description.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
     pub model: String,
     pub seed: u64,
@@ -136,6 +202,194 @@ impl Default for ExperimentConfig {
             lapq: LapqCfg::default(),
         }
     }
+}
+
+/// One `-s key=value` override: the key, a one-line help string, an
+/// example value (exercised by tests so the table can't rot), and the
+/// application function.  [`ExperimentConfig::apply_overrides`] and the
+/// CLI help text are both driven by this table.
+pub struct OverrideSpec {
+    pub key: &'static str,
+    pub help: &'static str,
+    pub example: &'static str,
+    pub apply: fn(&mut ExperimentConfig, &str) -> Result<()>,
+}
+
+/// The full `-s` override surface.
+pub const OVERRIDES: &[OverrideSpec] = &[
+    OverrideSpec {
+        key: "model",
+        help: "model name (mlp3|cnn6|dwsep|resmini|ncf)",
+        example: "mlp3",
+        apply: |c, v| {
+            c.model = v.to_string();
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "seed",
+        help: "training/data RNG seed",
+        example: "7",
+        apply: |c, v| {
+            c.seed = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "train_steps",
+        help: "FP32 training steps",
+        example: "60",
+        apply: |c, v| {
+            c.train_steps = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "lr",
+        help: "training learning rate",
+        example: "0.05",
+        apply: |c, v| {
+            c.lr = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "calib_size",
+        help: "calibration set size (samples)",
+        example: "512",
+        apply: |c, v| {
+            c.calib_size = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "val_size",
+        help: "validation set size (samples)",
+        example: "1024",
+        apply: |c, v| {
+            c.val_size = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "bits_w",
+        help: "weight bitwidth (32 = FP32)",
+        example: "4",
+        apply: |c, v| {
+            c.bits.weights = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "bits_a",
+        help: "activation bitwidth (32 = FP32)",
+        example: "4",
+        apply: |c, v| {
+            c.bits.acts = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "method",
+        help: "calibration method (lapq|mmse|aciq|kld|minmax)",
+        example: "lapq",
+        apply: |c, v| {
+            c.method = Method::parse(v)?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "p_grid",
+        help: "comma-separated p grid for phase 1 (e.g. 2,3,4)",
+        example: "2,3,4",
+        apply: |c, v| {
+            c.lapq.p_grid = parse_f32_list(v)?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "joint",
+        help: "joint optimizer (powell|nm|cd)",
+        example: "nm",
+        apply: |c, v| {
+            c.lapq.joint.optimizer = JointOpt::parse(v)?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "joint_iters",
+        help: "joint outer iterations (Powell/CD sweeps)",
+        example: "2",
+        apply: |c, v| {
+            c.lapq.joint.iters = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "powell_iters",
+        help: "alias of joint_iters (legacy)",
+        example: "2",
+        apply: |c, v| {
+            c.lapq.joint.iters = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "max_evals",
+        help: "joint objective-eval budget",
+        example: "120",
+        apply: |c, v| {
+            c.lapq.joint.max_evals = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "box_lo",
+        help: "joint search box lower multiplier",
+        example: "0.3",
+        apply: |c, v| {
+            c.lapq.box_lo = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "box_hi",
+        help: "joint search box upper multiplier",
+        example: "3.0",
+        apply: |c, v| {
+            c.lapq.box_hi = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "bias_correction",
+        help: "apply Banner-style bias correction (true|false)",
+        example: "false",
+        apply: |c, v| {
+            c.lapq.bias_correction = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "exclude_first_last",
+        help: "leave first/last quant layers FP32 (true|false)",
+        example: "true",
+        apply: |c, v| {
+            c.lapq.exclude_first_last = v.parse()?;
+            Ok(())
+        },
+    },
+];
+
+fn parse_f32_list(v: &str) -> Result<Vec<f32>> {
+    let out: Vec<f32> = v
+        .split(',')
+        .map(|s| s.trim().parse::<f32>().with_context(|| format!("bad number '{s}'")))
+        .collect::<Result<_>>()?;
+    if out.is_empty() {
+        bail!("empty list");
+    }
+    Ok(out)
 }
 
 impl ExperimentConfig {
@@ -180,13 +434,14 @@ impl ExperimentConfig {
         }
         if let Some(l) = j.get("lapq") {
             if let Some(arr) = l.get("p_grid").and_then(|v| v.as_arr()) {
-                cfg.lapq.p_grid = arr.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect();
+                cfg.lapq.p_grid =
+                    arr.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect();
             }
-            if let Some(v) = l.get("powell_iters").and_then(|v| v.as_f64()) {
-                cfg.lapq.powell_iters = v as usize;
+            if let Some(v) = l.get("box_lo").and_then(|v| v.as_f64()) {
+                cfg.lapq.box_lo = v;
             }
-            if let Some(v) = l.get("max_evals").and_then(|v| v.as_f64()) {
-                cfg.lapq.max_evals = v as usize;
+            if let Some(v) = l.get("box_hi").and_then(|v| v.as_f64()) {
+                cfg.lapq.box_hi = v;
             }
             if let Some(v) = l.get("bias_correction").and_then(|v| v.as_bool()) {
                 cfg.lapq.bias_correction = v;
@@ -194,35 +449,51 @@ impl ExperimentConfig {
             if let Some(v) = l.get("exclude_first_last").and_then(|v| v.as_bool()) {
                 cfg.lapq.exclude_first_last = v;
             }
+            // Legacy flat keys (pre-JointCfg configs keep loading).
+            if let Some(v) = l.get("powell_iters").and_then(|v| v.as_f64()) {
+                cfg.lapq.joint.iters = v as usize;
+            }
+            if let Some(v) = l.get("max_evals").and_then(|v| v.as_f64()) {
+                cfg.lapq.joint.max_evals = v as usize;
+            }
+            // `"joint": "nm"` or `"joint": {"optimizer": ..., "iters": ...,
+            // "max_evals": ...}`.
+            if let Some(jn) = l.get("joint") {
+                if let Some(s) = jn.as_str() {
+                    cfg.lapq.joint.optimizer = JointOpt::parse(s)?;
+                } else {
+                    if let Some(s) = jn.get("optimizer").and_then(|v| v.as_str()) {
+                        cfg.lapq.joint.optimizer = JointOpt::parse(s)?;
+                    }
+                    if let Some(v) = jn.get("iters").and_then(|v| v.as_f64()) {
+                        cfg.lapq.joint.iters = v as usize;
+                    }
+                    if let Some(v) = jn.get("max_evals").and_then(|v| v.as_f64()) {
+                        cfg.lapq.joint.max_evals = v as usize;
+                    }
+                }
+            }
         }
         Ok(cfg)
     }
 
-    /// `key=value` overrides (the CLI's `-s` flags).
+    /// `key=value` overrides (the CLI's `-s` flags), driven by
+    /// [`OVERRIDES`].
     pub fn apply_overrides(&mut self, kvs: &[String]) -> Result<()> {
         for kv in kvs {
             let (k, v) = kv.split_once('=').with_context(|| format!("bad override '{kv}'"))?;
-            match k {
-                "model" => self.model = v.to_string(),
-                "seed" => self.seed = v.parse()?,
-                "train_steps" => self.train_steps = v.parse()?,
-                "lr" => self.lr = v.parse()?,
-                "calib_size" => self.calib_size = v.parse()?,
-                "val_size" => self.val_size = v.parse()?,
-                "bits_w" => self.bits.weights = v.parse()?,
-                "bits_a" => self.bits.acts = v.parse()?,
-                "method" => self.method = Method::parse(v)?,
-                "powell_iters" => self.lapq.powell_iters = v.parse()?,
-                "max_evals" => self.lapq.max_evals = v.parse()?,
-                "bias_correction" => self.lapq.bias_correction = v.parse()?,
-                "exclude_first_last" => self.lapq.exclude_first_last = v.parse()?,
-                other => bail!("unknown config key '{other}'"),
-            }
+            let spec = OVERRIDES.iter().find(|s| s.key == k).with_context(|| {
+                let known: Vec<&str> = OVERRIDES.iter().map(|s| s.key).collect();
+                format!("unknown config key '{k}' (known: {})", known.join(" "))
+            })?;
+            (spec.apply)(self, v).with_context(|| format!("applying {k}={v}"))?;
         }
         Ok(())
     }
 
     /// Serialize (for job-service responses and EXPERIMENTS.md records).
+    /// Lossless: `from_json(to_json())` reproduces the config exactly,
+    /// including the whole `lapq` sub-config.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", Json::Str(self.model.clone())),
@@ -234,6 +505,24 @@ impl ExperimentConfig {
             ("bits_w", Json::Num(self.bits.weights as f64)),
             ("bits_a", Json::Num(self.bits.acts as f64)),
             ("method", Json::Str(self.method.name().into())),
+            (
+                "lapq",
+                Json::obj(vec![
+                    ("p_grid", Json::arr_f32(&self.lapq.p_grid)),
+                    (
+                        "joint",
+                        Json::obj(vec![
+                            ("optimizer", Json::Str(self.lapq.joint.optimizer.key().into())),
+                            ("iters", Json::Num(self.lapq.joint.iters as f64)),
+                            ("max_evals", Json::Num(self.lapq.joint.max_evals as f64)),
+                        ]),
+                    ),
+                    ("box_lo", Json::Num(self.lapq.box_lo)),
+                    ("box_hi", Json::Num(self.lapq.box_hi)),
+                    ("exclude_first_last", Json::Bool(self.lapq.exclude_first_last)),
+                    ("bias_correction", Json::Bool(self.lapq.bias_correction)),
+                ]),
+            ),
         ])
     }
 }
@@ -247,6 +536,7 @@ mod tests {
         let c = ExperimentConfig::default();
         assert_eq!(c.bits.label(), "4 / 4");
         assert!(c.lapq.p_grid.len() >= 4);
+        assert_eq!(c.lapq.joint.optimizer, JointOpt::Powell);
     }
 
     #[test]
@@ -265,10 +555,47 @@ mod tests {
     }
 
     #[test]
+    fn new_overrides_apply() {
+        let mut c = ExperimentConfig::default();
+        c.apply_overrides(&[
+            "p_grid=2,3,4".into(),
+            "joint=cd".into(),
+            "joint_iters=5".into(),
+            "max_evals=99".into(),
+            "box_lo=0.5".into(),
+            "box_hi=2.5".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.lapq.p_grid, vec![2.0, 3.0, 4.0]);
+        assert_eq!(c.lapq.joint.optimizer, JointOpt::CoordinateDescent);
+        assert_eq!(c.lapq.joint.iters, 5);
+        assert_eq!(c.lapq.joint.max_evals, 99);
+        assert_eq!(c.lapq.box_lo, 0.5);
+        assert_eq!(c.lapq.box_hi, 2.5);
+        // legacy alias still lands on the typed joint config
+        c.apply_overrides(&["powell_iters=9".into()]).unwrap();
+        assert_eq!(c.lapq.joint.iters, 9);
+    }
+
+    #[test]
     fn bad_override_rejected() {
         let mut c = ExperimentConfig::default();
         assert!(c.apply_overrides(&["nope=1".into()]).is_err());
         assert!(c.apply_overrides(&["noequals".into()]).is_err());
+        assert!(c.apply_overrides(&["p_grid=".into()]).is_err());
+        assert!(c.apply_overrides(&["joint=sgd".into()]).is_err());
+    }
+
+    /// Every table entry must apply cleanly — the guarantee that the help
+    /// text (derived from the same table) never advertises a dead key.
+    #[test]
+    fn override_table_examples_apply() {
+        for o in OVERRIDES {
+            let mut c = ExperimentConfig::default();
+            (o.apply)(&mut c, o.example).unwrap_or_else(|e| {
+                panic!("override '{}' rejected its own example '{}': {e}", o.key, o.example)
+            });
+        }
     }
 
     #[test]
@@ -276,9 +603,33 @@ mod tests {
         let c = ExperimentConfig::default();
         let j = c.to_json();
         let c2 = ExperimentConfig::from_json(&j).unwrap();
-        assert_eq!(c2.model, c.model);
-        assert_eq!(c2.bits, c.bits);
-        assert_eq!(c2.method, c.method);
+        assert_eq!(c2, c, "default config must round-trip losslessly");
+    }
+
+    /// The regression this schema existed to prevent: the `lapq`
+    /// sub-config (p_grid, joint, box, flags) must survive the trip.
+    #[test]
+    fn json_roundtrip_lapq_subconfig() {
+        let mut c = ExperimentConfig::default();
+        c.model = "ncf".into();
+        c.seed = 9;
+        c.lapq.p_grid = vec![2.0, 3.25, 4.5];
+        c.lapq.joint =
+            JointCfg { optimizer: JointOpt::CoordinateDescent, iters: 7, max_evals: 123 };
+        c.lapq.box_lo = 0.45;
+        c.lapq.box_hi = 2.75;
+        c.lapq.exclude_first_last = false;
+        c.lapq.bias_correction = false;
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2, c, "lapq sub-config must round-trip losslessly");
+    }
+
+    #[test]
+    fn from_json_joint_string_form() {
+        let j = Json::parse(r#"{"model":"mlp3","lapq":{"joint":"nm","max_evals":40}}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.lapq.joint.optimizer, JointOpt::NelderMead);
+        assert_eq!(c.lapq.joint.max_evals, 40);
     }
 
     #[test]
@@ -293,6 +644,16 @@ mod tests {
             assert_eq!(Method::parse(s).unwrap(), m);
         }
         assert!(Method::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn joint_opt_parse_all() {
+        for o in JointOpt::ALL {
+            assert_eq!(JointOpt::parse(o.key()).unwrap(), o);
+        }
+        assert_eq!(JointOpt::parse("nelder-mead").unwrap(), JointOpt::NelderMead);
+        assert_eq!(JointOpt::parse("coordinate").unwrap(), JointOpt::CoordinateDescent);
+        assert!(JointOpt::parse("adam").is_err());
     }
 
     #[test]

@@ -14,7 +14,8 @@ use super::trainer::{train_full, TrainCfg, TrainReport};
 use super::workload::{Split, Workload};
 use crate::config::ExperimentConfig;
 use crate::lapq::calibration::{collect, CalibData};
-use crate::lapq::pipeline::{calibrate, calibrate_with_init, InitKind, QuantOutcome};
+use crate::lapq::calibrator::{Calibrator, InitKind, QuantOutcome};
+use crate::lapq::events::{CalibObserver, NullObserver};
 use crate::runtime::cpu::ops::Arr;
 use crate::runtime::int::{ExecMode, InferSession, PackOpts, QuantizedModel};
 use crate::runtime::{EngineHandle, SessionId};
@@ -152,14 +153,22 @@ impl Runner {
         })
     }
 
-    /// Run a full job with the configured method.
+    /// Run a full job with the configured method (standard composition,
+    /// no observer).
     pub fn run(&mut self, cfg: &ExperimentConfig) -> Result<JobResult> {
-        let t0 = std::time::Instant::now();
-        let spec = self.eng.manifest().model(&cfg.model)?.clone();
-        let (sess, _w, val, calib) = self.prepare(cfg)?;
-        let outcome = calibrate(&self.eng, sess, &spec, cfg, &calib)?;
-        let mut res = self.finish(cfg, sess, &val, &calib, outcome, t0)?;
-        res.method = cfg.method.name().to_string();
+        self.run_observed(cfg, &mut NullObserver)
+    }
+
+    /// Run a full job with the configured method, streaming
+    /// [`crate::lapq::CalibEvent`]s into `obs` (CLI progress lines, the
+    /// service's event frames).
+    pub fn run_observed(
+        &mut self,
+        cfg: &ExperimentConfig,
+        obs: &mut dyn CalibObserver,
+    ) -> Result<JobResult> {
+        let cal = Calibrator::from_config(cfg);
+        let res = self.run_with(cfg, &cal, obs)?;
         log::info!(
             "job {} {} {}: fp32 {:.3} -> quant {:.3} ({:.1}s)",
             res.model,
@@ -172,6 +181,27 @@ impl Runner {
         Ok(res)
     }
 
+    /// Run a job through an explicitly composed [`Calibrator`] — the
+    /// entry point every bench and ablation builds on.
+    pub fn run_with(
+        &mut self,
+        cfg: &ExperimentConfig,
+        cal: &Calibrator,
+        obs: &mut dyn CalibObserver,
+    ) -> Result<JobResult> {
+        let t0 = std::time::Instant::now();
+        let spec = self.eng.manifest().model(&cfg.model)?.clone();
+        let (sess, _w, val, calib) = self.prepare(cfg)?;
+        let outcome = match cal.run(&self.eng, sess, &spec, cfg, &calib, obs) {
+            Ok(o) => o,
+            Err(e) => {
+                self.cleanup(sess, &val, &calib);
+                return Err(e);
+            }
+        };
+        self.finish(cfg, sess, &val, &calib, outcome, t0)
+    }
+
     /// Table-3 ablation entry: explicit init, joint phase optional.
     pub fn run_with_init(
         &mut self,
@@ -179,11 +209,8 @@ impl Runner {
         init: InitKind,
         run_joint: bool,
     ) -> Result<JobResult> {
-        let t0 = std::time::Instant::now();
-        let spec = self.eng.manifest().model(&cfg.model)?.clone();
-        let (sess, _w, val, calib) = self.prepare(cfg)?;
-        let outcome = calibrate_with_init(&self.eng, sess, &spec, cfg, &calib, init, run_joint)?;
-        self.finish(cfg, sess, &val, &calib, outcome, t0)
+        let cal = Calibrator::from_init(cfg, init, run_joint);
+        self.run_with(cfg, &cal, &mut NullObserver)
     }
 
     /// Lower-level access for analysis benches: trained session + calib.
@@ -216,7 +243,8 @@ impl Runner {
         // own catch_unwind, so cleanup must not be skipped or the engine
         // would leak this job's session and batches on every bad request.
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let outcome = calibrate(&self.eng, sess, &spec, cfg, &calib)?;
+            let cal = Calibrator::from_config(cfg);
+            let outcome = cal.run(&self.eng, sess, &spec, cfg, &calib, &mut NullObserver)?;
             let active = (outcome.mask.weights.as_slice(), outcome.mask.acts.as_slice());
             let qm = self.eng.pack(&cfg.model, sess, &outcome.quant, Some(active), opts)?;
             // Metrics under the grids the artifact actually encodes.

@@ -6,28 +6,71 @@
 //!   {"cmd":"ping"}                         -> {"ok":true,"pong":true}
 //!   {"cmd":"models"}                       -> {"ok":true,"models":[...]}
 //!   {"cmd":"metrics"}                      -> {"ok":true,"metrics":{...}}
-//!   {"cmd":"quantize", ...config fields}   -> {"ok":true,"result":{...}}
+//!   {"cmd":"quantize", ...config fields,   -> {"ok":true,"result":{...}}
+//!        "stream":bool?}                      ("stream":true interleaves
+//!                                             {"event":...} progress
+//!                                             frames before the result)
 //!   {"cmd":"pack", ...config fields,       -> {"ok":true,"packed":{...}}
 //!        "po2":bool?}                         (artifact cached under "key")
 //!   {"cmd":"infer", "key":"...",           -> {"ok":true,"result":
 //!        "x":[[...]] | "x":[...]+"shape",        {"logits":[[...]],
 //!        or "users":[...],"items":[...]}          "predictions":[...],...}}
 //!
-//! Every error — malformed JSON, unknown `cmd`, a failing job, even a
-//! panic inside a kernel — comes back as `{"ok":false,"error":...}` on
-//! the same connection; the line loop and the listener keep serving.
-//! The listener thread accepts connections and forwards jobs to the
-//! single Runner; responses stream back on the same connection.
-//! `max_requests` bounds the serve loop for tests.
+//! Long calibrations are never silent: with `"stream":true` the quantize
+//! handler forwards the calibrator's [`CalibEvent`]s as one JSON frame
+//! per line (`{"event":"phase_start",...}`, throttled evals, phase ends,
+//! degenerate warnings) on the same connection, then the final
+//! `{"ok":...}` response.  Every error — malformed JSON, unknown `cmd`,
+//! a failing job, even a panic inside a kernel — comes back as
+//! `{"ok":false,"error":...}` on the same connection; the line loop and
+//! the listener keep serving.  The listener thread accepts connections
+//! and forwards jobs to the single Runner; responses stream back on the
+//! same connection.  `max_requests` bounds the serve loop for tests.
 
 use super::jobs::Runner;
 use super::metrics;
 use crate::config::ExperimentConfig;
+use crate::lapq::events::{CalibEvent, CalibObserver, EvalThrottle};
 use crate::tensor::HostTensor;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+
+/// Forwards calibration events to the connection as `{"event":...}`
+/// frames.  Evals go through the shared [`EvalThrottle`] (improvements +
+/// 1 in N); phase boundaries and degenerate warnings always ship.  A
+/// broken pipe flips `dead` so the job finishes without further write
+/// attempts (the final response write surfaces the disconnect).
+struct StreamObserver<'a> {
+    w: &'a mut dyn Write,
+    throttle: EvalThrottle,
+    dead: bool,
+}
+
+impl<'a> StreamObserver<'a> {
+    fn new(w: &'a mut dyn Write) -> Self {
+        StreamObserver { w, throttle: EvalThrottle::new(25), dead: false }
+    }
+}
+
+impl CalibObserver for StreamObserver<'_> {
+    fn on_event(&mut self, ev: &CalibEvent) {
+        if self.dead || !self.throttle.admit(ev) {
+            return;
+        }
+        let frame = ev.to_json().dump();
+        let ok = self
+            .w
+            .write_all(frame.as_bytes())
+            .and_then(|_| self.w.write_all(b"\n"))
+            .and_then(|_| self.w.flush());
+        if let Err(e) = ok {
+            log::warn!("event stream write failed: {e}");
+            self.dead = true;
+        }
+    }
+}
 
 pub struct Service {
     listener: TcpListener,
@@ -102,7 +145,7 @@ impl Service {
                 continue;
             }
             metrics::inc("service_requests");
-            let resp = self.dispatch(&line, runner);
+            let resp = self.dispatch(&line, runner, &mut writer);
             let ok = writer
                 .write_all(resp.dump().as_bytes())
                 .and_then(|_| writer.write_all(b"\n"))
@@ -123,9 +166,9 @@ impl Service {
     /// parse/config errors, job errors, and panics unwinding out of a
     /// kernel (the CPU backend recovers its mutex from poisoning, so the
     /// runner stays usable afterwards).
-    fn dispatch(&self, line: &str, runner: &mut Runner) -> Json {
+    fn dispatch(&self, line: &str, runner: &mut Runner, writer: &mut dyn Write) -> Json {
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            self.dispatch_inner(line, runner)
+            self.dispatch_inner(line, runner, writer)
         }));
         let err = |msg: String| {
             metrics::inc("service_errors");
@@ -138,7 +181,12 @@ impl Service {
         }
     }
 
-    fn dispatch_inner(&self, line: &str, runner: &mut Runner) -> Result<Json> {
+    fn dispatch_inner(
+        &self,
+        line: &str,
+        runner: &mut Runner,
+        writer: &mut dyn Write,
+    ) -> Result<Json> {
         let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
         let cmd = req.get("cmd").and_then(|c| c.as_str()).unwrap_or("");
         match cmd {
@@ -158,8 +206,20 @@ impl Service {
             }
             "quantize" => {
                 let cfg = ExperimentConfig::from_json(&req)?;
-                let res = runner.run(&cfg)?;
+                let stream = req.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+                let res = if stream {
+                    let mut obs = StreamObserver::new(writer);
+                    runner.run_observed(&cfg, &mut obs)?
+                } else {
+                    runner.run(&cfg)?
+                };
                 let bools = |v: &[bool]| Json::Arr(v.iter().map(|&b| Json::Bool(b)).collect());
+                let trace =
+                    Json::Arr(res.outcome.trace.iter().map(|t| t.to_json()).collect());
+                let joint = match cfg.method {
+                    crate::config::Method::Lapq => cfg.lapq.joint.optimizer.name(),
+                    _ => "none",
+                };
                 Ok(Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     (
@@ -168,13 +228,20 @@ impl Service {
                             ("model", Json::Str(res.model)),
                             ("bits", Json::Str(res.bits_label)),
                             ("method", Json::Str(res.method)),
+                            ("joint", Json::Str(joint.into())),
                             ("fp32_metric", Json::Num(res.fp32_metric as f64)),
                             ("quant_metric", Json::Num(res.quant_metric as f64)),
                             ("calib_loss", Json::Num(res.outcome.calib_loss)),
+                            ("init_loss", Json::Num(res.outcome.init_loss)),
                             ("fp32_calib_loss", Json::Num(res.outcome.fp32_calib_loss)),
                             ("joint_evals", Json::Num(res.outcome.joint_evals as f64)),
                             ("active_w", bools(&res.outcome.mask.weights)),
                             ("active_a", bools(&res.outcome.mask.acts)),
+                            ("trace", trace),
+                            // The exact config that produced this result —
+                            // lossless, so the run is reproducible from the
+                            // response alone.
+                            ("config", cfg.to_json()),
                             ("seconds", Json::Num(res.seconds)),
                         ]),
                     ),

@@ -1,0 +1,449 @@
+//! The [`Calibrator`]: a composable, observable calibration engine built
+//! from pluggable [`InitStrategy`] / [`JointOptimizer`] / [`PostStage`]
+//! stages (paper §4, Algorithm 1).
+//!
+//! ```text
+//! Calibrator::builder()
+//!     .init(LayerwiseLp::grid())        // Alg. 1 lines 1–8
+//!     .init(MinMaxFallback)             // collapse guard
+//!     .init(QuadraticPStar::grid())     // Alg. 1 lines 9–12
+//!     .joint_cfg(&cfg.lapq.joint)       // Alg. 1 lines 13–21
+//!     .post(BiasCorrection)
+//!     .build()
+//!     .run(&eng, sess, &spec, &cfg, &calib, &mut observer)
+//! ```
+//!
+//! Every run streams [`CalibEvent`]s into the supplied observer and
+//! records a per-phase [`PhaseTrace`] on the returned [`QuantOutcome`].
+
+use super::calibration::CalibData;
+use super::events::{CalibEvent, CalibObserver, NullObserver, PhaseTrace};
+use super::objective::{grids, CalibObjective, LayerMask};
+use super::stages::{
+    joint_optimizer, BaselineInit, BiasCorrection, InitCandidate, InitNotes, InitStrategy,
+    JointOptimizer, LayerwiseLp, MinMaxFallback, PostStage, QuadraticPStar, RandomInit, StageCtx,
+    PHASE_INIT,
+};
+use crate::config::{BitSpec, ExperimentConfig, JointCfg, LapqCfg, Method};
+use crate::runtime::manifest::ModelSpec;
+use crate::runtime::{EngineHandle, QuantParams, SessionId};
+use anyhow::{bail, Result};
+
+/// Everything a calibration run produces.
+#[derive(Clone, Debug)]
+pub struct QuantOutcome {
+    pub method: Method,
+    pub bits: BitSpec,
+    pub quant: QuantParams,
+    /// Which layers were active in the joint phase (weights/activations),
+    /// so `pack` and downstream tooling can tell "masked off" apart from
+    /// "calibrated to Δ=0" without re-deriving the config's mask.
+    pub mask: LayerMask,
+    /// Calibration loss of the final Δ.
+    pub calib_loss: f64,
+    /// FP32 loss on the same calibration batches.
+    pub fp32_calib_loss: f64,
+    /// Loss at the initialization (before the joint phase, when run).
+    pub init_loss: f64,
+    /// Quadratic-interpolation diagnostics (LAPQ only).
+    pub p_star: Option<f64>,
+    pub quad_r2: Option<f64>,
+    /// Joint-phase objective evaluations.
+    pub joint_evals: usize,
+    pub seconds: f64,
+    /// Per-phase summary of the run (init / joint / post stages in order).
+    pub trace: Vec<PhaseTrace>,
+    /// Original (pre-bias-correction) session params, for restoration.
+    pub original_params: Option<Vec<crate::tensor::HostTensor>>,
+}
+
+/// Initialization strategy shorthand for the Table-3 ablation entry
+/// points ([`Calibrator::from_init`], `Runner::run_with_init`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitKind {
+    /// Random steps (paper Table 3 "Random").
+    Random(u64),
+    /// Layer-wise p=2 (MMSE) only — "LW".
+    Layerwise,
+    /// Layer-wise + quadratic approximation — "LW + QA" (full LAPQ init).
+    LapqQuadratic,
+}
+
+/// Which layers count as "first" beyond index 0 (NCF's parallel embedding
+/// tables all feed the first dense layer).
+fn extra_first_layers(spec: &ModelSpec) -> Vec<usize> {
+    spec.quant_layers
+        .iter()
+        .enumerate()
+        .filter(|(_, q)| q.kind == "embed")
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// The config's layer mask (optionally excluding first/last layers).
+pub fn build_mask(spec: &ModelSpec, cfg: &ExperimentConfig) -> LayerMask {
+    let n = spec.n_quant_layers();
+    let mask = LayerMask::all(n, cfg.bits);
+    if cfg.lapq.exclude_first_last {
+        mask.exclude_first_last(&extra_first_layers(spec))
+    } else {
+        mask
+    }
+}
+
+/// A composed calibration: init candidates → best-of → optional joint
+/// optimization → post stages.  Build one with [`Calibrator::builder`],
+/// or let [`Calibrator::from_config`] assemble the standard composition
+/// for a config's method.
+pub struct Calibrator {
+    init: Vec<Box<dyn InitStrategy>>,
+    joint: Option<Box<dyn JointOptimizer>>,
+    post: Vec<Box<dyn PostStage>>,
+}
+
+#[derive(Default)]
+pub struct CalibratorBuilder {
+    init: Vec<Box<dyn InitStrategy>>,
+    joint: Option<Box<dyn JointOptimizer>>,
+    post: Vec<Box<dyn PostStage>>,
+}
+
+impl CalibratorBuilder {
+    /// Add an init strategy (candidates from all strategies compete).
+    pub fn init(mut self, s: impl InitStrategy + 'static) -> Self {
+        self.init.push(Box::new(s));
+        self
+    }
+
+    /// Set the joint optimizer (replaces any previous choice).
+    pub fn joint(mut self, j: impl JointOptimizer + 'static) -> Self {
+        self.joint = Some(Box::new(j));
+        self
+    }
+
+    /// Set the joint optimizer from a typed config (optimizer + budget).
+    pub fn joint_cfg(mut self, cfg: &JointCfg) -> Self {
+        self.joint = Some(joint_optimizer(cfg));
+        self
+    }
+
+    /// Append a post stage (runs after the Δ search, in order).
+    pub fn post(mut self, p: impl PostStage + 'static) -> Self {
+        self.post.push(Box::new(p));
+        self
+    }
+
+    pub fn build(self) -> Calibrator {
+        Calibrator { init: self.init, joint: self.joint, post: self.post }
+    }
+}
+
+impl Calibrator {
+    pub fn builder() -> CalibratorBuilder {
+        CalibratorBuilder::default()
+    }
+
+    /// The standard composition for a config: full LAPQ (layer-wise grid +
+    /// min-max fallback + quadratic p*, joint phase per `cfg.lapq.joint`)
+    /// when `method == Lapq`, otherwise the single-candidate baseline;
+    /// bias correction when enabled.
+    pub fn from_config(cfg: &ExperimentConfig) -> Calibrator {
+        let mut b = Calibrator::builder();
+        match cfg.method {
+            Method::Lapq => {
+                b = b
+                    .init(LayerwiseLp::grid())
+                    .init(MinMaxFallback)
+                    .init(QuadraticPStar::grid())
+                    .joint_cfg(&cfg.lapq.joint);
+            }
+            m => {
+                b = b.init(BaselineInit { method: m, bits: cfg.bits });
+            }
+        }
+        if cfg.lapq.bias_correction {
+            b = b.post(BiasCorrection);
+        }
+        b.build()
+    }
+
+    /// Table-3 ablation composition: an explicit [`InitKind`], joint phase
+    /// optional, bias correction per config.
+    pub fn from_init(cfg: &ExperimentConfig, init: InitKind, run_joint: bool) -> Calibrator {
+        let mut b = Calibrator::builder();
+        b = match init {
+            InitKind::Random(seed) => b.init(RandomInit { seed }),
+            InitKind::Layerwise => b.init(LayerwiseLp::fixed(vec![2.0])),
+            InitKind::LapqQuadratic => b
+                .init(LayerwiseLp::grid())
+                .init(MinMaxFallback)
+                .init(QuadraticPStar::grid()),
+        };
+        if run_joint {
+            b = b.joint_cfg(&cfg.lapq.joint);
+        }
+        if cfg.lapq.bias_correction {
+            b = b.post(BiasCorrection);
+        }
+        b.build()
+    }
+
+    /// Run the composed calibration against a live session.  Emits
+    /// [`CalibEvent`]s into `obs` throughout; on return the session params
+    /// may have been rewritten by post stages (`outcome.original_params`
+    /// holds the pristine weights for restoration by the caller).
+    pub fn run(
+        &self,
+        eng: &EngineHandle,
+        sess: SessionId,
+        spec: &ModelSpec,
+        cfg: &ExperimentConfig,
+        calib: &CalibData,
+        obs: &mut dyn CalibObserver,
+    ) -> Result<QuantOutcome> {
+        let t0 = std::time::Instant::now();
+        let mask = build_mask(spec, cfg);
+        let (qmw, qma) = grids(spec, cfg.bits);
+        let mut obj = CalibObjective::new(
+            eng,
+            sess,
+            calib.loss_batches.clone(),
+            mask.clone(),
+            qmw.clone(),
+            qma.clone(),
+        );
+        let fp32_calib_loss = obj.fp32_loss()?;
+        let mut trace: Vec<PhaseTrace> = Vec::new();
+        let mut notes = InitNotes::default();
+
+        // ---- init phase: gather candidates from every strategy, best-of.
+        obs.on_event(&CalibEvent::PhaseStart { phase: PHASE_INIT });
+        let ti = std::time::Instant::now();
+        let evals_at_start = obj.evals;
+        let mut candidates: Vec<InitCandidate> = Vec::new();
+        let mut lp_memo = std::collections::HashMap::new();
+        for s in &self.init {
+            let mut ctx = StageCtx {
+                calib,
+                obj: &mut obj,
+                lapq: &cfg.lapq,
+                notes: &mut notes,
+                obs: &mut *obs,
+                lp_memo: &mut lp_memo,
+            };
+            candidates.extend(s.candidates(&mut ctx)?);
+        }
+        if candidates.is_empty() {
+            bail!("calibrator has no init candidates (add an InitStrategy)");
+        }
+        let mut losses = Vec::with_capacity(candidates.len());
+        let mut best: Option<(f64, usize)> = None;
+        for (i, c) in candidates.iter().enumerate() {
+            let l = obj.loss(&c.dw, &c.da)?;
+            losses.push(l);
+            if l.is_finite() && best.map_or(true, |(b, _)| l < b) {
+                best = Some((l, i));
+            }
+            let incumbent = best.map_or(l, |(b, _)| b);
+            // `evals` is the phase's objective cache-miss count so far —
+            // consistent with the PhaseEnd/trace totals (strategies may
+            // evaluate internally; candidate re-evals are cache hits).
+            obs.on_event(&CalibEvent::Eval {
+                phase: PHASE_INIT,
+                evals: obj.evals - evals_at_start,
+                loss: l,
+                best: incumbent,
+            });
+        }
+        let (init_loss, best_idx) = match best {
+            Some(b) => b,
+            None => {
+                // Every candidate is non-finite: the quantized net has
+                // collapsed at this bitwidth.  Warn instead of silently
+                // proceeding, then keep the first candidate.
+                obs.on_event(&CalibEvent::Degenerate {
+                    phase: PHASE_INIT,
+                    detail: format!(
+                        "all {} init candidates have non-finite calibration loss; \
+                         keeping '{}'",
+                        candidates.len(),
+                        candidates[0].label
+                    ),
+                });
+                (losses[0], 0)
+            }
+        };
+        let init_evals = obj.evals - evals_at_start;
+        let init_secs = ti.elapsed().as_secs_f64();
+        obs.on_event(&CalibEvent::PhaseEnd {
+            phase: PHASE_INIT,
+            evals: init_evals,
+            seconds: init_secs,
+            loss: init_loss,
+        });
+        trace.push(PhaseTrace {
+            phase: PHASE_INIT,
+            evals: init_evals,
+            seconds: init_secs,
+            loss: init_loss,
+        });
+        let chosen = candidates.swap_remove(best_idx);
+        let (dw0, da0) = (chosen.dw, chosen.da);
+
+        // ---- joint phase (optional).
+        let (dw, da, calib_loss, joint_evals) = match &self.joint {
+            Some(joint) => {
+                let phase = joint.phase();
+                obs.on_event(&CalibEvent::PhaseStart { phase });
+                let tj = std::time::Instant::now();
+                let r = run_joint(joint.as_ref(), &mut obj, &dw0, &da0, &cfg.lapq, obs)?;
+                let secs = tj.elapsed().as_secs_f64();
+                obs.on_event(&CalibEvent::PhaseEnd { phase, evals: r.3, seconds: secs, loss: r.2 });
+                trace.push(PhaseTrace { phase, evals: r.3, seconds: secs, loss: r.2 });
+                r
+            }
+            None => (dw0, da0, init_loss, 0),
+        };
+
+        let mut outcome = QuantOutcome {
+            method: cfg.method,
+            bits: cfg.bits,
+            quant: obj.quant_params(&dw, &da),
+            mask: mask.clone(),
+            calib_loss,
+            fp32_calib_loss,
+            init_loss,
+            p_star: notes.p_star,
+            quad_r2: notes.quad_r2,
+            joint_evals,
+            seconds: 0.0,
+            trace: Vec::new(),
+            original_params: None,
+        };
+
+        // ---- post stages.
+        for p in &self.post {
+            let phase = p.phase();
+            obs.on_event(&CalibEvent::PhaseStart { phase });
+            let tp = std::time::Instant::now();
+            p.apply(eng, sess, spec, cfg, &mut outcome)?;
+            let secs = tp.elapsed().as_secs_f64();
+            obs.on_event(&CalibEvent::PhaseEnd {
+                phase,
+                evals: 0,
+                seconds: secs,
+                loss: calib_loss,
+            });
+            trace.push(PhaseTrace { phase, evals: 0, seconds: secs, loss: calib_loss });
+        }
+
+        outcome.seconds = t0.elapsed().as_secs_f64();
+        outcome.trace = trace;
+        Ok(outcome)
+    }
+}
+
+/// Drive a [`JointOptimizer`] over multiplicative scalings of the active
+/// steps (Alg. 1 lines 13–21), emitting a [`CalibEvent::Eval`] per
+/// objective evaluation.  Returns `(dw, da, loss, evals)`.
+pub fn run_joint(
+    joint: &dyn JointOptimizer,
+    obj: &mut CalibObjective,
+    dw0: &[f32],
+    da0: &[f32],
+    lapq: &LapqCfg,
+    obs: &mut dyn CalibObserver,
+) -> Result<(Vec<f32>, Vec<f32>, f64, usize)> {
+    let aw = obj.mask.active_w();
+    let aa = obj.mask.active_a();
+    let dim = aw.len() + aa.len();
+    if dim == 0 {
+        let l = obj.loss(dw0, da0)?;
+        return Ok((dw0.to_vec(), da0.to_vec(), l, 0));
+    }
+    let dw0v = dw0.to_vec();
+    let da0v = da0.to_vec();
+    let expand = |x: &[f64]| -> (Vec<f32>, Vec<f32>) {
+        let mut dw = dw0v.clone();
+        let mut da = da0v.clone();
+        for (k, &i) in aw.iter().enumerate() {
+            dw[i] = dw0v[i] * x[k] as f32;
+        }
+        for (k, &i) in aa.iter().enumerate() {
+            da[i] = da0v[i] * x[aw.len() + k] as f32;
+        }
+        (dw, da)
+    };
+
+    let x0 = vec![1.0f64; dim];
+    let lo = vec![lapq.box_lo; dim];
+    let hi = vec![lapq.box_hi; dim];
+    let phase = joint.phase();
+    let mut n = 0usize;
+    let mut best = f64::INFINITY;
+    let mut f = |x: &[f64]| -> Result<f64> {
+        let (dw, da) = expand(x);
+        let v = obj.loss(&dw, &da)?;
+        n += 1;
+        if v < best {
+            best = v;
+        }
+        obs.on_event(&CalibEvent::Eval { phase, evals: n, loss: v, best });
+        Ok(v)
+    };
+    let r = joint.minimize(&x0, &lo, &hi, &mut f)?;
+    let (dw, da) = expand(&r.x);
+    Ok((dw, da, r.fx, r.evals))
+}
+
+/// Compatibility form of the joint phase for analysis benches: run the
+/// *configured* optimizer with no observer attached.
+pub fn joint_optimize(
+    obj: &mut CalibObjective,
+    dw0: &[f32],
+    da0: &[f32],
+    lapq: &LapqCfg,
+) -> Result<(Vec<f32>, Vec<f32>, f64, usize)> {
+    let joint = joint_optimizer(&lapq.joint);
+    run_joint(joint.as_ref(), obj, dw0, da0, lapq, &mut NullObserver)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_kind_eq() {
+        assert_eq!(InitKind::Layerwise, InitKind::Layerwise);
+        assert_ne!(InitKind::Random(1), InitKind::Layerwise);
+    }
+
+    #[test]
+    fn from_config_shapes() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.method = Method::Lapq;
+        let c = Calibrator::from_config(&cfg);
+        assert_eq!(c.init.len(), 3);
+        assert!(c.joint.is_some());
+        assert_eq!(c.post.len(), 1);
+
+        cfg.method = Method::Mmse;
+        cfg.lapq.bias_correction = false;
+        let c = Calibrator::from_config(&cfg);
+        assert_eq!(c.init.len(), 1);
+        assert!(c.joint.is_none());
+        assert!(c.post.is_empty());
+    }
+
+    #[test]
+    fn builder_composes() {
+        let c = Calibrator::builder()
+            .init(RandomInit { seed: 7 })
+            .joint_cfg(&JointCfg::default())
+            .post(BiasCorrection)
+            .build();
+        assert_eq!(c.init.len(), 1);
+        assert!(c.joint.is_some());
+        assert_eq!(c.post.len(), 1);
+    }
+}

@@ -1,0 +1,288 @@
+//! Calibration observability: typed events emitted by the [`Calibrator`]
+//! while it runs, the [`CalibObserver`] sink they flow into, and the
+//! per-phase [`PhaseTrace`] records that end up on `QuantOutcome`.
+//!
+//! Every consumer picks its own fidelity: the CLI logs throttled progress
+//! lines ([`LogObserver`]), benches collect full eval traces for free
+//! ([`EventLog`]), and the TCP service streams `{"event":...}` frames to
+//! the client so minutes-long calibrations are never silent.
+//!
+//! [`Calibrator`]: super::calibrator::Calibrator
+
+use crate::util::json::Json;
+
+/// One step of a calibration run.  Phase names are `&'static str` because
+/// every stage type has a fixed name ("init", "joint:powell", ...).
+#[derive(Clone, Debug)]
+pub enum CalibEvent {
+    /// A phase (init / joint / post stage) began.
+    PhaseStart { phase: &'static str },
+    /// One objective evaluation inside a phase.  `evals` counts within the
+    /// phase; `best` is the incumbent loss so far.
+    Eval { phase: &'static str, evals: usize, loss: f64, best: f64 },
+    /// A phase finished: how many evaluations it spent and where it ended.
+    PhaseEnd { phase: &'static str, evals: usize, seconds: f64, loss: f64 },
+    /// Something structurally wrong that the run survives but the operator
+    /// should know about (e.g. an all-non-finite init trajectory).
+    Degenerate { phase: &'static str, detail: String },
+}
+
+impl CalibEvent {
+    /// Wire form for the TCP service's streamed frames.
+    pub fn to_json(&self) -> Json {
+        match self {
+            CalibEvent::PhaseStart { phase } => Json::obj(vec![
+                ("event", Json::Str("phase_start".into())),
+                ("phase", Json::Str((*phase).into())),
+            ]),
+            CalibEvent::Eval { phase, evals, loss, best } => Json::obj(vec![
+                ("event", Json::Str("eval".into())),
+                ("phase", Json::Str((*phase).into())),
+                ("evals", Json::Num(*evals as f64)),
+                ("loss", Json::Num(*loss)),
+                ("best", Json::Num(*best)),
+            ]),
+            CalibEvent::PhaseEnd { phase, evals, seconds, loss } => Json::obj(vec![
+                ("event", Json::Str("phase_end".into())),
+                ("phase", Json::Str((*phase).into())),
+                ("evals", Json::Num(*evals as f64)),
+                ("seconds", Json::Num(*seconds)),
+                ("loss", Json::Num(*loss)),
+            ]),
+            CalibEvent::Degenerate { phase, detail } => Json::obj(vec![
+                ("event", Json::Str("degenerate".into())),
+                ("phase", Json::Str((*phase).into())),
+                ("detail", Json::Str(detail.clone())),
+            ]),
+        }
+    }
+
+    pub fn phase(&self) -> &'static str {
+        match self {
+            CalibEvent::PhaseStart { phase }
+            | CalibEvent::Eval { phase, .. }
+            | CalibEvent::PhaseEnd { phase, .. }
+            | CalibEvent::Degenerate { phase, .. } => phase,
+        }
+    }
+}
+
+/// Event sink for a calibration run.
+pub trait CalibObserver {
+    fn on_event(&mut self, ev: &CalibEvent);
+}
+
+/// Discards everything (the default for batch jobs and tests).
+#[derive(Default)]
+pub struct NullObserver;
+
+impl CalibObserver for NullObserver {
+    fn on_event(&mut self, _ev: &CalibEvent) {}
+}
+
+/// Records every event (benches and tests read the trace afterwards).
+#[derive(Default)]
+pub struct EventLog {
+    pub events: Vec<CalibEvent>,
+}
+
+impl CalibObserver for EventLog {
+    fn on_event(&mut self, ev: &CalibEvent) {
+        self.events.push(ev.clone());
+    }
+}
+
+impl EventLog {
+    pub fn evals(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, CalibEvent::Eval { .. })).count()
+    }
+
+    pub fn phases(&self) -> Vec<&'static str> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                CalibEvent::PhaseStart { phase } => Some(*phase),
+                _ => None,
+            })
+            .collect()
+    }
+
+    pub fn degenerate(&self) -> bool {
+        self.events.iter().any(|e| matches!(e, CalibEvent::Degenerate { .. }))
+    }
+}
+
+/// Shared 1-in-N eval throttle with improvement passthrough — the one
+/// policy both [`LogObserver`] and the service's stream observer apply,
+/// so they can't drift apart.  Phase boundaries and degenerate warnings
+/// always pass; a [`CalibEvent::Eval`] passes when it *strictly* improves
+/// the throttle's own incumbent or lands on every `every`-th observed
+/// eval.  Ties are suppressed (a plateaued or all-`inf` run must not
+/// flood the sink), and counting observed events — not the event's own
+/// `evals` field — keeps the cadence correct for the init phase, whose
+/// cache-miss counter can plateau.
+pub struct EvalThrottle {
+    pub every: usize,
+    seen: usize,
+    incumbent: f64,
+}
+
+impl EvalThrottle {
+    pub fn new(every: usize) -> Self {
+        EvalThrottle { every, seen: 0, incumbent: f64::INFINITY }
+    }
+
+    /// Should `ev` be emitted downstream?
+    pub fn admit(&mut self, ev: &CalibEvent) -> bool {
+        match ev {
+            CalibEvent::Eval { loss, .. } => {
+                self.seen += 1;
+                let improved = *loss < self.incumbent;
+                if improved {
+                    self.incumbent = *loss;
+                }
+                improved || (self.every > 0 && self.seen % self.every == 0)
+            }
+            _ => true,
+        }
+    }
+}
+
+/// Throttled `log::info!` progress lines (what `repro quantize` shows).
+pub struct LogObserver {
+    throttle: EvalThrottle,
+}
+
+impl LogObserver {
+    /// Log improving evals plus every `every`-th one.
+    pub fn every(every: usize) -> Self {
+        LogObserver { throttle: EvalThrottle::new(every) }
+    }
+}
+
+impl Default for LogObserver {
+    fn default() -> Self {
+        LogObserver::every(25)
+    }
+}
+
+impl CalibObserver for LogObserver {
+    fn on_event(&mut self, ev: &CalibEvent) {
+        if !self.throttle.admit(ev) {
+            return;
+        }
+        match ev {
+            CalibEvent::PhaseStart { phase } => log::info!("[calib] {phase}: start"),
+            CalibEvent::Eval { phase, evals, loss, best } => {
+                log::info!("[calib] {phase}: eval {evals}  loss {loss:.5}  best {best:.5}")
+            }
+            CalibEvent::PhaseEnd { phase, evals, seconds, loss } => {
+                log::info!("[calib] {phase}: done, {evals} evals, loss {loss:.5} ({seconds:.1}s)")
+            }
+            CalibEvent::Degenerate { phase, detail } => {
+                log::warn!("[calib] {phase}: degenerate — {detail}")
+            }
+        }
+    }
+}
+
+/// Adapter: any `FnMut(&CalibEvent)` is an observer.
+pub struct FnObserver<F: FnMut(&CalibEvent)>(pub F);
+
+impl<F: FnMut(&CalibEvent)> CalibObserver for FnObserver<F> {
+    fn on_event(&mut self, ev: &CalibEvent) {
+        (self.0)(ev)
+    }
+}
+
+/// One phase's summary on `QuantOutcome::trace` — the durable form of the
+/// PhaseStart/PhaseEnd event pair.
+#[derive(Clone, Debug)]
+pub struct PhaseTrace {
+    pub phase: &'static str,
+    pub evals: usize,
+    pub seconds: f64,
+    /// Best calibration loss at the end of the phase.  Post stages don't
+    /// evaluate the objective; their rows repeat the incumbent loss with
+    /// `evals == 0`.
+    pub loss: f64,
+}
+
+impl PhaseTrace {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("phase", Json::Str(self.phase.into())),
+            ("evals", Json::Num(self.evals as f64)),
+            ("seconds", Json::Num(self.seconds)),
+            ("loss", Json::Num(self.loss)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_json_shapes() {
+        let j = CalibEvent::PhaseStart { phase: "init" }.to_json();
+        assert_eq!(j.req("event").as_str(), Some("phase_start"));
+        assert_eq!(j.req("phase").as_str(), Some("init"));
+        let j = CalibEvent::Eval { phase: "joint:powell", evals: 3, loss: 0.5, best: 0.4 }
+            .to_json();
+        assert_eq!(j.req("evals").as_f64(), Some(3.0));
+        let j = CalibEvent::Degenerate { phase: "init", detail: "all inf".into() }.to_json();
+        assert_eq!(j.req("event").as_str(), Some("degenerate"));
+    }
+
+    #[test]
+    fn event_log_collects() {
+        let mut log = EventLog::default();
+        log.on_event(&CalibEvent::PhaseStart { phase: "init" });
+        log.on_event(&CalibEvent::Eval { phase: "init", evals: 1, loss: 1.0, best: 1.0 });
+        log.on_event(&CalibEvent::PhaseEnd { phase: "init", evals: 1, seconds: 0.1, loss: 1.0 });
+        assert_eq!(log.evals(), 1);
+        assert_eq!(log.phases(), vec!["init"]);
+        assert!(!log.degenerate());
+    }
+
+    #[test]
+    fn throttle_admits_improvements_and_every_nth() {
+        let ev = |loss: f64| CalibEvent::Eval { phase: "init", evals: 1, loss, best: loss };
+        let mut t = EvalThrottle::new(3);
+        // phase events always pass
+        assert!(t.admit(&CalibEvent::PhaseStart { phase: "init" }));
+        // strictly improving evals pass regardless of position
+        assert!(t.admit(&ev(1.0)));
+        // ties and regressions off-cadence are suppressed...
+        assert!(!t.admit(&ev(1.0)));
+        // ...but the 3rd observed eval passes on cadence
+        assert!(t.admit(&ev(2.0)));
+        assert!(!t.admit(&ev(2.0)));
+        // a genuine improvement still cuts through immediately
+        assert!(t.admit(&ev(0.5)));
+        assert!(t.admit(&CalibEvent::Degenerate { phase: "init", detail: "x".into() }));
+    }
+
+    #[test]
+    fn throttle_suppresses_inf_plateau() {
+        // all-inf collapse: nothing "improves", only the 1-in-N cadence
+        let inf = f64::INFINITY;
+        let ev = || CalibEvent::Eval { phase: "j", evals: 1, loss: inf, best: inf };
+        let mut t = EvalThrottle::new(5);
+        let admitted = (0..20).filter(|_| t.admit(&ev())).count();
+        assert_eq!(admitted, 4, "only every 5th of 20 inf evals may pass");
+    }
+
+    #[test]
+    fn fn_observer_forwards() {
+        let mut n = 0usize;
+        {
+            let mut obs = FnObserver(|_ev: &CalibEvent| n += 1);
+            obs.on_event(&CalibEvent::PhaseStart { phase: "init" });
+            let end = CalibEvent::PhaseEnd { phase: "init", evals: 0, seconds: 0.0, loss: 0.0 };
+            obs.on_event(&end);
+        }
+        assert_eq!(n, 2);
+    }
+}

@@ -1,9 +1,55 @@
 //! LAPQ — the paper's contribution: loss-aware post-training calibration
-//! of per-layer quantization steps (layer-wise Lp → quadratic
-//! approximation over p → Powell joint optimization).
+//! of per-layer quantization steps, exposed as a composable, observable
+//! [`Calibrator`] built from pluggable stages.
+//!
+//! # Paper Algorithm 1 ↔ stage types
+//!
+//! | Alg. 1 phase                         | Stage type                          |
+//! |--------------------------------------|-------------------------------------|
+//! | lines 1–8: layer-wise L_p per p      | [`stages::LayerwiseLp`]             |
+//! | lines 9–12: quadratic fit over p, p* | [`stages::QuadraticPStar`]          |
+//! | (small-model collapse guard)         | [`stages::MinMaxFallback`]          |
+//! | lines 13–21: joint minimization      | [`stages::JointOptimizer`] — [`stages::PowellJoint`] (paper), [`stages::NelderMeadJoint`], [`stages::CoordinateDescentJoint`] |
+//! | Table 1 baselines (no joint phase)   | [`stages::BaselineInit`]            |
+//! | Table 3 "Random" init ablation       | [`stages::RandomInit`]              |
+//! | Banner-style weight correction       | [`stages::BiasCorrection`] ([`stages::PostStage`]) |
+//!
+//! The init strategies are *composable candidates*: every strategy
+//! proposes Δ vectors, the calibrator's best-of selector evaluates all of
+//! them on the calibration loss and the winner seeds the joint phase —
+//! exactly how Alg. 1 picks its starting point, but open to new
+//! strategies (per-channel, integer-programming, alternating scalar
+//! minimization, ...) without touching the pipeline.
+//!
+//! Runs are observable: the calibrator streams [`CalibEvent`]s into a
+//! [`CalibObserver`] (CLI progress lines, bench eval traces, the TCP
+//! service's `{"event":...}` frames) and records a per-phase
+//! [`events::PhaseTrace`] on [`QuantOutcome::trace`].
+//!
+//! ```no_run
+//! # use lapq::lapq::{Calibrator, stages::*, events::LogObserver};
+//! # fn demo(eng: &lapq::runtime::EngineHandle, sess: lapq::runtime::SessionId,
+//! #         spec: &lapq::runtime::manifest::ModelSpec,
+//! #         cfg: &lapq::config::ExperimentConfig,
+//! #         calib: &lapq::lapq::calibration::CalibData) -> anyhow::Result<()> {
+//! let outcome = Calibrator::builder()
+//!     .init(LayerwiseLp::grid())
+//!     .init(MinMaxFallback)
+//!     .init(QuadraticPStar::grid())
+//!     .joint_cfg(&cfg.lapq.joint)
+//!     .post(BiasCorrection)
+//!     .build()
+//!     .run(eng, sess, spec, cfg, calib, &mut LogObserver::default())?;
+//! # Ok(()) }
+//! ```
 
 pub mod calibration;
+pub mod calibrator;
+pub mod events;
 pub mod objective;
 pub mod pipeline;
+pub mod stages;
 
-pub use pipeline::{calibrate, calibrate_with_init, InitKind, QuantOutcome};
+pub use calibrator::{Calibrator, CalibratorBuilder, InitKind, QuantOutcome};
+pub use events::{CalibEvent, CalibObserver, EventLog, LogObserver, NullObserver};
+pub use pipeline::{calibrate, calibrate_with_init};

@@ -1,226 +1,37 @@
-//! The LAPQ calibration pipeline (paper §4, Algorithm 1) and the baseline
-//! calibrators it is compared against.
+//! Compatibility wrappers over the [`Calibrator`] API (paper §4,
+//! Algorithm 1).  The pipeline used to be hard-wired here; it now lives
+//! in three composable pieces:
 //!
-//! Phases:
-//!   1. **Layer-wise**: for each p in the grid, per-layer Δ_p minimizing
-//!      the L_p quantization error (Eq. 12) of weights and activations.
-//!   2. **Quadratic approximation**: fit L(Δ_p) over p, take p*.
-//!   3. **Joint optimization**: Powell's method over all active layer
-//!      steps (multiplicative parameterization around the init), driven by
-//!      the compiled `fwd_quant` calibration loss.
+//! * [`super::stages`] — init strategies, joint optimizers, post stages
+//! * [`super::calibrator`] — the [`Calibrator`] builder + runner
+//! * [`super::events`] — the observer/event stream
+//!
+//! `calibrate` / `calibrate_with_init` survive as thin entry points so
+//! existing callers (and muscle memory) keep working.
 
 use super::calibration::CalibData;
-use super::objective::{grids, CalibObjective, LayerMask};
-use crate::config::{BitSpec, ExperimentConfig, LapqCfg, Method};
-use crate::optim::powell::{powell, PowellCfg};
-use crate::optim::quadfit;
-use crate::quant::{aciq, bias_correction, kld, minmax, mmse, GridKind};
+use super::calibrator::Calibrator;
+use super::events::NullObserver;
+use crate::config::ExperimentConfig;
 use crate::runtime::manifest::ModelSpec;
-use crate::runtime::{EngineHandle, QuantParams, SessionId};
-use crate::util::rng::Pcg32;
+use crate::runtime::{EngineHandle, SessionId};
 use anyhow::Result;
 
-/// Everything a calibration run produces.
-#[derive(Clone, Debug)]
-pub struct QuantOutcome {
-    pub method: Method,
-    pub bits: BitSpec,
-    pub quant: QuantParams,
-    /// Which layers were active in the joint phase (weights/activations),
-    /// so `pack` and downstream tooling can tell "masked off" apart from
-    /// "calibrated to Δ=0" without re-deriving the config's mask.
-    pub mask: LayerMask,
-    /// Calibration loss of the final Δ.
-    pub calib_loss: f64,
-    /// FP32 loss on the same calibration batches.
-    pub fp32_calib_loss: f64,
-    /// Loss at the initialization (before the joint phase, when run).
-    pub init_loss: f64,
-    /// Quadratic-interpolation diagnostics (LAPQ only).
-    pub p_star: Option<f64>,
-    pub quad_r2: Option<f64>,
-    /// Joint-phase objective evaluations.
-    pub joint_evals: usize,
-    pub seconds: f64,
-    /// Original (pre-bias-correction) session params, for restoration.
-    pub original_params: Option<Vec<crate::tensor::HostTensor>>,
-}
+pub use super::calibrator::{build_mask, joint_optimize, InitKind, QuantOutcome};
+pub use super::stages::{baseline_deltas, layerwise_deltas, random_deltas};
 
-/// Initialization strategy for the joint phase (Table 3 ablation).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum InitKind {
-    /// Random steps (paper Table 3 "Random").
-    Random(u64),
-    /// Layer-wise p=2 (MMSE) only — "LW".
-    Layerwise,
-    /// Layer-wise + quadratic approximation — "LW + QA" (full LAPQ init).
-    LapqQuadratic,
-}
-
-/// Which layers count as "first" beyond index 0 (NCF's parallel embedding
-/// tables all feed the first dense layer).
-fn extra_first_layers(spec: &ModelSpec) -> Vec<usize> {
-    spec.quant_layers
-        .iter()
-        .enumerate()
-        .filter(|(_, q)| q.kind == "embed")
-        .map(|(i, _)| i)
-        .collect()
-}
-
-fn build_mask(spec: &ModelSpec, cfg: &ExperimentConfig) -> LayerMask {
-    let n = spec.n_quant_layers();
-    let mask = LayerMask::all(n, cfg.bits);
-    if cfg.lapq.exclude_first_last {
-        mask.exclude_first_last(&extra_first_layers(spec))
-    } else {
-        mask
-    }
-}
-
-/// Per-layer Δ for a given p (phase 1), for weights and activations.
-pub fn layerwise_deltas(calib: &CalibData, mask: &LayerMask, qmw: &[f32], qma: &[f32], p: f32) -> (Vec<f32>, Vec<f32>) {
-    let n = mask.weights.len();
-    let mut dw = vec![0.0f32; n];
-    let mut da = vec![0.0f32; n];
-    let search = mmse::LpSearch::default();
-    for i in 0..n {
-        if mask.weights[i] {
-            dw[i] =
-                mmse::lp_optimal_delta(calib.weights[i].f(), qmw[i], p, GridKind::Signed, search).0;
-        }
-        if mask.acts[i] {
-            da[i] =
-                mmse::lp_optimal_delta(&calib.act_samples[i], qma[i], p, calib.act_kind[i], search)
-                    .0;
-        }
-    }
-    (dw, da)
-}
-
-/// Baseline per-layer calibrators (Table 1 competitors).
-fn baseline_deltas(
-    method: Method,
+/// Calibrate `sess` with the configured method (the standard composition
+/// from [`Calibrator::from_config`]).  On return the session params may
+/// be bias-corrected; `outcome.original_params` holds the pristine
+/// weights for restoration by the caller.
+pub fn calibrate(
+    eng: &EngineHandle,
+    sess: SessionId,
+    spec: &ModelSpec,
+    cfg: &ExperimentConfig,
     calib: &CalibData,
-    mask: &LayerMask,
-    qmw: &[f32],
-    qma: &[f32],
-    bits: BitSpec,
-) -> (Vec<f32>, Vec<f32>) {
-    let n = mask.weights.len();
-    let mut dw = vec![0.0f32; n];
-    let mut da = vec![0.0f32; n];
-    for i in 0..n {
-        if mask.weights[i] {
-            let w = calib.weights[i].f();
-            dw[i] = match method {
-                Method::Mmse => mmse::mmse_delta(w, qmw[i], GridKind::Signed),
-                Method::Aciq => aciq::aciq_delta(w, bits.weights, GridKind::Signed),
-                Method::Kld => kld::kld_delta(w, bits.weights, GridKind::Signed),
-                Method::MinMax => minmax::minmax_delta(w, qmw[i], GridKind::Signed),
-                Method::Lapq => unreachable!(),
-            };
-        }
-        if mask.acts[i] {
-            let a = &calib.act_samples[i];
-            let kind = calib.act_kind[i];
-            da[i] = match method {
-                Method::Mmse => mmse::mmse_delta(a, qma[i], kind),
-                Method::Aciq => aciq::aciq_delta(a, bits.acts, kind),
-                Method::Kld => kld::kld_delta(a, bits.acts, kind),
-                Method::MinMax => minmax::minmax_delta(a, qma[i], kind),
-                Method::Lapq => unreachable!(),
-            };
-        }
-    }
-    (dw, da)
-}
-
-/// Random initialization for the Table-3 ablation: log-uniform multiple of
-/// the min-max step.
-pub fn random_deltas(
-    calib: &CalibData,
-    mask: &LayerMask,
-    qmw: &[f32],
-    qma: &[f32],
-    seed: u64,
-) -> (Vec<f32>, Vec<f32>) {
-    let mut rng = Pcg32::seeded(seed);
-    let n = mask.weights.len();
-    let mut dw = vec![0.0f32; n];
-    let mut da = vec![0.0f32; n];
-    let mut draw = |base: f32| -> f32 {
-        let log_mult = rng.range(-2.3, 1.4); // e^-2.3≈0.1 .. e^1.4≈4
-        base * log_mult.exp()
-    };
-    for i in 0..n {
-        if mask.weights[i] {
-            dw[i] = draw(minmax::minmax_delta(calib.weights[i].f(), qmw[i], GridKind::Signed));
-        }
-        if mask.acts[i] {
-            da[i] =
-                draw(minmax::minmax_delta(&calib.act_samples[i], qma[i], calib.act_kind[i]));
-        }
-    }
-    (dw, da)
-}
-
-/// Phase 3: Powell over multiplicative scalings of the active steps.
-pub fn joint_optimize(
-    obj: &mut CalibObjective,
-    dw0: &[f32],
-    da0: &[f32],
-    lapq_cfg: &LapqCfg,
-) -> Result<(Vec<f32>, Vec<f32>, f64, usize)> {
-    let aw = obj.mask.active_w();
-    let aa = obj.mask.active_a();
-    let dim = aw.len() + aa.len();
-    if dim == 0 {
-        let l = obj.loss(dw0, da0)?;
-        return Ok((dw0.to_vec(), da0.to_vec(), l, 0));
-    }
-    let dw0v = dw0.to_vec();
-    let da0v = da0.to_vec();
-    let expand = |x: &[f64]| -> (Vec<f32>, Vec<f32>) {
-        let mut dw = dw0v.clone();
-        let mut da = da0v.clone();
-        for (k, &i) in aw.iter().enumerate() {
-            dw[i] = dw0v[i] * x[k] as f32;
-        }
-        for (k, &i) in aa.iter().enumerate() {
-            da[i] = da0v[i] * x[aw.len() + k] as f32;
-        }
-        (dw, da)
-    };
-
-    // Powell body cannot return Result: trap errors and report +inf.
-    let mut err: Option<anyhow::Error> = None;
-    let result = {
-        let obj_cell = std::cell::RefCell::new(&mut *obj);
-        let x0 = vec![1.0f64; dim];
-        let lo = vec![lapq_cfg.box_lo; dim];
-        let hi = vec![lapq_cfg.box_hi; dim];
-        let pcfg = PowellCfg {
-            max_iter: lapq_cfg.powell_iters,
-            max_evals: lapq_cfg.max_evals,
-            ..Default::default()
-        };
-        powell(&x0, &lo, &hi, &pcfg, |x| {
-            let (dw, da) = expand(x);
-            match obj_cell.borrow_mut().loss(&dw, &da) {
-                Ok(v) => v,
-                Err(e) => {
-                    err = Some(e);
-                    f64::INFINITY
-                }
-            }
-        })
-    };
-    if let Some(e) = err {
-        return Err(e);
-    }
-    let (dw, da) = expand(&result.x);
-    Ok((dw, da, result.fx, result.evals))
+) -> Result<QuantOutcome> {
+    Calibrator::from_config(cfg).run(eng, sess, spec, cfg, calib, &mut NullObserver)
 }
 
 /// Full calibration with an explicit initialization (Table 3 entry point).
@@ -233,174 +44,5 @@ pub fn calibrate_with_init(
     init: InitKind,
     run_joint: bool,
 ) -> Result<QuantOutcome> {
-    let t0 = std::time::Instant::now();
-    let mask = build_mask(spec, cfg);
-    let (qmw, qma) = grids(spec, cfg.bits);
-    let mut obj = CalibObjective::new(
-        eng,
-        sess,
-        calib.loss_batches.clone(),
-        mask.clone(),
-        qmw.clone(),
-        qma.clone(),
-    );
-    let fp32_calib_loss = obj.fp32_loss()?;
-
-    let mut p_star = None;
-    let mut quad_r2 = None;
-    let (dw0, da0) = match init {
-        InitKind::Random(seed) => random_deltas(calib, &mask, &qmw, &qma, seed),
-        InitKind::Layerwise => layerwise_deltas(calib, &mask, &qmw, &qma, 2.0),
-        InitKind::LapqQuadratic => {
-            // phase 1: sample the p trajectory
-            let mut ps = Vec::new();
-            let mut losses = Vec::new();
-            let mut best: Option<(f64, Vec<f32>, Vec<f32>)> = None;
-            for &p in &cfg.lapq.p_grid {
-                let (dw, da) = layerwise_deltas(calib, &mask, &qmw, &qma, p);
-                let l = obj.loss(&dw, &da)?;
-                ps.push(p as f64);
-                losses.push(l);
-                if best.as_ref().map_or(true, |(b, _, _)| l < *b) {
-                    best = Some((l, dw, da));
-                }
-            }
-            // min-max (p -> inf) candidate: on small stand-ins the whole
-            // finite-p trajectory can sit inside the low-bit collapse
-            // plateau while the un-clipped grid survives.
-            {
-                let (dw, da) =
-                    baseline_deltas(Method::MinMax, calib, &mask, &qmw, &qma, cfg.bits);
-                let l = obj.loss(&dw, &da)?;
-                if best.as_ref().map_or(true, |(b, _, _)| l < *b) {
-                    best = Some((l, dw, da));
-                }
-            }
-            // phase 2: quadratic interpolation over p
-            if let Some((pstar, quad)) = quadfit::interpolate_pstar(&ps, &losses) {
-                p_star = Some(pstar);
-                quad_r2 = Some(quad.r2);
-                let (dw, da) = layerwise_deltas(calib, &mask, &qmw, &qma, pstar as f32);
-                let l = obj.loss(&dw, &da)?;
-                if best.as_ref().map_or(true, |(b, _, _)| l < *b) {
-                    best = Some((l, dw, da));
-                }
-            }
-            let (_, dw, da) = best.unwrap();
-            (dw, da)
-        }
-    };
-    let init_loss = obj.loss(&dw0, &da0)?;
-
-    let (dw, da, calib_loss, joint_evals) = if run_joint {
-        joint_optimize(&mut obj, &dw0, &da0, &cfg.lapq)?
-    } else {
-        (dw0, da0, init_loss, 0)
-    };
-
-    let mut outcome = QuantOutcome {
-        method: Method::Lapq,
-        bits: cfg.bits,
-        quant: obj.quant_params(&dw, &da),
-        mask: mask.clone(),
-        calib_loss,
-        fp32_calib_loss,
-        init_loss,
-        p_star,
-        quad_r2,
-        joint_evals,
-        seconds: t0.elapsed().as_secs_f64(),
-        original_params: None,
-    };
-    maybe_bias_correct(eng, sess, spec, cfg, &mut outcome)?;
-    Ok(outcome)
-}
-
-/// Calibrate `sess` with the configured method.  On return the session
-/// params may be bias-corrected; `outcome.original_params` holds the
-/// pristine weights for restoration by the caller.
-pub fn calibrate(
-    eng: &EngineHandle,
-    sess: SessionId,
-    spec: &ModelSpec,
-    cfg: &ExperimentConfig,
-    calib: &CalibData,
-) -> Result<QuantOutcome> {
-    match cfg.method {
-        Method::Lapq => {
-            calibrate_with_init(eng, sess, spec, cfg, calib, InitKind::LapqQuadratic, true)
-        }
-        m => {
-            let t0 = std::time::Instant::now();
-            let mask = build_mask(spec, cfg);
-            let (qmw, qma) = grids(spec, cfg.bits);
-            let mut obj = CalibObjective::new(
-                eng,
-                sess,
-                calib.loss_batches.clone(),
-                mask.clone(),
-                qmw.clone(),
-                qma.clone(),
-            );
-            let fp32_calib_loss = obj.fp32_loss()?;
-            let (dw, da) = baseline_deltas(m, calib, &mask, &qmw, &qma, cfg.bits);
-            let calib_loss = obj.loss(&dw, &da)?;
-            let mut outcome = QuantOutcome {
-                method: m,
-                bits: cfg.bits,
-                quant: obj.quant_params(&dw, &da),
-                mask: mask.clone(),
-                calib_loss,
-                fp32_calib_loss,
-                init_loss: calib_loss,
-                p_star: None,
-                quad_r2: None,
-                joint_evals: 0,
-                seconds: t0.elapsed().as_secs_f64(),
-                original_params: None,
-            };
-            maybe_bias_correct(eng, sess, spec, cfg, &mut outcome)?;
-            Ok(outcome)
-        }
-    }
-}
-
-/// Apply Banner-style per-channel bias correction to the session weights
-/// for the final Δw (no-op unless enabled and weights are quantized).
-fn maybe_bias_correct(
-    eng: &EngineHandle,
-    sess: SessionId,
-    spec: &ModelSpec,
-    cfg: &ExperimentConfig,
-    outcome: &mut QuantOutcome,
-) -> Result<()> {
-    if !cfg.lapq.bias_correction || !cfg.bits.quant_weights() {
-        return Ok(());
-    }
-    let params = eng.get_params(sess)?;
-    let mut corrected = params.clone();
-    for (i, q) in spec.quant_layers.iter().enumerate() {
-        let d = outcome.quant.dw[i];
-        if d > 0.0 {
-            corrected[q.weight_param] = bias_correction::bias_corrected_weights(
-                &params[q.weight_param],
-                d,
-                outcome.quant.qmw[i],
-            );
-        }
-    }
-    eng.set_params(sess, corrected)?;
-    outcome.original_params = Some(params);
-    Ok(())
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn init_kind_eq() {
-        assert_eq!(InitKind::Layerwise, InitKind::Layerwise);
-        assert_ne!(InitKind::Random(1), InitKind::Layerwise);
-    }
+    Calibrator::from_init(cfg, init, run_joint).run(eng, sess, spec, cfg, calib, &mut NullObserver)
 }

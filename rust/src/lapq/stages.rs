@@ -1,0 +1,626 @@
+//! The pluggable stage vocabulary of the calibration API: initialization
+//! strategies (paper §4.1–4.2), joint optimizers (§4.3) and post stages
+//! (bias correction), each behind a trait so `Calibrator` can compose
+//! them freely.
+//!
+//! Mapping to paper Algorithm 1:
+//! * lines 1–8 (layer-wise L_p per p in the grid)  → [`LayerwiseLp`]
+//! * lines 9–12 (quadratic interpolation over p)   → [`QuadraticPStar`]
+//! * ablation inits (Table 3)                      → [`RandomInit`]
+//! * small-model collapse guard                    → [`MinMaxFallback`]
+//! * lines 13–21 (joint minimization)              → [`JointOptimizer`]
+//!   ([`PowellJoint`], [`NelderMeadJoint`], [`CoordinateDescentJoint`])
+//! * Banner-style weight correction                → [`BiasCorrection`]
+
+use super::calibration::CalibData;
+use super::calibrator::QuantOutcome;
+use super::events::{CalibEvent, CalibObserver};
+use super::objective::{CalibObjective, LayerMask};
+use crate::config::{BitSpec, ExperimentConfig, JointCfg, JointOpt, LapqCfg, Method};
+use crate::optim::coordinate::{coordinate_descent, CoordCfg};
+use crate::optim::nelder_mead::{nelder_mead, NmCfg};
+use crate::optim::powell::{powell, PowellCfg};
+use crate::optim::quadfit;
+use crate::quant::{aciq, bias_correction, kld, minmax, mmse, GridKind};
+use crate::runtime::manifest::ModelSpec;
+use crate::runtime::{EngineHandle, SessionId};
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+
+/// Phase label for the whole init stage (candidates from every strategy
+/// compete under one phase).
+pub const PHASE_INIT: &str = "init";
+
+// ---------------------------------------------------------------------------
+// per-layer Δ construction primitives (shared by strategies and benches)
+// ---------------------------------------------------------------------------
+
+/// Per-layer Δ for a given p (Alg. 1 phase 1), for weights and activations.
+pub fn layerwise_deltas(
+    calib: &CalibData,
+    mask: &LayerMask,
+    qmw: &[f32],
+    qma: &[f32],
+    p: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let n = mask.weights.len();
+    let mut dw = vec![0.0f32; n];
+    let mut da = vec![0.0f32; n];
+    let search = mmse::LpSearch::default();
+    for i in 0..n {
+        if mask.weights[i] {
+            dw[i] =
+                mmse::lp_optimal_delta(calib.weights[i].f(), qmw[i], p, GridKind::Signed, search).0;
+        }
+        if mask.acts[i] {
+            da[i] =
+                mmse::lp_optimal_delta(&calib.act_samples[i], qma[i], p, calib.act_kind[i], search)
+                    .0;
+        }
+    }
+    (dw, da)
+}
+
+/// Baseline per-layer calibrators (Table 1 competitors).  `method` must
+/// not be [`Method::Lapq`] — LAPQ is a composition of init strategies
+/// plus a joint optimizer, not a per-layer rule.
+pub fn baseline_deltas(
+    method: Method,
+    calib: &CalibData,
+    mask: &LayerMask,
+    qmw: &[f32],
+    qma: &[f32],
+    bits: BitSpec,
+) -> (Vec<f32>, Vec<f32>) {
+    let n = mask.weights.len();
+    let mut dw = vec![0.0f32; n];
+    let mut da = vec![0.0f32; n];
+    for i in 0..n {
+        if mask.weights[i] {
+            let w = calib.weights[i].f();
+            dw[i] = match method {
+                Method::Mmse => mmse::mmse_delta(w, qmw[i], GridKind::Signed),
+                Method::Aciq => aciq::aciq_delta(w, bits.weights, GridKind::Signed),
+                Method::Kld => kld::kld_delta(w, bits.weights, GridKind::Signed),
+                Method::MinMax => minmax::minmax_delta(w, qmw[i], GridKind::Signed),
+                Method::Lapq => unreachable!("baseline_deltas has no LAPQ rule"),
+            };
+        }
+        if mask.acts[i] {
+            let a = &calib.act_samples[i];
+            let kind = calib.act_kind[i];
+            da[i] = match method {
+                Method::Mmse => mmse::mmse_delta(a, qma[i], kind),
+                Method::Aciq => aciq::aciq_delta(a, bits.acts, kind),
+                Method::Kld => kld::kld_delta(a, bits.acts, kind),
+                Method::MinMax => minmax::minmax_delta(a, qma[i], kind),
+                Method::Lapq => unreachable!("baseline_deltas has no LAPQ rule"),
+            };
+        }
+    }
+    (dw, da)
+}
+
+/// Random initialization for the Table-3 ablation: log-uniform multiple of
+/// the min-max step.
+pub fn random_deltas(
+    calib: &CalibData,
+    mask: &LayerMask,
+    qmw: &[f32],
+    qma: &[f32],
+    seed: u64,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg32::seeded(seed);
+    let n = mask.weights.len();
+    let mut dw = vec![0.0f32; n];
+    let mut da = vec![0.0f32; n];
+    let mut draw = |base: f32| -> f32 {
+        let log_mult = rng.range(-2.3, 1.4); // e^-2.3≈0.1 .. e^1.4≈4
+        base * log_mult.exp()
+    };
+    for i in 0..n {
+        if mask.weights[i] {
+            dw[i] = draw(minmax::minmax_delta(calib.weights[i].f(), qmw[i], GridKind::Signed));
+        }
+        if mask.acts[i] {
+            da[i] = draw(minmax::minmax_delta(&calib.act_samples[i], qma[i], calib.act_kind[i]));
+        }
+    }
+    (dw, da)
+}
+
+// ---------------------------------------------------------------------------
+// init strategies
+// ---------------------------------------------------------------------------
+
+/// What strategies see while proposing candidates.
+pub struct StageCtx<'r, 'e> {
+    pub calib: &'r CalibData,
+    pub obj: &'r mut CalibObjective<'e>,
+    pub lapq: &'r LapqCfg,
+    /// Quadratic-interpolation diagnostics (filled by [`QuadraticPStar`],
+    /// copied onto `QuantOutcome` by the calibrator).
+    pub notes: &'r mut InitNotes,
+    pub obs: &'r mut dyn CalibObserver,
+    /// Memo of `layerwise_deltas` results keyed by `p.to_bits()`, shared
+    /// across strategies: [`LayerwiseLp`] and [`QuadraticPStar`] walk the
+    /// same p grid, and the per-layer Lp search is the expensive part
+    /// (the loss itself is already memoized inside the objective).
+    pub lp_memo: &'r mut std::collections::HashMap<u32, (Vec<f32>, Vec<f32>)>,
+}
+
+impl StageCtx<'_, '_> {
+    /// Memoized [`layerwise_deltas`] over this run's mask and grids.
+    pub fn layerwise(&mut self, p: f32) -> (Vec<f32>, Vec<f32>) {
+        if let Some(hit) = self.lp_memo.get(&p.to_bits()) {
+            return hit.clone();
+        }
+        let (dw, da) =
+            layerwise_deltas(self.calib, &self.obj.mask, &self.obj.qmw, &self.obj.qma, p);
+        self.lp_memo.insert(p.to_bits(), (dw.clone(), da.clone()));
+        (dw, da)
+    }
+}
+
+/// Diagnostics produced by init strategies.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InitNotes {
+    pub p_star: Option<f64>,
+    pub quad_r2: Option<f64>,
+}
+
+/// One proposed starting point for the joint phase.
+#[derive(Clone, Debug)]
+pub struct InitCandidate {
+    pub label: String,
+    pub dw: Vec<f32>,
+    pub da: Vec<f32>,
+}
+
+/// An initialization strategy proposes zero or more candidate Δ vectors;
+/// the calibrator's best-of selector evaluates the calibration loss of
+/// every candidate from every strategy and keeps the winner.
+pub trait InitStrategy {
+    fn name(&self) -> &'static str;
+    fn candidates(&self, ctx: &mut StageCtx<'_, '_>) -> Result<Vec<InitCandidate>>;
+}
+
+/// Random steps (paper Table 3 "Random").
+pub struct RandomInit {
+    pub seed: u64,
+}
+
+impl InitStrategy for RandomInit {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn candidates(&self, ctx: &mut StageCtx<'_, '_>) -> Result<Vec<InitCandidate>> {
+        let (dw, da) =
+            random_deltas(ctx.calib, &ctx.obj.mask, &ctx.obj.qmw, &ctx.obj.qma, self.seed);
+        Ok(vec![InitCandidate { label: format!("random({})", self.seed), dw, da }])
+    }
+}
+
+/// Layer-wise L_p minimization, one candidate per p.  `ps: None` means
+/// "use the config's `p_grid`" (resolved at run time).
+pub struct LayerwiseLp {
+    pub ps: Option<Vec<f32>>,
+}
+
+impl LayerwiseLp {
+    /// The paper's phase-1 sweep over the configured p grid.
+    pub fn grid() -> Self {
+        LayerwiseLp { ps: None }
+    }
+
+    /// Fixed p values (e.g. `[2.0]` for the MMSE-init ablation).
+    pub fn fixed(ps: Vec<f32>) -> Self {
+        LayerwiseLp { ps: Some(ps) }
+    }
+}
+
+impl InitStrategy for LayerwiseLp {
+    fn name(&self) -> &'static str {
+        "layerwise-lp"
+    }
+
+    fn candidates(&self, ctx: &mut StageCtx<'_, '_>) -> Result<Vec<InitCandidate>> {
+        let ps = self.ps.clone().unwrap_or_else(|| ctx.lapq.p_grid.clone());
+        Ok(ps
+            .iter()
+            .map(|&p| {
+                let (dw, da) = ctx.layerwise(p);
+                InitCandidate { label: format!("p={p}"), dw, da }
+            })
+            .collect())
+    }
+}
+
+/// Quadratic interpolation over the p trajectory (Alg. 1 phase 2): fit
+/// L(Δ_p) over p, propose Δ at the vertex p*.  Emits a
+/// [`CalibEvent::Degenerate`] warning (and proposes nothing) when the
+/// whole trajectory is non-finite — the low-bit collapse plateau on small
+/// stand-ins.
+pub struct QuadraticPStar {
+    pub ps: Option<Vec<f32>>,
+}
+
+impl QuadraticPStar {
+    pub fn grid() -> Self {
+        QuadraticPStar { ps: None }
+    }
+}
+
+impl InitStrategy for QuadraticPStar {
+    fn name(&self) -> &'static str {
+        "quadratic-p*"
+    }
+
+    fn candidates(&self, ctx: &mut StageCtx<'_, '_>) -> Result<Vec<InitCandidate>> {
+        let ps = self.ps.clone().unwrap_or_else(|| ctx.lapq.p_grid.clone());
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for &p in &ps {
+            let (dw, da) = ctx.layerwise(p);
+            let l = ctx.obj.loss(&dw, &da)?;
+            if l.is_finite() {
+                xs.push(p as f64);
+                ys.push(l);
+            }
+        }
+        if xs.is_empty() {
+            ctx.obs.on_event(&CalibEvent::Degenerate {
+                phase: PHASE_INIT,
+                detail: format!(
+                    "p-trajectory loss non-finite at all {} grid points; quadratic fit skipped",
+                    ps.len()
+                ),
+            });
+            return Ok(Vec::new());
+        }
+        let Some((pstar, quad)) = quadfit::interpolate_pstar(&xs, &ys) else {
+            return Ok(Vec::new());
+        };
+        ctx.notes.p_star = Some(pstar);
+        ctx.notes.quad_r2 = Some(quad.r2);
+        let (dw, da) = ctx.layerwise(pstar as f32);
+        Ok(vec![InitCandidate { label: format!("p*={pstar:.3}"), dw, da }])
+    }
+}
+
+/// Min-max (p → ∞) fallback candidate: on small stand-ins the whole
+/// finite-p trajectory can sit inside the low-bit collapse plateau while
+/// the un-clipped grid survives.
+pub struct MinMaxFallback;
+
+impl InitStrategy for MinMaxFallback {
+    fn name(&self) -> &'static str {
+        "minmax-fallback"
+    }
+
+    fn candidates(&self, ctx: &mut StageCtx<'_, '_>) -> Result<Vec<InitCandidate>> {
+        // The min-max rule needs no bitwidth, so compute it directly
+        // rather than routing through `baseline_deltas`' bits parameter.
+        let mask = &ctx.obj.mask;
+        let n = mask.weights.len();
+        let mut dw = vec![0.0f32; n];
+        let mut da = vec![0.0f32; n];
+        for i in 0..n {
+            if mask.weights[i] {
+                dw[i] = minmax::minmax_delta(
+                    ctx.calib.weights[i].f(),
+                    ctx.obj.qmw[i],
+                    GridKind::Signed,
+                );
+            }
+            if mask.acts[i] {
+                da[i] = minmax::minmax_delta(
+                    &ctx.calib.act_samples[i],
+                    ctx.obj.qma[i],
+                    ctx.calib.act_kind[i],
+                );
+            }
+        }
+        Ok(vec![InitCandidate { label: "minmax".into(), dw, da }])
+    }
+}
+
+/// A Table-1 baseline (MMSE / ACIQ / KLD / min-max) as a single-candidate
+/// init strategy — how `Calibrator::from_config` expresses the non-LAPQ
+/// methods (no joint phase).
+pub struct BaselineInit {
+    pub method: Method,
+    pub bits: BitSpec,
+}
+
+impl InitStrategy for BaselineInit {
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+
+    fn candidates(&self, ctx: &mut StageCtx<'_, '_>) -> Result<Vec<InitCandidate>> {
+        if self.method == Method::Lapq {
+            anyhow::bail!(
+                "BaselineInit cannot express LAPQ — compose init strategies \
+                 (LayerwiseLp/QuadraticPStar/...) plus a joint optimizer instead"
+            );
+        }
+        let (dw, da) = baseline_deltas(
+            self.method,
+            ctx.calib,
+            &ctx.obj.mask,
+            &ctx.obj.qmw,
+            &ctx.obj.qma,
+            self.bits,
+        );
+        Ok(vec![InitCandidate { label: self.method.name().to_string(), dw, da }])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// joint optimizers
+// ---------------------------------------------------------------------------
+
+/// Result of a joint minimization.
+#[derive(Clone, Debug)]
+pub struct JointResult {
+    pub x: Vec<f64>,
+    pub fx: f64,
+    pub evals: usize,
+}
+
+/// A derivative-free box-bounded minimizer with a *fallible* objective:
+/// engine errors propagate out of `minimize` instead of being trapped in
+/// interior-mutability cells at every call site.
+pub trait JointOptimizer {
+    fn name(&self) -> &'static str;
+    /// Phase label for events/traces ("joint:powell", ...).
+    fn phase(&self) -> &'static str;
+    fn minimize(
+        &self,
+        x0: &[f64],
+        lo: &[f64],
+        hi: &[f64],
+        f: &mut dyn FnMut(&[f64]) -> Result<f64>,
+    ) -> Result<JointResult>;
+}
+
+/// Adapt a fallible objective to the infallible `optim::*` substrate: the
+/// first error is stashed and `minimize` returns it afterwards.  After an
+/// error the objective is never called again — the optimizer spins down
+/// on cheap `+inf` instead of hammering a broken engine for the rest of
+/// its eval budget.  `NaN` losses (collapsed nets) are mapped to `+inf`
+/// so comparison-based optimizers never see them.
+fn with_error_trap<R>(
+    f: &mut dyn FnMut(&[f64]) -> Result<f64>,
+    run: impl FnOnce(&mut dyn FnMut(&[f64]) -> f64) -> R,
+) -> Result<R> {
+    let mut err: Option<anyhow::Error> = None;
+    let result = {
+        let mut g = |x: &[f64]| {
+            if err.is_some() {
+                return f64::INFINITY;
+            }
+            match f(x) {
+                Ok(v) if v.is_nan() => f64::INFINITY,
+                Ok(v) => v,
+                Err(e) => {
+                    err = Some(e);
+                    f64::INFINITY
+                }
+            }
+        };
+        run(&mut g)
+    };
+    match err {
+        Some(e) => Err(e),
+        None => Ok(result),
+    }
+}
+
+/// Powell's conjugate-direction method — the paper's joint optimizer.
+pub struct PowellJoint {
+    pub iters: usize,
+    pub max_evals: usize,
+}
+
+impl JointOptimizer for PowellJoint {
+    fn name(&self) -> &'static str {
+        "powell"
+    }
+
+    fn phase(&self) -> &'static str {
+        "joint:powell"
+    }
+
+    fn minimize(
+        &self,
+        x0: &[f64],
+        lo: &[f64],
+        hi: &[f64],
+        f: &mut dyn FnMut(&[f64]) -> Result<f64>,
+    ) -> Result<JointResult> {
+        let cfg =
+            PowellCfg { max_iter: self.iters, max_evals: self.max_evals, ..Default::default() };
+        let r = with_error_trap(f, |g| powell(x0, lo, hi, &cfg, g))?;
+        Ok(JointResult { x: r.x, fx: r.fx, evals: r.evals })
+    }
+}
+
+/// Nelder–Mead downhill simplex (`joint=nm`).
+pub struct NelderMeadJoint {
+    pub max_evals: usize,
+}
+
+impl JointOptimizer for NelderMeadJoint {
+    fn name(&self) -> &'static str {
+        "nelder-mead"
+    }
+
+    fn phase(&self) -> &'static str {
+        "joint:nelder-mead"
+    }
+
+    fn minimize(
+        &self,
+        x0: &[f64],
+        lo: &[f64],
+        hi: &[f64],
+        f: &mut dyn FnMut(&[f64]) -> Result<f64>,
+    ) -> Result<JointResult> {
+        let cfg = NmCfg { max_evals: self.max_evals, ..Default::default() };
+        let (x, fx, evals) = with_error_trap(f, |g| nelder_mead(x0, lo, hi, &cfg, g))?;
+        Ok(JointResult { x, fx, evals })
+    }
+}
+
+/// Cyclic coordinate descent (`joint=cd`) — the "purely separable view"
+/// ablation of Powell.
+pub struct CoordinateDescentJoint {
+    pub sweeps: usize,
+    pub max_evals: usize,
+}
+
+impl JointOptimizer for CoordinateDescentJoint {
+    fn name(&self) -> &'static str {
+        "coordinate-descent"
+    }
+
+    fn phase(&self) -> &'static str {
+        "joint:coordinate-descent"
+    }
+
+    fn minimize(
+        &self,
+        x0: &[f64],
+        lo: &[f64],
+        hi: &[f64],
+        f: &mut dyn FnMut(&[f64]) -> Result<f64>,
+    ) -> Result<JointResult> {
+        let cfg = CoordCfg { sweeps: self.sweeps, max_evals: self.max_evals, ..Default::default() };
+        let (x, fx, evals) = with_error_trap(f, |g| coordinate_descent(x0, lo, hi, &cfg, g))?;
+        Ok(JointResult { x, fx, evals })
+    }
+}
+
+/// Instantiate the configured joint optimizer.
+pub fn joint_optimizer(cfg: &JointCfg) -> Box<dyn JointOptimizer> {
+    match cfg.optimizer {
+        JointOpt::Powell => Box::new(PowellJoint { iters: cfg.iters, max_evals: cfg.max_evals }),
+        JointOpt::NelderMead => Box::new(NelderMeadJoint { max_evals: cfg.max_evals }),
+        JointOpt::CoordinateDescent => {
+            Box::new(CoordinateDescentJoint { sweeps: cfg.iters, max_evals: cfg.max_evals })
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// post stages
+// ---------------------------------------------------------------------------
+
+/// A stage that runs after the Δ search, mutating session params and/or
+/// the outcome (bias correction today; per-channel refinement tomorrow).
+pub trait PostStage {
+    fn name(&self) -> &'static str;
+    fn phase(&self) -> &'static str;
+    fn apply(
+        &self,
+        eng: &EngineHandle,
+        sess: SessionId,
+        spec: &ModelSpec,
+        cfg: &ExperimentConfig,
+        outcome: &mut QuantOutcome,
+    ) -> Result<()>;
+}
+
+/// Banner-style per-channel bias correction of the session weights for
+/// the final Δw (no-op unless weights are quantized).
+pub struct BiasCorrection;
+
+impl PostStage for BiasCorrection {
+    fn name(&self) -> &'static str {
+        "bias-correction"
+    }
+
+    fn phase(&self) -> &'static str {
+        "post:bias-correction"
+    }
+
+    fn apply(
+        &self,
+        eng: &EngineHandle,
+        sess: SessionId,
+        spec: &ModelSpec,
+        cfg: &ExperimentConfig,
+        outcome: &mut QuantOutcome,
+    ) -> Result<()> {
+        if !cfg.bits.quant_weights() {
+            return Ok(());
+        }
+        let params = eng.get_params(sess)?;
+        let mut corrected = params.clone();
+        for (i, q) in spec.quant_layers.iter().enumerate() {
+            let d = outcome.quant.dw[i];
+            if d > 0.0 {
+                corrected[q.weight_param] = bias_correction::bias_corrected_weights(
+                    &params[q.weight_param],
+                    d,
+                    outcome.quant.qmw[i],
+                );
+            }
+        }
+        eng.set_params(sess, corrected)?;
+        outcome.original_params = Some(params);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quadratic_obj(target: &[f64]) -> impl FnMut(&[f64]) -> Result<f64> + '_ {
+        move |x: &[f64]| Ok(x.iter().zip(target).map(|(a, b)| (a - b) * (a - b)).sum())
+    }
+
+    #[test]
+    fn optimizers_interchangeable_through_trait() {
+        let target = [0.7, 1.6, 0.9];
+        let lo = [0.3; 3];
+        let hi = [3.0; 3];
+        for cfg in [
+            JointCfg { optimizer: JointOpt::Powell, iters: 6, max_evals: 4000 },
+            JointCfg { optimizer: JointOpt::NelderMead, iters: 6, max_evals: 4000 },
+            JointCfg { optimizer: JointOpt::CoordinateDescent, iters: 6, max_evals: 4000 },
+        ] {
+            let opt = joint_optimizer(&cfg);
+            let mut f = quadratic_obj(&target);
+            let r = opt.minimize(&[1.0; 3], &lo, &hi, &mut f).unwrap();
+            assert!(r.fx < 1e-2, "{} stalled at {}", opt.name(), r.fx);
+            for (a, b) in r.x.iter().zip(&target) {
+                assert!((a - b).abs() < 0.1, "{}: {:?}", opt.name(), r.x);
+            }
+        }
+    }
+
+    #[test]
+    fn objective_errors_propagate() {
+        for cfg in [
+            JointCfg { optimizer: JointOpt::Powell, ..Default::default() },
+            JointCfg { optimizer: JointOpt::NelderMead, ..Default::default() },
+            JointCfg { optimizer: JointOpt::CoordinateDescent, ..Default::default() },
+        ] {
+            let opt = joint_optimizer(&cfg);
+            let mut calls = 0usize;
+            let mut f = |_x: &[f64]| -> Result<f64> {
+                calls += 1;
+                anyhow::bail!("engine down")
+            };
+            let err = opt.minimize(&[1.0; 2], &[0.0; 2], &[2.0; 2], &mut f).unwrap_err();
+            assert!(format!("{err}").contains("engine down"), "{}", opt.name());
+            // fail-fast: the broken objective is never called again
+            assert_eq!(calls, 1, "{} kept hammering a failed objective", opt.name());
+        }
+    }
+}

@@ -56,8 +56,17 @@ pub fn nelder_mead(
     const RHO: f64 = 0.5; // contract
     const SIGMA: f64 = 0.5; // shrink
 
+    // NaN-tolerant ordering: a NaN objective value sorts as worst instead
+    // of panicking (quantization losses can be NaN on collapsed nets).
+    let cmp = |a: &f64, b: &f64| {
+        a.partial_cmp(b).unwrap_or_else(|| match (a.is_nan(), b.is_nan()) {
+            (true, false) => std::cmp::Ordering::Greater,
+            (false, true) => std::cmp::Ordering::Less,
+            _ => std::cmp::Ordering::Equal,
+        })
+    };
     while obj.evals < cfg.max_evals {
-        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        simplex.sort_by(|a, b| cmp(&a.1, &b.1));
         let best = simplex[0].1;
         let worst = simplex[n].1;
         if (worst - best).abs() <= cfg.ftol * (best.abs() + 1e-12) {
@@ -111,7 +120,7 @@ pub fn nelder_mead(
             }
         }
     }
-    simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    simplex.sort_by(|a, b| cmp(&a.1, &b.1));
     let evals = obj.evals;
     if obj.best_f < simplex[0].1 {
         return (obj.best_x, obj.best_f, evals);
@@ -159,6 +168,22 @@ mod tests {
         );
         assert!(x.iter().all(|&v| (0.5..=1.0).contains(&v)), "{x:?}");
         assert!(x.iter().all(|&v| v < 0.55));
+    }
+
+    #[test]
+    fn survives_nan_objective() {
+        // NaN regions must not panic the simplex sort; the minimizer
+        // should still find the clean region's optimum.
+        let cfg = NmCfg { max_evals: 300, ..Default::default() };
+        let (x, fx, _) = nelder_mead(&[1.5, 1.5], &[-2.0; 2], &[2.0; 2], &cfg, |v| {
+            if v[0] < 0.0 {
+                f64::NAN
+            } else {
+                (v[0] - 1.0).powi(2) + (v[1] - 1.0).powi(2)
+            }
+        });
+        assert!(fx.is_finite(), "{fx} at {x:?}");
+        assert!(fx < 0.5, "{fx} at {x:?}");
     }
 
     #[test]

@@ -117,7 +117,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no inf/NaN; `null` keeps the dump parseable
+                    // (degenerate calibrations report non-finite losses).
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -368,6 +372,22 @@ mod tests {
         let j = Json::parse(src).unwrap();
         let j2 = Json::parse(&j.dump()).unwrap();
         assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn non_finite_numbers_dump_as_null() {
+        let j = Json::obj(vec![
+            ("inf", Json::Num(f64::INFINITY)),
+            ("ninf", Json::Num(f64::NEG_INFINITY)),
+            ("nan", Json::Num(f64::NAN)),
+            ("ok", Json::Num(1.5)),
+        ]);
+        let text = j.dump();
+        let back = Json::parse(&text).expect("non-finite dump must stay parseable");
+        assert_eq!(back.req("inf"), &Json::Null);
+        assert_eq!(back.req("ninf"), &Json::Null);
+        assert_eq!(back.req("nan"), &Json::Null);
+        assert_eq!(back.req("ok").as_f64(), Some(1.5));
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! Integration: the composable calibration API — every method through the
+//! `Calibrator` builder, joint optimizers interchangeable behind the
+//! trait, observers seeing the event stream, and `joint=nm|cd` selectable
+//! end-to-end from a config file.
+
+use lapq::config::{BitSpec, ExperimentConfig, JointCfg, JointOpt, Method};
+use lapq::coordinator::jobs::Runner;
+use lapq::lapq::stages::{joint_optimizer, BiasCorrection, LayerwiseLp};
+use lapq::lapq::{CalibEvent, Calibrator, EventLog, NullObserver};
+use lapq::runtime::EngineHandle;
+
+fn fast_cfg(method: Method) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp3".into();
+    cfg.train_steps = 60;
+    cfg.lr = 0.1;
+    cfg.calib_size = 512;
+    cfg.val_size = 1024;
+    cfg.bits = BitSpec::new(4, 4);
+    cfg.method = method;
+    cfg.lapq.joint.max_evals = 100;
+    cfg.lapq.joint.iters = 1;
+    cfg
+}
+
+/// The matrix: every `Method` on mlp3 yields finite losses, and whenever
+/// the joint phase runs it cannot end above its own initialization.
+#[test]
+fn method_matrix_losses_finite_and_ordered() {
+    let eng = EngineHandle::start_default().expect("engine boots");
+    let mut runner = Runner::new(eng);
+    for method in Method::ALL {
+        let cfg = fast_cfg(method);
+        let res = runner.run(&cfg).unwrap();
+        let o = &res.outcome;
+        assert!(o.fp32_calib_loss.is_finite(), "{method:?}: fp32 loss");
+        assert!(o.init_loss.is_finite(), "{method:?}: init loss");
+        assert!(o.calib_loss.is_finite(), "{method:?}: calib loss");
+        if method == Method::Lapq {
+            assert!(o.joint_evals > 0, "{method:?}: joint phase must run");
+            assert!(
+                o.calib_loss <= o.init_loss + 1e-9,
+                "{method:?}: joint {} above init {}",
+                o.calib_loss,
+                o.init_loss
+            );
+        } else {
+            assert_eq!(o.joint_evals, 0, "{method:?}: baselines have no joint phase");
+            assert_eq!(o.calib_loss, o.init_loss);
+        }
+        // every run records a per-phase trace, starting with init
+        assert!(!o.trace.is_empty(), "{method:?}: trace missing");
+        assert_eq!(o.trace[0].phase, "init");
+    }
+}
+
+/// Powell / Nelder–Mead / coordinate descent are interchangeable through
+/// the `JointOptimizer` trait: same fixed quadratic, same box, all three
+/// land on the minimum.
+#[test]
+fn joint_optimizers_interchangeable_on_fixed_quadratic() {
+    let target = [0.8, 1.5, 1.1, 0.6];
+    for opt in JointOpt::ALL {
+        let jc = JointCfg { optimizer: opt, iters: 8, max_evals: 6000 };
+        let j = joint_optimizer(&jc);
+        let mut evals = 0usize;
+        let mut f = |x: &[f64]| -> anyhow::Result<f64> {
+            evals += 1;
+            Ok(x.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum())
+        };
+        let r = j.minimize(&[1.0; 4], &[0.3; 4], &[3.0; 4], &mut f).unwrap();
+        assert!(r.fx < 1e-2, "{}: stalled at {}", j.name(), r.fx);
+        assert!(r.evals <= jc.max_evals + 16, "{}: runaway evals {}", j.name(), r.evals);
+        assert_eq!(r.evals, evals, "{}: eval accounting", j.name());
+    }
+}
+
+/// The fallible objective signature: an engine error inside the joint
+/// phase surfaces as `Err`, not as a silently-swallowed `+inf`.
+#[test]
+fn joint_objective_error_propagates() {
+    for opt in JointOpt::ALL {
+        let j = joint_optimizer(&JointCfg { optimizer: opt, ..Default::default() });
+        let mut f = |_: &[f64]| -> anyhow::Result<f64> { anyhow::bail!("batch vanished") };
+        let err = j.minimize(&[1.0; 2], &[0.5; 2], &[2.0; 2], &mut f).unwrap_err();
+        assert!(format!("{err:#}").contains("batch vanished"), "{}", j.name());
+    }
+}
+
+/// Observers see the full phase structure and benches get eval traces for
+/// free; the outcome's trace mirrors the PhaseEnd events.
+#[test]
+fn observer_sees_phases_and_outcome_trace() {
+    let eng = EngineHandle::start_default().unwrap();
+    let mut runner = Runner::new(eng);
+    let cfg = fast_cfg(Method::Lapq);
+    let mut log = EventLog::default();
+    let res = runner.run_observed(&cfg, &mut log).unwrap();
+
+    let phases = log.phases();
+    assert!(phases.contains(&"init"), "{phases:?}");
+    assert!(phases.contains(&"joint:powell"), "{phases:?}");
+    assert!(phases.contains(&"post:bias-correction"), "{phases:?}");
+    assert!(log.evals() > 0, "eval events must stream");
+    assert!(!log.degenerate(), "healthy run must not warn");
+
+    // one PhaseEnd per PhaseStart, and the trace mirrors them in order
+    let starts = log.events.iter().filter(|e| matches!(e, CalibEvent::PhaseStart { .. })).count();
+    let ends = log.events.iter().filter(|e| matches!(e, CalibEvent::PhaseEnd { .. })).count();
+    assert_eq!(starts, ends);
+    assert_eq!(res.outcome.trace.len(), ends);
+    let trace_phases: Vec<&str> = res.outcome.trace.iter().map(|t| t.phase).collect();
+    assert_eq!(trace_phases, vec!["init", "joint:powell", "post:bias-correction"]);
+    assert_eq!(res.outcome.trace[1].evals, res.outcome.joint_evals);
+}
+
+/// `joint=nm` and `joint=cd` are selectable end-to-end from a config
+/// file: load → calibrate → the alternative optimizer actually runs and
+/// still ends at-or-below its init.
+#[test]
+fn alternative_joint_optimizers_from_config_file() {
+    let eng = EngineHandle::start_default().unwrap();
+    let mut runner = Runner::new(eng);
+    for (key, phase) in [("nm", "joint:nelder-mead"), ("cd", "joint:coordinate-descent")] {
+        let path = std::env::temp_dir().join(format!("lapq_joint_{key}.json"));
+        std::fs::write(
+            &path,
+            format!(
+                r#"{{"model":"mlp3","train_steps":60,"lr":0.1,"val_size":512,
+                     "bits_w":4,"bits_a":4,"method":"lapq",
+                     "lapq":{{"joint":"{key}","max_evals":80}}}}"#
+            ),
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::load(path.to_str().unwrap(), &[]).unwrap();
+        assert_eq!(cfg.lapq.joint.max_evals, 80);
+
+        let mut log = EventLog::default();
+        let res = runner.run_observed(&cfg, &mut log).unwrap();
+        assert!(log.phases().contains(&phase), "{key}: {:?}", log.phases());
+        assert!(res.outcome.joint_evals > 0, "{key}: joint must run");
+        assert!(
+            res.outcome.calib_loss <= res.outcome.init_loss + 1e-9,
+            "{key}: {} above {}",
+            res.outcome.calib_loss,
+            res.outcome.init_loss
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// An explicitly composed calibrator (builder, not `from_config`) runs
+/// end-to-end through the Runner.
+#[test]
+fn explicit_builder_composition_runs() {
+    let eng = EngineHandle::start_default().unwrap();
+    let mut runner = Runner::new(eng);
+    let mut cfg = fast_cfg(Method::Lapq);
+    cfg.lapq.joint.optimizer = JointOpt::CoordinateDescent;
+    let cal = Calibrator::builder()
+        .init(LayerwiseLp::fixed(vec![2.0, 4.0]))
+        .joint_cfg(&cfg.lapq.joint)
+        .post(BiasCorrection)
+        .build();
+    let res = runner.run_with(&cfg, &cal, &mut NullObserver).unwrap();
+    assert!(res.outcome.calib_loss.is_finite());
+    assert!(res.outcome.joint_evals > 0);
+    assert!((0.0..=1.0).contains(&res.quant_metric));
+}

@@ -182,8 +182,8 @@ fn runner_pack_infer_roundtrip_int8_lapq() {
     cfg.val_size = 1024;
     cfg.bits = BitSpec::new(8, 8);
     cfg.method = Method::Lapq;
-    cfg.lapq.max_evals = 120;
-    cfg.lapq.powell_iters = 1;
+    cfg.lapq.joint.max_evals = 120;
+    cfg.lapq.joint.iters = 1;
 
     let (sum, qm) = runner.pack(&cfg, &PackOpts::default()).unwrap();
     assert_eq!(sum.key, Runner::pack_key(&cfg));

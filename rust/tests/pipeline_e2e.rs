@@ -15,8 +15,8 @@ fn fast_cfg(method: Method, bits: BitSpec) -> ExperimentConfig {
     cfg.val_size = 1024;
     cfg.bits = bits;
     cfg.method = method;
-    cfg.lapq.max_evals = 120;
-    cfg.lapq.powell_iters = 1;
+    cfg.lapq.joint.max_evals = 120;
+    cfg.lapq.joint.iters = 1;
     cfg
 }
 

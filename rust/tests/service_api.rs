@@ -113,6 +113,84 @@ fn malformed_requests_keep_the_connection_alive() {
     server.join().unwrap();
 }
 
+/// Long calibrations are observable over the wire: `"stream":true`
+/// interleaves `{"event":...}` frames (phase starts/ends, degenerate
+/// warnings, throttled evals) before the final `{"ok":...}` response —
+/// and `joint=nm` is selectable end-to-end through the protocol.
+#[test]
+fn quantize_streams_calib_events() {
+    let eng = EngineHandle::start_default().expect("engine boots");
+    let service = Service::bind("127.0.0.1:0").unwrap();
+    let addr = service.addr;
+
+    let server = std::thread::spawn(move || {
+        let mut runner = Runner::new(eng);
+        service.serve(&mut runner, 1).unwrap();
+    });
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let req = Json::obj(vec![
+        ("cmd", Json::Str("quantize".into())),
+        ("stream", Json::Bool(true)),
+        ("model", Json::Str("mlp3".into())),
+        ("train_steps", Json::Num(40.0)),
+        ("lr", Json::Num(0.1)),
+        ("val_size", Json::Num(512.0)),
+        ("bits_w", Json::Num(4.0)),
+        ("bits_a", Json::Num(4.0)),
+        ("method", Json::Str("lapq".into())),
+        (
+            "lapq",
+            Json::obj(vec![("joint", Json::Str("nm".into())), ("max_evals", Json::Num(60.0))]),
+        ),
+    ]);
+    writer.write_all(req.dump().as_bytes()).unwrap();
+    writer.write_all(b"\n").unwrap();
+    writer.flush().unwrap();
+
+    // Read frames until the final {"ok":...} response arrives.
+    let mut events: Vec<Json> = Vec::new();
+    let mut final_resp: Option<Json> = None;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let j = Json::parse(&line.unwrap()).expect("every frame is JSON");
+        if j.get("ok").is_some() {
+            final_resp = Some(j);
+            break;
+        }
+        assert!(j.get("event").is_some(), "non-event frame before the response: {j:?}");
+        events.push(j);
+    }
+
+    // At least the init and joint phase boundaries must have streamed.
+    let kinds: Vec<String> = events
+        .iter()
+        .map(|e| e.req("event").as_str().unwrap_or_default().to_string())
+        .collect();
+    assert!(kinds.iter().any(|k| k == "phase_start"), "{kinds:?}");
+    assert!(kinds.iter().any(|k| k == "phase_end"), "{kinds:?}");
+    let phases: Vec<&str> =
+        events.iter().filter_map(|e| e.get("phase").and_then(|p| p.as_str())).collect();
+    assert!(phases.contains(&"init"), "{phases:?}");
+    assert!(phases.contains(&"joint:nelder-mead"), "nm must run: {phases:?}");
+
+    // ...and the final response reports the alternative optimizer plus a
+    // per-phase trace and a lossless config echo.
+    let resp = final_resp.expect("final response after events");
+    assert_eq!(resp.req("ok").as_bool(), Some(true), "{resp:?}");
+    let result = resp.req("result");
+    assert_eq!(result.req("joint").as_str(), Some("NelderMead"));
+    let trace = result.req("trace").as_arr().unwrap();
+    assert!(trace.len() >= 2, "trace: {trace:?}");
+    assert_eq!(trace[0].req("phase").as_str(), Some("init"));
+    let echoed = lapq::config::ExperimentConfig::from_json(result.req("config")).unwrap();
+    assert_eq!(echoed.lapq.joint.optimizer, lapq::config::JointOpt::NelderMead);
+    assert_eq!(echoed.lapq.joint.max_evals, 60);
+
+    server.join().unwrap();
+}
+
 /// The serving loop: pack an INT8 mlp3 over the wire, then stream
 /// predictions from the cached artifact.
 #[test]
