@@ -24,12 +24,13 @@ clippy:
 verify: build test
 
 # Perf trajectory smoke: bounded perf runs that write
-# rust/bench_results/BENCH_hotpath.json, BENCH_int_infer.json and
-# BENCH_calib.json (uploaded as CI artifacts).
+# rust/bench_results/BENCH_hotpath.json, BENCH_int_infer.json,
+# BENCH_calib.json and BENCH_serve.json (uploaded as CI artifacts).
 bench-smoke:
 	BENCH_SMOKE=1 $(CARGO) bench --bench perf_hotpath
 	BENCH_SMOKE=1 $(CARGO) bench --bench perf_int_gemm
 	BENCH_SMOKE=1 $(CARGO) bench --bench perf_calib
+	BENCH_SMOKE=1 $(CARGO) bench --bench perf_serve
 
 # Layer-1/2 AOT artifacts (optional; requires Python + JAX).  The default
 # build never needs them: the CPU backend executes the model zoo natively.

@@ -1,0 +1,181 @@
+//! Perf: the concurrent serving subsystem under load — throughput and
+//! p50/p95/p99 latency of single-row INT8 `mlp3` infer requests at
+//! client concurrency 1/8/32, worker pool + micro-batching on vs off.
+//!
+//! Two scenarios share one engine:
+//!
+//! * `workers1_nobatch` — one worker, batching disabled: the old
+//!   strictly-sequential behaviour, expressed through the same code
+//!   path.
+//! * `pool_batch` — a wide worker pool with the 2 ms coalescing window:
+//!   requests arriving together execute as one batch over the
+//!   batch-parallel integer kernels.
+//!
+//! `BENCH_SMOKE=1` runs a bounded subset (CI-sized) — either way the
+//! numbers land in `bench_results/BENCH_serve.json`, next to
+//! `BENCH_hotpath.json` / `BENCH_int_infer.json` / `BENCH_calib.json`.
+
+use lapq::benchkit::{f3, Table};
+use lapq::config::{BitSpec, ExperimentConfig, Method, ServeCfg};
+use lapq::runtime::EngineHandle;
+use lapq::serve::PoolServer;
+use lapq::util::json::Json;
+use lapq::util::stats;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+fn infer_req(key: &str, row: &[f32]) -> String {
+    Json::obj(vec![
+        ("cmd", Json::Str("infer".into())),
+        ("key", Json::Str(key.into())),
+        ("x", Json::Arr(vec![Json::arr_f32(row)])),
+    ])
+    .dump()
+}
+
+/// `clients` persistent connections, each issuing `reqs` sequential
+/// single-row infer requests.  Returns (throughput req/s, latencies s).
+fn run_load(addr: SocketAddr, key: &str, clients: usize, reqs: usize) -> (f64, Vec<f32>) {
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(clients);
+    for ci in 0..clients {
+        let key = key.to_string();
+        handles.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).expect("connect");
+            let mut w = stream.try_clone().expect("clone");
+            let mut r = BufReader::new(stream);
+            // deterministic, distinct per client
+            let row: Vec<f32> =
+                (0..64).map(|j| ((ci * 31 + j * 7) % 23) as f32 * 0.04 - 0.4).collect();
+            let req = infer_req(&key, &row);
+            let mut lat = Vec::with_capacity(reqs);
+            let mut line = String::new();
+            for _ in 0..reqs {
+                let t = Instant::now();
+                w.write_all(req.as_bytes()).expect("write");
+                w.write_all(b"\n").expect("write");
+                w.flush().expect("flush");
+                line.clear();
+                r.read_line(&mut line).expect("read");
+                lat.push(t.elapsed().as_secs_f64() as f32);
+                let resp = Json::parse(&line).expect("json response");
+                assert_eq!(resp.req("ok").as_bool(), Some(true), "{resp:?}");
+            }
+            lat
+        }));
+    }
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().expect("client thread"));
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    ((clients * reqs) as f64 / wall, all)
+}
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+    let smoke_var = std::env::var("BENCH_SMOKE");
+    let smoke = matches!(smoke_var.as_deref(), Ok(v) if !v.is_empty() && v != "0");
+    let concurrencies: &[usize] = if smoke { &[1, 8] } else { &[1, 8, 32] };
+    let reqs = if smoke { 40 } else { 200 };
+    let total_conns: usize = concurrencies.iter().sum();
+
+    // One INT8 mlp3 artifact per scenario (packed at startup, served
+    // from the registry throughout).
+    let pack_cfg = ExperimentConfig {
+        model: "mlp3".into(),
+        train_steps: if smoke { 40 } else { 120 },
+        lr: 0.1,
+        val_size: 512,
+        bits: BitSpec::new(8, 8),
+        method: Method::Mmse,
+        ..Default::default()
+    };
+    let eng = EngineHandle::start_default()?;
+
+    let base = ServeCfg { queue_bound: 256, registry_cap: 4, ..Default::default() };
+    let scenarios: Vec<(&str, ServeCfg)> = vec![
+        (
+            "workers1_nobatch",
+            ServeCfg { workers: 1, batch_window_ms: 0.0, max_batch: 1, ..base.clone() },
+        ),
+        (
+            "pool_batch",
+            ServeCfg { workers: 32, batch_window_ms: 2.0, max_batch: 32, ..base },
+        ),
+    ];
+
+    let mut table = Table::new(
+        "concurrent serving: throughput + tail latency (INT8 mlp3, 1-row requests)",
+        &["scenario", "conc", "req/s", "p50 ms", "p95 ms", "p99 ms"],
+    );
+    let mut scen_json = Vec::new();
+    let mut conc8: Vec<(String, f64)> = Vec::new();
+    for (name, scfg) in &scenarios {
+        let server = PoolServer::bind("127.0.0.1:0", eng.clone(), scfg.clone())?;
+        let key = server.preload(std::slice::from_ref(&pack_cfg))?.remove(0);
+        let addr = server.addr;
+        let srv = std::thread::spawn(move || server.serve(total_conns));
+        let mut runs = Vec::new();
+        for &c in concurrencies {
+            let (rps, lat) = run_load(addr, &key, c, reqs);
+            let p50 = stats::percentile(&lat, 50.0) as f64 * 1e3;
+            let p95 = stats::percentile(&lat, 95.0) as f64 * 1e3;
+            let p99 = stats::percentile(&lat, 99.0) as f64 * 1e3;
+            table.row(&[
+                name.to_string(),
+                c.to_string(),
+                format!("{rps:.0}"),
+                f3(p50),
+                f3(p95),
+                f3(p99),
+            ]);
+            if c == 8 {
+                conc8.push((name.to_string(), rps));
+            }
+            runs.push(Json::obj(vec![
+                ("concurrency", Json::Num(c as f64)),
+                ("requests", Json::Num((c * reqs) as f64)),
+                ("throughput_rps", Json::Num(rps)),
+                ("p50_ms", Json::Num(p50)),
+                ("p95_ms", Json::Num(p95)),
+                ("p99_ms", Json::Num(p99)),
+            ]));
+        }
+        srv.join().expect("server thread")?;
+        scen_json.push(Json::obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("workers", Json::Num(scfg.workers as f64)),
+            ("batch_window_ms", Json::Num(scfg.batch_window_ms)),
+            ("max_batch", Json::Num(scfg.max_batch as f64)),
+            ("queue_bound", Json::Num(scfg.queue_bound as f64)),
+            ("runs", Json::Arr(runs)),
+        ]));
+    }
+    table.print();
+
+    let find = |n: &str| conc8.iter().find(|kv| kv.0 == n).map(|kv| kv.1).unwrap_or(0.0);
+    let (seq8, pool8) = (find("workers1_nobatch"), find("pool_batch"));
+    let speedup = pool8 / seq8.max(1e-9);
+    println!(
+        "\nconcurrency 8: pool+batch {pool8:.0} req/s vs workers=1/no-batch {seq8:.0} req/s ({speedup:.2}x)"
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("perf_serve".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("model", Json::Str("mlp3".into())),
+        ("requests_per_client", Json::Num(reqs as f64)),
+        ("scenarios", Json::Arr(scen_json)),
+        ("conc8_seq_rps", Json::Num(seq8)),
+        ("conc8_pool_rps", Json::Num(pool8)),
+        ("conc8_speedup", Json::Num(speedup)),
+    ]);
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_serve.json");
+    std::fs::write(&path, report.dump())?;
+    println!("[json] wrote {path:?}");
+    Ok(())
+}

@@ -12,6 +12,7 @@ use crate::lapq::events::LogObserver;
 use crate::runtime::cpu::ops::{argmax_correct, bce_correct};
 use crate::runtime::int::{ExecMode, InferSession, PackOpts, QuantizedModel};
 use crate::runtime::{EngineHandle, Manifest};
+use crate::serve::PoolServer;
 use anyhow::{bail, Context, Result};
 use parser::Args;
 use std::path::{Path, PathBuf};
@@ -33,7 +34,14 @@ COMMANDS:
                                 run the packed integer engine on synthetic
                                 val batches; --check verifies against the
                                 fake-quant reference (bit-exact at tol 0)
-  serve      [--addr HOST:PORT] start the TCP job service
+  serve      [--addr HOST:PORT] [--workers N] [--batch-window-ms F]
+             [--max-batch N] [--queue-bound N] [--registry-cap N]
+             [--preload M1,M2] [--seq]
+                                start the TCP job service: concurrent
+                                worker pool + infer micro-batching by
+                                default, strictly sequential with --seq;
+                                --preload packs models into the registry
+                                before taking traffic
   metrics                       dump the metrics registry
 ";
 
@@ -264,10 +272,67 @@ fn infer(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
     let addr = args.flag("addr").unwrap_or("127.0.0.1:7070");
     let eng = EngineHandle::start_default()?;
-    let mut runner = Runner::new(eng);
-    let service = Service::bind(addr)?;
-    println!("serving on {}", service.addr);
-    service.serve(&mut runner, usize::MAX)
+    if args.flag_bool("seq") {
+        // The blocking reference server: one connection at a time.
+        // Pool-only knobs would be silently dead here — reject both
+        // their --flag and `-s serve.*` spellings.
+        let pool_flags =
+            ["workers", "batch-window-ms", "max-batch", "queue-bound", "registry-cap", "preload"];
+        for f in pool_flags {
+            if args.flag(f).is_some() {
+                bail!("--{f} has no effect with --seq (the sequential server has no pool)");
+            }
+        }
+        if let Some(kv) = args.overrides.iter().find(|kv| kv.starts_with("serve.")) {
+            bail!("-s {kv} has no effect with --seq (the sequential server has no pool)");
+        }
+        let mut runner = Runner::new(eng);
+        let service = Service::bind(addr)?;
+        println!("serving sequentially on {}", service.addr);
+        return service.serve(&mut runner, usize::MAX);
+    }
+    // Config file / -s serve.* first, explicit flags win.
+    let mut scfg = cfg.serve.clone();
+    if let Some(v) = args.flag("workers") {
+        scfg.workers = v.parse()?;
+    }
+    if let Some(v) = args.flag("batch-window-ms") {
+        scfg.batch_window_ms = v.parse()?;
+    }
+    if let Some(v) = args.flag("max-batch") {
+        scfg.max_batch = v.parse()?;
+    }
+    if let Some(v) = args.flag("queue-bound") {
+        scfg.queue_bound = v.parse()?;
+    }
+    if let Some(v) = args.flag("registry-cap") {
+        scfg.registry_cap = v.parse()?;
+    }
+    let server = PoolServer::bind(addr, eng, scfg.clone())?;
+    if let Some(models) = args.flag("preload") {
+        let cfgs: Vec<ExperimentConfig> = models
+            .split(',')
+            .filter(|m| !m.trim().is_empty())
+            .map(|m| {
+                let mut c = cfg.clone();
+                c.model = m.trim().to_string();
+                c
+            })
+            .collect();
+        let keys = server.preload(&cfgs)?;
+        println!("preloaded: {}", keys.join(", "));
+    }
+    println!(
+        "serving on {} ({} workers, batch window {} ms, max batch {}, queue bound {}, registry cap {})",
+        server.addr,
+        scfg.workers,
+        scfg.batch_window_ms,
+        scfg.max_batch,
+        scfg.queue_bound,
+        scfg.registry_cap,
+    );
+    server.serve(usize::MAX)
 }

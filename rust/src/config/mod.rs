@@ -171,6 +171,36 @@ impl Default for LapqCfg {
     }
 }
 
+/// Concurrent-serving knobs (`rust/src/serve/`): worker pool width,
+/// micro-batching, admission bound, registry capacity.  Part of the
+/// lossless config surface so a deployment is reproducible from its
+/// config echo, and overridable with `-s serve.*` keys.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeCfg {
+    /// Worker threads = max concurrently-served (persistent) connections.
+    pub workers: usize,
+    /// Micro-batch coalescing window in milliseconds (0 disables).
+    pub batch_window_ms: f64,
+    /// Max requests coalesced into one kernel execution (1 disables).
+    pub max_batch: usize,
+    /// Bound on queued connections/requests before shedding.
+    pub queue_bound: usize,
+    /// Packed-model registry (LRU) capacity.
+    pub registry_cap: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            workers: 8,
+            batch_window_ms: 2.0,
+            max_batch: 16,
+            queue_bound: 64,
+            registry_cap: 4,
+        }
+    }
+}
+
 /// A full experiment description.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
@@ -186,6 +216,7 @@ pub struct ExperimentConfig {
     pub bits: BitSpec,
     pub method: Method,
     pub lapq: LapqCfg,
+    pub serve: ServeCfg,
 }
 
 impl Default for ExperimentConfig {
@@ -200,6 +231,7 @@ impl Default for ExperimentConfig {
             bits: BitSpec::new(4, 4),
             method: Method::Lapq,
             lapq: LapqCfg::default(),
+            serve: ServeCfg::default(),
         }
     }
 }
@@ -379,6 +411,51 @@ pub const OVERRIDES: &[OverrideSpec] = &[
             Ok(())
         },
     },
+    OverrideSpec {
+        key: "serve.workers",
+        help: "serving worker threads (= max concurrent connections)",
+        example: "8",
+        apply: |c, v| {
+            c.serve.workers = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "serve.batch_window_ms",
+        help: "micro-batch coalescing window in ms (0 disables)",
+        example: "2.5",
+        apply: |c, v| {
+            c.serve.batch_window_ms = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "serve.max_batch",
+        help: "max infer requests coalesced per execution (1 disables)",
+        example: "16",
+        apply: |c, v| {
+            c.serve.max_batch = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "serve.queue_bound",
+        help: "admission queue bound before shedding 'overloaded'",
+        example: "64",
+        apply: |c, v| {
+            c.serve.queue_bound = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "serve.registry_cap",
+        help: "packed-model registry (LRU) capacity",
+        example: "4",
+        apply: |c, v| {
+            c.serve.registry_cap = v.parse()?;
+            Ok(())
+        },
+    },
 ];
 
 fn parse_f32_list(v: &str) -> Result<Vec<f32>> {
@@ -474,6 +551,23 @@ impl ExperimentConfig {
                 }
             }
         }
+        if let Some(s) = j.get("serve") {
+            if let Some(v) = s.get("workers").and_then(|v| v.as_f64()) {
+                cfg.serve.workers = v as usize;
+            }
+            if let Some(v) = s.get("batch_window_ms").and_then(|v| v.as_f64()) {
+                cfg.serve.batch_window_ms = v;
+            }
+            if let Some(v) = s.get("max_batch").and_then(|v| v.as_f64()) {
+                cfg.serve.max_batch = v as usize;
+            }
+            if let Some(v) = s.get("queue_bound").and_then(|v| v.as_f64()) {
+                cfg.serve.queue_bound = v as usize;
+            }
+            if let Some(v) = s.get("registry_cap").and_then(|v| v.as_f64()) {
+                cfg.serve.registry_cap = v as usize;
+            }
+        }
         Ok(cfg)
     }
 
@@ -521,6 +615,16 @@ impl ExperimentConfig {
                     ("box_hi", Json::Num(self.lapq.box_hi)),
                     ("exclude_first_last", Json::Bool(self.lapq.exclude_first_last)),
                     ("bias_correction", Json::Bool(self.lapq.bias_correction)),
+                ]),
+            ),
+            (
+                "serve",
+                Json::obj(vec![
+                    ("workers", Json::Num(self.serve.workers as f64)),
+                    ("batch_window_ms", Json::Num(self.serve.batch_window_ms)),
+                    ("max_batch", Json::Num(self.serve.max_batch as f64)),
+                    ("queue_bound", Json::Num(self.serve.queue_bound as f64)),
+                    ("registry_cap", Json::Num(self.serve.registry_cap as f64)),
                 ]),
             ),
         ])
@@ -622,6 +726,40 @@ mod tests {
         c.lapq.bias_correction = false;
         let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c2, c, "lapq sub-config must round-trip losslessly");
+    }
+
+    /// The serving sub-config joins the lossless surface.
+    #[test]
+    fn json_roundtrip_serve_subconfig() {
+        let serve = ServeCfg {
+            workers: 3,
+            batch_window_ms: 7.5,
+            max_batch: 11,
+            queue_bound: 17,
+            registry_cap: 2,
+        };
+        let c = ExperimentConfig { serve, ..Default::default() };
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2, c, "serve sub-config must round-trip losslessly");
+    }
+
+    #[test]
+    fn serve_overrides_apply() {
+        let mut c = ExperimentConfig::default();
+        c.apply_overrides(&[
+            "serve.workers=2".into(),
+            "serve.batch_window_ms=0.5".into(),
+            "serve.max_batch=4".into(),
+            "serve.queue_bound=9".into(),
+            "serve.registry_cap=1".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.serve.workers, 2);
+        assert_eq!(c.serve.batch_window_ms, 0.5);
+        assert_eq!(c.serve.max_batch, 4);
+        assert_eq!(c.serve.queue_bound, 9);
+        assert_eq!(c.serve.registry_cap, 1);
+        assert!(c.apply_overrides(&["serve.workers=x".into()]).is_err());
     }
 
     #[test]

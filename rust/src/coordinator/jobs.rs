@@ -3,10 +3,12 @@
 //! The [`Runner`] owns the engine handle and a **trained-model cache** —
 //! every (model, seed, steps) FP32 training run happens once and is shared
 //! by all methods/bitwidths that quantize it (exactly how the paper reuses
-//! one pretrained checkpoint across its table rows).  It also owns the
-//! serving state: a small MRU cache of packed [`QuantizedModel`]s keyed
-//! by `model:wN aN:method`, fed by [`Runner::pack`] and consumed by
-//! [`Runner::infer`] (the `pack`/`infer` service endpoints).
+//! one pretrained checkpoint across its table rows).  Serving state lives
+//! in an `Arc`-shared [`ModelRegistry`] (LRU of packed
+//! [`QuantizedModel`]s keyed by `model:wN aN:method`), fed by
+//! [`Runner::pack`] and consumed by [`Runner::infer`] — and, through
+//! [`infer_shared`] / [`infer_batched`], by the concurrent serving
+//! subsystem's read path without taking any Runner lock.
 
 use super::evaluator::EvalSet;
 use super::metrics;
@@ -19,6 +21,7 @@ use crate::lapq::events::{CalibObserver, NullObserver};
 use crate::runtime::cpu::ops::Arr;
 use crate::runtime::int::{ExecMode, InferSession, PackOpts, QuantizedModel};
 use crate::runtime::{EngineHandle, SessionId};
+use crate::serve::registry::ModelRegistry;
 use crate::tensor::HostTensor;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -38,7 +41,7 @@ pub struct JobResult {
     pub seconds: f64,
 }
 
-/// Capacity of the packed-model MRU cache.
+/// Default capacity of the packed-model registry.
 pub const PACKED_CACHE_CAP: usize = 4;
 
 /// What a `pack` job reports back (the artifact itself lands in the
@@ -75,13 +78,25 @@ pub struct Runner {
     trained: HashMap<(String, u64, usize), (Vec<HostTensor>, TrainReport)>,
     /// cached val sets per (model, seed, val_size)
     val_batches: usize,
-    /// MRU cache of packed models (front = most recent).
-    packed: Vec<(String, Arc<QuantizedModel>)>,
+    /// Packed-model LRU, shareable with the concurrent serving path.
+    registry: Arc<ModelRegistry>,
 }
 
 impl Runner {
     pub fn new(eng: EngineHandle) -> Self {
-        Runner { eng, trained: HashMap::new(), val_batches: 0, packed: Vec::new() }
+        Self::with_registry(eng, Arc::new(ModelRegistry::new(PACKED_CACHE_CAP)))
+    }
+
+    /// A Runner whose pack jobs publish into an externally shared
+    /// registry (the pool server's read path consumes it lock-free with
+    /// respect to the Runner).
+    pub fn with_registry(eng: EngineHandle, registry: Arc<ModelRegistry>) -> Self {
+        Runner { eng, trained: HashMap::new(), val_batches: 0, registry }
+    }
+
+    /// The packed-model registry this Runner fills.
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        self.registry.clone()
     }
 
     /// Train (or fetch cached) FP32 parameters for a config.
@@ -271,7 +286,7 @@ impl Runner {
             seconds: t0.elapsed().as_secs_f64(),
         };
         let arc = Arc::new(qm);
-        self.cache_put(key, arc.clone());
+        self.registry.put(key, arc.clone());
         metrics::observe("pack", summary.seconds, 1);
         log::info!(
             "pack {}: {} int params, {} -> {} bytes, fp32 {:.3} -> int-grid {:.3} ({:.1}s)",
@@ -286,53 +301,77 @@ impl Runner {
         Ok((summary, arc))
     }
 
-    fn cache_put(&mut self, key: String, qm: Arc<QuantizedModel>) {
-        self.packed.retain(|(k, _)| *k != key);
-        self.packed.insert(0, (key, qm));
-        while self.packed.len() > PACKED_CACHE_CAP {
-            let (evicted, _) = self.packed.pop().expect("non-empty");
-            metrics::inc("packed_cache_evictions");
-            log::info!("packed cache evicted {evicted}");
-        }
-        metrics::set("packed_cache_size", self.packed.len() as f64);
-    }
-
     /// Look up a packed model by exact key or bare model name (most
-    /// recently used wins), refreshing its MRU position.
+    /// recently used wins), refreshing its LRU position.
     pub fn packed_get(&mut self, key: &str) -> Option<Arc<QuantizedModel>> {
-        let pos = self.packed.iter().position(|(k, m)| k == key || m.model == key)?;
-        let entry = self.packed.remove(pos);
-        let qm = entry.1.clone();
-        self.packed.insert(0, entry);
-        metrics::inc("packed_cache_hits");
-        Some(qm)
+        self.registry.get(key)
     }
 
-    /// Serve one batched prediction from a cached packed model with the
-    /// integer engine.  `inputs` is `(x,)` for vision, `(users, items)`
-    /// for NCF.
+    /// Serve one batched prediction from the registry with the integer
+    /// engine.  `inputs` is `(x,)` for vision, `(users, items)` for NCF.
     pub fn infer(&mut self, key: &str, inputs: &[HostTensor]) -> Result<InferReply> {
-        let qm = match self.packed_get(key) {
-            Some(qm) => qm,
-            None => {
-                metrics::inc("packed_cache_misses");
-                anyhow::bail!("no packed model '{key}' in cache (run pack first)");
-            }
-        };
-        let spec = self.eng.manifest().model(&qm.model)?;
-        let t0 = std::time::Instant::now();
-        let sess = InferSession::new(spec, &qm)?;
-        let res = sess.infer(inputs, ExecMode::Int)?;
-        let seconds = t0.elapsed().as_secs_f64();
-        let rows = res.logits.shape.first().copied().unwrap_or(0);
-        metrics::observe("infer", seconds, rows);
-        metrics::inc(&format!("infer_{}", qm.model));
-        Ok(InferReply {
-            key: key.to_string(),
-            logits: res.logits,
-            rows,
-            int_layers: res.int_layers,
-            seconds,
-        })
+        infer_shared(&self.eng, &self.registry, key, inputs)
     }
+}
+
+/// Resolve `key` to its packed artifact + model spec (the shared
+/// lookup both read-path entry points start from).
+fn packed_for<'e>(
+    eng: &'e EngineHandle,
+    registry: &ModelRegistry,
+    key: &str,
+) -> Result<(&'e crate::runtime::ModelSpec, Arc<QuantizedModel>)> {
+    let qm = registry
+        .get(key)
+        .ok_or_else(|| anyhow::anyhow!("no packed model '{key}' in cache (run pack first)"))?;
+    let spec = eng.manifest().model(&qm.model)?;
+    Ok((spec, qm))
+}
+
+fn reply_from(key: &str, res: crate::runtime::int::InferResult, seconds: f64) -> InferReply {
+    let rows = res.logits.shape.first().copied().unwrap_or(0);
+    let int_layers = res.int_layers;
+    InferReply { key: key.to_string(), logits: res.logits, rows, int_layers, seconds }
+}
+
+/// One prediction from the shared registry — the lock-free-with-respect-
+/// to-the-Runner read path the concurrent server uses.  Inputs are
+/// borrowed straight through to the kernels (no copies on this path).
+pub fn infer_shared(
+    eng: &EngineHandle,
+    registry: &ModelRegistry,
+    key: &str,
+    inputs: &[HostTensor],
+) -> Result<InferReply> {
+    let (spec, qm) = packed_for(eng, registry, key)?;
+    let t0 = std::time::Instant::now();
+    let sess = InferSession::new(spec, &qm)?;
+    let res = sess.infer(inputs, ExecMode::Int)?;
+    let seconds = t0.elapsed().as_secs_f64();
+    metrics::observe("infer", seconds, res.logits.shape.first().copied().unwrap_or(0));
+    metrics::inc(&format!("infer_{}", qm.model));
+    Ok(reply_from(key, res, seconds))
+}
+
+/// One *coalesced* execution over the batch-parallel integer kernels:
+/// `parts[i]` is request `i`'s input tuple; the reply vector maps back
+/// one-to-one.  This is what the micro-batcher calls; row-independent
+/// kernels make the result bit-for-bit identical to serving each part
+/// separately.
+pub fn infer_batched(
+    eng: &EngineHandle,
+    registry: &ModelRegistry,
+    key: &str,
+    parts: &[Vec<HostTensor>],
+) -> Result<Vec<InferReply>> {
+    let (spec, qm) = packed_for(eng, registry, key)?;
+    let t0 = std::time::Instant::now();
+    let sess = InferSession::new(spec, &qm)?;
+    let results = sess.infer_many(parts, ExecMode::Int)?;
+    let seconds = t0.elapsed().as_secs_f64();
+    let total_rows: usize =
+        results.iter().map(|r| r.logits.shape.first().copied().unwrap_or(0)).sum();
+    metrics::observe("infer", seconds, total_rows);
+    metrics::inc(&format!("infer_{}", qm.model));
+    Ok(results.into_iter().map(|res| reply_from(key, res, seconds)).collect())
 }

@@ -1,20 +1,58 @@
-//! Global metrics registry: counters and timers every subsystem can bump,
-//! dumped as JSON for EXPERIMENTS.md and the job service.
+//! Global metrics registry: counters, gauges and bounded latency
+//! histograms every subsystem can bump, dumped as JSON for
+//! EXPERIMENTS.md and the job service.
+//!
+//! Counters/gauges are plain `name -> f64` entries.  Histograms are
+//! bounded rings of the last [`HIST_CAP`] observations; `dump()` folds
+//! each one into `<name>_p50` / `<name>_p95` / `<name>_p99` /
+//! `<name>_count` entries, so tail latency is visible over the
+//! `{"cmd":"metrics"}` endpoint without unbounded memory.
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
-static REGISTRY: Mutex<Option<BTreeMap<String, f64>>> = Mutex::new(None);
+/// Ring capacity of every histogram (last N observations).
+pub const HIST_CAP: usize = 4096;
 
-fn with<R>(f: impl FnOnce(&mut BTreeMap<String, f64>) -> R) -> R {
+/// Bounded reservoir of the most recent observations.
+struct Ring {
+    buf: Vec<f32>,
+    next: usize,
+    total: u64,
+}
+
+impl Ring {
+    fn new() -> Ring {
+        Ring { buf: Vec::new(), next: 0, total: 0 }
+    }
+
+    fn push(&mut self, v: f32) {
+        if self.buf.len() < HIST_CAP {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+        }
+        self.next = (self.next + 1) % HIST_CAP;
+        self.total += 1;
+    }
+}
+
+struct Store {
+    counters: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Ring>,
+}
+
+static REGISTRY: Mutex<Option<Store>> = Mutex::new(None);
+
+fn with<R>(f: impl FnOnce(&mut Store) -> R) -> R {
     let mut guard = REGISTRY.lock().unwrap();
-    f(guard.get_or_insert_with(BTreeMap::new))
+    f(guard.get_or_insert_with(|| Store { counters: BTreeMap::new(), hists: BTreeMap::new() }))
 }
 
 /// Add `v` to counter `name`.
 pub fn add(name: &str, v: f64) {
-    with(|m| *m.entry(name.to_string()).or_insert(0.0) += v);
+    with(|m| *m.counters.entry(name.to_string()).or_insert(0.0) += v);
 }
 
 /// Increment counter by one.
@@ -25,25 +63,57 @@ pub fn inc(name: &str) {
 /// Set a gauge.
 pub fn set(name: &str, v: f64) {
     with(|m| {
-        m.insert(name.to_string(), v);
+        m.counters.insert(name.to_string(), v);
     });
 }
 
 /// Read a metric (0 if absent).
 pub fn get(name: &str) -> f64 {
-    with(|m| m.get(name).copied().unwrap_or(0.0))
+    with(|m| m.counters.get(name).copied().unwrap_or(0.0))
+}
+
+/// Record one observation into the bounded histogram `name`.
+pub fn record_hist(name: &str, v: f64) {
+    with(|m| m.hists.entry(name.to_string()).or_insert_with(Ring::new).push(v as f32));
+}
+
+/// One sorted copy serves all three percentile ranks (nearest-rank,
+/// matching `stats::percentile`) — a metrics dump must not hold the
+/// global mutex for three sorts per histogram.
+fn p50_p95_p99(buf: &[f32]) -> (f64, f64, f64) {
+    let mut v = buf.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let at = |p: f32| {
+        let rank = ((p / 100.0) * (v.len() - 1) as f32).round() as usize;
+        v[rank.min(v.len() - 1)] as f64
+    };
+    (at(50.0), at(95.0), at(99.0))
+}
+
+/// (p50, p95, p99) over the histogram's current window, if it has any
+/// observations.
+pub fn hist_percentiles(name: &str) -> Option<(f64, f64, f64)> {
+    with(|m| {
+        let r = m.hists.get(name)?;
+        if r.buf.is_empty() {
+            return None;
+        }
+        Some(p50_p95_p99(&r.buf))
+    })
 }
 
 /// Record one latency observation for a serving path: accumulates
-/// `<name>_seconds` / `<name>_calls` / `<name>_items` and refreshes the
-/// `<name>_last_ms` gauge, so `dump()` exposes mean latency and
-/// throughput (`items / seconds`) without a histogram.
+/// `<name>_seconds` / `<name>_calls` / `<name>_items`, refreshes the
+/// `<name>_last_ms` gauge, and feeds the `<name>_ms` histogram — so
+/// `dump()` exposes mean latency, throughput (`items / seconds`) *and*
+/// p50/p95/p99 tails.
 pub fn observe(name: &str, seconds: f64, items: usize) {
     with(|m| {
-        *m.entry(format!("{name}_seconds")).or_insert(0.0) += seconds;
-        *m.entry(format!("{name}_calls")).or_insert(0.0) += 1.0;
-        *m.entry(format!("{name}_items")).or_insert(0.0) += items as f64;
-        m.insert(format!("{name}_last_ms"), seconds * 1e3);
+        *m.counters.entry(format!("{name}_seconds")).or_insert(0.0) += seconds;
+        *m.counters.entry(format!("{name}_calls")).or_insert(0.0) += 1.0;
+        *m.counters.entry(format!("{name}_items")).or_insert(0.0) += items as f64;
+        m.counters.insert(format!("{name}_last_ms"), seconds * 1e3);
+        m.hists.entry(format!("{name}_ms")).or_insert_with(Ring::new).push((seconds * 1e3) as f32);
     });
 }
 
@@ -56,22 +126,49 @@ pub fn timed<T>(name: &str, f: impl FnOnce() -> T) -> T {
     out
 }
 
-/// Snapshot as JSON.
+/// Snapshot as JSON: every counter/gauge, plus percentile + count
+/// entries for every histogram.
 pub fn dump() -> Json {
-    with(|m| Json::Obj(m.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect()))
+    with(|m| {
+        let mut out: BTreeMap<String, Json> =
+            m.counters.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect();
+        for (name, r) in &m.hists {
+            if r.buf.is_empty() {
+                continue;
+            }
+            let (p50, p95, p99) = p50_p95_p99(&r.buf);
+            out.insert(format!("{name}_p50"), Json::Num(p50));
+            out.insert(format!("{name}_p95"), Json::Num(p95));
+            out.insert(format!("{name}_p99"), Json::Num(p99));
+            out.insert(format!("{name}_count"), Json::Num(r.total as f64));
+        }
+        Json::Obj(out)
+    })
 }
 
 /// Clear everything (tests).
 pub fn reset() {
-    with(|m| m.clear());
+    with(|m| {
+        m.counters.clear();
+        m.hists.clear();
+    });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// The registry is process-global and `cargo test` runs tests
+    /// concurrently: every test in this module takes this lock so one
+    /// test's `reset()` cannot wipe another's in-flight state.
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     #[test]
     fn counters_and_gauges() {
+        let _g = serial();
         reset();
         inc("jobs");
         inc("jobs");
@@ -88,6 +185,7 @@ mod tests {
 
     #[test]
     fn timed_records() {
+        let _g = serial();
         reset();
         let v = timed("op", || 41 + 1);
         assert_eq!(v, 42);
@@ -100,5 +198,47 @@ mod tests {
         assert_eq!(get("obs_test_items"), 192.0);
         assert_eq!(get("obs_test_seconds"), 0.75);
         assert_eq!(get("obs_test_last_ms"), 250.0);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let _g = serial();
+        for i in 1..=100 {
+            record_hist("lat", i as f64);
+        }
+        let (p50, p95, p99) = hist_percentiles("lat").unwrap();
+        assert!((45.0..=55.0).contains(&p50), "p50 {p50}");
+        assert!((90.0..=100.0).contains(&p95), "p95 {p95}");
+        assert!(p99 >= p95, "p99 {p99} < p95 {p95}");
+        let j = dump();
+        assert!(j.req("lat_p50").as_f64().is_some());
+        assert!(j.req("lat_p95").as_f64().is_some());
+        assert!(j.req("lat_p99").as_f64().is_some());
+        assert_eq!(j.req("lat_count").as_f64(), Some(100.0));
+        assert!(hist_percentiles("absent").is_none());
+    }
+
+    #[test]
+    fn histogram_ring_is_bounded() {
+        let _g = serial();
+        // 2x the capacity: the window must hold only the most recent CAP
+        // samples, and the total must keep counting.
+        for i in 0..(2 * HIST_CAP) {
+            record_hist("ring", i as f64);
+        }
+        let (p50, _, _) = hist_percentiles("ring").unwrap();
+        // Window is [CAP, 2*CAP): the median must sit inside it.
+        assert!(p50 >= HIST_CAP as f64, "p50 {p50} predates the window");
+        let j = dump();
+        assert_eq!(j.req("ring_count").as_f64(), Some(2.0 * HIST_CAP as f64));
+    }
+
+    #[test]
+    fn observe_feeds_histogram() {
+        let _g = serial();
+        observe("hist_path", 0.010, 1);
+        observe("hist_path", 0.020, 1);
+        let (p50, _, p99) = hist_percentiles("hist_path_ms").unwrap();
+        assert!(p50 >= 10.0 && p99 <= 20.0 + 1e-6, "p50 {p50} p99 {p99}");
     }
 }

@@ -16,6 +16,14 @@
 //!        "x":[[...]] | "x":[...]+"shape",        {"logits":[[...]],
 //!        or "users":[...],"items":[...]}          "predictions":[...],...}}
 //!
+//! This is the *blocking* server: connections are handled strictly
+//! sequentially, which is the right semantics for minutes-long
+//! quantization jobs and for tests that want a deterministic order.
+//! The concurrent production face — worker pool, micro-batching,
+//! admission control — lives in [`crate::serve`] and speaks the same
+//! protocol through the response builders below, so the two paths
+//! cannot drift.
+//!
 //! Long calibrations are never silent: with `"stream":true` the quantize
 //! handler forwards the calibrator's [`CalibEvent`]s as one JSON frame
 //! per line (`{"event":"phase_start",...}`, throttled evals, phase ends,
@@ -23,14 +31,17 @@
 //! `{"ok":...}` response.  Every error — malformed JSON, unknown `cmd`,
 //! a failing job, even a panic inside a kernel — comes back as
 //! `{"ok":false,"error":...}` on the same connection; the line loop and
-//! the listener keep serving.  The listener thread accepts connections
-//! and forwards jobs to the single Runner; responses stream back on the
-//! same connection.  `max_requests` bounds the serve loop for tests.
+//! the listener keep serving.  Accept failures retry under the shared
+//! exponential-backoff policy ([`crate::serve::admission::Backoff`]):
+//! jittered doubling delays, with the failure budget resetting once the
+//! window has elapsed (not merely on the next success).  `max_requests`
+//! bounds the serve loop for tests.
 
-use super::jobs::Runner;
+use super::jobs::{InferReply, JobResult, PackSummary, Runner};
 use super::metrics;
 use crate::config::ExperimentConfig;
 use crate::lapq::events::{CalibEvent, CalibObserver, EvalThrottle};
+use crate::serve::admission::Backoff;
 use crate::tensor::HostTensor;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -42,14 +53,14 @@ use std::net::{TcpListener, TcpStream};
 /// 1 in N); phase boundaries and degenerate warnings always ship.  A
 /// broken pipe flips `dead` so the job finishes without further write
 /// attempts (the final response write surfaces the disconnect).
-struct StreamObserver<'a> {
+pub(crate) struct StreamObserver<'a> {
     w: &'a mut dyn Write,
     throttle: EvalThrottle,
     dead: bool,
 }
 
 impl<'a> StreamObserver<'a> {
-    fn new(w: &'a mut dyn Write) -> Self {
+    pub(crate) fn new(w: &'a mut dyn Write) -> Self {
         StreamObserver { w, throttle: EvalThrottle::new(25), dead: false }
     }
 }
@@ -72,6 +83,142 @@ impl CalibObserver for StreamObserver<'_> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Request/response wire format — the single source, shared by this
+// blocking server and the concurrent pool (`serve::pool`) so the two
+// paths cannot drift.
+
+/// `"stream":true` on a quantize request.
+pub(crate) fn stream_flag(req: &Json) -> bool {
+    req.get("stream").and_then(|v| v.as_bool()).unwrap_or(false)
+}
+
+/// Pack options from a request (`"po2"` defaults to true).
+pub(crate) fn pack_opts_from(req: &Json) -> crate::runtime::int::PackOpts {
+    crate::runtime::int::PackOpts {
+        po2_scales: req.get("po2").and_then(|v| v.as_bool()).unwrap_or(true),
+    }
+}
+
+/// The infer lookup key: `"key"` (from pack) with `"model"` fallback.
+pub(crate) fn infer_key(req: &Json) -> Result<&str> {
+    req.get("key")
+        .or_else(|| req.get("model"))
+        .and_then(|v| v.as_str())
+        .context("infer needs 'key' (from pack) or 'model'")
+}
+
+pub(crate) fn ping_response() -> Json {
+    Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])
+}
+
+pub(crate) fn models_response(eng: &crate::runtime::EngineHandle) -> Json {
+    let models: Vec<Json> =
+        eng.manifest().models.keys().map(|k| Json::Str(k.clone())).collect();
+    Json::obj(vec![("ok", Json::Bool(true)), ("models", Json::Arr(models))])
+}
+
+pub(crate) fn metrics_response() -> Json {
+    Json::obj(vec![("ok", Json::Bool(true)), ("metrics", metrics::dump())])
+}
+
+/// Structured failure (counts into `service_errors`).
+pub(crate) fn error_json(msg: String) -> Json {
+    metrics::inc("service_errors");
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg))])
+}
+
+pub(crate) fn quantize_response(cfg: &ExperimentConfig, res: &JobResult) -> Json {
+    let bools = |v: &[bool]| Json::Arr(v.iter().map(|&b| Json::Bool(b)).collect());
+    let trace = Json::Arr(res.outcome.trace.iter().map(|t| t.to_json()).collect());
+    let joint = match cfg.method {
+        crate::config::Method::Lapq => cfg.lapq.joint.optimizer.name(),
+        _ => "none",
+    };
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "result",
+            Json::obj(vec![
+                ("model", Json::Str(res.model.clone())),
+                ("bits", Json::Str(res.bits_label.clone())),
+                ("method", Json::Str(res.method.clone())),
+                ("joint", Json::Str(joint.into())),
+                ("fp32_metric", Json::Num(res.fp32_metric as f64)),
+                ("quant_metric", Json::Num(res.quant_metric as f64)),
+                ("calib_loss", Json::Num(res.outcome.calib_loss)),
+                ("init_loss", Json::Num(res.outcome.init_loss)),
+                ("fp32_calib_loss", Json::Num(res.outcome.fp32_calib_loss)),
+                ("joint_evals", Json::Num(res.outcome.joint_evals as f64)),
+                ("active_w", bools(&res.outcome.mask.weights)),
+                ("active_a", bools(&res.outcome.mask.acts)),
+                ("trace", trace),
+                // The exact config that produced this result —
+                // lossless, so the run is reproducible from the
+                // response alone.
+                ("config", cfg.to_json()),
+                ("seconds", Json::Num(res.seconds)),
+            ]),
+        ),
+    ])
+}
+
+pub(crate) fn pack_response(sum: &PackSummary) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "packed",
+            Json::obj(vec![
+                ("key", Json::Str(sum.key.clone())),
+                ("model", Json::Str(sum.model.clone())),
+                ("bits", Json::Str(sum.bits_label.clone())),
+                ("method", Json::Str(sum.method.clone())),
+                ("int_params", Json::Num(sum.int_params as f64)),
+                ("f32_bytes", Json::Num(sum.f32_bytes as f64)),
+                ("packed_bytes", Json::Num(sum.packed_bytes as f64)),
+                ("fp32_metric", Json::Num(sum.fp32_metric as f64)),
+                ("quant_metric", Json::Num(sum.quant_metric as f64)),
+                ("seconds", Json::Num(sum.seconds)),
+            ]),
+        ),
+    ])
+}
+
+pub(crate) fn infer_response(reply: &InferReply) -> Json {
+    let c = reply.logits.last_dim().max(1);
+    let mut logits_rows = Vec::new();
+    let mut predictions = Vec::new();
+    for row in reply.logits.data.chunks(c) {
+        logits_rows.push(Json::arr_f32(row));
+        if c > 1 {
+            let mut best = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            predictions.push(Json::Num(best as f64));
+        } else {
+            let hit = row.first().is_some_and(|&v| v > 0.0);
+            predictions.push(Json::Num(if hit { 1.0 } else { 0.0 }));
+        }
+    }
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "result",
+            Json::obj(vec![
+                ("key", Json::Str(reply.key.clone())),
+                ("rows", Json::Num(reply.rows as f64)),
+                ("int_layers", Json::Num(reply.int_layers as f64)),
+                ("seconds", Json::Num(reply.seconds)),
+                ("logits", Json::Arr(logits_rows)),
+                ("predictions", Json::Arr(predictions)),
+            ]),
+        ),
+    ])
+}
+
 pub struct Service {
     listener: TcpListener,
     pub addr: std::net::SocketAddr,
@@ -92,25 +239,28 @@ impl Service {
     /// connection never takes the listener down.
     pub fn serve(&self, runner: &mut Runner, max_requests: usize) -> Result<()> {
         let mut handled = 0usize;
-        let mut accept_failures = 0u32;
+        let mut backoff = Backoff::accept_loop();
         for stream in self.listener.incoming() {
             let stream = match stream {
                 Ok(s) => s,
                 Err(e) => {
                     // Transient accept errors (ECONNABORTED, brief fd
-                    // pressure) are throttled and retried; a listener
-                    // that fails persistently is surfaced instead of
-                    // spinning forever.
-                    accept_failures += 1;
-                    if accept_failures >= 32 {
-                        return Err(e).context("accept failing persistently");
+                    // pressure) retry under jittered exponential
+                    // backoff; a listener that keeps failing inside one
+                    // budget window is surfaced instead of spinning.
+                    match backoff.on_failure() {
+                        Some(delay) => {
+                            log::warn!(
+                                "accept failed ({} in window): {e}; retrying in {delay:?}",
+                                backoff.failures()
+                            );
+                            std::thread::sleep(delay);
+                            continue;
+                        }
+                        None => return Err(e).context("accept failing persistently"),
                     }
-                    log::warn!("accept failed ({accept_failures}): {e}");
-                    std::thread::sleep(std::time::Duration::from_millis(50));
-                    continue;
                 }
             };
-            accept_failures = 0;
             handled += self.handle_conn(stream, runner, max_requests - handled);
             if handled >= max_requests {
                 break;
@@ -170,14 +320,12 @@ impl Service {
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             self.dispatch_inner(line, runner, writer)
         }));
-        let err = |msg: String| {
-            metrics::inc("service_errors");
-            Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg))])
-        };
         match caught {
             Ok(Ok(j)) => j,
-            Ok(Err(e)) => err(format!("{e:#}")),
-            Err(payload) => err(format!("internal panic: {}", panic_text(payload.as_ref()))),
+            Ok(Err(e)) => error_json(format!("{e:#}")),
+            Err(payload) => {
+                error_json(format!("internal panic: {}", panic_text(payload.as_ref())))
+            }
         }
     }
 
@@ -190,139 +338,40 @@ impl Service {
         let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
         let cmd = req.get("cmd").and_then(|c| c.as_str()).unwrap_or("");
         match cmd {
-            "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])),
-            "models" => {
-                let models: Vec<Json> = runner
-                    .eng
-                    .manifest()
-                    .models
-                    .keys()
-                    .map(|k| Json::Str(k.clone()))
-                    .collect();
-                Ok(Json::obj(vec![("ok", Json::Bool(true)), ("models", Json::Arr(models))]))
-            }
-            "metrics" => {
-                Ok(Json::obj(vec![("ok", Json::Bool(true)), ("metrics", metrics::dump())]))
-            }
+            "ping" => Ok(ping_response()),
+            "models" => Ok(models_response(&runner.eng)),
+            "metrics" => Ok(metrics_response()),
             "quantize" => {
                 let cfg = ExperimentConfig::from_json(&req)?;
-                let stream = req.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
-                let res = if stream {
+                let res = if stream_flag(&req) {
                     let mut obs = StreamObserver::new(writer);
                     runner.run_observed(&cfg, &mut obs)?
                 } else {
                     runner.run(&cfg)?
                 };
-                let bools = |v: &[bool]| Json::Arr(v.iter().map(|&b| Json::Bool(b)).collect());
-                let trace =
-                    Json::Arr(res.outcome.trace.iter().map(|t| t.to_json()).collect());
-                let joint = match cfg.method {
-                    crate::config::Method::Lapq => cfg.lapq.joint.optimizer.name(),
-                    _ => "none",
-                };
-                Ok(Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    (
-                        "result",
-                        Json::obj(vec![
-                            ("model", Json::Str(res.model)),
-                            ("bits", Json::Str(res.bits_label)),
-                            ("method", Json::Str(res.method)),
-                            ("joint", Json::Str(joint.into())),
-                            ("fp32_metric", Json::Num(res.fp32_metric as f64)),
-                            ("quant_metric", Json::Num(res.quant_metric as f64)),
-                            ("calib_loss", Json::Num(res.outcome.calib_loss)),
-                            ("init_loss", Json::Num(res.outcome.init_loss)),
-                            ("fp32_calib_loss", Json::Num(res.outcome.fp32_calib_loss)),
-                            ("joint_evals", Json::Num(res.outcome.joint_evals as f64)),
-                            ("active_w", bools(&res.outcome.mask.weights)),
-                            ("active_a", bools(&res.outcome.mask.acts)),
-                            ("trace", trace),
-                            // The exact config that produced this result —
-                            // lossless, so the run is reproducible from the
-                            // response alone.
-                            ("config", cfg.to_json()),
-                            ("seconds", Json::Num(res.seconds)),
-                        ]),
-                    ),
-                ]))
+                Ok(quantize_response(&cfg, &res))
             }
             "pack" => {
                 let cfg = ExperimentConfig::from_json(&req)?;
-                let opts = crate::runtime::int::PackOpts {
-                    po2_scales: req.get("po2").and_then(|v| v.as_bool()).unwrap_or(true),
-                };
                 // Deliberately no write-to-disk option here: letting a
                 // network client choose a server-side path would be a
                 // remote file-write primitive.  Saving artifacts is the
                 // CLI's job (`repro pack --out DIR`).
-                let (sum, _qm) = runner.pack(&cfg, &opts)?;
-                Ok(Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    (
-                        "packed",
-                        Json::obj(vec![
-                            ("key", Json::Str(sum.key)),
-                            ("model", Json::Str(sum.model)),
-                            ("bits", Json::Str(sum.bits_label)),
-                            ("method", Json::Str(sum.method)),
-                            ("int_params", Json::Num(sum.int_params as f64)),
-                            ("f32_bytes", Json::Num(sum.f32_bytes as f64)),
-                            ("packed_bytes", Json::Num(sum.packed_bytes as f64)),
-                            ("fp32_metric", Json::Num(sum.fp32_metric as f64)),
-                            ("quant_metric", Json::Num(sum.quant_metric as f64)),
-                            ("seconds", Json::Num(sum.seconds)),
-                        ]),
-                    ),
-                ]))
+                let (sum, _qm) = runner.pack(&cfg, &pack_opts_from(&req))?;
+                Ok(pack_response(&sum))
             }
             "infer" => {
-                let key = req
-                    .get("key")
-                    .or_else(|| req.get("model"))
-                    .and_then(|v| v.as_str())
-                    .context("infer needs 'key' (from pack) or 'model'")?;
+                let key = infer_key(&req)?;
                 let inputs = parse_infer_inputs(&req)?;
                 let reply = runner.infer(key, &inputs)?;
-                let c = reply.logits.last_dim().max(1);
-                let mut logits_rows = Vec::new();
-                let mut predictions = Vec::new();
-                for row in reply.logits.data.chunks(c) {
-                    logits_rows.push(Json::arr_f32(row));
-                    if c > 1 {
-                        let mut best = 0usize;
-                        for (j, &v) in row.iter().enumerate() {
-                            if v > row[best] {
-                                best = j;
-                            }
-                        }
-                        predictions.push(Json::Num(best as f64));
-                    } else {
-                        let hit = row.first().is_some_and(|&v| v > 0.0);
-                        predictions.push(Json::Num(if hit { 1.0 } else { 0.0 }));
-                    }
-                }
-                Ok(Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    (
-                        "result",
-                        Json::obj(vec![
-                            ("key", Json::Str(reply.key)),
-                            ("rows", Json::Num(reply.rows as f64)),
-                            ("int_layers", Json::Num(reply.int_layers as f64)),
-                            ("seconds", Json::Num(reply.seconds)),
-                            ("logits", Json::Arr(logits_rows)),
-                            ("predictions", Json::Arr(predictions)),
-                        ]),
-                    ),
-                ]))
+                Ok(infer_response(&reply))
             }
             other => anyhow::bail!("unknown cmd '{other}'"),
         }
     }
 }
 
-fn panic_text(p: &(dyn std::any::Any + Send)) -> &str {
+pub(crate) fn panic_text(p: &(dyn std::any::Any + Send)) -> &str {
     if let Some(s) = p.downcast_ref::<&str>() {
         s
     } else if let Some(s) = p.downcast_ref::<String>() {
@@ -335,7 +384,7 @@ fn panic_text(p: &(dyn std::any::Any + Send)) -> &str {
 /// Decode the wire form of an infer batch: `users`+`items` i32 arrays
 /// (NCF), nested `x` rows (feature models), or flat `x` + `shape`
 /// (images).
-fn parse_infer_inputs(req: &Json) -> Result<Vec<HostTensor>> {
+pub(crate) fn parse_infer_inputs(req: &Json) -> Result<Vec<HostTensor>> {
     if let (Some(u), Some(it)) = (req.get("users"), req.get("items")) {
         let to_i32 = |j: &Json, what: &str| -> Result<Vec<i32>> {
             let arr = j.as_arr().with_context(|| format!("'{what}' must be an array"))?;

@@ -29,6 +29,12 @@
 //!   optimization), the post-training-quantization baselines it is
 //!   compared against (MMSE, ACIQ, KLD, min-max), trainer, evaluator,
 //!   loss-landscape analysis and a TCP job service.
+//! * **Concurrent serving** (`serve`): the production face of the job
+//!   service — a worker pool over the same JSON-lines protocol, an
+//!   `Arc`-shared LRU registry of packed models, dynamic micro-batching
+//!   of infer traffic onto the batch-parallel integer kernels
+//!   (bit-for-bit identical to sequential serving), and admission
+//!   control with typed overload shedding.
 
 // The crate is clippy-clean under `-D warnings` with these scoped
 // exceptions (numerical code indexes freely; `lapq::lapq` is deliberate).
@@ -55,6 +61,7 @@ pub mod optim;
 pub mod prop;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

@@ -212,6 +212,93 @@ impl<'a> InferSession<'a> {
         Ok(InferResult { logits, taps: run.taps, int_layers: run.int_layers })
     }
 
+    /// Coalesced multi-request forward pass — the micro-batcher's entry
+    /// point.  `parts[i]` is one request's input tuple (`(x,)` vision /
+    /// `(users, items)` NCF); all parts are concatenated along the batch
+    /// axis, executed as **one** kernel invocation, and the logits are
+    /// scattered back per part.
+    ///
+    /// Every row of every kernel (GEMM row, conv image, embedding
+    /// gather, requant epilogue) accumulates independently of its batch
+    /// neighbours, so the result is bit-for-bit identical to calling
+    /// [`InferSession::infer`] per part — the contract the concurrent
+    /// server's batched path relies on, pinned by the tests below.
+    pub fn infer_many(
+        &self,
+        parts: &[Vec<HostTensor>],
+        mode: ExecMode,
+    ) -> Result<Vec<InferResult>> {
+        if parts.len() <= 1 {
+            return parts.iter().map(|p| self.infer(p, mode)).collect();
+        }
+        if self.record_taps {
+            bail!("infer_many does not support record_taps (probe requests individually)");
+        }
+        // Concatenate inputs along the batch axis, remembering each
+        // part's row count for the scatter.
+        let (combined, rows) = if self.spec.task == "ncf" {
+            let mut users = Vec::new();
+            let mut items = Vec::new();
+            let mut rows = Vec::with_capacity(parts.len());
+            for (pi, p) in parts.iter().enumerate() {
+                if p.len() != 2 {
+                    bail!("ncf infer part {pi} needs (users, items), got {} tensors", p.len());
+                }
+                let u = i32s(&p[0], "users")?;
+                let it = i32s(&p[1], "items")?;
+                if u.len() != it.len() {
+                    bail!("part {pi}: users ({}) vs items ({}) mismatch", u.len(), it.len());
+                }
+                rows.push(u.len());
+                users.extend_from_slice(u);
+                items.extend_from_slice(it);
+            }
+            let ut = HostTensor::i32(vec![users.len()], users);
+            let it = HostTensor::i32(vec![items.len()], items);
+            (vec![ut, it], rows)
+        } else {
+            let mut data = Vec::new();
+            let mut rows = Vec::with_capacity(parts.len());
+            let mut trailing: Option<&[usize]> = None;
+            for (pi, p) in parts.iter().enumerate() {
+                if p.len() != 1 {
+                    bail!("vision infer part {pi} needs (x,), got {} tensors", p.len());
+                }
+                let x = &p[0];
+                if x.shape.is_empty() {
+                    bail!("part {pi}: scalar input");
+                }
+                match trailing {
+                    None => trailing = Some(&x.shape[1..]),
+                    Some(t) if t == &x.shape[1..] => {}
+                    Some(t) => {
+                        bail!("part {pi} shape {:?} does not stack onto [B, {t:?}]", x.shape)
+                    }
+                }
+                rows.push(x.shape[0]);
+                data.extend_from_slice(f32s(x, "x")?);
+            }
+            let mut shape = vec![rows.iter().sum::<usize>()];
+            shape.extend_from_slice(trailing.unwrap_or(&[]));
+            (vec![HostTensor::f32(shape, data)], rows)
+        };
+        let res = self.infer(&combined, mode)?;
+        // Scatter logits rows back to their requests.
+        let c = res.logits.last_dim().max(1);
+        let mut out = Vec::with_capacity(parts.len());
+        let mut off = 0usize;
+        for &n in &rows {
+            let slice = res.logits.data[off * c..(off + n) * c].to_vec();
+            off += n;
+            out.push(InferResult {
+                logits: Arr::new(vec![n, c], slice),
+                taps: Vec::new(),
+                int_layers: res.int_layers,
+            });
+        }
+        Ok(out)
+    }
+
     /// Fake-quant of an activation tensor (no-op when Δa = 0).
     fn fq_act(&self, x: &Arr, qi: usize) -> Arr {
         let da = self.model.quant.da[qi];
@@ -463,6 +550,50 @@ mod tests {
         assert_eq!(res.logits.shape, vec![16, 16]);
         assert_eq!(res.int_layers, 3);
         assert!(res.logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    /// The micro-batcher's contract: one coalesced execution must be
+    /// bit-for-bit identical to serving each part separately.
+    #[test]
+    fn infer_many_matches_individual_bit_for_bit() {
+        let m = Manifest::builtin();
+        let spec = m.model("mlp3").unwrap();
+        let params = init_params(&spec.params, 5);
+        let qm = pack(spec, &params, &int8_quant(3), None, &PackOpts::default()).unwrap();
+        let sess = InferSession::new(spec, &qm).unwrap();
+        let data = crate::data::vision::SynthVision::new(9);
+        let (x, _) = data.batch_features(0, 8, 64);
+        // uneven split: rows 1 / 2 / 5 of the same batch
+        let row = |a: usize, b: usize| {
+            HostTensor::f32(vec![b - a, 64], x.f()[a * 64..b * 64].to_vec())
+        };
+        let parts = vec![vec![row(0, 1)], vec![row(1, 3)], vec![row(3, 8)]];
+        for mode in [ExecMode::Int, ExecMode::Simulated] {
+            let many = sess.infer_many(&parts, mode).unwrap();
+            assert_eq!(many.len(), 3);
+            for (part, got) in parts.iter().zip(&many) {
+                let solo = sess.infer(part, mode).unwrap();
+                assert_eq!(solo.logits.shape, got.logits.shape);
+                assert_eq!(got.int_layers, solo.int_layers);
+                for (a, b) in solo.logits.data.iter().zip(&got.logits.data) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{mode:?}: coalesced != solo");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infer_many_rejects_mismatched_parts() {
+        let m = Manifest::builtin();
+        let spec = m.model("mlp3").unwrap();
+        let params = init_params(&spec.params, 3);
+        let qm = pack(spec, &params, &int8_quant(3), None, &PackOpts::default()).unwrap();
+        let sess = InferSession::new(spec, &qm).unwrap();
+        let good = vec![HostTensor::zeros(vec![2, 64])];
+        let ragged = vec![HostTensor::zeros(vec![2, 32])];
+        assert!(sess.infer_many(&[good.clone(), ragged], ExecMode::Int).is_err());
+        // a part with the wrong arity fails the whole batch
+        assert!(sess.infer_many(&[good, vec![]], ExecMode::Int).is_err());
     }
 
     #[test]

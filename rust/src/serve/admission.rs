@@ -1,0 +1,292 @@
+//! Admission control for the concurrent server: a bounded connection
+//! queue with backpressure, the typed `overloaded` shed response, and
+//! the exponential-backoff policy the accept loops share.
+//!
+//! Backpressure model: the accept loop is never allowed to buffer
+//! unbounded work.  Connections it cannot hand to a worker immediately
+//! go into a bounded queue; when that is full the client gets
+//! `{"ok":false,"error":"overloaded","retry_after_ms":N}` on the spot
+//! and the connection is closed — a fast, typed shed beats a silent
+//! multi-second stall.  Dropping the queue's sender is the graceful
+//! shutdown signal: workers drain what was admitted, then exit.
+
+use crate::coordinator::metrics;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// The wire value of the shed response's `error` field.
+pub const OVERLOADED: &str = "overloaded";
+
+/// The typed shed response: structured, parseable, and carrying a
+/// retry hint so well-behaved clients back off instead of hammering.
+pub fn shed_response(retry_after_ms: u64) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(OVERLOADED.into())),
+        ("retry_after_ms", Json::Num(retry_after_ms as f64)),
+    ])
+}
+
+/// Why a push was refused; either way the item comes back to the
+/// caller (to shed with a typed response or drop at shutdown).
+pub enum PushError<T> {
+    /// The queue is at capacity — shed.
+    Full(T),
+    /// Every receiver is gone — shutting down.
+    Closed(T),
+}
+
+impl<T> PushError<T> {
+    pub fn into_inner(self) -> T {
+        match self {
+            PushError::Full(t) | PushError::Closed(t) => t,
+        }
+    }
+}
+
+/// Producer half of a bounded queue; `push` never blocks.
+pub struct BoundedQueue<T> {
+    tx: SyncSender<T>,
+    depth: Arc<AtomicUsize>,
+    gauge: &'static str,
+}
+
+/// Consumer half, shareable across a worker pool.  `recv` serializes
+/// dequeue (not processing) behind a mutex.
+pub struct SharedReceiver<T> {
+    rx: Arc<Mutex<Receiver<T>>>,
+    depth: Arc<AtomicUsize>,
+    gauge: &'static str,
+}
+
+impl<T> Clone for SharedReceiver<T> {
+    fn clone(&self) -> Self {
+        SharedReceiver { rx: self.rx.clone(), depth: self.depth.clone(), gauge: self.gauge }
+    }
+}
+
+/// A bounded MPMC-ish queue of capacity `cap` whose depth is published
+/// as the `gauge` metric.
+pub fn bounded<T>(cap: usize, gauge: &'static str) -> (BoundedQueue<T>, SharedReceiver<T>) {
+    let (tx, rx) = sync_channel(cap.max(1));
+    let depth = Arc::new(AtomicUsize::new(0));
+    metrics::set(gauge, 0.0);
+    (
+        BoundedQueue { tx, depth: depth.clone(), gauge },
+        SharedReceiver { rx: Arc::new(Mutex::new(rx)), depth, gauge },
+    )
+}
+
+impl<T> BoundedQueue<T> {
+    /// Enqueue without blocking; on refusal the item comes back inside
+    /// the typed [`PushError`].
+    pub fn push(&self, t: T) -> Result<(), PushError<T>> {
+        // Count *before* sending (rolled back on failure): a consumer's
+        // decrement always follows the matching increment, so the
+        // counter can never underflow/wrap even though the two sides
+        // race.
+        let d = self.depth.fetch_add(1, Ordering::SeqCst) + 1;
+        match self.tx.try_send(t) {
+            Ok(()) => {
+                metrics::set(self.gauge, d as f64);
+                Ok(())
+            }
+            Err(e) => {
+                self.depth.fetch_sub(1, Ordering::SeqCst);
+                Err(match e {
+                    TrySendError::Full(t) => PushError::Full(t),
+                    TrySendError::Disconnected(t) => PushError::Closed(t),
+                })
+            }
+        }
+    }
+}
+
+impl<T> SharedReceiver<T> {
+    fn took(&self, t: T) -> Option<T> {
+        let d = self.depth.fetch_sub(1, Ordering::SeqCst).saturating_sub(1);
+        metrics::set(self.gauge, d as f64);
+        Some(t)
+    }
+
+    /// Blocking dequeue; `None` once every producer is gone and the
+    /// queue has drained (the shutdown signal).
+    pub fn recv(&self) -> Option<T> {
+        let guard = self.rx.lock().unwrap_or_else(|p| p.into_inner());
+        match guard.recv() {
+            Ok(t) => self.took(t),
+            Err(_) => None,
+        }
+    }
+
+    /// Non-blocking dequeue; `None` when nothing is immediately
+    /// available (empty *or* closed — callers distinguish shutdown via
+    /// the next blocking `recv`).
+    pub fn try_recv(&self) -> Option<T> {
+        let guard = self.rx.lock().unwrap_or_else(|p| p.into_inner());
+        match guard.try_recv() {
+            Ok(t) => self.took(t),
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// Dequeue, waiting at most `timeout`; `None` on timeout or close.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<T> {
+        let guard = self.rx.lock().unwrap_or_else(|p| p.into_inner());
+        match guard.recv_timeout(timeout) {
+            Ok(t) => self.took(t),
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+}
+
+/// Exponential backoff with jitter for accept-loop failures.
+///
+/// The failure *budget* resets once `window` has elapsed since the
+/// first failure of the current burst — not on the next successful
+/// accept, which would let a slow-burning fault (one failure every few
+/// seconds, each followed by a success) evade the budget forever.
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    window: Duration,
+    budget: u32,
+    failures: u32,
+    first: Option<Instant>,
+    rng: Pcg32,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration, window: Duration, budget: u32) -> Backoff {
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5eed);
+        Backoff { base, cap, window, budget, failures: 0, first: None, rng: Pcg32::seeded(seed) }
+    }
+
+    /// The policy both accept loops use: 10 ms doubling, capped at
+    /// 250 ms (a failure sleep must not block healthy accepts for
+    /// long), budget of 32 failures per 30 s window.  The worst-case
+    /// sum of all budgeted sleeps (~7 s nominal) sits well inside the
+    /// window, so a persistently dead listener exhausts the budget
+    /// deterministically instead of racing the window reset.
+    pub fn accept_loop() -> Backoff {
+        Backoff::new(
+            Duration::from_millis(10),
+            Duration::from_millis(250),
+            Duration::from_secs(30),
+            32,
+        )
+    }
+
+    /// Record a failure.  `Some(delay)` — sleep that long and retry
+    /// (exponential in the burst length, jittered ±50%); `None` — the
+    /// budget is exhausted inside one window, surface the error.
+    pub fn on_failure(&mut self) -> Option<Duration> {
+        let now = Instant::now();
+        if let Some(t0) = self.first {
+            if now.duration_since(t0) >= self.window {
+                self.failures = 0;
+                self.first = None;
+            }
+        }
+        if self.first.is_none() {
+            self.first = Some(now);
+        }
+        self.failures += 1;
+        if self.failures >= self.budget {
+            return None;
+        }
+        let exp = self.failures.saturating_sub(1).min(16);
+        let raw = self.base.as_secs_f64() * f64::from(1u32 << exp);
+        let capped = raw.min(self.cap.as_secs_f64());
+        // jitter in [0.5, 1.5): desynchronizes competing retriers
+        let jitter = 0.5 + self.rng.uniform() as f64;
+        Some(Duration::from_secs_f64(capped * jitter))
+    }
+
+    /// Failures in the current window (for logs).
+    pub fn failures(&self) -> u32 {
+        self.failures
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shed_response_shape() {
+        let j = shed_response(25);
+        assert_eq!(j.req("ok").as_bool(), Some(false));
+        assert_eq!(j.req("error").as_str(), Some(OVERLOADED));
+        assert_eq!(j.req("retry_after_ms").as_f64(), Some(25.0));
+        // must survive the wire
+        let back = Json::parse(&j.dump()).unwrap();
+        assert_eq!(back.req("error").as_str(), Some(OVERLOADED));
+    }
+
+    #[test]
+    fn bounded_queue_sheds_when_full() {
+        let (q, rx) = bounded::<u32>(2, "test_q_depth");
+        assert!(q.push(1).is_ok());
+        assert!(q.push(2).is_ok());
+        match q.push(3) {
+            Err(PushError::Full(t)) => assert_eq!(t, 3, "full push hands the item back"),
+            _ => panic!("third push must bounce off the bound"),
+        }
+        assert_eq!(rx.recv(), Some(1));
+        assert!(q.push(4).is_ok());
+        assert_eq!(rx.try_recv(), Some(2));
+        assert_eq!(rx.recv_timeout(Duration::from_millis(50)), Some(4));
+        assert_eq!(rx.try_recv(), None, "drained queue has nothing immediate");
+        // drop the producer: drained receivers see the shutdown signal
+        drop(q);
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn backoff_grows_and_exhausts() {
+        let mut b = Backoff::new(
+            Duration::from_millis(10),
+            Duration::from_millis(80),
+            Duration::from_secs(60),
+            5,
+        );
+        let mut prev = Duration::ZERO;
+        for i in 0..4 {
+            let d = b.on_failure().unwrap_or_else(|| panic!("budget hit early at {i}"));
+            // jitter is ±50%, so each delay sits in [0.5x, 1.5x) of the
+            // exponential schedule capped at 80ms
+            let nominal = Duration::from_millis((10u64 << i).min(80));
+            assert!(d >= nominal / 2 && d < nominal * 3 / 2, "step {i}: {d:?} vs {nominal:?}");
+            assert!(d * 3 >= prev, "delays must not collapse: {d:?} after {prev:?}");
+            prev = d;
+        }
+        assert!(b.on_failure().is_none(), "5th failure exhausts the budget");
+    }
+
+    #[test]
+    fn backoff_budget_resets_on_elapsed_window() {
+        let mut b = Backoff::new(
+            Duration::from_millis(1),
+            Duration::from_millis(1),
+            Duration::from_millis(30),
+            3,
+        );
+        assert!(b.on_failure().is_some());
+        assert!(b.on_failure().is_some());
+        assert_eq!(b.failures(), 2);
+        std::thread::sleep(Duration::from_millis(40));
+        // a fresh window: the burst counter restarts instead of tripping
+        assert!(b.on_failure().is_some(), "window elapsed, budget must reset");
+        assert_eq!(b.failures(), 1);
+    }
+}

@@ -1,0 +1,257 @@
+//! Dynamic micro-batching for the infer path: coalesce requests that
+//! arrive close together into one [`crate::runtime::int::InferSession`]
+//! call over the batch-parallel integer kernels, then scatter each
+//! request's rows back to its connection.
+//!
+//! One batcher thread is the coalescing point.  It pulls the first
+//! pending job, then keeps collecting *compatible* jobs (same model
+//! key, same input signature) until one of:
+//!
+//! * the batch reaches `max_batch`,
+//! * the batch reaches the number of currently-connected clients (there
+//!   is nobody left who could contribute — waiting longer only adds
+//!   latency; this is what keeps a single sequential client at
+//!   single-request latency), or
+//! * `batch_window_ms` has elapsed since the first job.
+//!
+//! Because every row of the integer kernels accumulates independently,
+//! a coalesced execution is **bit-for-bit identical** to serving the
+//! same requests sequentially (pinned by `InferSession::infer_many`
+//! tests and the multi-client service test).
+
+use super::admission::{self, BoundedQueue, PushError, SharedReceiver};
+use super::registry::ModelRegistry;
+use crate::config::ServeCfg;
+use crate::coordinator::jobs::{self, InferReply};
+use crate::coordinator::metrics;
+use crate::runtime::EngineHandle;
+use crate::tensor::{Data, HostTensor};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One queued infer request: inputs in, exactly one reply out.
+struct InferJob {
+    key: String,
+    inputs: Vec<HostTensor>,
+    reply: mpsc::Sender<Result<InferReply>>,
+}
+
+/// Handle to the batcher thread.  Dropping it drains and joins.
+pub struct Batcher {
+    queue: Option<BoundedQueue<InferJob>>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn the batcher thread.  `active_conns` is the pool's live
+    /// connection gauge — the batcher's upper bound on how many
+    /// requests could possibly join a batch.
+    pub fn start(
+        eng: EngineHandle,
+        registry: Arc<ModelRegistry>,
+        cfg: &ServeCfg,
+        active_conns: Arc<AtomicUsize>,
+    ) -> Batcher {
+        // The same depth-tracked bounded queue the accept loop uses.
+        let (queue, rx) =
+            admission::bounded::<InferJob>(cfg.queue_bound.max(1), "serve_infer_queue_depth");
+        let window = Duration::from_secs_f64(cfg.batch_window_ms.max(0.0) / 1e3);
+        let max_batch = cfg.max_batch.max(1);
+        let thread = std::thread::Builder::new()
+            .name("serve-batcher".into())
+            .spawn(move || run(eng, registry, window, max_batch, active_conns, rx))
+            .expect("spawn batcher thread");
+        Batcher { queue: Some(queue), thread: Some(thread) }
+    }
+
+    /// Submit one infer request and block for its reply.  `None` means
+    /// the batcher queue is full — shed the request (typed overload
+    /// response) instead of stalling the connection.
+    pub fn try_submit(&self, key: &str, inputs: Vec<HostTensor>) -> Option<Result<InferReply>> {
+        let (rtx, rrx) = mpsc::channel();
+        let job = InferJob { key: key.to_string(), inputs, reply: rtx };
+        match self.queue.as_ref().expect("batcher alive").push(job) {
+            Ok(()) => {}
+            Err(PushError::Full(_)) => return None,
+            Err(PushError::Closed(_)) => return Some(Err(anyhow!("batcher is shut down"))),
+        }
+        Some(rrx.recv().unwrap_or_else(|_| Err(anyhow!("batcher dropped the reply"))))
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        // Closing the queue lets the thread drain queued jobs and exit.
+        self.queue.take();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Two jobs may share a batch iff they target the same packed model and
+/// their tensors concatenate along the batch axis: same arity, same
+/// dtype, same trailing dims.
+fn compatible(a: &InferJob, b: &InferJob) -> bool {
+    a.key == b.key
+        && a.inputs.len() == b.inputs.len()
+        && a.inputs.iter().zip(&b.inputs).all(|(x, y)| {
+            !x.shape.is_empty()
+                && x.shape.len() == y.shape.len()
+                && x.shape[1..] == y.shape[1..]
+                && matches!(
+                    (&x.data, &y.data),
+                    (Data::F32(_), Data::F32(_)) | (Data::I32(_), Data::I32(_))
+                )
+        })
+}
+
+fn run(
+    eng: EngineHandle,
+    registry: Arc<ModelRegistry>,
+    window: Duration,
+    max_batch: usize,
+    active_conns: Arc<AtomicUsize>,
+    rx: SharedReceiver<InferJob>,
+) {
+    // The most requests that could plausibly still join this batch: one
+    // per live connection (each connection has at most one in flight).
+    let target = || active_conns.load(Ordering::Relaxed).clamp(1, max_batch);
+    let mut carry: Option<InferJob> = None;
+    loop {
+        let first = match carry.take() {
+            Some(j) => j,
+            None => match rx.recv() {
+                Some(j) => j,
+                None => return, // all submitters gone: shutdown
+            },
+        };
+        let mut batch = vec![first];
+        if max_batch > 1 && !window.is_zero() {
+            let deadline = Instant::now() + window;
+            'collect: while batch.len() < target() {
+                let j = match rx.try_recv() {
+                    Some(j) => j,
+                    None => {
+                        let left = deadline.saturating_duration_since(Instant::now());
+                        if left.is_zero() {
+                            break;
+                        }
+                        match rx.recv_timeout(left) {
+                            Some(j) => j,
+                            None => break, // window over (or closing)
+                        }
+                    }
+                };
+                if compatible(&batch[0], &j) {
+                    batch.push(j);
+                } else {
+                    // incompatible: flush what we have, lead the next batch
+                    carry = Some(j);
+                    break 'collect;
+                }
+            }
+        }
+        execute(&eng, &registry, batch);
+    }
+}
+
+/// One panic-contained coalesced execution (the batcher thread must
+/// outlive any single bad request).
+fn run_parts(
+    eng: &EngineHandle,
+    registry: &ModelRegistry,
+    key: &str,
+    parts: &[Vec<HostTensor>],
+) -> Result<Vec<InferReply>> {
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        jobs::infer_batched(eng, registry, key, parts)
+    }));
+    match caught {
+        Ok(r) => r,
+        Err(p) => Err(anyhow!(
+            "internal panic: {}",
+            crate::coordinator::service::panic_text(p.as_ref())
+        )),
+    }
+}
+
+fn one_reply(outcome: Result<Vec<InferReply>>) -> Result<InferReply> {
+    outcome.and_then(|mut rs| rs.pop().ok_or_else(|| anyhow!("empty batch reply")))
+}
+
+/// Run one coalesced batch and scatter per-request replies.
+///
+/// If the *coalesced* execution fails, the batch is re-run one part at
+/// a time: a malformed request (ragged NCF pair, out-of-range id) must
+/// fail only its own connection, never the innocent requests that
+/// happened to share its window — otherwise batching would break the
+/// "identical to sequential serving" contract on the error path too.
+fn execute(eng: &EngineHandle, registry: &ModelRegistry, jobs: Vec<InferJob>) {
+    let key = jobs[0].key.clone();
+    let mut parts = Vec::with_capacity(jobs.len());
+    let mut replies = Vec::with_capacity(jobs.len());
+    for j in jobs {
+        parts.push(j.inputs);
+        replies.push(j.reply);
+    }
+    metrics::record_hist("serve_batch_size", parts.len() as f64);
+    metrics::add("serve_batched_requests", parts.len() as f64);
+    metrics::inc("serve_batches");
+    match run_parts(eng, registry, &key, &parts) {
+        Ok(rs) if rs.len() == replies.len() => {
+            for (r, tx) in rs.into_iter().zip(replies) {
+                let _ = tx.send(Ok(r));
+            }
+        }
+        outcome => {
+            if replies.len() == 1 {
+                let tx = replies.into_iter().next().expect("one reply");
+                let _ = tx.send(one_reply(outcome));
+                return;
+            }
+            // Coalesced failure: isolate it.  Each part runs alone and
+            // every connection gets exactly its own outcome.
+            metrics::inc("serve_batch_retries");
+            for (part, tx) in parts.into_iter().zip(replies) {
+                let solo = run_parts(eng, registry, &key, std::slice::from_ref(&part));
+                let _ = tx.send(one_reply(solo));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_model_is_a_structured_error() {
+        let eng = EngineHandle::cpu().unwrap();
+        let registry = Arc::new(ModelRegistry::new(2));
+        let active = Arc::new(AtomicUsize::new(1));
+        let b = Batcher::start(eng, registry, &ServeCfg::default(), active);
+        let x = HostTensor::zeros(vec![1, 64]);
+        let r = b.try_submit("nope", vec![x]).expect("queue has room");
+        let e = r.expect_err("missing model must error");
+        assert!(format!("{e:#}").contains("no packed model"), "{e:#}");
+    }
+
+    #[test]
+    fn compatible_requires_key_arity_shape_kind() {
+        let (tx, _rx) = mpsc::channel();
+        let job = |key: &str, t: HostTensor| InferJob {
+            key: key.into(),
+            inputs: vec![t],
+            reply: tx.clone(),
+        };
+        let a = job("k", HostTensor::zeros(vec![1, 64]));
+        assert!(compatible(&a, &job("k", HostTensor::zeros(vec![4, 64]))));
+        assert!(!compatible(&a, &job("other", HostTensor::zeros(vec![1, 64]))));
+        assert!(!compatible(&a, &job("k", HostTensor::zeros(vec![1, 32]))));
+        assert!(!compatible(&a, &job("k", HostTensor::i32(vec![1, 64], vec![0; 64]))));
+    }
+}

@@ -1,0 +1,40 @@
+//! The concurrent serving subsystem: worker pool, dynamic
+//! micro-batching, shared model registry, admission control.
+//!
+//! `coordinator::service` is the *blocking* reference server — one
+//! connection at a time, which is exactly right for minutes-long
+//! quantization jobs and for tests that want strictly sequential
+//! semantics.  This module layers the production face on top of it,
+//! speaking the identical JSON-lines protocol through the same response
+//! builders:
+//!
+//! * [`pool`] — [`pool::PoolServer`]: N worker threads serving
+//!   connections concurrently.  Read-only traffic (`infer`, `models`,
+//!   `metrics`) runs in parallel; exclusive jobs (`quantize`, `pack`)
+//!   serialize on the write half of an `RwLock<Runner>`, preserving the
+//!   sequential engine-ownership semantics.
+//! * [`registry`] — [`registry::ModelRegistry`]: an `Arc`-shared LRU of
+//!   packed [`crate::runtime::int::QuantizedModel`]s with capacity,
+//!   preload, and hit/miss/eviction counters, replacing the Runner's
+//!   private MRU cache.
+//! * [`batcher`] — [`batcher::Batcher`]: coalesces infer requests
+//!   arriving within `batch_window_ms` (or up to `max_batch` / the live
+//!   connection count) into one batched integer-kernel execution,
+//!   bit-for-bit identical to serving them sequentially.
+//! * [`admission`] — bounded queues with a typed
+//!   `{"error":"overloaded","retry_after_ms":..}` shed response,
+//!   graceful drain-and-shutdown, and the shared accept-retry
+//!   exponential backoff.
+//!
+//! Knobs live in [`crate::config::ServeCfg`] (`-s serve.*` overrides,
+//! `repro serve --workers/--batch-window-ms/...`); load behaviour is
+//! tracked by `benches/perf_serve.rs` (`BENCH_serve.json`).
+
+pub mod admission;
+pub mod batcher;
+pub mod pool;
+pub mod registry;
+
+pub use batcher::Batcher;
+pub use pool::{PoolHandle, PoolServer};
+pub use registry::{ModelRegistry, RegistryStats};

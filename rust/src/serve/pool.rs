@@ -1,0 +1,344 @@
+//! The concurrent server: a worker pool over the blocking JSON-lines
+//! protocol of `coordinator::service`, speaking the exact same wire
+//! format (the response builders are shared, so the two paths cannot
+//! drift).
+//!
+//! Concurrency model:
+//!
+//! * The accept loop (caller's thread) admits connections into a
+//!   bounded queue ([`super::admission`]); a full queue sheds the
+//!   connection with the typed `overloaded` response instead of letting
+//!   it stall unseen.  Accept failures retry under exponential backoff
+//!   with jitter.
+//! * `workers` threads each own one connection at a time, so `workers`
+//!   is also the ceiling on concurrently-served (persistent)
+//!   connections.
+//! * **Read path** (`ping` / `models` / `metrics` / `infer`) never
+//!   touches the Runner lock: `infer` goes through the shared
+//!   [`ModelRegistry`] + micro-[`Batcher`], `models` reads the engine
+//!   manifest directly.  Note that while connections (parse, I/O,
+//!   waiting) are handled in parallel across workers, infer *compute*
+//!   executes on the single batcher thread — by design, since the
+//!   integer kernels are already batch-parallel across cores and one
+//!   coalesced execution saturates the machine.  Per-model batcher
+//!   lanes are a ROADMAP follow-on.
+//! * **Exclusive path** (`quantize` / `pack`) takes the write half of
+//!   the `RwLock<Runner>`: those jobs own the engine for seconds to
+//!   minutes and keep exactly the sequential semantics of the blocking
+//!   service, while read traffic keeps flowing around them.
+//! * Shutdown (`{"cmd":"shutdown"}` or [`PoolHandle::shutdown`]) stops
+//!   accepting, drains admitted connections, joins the workers.
+
+use super::admission::{self, Backoff};
+use super::batcher::Batcher;
+use super::registry::ModelRegistry;
+use crate::config::{ExperimentConfig, ServeCfg};
+use crate::coordinator::jobs::Runner;
+use crate::coordinator::metrics;
+use crate::coordinator::service;
+use crate::runtime::int::PackOpts;
+use crate::runtime::EngineHandle;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock, RwLockWriteGuard};
+
+/// Shared state every worker holds: the exclusive Runner behind an
+/// `RwLock`, the read path's registry + batcher, and the shutdown flag.
+struct Shared {
+    eng: EngineHandle,
+    runner: RwLock<Runner>,
+    batcher: Batcher,
+    active_conns: Arc<AtomicUsize>,
+    retry_after_ms: u64,
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl Shared {
+    /// Write lock with poison recovery: a panicking job already became
+    /// a structured error response, and the CPU backend recovers its
+    /// own state — the Runner stays usable.
+    fn write_runner(&self) -> RwLockWriteGuard<'_, Runner> {
+        self.runner.write().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// What to tell a shed client.  When an exclusive job (quantize /
+    /// pack) holds the Runner, the stall is seconds-to-minutes — a
+    /// batch-window-sized hint would invite a retry storm; tell clients
+    /// to back off much longer instead.
+    fn retry_hint_ms(&self) -> u64 {
+        let exclusive_busy =
+            matches!(self.runner.try_write(), Err(std::sync::TryLockError::WouldBlock));
+        if exclusive_busy {
+            EXCLUSIVE_RETRY_MS
+        } else {
+            self.retry_after_ms
+        }
+    }
+}
+
+/// Shed hint while an exclusive job owns the engine.
+const EXCLUSIVE_RETRY_MS: u64 = 1000;
+
+/// Handle for stopping a running [`PoolServer`] from another thread.
+#[derive(Clone)]
+pub struct PoolHandle {
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl PoolHandle {
+    /// Request graceful shutdown: stop accepting, drain, join.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the accept loop if it is blocked in accept().
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+pub struct PoolServer {
+    listener: TcpListener,
+    pub addr: SocketAddr,
+    shared: Arc<Shared>,
+    registry: Arc<ModelRegistry>,
+    cfg: ServeCfg,
+    stop: Arc<AtomicBool>,
+}
+
+impl PoolServer {
+    /// Bind to `addr` (port 0 for ephemeral) and assemble the serving
+    /// state: registry, Runner, micro-batcher.  Nothing runs until
+    /// [`PoolServer::serve`].
+    pub fn bind(addr: &str, eng: EngineHandle, cfg: ServeCfg) -> Result<PoolServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let addr = listener.local_addr()?;
+        let registry = Arc::new(ModelRegistry::new(cfg.registry_cap));
+        let runner = Runner::with_registry(eng.clone(), registry.clone());
+        let active_conns = Arc::new(AtomicUsize::new(0));
+        let batcher = Batcher::start(eng.clone(), registry.clone(), &cfg, active_conns.clone());
+        let stop = Arc::new(AtomicBool::new(false));
+        let retry_after_ms = (cfg.batch_window_ms.max(0.0) * 2.0) as u64 + 10;
+        let shared = Arc::new(Shared {
+            eng,
+            runner: RwLock::new(runner),
+            batcher,
+            active_conns,
+            retry_after_ms,
+            stop: stop.clone(),
+            addr,
+        });
+        log::info!(
+            "pool server on {addr}: {} workers, batch window {} ms, max batch {}, queue {}, registry cap {}",
+            cfg.workers.max(1),
+            cfg.batch_window_ms,
+            cfg.max_batch,
+            cfg.queue_bound,
+            cfg.registry_cap
+        );
+        Ok(PoolServer { listener, addr, shared, registry, cfg, stop })
+    }
+
+    /// The registry this server reads from (shared with its Runner).
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        self.registry.clone()
+    }
+
+    /// Warm the registry before taking traffic: run a full `pack` job
+    /// (train → calibrate → quantize) per config on the exclusive path.
+    /// Returns the registry keys in config order.
+    pub fn preload(&self, cfgs: &[ExperimentConfig]) -> Result<Vec<String>> {
+        let mut keys = Vec::with_capacity(cfgs.len());
+        for cfg in cfgs {
+            let mut runner = self.shared.write_runner();
+            let (sum, _qm) = runner.pack(cfg, &PackOpts::default())?;
+            log::info!("preloaded {}", sum.key);
+            keys.push(sum.key);
+        }
+        Ok(keys)
+    }
+
+    /// A handle that can stop this server once [`PoolServer::serve`] is
+    /// running on another thread.
+    pub fn shutdown_handle(&self) -> PoolHandle {
+        PoolHandle { stop: self.stop.clone(), addr: self.addr }
+    }
+
+    /// Serve until `max_conns` connections have been accepted
+    /// (`usize::MAX` for forever), the shutdown flag is raised, or the
+    /// accept-failure budget is exhausted.  All three exits drain the
+    /// admitted queue and join the workers before returning.
+    pub fn serve(self, max_conns: usize) -> Result<()> {
+        let workers = self.cfg.workers.max(1);
+        let (queue, srx) =
+            admission::bounded::<TcpStream>(self.cfg.queue_bound, "serve_queue_depth");
+        let mut pool = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let shared = self.shared.clone();
+            let srx = srx.clone();
+            pool.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(shared, srx))
+                    .context("spawning worker")?,
+            );
+        }
+        let mut backoff = Backoff::accept_loop();
+        let mut accepted = 0usize;
+        let mut result = Ok(());
+        for stream in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(e) => match backoff.on_failure() {
+                    Some(delay) => {
+                        log::warn!(
+                            "accept failed ({} in window): {e}; retrying in {delay:?}",
+                            backoff.failures()
+                        );
+                        std::thread::sleep(delay);
+                        continue;
+                    }
+                    None => {
+                        result = Err(e).context("accept failing persistently");
+                        break;
+                    }
+                },
+            };
+            accepted += 1;
+            metrics::inc("serve_conns");
+            if let Err(stream) = queue.push(stream) {
+                shed(stream, self.shared.retry_hint_ms());
+            }
+            if accepted >= max_conns {
+                break;
+            }
+        }
+        // Graceful drain: closing the queue lets every worker finish the
+        // connections already admitted, then exit.
+        drop(queue);
+        for w in pool {
+            let _ = w.join();
+        }
+        result
+    }
+}
+
+/// Overload path: typed response, then close.  The client learns *why*
+/// and *when to retry* instead of seeing a silent hang or reset.
+fn shed(mut stream: TcpStream, retry_after_ms: u64) {
+    metrics::inc("serve_shed");
+    let resp = admission::shed_response(retry_after_ms).dump();
+    let _ = stream
+        .write_all(resp.as_bytes())
+        .and_then(|_| stream.write_all(b"\n"))
+        .and_then(|_| stream.flush());
+}
+
+fn worker_loop(shared: Arc<Shared>, rx: admission::SharedReceiver<TcpStream>) {
+    while let Some(stream) = rx.recv() {
+        shared.active_conns.fetch_add(1, Ordering::SeqCst);
+        handle_conn(&shared, stream);
+        shared.active_conns.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Serve one connection to EOF.  I/O errors end the connection (logged),
+/// never the worker.
+fn handle_conn(shared: &Shared, stream: TcpStream) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "<unknown>".into());
+    log::info!("conn from {peer}");
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => {
+            log::warn!("conn {peer}: clone failed: {e}");
+            return;
+        }
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        metrics::inc("service_requests");
+        let resp = dispatch(shared, &line, &mut writer);
+        let ok = writer
+            .write_all(resp.dump().as_bytes())
+            .and_then(|_| writer.write_all(b"\n"))
+            .and_then(|_| writer.flush());
+        if let Err(e) = ok {
+            log::warn!("conn {peer}: write failed: {e}");
+            break;
+        }
+    }
+}
+
+/// Same contract as the blocking service: every failure mode — parse
+/// error, job error, a panic unwinding out of a kernel — becomes a
+/// structured `{"ok":false}` response.
+fn dispatch(shared: &Shared, line: &str, writer: &mut dyn Write) -> Json {
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        dispatch_inner(shared, line, writer)
+    }));
+    match caught {
+        Ok(Ok(j)) => j,
+        Ok(Err(e)) => service::error_json(format!("{e:#}")),
+        Err(p) => {
+            service::error_json(format!("internal panic: {}", service::panic_text(p.as_ref())))
+        }
+    }
+}
+
+fn dispatch_inner(shared: &Shared, line: &str, writer: &mut dyn Write) -> Result<Json> {
+    let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
+    let cmd = req.get("cmd").and_then(|c| c.as_str()).unwrap_or("");
+    match cmd {
+        "ping" => Ok(service::ping_response()),
+        "models" => Ok(service::models_response(&shared.eng)),
+        "metrics" => Ok(service::metrics_response()),
+        "infer" => {
+            let key = service::infer_key(&req)?;
+            let inputs = service::parse_infer_inputs(&req)?;
+            match shared.batcher.try_submit(key, inputs) {
+                // Batcher queue full: typed shed on the request, the
+                // connection itself stays up.
+                None => {
+                    metrics::inc("serve_shed");
+                    Ok(admission::shed_response(shared.retry_hint_ms()))
+                }
+                Some(reply) => Ok(service::infer_response(&reply?)),
+            }
+        }
+        "quantize" => {
+            let cfg = ExperimentConfig::from_json(&req)?;
+            let mut runner = shared.write_runner();
+            let res = if service::stream_flag(&req) {
+                let mut obs = service::StreamObserver::new(writer);
+                runner.run_observed(&cfg, &mut obs)?
+            } else {
+                runner.run(&cfg)?
+            };
+            Ok(service::quantize_response(&cfg, &res))
+        }
+        "pack" => {
+            let cfg = ExperimentConfig::from_json(&req)?;
+            let mut runner = shared.write_runner();
+            let (sum, _qm) = runner.pack(&cfg, &service::pack_opts_from(&req))?;
+            Ok(service::pack_response(&sum))
+        }
+        "shutdown" => {
+            shared.stop.store(true, Ordering::SeqCst);
+            let _ = TcpStream::connect(shared.addr); // wake the accept loop
+            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("stopping", Json::Bool(true))]))
+        }
+        other => anyhow::bail!("unknown cmd '{other}'"),
+    }
+}

@@ -1,0 +1,207 @@
+//! Shared packed-model registry: the serving subsystem's LRU of
+//! [`QuantizedModel`] artifacts, replacing the Runner's private
+//! single-owner MRU cache.
+//!
+//! The registry is `Arc`-shared between the [`crate::coordinator::jobs::
+//! Runner`] (which fills it from `pack` jobs) and the concurrent read
+//! path (pool workers + micro-batcher, which only `get`).  Internally an
+//! `RwLock` guards the LRU order; lookups take the write lock too (a
+//! hit refreshes recency), but the critical section is a few pointer
+//! moves — microseconds against the milliseconds of an infer call.
+//!
+//! The `registry_size` / `registry_hits` / `registry_misses` /
+//! `registry_evictions` gauges are kept current (each op publishes the
+//! counters it changed, after releasing the lock), so the
+//! `{"cmd":"metrics"}` endpoint always reflects cache behaviour.
+
+use crate::coordinator::metrics;
+use crate::runtime::int::QuantizedModel;
+use std::sync::{Arc, RwLock};
+
+/// Counter snapshot (also mirrored into the metrics registry).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RegistryStats {
+    pub size: usize,
+    pub capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+struct Inner {
+    cap: usize,
+    /// front = most recently used
+    entries: Vec<(String, Arc<QuantizedModel>)>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Thread-safe LRU of packed models, keyed by the pack key
+/// (`model:wNaM:METHOD`) with bare-model-name fallback.
+pub struct ModelRegistry {
+    inner: RwLock<Inner>,
+}
+
+impl ModelRegistry {
+    /// An empty registry holding at most `cap` models (min 1).
+    pub fn new(cap: usize) -> ModelRegistry {
+        let inner =
+            Inner { cap: cap.max(1), entries: Vec::new(), hits: 0, misses: 0, evictions: 0 };
+        ModelRegistry { inner: RwLock::new(inner) }
+    }
+
+    /// Recover the guard even if a panicking holder poisoned the lock —
+    /// the registry's state is a plain LRU list, always consistent.
+    fn write(&self) -> std::sync::RwLockWriteGuard<'_, Inner> {
+        self.inner.write().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn read(&self) -> std::sync::RwLockReadGuard<'_, Inner> {
+        self.inner.read().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Look up by exact key or bare model name (most recently used
+    /// wins), refreshing the entry's recency on a hit.  This is the
+    /// serving hot path: exactly one gauge update per call, issued
+    /// after the registry lock is released.
+    pub fn get(&self, key: &str) -> Option<Arc<QuantizedModel>> {
+        let mut m = self.write();
+        let pos = m.entries.iter().position(|(k, qm)| k == key || qm.model == key);
+        let (out, gauge, count) = match pos {
+            Some(p) => {
+                let entry = m.entries.remove(p);
+                let qm = entry.1.clone();
+                m.entries.insert(0, entry);
+                m.hits += 1;
+                (Some(qm), "registry_hits", m.hits)
+            }
+            None => {
+                m.misses += 1;
+                (None, "registry_misses", m.misses)
+            }
+        };
+        drop(m);
+        metrics::set(gauge, count as f64);
+        out
+    }
+
+    /// Insert (or refresh) `key`, evicting least-recently-used entries
+    /// beyond capacity.  Cold path (one `pack` job per call): the full
+    /// gauge set is republished, outside the lock.
+    pub fn put(&self, key: String, qm: Arc<QuantizedModel>) {
+        let mut m = self.write();
+        m.entries.retain(|(k, _)| *k != key);
+        m.entries.insert(0, (key, qm));
+        while m.entries.len() > m.cap {
+            let (evicted, _) = m.entries.pop().expect("non-empty");
+            m.evictions += 1;
+            log::info!("registry evicted {evicted}");
+        }
+        let (size, evictions) = (m.entries.len(), m.evictions);
+        drop(m);
+        metrics::set("registry_size", size as f64);
+        metrics::set("registry_evictions", evictions as f64);
+    }
+
+    /// Whether `key` (exact or bare model name) is resident, without
+    /// touching recency or the hit/miss counters.
+    pub fn contains(&self, key: &str) -> bool {
+        self.read().entries.iter().any(|(k, qm)| k == key || qm.model == key)
+    }
+
+    /// Resident keys, most recently used first.
+    pub fn keys(&self) -> Vec<String> {
+        self.read().entries.iter().map(|(k, _)| k.clone()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.read().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.read().entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.read().cap
+    }
+
+    /// Counter snapshot for tests and the service response.
+    pub fn stats(&self) -> RegistryStats {
+        let m = self.read();
+        RegistryStats {
+            size: m.entries.len(),
+            capacity: m.cap,
+            hits: m.hits,
+            misses: m.misses,
+            evictions: m.evictions,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::QuantParams;
+
+    fn dummy(model: &str) -> Arc<QuantizedModel> {
+        Arc::new(QuantizedModel {
+            model: model.to_string(),
+            quant: QuantParams::passthrough(0),
+            active_w: Vec::new(),
+            active_a: Vec::new(),
+            params: Vec::new(),
+            layers: Vec::new(),
+        })
+    }
+
+    #[test]
+    fn lru_insert_get_evict() {
+        let r = ModelRegistry::new(2);
+        assert!(r.is_empty());
+        r.put("a:w8a8:MMSE".into(), dummy("a"));
+        r.put("b:w8a8:MMSE".into(), dummy("b"));
+        assert_eq!(r.len(), 2);
+        // touching `a` makes `b` the LRU victim
+        assert!(r.get("a:w8a8:MMSE").is_some());
+        r.put("c:w8a8:MMSE".into(), dummy("c"));
+        assert_eq!(r.len(), 2);
+        assert!(r.contains("a:w8a8:MMSE"));
+        assert!(!r.contains("b:w8a8:MMSE"), "b must have been evicted: {:?}", r.keys());
+        let s = r.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.capacity, 2);
+    }
+
+    #[test]
+    fn bare_model_name_resolves() {
+        let r = ModelRegistry::new(4);
+        r.put("mlp3:w8a8:LAPQ".into(), dummy("mlp3"));
+        assert!(r.get("mlp3").is_some());
+        assert!(r.get("cnn6").is_none());
+        let s = r.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn put_refreshes_existing_key() {
+        let r = ModelRegistry::new(2);
+        r.put("a".into(), dummy("a"));
+        r.put("b".into(), dummy("b"));
+        r.put("a".into(), dummy("a2"));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.keys(), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(r.get("a").unwrap().model, "a2");
+        assert_eq!(r.stats().evictions, 0);
+    }
+
+    #[test]
+    fn capacity_floor_is_one() {
+        let r = ModelRegistry::new(0);
+        assert_eq!(r.capacity(), 1);
+        r.put("a".into(), dummy("a"));
+        r.put("b".into(), dummy("b"));
+        assert_eq!(r.len(), 1);
+    }
+}

@@ -1,13 +1,20 @@
 //! Integration: the TCP job service end-to-end — bind, serve, submit
 //! quantization / pack / infer jobs over the wire, read the structured
 //! responses, and verify that malformed input never kills a connection.
+//! The concurrent pool server (`lapq::serve`) is exercised against the
+//! blocking service as its bit-for-bit reference, plus the overload
+//! shed path.
 
+use lapq::config::{BitSpec, ExperimentConfig, Method, ServeCfg};
 use lapq::coordinator::jobs::Runner;
 use lapq::coordinator::service::{request, Service};
 use lapq::runtime::EngineHandle;
+use lapq::serve::PoolServer;
 use lapq::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
 
 #[test]
 fn service_roundtrip() {
@@ -255,4 +262,164 @@ fn pack_and_infer_over_the_wire() {
     assert_eq!(result.req("predictions").as_arr().unwrap().len(), 2);
 
     server.join().unwrap();
+}
+
+fn fast_pack_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        model: "mlp3".into(),
+        train_steps: 40,
+        lr: 0.1,
+        val_size: 512,
+        bits: BitSpec::new(8, 8),
+        method: Method::Mmse,
+        ..Default::default()
+    }
+}
+
+fn infer_request(key: &str, row: &[f32]) -> Json {
+    Json::obj(vec![
+        ("cmd", Json::Str("infer".into())),
+        ("key", Json::Str(key.into())),
+        ("x", Json::Arr(vec![Json::arr_f32(row)])),
+    ])
+}
+
+/// The concurrency contract: ≥8 simultaneous connections issuing infer
+/// against a preloaded model all succeed, and every response is
+/// **bit-for-bit identical** to the same request served by the blocking
+/// sequential service over the same packed artifact.
+#[test]
+fn concurrent_infer_matches_sequential_bit_for_bit() {
+    let eng = EngineHandle::start_default().expect("engine boots");
+    let scfg = ServeCfg {
+        workers: 8,
+        batch_window_ms: 2.0,
+        max_batch: 16,
+        queue_bound: 64,
+        registry_cap: 4,
+    };
+    let server = PoolServer::bind("127.0.0.1:0", eng.clone(), scfg).unwrap();
+    let key = server.preload(std::slice::from_ref(&fast_pack_cfg())).unwrap().remove(0);
+    let registry = server.registry();
+    let addr = server.addr;
+    let pool = std::thread::spawn(move || server.serve(8).unwrap());
+
+    // Sequential reference: the blocking Service over a Runner sharing
+    // the same engine and the same packed artifact.
+    let seq = Service::bind("127.0.0.1:0").unwrap();
+    let seq_addr = seq.addr;
+    let seq_thread = std::thread::spawn(move || {
+        let mut runner = Runner::with_registry(eng, registry);
+        seq.serve(&mut runner, 8).unwrap();
+    });
+
+    let reqs: Vec<Json> = (0..8)
+        .map(|i: usize| {
+            let row: Vec<f32> = (0..64).map(|j| ((i * 17 + j) % 9) as f32 * 0.1 - 0.4).collect();
+            infer_request(&key, &row)
+        })
+        .collect();
+
+    // Ground truth, one request at a time through the blocking path.
+    let expected: Vec<String> = reqs
+        .iter()
+        .map(|r| {
+            let resp = request(&seq_addr, r).unwrap();
+            assert_eq!(resp.req("ok").as_bool(), Some(true), "{resp:?}");
+            resp.req("result").req("logits").dump()
+        })
+        .collect();
+    seq_thread.join().unwrap();
+
+    // 8 simultaneous clients against the pool (barrier-released so the
+    // micro-batcher actually sees them together).
+    let barrier = Arc::new(Barrier::new(reqs.len()));
+    let mut handles = Vec::new();
+    for (i, r) in reqs.iter().enumerate() {
+        let r = r.clone();
+        let b = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            b.wait();
+            let resp = request(&addr, &r).unwrap();
+            assert_eq!(resp.req("ok").as_bool(), Some(true), "client {i}: {resp:?}");
+            (i, resp.req("result").req("logits").dump())
+        }));
+    }
+    for h in handles {
+        let (i, logits) = h.join().unwrap();
+        // f64 text is shortest-roundtrip, so identical text <=> identical bits
+        assert_eq!(logits, expected[i], "client {i}: batched != sequential");
+    }
+    pool.join().unwrap();
+}
+
+/// Admission control: with the single worker parked on a connection and
+/// the queue bound at 1, a third connection is shed with the typed
+/// `{"ok":false,"error":"overloaded","retry_after_ms":..}` response —
+/// while the admitted connections still complete (graceful drain).
+#[test]
+fn overload_sheds_with_typed_response() {
+    let eng = EngineHandle::start_default().expect("engine boots");
+    let scfg = ServeCfg {
+        workers: 1,
+        batch_window_ms: 0.0,
+        max_batch: 1,
+        queue_bound: 1,
+        registry_cap: 4,
+    };
+    let server = PoolServer::bind("127.0.0.1:0", eng, scfg).unwrap();
+    let addr = server.addr;
+    let pool = std::thread::spawn(move || server.serve(3).unwrap());
+
+    // Generous read timeouts so a missed expectation fails the test
+    // cleanly instead of deadlocking the CI job on a blocked read.
+    let timeout = Some(Duration::from_secs(120));
+
+    // A parks the single worker deterministically: a partial request
+    // line (no newline) keeps the worker blocked in read_line until the
+    // test releases it — no dependence on how fast a real job runs.
+    let a = TcpStream::connect(addr).unwrap();
+    a.set_read_timeout(timeout).unwrap();
+    let mut aw = a.try_clone().unwrap();
+    aw.write_all(b"{\"cmd\":\"ping\"}").unwrap(); // note: no '\n'
+    aw.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(300)); // worker picks A up
+
+    // B fills the single queue slot...
+    let b = TcpStream::connect(addr).unwrap();
+    b.set_read_timeout(timeout).unwrap();
+    std::thread::sleep(Duration::from_millis(150));
+
+    // ...so C bounces off the bound with the typed shed response.
+    let c = TcpStream::connect(addr).unwrap();
+    c.set_read_timeout(timeout).unwrap();
+    let mut cr = BufReader::new(c);
+    let mut line = String::new();
+    cr.read_line(&mut line).unwrap();
+    let shed = Json::parse(&line).expect("shed response is JSON");
+    assert_eq!(shed.req("ok").as_bool(), Some(false), "{shed:?}");
+    assert_eq!(shed.req("error").as_str(), Some("overloaded"), "{shed:?}");
+    assert!(shed.req("retry_after_ms").as_f64().unwrap() >= 0.0, "{shed:?}");
+
+    // Release A: complete its request line; it still gets a real reply...
+    aw.write_all(b"\n").unwrap();
+    aw.flush().unwrap();
+    let mut ar = BufReader::new(a);
+    let mut aline = String::new();
+    ar.read_line(&mut aline).unwrap();
+    assert_eq!(Json::parse(&aline).unwrap().req("pong").as_bool(), Some(true));
+    drop(ar);
+    drop(aw);
+
+    // ...and the queued B is served after A closes, not dropped.
+    let mut bw = b.try_clone().unwrap();
+    bw.write_all(b"{\"cmd\":\"ping\"}\n").unwrap();
+    bw.flush().unwrap();
+    let mut br = BufReader::new(b);
+    let mut bline = String::new();
+    br.read_line(&mut bline).unwrap();
+    assert_eq!(Json::parse(&bline).unwrap().req("pong").as_bool(), Some(true));
+    drop(br);
+    drop(bw);
+    pool.join().unwrap();
 }
