@@ -171,6 +171,11 @@ impl Default for LapqCfg {
     }
 }
 
+/// Default packed-model registry (LRU) capacity — the single default
+/// shared by `Runner::new` and [`ServeCfg`], defined here in the leaf
+/// module both can depend on.
+pub const DEFAULT_REGISTRY_CAP: usize = 4;
+
 /// Concurrent-serving knobs (`rust/src/serve/`): worker pool width,
 /// micro-batching, admission bound, registry capacity.  Part of the
 /// lossless config surface so a deployment is reproducible from its
@@ -196,7 +201,7 @@ impl Default for ServeCfg {
             batch_window_ms: 2.0,
             max_batch: 16,
             queue_bound: 64,
-            registry_cap: 4,
+            registry_cap: DEFAULT_REGISTRY_CAP,
         }
     }
 }

@@ -41,8 +41,9 @@ pub struct JobResult {
     pub seconds: f64,
 }
 
-/// Default capacity of the packed-model registry.
-pub const PACKED_CACHE_CAP: usize = 4;
+/// Default capacity of the packed-model registry (one shared default
+/// with `ServeCfg`, owned by the config layer).
+pub const PACKED_CACHE_CAP: usize = crate::config::DEFAULT_REGISTRY_CAP;
 
 /// What a `pack` job reports back (the artifact itself lands in the
 /// Runner's cache and optionally on disk).
@@ -69,6 +70,11 @@ pub struct InferReply {
     pub logits: Arr,
     pub rows: usize,
     pub int_layers: usize,
+    /// Wall time of the *execution* that produced this reply.  For a
+    /// request coalesced by the micro-batcher this is the whole batch's
+    /// execution time (every batch-mate reports the same value), not the
+    /// marginal cost of this request alone — only the timing differs
+    /// from sequential serving; the logits are bit-for-bit identical.
     pub seconds: f64,
 }
 
@@ -303,13 +309,13 @@ impl Runner {
 
     /// Look up a packed model by exact key or bare model name (most
     /// recently used wins), refreshing its LRU position.
-    pub fn packed_get(&mut self, key: &str) -> Option<Arc<QuantizedModel>> {
+    pub fn packed_get(&self, key: &str) -> Option<Arc<QuantizedModel>> {
         self.registry.get(key)
     }
 
     /// Serve one batched prediction from the registry with the integer
     /// engine.  `inputs` is `(x,)` for vision, `(users, items)` for NCF.
-    pub fn infer(&mut self, key: &str, inputs: &[HostTensor]) -> Result<InferReply> {
+    pub fn infer(&self, key: &str, inputs: &[HostTensor]) -> Result<InferReply> {
         infer_shared(&self.eng, &self.registry, key, inputs)
     }
 }
@@ -357,7 +363,8 @@ pub fn infer_shared(
 /// `parts[i]` is request `i`'s input tuple; the reply vector maps back
 /// one-to-one.  This is what the micro-batcher calls; row-independent
 /// kernels make the result bit-for-bit identical to serving each part
-/// separately.
+/// separately.  Every reply carries the same `seconds` — the coalesced
+/// execution's wall time — since the parts are not timed individually.
 pub fn infer_batched(
     eng: &EngineHandle,
     registry: &ModelRegistry,

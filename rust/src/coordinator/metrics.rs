@@ -28,6 +28,11 @@ impl Ring {
     }
 
     fn push(&mut self, v: f32) {
+        // Non-finite observations would make any percentile meaningless;
+        // drop them here so the reservoir only ever holds sortable values.
+        if !v.is_finite() {
+            return;
+        }
         if self.buf.len() < HIST_CAP {
             self.buf.push(v);
         } else {
@@ -46,12 +51,19 @@ struct Store {
 static REGISTRY: Mutex<Option<Store>> = Mutex::new(None);
 
 fn with<R>(f: impl FnOnce(&mut Store) -> R) -> R {
-    let mut guard = REGISTRY.lock().unwrap();
+    // Recover from poisoning: a panic elsewhere must not take down every
+    // subsequent metrics call process-wide.
+    let mut guard = REGISTRY.lock().unwrap_or_else(|p| p.into_inner());
     f(guard.get_or_insert_with(|| Store { counters: BTreeMap::new(), hists: BTreeMap::new() }))
 }
 
-/// Add `v` to counter `name`.
+/// Add `v` to counter `name`.  Non-finite `v` is dropped: `+=` would
+/// turn the counter NaN *permanently* (NaN + x == NaN), wrecking every
+/// future dump for one bad sample.
 pub fn add(name: &str, v: f64) {
+    if !v.is_finite() {
+        return;
+    }
     with(|m| *m.counters.entry(name.to_string()).or_insert(0.0) += v);
 }
 
@@ -82,7 +94,7 @@ pub fn record_hist(name: &str, v: f64) {
 /// global mutex for three sorts per histogram.
 fn p50_p95_p99(buf: &[f32]) -> (f64, f64, f64) {
     let mut v = buf.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f32::total_cmp);
     let at = |p: f32| {
         let rank = ((p / 100.0) * (v.len() - 1) as f32).round() as usize;
         v[rank.min(v.len() - 1)] as f64
@@ -108,6 +120,12 @@ pub fn hist_percentiles(name: &str) -> Option<(f64, f64, f64)> {
 /// `dump()` exposes mean latency, throughput (`items / seconds`) *and*
 /// p50/p95/p99 tails.
 pub fn observe(name: &str, seconds: f64, items: usize) {
+    // A single non-finite duration would poison the accumulating
+    // `_seconds` counter for the process lifetime; drop the whole
+    // observation instead of recording inconsistent pieces of it.
+    if !seconds.is_finite() {
+        return;
+    }
     with(|m| {
         *m.counters.entry(format!("{name}_seconds")).or_insert(0.0) += seconds;
         *m.counters.entry(format!("{name}_calls")).or_insert(0.0) += 1.0;
@@ -231,6 +249,30 @@ mod tests {
         assert!(p50 >= HIST_CAP as f64, "p50 {p50} predates the window");
         let j = dump();
         assert_eq!(j.req("ring_count").as_f64(), Some(2.0 * HIST_CAP as f64));
+    }
+
+    #[test]
+    fn non_finite_observations_are_dropped_not_panicking() {
+        let _g = serial();
+        record_hist("nan_path", f64::NAN);
+        record_hist("nan_path", f64::INFINITY);
+        assert!(hist_percentiles("nan_path").is_none(), "only non-finite: empty window");
+        record_hist("nan_path", 5.0);
+        record_hist("nan_path", f64::NAN);
+        let (p50, _, p99) = hist_percentiles("nan_path").unwrap();
+        assert_eq!((p50, p99), (5.0, 5.0), "percentiles see only the finite sample");
+        // dump() must not panic (and must not poison the registry) either
+        let j = dump();
+        assert_eq!(j.req("nan_path_count").as_f64(), Some(1.0), "dropped samples not counted");
+        // the accumulating counters are guarded at the recording
+        // boundary too: one NaN must not make them NaN forever
+        add("nan_ctr", 1.0);
+        add("nan_ctr", f64::NAN);
+        assert_eq!(get("nan_ctr"), 1.0, "NaN add dropped, counter intact");
+        observe("nan_obs", f64::NAN, 4);
+        observe("nan_obs", 0.5, 4);
+        assert_eq!(get("nan_obs_calls"), 1.0, "NaN observation dropped whole");
+        assert_eq!(get("nan_obs_seconds"), 0.5);
     }
 
     #[test]

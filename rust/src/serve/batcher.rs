@@ -26,7 +26,7 @@ use crate::coordinator::jobs::{self, InferReply};
 use crate::coordinator::metrics;
 use crate::runtime::EngineHandle;
 use crate::tensor::{Data, HostTensor};
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -54,7 +54,7 @@ impl Batcher {
         registry: Arc<ModelRegistry>,
         cfg: &ServeCfg,
         active_conns: Arc<AtomicUsize>,
-    ) -> Batcher {
+    ) -> Result<Batcher> {
         // The same depth-tracked bounded queue the accept loop uses.
         let (queue, rx) =
             admission::bounded::<InferJob>(cfg.queue_bound.max(1), "serve_infer_queue_depth");
@@ -63,8 +63,8 @@ impl Batcher {
         let thread = std::thread::Builder::new()
             .name("serve-batcher".into())
             .spawn(move || run(eng, registry, window, max_batch, active_conns, rx))
-            .expect("spawn batcher thread");
-        Batcher { queue: Some(queue), thread: Some(thread) }
+            .context("spawning batcher thread")?;
+        Ok(Batcher { queue: Some(queue), thread: Some(thread) })
     }
 
     /// Submit one infer request and block for its reply.  `None` means
@@ -233,7 +233,7 @@ mod tests {
         let eng = EngineHandle::cpu().unwrap();
         let registry = Arc::new(ModelRegistry::new(2));
         let active = Arc::new(AtomicUsize::new(1));
-        let b = Batcher::start(eng, registry, &ServeCfg::default(), active);
+        let b = Batcher::start(eng, registry, &ServeCfg::default(), active).unwrap();
         let x = HostTensor::zeros(vec![1, 64]);
         let r = b.try_submit("nope", vec![x]).expect("queue has room");
         let e = r.expect_err("missing model must error");

@@ -105,7 +105,6 @@ pub struct PoolServer {
     shared: Arc<Shared>,
     registry: Arc<ModelRegistry>,
     cfg: ServeCfg,
-    stop: Arc<AtomicBool>,
 }
 
 impl PoolServer {
@@ -118,16 +117,17 @@ impl PoolServer {
         let registry = Arc::new(ModelRegistry::new(cfg.registry_cap));
         let runner = Runner::with_registry(eng.clone(), registry.clone());
         let active_conns = Arc::new(AtomicUsize::new(0));
-        let batcher = Batcher::start(eng.clone(), registry.clone(), &cfg, active_conns.clone());
-        let stop = Arc::new(AtomicBool::new(false));
+        let batcher = Batcher::start(eng.clone(), registry.clone(), &cfg, active_conns.clone())?;
         let retry_after_ms = (cfg.batch_window_ms.max(0.0) * 2.0) as u64 + 10;
+        // `Shared.stop` is the single shutdown flag: handles, the accept
+        // loop and the `shutdown` command all share it through `shared`.
         let shared = Arc::new(Shared {
             eng,
             runner: RwLock::new(runner),
             batcher,
             active_conns,
             retry_after_ms,
-            stop: stop.clone(),
+            stop: Arc::new(AtomicBool::new(false)),
             addr,
         });
         log::info!(
@@ -138,7 +138,7 @@ impl PoolServer {
             cfg.queue_bound,
             cfg.registry_cap
         );
-        Ok(PoolServer { listener, addr, shared, registry, cfg, stop })
+        Ok(PoolServer { listener, addr, shared, registry, cfg })
     }
 
     /// The registry this server reads from (shared with its Runner).
@@ -163,7 +163,7 @@ impl PoolServer {
     /// A handle that can stop this server once [`PoolServer::serve`] is
     /// running on another thread.
     pub fn shutdown_handle(&self) -> PoolHandle {
-        PoolHandle { stop: self.stop.clone(), addr: self.addr }
+        PoolHandle { stop: self.shared.stop.clone(), addr: self.addr }
     }
 
     /// Serve until `max_conns` connections have been accepted
@@ -185,11 +185,15 @@ impl PoolServer {
                     .context("spawning worker")?,
             );
         }
+        // The workers hold the only receiver clones now: if every one of
+        // them dies, the channel disconnects and push() reports Closed —
+        // keeping our clone would mask a dead pool as a healthy queue.
+        drop(srx);
         let mut backoff = Backoff::accept_loop();
         let mut accepted = 0usize;
         let mut result = Ok(());
         for stream in self.listener.incoming() {
-            if self.stop.load(Ordering::SeqCst) {
+            if self.shared.stop.load(Ordering::SeqCst) {
                 break;
             }
             let stream = match stream {
@@ -211,8 +215,19 @@ impl PoolServer {
             };
             accepted += 1;
             metrics::inc("serve_conns");
-            if let Err(stream) = queue.push(stream) {
-                shed(stream, self.shared.retry_hint_ms());
+            match queue.push(stream) {
+                Ok(()) => {}
+                // At capacity: typed shed so the client knows to back off.
+                Err(admission::PushError::Full(s)) => shed(s, self.shared.retry_hint_ms()),
+                // Every worker is dead: no admitted connection will ever
+                // be served.  Keep the typed-response contract for this
+                // last client, then surface the failure instead of
+                // reporting a clean exit.
+                Err(admission::PushError::Closed(mut s)) => {
+                    let _ = write_line(&mut s, &service::error_json("worker pool is gone".into()));
+                    result = Err(anyhow::anyhow!("connection queue closed: worker pool is gone"));
+                    break;
+                }
             }
             if accepted >= max_conns {
                 break;
@@ -228,15 +243,19 @@ impl PoolServer {
     }
 }
 
+/// Write one JSON-line frame — the wire protocol's only response shape,
+/// shared by the request loop, the shed path and the dead-pool path.
+fn write_line(w: &mut dyn Write, resp: &Json) -> std::io::Result<()> {
+    w.write_all(resp.dump().as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
 /// Overload path: typed response, then close.  The client learns *why*
 /// and *when to retry* instead of seeing a silent hang or reset.
 fn shed(mut stream: TcpStream, retry_after_ms: u64) {
     metrics::inc("serve_shed");
-    let resp = admission::shed_response(retry_after_ms).dump();
-    let _ = stream
-        .write_all(resp.as_bytes())
-        .and_then(|_| stream.write_all(b"\n"))
-        .and_then(|_| stream.flush());
+    let _ = write_line(&mut stream, &admission::shed_response(retry_after_ms));
 }
 
 fn worker_loop(shared: Arc<Shared>, rx: admission::SharedReceiver<TcpStream>) {
@@ -270,11 +289,7 @@ fn handle_conn(shared: &Shared, stream: TcpStream) {
         }
         metrics::inc("service_requests");
         let resp = dispatch(shared, &line, &mut writer);
-        let ok = writer
-            .write_all(resp.dump().as_bytes())
-            .and_then(|_| writer.write_all(b"\n"))
-            .and_then(|_| writer.flush());
-        if let Err(e) = ok {
+        if let Err(e) = write_line(&mut writer, &resp) {
             log::warn!("conn {peer}: write failed: {e}");
             break;
         }
