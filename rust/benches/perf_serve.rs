@@ -2,7 +2,7 @@
 //! p50/p95/p99 latency of single-row INT8 `mlp3` infer requests at
 //! client concurrency 1/8/32, worker pool + micro-batching on vs off.
 //!
-//! Two scenarios share one engine:
+//! Three scenarios share one engine:
 //!
 //! * `workers1_nobatch` — one worker, batching disabled: the old
 //!   strictly-sequential behaviour, expressed through the same code
@@ -10,6 +10,8 @@
 //! * `pool_batch` — a wide worker pool with the 2 ms coalescing window:
 //!   requests arriving together execute as one batch over the
 //!   batch-parallel integer kernels.
+//! * `pool_batch_bin1` — the same pool, clients negotiated onto the
+//!   bin1 binary frames (`proto::frame`) instead of JSON lines.
 //!
 //! `BENCH_SMOKE=1` runs a bounded subset (CI-sized) — either way the
 //! numbers land in `bench_results/BENCH_serve.json`, next to
@@ -17,8 +19,11 @@
 
 use lapq::benchkit::{f3, Table};
 use lapq::config::{BitSpec, ExperimentConfig, Method, ServeCfg};
+use lapq::proto::wire::Client;
+use lapq::proto::InferRequest;
 use lapq::runtime::EngineHandle;
 use lapq::serve::PoolServer;
+use lapq::tensor::HostTensor;
 use lapq::util::json::Json;
 use lapq::util::stats;
 use std::io::{BufRead, BufReader, Write};
@@ -35,21 +40,37 @@ fn infer_req(key: &str, row: &[f32]) -> String {
 }
 
 /// `clients` persistent connections, each issuing `reqs` sequential
-/// single-row infer requests.  Returns (throughput req/s, latencies s).
-fn run_load(addr: SocketAddr, key: &str, clients: usize, reqs: usize) -> (f64, Vec<f32>) {
+/// single-row infer requests over JSON lines or — after the hello
+/// handshake — bin1 frames.  Returns (throughput req/s, latencies s).
+fn run_load(addr: SocketAddr, key: &str, clients: usize, reqs: usize, bin: bool) -> (f64, Vec<f32>) {
     let t0 = Instant::now();
     let mut handles = Vec::with_capacity(clients);
     for ci in 0..clients {
         let key = key.to_string();
         handles.push(std::thread::spawn(move || {
-            let stream = TcpStream::connect(addr).expect("connect");
-            let mut w = stream.try_clone().expect("clone");
-            let mut r = BufReader::new(stream);
             // deterministic, distinct per client
             let row: Vec<f32> =
                 (0..64).map(|j| ((ci * 31 + j * 7) % 23) as f32 * 0.04 - 0.4).collect();
-            let req = infer_req(&key, &row);
             let mut lat = Vec::with_capacity(reqs);
+            if bin {
+                let mut c = Client::connect(&addr).expect("connect");
+                c.hello_bin1().expect("hello/bin1");
+                let ir = InferRequest {
+                    key,
+                    inputs: vec![HostTensor::f32(vec![1, row.len()], row)],
+                };
+                for _ in 0..reqs {
+                    let t = Instant::now();
+                    let (reply, _preds) = c.infer_bin(&ir).expect("framed infer");
+                    lat.push(t.elapsed().as_secs_f64() as f32);
+                    assert_eq!(reply.rows, 1);
+                }
+                return lat;
+            }
+            let stream = TcpStream::connect(addr).expect("connect");
+            let mut w = stream.try_clone().expect("clone");
+            let mut r = BufReader::new(stream);
+            let req = infer_req(&key, &row);
             let mut line = String::new();
             for _ in 0..reqs {
                 let t = Instant::now();
@@ -59,7 +80,7 @@ fn run_load(addr: SocketAddr, key: &str, clients: usize, reqs: usize) -> (f64, V
                 line.clear();
                 r.read_line(&mut line).expect("read");
                 lat.push(t.elapsed().as_secs_f64() as f32);
-                let resp = Json::parse(&line).expect("json response");
+                let resp = line.parse::<Json>().expect("json response");
                 assert_eq!(resp.req("ok").as_bool(), Some(true), "{resp:?}");
             }
             lat
@@ -95,15 +116,15 @@ fn main() -> lapq::Result<()> {
     let eng = EngineHandle::start_default()?;
 
     let base = ServeCfg { queue_bound: 256, registry_cap: 4, ..Default::default() };
-    let scenarios: Vec<(&str, ServeCfg)> = vec![
+    let pool = ServeCfg { workers: 32, batch_window_ms: 2.0, max_batch: 32, ..base.clone() };
+    let scenarios: Vec<(&str, ServeCfg, bool)> = vec![
         (
             "workers1_nobatch",
-            ServeCfg { workers: 1, batch_window_ms: 0.0, max_batch: 1, ..base.clone() },
+            ServeCfg { workers: 1, batch_window_ms: 0.0, max_batch: 1, ..base },
+            false,
         ),
-        (
-            "pool_batch",
-            ServeCfg { workers: 32, batch_window_ms: 2.0, max_batch: 32, ..base },
-        ),
+        ("pool_batch", pool.clone(), false),
+        ("pool_batch_bin1", pool, true),
     ];
 
     let mut table = Table::new(
@@ -111,15 +132,15 @@ fn main() -> lapq::Result<()> {
         &["scenario", "conc", "req/s", "p50 ms", "p95 ms", "p99 ms"],
     );
     let mut scen_json = Vec::new();
-    let mut conc8: Vec<(String, f64)> = Vec::new();
-    for (name, scfg) in &scenarios {
+    let mut peaks: Vec<(String, usize, f64)> = Vec::new();
+    for (name, scfg, bin) in &scenarios {
         let server = PoolServer::bind("127.0.0.1:0", eng.clone(), scfg.clone())?;
         let key = server.preload(std::slice::from_ref(&pack_cfg))?.remove(0);
         let addr = server.addr;
         let srv = std::thread::spawn(move || server.serve(total_conns));
         let mut runs = Vec::new();
         for &c in concurrencies {
-            let (rps, lat) = run_load(addr, &key, c, reqs);
+            let (rps, lat) = run_load(addr, &key, c, reqs, *bin);
             let p50 = stats::percentile(&lat, 50.0) as f64 * 1e3;
             let p95 = stats::percentile(&lat, 95.0) as f64 * 1e3;
             let p99 = stats::percentile(&lat, 99.0) as f64 * 1e3;
@@ -131,9 +152,7 @@ fn main() -> lapq::Result<()> {
                 f3(p95),
                 f3(p99),
             ]);
-            if c == 8 {
-                conc8.push((name.to_string(), rps));
-            }
+            peaks.push((name.to_string(), c, rps));
             runs.push(Json::obj(vec![
                 ("concurrency", Json::Num(c as f64)),
                 ("requests", Json::Num((c * reqs) as f64)),
@@ -146,6 +165,7 @@ fn main() -> lapq::Result<()> {
         srv.join().expect("server thread")?;
         scen_json.push(Json::obj(vec![
             ("name", Json::Str(name.to_string())),
+            ("wire", Json::Str(if *bin { "bin1".into() } else { "json".into() })),
             ("workers", Json::Num(scfg.workers as f64)),
             ("batch_window_ms", Json::Num(scfg.batch_window_ms)),
             ("max_batch", Json::Num(scfg.max_batch as f64)),
@@ -155,11 +175,21 @@ fn main() -> lapq::Result<()> {
     }
     table.print();
 
-    let find = |n: &str| conc8.iter().find(|kv| kv.0 == n).map(|kv| kv.1).unwrap_or(0.0);
-    let (seq8, pool8) = (find("workers1_nobatch"), find("pool_batch"));
+    let find = |n: &str, c: usize| {
+        peaks.iter().find(|kv| kv.0 == n && kv.1 == c).map(|kv| kv.2).unwrap_or(0.0)
+    };
+    let (seq8, pool8) = (find("workers1_nobatch", 8), find("pool_batch", 8));
     let speedup = pool8 / seq8.max(1e-9);
     println!(
         "\nconcurrency 8: pool+batch {pool8:.0} req/s vs workers=1/no-batch {seq8:.0} req/s ({speedup:.2}x)"
+    );
+    // the wire delta at the highest concurrency exercised (32 in full
+    // runs, 8 under BENCH_SMOKE)
+    let top = *concurrencies.iter().max().unwrap_or(&8);
+    let (json_top, bin_top) = (find("pool_batch", top), find("pool_batch_bin1", top));
+    let wire_speedup = bin_top / json_top.max(1e-9);
+    println!(
+        "concurrency {top}: bin1 {bin_top:.0} req/s vs JSON {json_top:.0} req/s ({wire_speedup:.2}x)"
     );
 
     let report = Json::obj(vec![
@@ -171,6 +201,10 @@ fn main() -> lapq::Result<()> {
         ("conc8_seq_rps", Json::Num(seq8)),
         ("conc8_pool_rps", Json::Num(pool8)),
         ("conc8_speedup", Json::Num(speedup)),
+        ("wire_top_concurrency", Json::Num(top as f64)),
+        ("wire_top_json_rps", Json::Num(json_top)),
+        ("wire_top_bin1_rps", Json::Num(bin_top)),
+        ("wire_top_speedup", Json::Num(wire_speedup)),
     ]);
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
     std::fs::create_dir_all(&dir)?;

@@ -1,0 +1,179 @@
+//! Perf: the wire codecs in isolation — what one infer request/reply
+//! costs to decode and encode in each dialect, away from sockets and
+//! kernels.
+//!
+//! Parse side (a 32x64 f32 infer request):
+//! * `parse_tree`  — the owned `Json` tree (the pre-redesign path).
+//! * `parse_typed` — `Request::from_line` through the borrowing reader,
+//!   straight into `HostTensor`s.
+//! * `decode_bin`  — the bin1 frame payload decoder.
+//!
+//! Serialize side (a 32x16 infer reply):
+//! * `write_tree`  — build the `Json` tree, then dump (old path).
+//! * `write_typed` — `Response::write_json` into a reused buffer.
+//! * `encode_bin`  — the bin1 frame encoder into a reused buffer.
+//!
+//! `BENCH_SMOKE=1` shrinks iteration counts (CI-sized).  Results land
+//! in `bench_results/BENCH_wire.json`.
+
+use lapq::benchkit::{bench, Table};
+use lapq::coordinator::jobs::InferReply;
+use lapq::proto::{frame, predict_row, InferRequest, Request, Response};
+use lapq::runtime::cpu::ops::Arr;
+use lapq::tensor::HostTensor;
+use lapq::util::json::Json;
+use std::hint::black_box;
+
+/// The reply as the pre-redesign code built it: an owned tree, dumped.
+fn reply_tree_dump(reply: &InferReply) -> String {
+    let c = reply.logits.last_dim().max(1);
+    let logits: Vec<Json> = reply.logits.data.chunks(c).map(Json::arr_f32).collect();
+    let preds: Vec<Json> =
+        reply.logits.data.chunks(c).map(|r| Json::Num(predict_row(r) as f64)).collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "result",
+            Json::obj(vec![
+                ("key", Json::Str(reply.key.clone())),
+                ("rows", Json::Num(reply.rows as f64)),
+                ("int_layers", Json::Num(reply.int_layers as f64)),
+                ("seconds", Json::Num(reply.seconds)),
+                ("logits", Json::Arr(logits)),
+                ("predictions", Json::Arr(preds)),
+            ]),
+        ),
+    ])
+    .dump()
+}
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+    let smoke_var = std::env::var("BENCH_SMOKE");
+    let smoke = matches!(smoke_var.as_deref(), Ok(v) if !v.is_empty() && v != "0");
+    let (warmup, iters) = if smoke { (20, 100) } else { (100, 1000) };
+
+    // -- fixtures -------------------------------------------------------
+    let (rows, cols, classes) = (32usize, 64usize, 16usize);
+    let xdata: Vec<f32> =
+        (0..rows * cols).map(|i| ((i * 37) % 19) as f32 * 0.05 - 0.45).collect();
+    let ir = InferRequest {
+        key: "mlp3-int8-mmse".into(),
+        inputs: vec![HostTensor::f32(vec![rows, cols], xdata)],
+    };
+    let mut line = String::new();
+    Request::Infer(ir.clone()).write_json(&mut line);
+    let mut framed = Vec::new();
+    frame::encode_infer_request(&ir, &mut framed);
+    let payload = framed[frame::HEADER_LEN..framed.len() - frame::CRC_LEN].to_vec();
+
+    let ldata: Vec<f32> =
+        (0..rows * classes).map(|i| ((i * 53) % 31) as f32 * 0.0625 - 1.0).collect();
+    let reply = InferReply {
+        key: "mlp3-int8-mmse".into(),
+        logits: Arr::new(vec![rows, classes], ldata),
+        rows,
+        int_layers: 3,
+        seconds: 0.000244140625,
+    };
+    let resp = Response::Infer { reply: reply.clone() };
+
+    // cross-check before timing: the typed writer and the tree dump are
+    // the same bytes (the byte-compat contract the tests also pin)
+    let mut typed_out = String::new();
+    resp.write_json(&mut typed_out);
+    assert_eq!(typed_out, reply_tree_dump(&reply), "typed writer drifted from the tree dump");
+
+    // -- parse side -----------------------------------------------------
+    let mut cases = Vec::new();
+    let t = bench("parse_tree (owned Json)", warmup, iters, || {
+        let j: Json = black_box(&line).parse().expect("tree parse");
+        black_box(&j);
+    });
+    cases.push((t, line.len()));
+    let t = bench("parse_typed (borrowing reader)", warmup, iters, || {
+        let r = Request::from_line(black_box(&line)).expect("typed parse");
+        black_box(&r);
+    });
+    cases.push((t, line.len()));
+    let t = bench("decode_bin (bin1 payload)", warmup, iters, || {
+        let r = frame::decode_infer_request(black_box(&payload)).expect("bin decode");
+        black_box(&r);
+    });
+    cases.push((t, payload.len()));
+
+    // -- serialize side -------------------------------------------------
+    let t = bench("write_tree (build + dump)", warmup, iters, || {
+        black_box(reply_tree_dump(black_box(&reply)));
+    });
+    cases.push((t, typed_out.len()));
+    let mut out = String::new();
+    let t = bench("write_typed (reused buffer)", warmup, iters, || {
+        out.clear();
+        black_box(&resp).write_json(&mut out);
+        black_box(&out);
+    });
+    cases.push((t, typed_out.len()));
+    let mut bin = Vec::new();
+    let t = bench("encode_bin (reused buffer)", warmup, iters, || {
+        frame::encode_infer_reply(black_box(&reply), &mut bin);
+        black_box(&bin);
+    });
+    let bin_len = bin.len();
+    cases.push((t, bin_len));
+
+    // -- report ---------------------------------------------------------
+    let mut table = Table::new(
+        "wire codecs: one 32x64 infer request / 32x16 reply",
+        &["case", "bytes", "mean us", "p50 us", "ops/s"],
+    );
+    let mut case_json = Vec::new();
+    for (t, bytes) in &cases {
+        let ops = 1.0 / t.mean_s.max(1e-12);
+        table.row(&[
+            t.name.clone(),
+            bytes.to_string(),
+            format!("{:.2}", t.mean_s * 1e6),
+            format!("{:.2}", t.p50_s * 1e6),
+            format!("{ops:.0}"),
+        ]);
+        case_json.push(Json::obj(vec![
+            ("name", Json::Str(t.name.clone())),
+            ("bytes", Json::Num(*bytes as f64)),
+            ("mean_us", Json::Num(t.mean_s * 1e6)),
+            ("p50_us", Json::Num(t.p50_s * 1e6)),
+            ("p95_us", Json::Num(t.p95_s * 1e6)),
+            ("ops_per_s", Json::Num(ops)),
+        ]));
+    }
+    table.print();
+
+    let mean = |i: usize| cases[i].0.mean_s.max(1e-12);
+    let parse_typed_speedup = mean(0) / mean(1);
+    let parse_bin_speedup = mean(0) / mean(2);
+    let write_typed_speedup = mean(3) / mean(4);
+    let write_bin_speedup = mean(3) / mean(5);
+    println!(
+        "\nparse: typed {parse_typed_speedup:.2}x vs tree, bin1 {parse_bin_speedup:.2}x; \
+         write: typed {write_typed_speedup:.2}x vs tree, bin1 {write_bin_speedup:.2}x"
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("perf_wire".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("request_shape", Json::Arr(vec![Json::Num(rows as f64), Json::Num(cols as f64)])),
+        ("reply_shape", Json::Arr(vec![Json::Num(rows as f64), Json::Num(classes as f64)])),
+        ("iters", Json::Num(iters as f64)),
+        ("cases", Json::Arr(case_json)),
+        ("parse_typed_speedup_vs_tree", Json::Num(parse_typed_speedup)),
+        ("parse_bin_speedup_vs_tree", Json::Num(parse_bin_speedup)),
+        ("write_typed_speedup_vs_tree", Json::Num(write_typed_speedup)),
+        ("write_bin_speedup_vs_tree", Json::Num(write_bin_speedup)),
+    ]);
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_wire.json");
+    std::fs::write(&path, report.dump())?;
+    println!("[json] wrote {path:?}");
+    Ok(())
+}

@@ -478,7 +478,7 @@ impl ExperimentConfig {
     /// Load from a JSON file, then apply `k=v` overrides.
     pub fn load(path: &str, overrides: &[String]) -> Result<Self> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+        let json = text.parse::<Json>().map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
         let mut cfg = Self::from_json(&json)?;
         cfg.apply_overrides(overrides)?;
         Ok(cfg)
@@ -769,7 +769,7 @@ mod tests {
 
     #[test]
     fn from_json_joint_string_form() {
-        let j = Json::parse(r#"{"model":"mlp3","lapq":{"joint":"nm","max_evals":40}}"#).unwrap();
+        let j = r#"{"model":"mlp3","lapq":{"joint":"nm","max_evals":40}}"#.parse::<Json>().unwrap();
         let c = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c.lapq.joint.optimizer, JointOpt::NelderMead);
         assert_eq!(c.lapq.joint.max_evals, 40);

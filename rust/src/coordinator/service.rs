@@ -1,11 +1,12 @@
-//! TCP job service: JSON-lines protocol for submitting quantization and
-//! serving jobs to a running coordinator (the "deployment" face of the
-//! system).
+//! TCP job service: the blocking face of the wire protocol
+//! ([`crate::proto`]) for submitting quantization and serving jobs to a
+//! running coordinator.
 //!
-//! Protocol (one JSON object per line):
+//! Protocol (JSON lines by default; see README "Wire protocol"):
 //!   {"cmd":"ping"}                         -> {"ok":true,"pong":true}
 //!   {"cmd":"models"}                       -> {"ok":true,"models":[...]}
 //!   {"cmd":"metrics"}                      -> {"ok":true,"metrics":{...}}
+//!   {"cmd":"hello","wire":"bin1"}          -> {"ok":true,"wire":"bin1"}
 //!   {"cmd":"quantize", ...config fields,   -> {"ok":true,"result":{...}}
 //!        "stream":bool?}                      ("stream":true interleaves
 //!                                             {"event":...} progress
@@ -21,31 +22,29 @@
 //! quantization jobs and for tests that want a deterministic order.
 //! The concurrent production face — worker pool, micro-batching,
 //! admission control — lives in [`crate::serve`] and speaks the same
-//! protocol through the response builders below, so the two paths
-//! cannot drift.
+//! protocol through the same typed [`crate::proto::Request`] /
+//! [`crate::proto::Response`] surface and the same connection loop
+//! ([`crate::proto::wire::serve_conn`]), so the two paths cannot drift.
 //!
 //! Long calibrations are never silent: with `"stream":true` the quantize
 //! handler forwards the calibrator's [`CalibEvent`]s as one JSON frame
 //! per line (`{"event":"phase_start",...}`, throttled evals, phase ends,
 //! degenerate warnings) on the same connection, then the final
 //! `{"ok":...}` response.  Every error — malformed JSON, unknown `cmd`,
-//! a failing job, even a panic inside a kernel — comes back as
-//! `{"ok":false,"error":...}` on the same connection; the line loop and
-//! the listener keep serving.  Accept failures retry under the shared
-//! exponential-backoff policy ([`crate::serve::admission::Backoff`]):
-//! jittered doubling delays, with the failure budget resetting once the
-//! window has elapsed (not merely on the next success).  `max_requests`
-//! bounds the serve loop for tests.
+//! an oversized line, a failing job, even a panic inside a kernel —
+//! comes back as `{"ok":false,...}` on the same connection; the line
+//! loop and the listener keep serving.  Accept failures retry under the
+//! shared exponential-backoff policy
+//! ([`crate::serve::admission::Backoff`]).  `max_requests` bounds the
+//! serve loop for tests.
 
-use super::jobs::{InferReply, JobResult, PackSummary, Runner};
-use super::metrics;
-use crate::config::ExperimentConfig;
+use super::jobs::Runner;
 use crate::lapq::events::{CalibEvent, CalibObserver, EvalThrottle};
+use crate::proto::{wire, Request, Response};
 use crate::serve::admission::Backoff;
-use crate::tensor::HostTensor;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 
 /// Forwards calibration events to the connection as `{"event":...}`
@@ -81,142 +80,6 @@ impl CalibObserver for StreamObserver<'_> {
             self.dead = true;
         }
     }
-}
-
-// ---------------------------------------------------------------------------
-// Request/response wire format — the single source, shared by this
-// blocking server and the concurrent pool (`serve::pool`) so the two
-// paths cannot drift.
-
-/// `"stream":true` on a quantize request.
-pub(crate) fn stream_flag(req: &Json) -> bool {
-    req.get("stream").and_then(|v| v.as_bool()).unwrap_or(false)
-}
-
-/// Pack options from a request (`"po2"` defaults to true).
-pub(crate) fn pack_opts_from(req: &Json) -> crate::runtime::int::PackOpts {
-    crate::runtime::int::PackOpts {
-        po2_scales: req.get("po2").and_then(|v| v.as_bool()).unwrap_or(true),
-    }
-}
-
-/// The infer lookup key: `"key"` (from pack) with `"model"` fallback.
-pub(crate) fn infer_key(req: &Json) -> Result<&str> {
-    req.get("key")
-        .or_else(|| req.get("model"))
-        .and_then(|v| v.as_str())
-        .context("infer needs 'key' (from pack) or 'model'")
-}
-
-pub(crate) fn ping_response() -> Json {
-    Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))])
-}
-
-pub(crate) fn models_response(eng: &crate::runtime::EngineHandle) -> Json {
-    let models: Vec<Json> =
-        eng.manifest().models.keys().map(|k| Json::Str(k.clone())).collect();
-    Json::obj(vec![("ok", Json::Bool(true)), ("models", Json::Arr(models))])
-}
-
-pub(crate) fn metrics_response() -> Json {
-    Json::obj(vec![("ok", Json::Bool(true)), ("metrics", metrics::dump())])
-}
-
-/// Structured failure (counts into `service_errors`).
-pub(crate) fn error_json(msg: String) -> Json {
-    metrics::inc("service_errors");
-    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg))])
-}
-
-pub(crate) fn quantize_response(cfg: &ExperimentConfig, res: &JobResult) -> Json {
-    let bools = |v: &[bool]| Json::Arr(v.iter().map(|&b| Json::Bool(b)).collect());
-    let trace = Json::Arr(res.outcome.trace.iter().map(|t| t.to_json()).collect());
-    let joint = match cfg.method {
-        crate::config::Method::Lapq => cfg.lapq.joint.optimizer.name(),
-        _ => "none",
-    };
-    Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        (
-            "result",
-            Json::obj(vec![
-                ("model", Json::Str(res.model.clone())),
-                ("bits", Json::Str(res.bits_label.clone())),
-                ("method", Json::Str(res.method.clone())),
-                ("joint", Json::Str(joint.into())),
-                ("fp32_metric", Json::Num(res.fp32_metric as f64)),
-                ("quant_metric", Json::Num(res.quant_metric as f64)),
-                ("calib_loss", Json::Num(res.outcome.calib_loss)),
-                ("init_loss", Json::Num(res.outcome.init_loss)),
-                ("fp32_calib_loss", Json::Num(res.outcome.fp32_calib_loss)),
-                ("joint_evals", Json::Num(res.outcome.joint_evals as f64)),
-                ("active_w", bools(&res.outcome.mask.weights)),
-                ("active_a", bools(&res.outcome.mask.acts)),
-                ("trace", trace),
-                // The exact config that produced this result —
-                // lossless, so the run is reproducible from the
-                // response alone.
-                ("config", cfg.to_json()),
-                ("seconds", Json::Num(res.seconds)),
-            ]),
-        ),
-    ])
-}
-
-pub(crate) fn pack_response(sum: &PackSummary) -> Json {
-    Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        (
-            "packed",
-            Json::obj(vec![
-                ("key", Json::Str(sum.key.clone())),
-                ("model", Json::Str(sum.model.clone())),
-                ("bits", Json::Str(sum.bits_label.clone())),
-                ("method", Json::Str(sum.method.clone())),
-                ("int_params", Json::Num(sum.int_params as f64)),
-                ("f32_bytes", Json::Num(sum.f32_bytes as f64)),
-                ("packed_bytes", Json::Num(sum.packed_bytes as f64)),
-                ("fp32_metric", Json::Num(sum.fp32_metric as f64)),
-                ("quant_metric", Json::Num(sum.quant_metric as f64)),
-                ("seconds", Json::Num(sum.seconds)),
-            ]),
-        ),
-    ])
-}
-
-pub(crate) fn infer_response(reply: &InferReply) -> Json {
-    let c = reply.logits.last_dim().max(1);
-    let mut logits_rows = Vec::new();
-    let mut predictions = Vec::new();
-    for row in reply.logits.data.chunks(c) {
-        logits_rows.push(Json::arr_f32(row));
-        if c > 1 {
-            let mut best = 0usize;
-            for (j, &v) in row.iter().enumerate() {
-                if v > row[best] {
-                    best = j;
-                }
-            }
-            predictions.push(Json::Num(best as f64));
-        } else {
-            let hit = row.first().is_some_and(|&v| v > 0.0);
-            predictions.push(Json::Num(if hit { 1.0 } else { 0.0 }));
-        }
-    }
-    Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        (
-            "result",
-            Json::obj(vec![
-                ("key", Json::Str(reply.key.clone())),
-                ("rows", Json::Num(reply.rows as f64)),
-                ("int_layers", Json::Num(reply.int_layers as f64)),
-                ("seconds", Json::Num(reply.seconds)),
-                ("logits", Json::Arr(logits_rows)),
-                ("predictions", Json::Arr(predictions)),
-            ]),
-        ),
-    ])
 }
 
 pub struct Service {
@@ -261,184 +124,75 @@ impl Service {
                     }
                 }
             };
-            handled += self.handle_conn(stream, runner, max_requests - handled);
+            handled += wire::serve_conn(stream, max_requests - handled, |req, writer| {
+                dispatch(runner, req, writer)
+            });
             if handled >= max_requests {
                 break;
             }
         }
         Ok(())
     }
+}
 
-    /// Serve one connection; returns how many requests it consumed.
-    /// I/O errors end the connection (logged), not the service.
-    fn handle_conn(&self, stream: TcpStream, runner: &mut Runner, budget: usize) -> usize {
-        let peer = stream
-            .peer_addr()
-            .map(|a| a.to_string())
-            .unwrap_or_else(|_| "<unknown>".to_string());
-        log::info!("conn from {peer}");
-        let mut writer = match stream.try_clone() {
-            Ok(w) => w,
-            Err(e) => {
-                log::warn!("conn {peer}: clone failed: {e}");
-                return 0;
-            }
-        };
-        let reader = BufReader::new(stream);
-        let mut handled = 0usize;
-        for line in reader.lines() {
-            let line = match line {
-                Ok(l) => l,
-                Err(_) => break,
+/// Job and validation failures become structured `{"ok":false}` errors;
+/// panics are already contained by the connection loop.
+fn dispatch(runner: &mut Runner, req: Request, writer: &mut dyn Write) -> Response {
+    match dispatch_inner(runner, req, writer) {
+        Ok(resp) => resp,
+        Err(e) => Response::error(format!("{e:#}")),
+    }
+}
+
+fn dispatch_inner(
+    runner: &mut Runner,
+    req: Request,
+    writer: &mut dyn Write,
+) -> Result<Response> {
+    Ok(match req {
+        Request::Ping => Response::Pong,
+        Request::Models => Response::models(&runner.eng),
+        Request::Metrics => Response::metrics(),
+        Request::Quantize { cfg, stream } => {
+            let res = if stream {
+                let mut obs = StreamObserver::new(writer);
+                runner.run_observed(&cfg, &mut obs)?
+            } else {
+                runner.run(&cfg)?
             };
-            if line.trim().is_empty() {
-                continue;
-            }
-            metrics::inc("service_requests");
-            let resp = self.dispatch(&line, runner, &mut writer);
-            let ok = writer
-                .write_all(resp.dump().as_bytes())
-                .and_then(|_| writer.write_all(b"\n"))
-                .and_then(|_| writer.flush());
-            if let Err(e) = ok {
-                log::warn!("conn {peer}: write failed: {e}");
-                break;
-            }
-            handled += 1;
-            if handled >= budget {
-                break;
-            }
+            Response::quantize(&cfg, &res)
         }
-        handled
-    }
-
-    /// Every failure mode becomes a structured `{"ok":false}` response:
-    /// parse/config errors, job errors, and panics unwinding out of a
-    /// kernel (the CPU backend recovers its mutex from poisoning, so the
-    /// runner stays usable afterwards).
-    fn dispatch(&self, line: &str, runner: &mut Runner, writer: &mut dyn Write) -> Json {
-        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            self.dispatch_inner(line, runner, writer)
-        }));
-        match caught {
-            Ok(Ok(j)) => j,
-            Ok(Err(e)) => error_json(format!("{e:#}")),
-            Err(payload) => {
-                error_json(format!("internal panic: {}", panic_text(payload.as_ref())))
-            }
+        Request::Pack { cfg, po2 } => {
+            // Deliberately no write-to-disk option here: letting a
+            // network client choose a server-side path would be a
+            // remote file-write primitive.  Saving artifacts is the
+            // CLI's job (`repro pack --out DIR`).
+            let opts = crate::runtime::int::PackOpts { po2_scales: po2 };
+            let (sum, _qm) = runner.pack(&cfg, &opts)?;
+            Response::Pack { packed: sum }
         }
-    }
-
-    fn dispatch_inner(
-        &self,
-        line: &str,
-        runner: &mut Runner,
-        writer: &mut dyn Write,
-    ) -> Result<Json> {
-        let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
-        let cmd = req.get("cmd").and_then(|c| c.as_str()).unwrap_or("");
-        match cmd {
-            "ping" => Ok(ping_response()),
-            "models" => Ok(models_response(&runner.eng)),
-            "metrics" => Ok(metrics_response()),
-            "quantize" => {
-                let cfg = ExperimentConfig::from_json(&req)?;
-                let res = if stream_flag(&req) {
-                    let mut obs = StreamObserver::new(writer);
-                    runner.run_observed(&cfg, &mut obs)?
-                } else {
-                    runner.run(&cfg)?
-                };
-                Ok(quantize_response(&cfg, &res))
-            }
-            "pack" => {
-                let cfg = ExperimentConfig::from_json(&req)?;
-                // Deliberately no write-to-disk option here: letting a
-                // network client choose a server-side path would be a
-                // remote file-write primitive.  Saving artifacts is the
-                // CLI's job (`repro pack --out DIR`).
-                let (sum, _qm) = runner.pack(&cfg, &pack_opts_from(&req))?;
-                Ok(pack_response(&sum))
-            }
-            "infer" => {
-                let key = infer_key(&req)?;
-                let inputs = parse_infer_inputs(&req)?;
-                let reply = runner.infer(key, &inputs)?;
-                Ok(infer_response(&reply))
-            }
-            other => anyhow::bail!("unknown cmd '{other}'"),
+        Request::Infer(ir) => {
+            let reply = runner.infer(&ir.key, &ir.inputs)?;
+            Response::Infer { reply }
         }
-    }
-}
-
-pub(crate) fn panic_text(p: &(dyn std::any::Any + Send)) -> &str {
-    if let Some(s) = p.downcast_ref::<&str>() {
-        s
-    } else if let Some(s) = p.downcast_ref::<String>() {
-        s
-    } else {
-        "opaque panic payload"
-    }
-}
-
-/// Decode the wire form of an infer batch: `users`+`items` i32 arrays
-/// (NCF), nested `x` rows (feature models), or flat `x` + `shape`
-/// (images).
-pub(crate) fn parse_infer_inputs(req: &Json) -> Result<Vec<HostTensor>> {
-    if let (Some(u), Some(it)) = (req.get("users"), req.get("items")) {
-        let to_i32 = |j: &Json, what: &str| -> Result<Vec<i32>> {
-            let arr = j.as_arr().with_context(|| format!("'{what}' must be an array"))?;
-            let out: Vec<i32> = arr.iter().filter_map(|v| v.as_f64()).map(|v| v as i32).collect();
-            if out.len() != arr.len() {
-                anyhow::bail!("non-numeric entries in '{what}'");
-            }
-            Ok(out)
-        };
-        let users = to_i32(u, "users")?;
-        let items = to_i32(it, "items")?;
-        let ut = HostTensor::i32(vec![users.len()], users);
-        let it = HostTensor::i32(vec![items.len()], items);
-        return Ok(vec![ut, it]);
-    }
-    let x = req.get("x").context("infer needs 'x' (vision) or 'users'+'items' (ncf)")?;
-    let rows = x.as_arr().context("'x' must be an array")?;
-    if rows.is_empty() {
-        anyhow::bail!("'x' is empty");
-    }
-    if rows[0].as_arr().is_some() {
-        let cols = rows[0].as_arr().unwrap_or(&[]).len();
-        let mut data = Vec::with_capacity(rows.len() * cols);
-        for r in rows {
-            let rr = r.as_arr().context("'x' rows must all be arrays")?;
-            if rr.len() != cols {
-                anyhow::bail!("ragged 'x' rows ({} vs {cols})", rr.len());
-            }
-            data.extend(rr.iter().filter_map(|v| v.as_f64()).map(|v| v as f32));
+        Request::Shutdown => {
+            Response::error("shutdown is not supported on the blocking service")
         }
-        if data.len() != rows.len() * cols {
-            anyhow::bail!("non-numeric entries in 'x'");
-        }
-        return Ok(vec![HostTensor::f32(vec![rows.len(), cols], data)]);
-    }
-    let data: Vec<f32> = rows.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect();
-    if data.len() != rows.len() {
-        anyhow::bail!("non-numeric entries in 'x'");
-    }
-    let shape = req.get("shape").context("flat 'x' needs a 'shape' array")?.usize_arr();
-    if shape.iter().product::<usize>() != data.len() {
-        anyhow::bail!("shape {shape:?} does not cover {} values", data.len());
-    }
-    Ok(vec![HostTensor::f32(shape, data)])
+        // Negotiation is the connection loop's job; reaching here means
+        // a caller bypassed it.
+        Request::Hello { .. } => Response::error("hello outside the connection loop"),
+        Request::Unknown { cmd } => Response::UnknownCmd { cmd },
+    })
 }
 
 /// Minimal client for tests and scripting.
 pub fn request(addr: &std::net::SocketAddr, body: &Json) -> Result<Json> {
-    let mut stream = TcpStream::connect(addr)?;
-    stream.write_all(body.dump().as_bytes())?;
-    stream.write_all(b"\n")?;
-    stream.flush()?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    let mut client = wire::Client::connect(addr)?;
+    client.call_raw(&body.dump())
+}
+
+/// Type-checked client call (the `proto`-native flavour of [`request`]).
+pub fn request_typed(addr: &std::net::SocketAddr, req: &Request) -> Result<Json> {
+    let mut client = wire::Client::connect(addr)?;
+    client.call(req)
 }

@@ -59,6 +59,7 @@ pub mod data;
 pub mod lapq;
 pub mod optim;
 pub mod prop;
+pub mod proto;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

@@ -1,0 +1,360 @@
+//! The `bin1` binary frame: length-prefixed, CRC-checked tensor payloads
+//! for the serving hot path.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       1     marker 0xBF   (invalid as a UTF-8 first byte, so a
+//!                              frame can never be confused with a
+//!                              JSON-lines request; the reader peeks
+//!                              one byte to pick the decoder)
+//! 1       1     magic  'Q'
+//! 2       1     version (1)
+//! 3       1     kind    (1 = infer request, 2 = infer reply)
+//! 4       4     payload length N
+//! 8       N     payload
+//! 8+N     4     CRC32 (IEEE) of the payload bytes
+//! ```
+//!
+//! Payloads carry tensors as `u8 dtype (0 = f32, 1 = i32), u8 ndim,
+//! ndim x u32 dims, little-endian body`.  An f32 travels as its raw
+//! bits, so the bin1 reply is bit-identical to the JSON reply by
+//! construction (JSON text is shortest-roundtrip; bin1 is the bits
+//! themselves).  Errors are never framed: every failure is a JSON line
+//! regardless of the negotiated mode, so a client can always fall back
+//! to the line parser on a non-0xBF first byte.
+
+use crate::coordinator::jobs::InferReply;
+use crate::runtime::cpu::ops::Arr;
+use crate::tensor::{Data, HostTensor};
+use super::InferRequest;
+
+/// First byte of every frame; invalid as a UTF-8 start byte.
+pub const MARKER: u8 = 0xBF;
+/// Second magic byte.
+pub const MAGIC2: u8 = b'Q';
+/// Frame format version.
+pub const VERSION: u8 = 1;
+/// Header bytes before the payload (marker, magic, version, kind, len).
+pub const HEADER_LEN: usize = 8;
+/// Trailing CRC bytes.
+pub const CRC_LEN: usize = 4;
+
+/// Frame kinds.
+pub const KIND_INFER_REQ: u8 = 1;
+pub const KIND_INFER_REP: u8 = 2;
+
+const DTYPE_F32: u8 = 0;
+const DTYPE_I32: u8 = 1;
+const MAX_NDIM: usize = 8;
+
+// -- CRC32 (IEEE 802.3, poly 0xEDB88320) ------------------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut n = 0usize;
+    while n < 256 {
+        let mut c = n as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[n] = c;
+        n += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// -- frame assembly ----------------------------------------------------------
+
+/// Start a frame in `out` (cleared): header with a length placeholder.
+/// Append the payload, then call [`finish`].
+pub fn begin(out: &mut Vec<u8>, kind: u8) {
+    out.clear();
+    out.extend_from_slice(&[MARKER, MAGIC2, VERSION, kind, 0, 0, 0, 0]);
+}
+
+/// Patch the payload length and append the CRC.
+pub fn finish(out: &mut Vec<u8>) {
+    let len = (out.len() - HEADER_LEN) as u32;
+    out[4..8].copy_from_slice(&len.to_le_bytes());
+    let crc = crc32(&out[HEADER_LEN..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+}
+
+// -- payload writers ---------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u16(out, s.len() as u16);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_tensor_header(out: &mut Vec<u8>, dtype: u8, shape: &[usize]) {
+    out.push(dtype);
+    out.push(shape.len() as u8);
+    for &d in shape {
+        put_u32(out, d as u32);
+    }
+}
+
+fn put_tensor(out: &mut Vec<u8>, shape: &[usize], data: &Data) {
+    match data {
+        Data::F32(v) => {
+            put_tensor_header(out, DTYPE_F32, shape);
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Data::I32(v) => {
+            put_tensor_header(out, DTYPE_I32, shape);
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Encode a complete infer-request frame into `out` (cleared first).
+pub fn encode_infer_request(req: &InferRequest, out: &mut Vec<u8>) {
+    begin(out, KIND_INFER_REQ);
+    put_str(out, &req.key);
+    out.push(req.inputs.len() as u8);
+    for t in &req.inputs {
+        put_tensor(out, &t.shape, &t.data);
+    }
+    finish(out);
+}
+
+/// Encode a complete infer-reply frame into `out` (cleared first).
+pub fn encode_infer_reply(reply: &InferReply, out: &mut Vec<u8>) {
+    begin(out, KIND_INFER_REP);
+    put_str(out, &reply.key);
+    put_u32(out, reply.rows as u32);
+    put_u32(out, reply.int_layers as u32);
+    out.extend_from_slice(&reply.seconds.to_le_bytes());
+    put_tensor_header(out, DTYPE_F32, &reply.logits.shape);
+    for x in &reply.logits.data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    let c = reply.logits.last_dim().max(1);
+    let preds: Vec<i32> =
+        reply.logits.data.chunks(c).map(|row| super::predict_row(row) as i32).collect();
+    put_u32(out, preds.len() as u32);
+    for p in &preds {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    finish(out);
+}
+
+// -- payload readers ---------------------------------------------------------
+
+/// Bounds-checked little-endian cursor over a frame payload.
+pub struct ByteReader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(b: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let s = self
+            .b
+            .get(self.i..self.i + n)
+            .ok_or_else(|| format!("truncated payload at {}", self.i))?;
+        self.i += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<&'a str, String> {
+        let n = self.u16()? as usize;
+        std::str::from_utf8(self.take(n)?).map_err(|_| "bad utf8 in payload".into())
+    }
+
+    pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>, String> {
+        let raw = self.take(n.checked_mul(4).ok_or("tensor size overflow")?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn i32s(&mut self, n: usize) -> Result<Vec<i32>, String> {
+        let raw = self.take(n.checked_mul(4).ok_or("tensor size overflow")?)?;
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Every payload byte must be consumed: trailing garbage is corruption.
+    pub fn expect_end(&self) -> Result<(), String> {
+        if self.i != self.b.len() {
+            return Err(format!("{} trailing payload bytes", self.b.len() - self.i));
+        }
+        Ok(())
+    }
+}
+
+fn read_shape(r: &mut ByteReader) -> Result<(u8, Vec<usize>, usize), String> {
+    let dtype = r.u8()?;
+    let ndim = r.u8()? as usize;
+    if ndim > MAX_NDIM {
+        return Err(format!("tensor rank {ndim} exceeds {MAX_NDIM}"));
+    }
+    let mut shape = Vec::with_capacity(ndim);
+    let mut n = 1usize;
+    for _ in 0..ndim {
+        let d = r.u32()? as usize;
+        n = n.checked_mul(d).ok_or("tensor size overflow")?;
+        shape.push(d);
+    }
+    Ok((dtype, shape, n))
+}
+
+fn read_tensor(r: &mut ByteReader) -> Result<HostTensor, String> {
+    let (dtype, shape, n) = read_shape(r)?;
+    match dtype {
+        DTYPE_F32 => Ok(HostTensor::f32(shape, r.f32s(n)?)),
+        DTYPE_I32 => Ok(HostTensor::i32(shape, r.i32s(n)?)),
+        other => Err(format!("unknown dtype {other}")),
+    }
+}
+
+/// Decode an infer-request payload (the bytes between header and CRC).
+pub fn decode_infer_request(payload: &[u8]) -> Result<InferRequest, String> {
+    let mut r = ByteReader::new(payload);
+    let key = r.str()?.to_string();
+    let ntensors = r.u8()? as usize;
+    let mut inputs = Vec::with_capacity(ntensors);
+    for _ in 0..ntensors {
+        inputs.push(read_tensor(&mut r)?);
+    }
+    r.expect_end()?;
+    Ok(InferRequest { key, inputs })
+}
+
+/// Decode an infer-reply payload; returns the reply plus the
+/// server-computed predictions (the JSON path derives them from the
+/// logits, so clients get the same values either way).
+pub fn decode_infer_reply(payload: &[u8]) -> Result<(InferReply, Vec<i32>), String> {
+    let mut r = ByteReader::new(payload);
+    let key = r.str()?.to_string();
+    let rows = r.u32()? as usize;
+    let int_layers = r.u32()? as usize;
+    let seconds = r.f64()?;
+    let (dtype, shape, n) = read_shape(&mut r)?;
+    if dtype != DTYPE_F32 {
+        return Err("logits must be f32".into());
+    }
+    let logits = Arr::new(shape, r.f32s(n)?);
+    let npred = r.u32()? as usize;
+    let preds = r.i32s(npred)?;
+    r.expect_end()?;
+    Ok((InferReply { key, logits, rows, int_layers, seconds }, preds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_test_vector() {
+        // the canonical IEEE CRC32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn infer_request_roundtrip() {
+        let req = InferRequest {
+            key: "mlp3-int8".into(),
+            inputs: vec![
+                HostTensor::f32(vec![2, 3], vec![1.0, -2.5, 0.0, f32::MIN, f32::MAX, 3.25]),
+                HostTensor::i32(vec![2], vec![-7, 40]),
+            ],
+        };
+        let mut buf = Vec::new();
+        encode_infer_request(&req, &mut buf);
+        assert_eq!(buf[0], MARKER);
+        assert_eq!(buf[3], KIND_INFER_REQ);
+        let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+        assert_eq!(buf.len(), HEADER_LEN + len + CRC_LEN);
+        let payload = &buf[HEADER_LEN..HEADER_LEN + len];
+        let crc = u32::from_le_bytes(buf[HEADER_LEN + len..].try_into().unwrap());
+        assert_eq!(crc, crc32(payload));
+        let back = decode_infer_request(payload).unwrap();
+        assert_eq!(back.key, req.key);
+        assert_eq!(back.inputs, req.inputs);
+    }
+
+    #[test]
+    fn infer_reply_roundtrip_is_bit_exact() {
+        let reply = InferReply {
+            key: "k".into(),
+            logits: Arr::new(vec![2, 2], vec![0.1, 0.7, -0.3, f32::EPSILON]),
+            rows: 2,
+            int_layers: 3,
+            seconds: 0.125,
+        };
+        let mut buf = Vec::new();
+        encode_infer_reply(&reply, &mut buf);
+        let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+        let (back, preds) = decode_infer_reply(&buf[HEADER_LEN..HEADER_LEN + len]).unwrap();
+        assert_eq!(back.key, reply.key);
+        assert_eq!(back.rows, 2);
+        assert_eq!(back.int_layers, 3);
+        assert_eq!(back.seconds.to_bits(), reply.seconds.to_bits());
+        assert_eq!(back.logits.shape, reply.logits.shape);
+        let bits: Vec<u32> = back.logits.data.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = reply.logits.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, want);
+        assert_eq!(preds, vec![1, 1], "argmax per row");
+    }
+
+    #[test]
+    fn corrupt_payload_is_rejected() {
+        let req = InferRequest { key: "k".into(), inputs: vec![HostTensor::f32(vec![1], vec![1.0])] };
+        let mut buf = Vec::new();
+        encode_infer_request(&req, &mut buf);
+        let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+        // truncated payload
+        assert!(decode_infer_request(&buf[HEADER_LEN..HEADER_LEN + len - 2]).is_err());
+        // trailing garbage
+        let mut long = buf[HEADER_LEN..HEADER_LEN + len].to_vec();
+        long.push(0);
+        assert!(decode_infer_request(&long).is_err());
+    }
+}

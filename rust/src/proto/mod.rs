@@ -1,0 +1,595 @@
+//! The typed wire protocol: one `Request`/`Response` surface shared by
+//! the blocking service (`coordinator::service`) and the concurrent
+//! pool (`serve::pool`), so the two paths cannot drift.
+//!
+//! Requests arrive as JSON lines (the default dialect, one object per
+//! line) or — after a `{"cmd":"hello","wire":"bin1"}` handshake — as
+//! CRC-checked binary frames ([`frame`]) for the `infer` hot path.
+//! Parsing goes through `util::json::Reader` directly into these typed
+//! structs: no intermediate `Value` tree on the hot path, f32 payloads
+//! decoded in a single pass.  Responses serialize into a reusable
+//! per-connection buffer via [`Response::write_json`]; the JSON and
+//! binary encodings of an infer reply are bit-identical by construction
+//! (JSON text is Rust's shortest-roundtrip float form, bin1 is the raw
+//! f32 bits).
+//!
+//! The connection loop both servers share lives in [`wire`].
+
+pub mod frame;
+pub mod wire;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::jobs::{InferReply, JobResult, PackSummary};
+use crate::coordinator::metrics;
+use crate::runtime::cpu::ops::Arr;
+use crate::runtime::EngineHandle;
+use crate::tensor::HostTensor;
+use crate::util::json::{self, Json, Reader};
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+
+/// Hard cap on one JSON-lines request.  A single multi-gigabyte line
+/// must not OOM a worker: past this the connection gets a typed
+/// `too_large` reply and is closed.
+pub const MAX_LINE_BYTES: usize = 8 << 20;
+
+/// Hard cap on one bin1 frame payload (binary tensors are denser than
+/// their JSON spelling, so the frame cap is the larger of the two).
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// The wire value of the shed response's `error` field.
+pub const OVERLOADED: &str = "overloaded";
+
+/// A parsed request — every command both servers accept.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Ping,
+    Models,
+    Metrics,
+    /// Wire negotiation; handled inside the connection loop.
+    Hello { wire: String },
+    Quantize { cfg: Box<ExperimentConfig>, stream: bool },
+    Pack { cfg: Box<ExperimentConfig>, po2: bool },
+    Infer(InferRequest),
+    Shutdown,
+    /// Anything else: answered with the typed `unknown_cmd` error.
+    Unknown { cmd: String },
+}
+
+/// An `infer` request: registry key plus decoded input tensors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferRequest {
+    pub key: String,
+    pub inputs: Vec<HostTensor>,
+}
+
+impl Request {
+    /// Parse one JSON line.  `infer` goes through the borrowing reader
+    /// straight into [`InferRequest`] (no `Json` tree); `quantize` /
+    /// `pack` build the owned tree because [`ExperimentConfig`] decodes
+    /// from one (cold path: those jobs run for seconds to minutes).
+    pub fn from_line(line: &str) -> Result<Request> {
+        let mut cmd = String::new();
+        let mut hello_wire: Option<String> = None;
+        let mut r = Reader::new(line);
+        let scan = r
+            .obj(|r, k| match k {
+                "cmd" => {
+                    cmd = r.string_cow()?.into_owned();
+                    Ok(())
+                }
+                "wire" => {
+                    hello_wire = Some(r.string_cow()?.into_owned());
+                    Ok(())
+                }
+                _ => r.skip_value(0),
+            })
+            .and_then(|_| r.expect_end());
+        scan.map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
+        Ok(match cmd.as_str() {
+            "ping" => Request::Ping,
+            "models" => Request::Models,
+            "metrics" => Request::Metrics,
+            "shutdown" => Request::Shutdown,
+            "hello" => Request::Hello { wire: hello_wire.unwrap_or_else(|| "json".into()) },
+            "infer" => Request::Infer(parse_infer(line)?),
+            "quantize" => {
+                let req: Json =
+                    line.parse().map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
+                let cfg = ExperimentConfig::from_json(&req)?;
+                let stream = req.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+                Request::Quantize { cfg: Box::new(cfg), stream }
+            }
+            "pack" => {
+                let req: Json =
+                    line.parse().map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
+                let cfg = ExperimentConfig::from_json(&req)?;
+                let po2 = req.get("po2").and_then(|v| v.as_bool()).unwrap_or(true);
+                Request::Pack { cfg: Box::new(cfg), po2 }
+            }
+            _ => Request::Unknown { cmd },
+        })
+    }
+
+    /// Serialize to one JSON line (no trailing newline) — the client
+    /// half of the protocol, and the round-trip anchor for tests.
+    pub fn write_json(&self, out: &mut String) {
+        match self {
+            Request::Ping => out.push_str(r#"{"cmd":"ping"}"#),
+            Request::Models => out.push_str(r#"{"cmd":"models"}"#),
+            Request::Metrics => out.push_str(r#"{"cmd":"metrics"}"#),
+            Request::Shutdown => out.push_str(r#"{"cmd":"shutdown"}"#),
+            Request::Hello { wire } => {
+                out.push_str(r#"{"cmd":"hello","wire":"#);
+                let _ = json::write_escaped(out, wire);
+                out.push('}');
+            }
+            Request::Unknown { cmd } => {
+                out.push_str(r#"{"cmd":"#);
+                let _ = json::write_escaped(out, cmd);
+                out.push('}');
+            }
+            Request::Quantize { cfg, stream } => {
+                let mut j = cfg.to_json();
+                if let Json::Obj(m) = &mut j {
+                    m.insert("cmd".into(), Json::Str("quantize".into()));
+                    if *stream {
+                        m.insert("stream".into(), Json::Bool(true));
+                    }
+                }
+                out.push_str(&j.dump());
+            }
+            Request::Pack { cfg, po2 } => {
+                let mut j = cfg.to_json();
+                if let Json::Obj(m) = &mut j {
+                    m.insert("cmd".into(), Json::Str("pack".into()));
+                    m.insert("po2".into(), Json::Bool(*po2));
+                }
+                out.push_str(&j.dump());
+            }
+            Request::Infer(ir) => write_infer_request(ir, out),
+        }
+    }
+}
+
+/// Infer request writer (keys alphabetical, matching `Json::Obj` dumps).
+fn write_infer_request(ir: &InferRequest, out: &mut String) {
+    let ncf = ir.inputs.len() == 2
+        && ir.inputs.iter().all(|t| matches!(t.data, crate::tensor::Data::I32(_)));
+    out.push_str(r#"{"cmd":"infer""#);
+    if ncf {
+        out.push_str(r#","items":"#);
+        write_i32_arr(ir.inputs[1].i(), out);
+        out.push_str(r#","key":"#);
+        let _ = json::write_escaped(out, &ir.key);
+        out.push_str(r#","users":"#);
+        write_i32_arr(ir.inputs[0].i(), out);
+    } else {
+        out.push_str(r#","key":"#);
+        let _ = json::write_escaped(out, &ir.key);
+        let t = &ir.inputs[0];
+        if t.shape.len() == 2 {
+            // nested rows
+            out.push_str(r#","x":["#);
+            let cols = t.shape[1];
+            for (i, row) in t.f().chunks(cols.max(1)).enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_f32_arr(row, out);
+            }
+            out.push(']');
+        } else {
+            out.push_str(r#","shape":["#);
+            for (i, d) in t.shape.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "{d}");
+            }
+            out.push_str(r#"],"x":"#);
+            write_f32_arr(t.f(), out);
+        }
+    }
+    out.push('}');
+}
+
+fn write_f32_arr(xs: &[f32], out: &mut String) {
+    out.push('[');
+    for (i, &v) in xs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = json::write_num(out, v as f64);
+    }
+    out.push(']');
+}
+
+fn write_i32_arr(xs: &[i32], out: &mut String) {
+    out.push('[');
+    for (i, &v) in xs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{v}");
+    }
+    out.push(']');
+}
+
+/// Decode an infer line in one borrowing pass: `users`+`items` i32
+/// arrays (NCF), nested `x` rows (feature models), or flat `x` +
+/// `shape` (images).  Tensor data goes straight from the text into its
+/// final `Vec<f32>` — no `Json` tree, no per-element boxing.
+fn parse_infer(line: &str) -> Result<InferRequest> {
+    let mut key: Option<String> = None;
+    let mut model: Option<String> = None;
+    let mut users: Option<Vec<i32>> = None;
+    let mut items: Option<Vec<i32>> = None;
+    let mut shape: Option<Vec<usize>> = None;
+    let mut saw_x = false;
+    let mut x_flat = false;
+    let mut x_rows = 0usize;
+    let mut x_cols = 0usize;
+    let mut data: Vec<f32> = Vec::new();
+    let mut r = Reader::new(line);
+    let scan = r
+        .obj(|r, k| match k {
+            "cmd" => r.skip_value(0),
+            "key" => {
+                key = Some(r.string_cow()?.into_owned());
+                Ok(())
+            }
+            "model" => {
+                model = Some(r.string_cow()?.into_owned());
+                Ok(())
+            }
+            "users" => {
+                users = Some(parse_i32_arr(r)?);
+                Ok(())
+            }
+            "items" => {
+                items = Some(parse_i32_arr(r)?);
+                Ok(())
+            }
+            "shape" => {
+                let mut s = Vec::new();
+                r.arr(|r| {
+                    s.push(r.number()? as usize);
+                    Ok(())
+                })?;
+                shape = Some(s);
+                Ok(())
+            }
+            "x" => {
+                saw_x = true;
+                r.arr(|r| {
+                    if r.peek() == Some(b'[') {
+                        if x_flat {
+                            return Err("mixed flat and nested 'x'".into());
+                        }
+                        let n = r.f32_array(&mut data)?;
+                        if x_rows == 0 {
+                            x_cols = n;
+                        } else if n != x_cols {
+                            return Err(format!("ragged 'x' rows ({n} vs {x_cols})"));
+                        }
+                        x_rows += 1;
+                    } else {
+                        if x_rows > 0 {
+                            return Err("mixed flat and nested 'x'".into());
+                        }
+                        x_flat = true;
+                        data.push(r.number()? as f32);
+                    }
+                    Ok(())
+                })
+            }
+            _ => r.skip_value(0),
+        })
+        .and_then(|_| r.expect_end());
+    scan.map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
+
+    let key = key.or(model).context("infer needs 'key' (from pack) or 'model'")?;
+    if let (Some(u), Some(it)) = (users, items) {
+        let ut = HostTensor::i32(vec![u.len()], u);
+        let it = HostTensor::i32(vec![it.len()], it);
+        return Ok(InferRequest { key, inputs: vec![ut, it] });
+    }
+    if !saw_x {
+        anyhow::bail!("infer needs 'x' (vision) or 'users'+'items' (ncf)");
+    }
+    if x_rows > 0 {
+        return Ok(InferRequest { key, inputs: vec![HostTensor::f32(vec![x_rows, x_cols], data)] });
+    }
+    if !x_flat {
+        anyhow::bail!("'x' is empty");
+    }
+    let shape = shape.context("flat 'x' needs a 'shape' array")?;
+    if shape.iter().product::<usize>() != data.len() {
+        anyhow::bail!("shape {shape:?} does not cover {} values", data.len());
+    }
+    Ok(InferRequest { key, inputs: vec![HostTensor::f32(shape, data)] })
+}
+
+fn parse_i32_arr(r: &mut Reader) -> Result<Vec<i32>, String> {
+    let mut out = Vec::new();
+    r.arr(|r| {
+        out.push(r.number()? as i32);
+        Ok(())
+    })?;
+    Ok(out)
+}
+
+/// The prediction rule both encodings share: argmax (first max wins)
+/// for multi-class rows, `v > 0` for single-logit rows.
+pub fn predict_row(row: &[f32]) -> i64 {
+    if row.len() > 1 {
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        best as i64
+    } else if row.first().is_some_and(|&v| v > 0.0) {
+        1
+    } else {
+        0
+    }
+}
+
+/// A typed response — every reply shape either server can send.
+#[derive(Debug, Clone)]
+pub enum Response {
+    Pong,
+    Models { models: Vec<String> },
+    Metrics { metrics: Json },
+    /// The quantize result subtree (built once per minutes-long job).
+    Quantize { result: Json },
+    Pack { packed: PackSummary },
+    Infer { reply: InferReply },
+    Hello { wire: String },
+    Stopping,
+    Error { msg: String },
+    UnknownCmd { cmd: String },
+    TooLarge { limit_bytes: usize },
+    Overloaded { retry_after_ms: u64 },
+}
+
+impl Response {
+    pub fn error(msg: impl Into<String>) -> Response {
+        Response::Error { msg: msg.into() }
+    }
+
+    pub fn models(eng: &EngineHandle) -> Response {
+        Response::Models { models: eng.manifest().models.keys().cloned().collect() }
+    }
+
+    pub fn metrics() -> Response {
+        Response::Metrics { metrics: metrics::dump() }
+    }
+
+    /// The quantize result: metrics, calibration trace, layer masks and
+    /// a lossless config echo (the run is reproducible from the
+    /// response alone).
+    pub fn quantize(cfg: &ExperimentConfig, res: &JobResult) -> Response {
+        let bools = |v: &[bool]| Json::Arr(v.iter().map(|&b| Json::Bool(b)).collect());
+        let trace = Json::Arr(res.outcome.trace.iter().map(|t| t.to_json()).collect());
+        let joint = match cfg.method {
+            crate::config::Method::Lapq => cfg.lapq.joint.optimizer.name(),
+            _ => "none",
+        };
+        let result = Json::obj(vec![
+            ("model", Json::Str(res.model.clone())),
+            ("bits", Json::Str(res.bits_label.clone())),
+            ("method", Json::Str(res.method.clone())),
+            ("joint", Json::Str(joint.into())),
+            ("fp32_metric", Json::Num(res.fp32_metric as f64)),
+            ("quant_metric", Json::Num(res.quant_metric as f64)),
+            ("calib_loss", Json::Num(res.outcome.calib_loss)),
+            ("init_loss", Json::Num(res.outcome.init_loss)),
+            ("fp32_calib_loss", Json::Num(res.outcome.fp32_calib_loss)),
+            ("joint_evals", Json::Num(res.outcome.joint_evals as f64)),
+            ("active_w", bools(&res.outcome.mask.weights)),
+            ("active_a", bools(&res.outcome.mask.acts)),
+            ("trace", trace),
+            ("config", cfg.to_json()),
+            ("seconds", Json::Num(res.seconds)),
+        ]);
+        Response::Quantize { result }
+    }
+
+    /// Serialize as one JSON line (no trailing newline) into a
+    /// caller-reused buffer.  Object keys are alphabetical, matching
+    /// the `Json::Obj` (BTreeMap) dumps this replaces byte for byte.
+    pub fn write_json(&self, out: &mut String) {
+        match self {
+            Response::Pong => out.push_str(r#"{"ok":true,"pong":true}"#),
+            Response::Stopping => out.push_str(r#"{"ok":true,"stopping":true}"#),
+            Response::Hello { wire } => {
+                out.push_str(r#"{"ok":true,"wire":"#);
+                let _ = json::write_escaped(out, wire);
+                out.push('}');
+            }
+            Response::Models { models } => {
+                out.push_str(r#"{"models":["#);
+                for (i, m) in models.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    let _ = json::write_escaped(out, m);
+                }
+                out.push_str(r#"],"ok":true}"#);
+            }
+            Response::Metrics { metrics } => {
+                let _ = write!(out, r#"{{"metrics":{metrics},"ok":true}}"#);
+            }
+            Response::Quantize { result } => {
+                let _ = write!(out, r#"{{"ok":true,"result":{result}}}"#);
+            }
+            Response::Pack { packed } => write_pack(packed, out),
+            Response::Infer { reply } => write_infer_reply(reply, out),
+            Response::Error { msg } => {
+                out.push_str(r#"{"error":"#);
+                let _ = json::write_escaped(out, msg);
+                out.push_str(r#","ok":false}"#);
+            }
+            Response::UnknownCmd { cmd } => {
+                out.push_str(r#"{"cmd":"#);
+                let _ = json::write_escaped(out, cmd);
+                out.push_str(r#","error":"unknown_cmd","ok":false}"#);
+            }
+            Response::TooLarge { limit_bytes } => {
+                let _ = write!(
+                    out,
+                    r#"{{"error":"too_large","limit_bytes":{limit_bytes},"ok":false}}"#
+                );
+            }
+            Response::Overloaded { retry_after_ms } => {
+                let _ = write!(
+                    out,
+                    r#"{{"error":"overloaded","ok":false,"retry_after_ms":{retry_after_ms}}}"#
+                );
+            }
+        }
+    }
+
+    /// Parse a response line back into its typed form (clients, tests).
+    pub fn from_line(line: &str) -> Result<Response, String> {
+        let j: Json = line.parse()?;
+        let ok = j.get("ok").and_then(|v| v.as_bool()).ok_or("response missing 'ok'")?;
+        let str_of = |j: &Json, k: &str| {
+            j.get(k).and_then(|v| v.as_str()).map(str::to_string).unwrap_or_default()
+        };
+        if !ok {
+            let err = str_of(&j, "error");
+            return Ok(match err.as_str() {
+                "unknown_cmd" => Response::UnknownCmd { cmd: str_of(&j, "cmd") },
+                "too_large" => Response::TooLarge {
+                    limit_bytes: j.get("limit_bytes").and_then(|v| v.as_usize()).unwrap_or(0),
+                },
+                OVERLOADED => Response::Overloaded {
+                    retry_after_ms: j
+                        .get("retry_after_ms")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0) as u64,
+                },
+                _ => Response::Error { msg: err },
+            });
+        }
+        if j.get("pong").is_some() {
+            Ok(Response::Pong)
+        } else if j.get("stopping").is_some() {
+            Ok(Response::Stopping)
+        } else if let Some(w) = j.get("wire") {
+            Ok(Response::Hello { wire: w.as_str().unwrap_or_default().to_string() })
+        } else if let Some(m) = j.get("models") {
+            let models = m
+                .as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_str().map(str::to_string)).collect())
+                .unwrap_or_default();
+            Ok(Response::Models { models })
+        } else if let Some(m) = j.get("metrics") {
+            Ok(Response::Metrics { metrics: m.clone() })
+        } else if let Some(p) = j.get("packed") {
+            Ok(Response::Pack { packed: pack_from_json(p) })
+        } else if let Some(r) = j.get("result") {
+            if r.get("logits").is_some() {
+                Ok(Response::Infer { reply: infer_reply_from_json(r)? })
+            } else {
+                Ok(Response::Quantize { result: r.clone() })
+            }
+        } else {
+            Err("unrecognized response shape".into())
+        }
+    }
+}
+
+/// `{"ok":true,"packed":{...}}` — keys alphabetical.
+fn write_pack(s: &PackSummary, out: &mut String) {
+    out.push_str(r#"{"ok":true,"packed":{"bits":"#);
+    let _ = json::write_escaped(out, &s.bits_label);
+    let _ = write!(out, r#","f32_bytes":{}"#, s.f32_bytes);
+    out.push_str(r#","fp32_metric":"#);
+    let _ = json::write_num(out, s.fp32_metric as f64);
+    let _ = write!(out, r#","int_params":{}"#, s.int_params);
+    out.push_str(r#","key":"#);
+    let _ = json::write_escaped(out, &s.key);
+    out.push_str(r#","method":"#);
+    let _ = json::write_escaped(out, &s.method);
+    out.push_str(r#","model":"#);
+    let _ = json::write_escaped(out, &s.model);
+    let _ = write!(out, r#","packed_bytes":{}"#, s.packed_bytes);
+    out.push_str(r#","quant_metric":"#);
+    let _ = json::write_num(out, s.quant_metric as f64);
+    out.push_str(r#","seconds":"#);
+    let _ = json::write_num(out, s.seconds);
+    out.push_str("}}");
+}
+
+/// `{"ok":true,"result":{...}}` for infer — keys alphabetical
+/// (`int_layers`, `key`, `logits`, `predictions`, `rows`, `seconds`),
+/// written straight into the reusable buffer: no `Json` tree per reply.
+fn write_infer_reply(reply: &InferReply, out: &mut String) {
+    let c = reply.logits.last_dim().max(1);
+    let _ = write!(out, r#"{{"ok":true,"result":{{"int_layers":{}"#, reply.int_layers);
+    out.push_str(r#","key":"#);
+    let _ = json::write_escaped(out, &reply.key);
+    out.push_str(r#","logits":["#);
+    let mut preds: Vec<i64> = Vec::with_capacity(reply.logits.data.len() / c.max(1) + 1);
+    for (i, row) in reply.logits.data.chunks(c).enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        write_f32_arr(row, out);
+        preds.push(predict_row(row));
+    }
+    out.push_str(r#"],"predictions":["#);
+    for (i, p) in preds.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{p}");
+    }
+    let _ = write!(out, r#"],"rows":{},"seconds":"#, reply.rows);
+    let _ = json::write_num(out, reply.seconds);
+    out.push_str("}}");
+}
+
+fn pack_from_json(p: &Json) -> PackSummary {
+    let s = |k: &str| p.get(k).and_then(|v| v.as_str()).unwrap_or_default().to_string();
+    let n = |k: &str| p.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+    let f = |k: &str| p.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    PackSummary {
+        key: s("key"),
+        model: s("model"),
+        bits_label: s("bits"),
+        method: s("method"),
+        int_params: n("int_params"),
+        f32_bytes: n("f32_bytes"),
+        packed_bytes: n("packed_bytes"),
+        fp32_metric: f("fp32_metric") as f32,
+        quant_metric: f("quant_metric") as f32,
+        seconds: f("seconds"),
+    }
+}
+
+fn infer_reply_from_json(r: &Json) -> Result<InferReply, String> {
+    let rows_json = r.get("logits").and_then(|v| v.as_arr()).ok_or("missing logits")?;
+    let cols = rows_json.first().and_then(|v| v.as_arr()).map(|a| a.len()).unwrap_or(0);
+    let mut data = Vec::with_capacity(rows_json.len() * cols);
+    for row in rows_json {
+        let row = row.as_arr().ok_or("logits rows must be arrays")?;
+        if row.len() != cols {
+            return Err("ragged logits".into());
+        }
+        data.extend(row.iter().map(|v| v.as_f64().unwrap_or(f64::NAN) as f32));
+    }
+    Ok(InferReply {
+        key: r.get("key").and_then(|v| v.as_str()).unwrap_or_default().to_string(),
+        logits: Arr::new(vec![rows_json.len(), cols], data),
+        rows: r.get("rows").and_then(|v| v.as_usize()).unwrap_or(0),
+        int_layers: r.get("int_layers").and_then(|v| v.as_usize()).unwrap_or(0),
+        seconds: r.get("seconds").and_then(|v| v.as_f64()).unwrap_or(0.0),
+    })
+}

@@ -1,0 +1,388 @@
+//! The connection loop both servers share: bounded reads, per-connection
+//! wire negotiation, panic containment, and reusable response buffers.
+//!
+//! A connection starts in JSON-lines mode.  The reader peeks one byte:
+//! `0xBF` (invalid as a UTF-8 start) means a bin1 frame, anything else
+//! a JSON line.  `{"cmd":"hello","wire":"bin1"}` switches the
+//! connection to binary infer replies; every other response — and every
+//! error, in either mode — stays a JSON line, so clients can always
+//! fall back to the line parser.
+//!
+//! Read bounds: a line longer than [`MAX_LINE_BYTES`] or a frame larger
+//! than [`MAX_FRAME_BYTES`] gets the typed `too_large` reply and the
+//! connection is closed (a line that long cannot be resynchronized
+//! without reading it, which is exactly the OOM this cap prevents).
+
+use super::frame;
+use super::{Request, Response, MAX_FRAME_BYTES, MAX_LINE_BYTES};
+use crate::coordinator::jobs::InferReply;
+use crate::coordinator::metrics;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Per-connection encoding, negotiated by `hello`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireMode {
+    Json,
+    Bin1,
+}
+
+/// One unit of input from the wire.
+pub enum Incoming {
+    /// A complete JSON line (no terminator, `\r` stripped).
+    Line,
+    /// A verified bin1 frame of this kind; payload in the reader's buffer.
+    Frame(u8),
+    /// Clean end of stream (or a read error — either way, stop).
+    Eof,
+    /// The line/frame exceeded its cap; reply `too_large`, then close.
+    TooLarge { limit_bytes: usize },
+    /// Undecodable input (bad magic, CRC mismatch, invalid UTF-8):
+    /// reply with the error, then close — the stream cannot be resynced.
+    Corrupt(String),
+}
+
+/// Bounded reader over a stream: JSON lines and bin1 frames through one
+/// reusable buffer.
+pub struct WireReader<R: Read> {
+    r: BufReader<R>,
+    buf: Vec<u8>,
+}
+
+impl<R: Read> WireReader<R> {
+    pub fn new(inner: R) -> WireReader<R> {
+        WireReader { r: BufReader::new(inner), buf: Vec::new() }
+    }
+
+    /// The bytes of the last `Line`/`Frame` result.
+    pub fn payload(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// The last `Line` as text (always valid: `next` checks UTF-8).
+    pub fn line(&self) -> &str {
+        std::str::from_utf8(&self.buf).unwrap_or("")
+    }
+
+    /// Read the next line or frame into the internal buffer.
+    pub fn next(&mut self) -> Incoming {
+        self.buf.clear();
+        let first = loop {
+            match self.r.fill_buf() {
+                Ok([]) => return Incoming::Eof,
+                Ok(avail) => break avail[0],
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return Incoming::Eof,
+            }
+        };
+        if first == frame::MARKER {
+            self.next_frame()
+        } else {
+            self.next_line()
+        }
+    }
+
+    fn next_line(&mut self) -> Incoming {
+        loop {
+            let (consumed, done) = {
+                let avail = match self.r.fill_buf() {
+                    Ok(a) => a,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => return Incoming::Eof,
+                };
+                if avail.is_empty() {
+                    // EOF mid-line: surface what we have (mirrors
+                    // BufRead::read_line).
+                    if self.buf.is_empty() {
+                        return Incoming::Eof;
+                    }
+                    (0, true)
+                } else {
+                    match avail.iter().position(|&b| b == b'\n') {
+                        Some(p) => {
+                            self.buf.extend_from_slice(&avail[..p]);
+                            (p + 1, true)
+                        }
+                        None => {
+                            self.buf.extend_from_slice(avail);
+                            (avail.len(), false)
+                        }
+                    }
+                }
+            };
+            self.r.consume(consumed);
+            if self.buf.len() > MAX_LINE_BYTES {
+                return Incoming::TooLarge { limit_bytes: MAX_LINE_BYTES };
+            }
+            if done {
+                if self.buf.last() == Some(&b'\r') {
+                    self.buf.pop();
+                }
+                if std::str::from_utf8(&self.buf).is_err() {
+                    return Incoming::Corrupt("request line is not UTF-8".into());
+                }
+                return Incoming::Line;
+            }
+        }
+    }
+
+    fn next_frame(&mut self) -> Incoming {
+        let mut header = [0u8; frame::HEADER_LEN];
+        if let Err(e) = self.r.read_exact(&mut header) {
+            return Incoming::Corrupt(format!("truncated frame header: {e}"));
+        }
+        if header[0] != frame::MARKER || header[1] != frame::MAGIC2 {
+            return Incoming::Corrupt("bad frame magic".into());
+        }
+        if header[2] != frame::VERSION {
+            return Incoming::Corrupt(format!("unsupported frame version {}", header[2]));
+        }
+        let kind = header[3];
+        let len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
+        if len > MAX_FRAME_BYTES {
+            return Incoming::TooLarge { limit_bytes: MAX_FRAME_BYTES };
+        }
+        self.buf.resize(len, 0);
+        if let Err(e) = self.r.read_exact(&mut self.buf) {
+            return Incoming::Corrupt(format!("truncated frame payload: {e}"));
+        }
+        let mut crc = [0u8; frame::CRC_LEN];
+        if let Err(e) = self.r.read_exact(&mut crc) {
+            return Incoming::Corrupt(format!("truncated frame crc: {e}"));
+        }
+        if u32::from_le_bytes(crc) != frame::crc32(&self.buf) {
+            return Incoming::Corrupt("frame crc mismatch".into());
+        }
+        Incoming::Frame(kind)
+    }
+}
+
+/// Serve one connection to EOF (or `budget` requests): the loop both
+/// servers run.  `handle` turns a parsed [`Request`] into a
+/// [`Response`]; the raw writer it also receives is for mid-request
+/// `{"event":...}` stream frames.  Panics inside parse or handle become
+/// structured `internal panic` errors; I/O errors end the connection,
+/// never the server.  Returns how many requests were handled.
+pub fn serve_conn<F>(stream: TcpStream, budget: usize, mut handle: F) -> usize
+where
+    F: FnMut(Request, &mut dyn Write) -> Response,
+{
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "<unknown>".into());
+    log::info!("conn from {peer}");
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => {
+            log::warn!("conn {peer}: clone failed: {e}");
+            return 0;
+        }
+    };
+    let mut reader = WireReader::new(stream);
+    let mut mode = WireMode::Json;
+    // Reused across the connection: the JSON response text and the bin1
+    // frame bytes — zero steady-state allocation on the reply path.
+    let mut out = String::new();
+    let mut bin: Vec<u8> = Vec::new();
+    let mut handled = 0usize;
+    while handled < budget {
+        let (resp, fatal) = match reader.next() {
+            Incoming::Eof => break,
+            Incoming::TooLarge { limit_bytes } => (Response::TooLarge { limit_bytes }, true),
+            Incoming::Corrupt(msg) => (Response::error(msg), true),
+            Incoming::Line => {
+                if reader.line().trim().is_empty() {
+                    continue;
+                }
+                metrics::inc("service_requests");
+                let resp = dispatch_caught(reader.line(), None, &mut mode, &mut handle, &mut writer);
+                (resp, false)
+            }
+            Incoming::Frame(kind) => {
+                metrics::inc("service_requests");
+                let resp = if mode != WireMode::Bin1 {
+                    Response::error("binary frame before a successful hello/bin1 handshake")
+                } else if kind != frame::KIND_INFER_REQ {
+                    Response::error(format!("unexpected frame kind {kind}"))
+                } else {
+                    dispatch_caught("", Some(reader.payload()), &mut mode, &mut handle, &mut writer)
+                };
+                (resp, false)
+            }
+        };
+        if matches!(
+            resp,
+            Response::Error { .. } | Response::UnknownCmd { .. } | Response::TooLarge { .. }
+        ) {
+            metrics::inc("service_errors");
+        }
+        if let Err(e) = write_response(&mut writer, &resp, mode, &mut out, &mut bin) {
+            log::warn!("conn {peer}: write failed: {e}");
+            break;
+        }
+        handled += 1;
+        if fatal {
+            break;
+        }
+    }
+    handled
+}
+
+/// Parse + handle under one `catch_unwind`: a panic anywhere in the
+/// request path becomes a structured error, and the connection (and
+/// server) keep going.
+fn dispatch_caught<F>(
+    line: &str,
+    frame_payload: Option<&[u8]>,
+    mode: &mut WireMode,
+    handle: &mut F,
+    writer: &mut TcpStream,
+) -> Response
+where
+    F: FnMut(Request, &mut dyn Write) -> Response,
+{
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let req = match frame_payload {
+            Some(payload) => match frame::decode_infer_request(payload) {
+                Ok(ir) => Request::Infer(ir),
+                Err(e) => return Response::error(format!("bad frame: {e}")),
+            },
+            None => match Request::from_line(line) {
+                Ok(r) => r,
+                Err(e) => return Response::error(format!("{e:#}")),
+            },
+        };
+        if let Request::Hello { wire } = &req {
+            return match wire.as_str() {
+                "bin1" => {
+                    *mode = WireMode::Bin1;
+                    Response::Hello { wire: "bin1".into() }
+                }
+                "json" => {
+                    *mode = WireMode::Json;
+                    Response::Hello { wire: "json".into() }
+                }
+                other => Response::error(format!("unknown wire '{other}' (want json or bin1)")),
+            };
+        }
+        handle(req, writer)
+    }));
+    match caught {
+        Ok(resp) => resp,
+        Err(p) => Response::error(format!("internal panic: {}", panic_text(p.as_ref()))),
+    }
+}
+
+/// Write one response in the negotiated encoding.  Only a successful
+/// infer reply is ever framed; everything else (including every error)
+/// is a JSON line in both modes.
+fn write_response(
+    w: &mut dyn Write,
+    resp: &Response,
+    mode: WireMode,
+    out: &mut String,
+    bin: &mut Vec<u8>,
+) -> std::io::Result<()> {
+    if mode == WireMode::Bin1 {
+        if let Response::Infer { reply } = resp {
+            frame::encode_infer_reply(reply, bin);
+            w.write_all(bin)?;
+            return w.flush();
+        }
+    }
+    out.clear();
+    resp.write_json(out);
+    out.push('\n');
+    w.write_all(out.as_bytes())?;
+    w.flush()
+}
+
+/// Human text out of a panic payload (for the structured error reply).
+pub fn panic_text(p: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s
+    } else {
+        "opaque panic payload"
+    }
+}
+
+/// Minimal protocol client for tests, benches and scripting: speaks
+/// JSON lines by default, upgrades to bin1 via [`Client::hello_bin1`].
+pub struct Client {
+    writer: TcpStream,
+    reader: WireReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let writer = stream.try_clone().context("clone stream")?;
+        Ok(Client { writer, reader: WireReader::new(stream) })
+    }
+
+    /// Send one request, read one JSON-line response as a `Json` tree.
+    pub fn call(&mut self, req: &Request) -> Result<Json> {
+        let mut line = String::new();
+        req.write_json(&mut line);
+        self.call_raw(&line)
+    }
+
+    /// Send a raw line (tests exercise malformed input through this).
+    pub fn call_raw(&mut self, line: &str) -> Result<Json> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        match self.reader.next() {
+            Incoming::Line => {
+                self.reader.line().parse().map_err(|e| anyhow::anyhow!("bad response: {e}"))
+            }
+            Incoming::Frame(_) => anyhow::bail!("unexpected binary frame"),
+            Incoming::Eof => anyhow::bail!("connection closed"),
+            Incoming::TooLarge { .. } => anyhow::bail!("oversized response"),
+            Incoming::Corrupt(e) => anyhow::bail!("corrupt response: {e}"),
+        }
+    }
+
+    /// Negotiate bin1 on this connection.
+    pub fn hello_bin1(&mut self) -> Result<()> {
+        let resp = self.call(&Request::Hello { wire: "bin1".into() })?;
+        if resp.get("wire").and_then(|v| v.as_str()) != Some("bin1") {
+            anyhow::bail!("handshake refused: {resp:?}");
+        }
+        Ok(())
+    }
+
+    /// Send an infer request as a bin1 frame; the reply is either a
+    /// framed [`InferReply`] (plus server-computed predictions) or a
+    /// JSON error line.
+    pub fn infer_bin(
+        &mut self,
+        req: &super::InferRequest,
+    ) -> Result<(InferReply, Vec<i32>)> {
+        let mut buf = Vec::new();
+        frame::encode_infer_request(req, &mut buf);
+        self.writer.write_all(&buf)?;
+        self.writer.flush()?;
+        match self.reader.next() {
+            Incoming::Frame(frame::KIND_INFER_REP) => frame::decode_infer_reply(self.reader.payload())
+                .map_err(|e| anyhow::anyhow!("bad reply frame: {e}")),
+            Incoming::Frame(k) => anyhow::bail!("unexpected frame kind {k}"),
+            Incoming::Line => {
+                let j: Json = self
+                    .reader
+                    .line()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+                anyhow::bail!(
+                    "infer failed: {}",
+                    j.get("error").and_then(|v| v.as_str()).unwrap_or("unknown error")
+                )
+            }
+            Incoming::Eof => anyhow::bail!("connection closed"),
+            Incoming::TooLarge { .. } => anyhow::bail!("oversized response"),
+            Incoming::Corrupt(e) => anyhow::bail!("corrupt response: {e}"),
+        }
+    }
+}

@@ -362,7 +362,7 @@ impl QuantizedModel {
         let meta_path = dir.join("quantized.json");
         let text = std::fs::read_to_string(&meta_path)
             .with_context(|| format!("reading {meta_path:?}"))?;
-        let meta = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse {meta_path:?}: {e}"))?;
+        let meta = text.parse::<Json>().map_err(|e| anyhow::anyhow!("parse {meta_path:?}: {e}"))?;
         let blob = std::fs::read(dir.join("weights.bin"))
             .with_context(|| format!("reading {dir:?}/weights.bin"))?;
 

@@ -113,7 +113,7 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
-        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let json = text.parse::<Json>().map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
         let mut models = BTreeMap::new();
         let Some(model_objs) = json.req("models").as_obj() else {
             bail!("manifest: models is not an object")

@@ -1,6 +1,7 @@
 //! Admission control for the concurrent server: a bounded connection
-//! queue with backpressure, the typed `overloaded` shed response, and
-//! the exponential-backoff policy the accept loops share.
+//! queue with backpressure and the exponential-backoff policy the
+//! accept loops share (the typed `overloaded` shed response itself is
+//! [`crate::proto::Response::Overloaded`]).
 //!
 //! Backpressure model: the accept loop is never allowed to buffer
 //! unbounded work.  Connections it cannot hand to a worker immediately
@@ -11,7 +12,6 @@
 //! shutdown signal: workers drain what was admitted, then exit.
 
 use crate::coordinator::metrics;
-use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{
@@ -19,19 +19,6 @@ use std::sync::mpsc::{
 };
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
-
-/// The wire value of the shed response's `error` field.
-pub const OVERLOADED: &str = "overloaded";
-
-/// The typed shed response: structured, parseable, and carrying a
-/// retry hint so well-behaved clients back off instead of hammering.
-pub fn shed_response(retry_after_ms: u64) -> Json {
-    Json::obj(vec![
-        ("ok", Json::Bool(false)),
-        ("error", Json::Str(OVERLOADED.into())),
-        ("retry_after_ms", Json::Num(retry_after_ms as f64)),
-    ])
-}
 
 /// Why a push was refused; either way the item comes back to the
 /// caller (to shed with a typed response or drop at shutdown).
@@ -221,17 +208,6 @@ impl Backoff {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn shed_response_shape() {
-        let j = shed_response(25);
-        assert_eq!(j.req("ok").as_bool(), Some(false));
-        assert_eq!(j.req("error").as_str(), Some(OVERLOADED));
-        assert_eq!(j.req("retry_after_ms").as_f64(), Some(25.0));
-        // must survive the wire
-        let back = Json::parse(&j.dump()).unwrap();
-        assert_eq!(back.req("error").as_str(), Some(OVERLOADED));
-    }
 
     #[test]
     fn bounded_queue_sheds_when_full() {

@@ -174,7 +174,7 @@ fn run_parts(
         Ok(r) => r,
         Err(p) => Err(anyhow!(
             "internal panic: {}",
-            crate::coordinator::service::panic_text(p.as_ref())
+            crate::proto::wire::panic_text(p.as_ref())
         )),
     }
 }

@@ -1,7 +1,8 @@
-//! The concurrent server: a worker pool over the blocking JSON-lines
-//! protocol of `coordinator::service`, speaking the exact same wire
-//! format (the response builders are shared, so the two paths cannot
-//! drift).
+//! The concurrent server: a worker pool over the typed wire protocol of
+//! [`crate::proto`], sharing the connection loop
+//! ([`crate::proto::wire::serve_conn`]) and the `Request`/`Response`
+//! surface with the blocking `coordinator::service`, so the two paths
+//! cannot drift.
 //!
 //! Concurrency model:
 //!
@@ -35,12 +36,12 @@ use super::registry::ModelRegistry;
 use crate::config::{ExperimentConfig, ServeCfg};
 use crate::coordinator::jobs::Runner;
 use crate::coordinator::metrics;
-use crate::coordinator::service;
+use crate::coordinator::service::StreamObserver;
+use crate::proto::{wire, Request, Response};
 use crate::runtime::int::PackOpts;
 use crate::runtime::EngineHandle;
-use crate::util::json::Json;
 use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock, RwLockWriteGuard};
@@ -224,7 +225,8 @@ impl PoolServer {
                 // last client, then surface the failure instead of
                 // reporting a clean exit.
                 Err(admission::PushError::Closed(mut s)) => {
-                    let _ = write_line(&mut s, &service::error_json("worker pool is gone".into()));
+                    metrics::inc("service_errors");
+                    let _ = write_line(&mut s, &Response::error("worker pool is gone"));
                     result = Err(anyhow::anyhow!("connection queue closed: worker pool is gone"));
                     break;
                 }
@@ -243,11 +245,14 @@ impl PoolServer {
     }
 }
 
-/// Write one JSON-line frame — the wire protocol's only response shape,
-/// shared by the request loop, the shed path and the dead-pool path.
-fn write_line(w: &mut dyn Write, resp: &Json) -> std::io::Result<()> {
-    w.write_all(resp.dump().as_bytes())?;
-    w.write_all(b"\n")?;
+/// Write one JSON-line response outside the connection loop (the shed
+/// path and the dead-pool path run on the accept thread, before any
+/// worker owns the connection).
+fn write_line(w: &mut dyn Write, resp: &Response) -> std::io::Result<()> {
+    let mut line = String::new();
+    resp.write_json(&mut line);
+    line.push('\n');
+    w.write_all(line.as_bytes())?;
     w.flush()
 }
 
@@ -255,105 +260,64 @@ fn write_line(w: &mut dyn Write, resp: &Json) -> std::io::Result<()> {
 /// and *when to retry* instead of seeing a silent hang or reset.
 fn shed(mut stream: TcpStream, retry_after_ms: u64) {
     metrics::inc("serve_shed");
-    let _ = write_line(&mut stream, &admission::shed_response(retry_after_ms));
+    let _ = write_line(&mut stream, &Response::Overloaded { retry_after_ms });
 }
 
 fn worker_loop(shared: Arc<Shared>, rx: admission::SharedReceiver<TcpStream>) {
     while let Some(stream) = rx.recv() {
         shared.active_conns.fetch_add(1, Ordering::SeqCst);
-        handle_conn(&shared, stream);
+        wire::serve_conn(stream, usize::MAX, |req, writer| dispatch(&shared, req, writer));
         shared.active_conns.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
-/// Serve one connection to EOF.  I/O errors end the connection (logged),
-/// never the worker.
-fn handle_conn(shared: &Shared, stream: TcpStream) {
-    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "<unknown>".into());
-    log::info!("conn from {peer}");
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(e) => {
-            log::warn!("conn {peer}: clone failed: {e}");
-            return;
-        }
-    };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        metrics::inc("service_requests");
-        let resp = dispatch(shared, &line, &mut writer);
-        if let Err(e) = write_line(&mut writer, &resp) {
-            log::warn!("conn {peer}: write failed: {e}");
-            break;
-        }
+/// Same contract as the blocking service: job and validation failures
+/// become structured `{"ok":false}` errors (panics are contained by the
+/// connection loop).
+fn dispatch(shared: &Shared, req: Request, writer: &mut dyn Write) -> Response {
+    match dispatch_inner(shared, req, writer) {
+        Ok(resp) => resp,
+        Err(e) => Response::error(format!("{e:#}")),
     }
 }
 
-/// Same contract as the blocking service: every failure mode — parse
-/// error, job error, a panic unwinding out of a kernel — becomes a
-/// structured `{"ok":false}` response.
-fn dispatch(shared: &Shared, line: &str, writer: &mut dyn Write) -> Json {
-    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        dispatch_inner(shared, line, writer)
-    }));
-    match caught {
-        Ok(Ok(j)) => j,
-        Ok(Err(e)) => service::error_json(format!("{e:#}")),
-        Err(p) => {
-            service::error_json(format!("internal panic: {}", service::panic_text(p.as_ref())))
-        }
-    }
-}
-
-fn dispatch_inner(shared: &Shared, line: &str, writer: &mut dyn Write) -> Result<Json> {
-    let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
-    let cmd = req.get("cmd").and_then(|c| c.as_str()).unwrap_or("");
-    match cmd {
-        "ping" => Ok(service::ping_response()),
-        "models" => Ok(service::models_response(&shared.eng)),
-        "metrics" => Ok(service::metrics_response()),
-        "infer" => {
-            let key = service::infer_key(&req)?;
-            let inputs = service::parse_infer_inputs(&req)?;
-            match shared.batcher.try_submit(key, inputs) {
+fn dispatch_inner(shared: &Shared, req: Request, writer: &mut dyn Write) -> Result<Response> {
+    Ok(match req {
+        Request::Ping => Response::Pong,
+        Request::Models => Response::models(&shared.eng),
+        Request::Metrics => Response::metrics(),
+        Request::Infer(ir) => {
+            match shared.batcher.try_submit(&ir.key, ir.inputs) {
                 // Batcher queue full: typed shed on the request, the
                 // connection itself stays up.
                 None => {
                     metrics::inc("serve_shed");
-                    Ok(admission::shed_response(shared.retry_hint_ms()))
+                    Response::Overloaded { retry_after_ms: shared.retry_hint_ms() }
                 }
-                Some(reply) => Ok(service::infer_response(&reply?)),
+                Some(reply) => Response::Infer { reply: reply? },
             }
         }
-        "quantize" => {
-            let cfg = ExperimentConfig::from_json(&req)?;
+        Request::Quantize { cfg, stream } => {
             let mut runner = shared.write_runner();
-            let res = if service::stream_flag(&req) {
-                let mut obs = service::StreamObserver::new(writer);
+            let res = if stream {
+                let mut obs = StreamObserver::new(writer);
                 runner.run_observed(&cfg, &mut obs)?
             } else {
                 runner.run(&cfg)?
             };
-            Ok(service::quantize_response(&cfg, &res))
+            Response::quantize(&cfg, &res)
         }
-        "pack" => {
-            let cfg = ExperimentConfig::from_json(&req)?;
+        Request::Pack { cfg, po2 } => {
             let mut runner = shared.write_runner();
-            let (sum, _qm) = runner.pack(&cfg, &service::pack_opts_from(&req))?;
-            Ok(service::pack_response(&sum))
+            let (sum, _qm) = runner.pack(&cfg, &PackOpts { po2_scales: po2 })?;
+            Response::Pack { packed: sum }
         }
-        "shutdown" => {
+        Request::Shutdown => {
             shared.stop.store(true, Ordering::SeqCst);
             let _ = TcpStream::connect(shared.addr); // wake the accept loop
-            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("stopping", Json::Bool(true))]))
+            Response::Stopping
         }
-        other => anyhow::bail!("unknown cmd '{other}'"),
-    }
+        Request::Hello { .. } => Response::error("hello outside the connection loop"),
+        Request::Unknown { cmd } => Response::UnknownCmd { cmd },
+    })
 }

@@ -1,12 +1,26 @@
-//! Minimal JSON parser/serializer (substrate for the absent `serde_json`).
+//! Minimal JSON substrate (for the absent `serde_json`): one borrowing
+//! single-pass parser, two front-ends.
 //!
-//! Parses the subset emitted by `python/compile/aot.py` (and full JSON in
-//! practice): objects, arrays, strings with escapes, numbers, bools, null.
-//! Used for `artifacts/manifest.json`, experiment configs, metrics dumps
-//! and the TCP job service wire format.
+//! * [`Reader`] — a pull-parser over `&str` yielding borrowed keys and
+//!   strings (`Cow` borrows unless escapes force a copy) and streaming
+//!   number parses.  The serving hot path decodes requests straight
+//!   into typed structs through it; no intermediate `Value` tree.
+//! * [`Json`] — the owned tree for config files, metrics dumps and
+//!   tests.  `text.parse::<Json>()` (via [`std::str::FromStr`]) and
+//!   [`std::fmt::Display`] route through the same `Reader`/writer code,
+//!   so the two front-ends cannot disagree on the dialect.
+//!
+//! Used for `artifacts/manifest.json`, experiment configs, metrics
+//! dumps and the TCP job service wire format (`crate::proto`).
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+/// Containers deeper than this are rejected: the recursive decoders
+/// (`value_owned` / `skip_value`) must not let wire input pick the
+/// stack depth.
+pub const MAX_DEPTH: usize = 64;
 
 /// A JSON value.  Numbers are kept as f64 (the manifest only needs ints
 /// that fit exactly in f64).
@@ -20,16 +34,30 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-impl Json {
-    pub fn parse(text: &str) -> Result<Json, String> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
-        p.skip_ws();
-        let v = p.value()?;
-        p.skip_ws();
-        if p.i != p.b.len() {
-            return Err(format!("trailing bytes at {}", p.i));
-        }
+impl std::str::FromStr for Json {
+    type Err = String;
+
+    /// Parse a complete JSON document (trailing bytes are an error).
+    /// This is the owned front-end over [`Reader`].
+    fn from_str(text: &str) -> Result<Json, String> {
+        let mut r = Reader::new(text);
+        let v = r.value_owned(0)?;
+        r.expect_end()?;
         Ok(v)
+    }
+}
+
+impl std::fmt::Display for Json {
+    /// Compact JSON text (the wire form; `to_string()` == `dump()`).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.write_to(f)
+    }
+}
+
+impl Json {
+    #[deprecated(note = "use `text.parse::<Json>()` — same Reader, typed front-end")]
+    pub fn parse(text: &str) -> Result<Json, String> {
+        text.parse()
     }
 
     // -- typed accessors ---------------------------------------------------
@@ -105,86 +133,112 @@ impl Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
-    /// Serialize to compact JSON text.
+    /// Serialize to compact JSON text (same bytes as `Display`).
     pub fn dump(&self) -> String {
         let mut s = String::new();
-        self.write(&mut s);
+        let _ = self.write_to(&mut s);
         s
     }
 
-    fn write(&self, out: &mut String) {
+    fn write_to<W: std::fmt::Write>(&self, out: &mut W) -> std::fmt::Result {
         match self {
-            Json::Null => out.push_str("null"),
-            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                if !n.is_finite() {
-                    // JSON has no inf/NaN; `null` keeps the dump parseable
-                    // (degenerate calibrations report non-finite losses).
-                    out.push_str("null");
-                } else if n.fract() == 0.0 && n.abs() < 1e15 {
-                    let _ = write!(out, "{}", *n as i64);
-                } else {
-                    let _ = write!(out, "{n}");
-                }
-            }
-            Json::Str(s) => write_escaped(s, out),
+            Json::Null => out.write_str("null"),
+            Json::Bool(b) => out.write_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => write_num(out, *n),
+            Json::Str(s) => write_escaped(out, s),
             Json::Arr(v) => {
-                out.push('[');
+                out.write_char('[')?;
                 for (i, x) in v.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        out.write_char(',')?;
                     }
-                    x.write(out);
+                    x.write_to(out)?;
                 }
-                out.push(']');
+                out.write_char(']')
             }
             Json::Obj(m) => {
-                out.push('{');
+                out.write_char('{')?;
                 for (i, (k, v)) in m.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        out.write_char(',')?;
                     }
-                    write_escaped(k, out);
-                    out.push(':');
-                    v.write(out);
+                    write_escaped(out, k)?;
+                    out.write_char(':')?;
+                    v.write_to(out)?;
                 }
-                out.push('}');
+                out.write_char('}')
             }
         }
     }
 }
 
-fn write_escaped(s: &str, out: &mut String) {
-    out.push('"');
+/// The one number-formatting rule for the whole wire format.  JSON has
+/// no inf/NaN, so non-finite values become `null` (degenerate
+/// calibrations report non-finite losses and the dump must stay
+/// parseable); whole numbers print as integers; everything else uses
+/// Rust's shortest-roundtrip `f64` text, so identical text <=>
+/// identical bits.
+pub fn write_num<W: std::fmt::Write>(out: &mut W, n: f64) -> std::fmt::Result {
+    if !n.is_finite() {
+        out.write_str("null")
+    } else if n.fract() == 0.0 && n.abs() < 1e15 {
+        write!(out, "{}", n as i64)
+    } else {
+        write!(out, "{n}")
+    }
+}
+
+/// Write `s` as a JSON string literal (quotes + escapes).
+pub fn write_escaped<W: std::fmt::Write>(out: &mut W, s: &str) -> std::fmt::Result {
+    out.write_char('"')?;
     for c in s.chars() {
         match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => {
-                let _ = write!(out, "\\u{:04x}", c as u32);
-            }
-            c => out.push(c),
+            '"' => out.write_str("\\\"")?,
+            '\\' => out.write_str("\\\\")?,
+            '\n' => out.write_str("\\n")?,
+            '\r' => out.write_str("\\r")?,
+            '\t' => out.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(out, "\\u{:04x}", c as u32)?,
+            c => out.write_char(c)?,
         }
     }
-    out.push('"');
+    out.write_char('"')
 }
 
-struct Parser<'a> {
+/// Borrowing single-pass pull-parser.
+///
+/// The caller drives it with the shape it expects — [`Reader::obj`] /
+/// [`Reader::arr`] iterate containers handing the closure each
+/// key/element position, [`Reader::string_cow`] yields the string
+/// *borrowed from the input* unless escapes force a copy,
+/// [`Reader::number`] streams a finite `f64`, and [`Reader::f32_array`]
+/// decodes a numeric array straight into a caller-owned buffer.
+/// Unknown keys are skipped (validated, not built) with
+/// [`Reader::skip_value`].  `value_owned` is the bridge to the [`Json`]
+/// tree — one parser implementation, two front-ends.
+pub struct Reader<'a> {
     b: &'a [u8],
     i: usize,
 }
 
-impl<'a> Parser<'a> {
-    fn skip_ws(&mut self) {
+impl<'a> Reader<'a> {
+    pub fn new(text: &'a str) -> Reader<'a> {
+        Reader { b: text.as_bytes(), i: 0 }
+    }
+
+    /// Current byte offset (for error messages).
+    pub fn pos(&self) -> usize {
+        self.i
+    }
+
+    pub fn skip_ws(&mut self) {
         while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;
         }
     }
 
-    fn peek(&self) -> Option<u8> {
+    pub fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
         self.b.get(self.i).copied()
     }
 
@@ -197,58 +251,97 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    /// After the document: only trailing whitespace is allowed.
+    pub fn expect_end(&mut self) -> Result<(), String> {
         self.skip_ws();
-        match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
-            Some(b'"') => Ok(Json::Str(self.string()?)),
-            Some(b't') => self.lit("true", Json::Bool(true)),
-            Some(b'f') => self.lit("false", Json::Bool(false)),
-            Some(b'n') => self.lit("null", Json::Null),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => Err(format!("unexpected {:?} at {}", other.map(|c| c as char), self.i)),
+        if self.i != self.b.len() {
+            return Err(format!("trailing bytes at {}", self.i));
         }
+        Ok(())
     }
 
-    fn lit(&mut self, s: &str, v: Json) -> Result<Json, String> {
+    fn lit(&mut self, s: &str) -> Result<(), String> {
+        self.skip_ws();
         if self.b[self.i..].starts_with(s.as_bytes()) {
             self.i += s.len();
-            Ok(v)
+            Ok(())
         } else {
             Err(format!("bad literal at {}", self.i))
         }
     }
 
-    fn number(&mut self) -> Result<Json, String> {
+    /// `true` / `false`.
+    pub fn boolean(&mut self) -> Result<bool, String> {
+        match self.peek() {
+            Some(b't') => {
+                self.lit("true")?;
+                Ok(true)
+            }
+            Some(b'f') => {
+                self.lit("false")?;
+                Ok(false)
+            }
+            other => Err(format!("expected bool, got {:?} at {}", other.map(char::from), self.i)),
+        }
+    }
+
+    /// A finite number.  `1e999`, `NaN` and `Infinity` are rejected —
+    /// JSON has no spelling for them and the integer kernels must never
+    /// see one smuggled through the wire.
+    pub fn number(&mut self) -> Result<f64, String> {
+        self.skip_ws();
         let start = self.i;
-        if self.peek() == Some(b'-') {
+        if self.b.get(self.i) == Some(&b'-') {
             self.i += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        while matches!(self.b.get(self.i), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
         {
             self.i += 1;
         }
-        std::str::from_utf8(&self.b[start..self.i])
+        let n = std::str::from_utf8(&self.b[start..self.i])
             .ok()
             .and_then(|s| s.parse::<f64>().ok())
-            .map(Json::Num)
-            .ok_or_else(|| format!("bad number at {start}"))
+            .ok_or_else(|| format!("bad number at {start}"))?;
+        if !n.is_finite() {
+            return Err(format!("non-finite number at {start}"));
+        }
+        Ok(n)
     }
 
-    fn string(&mut self) -> Result<String, String> {
+    /// A string, borrowed from the input when it contains no escapes
+    /// (the hot path: keys and model names), copied otherwise.
+    pub fn string_cow(&mut self) -> Result<Cow<'a, str>, String> {
         self.eat(b'"')?;
-        let mut s = String::new();
+        let b: &'a [u8] = self.b;
+        let start = self.i;
+        // Fast scan: '"' (0x22) and '\\' (0x5c) can't appear inside a
+        // UTF-8 continuation byte, so a byte scan is code-point safe.
         loop {
-            match self.peek() {
+            match b.get(self.i) {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    let s = std::str::from_utf8(&b[start..self.i])
+                        .map_err(|_| "bad utf8".to_string())?;
+                    self.i += 1;
+                    return Ok(Cow::Borrowed(s));
+                }
+                Some(b'\\') => break,
+                Some(_) => self.i += 1,
+            }
+        }
+        // Slow path: escapes force an owned copy; keep the prefix.
+        let mut s = String::new();
+        s.push_str(std::str::from_utf8(&b[start..self.i]).map_err(|_| "bad utf8".to_string())?);
+        loop {
+            match b.get(self.i) {
                 None => return Err("unterminated string".into()),
                 Some(b'"') => {
                     self.i += 1;
-                    return Ok(s);
+                    return Ok(Cow::Owned(s));
                 }
                 Some(b'\\') => {
                     self.i += 1;
-                    match self.peek() {
+                    match b.get(self.i) {
                         Some(b'"') => s.push('"'),
                         Some(b'\\') => s.push('\\'),
                         Some(b'/') => s.push('/'),
@@ -259,7 +352,7 @@ impl<'a> Parser<'a> {
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
                             let hex = std::str::from_utf8(
-                                self.b.get(self.i + 1..self.i + 5).ok_or("bad \\u")?,
+                                b.get(self.i + 1..self.i + 5).ok_or("bad \\u")?,
                             )
                             .map_err(|_| "bad \\u")?;
                             let cp = u32::from_str_radix(hex, 16).map_err(|_| "bad \\u")?;
@@ -271,8 +364,7 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                 }
                 Some(_) => {
-                    // UTF-8 passthrough: copy the full code point.
-                    let rest = &self.b[self.i..];
+                    let rest = &b[self.i..];
                     let ch_len = utf8_len(rest[0]);
                     let chunk = std::str::from_utf8(&rest[..ch_len.min(rest.len())])
                         .map_err(|_| "bad utf8")?;
@@ -283,57 +375,134 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, String> {
-        self.eat(b'[')?;
-        let mut v = Vec::new();
-        self.skip_ws();
-        if self.peek() == Some(b']') {
+    /// Iterate an object: `f` is called at each value position with the
+    /// borrowed key and must consume exactly that value (parse it or
+    /// [`Reader::skip_value`] it).
+    pub fn obj<F>(&mut self, mut f: F) -> Result<(), String>
+    where
+        F: FnMut(&mut Reader<'a>, &str) -> Result<(), String>,
+    {
+        self.eat(b'{')?;
+        if self.peek() == Some(b'}') {
             self.i += 1;
-            return Ok(Json::Arr(v));
+            return Ok(());
         }
         loop {
-            v.push(self.value()?);
-            self.skip_ws();
+            let key = self.string_cow()?;
+            self.eat(b':')?;
+            f(self, &key)?;
             match self.peek() {
-                Some(b',') => {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
                     self.i += 1;
+                    return Ok(());
                 }
+                _ => return Err(format!("bad object at {}", self.i)),
+            }
+        }
+    }
+
+    /// Iterate an array: `f` is called at each element position and
+    /// must consume exactly one value.
+    pub fn arr<F>(&mut self, mut f: F) -> Result<(), String>
+    where
+        F: FnMut(&mut Reader<'a>) -> Result<(), String>,
+    {
+        self.eat(b'[')?;
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            f(self)?;
+            match self.peek() {
+                Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
-                    return Ok(Json::Arr(v));
+                    return Ok(());
                 }
                 _ => return Err(format!("bad array at {}", self.i)),
             }
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
-        self.eat(b'{')?;
-        let mut m = BTreeMap::new();
-        self.skip_ws();
-        if self.peek() == Some(b'}') {
-            self.i += 1;
-            return Ok(Json::Obj(m));
-        }
-        loop {
-            self.skip_ws();
-            let k = self.string()?;
-            self.skip_ws();
-            self.eat(b':')?;
-            let v = self.value()?;
-            m.insert(k, v);
-            self.skip_ws();
-            match self.peek() {
-                Some(b',') => {
-                    self.i += 1;
-                }
-                Some(b'}') => {
-                    self.i += 1;
-                    return Ok(Json::Obj(m));
-                }
-                _ => return Err(format!("bad object at {}", self.i)),
+    /// Decode a numeric array in one pass into `out` (the tensor hot
+    /// path: no `Json` tree, no per-element allocation).  Returns how
+    /// many values were appended.
+    pub fn f32_array(&mut self, out: &mut Vec<f32>) -> Result<usize, String> {
+        let n0 = out.len();
+        self.arr(|r| {
+            let v = r.number()?;
+            out.push(v as f32);
+            Ok(())
+        })?;
+        Ok(out.len() - n0)
+    }
+
+    /// Parse one value into the owned [`Json`] tree.  `depth` is the
+    /// current container nesting (pass 0 at the top).
+    pub fn value_owned(&mut self, depth: usize) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => {
+                self.check_depth(depth)?;
+                let mut m = BTreeMap::new();
+                self.obj(|r, k| {
+                    let key = k.to_string();
+                    let v = r.value_owned(depth + 1)?;
+                    m.insert(key, v);
+                    Ok(())
+                })?;
+                Ok(Json::Obj(m))
+            }
+            Some(b'[') => {
+                self.check_depth(depth)?;
+                let mut v = Vec::new();
+                self.arr(|r| {
+                    v.push(r.value_owned(depth + 1)?);
+                    Ok(())
+                })?;
+                Ok(Json::Arr(v))
+            }
+            Some(b'"') => Ok(Json::Str(self.string_cow()?.into_owned())),
+            Some(b't') | Some(b'f') => Ok(Json::Bool(self.boolean()?)),
+            Some(b'n') => {
+                self.lit("null")?;
+                Ok(Json::Null)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => Ok(Json::Num(self.number()?)),
+            other => {
+                Err(format!("unexpected {:?} at {}", other.map(char::from), self.i))
             }
         }
+    }
+
+    /// Validate and discard one value (unknown keys on the hot path).
+    /// Same grammar as `value_owned`, nothing built.
+    pub fn skip_value(&mut self, depth: usize) -> Result<(), String> {
+        match self.peek() {
+            Some(b'{') => {
+                self.check_depth(depth)?;
+                self.obj(|r, _k| r.skip_value(depth + 1))
+            }
+            Some(b'[') => {
+                self.check_depth(depth)?;
+                self.arr(|r| r.skip_value(depth + 1))
+            }
+            Some(b'"') => self.string_cow().map(|_| ()),
+            Some(b't') | Some(b'f') => self.boolean().map(|_| ()),
+            Some(b'n') => self.lit("null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number().map(|_| ()),
+            other => {
+                Err(format!("unexpected {:?} at {}", other.map(char::from), self.i))
+            }
+        }
+    }
+
+    fn check_depth(&self, depth: usize) -> Result<(), String> {
+        if depth >= MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at {}", self.i));
+        }
+        Ok(())
     }
 }
 
@@ -350,18 +519,22 @@ fn utf8_len(b: u8) -> usize {
 mod tests {
     use super::*;
 
+    fn parse(text: &str) -> Result<Json, String> {
+        text.parse::<Json>()
+    }
+
     #[test]
     fn parse_scalars() {
-        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
-        assert_eq!(Json::parse("-1.5e2").unwrap(), Json::Num(-150.0));
-        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
-        assert_eq!(Json::parse("null").unwrap(), Json::Null);
-        assert_eq!(Json::parse("\"hi\\n\"").unwrap(), Json::Str("hi\n".into()));
+        assert_eq!(parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(parse("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert_eq!(parse("\"hi\\n\"").unwrap(), Json::Str("hi\n".into()));
     }
 
     #[test]
     fn parse_nested() {
-        let j = Json::parse(r#"{"a": [1, 2, {"b": "c"}], "d": {}}"#).unwrap();
+        let j = parse(r#"{"a": [1, 2, {"b": "c"}], "d": {}}"#).unwrap();
         assert_eq!(j.req("a").as_arr().unwrap().len(), 3);
         assert_eq!(j.req("a").as_arr().unwrap()[2].req("b").as_str(), Some("c"));
     }
@@ -369,9 +542,11 @@ mod tests {
     #[test]
     fn roundtrip() {
         let src = r#"{"m":{"x":[1,2.5,-3],"s":"q\"uo\\te","t":true,"n":null}}"#;
-        let j = Json::parse(src).unwrap();
-        let j2 = Json::parse(&j.dump()).unwrap();
+        let j = parse(src).unwrap();
+        let j2 = parse(&j.dump()).unwrap();
         assert_eq!(j, j2);
+        // Display and dump are the same writer
+        assert_eq!(j.to_string(), j.dump());
     }
 
     #[test]
@@ -383,7 +558,7 @@ mod tests {
             ("ok", Json::Num(1.5)),
         ]);
         let text = j.dump();
-        let back = Json::parse(&text).expect("non-finite dump must stay parseable");
+        let back = parse(&text).expect("non-finite dump must stay parseable");
         assert_eq!(back.req("inf"), &Json::Null);
         assert_eq!(back.req("ninf"), &Json::Null);
         assert_eq!(back.req("nan"), &Json::Null);
@@ -392,24 +567,82 @@ mod tests {
 
     #[test]
     fn rejects_garbage() {
-        assert!(Json::parse("{").is_err());
-        assert!(Json::parse("[1,]").is_err());
-        assert!(Json::parse("[1] x").is_err());
-        assert!(Json::parse("\"unterminated").is_err());
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("[1] x").is_err());
+        assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite_and_deep_nesting() {
+        // JSON has no inf/NaN spelling; an overflowing literal must not
+        // become one either.
+        assert!(parse("1e999").is_err());
+        assert!(parse("nan").is_err());
+        // wire input must not choose the recursion depth
+        let deep = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        assert!(parse(&deep).is_err());
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(parse(&ok).is_ok());
     }
 
     #[test]
     fn unicode_roundtrip() {
-        let j = Json::parse("\"caf\\u00e9 ↦\"").unwrap();
+        let j = parse("\"caf\\u00e9 ↦\"").unwrap();
         assert_eq!(j.as_str(), Some("café ↦"));
-        assert_eq!(Json::parse(&j.dump()).unwrap(), j);
+        assert_eq!(parse(&j.dump()).unwrap(), j);
+    }
+
+    #[test]
+    fn reader_borrows_unescaped_strings() {
+        let mut r = Reader::new(r#""plain""#);
+        match r.string_cow().unwrap() {
+            Cow::Borrowed(s) => assert_eq!(s, "plain"),
+            Cow::Owned(_) => panic!("unescaped string must borrow"),
+        }
+        let mut r = Reader::new(r#""esc\n""#);
+        match r.string_cow().unwrap() {
+            Cow::Owned(s) => assert_eq!(s, "esc\n"),
+            Cow::Borrowed(_) => panic!("escaped string must copy"),
+        }
+    }
+
+    #[test]
+    fn reader_streams_f32_arrays() {
+        let mut buf = Vec::new();
+        let mut r = Reader::new("[1, 2.5, -3e2]");
+        assert_eq!(r.f32_array(&mut buf).unwrap(), 3);
+        assert!(r.expect_end().is_ok());
+        assert_eq!(buf, vec![1.0f32, 2.5, -300.0]);
+        // appends, never clears: the per-connection buffer is reused
+        let mut r = Reader::new("[4]");
+        assert_eq!(r.f32_array(&mut buf).unwrap(), 1);
+        assert_eq!(buf.len(), 4);
+    }
+
+    #[test]
+    fn reader_skips_unknown_values() {
+        let mut r = Reader::new(r#"{"keep":1,"skip":{"deep":[true,null,"s"]},"b":2}"#);
+        let mut keep = 0.0;
+        let mut b = 0.0;
+        r.obj(|r, k| {
+            match k {
+                "keep" => keep = r.number()?,
+                "b" => b = r.number()?,
+                _ => r.skip_value(0)?,
+            }
+            Ok(())
+        })
+        .unwrap();
+        r.expect_end().unwrap();
+        assert_eq!((keep, b), (1.0, 2.0));
     }
 
     #[test]
     fn parses_real_manifest_if_present() {
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
         if let Ok(text) = std::fs::read_to_string(path) {
-            let j = Json::parse(&text).expect("manifest parses");
+            let j = text.parse::<Json>().expect("manifest parses");
             assert!(j.req("models").as_obj().unwrap().contains_key("cnn6"));
         }
     }

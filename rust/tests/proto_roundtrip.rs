@@ -1,0 +1,227 @@
+//! Protocol invariants, no sockets involved: every `Request`/`Response`
+//! variant survives JSON -> typed -> JSON losslessly, and the borrowing
+//! reader agrees with the owned parser on a corpus of valid / invalid /
+//! edge-case documents (both front-ends share one `Reader`, so this
+//! pins the contract rather than two implementations).
+
+use lapq::config::ExperimentConfig;
+use lapq::coordinator::jobs::{InferReply, PackSummary};
+use lapq::proto::{InferRequest, Request, Response};
+use lapq::runtime::cpu::ops::Arr;
+use lapq::tensor::HostTensor;
+use lapq::util::json::{Json, Reader, MAX_DEPTH};
+
+fn req_line(req: &Request) -> String {
+    let mut s = String::new();
+    req.write_json(&mut s);
+    s
+}
+
+fn resp_line(resp: &Response) -> String {
+    let mut s = String::new();
+    resp.write_json(&mut s);
+    s
+}
+
+#[test]
+fn request_roundtrip_every_variant() {
+    let cfg = ExperimentConfig { model: "mlp3".into(), train_steps: 40, ..Default::default() };
+    let reqs = vec![
+        Request::Ping,
+        Request::Models,
+        Request::Metrics,
+        Request::Shutdown,
+        Request::Hello { wire: "bin1".into() },
+        Request::Quantize { cfg: Box::new(cfg.clone()), stream: true },
+        Request::Quantize { cfg: Box::new(cfg.clone()), stream: false },
+        Request::Pack { cfg: Box::new(cfg), po2: false },
+        // nested rows (feature models)
+        Request::Infer(InferRequest {
+            key: "mlp3-int8".into(),
+            inputs: vec![HostTensor::f32(vec![2, 3], vec![0.1, -2.0, 3.5, 0.0, 1.0, -0.25])],
+        }),
+        // flat + shape (images)
+        Request::Infer(InferRequest {
+            key: "cnn6-int4".into(),
+            inputs: vec![HostTensor::f32(vec![1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0])],
+        }),
+        // users + items (ncf)
+        Request::Infer(InferRequest {
+            key: "ncf-int8".into(),
+            inputs: vec![
+                HostTensor::i32(vec![3], vec![1, 2, 3]),
+                HostTensor::i32(vec![3], vec![9, 8, 7]),
+            ],
+        }),
+        Request::Unknown { cmd: "frobnicate".into() },
+    ];
+    for req in reqs {
+        let line = req_line(&req);
+        let back = Request::from_line(&line)
+            .unwrap_or_else(|e| panic!("reparse of {line}: {e}"));
+        assert_eq!(req_line(&back), line, "lossless round-trip");
+        // the line itself is valid JSON for any line-oriented tooling
+        line.parse::<Json>().expect("request lines are JSON");
+    }
+}
+
+#[test]
+fn response_roundtrip_every_variant() {
+    let resps = vec![
+        Response::Pong,
+        Response::Stopping,
+        Response::Hello { wire: "bin1".into() },
+        Response::Models { models: vec!["mlp3".into(), "cnn6".into()] },
+        Response::Metrics {
+            metrics: Json::obj(vec![
+                ("service_requests", Json::Num(17.0)),
+                ("queue_depth", Json::Num(0.0)),
+            ]),
+        },
+        Response::Quantize {
+            result: Json::obj(vec![
+                ("model", Json::Str("mlp3".into())),
+                ("quant_metric", Json::Num(0.75)),
+            ]),
+        },
+        Response::Pack {
+            packed: PackSummary {
+                key: "mlp3-int8-mmse".into(),
+                model: "mlp3".into(),
+                bits_label: "w8a8".into(),
+                method: "mmse".into(),
+                int_params: 1234,
+                f32_bytes: 4936,
+                packed_bytes: 1290,
+                fp32_metric: 0.875,
+                quant_metric: 0.8125,
+                seconds: 0.5,
+            },
+        },
+        Response::Infer {
+            reply: InferReply {
+                key: "mlp3-int8-mmse".into(),
+                logits: Arr::new(vec![2, 3], vec![0.5, -1.25, 2.0, 3.0, 3.0, -0.5]),
+                rows: 2,
+                int_layers: 3,
+                seconds: 0.125,
+            },
+        },
+        Response::Error { msg: "boom \"quoted\"".into() },
+        Response::UnknownCmd { cmd: "frobnicate".into() },
+        Response::TooLarge { limit_bytes: 8 << 20 },
+        Response::Overloaded { retry_after_ms: 25 },
+    ];
+    for resp in resps {
+        let line = resp_line(&resp);
+        let back = Response::from_line(&line)
+            .unwrap_or_else(|e| panic!("reparse of {line}: {e}"));
+        assert_eq!(resp_line(&back), line, "lossless round-trip");
+        line.parse::<Json>().expect("response lines are JSON");
+    }
+}
+
+#[test]
+fn typed_writers_match_the_value_tree_serializer() {
+    // The hand-written response serializers must stay byte-compatible
+    // with what a `Json::Obj` (BTreeMap, alphabetical keys) dump of the
+    // same data produces — that is the pre-redesign wire format.
+    let reply = InferReply {
+        key: "k".into(),
+        logits: Arr::new(vec![2, 2], vec![0.1, 0.7, -0.3, -0.9]),
+        rows: 2,
+        int_layers: 3,
+        seconds: 0.0625,
+    };
+    let line = resp_line(&Response::Infer { reply });
+    let tree: Json = line.parse().unwrap();
+    assert_eq!(tree.dump(), line, "alphabetical keys, identical number formatting");
+
+    let shed = resp_line(&Response::Overloaded { retry_after_ms: 40 });
+    assert_eq!(shed, r#"{"error":"overloaded","ok":false,"retry_after_ms":40}"#);
+    let unk = resp_line(&Response::UnknownCmd { cmd: "x".into() });
+    assert_eq!(unk, r#"{"cmd":"x","error":"unknown_cmd","ok":false}"#);
+    let big = resp_line(&Response::TooLarge { limit_bytes: 10 });
+    assert_eq!(big, r#"{"error":"too_large","limit_bytes":10,"ok":false}"#);
+}
+
+#[test]
+fn infer_parse_errors_stay_typed() {
+    let cases = [
+        (r#"{"cmd":"infer","x":[[1,2]]}"#, "infer needs 'key'"),
+        (r#"{"cmd":"infer","key":"k"}"#, "infer needs 'x'"),
+        (r#"{"cmd":"infer","key":"k","x":[]}"#, "'x' is empty"),
+        (r#"{"cmd":"infer","key":"k","x":[[1,2],[3]]}"#, "ragged"),
+        (r#"{"cmd":"infer","key":"k","x":[1,2]}"#, "needs a 'shape'"),
+        (r#"{"cmd":"infer","key":"k","x":[1,2],"shape":[3]}"#, "does not cover"),
+        (r#"{"cmd":"infer","key":"k","x":[1,[2]]}"#, "mixed flat and nested"),
+    ];
+    for (line, want) in cases {
+        let err = Request::from_line(line).expect_err(line).to_string();
+        assert!(err.contains(want), "{line}: {err}");
+    }
+}
+
+/// Validate with the borrowing reader only (what the hot path does for
+/// unknown keys): same grammar as the owned parser by construction,
+/// pinned here over a corpus.
+fn borrow_validate(text: &str) -> Result<(), String> {
+    let mut r = Reader::new(text);
+    r.skip_value(0)?;
+    r.expect_end()
+}
+
+#[test]
+fn parser_conformance_corpus() {
+    let valid = [
+        "0",
+        "-0.5e-3",
+        "1e15",
+        "123456789012345",
+        "true",
+        "false",
+        "null",
+        "\"\"",
+        r#""plain ascii""#,
+        r#""esc \" \\ \/ \n \r \t \b \f""#,
+        r#""café → done""#,
+        "[]",
+        "{}",
+        "[1,2,[3,[4]],{\"a\":[]}]",
+        r#"{"a":{"b":{"c":[1,2,3]}},"d":null}"#,
+        "  [ 1 , 2 ]  ",
+    ];
+    let invalid = [
+        "",
+        "{",
+        "[1,2",
+        "[1,]",
+        "{\"a\":}",
+        "{\"a\" 1}",
+        "{'a':1}",
+        "\"unterminated",
+        r#""bad \q escape""#,
+        "tru",
+        "+1",
+        "[1] trailing",
+        "1e999",
+        "nan",
+        "NaN",
+        "Infinity",
+    ];
+    for t in valid {
+        assert!(borrow_validate(t).is_ok(), "borrowing reader rejected valid: {t}");
+        let j: Json = t.parse().unwrap_or_else(|e| panic!("owned parse of {t}: {e}"));
+        // dump -> reparse is the identity on the tree
+        let j2: Json = j.dump().parse().unwrap();
+        assert_eq!(j, j2, "{t}");
+    }
+    for t in invalid {
+        assert!(borrow_validate(t).is_err(), "borrowing reader accepted invalid: {t}");
+        assert!(t.parse::<Json>().is_err(), "owned parser accepted invalid: {t}");
+    }
+    // wire input must not choose the recursion depth — both front-ends
+    let deep = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+    assert!(borrow_validate(&deep).is_err());
+    assert!(deep.parse::<Json>().is_err());
+}

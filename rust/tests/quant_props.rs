@@ -149,7 +149,7 @@ fn prop_json_roundtrip() {
         |v: &Vec<f32>| {
             let mut rng = Pcg32::seeded((v[0] * 1e9) as u64);
             let j = random_json(&mut rng, 0);
-            Json::parse(&j.dump()) == Ok(j)
+            j.dump().parse::<Json>() == Ok(j)
         },
     );
 }

@@ -91,7 +91,7 @@ fn malformed_requests_keep_the_connection_alive() {
         writer.flush().unwrap();
         let mut resp = String::new();
         reader.read_line(&mut resp).unwrap();
-        Json::parse(&resp).expect("structured response")
+        resp.parse::<Json>().expect("structured response")
     };
 
     // not JSON at all
@@ -99,10 +99,11 @@ fn malformed_requests_keep_the_connection_alive() {
     assert_eq!(r.req("ok").as_bool(), Some(false));
     assert!(r.req("error").as_str().unwrap().contains("bad request"));
 
-    // unknown command
+    // unknown command: the typed error carries the offending cmd back
     let r = roundtrip("{\"cmd\":\"frobnicate\"}");
     assert_eq!(r.req("ok").as_bool(), Some(false));
-    assert!(r.req("error").as_str().unwrap().contains("unknown cmd"));
+    assert_eq!(r.req("error").as_str(), Some("unknown_cmd"));
+    assert_eq!(r.req("cmd").as_str(), Some("frobnicate"));
 
     // missing command
     let r = roundtrip("{\"x\":1}");
@@ -161,7 +162,7 @@ fn quantize_streams_calib_events() {
     let mut final_resp: Option<Json> = None;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
-        let j = Json::parse(&line.unwrap()).expect("every frame is JSON");
+        let j = line.unwrap().parse::<Json>().expect("every frame is JSON");
         if j.get("ok").is_some() {
             final_resp = Some(j);
             break;
@@ -396,7 +397,7 @@ fn overload_sheds_with_typed_response() {
     let mut cr = BufReader::new(c);
     let mut line = String::new();
     cr.read_line(&mut line).unwrap();
-    let shed = Json::parse(&line).expect("shed response is JSON");
+    let shed = line.parse::<Json>().expect("shed response is JSON");
     assert_eq!(shed.req("ok").as_bool(), Some(false), "{shed:?}");
     assert_eq!(shed.req("error").as_str(), Some("overloaded"), "{shed:?}");
     assert!(shed.req("retry_after_ms").as_f64().unwrap() >= 0.0, "{shed:?}");
@@ -407,7 +408,7 @@ fn overload_sheds_with_typed_response() {
     let mut ar = BufReader::new(a);
     let mut aline = String::new();
     ar.read_line(&mut aline).unwrap();
-    assert_eq!(Json::parse(&aline).unwrap().req("pong").as_bool(), Some(true));
+    assert_eq!(aline.parse::<Json>().unwrap().req("pong").as_bool(), Some(true));
     drop(ar);
     drop(aw);
 
@@ -418,7 +419,7 @@ fn overload_sheds_with_typed_response() {
     let mut br = BufReader::new(b);
     let mut bline = String::new();
     br.read_line(&mut bline).unwrap();
-    assert_eq!(Json::parse(&bline).unwrap().req("pong").as_bool(), Some(true));
+    assert_eq!(bline.parse::<Json>().unwrap().req("pong").as_bool(), Some(true));
     drop(br);
     drop(bw);
     pool.join().unwrap();

@@ -1,0 +1,258 @@
+//! Live-socket tests for the bin1 binary wire dialect: handshake
+//! negotiation, JSON-vs-binary bit-identity of infer replies across
+//! both servers (pool and blocking), and the hard input bounds —
+//! oversized lines / frames and CRC corruption all get typed JSON
+//! replies before the connection closes.
+
+use lapq::config::{BitSpec, ExperimentConfig, Method, ServeCfg};
+use lapq::coordinator::jobs::Runner;
+use lapq::coordinator::service::Service;
+use lapq::proto::wire::Client;
+use lapq::proto::{frame, InferRequest, Request, MAX_FRAME_BYTES, MAX_LINE_BYTES};
+use lapq::runtime::EngineHandle;
+use lapq::serve::PoolServer;
+use lapq::tensor::HostTensor;
+use lapq::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn fast_pack_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        model: "mlp3".into(),
+        train_steps: 40,
+        lr: 0.1,
+        val_size: 512,
+        bits: BitSpec::new(8, 8),
+        method: Method::Mmse,
+        ..Default::default()
+    }
+}
+
+/// The logits of a JSON infer response as raw f32 bit patterns (JSON
+/// floats are shortest-roundtrip, so the text recovers the exact bits).
+fn logits_bits(resp: &Json) -> Vec<u32> {
+    resp.req("result")
+        .req("logits")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .flat_map(|row| {
+            row.as_arr().unwrap().iter().map(|v| (v.as_f64().unwrap() as f32).to_bits())
+        })
+        .collect()
+}
+
+fn predictions(resp: &Json) -> Vec<i32> {
+    resp.req("result")
+        .req("predictions")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as i32)
+        .collect()
+}
+
+/// The headline contract: the same infer request served over (pool,
+/// blocking) x (JSON, bin1) produces the same logits down to the f32
+/// bit pattern, and the same predictions.
+#[test]
+fn bin1_and_json_infer_are_bit_identical_across_servers() {
+    let eng = EngineHandle::start_default().expect("engine boots");
+    let scfg = ServeCfg {
+        workers: 2,
+        batch_window_ms: 0.0,
+        max_batch: 4,
+        queue_bound: 16,
+        registry_cap: 4,
+    };
+    let server = PoolServer::bind("127.0.0.1:0", eng.clone(), scfg).unwrap();
+    let key = server.preload(std::slice::from_ref(&fast_pack_cfg())).unwrap().remove(0);
+    let registry = server.registry();
+    let addr = server.addr;
+    let pool = std::thread::spawn(move || server.serve(2).unwrap());
+
+    let data: Vec<f32> = (0..128).map(|j| ((j * 31) % 17) as f32 * 0.125 - 1.0).collect();
+    let ir = InferRequest { key: key.clone(), inputs: vec![HostTensor::f32(vec![2, 64], data)] };
+    let req = Request::Infer(ir.clone());
+
+    // JSON over the pool
+    let mut jc = Client::connect(&addr).unwrap();
+    let jresp = jc.call(&req).unwrap();
+    assert_eq!(jresp.req("ok").as_bool(), Some(true), "{jresp:?}");
+    let json_bits = logits_bits(&jresp);
+    let json_preds = predictions(&jresp);
+    drop(jc);
+
+    // bin1 over the pool: same connection loop, framed reply
+    let mut bc = Client::connect(&addr).unwrap();
+    bc.hello_bin1().unwrap();
+    let (reply, preds) = bc.infer_bin(&ir).unwrap();
+    assert_eq!(reply.key, key);
+    assert_eq!(reply.rows, 2);
+    let bin_bits: Vec<u32> = reply.logits.data.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(bin_bits, json_bits, "bin1 logits must be the JSON logits, bit for bit");
+    assert_eq!(preds, json_preds, "server-computed predictions agree across encodings");
+    drop(bc);
+    pool.join().unwrap();
+
+    // The blocking service over the same packed artifact speaks both
+    // dialects too (the connection loop is shared, not duplicated).
+    let seq = Service::bind("127.0.0.1:0").unwrap();
+    let seq_addr = seq.addr;
+    let seq_thread = std::thread::spawn(move || {
+        let mut runner = Runner::with_registry(eng, registry);
+        seq.serve(&mut runner, 2).unwrap();
+    });
+
+    let mut sc = Client::connect(&seq_addr).unwrap();
+    let sresp = sc.call(&req).unwrap();
+    assert_eq!(sresp.req("ok").as_bool(), Some(true), "{sresp:?}");
+    assert_eq!(logits_bits(&sresp), json_bits, "blocking JSON matches pool JSON");
+    drop(sc);
+
+    let mut sb = Client::connect(&seq_addr).unwrap();
+    sb.hello_bin1().unwrap();
+    let (sreply, spreds) = sb.infer_bin(&ir).unwrap();
+    let sbits: Vec<u32> = sreply.logits.data.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(sbits, json_bits, "blocking bin1 matches pool JSON");
+    assert_eq!(spreds, json_preds);
+    drop(sb);
+    seq_thread.join().unwrap();
+}
+
+/// Frames are gated behind the hello/bin1 handshake; corruption is
+/// caught by the CRC and answered with a JSON error (errors are never
+/// framed) before the stream — which cannot be resynced — is closed.
+#[test]
+fn frames_require_handshake_and_corruption_closes() {
+    let eng = EngineHandle::start_default().expect("engine boots");
+    let scfg = ServeCfg {
+        workers: 1,
+        batch_window_ms: 0.0,
+        max_batch: 1,
+        queue_bound: 4,
+        registry_cap: 2,
+    };
+    let server = PoolServer::bind("127.0.0.1:0", eng, scfg).unwrap();
+    let addr = server.addr;
+    let pool = std::thread::spawn(move || server.serve(2).unwrap());
+
+    let ir = InferRequest {
+        key: "nope".into(),
+        inputs: vec![HostTensor::f32(vec![1, 4], vec![0.5; 4])],
+    };
+    let mut frame_bytes = Vec::new();
+    frame::encode_infer_request(&ir, &mut frame_bytes);
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    let mut roundtrip = |w: &mut TcpStream, r: &mut BufReader<TcpStream>, bytes: &[u8]| -> Json {
+        w.write_all(bytes).unwrap();
+        w.flush().unwrap();
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        line.parse::<Json>().expect("structured reply")
+    };
+
+    // a frame before the handshake is refused, connection keeps serving
+    let j = roundtrip(&mut w, &mut r, &frame_bytes);
+    assert_eq!(j.req("ok").as_bool(), Some(false));
+    assert!(j.req("error").as_str().unwrap().contains("handshake"), "{j:?}");
+
+    // unknown dialects are refused, the connection stays JSON
+    let j = roundtrip(&mut w, &mut r, b"{\"cmd\":\"hello\",\"wire\":\"bogus\"}\n");
+    assert!(j.req("error").as_str().unwrap().contains("unknown wire"), "{j:?}");
+
+    // a good handshake upgrades the same connection
+    let j = roundtrip(&mut w, &mut r, b"{\"cmd\":\"hello\",\"wire\":\"bin1\"}\n");
+    assert_eq!(j.req("wire").as_str(), Some("bin1"), "{j:?}");
+
+    // one flipped payload bit: the CRC catches it, the reply is a JSON
+    // error, and the connection is closed (no resync on a binary stream)
+    let mut bad = frame_bytes.clone();
+    let n = bad.len();
+    bad[n - frame::CRC_LEN - 1] ^= 0x01;
+    let j = roundtrip(&mut w, &mut r, &bad);
+    assert_eq!(j.req("ok").as_bool(), Some(false));
+    assert!(j.req("error").as_str().unwrap().contains("crc"), "{j:?}");
+    let mut rest = String::new();
+    assert_eq!(r.read_line(&mut rest).unwrap(), 0, "corrupt frame must close the connection");
+    drop(w);
+
+    // fresh connection: after the handshake a *valid* frame for a
+    // missing model comes back as a JSON error line, and the same
+    // connection still answers pings
+    let mut c = Client::connect(&addr).unwrap();
+    c.hello_bin1().unwrap();
+    let err = c.infer_bin(&ir).expect_err("missing model must fail");
+    assert!(format!("{err:#}").contains("no packed model"), "{err:#}");
+    let pong = c.call(&Request::Ping).unwrap();
+    assert_eq!(pong.req("pong").as_bool(), Some(true));
+    drop(c);
+    pool.join().unwrap();
+}
+
+/// Input bounds: a line past `MAX_LINE_BYTES` or a frame advertising
+/// more than `MAX_FRAME_BYTES` gets the typed `too_large` reply, then
+/// the connection closes (the oversized input is never buffered whole).
+#[test]
+fn oversized_inputs_get_typed_replies_then_close() {
+    let eng = EngineHandle::start_default().expect("engine boots");
+    let scfg = ServeCfg {
+        workers: 1,
+        batch_window_ms: 0.0,
+        max_batch: 1,
+        queue_bound: 4,
+        registry_cap: 2,
+    };
+    let server = PoolServer::bind("127.0.0.1:0", eng, scfg).unwrap();
+    let addr = server.addr;
+    let pool = std::thread::spawn(move || server.serve(2).unwrap());
+
+    // an endless line: the server answers as soon as the cap is crossed
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let chunk = vec![b'x'; 8 * 1024];
+    let mut sent = 0usize;
+    while sent <= MAX_LINE_BYTES + chunk.len() {
+        // the server may close mid-send — that's the expected outcome
+        if w.write_all(&chunk).is_err() {
+            break;
+        }
+        sent += chunk.len();
+    }
+    let _ = w.flush();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let j: Json = line.parse().expect("typed too_large reply");
+    assert_eq!(j.req("error").as_str(), Some("too_large"), "{j:?}");
+    assert_eq!(j.req("limit_bytes").as_f64(), Some(MAX_LINE_BYTES as f64), "{j:?}");
+    line.clear();
+    assert_eq!(r.read_line(&mut line).unwrap(), 0, "oversized line closes the connection");
+    drop(w);
+
+    // a frame header promising a payload past the frame cap: refused
+    // from the 8 header bytes alone
+    let s2 = TcpStream::connect(addr).unwrap();
+    s2.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut w2 = s2.try_clone().unwrap();
+    let mut r2 = BufReader::new(s2);
+    let mut hdr = vec![frame::MARKER, frame::MAGIC2, frame::VERSION, frame::KIND_INFER_REQ];
+    hdr.extend_from_slice(&((MAX_FRAME_BYTES as u32) + 1).to_le_bytes());
+    w2.write_all(&hdr).unwrap();
+    w2.flush().unwrap();
+    let mut line2 = String::new();
+    r2.read_line(&mut line2).unwrap();
+    let j: Json = line2.parse().expect("typed too_large reply");
+    assert_eq!(j.req("error").as_str(), Some("too_large"), "{j:?}");
+    assert_eq!(j.req("limit_bytes").as_f64(), Some(MAX_FRAME_BYTES as f64), "{j:?}");
+    line2.clear();
+    assert_eq!(r2.read_line(&mut line2).unwrap(), 0, "oversized frame closes the connection");
+    pool.join().unwrap();
+}
