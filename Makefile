@@ -25,12 +25,13 @@ verify: build test
 
 # Perf trajectory smoke: bounded perf runs that write
 # rust/bench_results/BENCH_hotpath.json, BENCH_int_infer.json,
-# BENCH_calib.json, BENCH_serve.json and BENCH_wire.json (uploaded as
-# CI artifacts).
+# BENCH_calib.json, BENCH_mixed.json, BENCH_serve.json and
+# BENCH_wire.json (uploaded as CI artifacts).
 bench-smoke:
 	BENCH_SMOKE=1 $(CARGO) bench --bench perf_hotpath
 	BENCH_SMOKE=1 $(CARGO) bench --bench perf_int_gemm
 	BENCH_SMOKE=1 $(CARGO) bench --bench perf_calib
+	BENCH_SMOKE=1 $(CARGO) bench --bench perf_mixed
 	BENCH_SMOKE=1 $(CARGO) bench --bench perf_serve
 	BENCH_SMOKE=1 $(CARGO) bench --bench perf_wire
 

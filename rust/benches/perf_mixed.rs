@@ -1,0 +1,103 @@
+//! Perf: the mixed-precision headline — uniform W4 vs sensitivity-
+//! allocated per-layer bits at the *same* packed-size budget
+//! (`budget_frac = 1.0`), on two builtin models.  For each, a full LAPQ
+//! calibration + pack per arm, recording calibration loss, packed bytes
+//! and the allocated plan; "win" means the mixed arm is no worse on loss
+//! at equal-or-smaller bytes.
+//!
+//! `BENCH_SMOKE=1` runs a bounded budget (CI-sized) — either way the
+//! numbers land in `bench_results/BENCH_mixed.json` so the allocation
+//! payoff accumulates PR over PR.
+
+use lapq::config::{BitSpec, ExperimentConfig, Method};
+use lapq::coordinator::jobs::Runner;
+use lapq::runtime::int::PackOpts;
+use lapq::runtime::EngineHandle;
+use lapq::util::json::Json;
+
+fn cfg_for(model: &str, smoke: bool, mixed: bool) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = model.into();
+    cfg.train_steps = if smoke { 40 } else { 150 };
+    cfg.lr = 0.1;
+    cfg.calib_size = if smoke { 256 } else { 512 };
+    cfg.val_size = if smoke { 512 } else { 2048 };
+    cfg.bits = BitSpec::new(4, 4);
+    cfg.method = Method::Lapq;
+    cfg.lapq.joint.max_evals = if smoke { 80 } else { 400 };
+    cfg.lapq.joint.iters = if smoke { 1 } else { 2 };
+    // every layer participates, so the allocator has real freedom
+    cfg.lapq.exclude_first_last = false;
+    cfg.mixed.enabled = mixed;
+    cfg.mixed.budget_frac = 1.0;
+    cfg.mixed.sharpness_k = if smoke { 2 } else { 4 };
+    cfg
+}
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+    let smoke_var = std::env::var("BENCH_SMOKE");
+    let smoke = matches!(smoke_var.as_deref(), Ok(v) if !v.is_empty() && v != "0");
+
+    let eng = EngineHandle::start_default()?;
+    let mut runner = Runner::new(eng);
+    let mut entries: Vec<Json> = Vec::new();
+
+    for model in ["mlp3", "cnn6"] {
+        // Training is cached across the two arms, so the seconds deltas
+        // are calibration + allocation alone.
+        let uni_cfg = cfg_for(model, smoke, false);
+        let mix_cfg = cfg_for(model, smoke, true);
+
+        let uni = runner.run(&uni_cfg)?;
+        let (uni_sum, _) = runner.pack(&uni_cfg, &PackOpts::default())?;
+        let mix = runner.run(&mix_cfg)?;
+        let (mix_sum, _) = runner.pack(&mix_cfg, &PackOpts::default())?;
+
+        let win = mix.outcome.calib_loss <= uni.outcome.calib_loss
+            && mix_sum.packed_bytes <= uni_sum.packed_bytes;
+        println!(
+            "{model:<6} uniform w4: loss {:.5} acc {:.3} {} B | mixed {:?}: loss {:.5} acc {:.3} {} B  {}",
+            uni.outcome.calib_loss,
+            uni.quant_metric,
+            uni_sum.packed_bytes,
+            mix_sum.wbits,
+            mix.outcome.calib_loss,
+            mix.quant_metric,
+            mix_sum.packed_bytes,
+            if win { "WIN" } else { "no-win" },
+        );
+        entries.push(Json::obj(vec![
+            ("model", Json::Str(model.into())),
+            ("uniform_calib_loss", Json::Num(uni.outcome.calib_loss)),
+            ("mixed_calib_loss", Json::Num(mix.outcome.calib_loss)),
+            ("uniform_quant_metric", Json::Num(uni.quant_metric as f64)),
+            ("mixed_quant_metric", Json::Num(mix.quant_metric as f64)),
+            ("uniform_packed_bytes", Json::Num(uni_sum.packed_bytes as f64)),
+            ("mixed_packed_bytes", Json::Num(mix_sum.packed_bytes as f64)),
+            (
+                "wbits",
+                Json::Arr(mix_sum.wbits.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            ("uniform_key", Json::Str(uni_sum.key.clone())),
+            ("mixed_key", Json::Str(mix_sum.key.clone())),
+            ("uniform_seconds", Json::Num(uni.outcome.seconds)),
+            ("mixed_seconds", Json::Num(mix.outcome.seconds)),
+            ("win", Json::Bool(win)),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("perf_mixed".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("bits", Json::Str("w4a4 budget, candidates 2/4/8".into())),
+        ("backend", Json::Str(runner.eng.backend_name().into())),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_mixed.json");
+    std::fs::write(&path, report.dump())?;
+    println!("[json] wrote {path:?}");
+    Ok(())
+}

@@ -26,8 +26,13 @@ COMMANDS:
   info                          list models and artifacts
   train      --model M [--steps N] [--lr F]
   quantize   --model M [--wbits N] [--abits N] [--method lapq|mmse|aciq|kld|minmax]
+             [--mixed] [--size-budget F]
+                                --mixed allocates per-layer weight bits by
+                                sensitivity under a size budget (F × the
+                                uniform pack, default 1.0)
   sweep      --model M          run all methods at the config's bitwidths
   pack       --model M [--wbits N] [--abits N] [--out DIR] [--no-po2]
+             [--mixed] [--size-budget F]
                                 calibrate, quantize the weights and write a
                                 deployable integer artifact (mlp3/cnn6/ncf)
   infer      --packed DIR [--batches N] [--check] [--tol F] [--seed N]
@@ -102,6 +107,13 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(m) = args.flag("method") {
         cfg.method = Method::parse(m)?;
+    }
+    if args.flag_bool("mixed") {
+        cfg.mixed.enabled = true;
+    }
+    if let Some(b) = args.flag("size-budget") {
+        cfg.mixed.budget_frac = b.parse()?;
+        cfg.mixed.enabled = true;
     }
     cfg.apply_overrides(&args.overrides)?;
     Ok(cfg)

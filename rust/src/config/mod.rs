@@ -206,6 +206,69 @@ impl Default for ServeCfg {
     }
 }
 
+/// How the mixed-precision profiler estimates per-layer sensitivity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProfilerMode {
+    /// Quadratic estimate from `analysis::weight_hessian` (cheap; falls
+    /// back to `Direct` when the estimate is degenerate).
+    Curvature,
+    /// Direct loss evaluations, one layer × bit-width at a time.
+    Direct,
+}
+
+impl ProfilerMode {
+    pub fn parse(s: &str) -> Result<ProfilerMode> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "curvature" | "curv" => ProfilerMode::Curvature,
+            "direct" => ProfilerMode::Direct,
+            other => bail!("unknown profiler mode '{other}' (curvature|direct)"),
+        })
+    }
+
+    /// Canonical wire/override key.
+    pub fn key(&self) -> &'static str {
+        match self {
+            ProfilerMode::Curvature => "curvature",
+            ProfilerMode::Direct => "direct",
+        }
+    }
+}
+
+/// Mixed-precision knobs (`rust/src/lapq/mixed/`): sensitivity-driven
+/// per-layer weight bit allocation under a model-size budget, plus the
+/// sharpness-aware post stage.  Disabled by default; part of the lossless
+/// config surface with `-s mixed.*` overrides.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MixedCfg {
+    /// Master switch: profile sensitivities and allocate per-layer bits.
+    pub enabled: bool,
+    /// Weight-byte budget as a fraction of the uniform `bits_w` packed
+    /// size (1.0 = "same size as the uniform baseline").
+    pub budget_frac: f64,
+    /// Candidate per-layer weight bit-widths the allocator may pick from.
+    pub candidate_bits: Vec<u32>,
+    /// Sensitivity profiler mode.
+    pub profiler: ProfilerMode,
+    /// Sharpness-aware post stage: number of sampled Δ-perturbations
+    /// (0 disables the stage).
+    pub sharpness_k: usize,
+    /// Relative radius of the perturbation neighborhood.
+    pub sharpness_radius: f64,
+}
+
+impl Default for MixedCfg {
+    fn default() -> Self {
+        MixedCfg {
+            enabled: false,
+            budget_frac: 1.0,
+            candidate_bits: vec![2, 4, 8],
+            profiler: ProfilerMode::Curvature,
+            sharpness_k: 4,
+            sharpness_radius: 0.1,
+        }
+    }
+}
+
 /// A full experiment description.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
@@ -222,6 +285,7 @@ pub struct ExperimentConfig {
     pub method: Method,
     pub lapq: LapqCfg,
     pub serve: ServeCfg,
+    pub mixed: MixedCfg,
 }
 
 impl Default for ExperimentConfig {
@@ -237,6 +301,7 @@ impl Default for ExperimentConfig {
             method: Method::Lapq,
             lapq: LapqCfg::default(),
             serve: ServeCfg::default(),
+            mixed: MixedCfg::default(),
         }
     }
 }
@@ -461,7 +526,72 @@ pub const OVERRIDES: &[OverrideSpec] = &[
             Ok(())
         },
     },
+    OverrideSpec {
+        key: "mixed.enabled",
+        help: "per-layer weight bit allocation under a size budget (true|false)",
+        example: "true",
+        apply: |c, v| {
+            c.mixed.enabled = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "mixed.budget_frac",
+        help: "weight-byte budget as a fraction of the uniform bits_w size",
+        example: "1.0",
+        apply: |c, v| {
+            c.mixed.budget_frac = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "mixed.bits",
+        help: "comma-separated candidate weight bit-widths (e.g. 2,4,8)",
+        example: "2,4,8",
+        apply: |c, v| {
+            c.mixed.candidate_bits = parse_u32_list(v)?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "mixed.profiler",
+        help: "sensitivity profiler (curvature|direct)",
+        example: "direct",
+        apply: |c, v| {
+            c.mixed.profiler = ProfilerMode::parse(v)?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "mixed.sharpness_k",
+        help: "sharpness post stage: sampled perturbations (0 disables)",
+        example: "4",
+        apply: |c, v| {
+            c.mixed.sharpness_k = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "mixed.sharpness_radius",
+        help: "sharpness post stage: relative perturbation radius",
+        example: "0.1",
+        apply: |c, v| {
+            c.mixed.sharpness_radius = v.parse()?;
+            Ok(())
+        },
+    },
 ];
+
+fn parse_u32_list(v: &str) -> Result<Vec<u32>> {
+    let out: Vec<u32> = v
+        .split(',')
+        .map(|s| s.trim().parse::<u32>().with_context(|| format!("bad bit-width '{s}'")))
+        .collect::<Result<_>>()?;
+    if out.is_empty() {
+        bail!("empty list");
+    }
+    Ok(out)
+}
 
 fn parse_f32_list(v: &str) -> Result<Vec<f32>> {
     let out: Vec<f32> = v
@@ -573,6 +703,27 @@ impl ExperimentConfig {
                 cfg.serve.registry_cap = v as usize;
             }
         }
+        if let Some(m) = j.get("mixed") {
+            if let Some(v) = m.get("enabled").and_then(|v| v.as_bool()) {
+                cfg.mixed.enabled = v;
+            }
+            if let Some(v) = m.get("budget_frac").and_then(|v| v.as_f64()) {
+                cfg.mixed.budget_frac = v;
+            }
+            if let Some(arr) = m.get("bits").and_then(|v| v.as_arr()) {
+                cfg.mixed.candidate_bits =
+                    arr.iter().filter_map(|x| x.as_f64()).map(|x| x as u32).collect();
+            }
+            if let Some(s) = m.get("profiler").and_then(|v| v.as_str()) {
+                cfg.mixed.profiler = ProfilerMode::parse(s)?;
+            }
+            if let Some(v) = m.get("sharpness_k").and_then(|v| v.as_f64()) {
+                cfg.mixed.sharpness_k = v as usize;
+            }
+            if let Some(v) = m.get("sharpness_radius").and_then(|v| v.as_f64()) {
+                cfg.mixed.sharpness_radius = v;
+            }
+        }
         Ok(cfg)
     }
 
@@ -630,6 +781,26 @@ impl ExperimentConfig {
                     ("max_batch", Json::Num(self.serve.max_batch as f64)),
                     ("queue_bound", Json::Num(self.serve.queue_bound as f64)),
                     ("registry_cap", Json::Num(self.serve.registry_cap as f64)),
+                ]),
+            ),
+            (
+                "mixed",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(self.mixed.enabled)),
+                    ("budget_frac", Json::Num(self.mixed.budget_frac)),
+                    (
+                        "bits",
+                        Json::Arr(
+                            self.mixed
+                                .candidate_bits
+                                .iter()
+                                .map(|&b| Json::Num(b as f64))
+                                .collect(),
+                        ),
+                    ),
+                    ("profiler", Json::Str(self.mixed.profiler.key().into())),
+                    ("sharpness_k", Json::Num(self.mixed.sharpness_k as f64)),
+                    ("sharpness_radius", Json::Num(self.mixed.sharpness_radius)),
                 ]),
             ),
         ])
@@ -765,6 +936,46 @@ mod tests {
         assert_eq!(c.serve.queue_bound, 9);
         assert_eq!(c.serve.registry_cap, 1);
         assert!(c.apply_overrides(&["serve.workers=x".into()]).is_err());
+    }
+
+    /// The mixed-precision sub-config joins the lossless surface.
+    #[test]
+    fn json_roundtrip_mixed_subconfig() {
+        let mixed = MixedCfg {
+            enabled: true,
+            budget_frac: 0.75,
+            candidate_bits: vec![2, 3, 4, 8],
+            profiler: ProfilerMode::Direct,
+            sharpness_k: 7,
+            sharpness_radius: 0.25,
+        };
+        let c = ExperimentConfig { mixed, ..Default::default() };
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2, c, "mixed sub-config must round-trip losslessly");
+    }
+
+    #[test]
+    fn mixed_overrides_apply() {
+        let mut c = ExperimentConfig::default();
+        c.apply_overrides(&[
+            "mixed.enabled=true".into(),
+            "mixed.budget_frac=0.5".into(),
+            "mixed.bits=2,4".into(),
+            "mixed.profiler=direct".into(),
+            "mixed.sharpness_k=9".into(),
+            "mixed.sharpness_radius=0.2".into(),
+        ])
+        .unwrap();
+        assert!(c.mixed.enabled);
+        assert_eq!(c.mixed.budget_frac, 0.5);
+        assert_eq!(c.mixed.candidate_bits, vec![2, 4]);
+        assert_eq!(c.mixed.profiler, ProfilerMode::Direct);
+        assert_eq!(c.mixed.sharpness_k, 9);
+        assert_eq!(c.mixed.sharpness_radius, 0.2);
+        // unknown keys under the mixed.* prefix are rejected like any other
+        assert!(c.apply_overrides(&["mixed.nope=1".into()]).is_err());
+        assert!(c.apply_overrides(&["mixed.profiler=hessian2".into()]).is_err());
+        assert!(c.apply_overrides(&["mixed.bits=".into()]).is_err());
     }
 
     #[test]

@@ -61,6 +61,9 @@ pub struct PackSummary {
     /// Task metric under the *effective* (packed, po2-snapped) grids.
     pub quant_metric: f32,
     pub seconds: f64,
+    /// Per-layer weight widths of the packed artifact (32 = FP32 layer).
+    /// Uniform packs report the uniform width in every quantized slot.
+    pub wbits: Vec<u32>,
 }
 
 /// One integer-engine forward pass served from the cache.
@@ -245,7 +248,29 @@ impl Runner {
 
     /// Cache key for a pack job.
     pub fn pack_key(cfg: &ExperimentConfig) -> String {
-        format!("{}:w{}a{}:{}", cfg.model, cfg.bits.weights, cfg.bits.acts, cfg.method.name())
+        Self::pack_key_planned(cfg, None)
+    }
+
+    /// Cache key for a pack job with an allocated bit plan.  Uniform
+    /// packs keep the config-derivable `model:wNaM:METHOD` form; a mixed
+    /// plan embeds its per-layer widths (`cnn6:w[8.4.2]a4:LAPQ`) so mixed
+    /// and uniform artifacts of the same config can never collide in the
+    /// registry LRU.
+    pub fn pack_key_planned(cfg: &ExperimentConfig, wbits: Option<&[u32]>) -> String {
+        match wbits {
+            Some(plan) => {
+                let joined =
+                    plan.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(".");
+                format!("{}:w[{}]a{}:{}", cfg.model, joined, cfg.bits.acts, cfg.method.name())
+            }
+            None => format!(
+                "{}:w{}a{}:{}",
+                cfg.model,
+                cfg.bits.weights,
+                cfg.bits.acts,
+                cfg.method.name()
+            ),
+        }
     }
 
     /// Full pack job: train (cached) → calibrate → quantize the session
@@ -271,14 +296,18 @@ impl Runner {
             // Metrics under the grids the artifact actually encodes.
             let fp32_metric = val.metric(&self.eng, sess, None)?;
             let quant_metric = val.metric(&self.eng, sess, Some(&qm.quant))?;
-            Ok::<_, anyhow::Error>((qm, fp32_metric, quant_metric))
+            Ok::<_, anyhow::Error>((qm, outcome.wbits, fp32_metric, quant_metric))
         }));
         self.cleanup(sess, &val, &calib);
-        let (qm, fp32_metric, quant_metric) = match result {
+        let (qm, plan, fp32_metric, quant_metric) = match result {
             Ok(r) => r?,
             Err(payload) => std::panic::resume_unwind(payload),
         };
-        let key = Self::pack_key(cfg);
+        let key = if cfg.mixed.enabled {
+            Self::pack_key_planned(cfg, plan.as_deref())
+        } else {
+            Self::pack_key(cfg)
+        };
         let summary = PackSummary {
             key: key.clone(),
             model: qm.model.clone(),
@@ -290,6 +319,7 @@ impl Runner {
             fp32_metric,
             quant_metric,
             seconds: t0.elapsed().as_secs_f64(),
+            wbits: qm.wbits(),
         };
         let arc = Arc::new(qm);
         self.registry.put(key, arc.clone());

@@ -151,7 +151,7 @@ fn dispatch_inner(
 ) -> Result<Response> {
     Ok(match req {
         Request::Ping => Response::Pong,
-        Request::Models => Response::models(&runner.eng),
+        Request::Models => Response::models(&runner.eng, &runner.registry()),
         Request::Metrics => Response::metrics(),
         Request::Quantize { cfg, stream } => {
             let res = if stream {

@@ -25,6 +25,7 @@ use super::stages::{
     PHASE_INIT,
 };
 use crate::config::{BitSpec, ExperimentConfig, JointCfg, LapqCfg, Method};
+use crate::quant::GridKind;
 use crate::runtime::manifest::ModelSpec;
 use crate::runtime::{EngineHandle, QuantParams, SessionId};
 use anyhow::{bail, Result};
@@ -55,6 +56,10 @@ pub struct QuantOutcome {
     pub trace: Vec<PhaseTrace>,
     /// Original (pre-bias-correction) session params, for restoration.
     pub original_params: Option<Vec<crate::tensor::HostTensor>>,
+    /// Mixed-precision weight bit plan, when `mixed.enabled` allocated
+    /// one (`wbits[i] == 32` marks a masked-off FP32 layer).  `None`
+    /// means uniform `bits.weights` everywhere — the pre-mixed contract.
+    pub wbits: Option<Vec<u32>>,
 }
 
 /// Initialization strategy shorthand for the Table-3 ablation entry
@@ -161,6 +166,14 @@ impl Calibrator {
                 b = b.init(BaselineInit { method: m, bits: cfg.bits });
             }
         }
+        if cfg.mixed.enabled && cfg.mixed.sharpness_k > 0 {
+            // before bias correction: the sharpness pass re-evaluates the
+            // loss objective, which must see the pristine session weights
+            b = b.post(super::mixed::SharpnessAware {
+                k: cfg.mixed.sharpness_k,
+                radius: cfg.mixed.sharpness_radius,
+            });
+        }
         if cfg.lapq.bias_correction {
             b = b.post(BiasCorrection);
         }
@@ -203,7 +216,45 @@ impl Calibrator {
     ) -> Result<QuantOutcome> {
         let t0 = std::time::Instant::now();
         let mask = build_mask(spec, cfg);
-        let (qmw, qma) = grids(spec, cfg.bits);
+        let (mut qmw, qma) = grids(spec, cfg.bits);
+        let mut trace: Vec<PhaseTrace> = Vec::new();
+
+        // ---- mixed-precision allocation phase (optional): profile
+        // sensitivities, solve the size-budget knapsack, and rewrite the
+        // per-layer weight grids before any Δ is ever searched.
+        let mut wbits: Option<Vec<u32>> = None;
+        if cfg.mixed.enabled && cfg.bits.quant_weights() {
+            let phase = super::mixed::PHASE_ALLOC;
+            obs.on_event(&CalibEvent::PhaseStart { phase });
+            let ta = std::time::Instant::now();
+            let (plan, profile) = super::mixed::plan_bits(eng, sess, cfg, calib, &mask, obs)?;
+            for (i, &b) in plan.wbits.iter().enumerate() {
+                if mask.weights[i] && b < 32 {
+                    qmw[i] = GridKind::Signed.qmax(b);
+                }
+            }
+            obs.on_event(&CalibEvent::Alloc {
+                phase,
+                wbits: plan.wbits.clone(),
+                budget_bytes: plan.budget_bytes,
+                spent_bytes: plan.spent_bytes,
+            });
+            let secs = ta.elapsed().as_secs_f64();
+            obs.on_event(&CalibEvent::PhaseEnd {
+                phase,
+                evals: profile.evals,
+                seconds: secs,
+                loss: profile.base_loss,
+            });
+            trace.push(PhaseTrace {
+                phase,
+                evals: profile.evals,
+                seconds: secs,
+                loss: profile.base_loss,
+            });
+            wbits = Some(plan.wbits);
+        }
+
         let mut obj = CalibObjective::new(
             eng,
             sess,
@@ -213,7 +264,6 @@ impl Calibrator {
             qma.clone(),
         );
         let fp32_calib_loss = obj.fp32_loss()?;
-        let mut trace: Vec<PhaseTrace> = Vec::new();
         let mut notes = InitNotes::default();
 
         // ---- init phase: gather candidates from every strategy, best-of.
@@ -319,6 +369,7 @@ impl Calibrator {
             seconds: 0.0,
             trace: Vec::new(),
             original_params: None,
+            wbits,
         };
 
         // ---- post stages.
@@ -326,15 +377,16 @@ impl Calibrator {
             let phase = p.phase();
             obs.on_event(&CalibEvent::PhaseStart { phase });
             let tp = std::time::Instant::now();
-            p.apply(eng, sess, spec, cfg, &mut outcome)?;
+            p.apply(eng, sess, spec, cfg, calib, &mut outcome)?;
             let secs = tp.elapsed().as_secs_f64();
+            // re-read from the outcome: a stage may have improved the loss
             obs.on_event(&CalibEvent::PhaseEnd {
                 phase,
                 evals: 0,
                 seconds: secs,
-                loss: calib_loss,
+                loss: outcome.calib_loss,
             });
-            trace.push(PhaseTrace { phase, evals: 0, seconds: secs, loss: calib_loss });
+            trace.push(PhaseTrace { phase, evals: 0, seconds: secs, loss: outcome.calib_loss });
         }
 
         outcome.seconds = t0.elapsed().as_secs_f64();
@@ -433,6 +485,15 @@ mod tests {
         assert_eq!(c.init.len(), 1);
         assert!(c.joint.is_none());
         assert!(c.post.is_empty());
+
+        // mixed adds the sharpness stage ahead of bias correction
+        cfg.method = Method::Lapq;
+        cfg.lapq.bias_correction = true;
+        cfg.mixed.enabled = true;
+        let c = Calibrator::from_config(&cfg);
+        assert_eq!(c.post.len(), 2);
+        assert_eq!(c.post[0].name(), "sharpness");
+        assert_eq!(c.post[1].name(), "bias-correction");
     }
 
     #[test]

@@ -25,6 +25,10 @@ pub enum CalibEvent {
     /// Something structurally wrong that the run survives but the operator
     /// should know about (e.g. an all-non-finite init trajectory).
     Degenerate { phase: &'static str, detail: String },
+    /// A mixed-precision bit plan was chosen (`wbits[i] == 32` marks a
+    /// layer the mask left at FP32).  Streamed so a `quantize --mixed`
+    /// client sees the allocation as soon as it is decided.
+    Alloc { phase: &'static str, wbits: Vec<u32>, budget_bytes: usize, spent_bytes: usize },
 }
 
 impl CalibEvent {
@@ -54,6 +58,13 @@ impl CalibEvent {
                 ("phase", Json::Str((*phase).into())),
                 ("detail", Json::Str(detail.clone())),
             ]),
+            CalibEvent::Alloc { phase, wbits, budget_bytes, spent_bytes } => Json::obj(vec![
+                ("event", Json::Str("alloc".into())),
+                ("phase", Json::Str((*phase).into())),
+                ("wbits", Json::Arr(wbits.iter().map(|&b| Json::Num(b as f64)).collect())),
+                ("budget_bytes", Json::Num(*budget_bytes as f64)),
+                ("spent_bytes", Json::Num(*spent_bytes as f64)),
+            ]),
         }
     }
 
@@ -62,7 +73,8 @@ impl CalibEvent {
             CalibEvent::PhaseStart { phase }
             | CalibEvent::Eval { phase, .. }
             | CalibEvent::PhaseEnd { phase, .. }
-            | CalibEvent::Degenerate { phase, .. } => phase,
+            | CalibEvent::Degenerate { phase, .. }
+            | CalibEvent::Alloc { phase, .. } => phase,
         }
     }
 }
@@ -182,6 +194,11 @@ impl CalibObserver for LogObserver {
             CalibEvent::Degenerate { phase, detail } => {
                 log::warn!("[calib] {phase}: degenerate — {detail}")
             }
+            CalibEvent::Alloc { phase, wbits, budget_bytes, spent_bytes } => {
+                log::info!(
+                    "[calib] {phase}: bits {wbits:?} ({spent_bytes} of {budget_bytes} B budget)"
+                )
+            }
         }
     }
 }
@@ -233,6 +250,16 @@ mod tests {
         assert_eq!(j.req("evals").as_f64(), Some(3.0));
         let j = CalibEvent::Degenerate { phase: "init", detail: "all inf".into() }.to_json();
         assert_eq!(j.req("event").as_str(), Some("degenerate"));
+        let j = CalibEvent::Alloc {
+            phase: "alloc",
+            wbits: vec![32, 8, 2, 32],
+            budget_bytes: 100,
+            spent_bytes: 96,
+        }
+        .to_json();
+        assert_eq!(j.req("event").as_str(), Some("alloc"));
+        assert_eq!(j.req("wbits").as_arr().map(|a| a.len()), Some(4));
+        assert_eq!(j.req("spent_bytes").as_f64(), Some(96.0));
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! Exact bit allocation: a multi-choice knapsack solved by dynamic
+//! programming over byte budgets.  Each active layer picks exactly one
+//! candidate width; minimize total estimated loss degradation subject to
+//! the packed weight bytes fitting the budget.  No external solver — the
+//! builtin zoo's budgets are a few hundred KB, so the DP table is tiny.
+
+use anyhow::{bail, Result};
+
+/// The allocator's verdict, in full-quant-layer coordinates: `wbits[i]`
+/// is the chosen weight width for quant layer `i`, with `32` marking
+/// layers the mask left at FP32 (they join neither budget nor spend).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitPlan {
+    pub wbits: Vec<u32>,
+    /// Byte budget the allocation was solved under.
+    pub budget_bytes: usize,
+    /// Packed weight bytes the chosen plan actually uses.
+    pub spent_bytes: usize,
+}
+
+/// Solve the allocation.  `costs[k][j]` / `sens[k][j]` are the packed
+/// byte cost and loss degradation of layer `k` at candidate `j`
+/// (candidates ascending in bit-width).  Returns the chosen candidate
+/// index per layer and the total unscaled byte spend.
+///
+/// Ties between equal-value plans resolve toward **higher** bits: with a
+/// flat sensitivity table and an ample budget the result degrades to
+/// uniform max-width, never to a gratuitously aggressive plan.
+///
+/// Exactness: when `budget` exceeds ~4M cells the byte unit is doubled
+/// until the table fits, with per-item costs rounded **up** to the unit —
+/// scaled solutions therefore never overshoot the true budget, and for
+/// the builtin zoo (unit = 1) the DP is exact.
+pub fn allocate(
+    costs: &[Vec<usize>],
+    sens: &[Vec<f64>],
+    budget: usize,
+) -> Result<(Vec<usize>, usize)> {
+    if costs.len() != sens.len() {
+        bail!("allocator shape mismatch: {} cost rows vs {} sensitivity rows", costs.len(), sens.len());
+    }
+    if costs.is_empty() {
+        return Ok((Vec::new(), 0));
+    }
+    let m = costs[0].len();
+    if m == 0 || m > u8::MAX as usize {
+        bail!("allocator needs 1..=255 candidates per layer, got {m}");
+    }
+    for (k, (c, s)) in costs.iter().zip(sens).enumerate() {
+        if c.len() != m || s.len() != m {
+            bail!("allocator row {k} is ragged ({} costs, {} sensitivities, want {m})", c.len(), s.len());
+        }
+    }
+    let min_total: usize = costs.iter().map(|c| *c.iter().min().expect("non-empty row")).sum();
+    if min_total > budget {
+        bail!("size budget {budget} B infeasible: cheapest plan needs {min_total} B");
+    }
+
+    // Scale the byte unit up until the table is tractable; round costs up
+    // so a scaled-feasible plan is always unscaled-feasible.
+    let mut unit = 1usize;
+    while budget / unit > 4_000_000 {
+        unit *= 2;
+    }
+    let sb = budget / unit;
+    let scaled: Vec<Vec<usize>> =
+        costs.iter().map(|c| c.iter().map(|&b| b.div_ceil(unit)).collect()).collect();
+    let scaled_min: usize = scaled.iter().map(|c| *c.iter().min().expect("non-empty row")).sum();
+    if scaled_min > sb {
+        bail!(
+            "size budget {budget} B infeasible at {unit}-byte granularity: cheapest plan rounds to {} units over {sb}",
+            scaled_min
+        );
+    }
+
+    // dp[j] = best total sensitivity using at most j units; feas[j] marks
+    // states actually reachable (sensitivities may legitimately be +inf —
+    // a collapsed 2-bit layer — so the value can't double as the flag).
+    let mut dp = vec![0.0f64; sb + 1];
+    let mut feas = vec![true; sb + 1];
+    let mut choice: Vec<Vec<u8>> = Vec::with_capacity(costs.len());
+    for (k, c) in scaled.iter().enumerate() {
+        let mut nd = vec![0.0f64; sb + 1];
+        let mut nf = vec![false; sb + 1];
+        let mut ch = vec![u8::MAX; sb + 1];
+        for j in 0..=sb {
+            for (cand, &cb) in c.iter().enumerate() {
+                if cb <= j && feas[j - cb] {
+                    let v = dp[j - cb] + sens[k][cand];
+                    // `<=` + ascending candidate order: ties prefer the
+                    // later (higher-bit) candidate.
+                    if !nf[j] || v <= nd[j] {
+                        nd[j] = v;
+                        nf[j] = true;
+                        ch[j] = cand as u8;
+                    }
+                }
+            }
+        }
+        dp = nd;
+        feas = nf;
+        choice.push(ch);
+    }
+
+    // dp has "cost at most j" semantics, so dp[sb] is the optimum;
+    // reconstruct from the full budget (ties already resolved upward).
+    debug_assert!(feas[sb], "feasibility was checked up front");
+    let mut at = sb;
+    let mut pick = vec![0usize; costs.len()];
+    for k in (0..costs.len()).rev() {
+        let cand = choice[k][at] as usize;
+        debug_assert_ne!(choice[k][at], u8::MAX, "reconstruction hit an infeasible state");
+        pick[k] = cand;
+        at -= scaled[k][cand];
+    }
+    let spent: usize = pick.iter().enumerate().map(|(k, &cand)| costs[k][cand]).sum();
+    debug_assert!(spent <= budget, "plan spends {spent} B over budget {budget} B");
+    Ok((pick, spent))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn hand_checked_optimum() {
+        // layer 0: costs 1/2/4, sens 10/4/1; layer 1: costs 2/4/8, sens 3/1/0.2
+        let costs = vec![vec![1, 2, 4], vec![2, 4, 8]];
+        let sens = vec![vec![10.0, 4.0, 1.0], vec![3.0, 1.0, 0.2]];
+        // budget 8: best is layer0@2 (cost 2) + layer1@1 (cost 4) = 6 ≤ 8,
+        // value 4+1=5; alternatives: [0,2]=10.2 cost 10 infeasible,
+        // [2,1]=2.0 cost 8 feasible and better!  4+4=8 ≤ 8 value 1+1=2.
+        let (pick, spent) = allocate(&costs, &sens, 8).unwrap();
+        assert_eq!(pick, vec![2, 1]);
+        assert_eq!(spent, 8);
+        // budget 12: [2,2] costs 12, value 1.2 — now feasible and optimal.
+        let (pick, spent) = allocate(&costs, &sens, 12).unwrap();
+        assert_eq!(pick, vec![2, 2]);
+        assert_eq!(spent, 12);
+    }
+
+    #[test]
+    fn budget_is_respected_exactly() {
+        let costs = vec![vec![1, 2, 4]; 3];
+        let sens = vec![vec![9.0, 3.0, 1.0]; 3];
+        for budget in 3..=12 {
+            let (pick, spent) = allocate(&costs, &sens, budget).unwrap();
+            assert!(spent <= budget, "budget {budget}: spent {spent}");
+            assert_eq!(spent, pick.iter().map(|&c| costs[0][c]).sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn ample_budget_degrades_to_uniform_max_bits() {
+        // flat sensitivities: nothing to trade, ties must resolve upward
+        let costs = vec![vec![1, 2, 4]; 4];
+        let sens = vec![vec![0.0, 0.0, 0.0]; 4];
+        let (pick, spent) = allocate(&costs, &sens, 16).unwrap();
+        assert_eq!(pick, vec![2; 4], "ample budget + flat sens → max width everywhere");
+        assert_eq!(spent, 16);
+    }
+
+    #[test]
+    fn infeasible_budget_bails() {
+        let costs = vec![vec![4, 8], vec![4, 8]];
+        let sens = vec![vec![1.0, 0.0]; 2];
+        let err = allocate(&costs, &sens, 7).unwrap_err().to_string();
+        assert!(err.contains("infeasible"), "got: {err}");
+        // exactly the cheapest plan fits
+        let (pick, spent) = allocate(&costs, &sens, 8).unwrap();
+        assert_eq!(pick, vec![0, 0]);
+        assert_eq!(spent, 8);
+    }
+
+    #[test]
+    fn infinite_sensitivity_is_feasible_but_avoided() {
+        // a collapsed 2-bit layer reports +inf; the allocator must route
+        // around it when the budget allows and still terminate when not.
+        let costs = vec![vec![1, 2], vec![1, 2]];
+        let sens = vec![vec![f64::INFINITY, 0.5], vec![0.1, 0.0]];
+        let (pick, _) = allocate(&costs, &sens, 3).unwrap();
+        assert_eq!(pick[0], 1, "must pay bytes to escape the inf row");
+        // budget forces the inf choice: still returns a plan, not a hang
+        let (pick, spent) = allocate(&costs, &sens, 2).unwrap();
+        assert_eq!(pick, vec![0, 0]);
+        assert_eq!(spent, 2);
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_instances() {
+        let mut rng = Pcg32::seeded(77);
+        for trial in 0..60 {
+            let layers = 1 + rng.below(4) as usize;
+            let cands = 2 + rng.below(3) as usize;
+            let costs: Vec<Vec<usize>> = (0..layers)
+                .map(|_| {
+                    let mut c: Vec<usize> = (0..cands).map(|_| 1 + rng.below(6) as usize).collect();
+                    c.sort_unstable();
+                    c
+                })
+                .collect();
+            let sens: Vec<Vec<f64>> = (0..layers)
+                .map(|_| {
+                    let mut s: Vec<f64> = (0..cands).map(|_| rng.below(1000) as f64 / 100.0).collect();
+                    s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                    s
+                })
+                .collect();
+            let budget = layers + rng.below(16) as usize;
+            let min_total: usize = costs.iter().map(|c| c[0]).sum();
+            if min_total > budget {
+                assert!(allocate(&costs, &sens, budget).is_err());
+                continue;
+            }
+            let (pick, spent) = allocate(&costs, &sens, budget).unwrap();
+            let value: f64 = pick.iter().enumerate().map(|(k, &c)| sens[k][c]).sum();
+            // brute force over cands^layers
+            let mut best = f64::INFINITY;
+            let mut idx = vec![0usize; layers];
+            loop {
+                let cost: usize = idx.iter().enumerate().map(|(k, &c)| costs[k][c]).sum();
+                if cost <= budget {
+                    let v: f64 = idx.iter().enumerate().map(|(k, &c)| sens[k][c]).sum();
+                    best = best.min(v);
+                }
+                let mut k = 0;
+                loop {
+                    idx[k] += 1;
+                    if idx[k] < cands {
+                        break;
+                    }
+                    idx[k] = 0;
+                    k += 1;
+                    if k == layers {
+                        break;
+                    }
+                }
+                if k == layers {
+                    break;
+                }
+            }
+            assert!(
+                (value - best).abs() < 1e-9,
+                "trial {trial}: DP value {value} vs brute force {best} (spent {spent}/{budget})"
+            );
+        }
+    }
+
+    #[test]
+    fn shape_errors_bail() {
+        assert!(allocate(&[vec![1, 2]], &[], 10).is_err());
+        assert!(allocate(&[vec![1, 2]], &[vec![1.0]], 10).is_err());
+        assert!(allocate(&[vec![]], &[vec![]], 10).is_err());
+        let (pick, spent) = allocate(&[], &[], 10).unwrap();
+        assert!(pick.is_empty());
+        assert_eq!(spent, 0);
+    }
+}

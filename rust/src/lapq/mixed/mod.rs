@@ -1,0 +1,119 @@
+//! Mixed-precision subsystem: sensitivity-driven per-layer weight
+//! bit allocation under a model-size budget, wired into the Calibrator
+//! as an extra phase plus a sharpness-aware post stage.
+//!
+//! The paper's landscape finding (flat and separable at mild bit-widths,
+//! steep and coupled at 4 bits) means bits are not equally valuable in
+//! every layer.  This module turns that into an allocation:
+//!
+//! * [`profiler`] — measure per-layer loss degradation at each candidate
+//!   bit-width, either from one finite-difference Hessian
+//!   (`analysis::hessian` + `analysis::curvature`, Hubara-style cheap
+//!   estimate) or by direct loss probes, one layer × bit at a time,
+//!   with automatic fallback to direct when the quadratic model is
+//!   degenerate.
+//! * [`alloc`] — solve the resulting multi-choice knapsack exactly by
+//!   DP over byte budgets and emit a [`BitPlan`].
+//! * [`sharpness`] — a [`PostStage`](super::stages::PostStage) that
+//!   re-optimizes the joint scale vector against the worst of K sampled
+//!   Δ-perturbations (Liu-style sharpness-aware objective).
+//!
+//! The plan flows through the whole stack: `Calibrator::run` builds the
+//! objective on per-layer grids, `QuantOutcome::wbits` records the plan,
+//! `runtime::int::pack` packs each layer at its own width (i8/i4/i2
+//! payloads), and the pack key embeds the plan so mixed and uniform
+//! artifacts never collide in the model registry.
+
+pub mod alloc;
+pub mod profiler;
+pub mod sharpness;
+
+pub use alloc::{allocate, BitPlan};
+pub use profiler::SensitivityProfile;
+pub use sharpness::SharpnessAware;
+
+use super::calibration::CalibData;
+use super::events::{CalibEvent, CalibObserver};
+use super::objective::LayerMask;
+use crate::config::{ExperimentConfig, ProfilerMode};
+use crate::runtime::int::weight_storage_bytes;
+use crate::runtime::{EngineHandle, SessionId};
+use anyhow::{bail, Result};
+
+/// Phase label of the allocation phase (events, traces).
+pub const PHASE_ALLOC: &str = "alloc";
+
+/// Profile per-layer sensitivities and allocate bits under the byte
+/// budget.  The budget is `mixed.budget_frac` × the bytes the **active**
+/// weight layers would occupy at the uniform `bits_w` width, using the
+/// same [`weight_storage_bytes`] density as the packed artifact — so
+/// "budget_frac = 1.0" means "no larger on disk than the uniform pack".
+/// Masked-out layers stay FP32 (bits 32) and join neither the budget nor
+/// the baseline.
+pub fn plan_bits(
+    eng: &EngineHandle,
+    sess: SessionId,
+    cfg: &ExperimentConfig,
+    calib: &CalibData,
+    mask: &LayerMask,
+    obs: &mut dyn CalibObserver,
+) -> Result<(BitPlan, SensitivityProfile)> {
+    let n = mask.weights.len();
+    let mut bits: Vec<u32> =
+        cfg.mixed.candidate_bits.iter().copied().filter(|b| (2..=8).contains(b)).collect();
+    bits.sort_unstable();
+    bits.dedup();
+    if bits.is_empty() {
+        bail!("mixed.bits has no usable candidates (signed weight grids cover 2..=8)");
+    }
+    let active = mask.active_w();
+    if active.is_empty() {
+        return Ok((
+            BitPlan { wbits: vec![32; n], budget_bytes: 0, spent_bytes: 0 },
+            SensitivityProfile::empty(),
+        ));
+    }
+
+    let mut profile = match cfg.mixed.profiler {
+        ProfilerMode::Curvature => profiler::profile_curvature(eng, sess, calib, mask, &bits)?,
+        ProfilerMode::Direct => profiler::profile_direct(eng, sess, calib, mask, &bits)?,
+    };
+    if profile.mode_used == ProfilerMode::Curvature && profile.degenerate() {
+        obs.on_event(&CalibEvent::Degenerate {
+            phase: PHASE_ALLOC,
+            detail: "curvature sensitivity estimate is degenerate (non-finite, \
+                     non-monotone or flat); falling back to direct loss probes"
+                .into(),
+        });
+        let prior_evals = profile.evals;
+        let curvature = profile.curvature;
+        profile = profiler::profile_direct(eng, sess, calib, mask, &bits)?;
+        profile.evals += prior_evals;
+        profile.curvature = curvature;
+    }
+
+    let sizes: Vec<usize> = active.iter().map(|&l| calib.weights[l].f().len()).collect();
+    let costs: Vec<Vec<usize>> = sizes
+        .iter()
+        .map(|&m| bits.iter().map(|&b| weight_storage_bytes(m, b)).collect())
+        .collect();
+    let uniform: usize =
+        sizes.iter().map(|&m| weight_storage_bytes(m, cfg.bits.weights)).sum();
+    let budget = (cfg.mixed.budget_frac * uniform as f64).floor() as usize;
+    let (pick, spent) = allocate(&costs, &profile.sens, budget)?;
+
+    let mut wbits = vec![32u32; n];
+    for (k, &l) in active.iter().enumerate() {
+        wbits[l] = bits[pick[k]];
+    }
+    log::info!(
+        "[mixed] allocated bits {:?} ({} of {} budget bytes, uniform-w{} baseline {} B, {})",
+        wbits,
+        spent,
+        budget,
+        cfg.bits.weights,
+        uniform,
+        profile.mode_used.key(),
+    );
+    Ok((BitPlan { wbits, budget_bytes: budget, spent_bytes: spent }, profile))
+}

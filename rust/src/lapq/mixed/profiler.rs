@@ -1,0 +1,231 @@
+//! Per-layer sensitivity profiling: how much calibration loss does each
+//! layer lose at each candidate bit-width, all other layers held FP32?
+//!
+//! Two estimators share one output shape:
+//!
+//! * **Direct** — one objective per candidate width, one loss eval per
+//!   (layer, width) pair with `dw` zero everywhere except the probed
+//!   layer.  Exact but `layers × widths` forward passes.
+//! * **Curvature** — a single finite-difference Hessian at a near-FP32
+//!   probe point (`analysis::weight_hessian`), then a second-order
+//!   Taylor estimate per (layer, width).  One Hessian amortizes over
+//!   all widths; [`plan_bits`](super::plan_bits) falls back to direct
+//!   probes when [`SensitivityProfile::degenerate`] says the quadratic
+//!   model can't be trusted.
+
+use crate::analysis::curvature::gaussian_curvature;
+use crate::analysis::hessian::weight_hessian;
+use crate::config::ProfilerMode;
+use crate::lapq::calibration::CalibData;
+use crate::lapq::objective::{CalibObjective, LayerMask};
+use crate::quant::minmax::minmax_delta;
+use crate::quant::GridKind;
+use crate::runtime::{EngineHandle, SessionId};
+use anyhow::Result;
+
+/// Sensitivity table: `sens[k][j]` is the estimated calibration-loss
+/// degradation of active layer `layers[k]` quantized to `bits[j]` with
+/// every other layer left FP32.  Rows follow [`LayerMask::active_w`]
+/// order; columns follow ascending candidate bits.
+#[derive(Clone, Debug)]
+pub struct SensitivityProfile {
+    /// Quant-layer indices of the rows (the mask's active weight layers).
+    pub layers: Vec<usize>,
+    /// Candidate bit-widths of the columns, ascending.
+    pub bits: Vec<u32>,
+    /// Loss degradation estimates, clamped at 0.
+    pub sens: Vec<Vec<f64>>,
+    /// FP32 (direct) or near-FP32 probe-point (curvature) reference loss.
+    pub base_loss: f64,
+    /// `analysis::gaussian_curvature` at the probe point (curvature mode).
+    pub curvature: Option<f64>,
+    /// Which estimator actually produced `sens`.
+    pub mode_used: ProfilerMode,
+    /// Objective evaluations spent.
+    pub evals: usize,
+}
+
+impl SensitivityProfile {
+    /// Profile of an empty active set (nothing to allocate).
+    pub fn empty() -> Self {
+        SensitivityProfile {
+            layers: Vec::new(),
+            bits: Vec::new(),
+            sens: Vec::new(),
+            base_loss: 0.0,
+            curvature: None,
+            mode_used: ProfilerMode::Direct,
+            evals: 0,
+        }
+    }
+
+    /// Is this estimate structurally untrustworthy?  True when any entry
+    /// is non-finite, any row says *more* bits hurt (sensitivity must be
+    /// non-increasing in bit-width), or every entry is zero (a flat table
+    /// gives the allocator nothing to trade on).
+    pub fn degenerate(&self) -> bool {
+        if self.sens.is_empty() {
+            return true;
+        }
+        let mut max_s = 0.0f64;
+        for row in &self.sens {
+            for (j, &s) in row.iter().enumerate() {
+                if !s.is_finite() {
+                    return true;
+                }
+                if j > 0 && s > row[j - 1] + 1e-9 {
+                    return true;
+                }
+                max_s = max_s.max(s);
+            }
+        }
+        max_s <= 0.0
+    }
+}
+
+/// Direct probing: for each candidate width `b`, quantize one layer at a
+/// time to its minmax Δ on the `b`-bit signed grid (`dw` zero elsewhere —
+/// a zero step leaves a layer FP32) and measure the loss excess over the
+/// FP32 reference.  Activations stay FP32 throughout (`da = 0`).
+pub fn profile_direct(
+    eng: &EngineHandle,
+    sess: SessionId,
+    calib: &CalibData,
+    mask: &LayerMask,
+    bits: &[u32],
+) -> Result<SensitivityProfile> {
+    let n = mask.weights.len();
+    let active = mask.active_w();
+    let da = vec![0.0f32; n];
+    let mut sens = vec![vec![0.0f64; bits.len()]; active.len()];
+    let mut base = 0.0f64;
+    let mut evals = 0usize;
+    for (j, &b) in bits.iter().enumerate() {
+        let qmax = GridKind::Signed.qmax(b);
+        let mut obj = CalibObjective::new(
+            eng,
+            sess,
+            calib.loss_batches.clone(),
+            mask.clone(),
+            vec![qmax; n],
+            vec![1.0; n],
+        );
+        if j == 0 {
+            base = obj.fp32_loss()?;
+            evals += 1;
+        }
+        for (k, &l) in active.iter().enumerate() {
+            let mut dw = vec![0.0f32; n];
+            dw[l] = minmax_delta(calib.weights[l].f(), qmax, GridKind::Signed);
+            sens[k][j] = (obj.loss(&dw, &da)? - base).max(0.0);
+        }
+        evals += obj.evals;
+    }
+    Ok(SensitivityProfile {
+        layers: active,
+        bits: bits.to_vec(),
+        sens,
+        base_loss: base,
+        curvature: None,
+        mode_used: ProfilerMode::Direct,
+        evals,
+    })
+}
+
+/// Curvature estimate: one central-difference Hessian at the mildest
+/// probe point (every active layer at its minmax Δ for the *largest*
+/// candidate width, where the paper finds the landscape flat and
+/// separable), then per-layer second-order extrapolation to the other
+/// widths: `sens ≈ g_k·(Δ_b − Δ_0) + ½·H_kk·(Δ_b − Δ_0)²`.
+pub fn profile_curvature(
+    eng: &EngineHandle,
+    sess: SessionId,
+    calib: &CalibData,
+    mask: &LayerMask,
+    bits: &[u32],
+) -> Result<SensitivityProfile> {
+    let n = mask.weights.len();
+    let active = mask.active_w();
+    let max_bit = *bits.iter().max().expect("candidate bits are non-empty");
+    let qmax_hi = GridKind::Signed.qmax(max_bit);
+    let da = vec![0.0f32; n];
+    let mut dw0 = vec![0.0f32; n];
+    for &l in &active {
+        dw0[l] = minmax_delta(calib.weights[l].f(), qmax_hi, GridKind::Signed);
+    }
+    let mut obj = CalibObjective::new(
+        eng,
+        sess,
+        calib.loss_batches.clone(),
+        mask.clone(),
+        vec![qmax_hi; n],
+        vec![1.0; n],
+    );
+    let rep = weight_hessian(&mut obj, &dw0, &da, 0.25)?;
+    let curvature = gaussian_curvature(&rep);
+
+    let mut sens = vec![vec![0.0f64; bits.len()]; active.len()];
+    for (k, &l) in active.iter().enumerate() {
+        let d0 = dw0[l] as f64;
+        for (j, &b) in bits.iter().enumerate() {
+            let db = minmax_delta(calib.weights[l].f(), GridKind::Signed.qmax(b), GridKind::Signed)
+                as f64;
+            let d = db - d0;
+            sens[k][j] = (rep.grad[k] * d + 0.5 * rep.h[k][k] * d * d).max(0.0);
+        }
+    }
+    Ok(SensitivityProfile {
+        layers: active,
+        bits: bits.to_vec(),
+        sens,
+        base_loss: rep.f0,
+        curvature: Some(curvature),
+        mode_used: ProfilerMode::Curvature,
+        evals: obj.evals,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile(sens: Vec<Vec<f64>>) -> SensitivityProfile {
+        SensitivityProfile {
+            layers: (0..sens.len()).collect(),
+            bits: vec![2, 4, 8],
+            sens,
+            base_loss: 0.1,
+            curvature: Some(1.0),
+            mode_used: ProfilerMode::Curvature,
+            evals: 0,
+        }
+    }
+
+    #[test]
+    fn monotone_positive_table_is_sound() {
+        let p = profile(vec![vec![3.0, 1.0, 0.1], vec![0.5, 0.5, 0.0]]);
+        assert!(!p.degenerate());
+    }
+
+    #[test]
+    fn degenerate_on_nonfinite() {
+        let p = profile(vec![vec![f64::INFINITY, 1.0, 0.1]]);
+        assert!(p.degenerate(), "inf entries are tolerated only as a flag");
+        let p = profile(vec![vec![f64::NAN, 1.0, 0.1]]);
+        assert!(p.degenerate());
+    }
+
+    #[test]
+    fn degenerate_on_inverted_row() {
+        // more bits must not hurt: 1.0 → 2.0 with rising width is nonsense
+        let p = profile(vec![vec![3.0, 1.0, 2.0]]);
+        assert!(p.degenerate());
+    }
+
+    #[test]
+    fn degenerate_on_flat_zero_table() {
+        let p = profile(vec![vec![0.0, 0.0, 0.0], vec![0.0, 0.0, 0.0]]);
+        assert!(p.degenerate());
+        assert!(SensitivityProfile::empty().degenerate());
+    }
+}

@@ -13,6 +13,8 @@
 //! | Table 1 baselines (no joint phase)   | [`stages::BaselineInit`]            |
 //! | Table 3 "Random" init ablation       | [`stages::RandomInit`]              |
 //! | Banner-style weight correction       | [`stages::BiasCorrection`] ([`stages::PostStage`]) |
+//! | mixed-precision bit allocation       | [`mixed`] (profiler + knapsack DP)  |
+//! | sharpness-aware Δ re-optimization    | [`mixed::SharpnessAware`] ([`stages::PostStage`]) |
 //!
 //! The init strategies are *composable candidates*: every strategy
 //! proposes Δ vectors, the calibrator's best-of selector evaluates all of
@@ -46,6 +48,7 @@
 pub mod calibration;
 pub mod calibrator;
 pub mod events;
+pub mod mixed;
 pub mod objective;
 pub mod pipeline;
 pub mod stages;

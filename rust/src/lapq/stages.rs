@@ -520,7 +520,9 @@ pub fn joint_optimizer(cfg: &JointCfg) -> Box<dyn JointOptimizer> {
 // ---------------------------------------------------------------------------
 
 /// A stage that runs after the Δ search, mutating session params and/or
-/// the outcome (bias correction today; per-channel refinement tomorrow).
+/// the outcome (bias correction, sharpness-aware re-optimization).  The
+/// calibration data is passed so stages can rebuild a loss objective on
+/// the same batches the search used.
 pub trait PostStage {
     fn name(&self) -> &'static str;
     fn phase(&self) -> &'static str;
@@ -530,6 +532,7 @@ pub trait PostStage {
         sess: SessionId,
         spec: &ModelSpec,
         cfg: &ExperimentConfig,
+        calib: &CalibData,
         outcome: &mut QuantOutcome,
     ) -> Result<()>;
 }
@@ -553,6 +556,7 @@ impl PostStage for BiasCorrection {
         sess: SessionId,
         spec: &ModelSpec,
         cfg: &ExperimentConfig,
+        _calib: &CalibData,
         outcome: &mut QuantOutcome,
     ) -> Result<()> {
         if !cfg.bits.quant_weights() {

@@ -342,7 +342,10 @@ pub fn predict_row(row: &[f32]) -> i64 {
 #[derive(Debug, Clone)]
 pub enum Response {
     Pong,
-    Models { models: Vec<String> },
+    /// `models` is the builtin zoo; `packs` echoes the registry's packed
+    /// artifacts as `(key, per-layer weight bits)` so clients can see
+    /// which mixed/uniform variants are already servable.
+    Models { models: Vec<String>, packs: Vec<(String, Vec<u32>)> },
     Metrics { metrics: Json },
     /// The quantize result subtree (built once per minutes-long job).
     Quantize { result: Json },
@@ -361,8 +364,11 @@ impl Response {
         Response::Error { msg: msg.into() }
     }
 
-    pub fn models(eng: &EngineHandle) -> Response {
-        Response::Models { models: eng.manifest().models.keys().cloned().collect() }
+    pub fn models(eng: &EngineHandle, registry: &crate::serve::registry::ModelRegistry) -> Response {
+        Response::Models {
+            models: eng.manifest().models.keys().cloned().collect(),
+            packs: registry.entries_wbits(),
+        }
     }
 
     pub fn metrics() -> Response {
@@ -411,7 +417,7 @@ impl Response {
                 let _ = json::write_escaped(out, wire);
                 out.push('}');
             }
-            Response::Models { models } => {
+            Response::Models { models, packs } => {
                 out.push_str(r#"{"models":["#);
                 for (i, m) in models.iter().enumerate() {
                     if i > 0 {
@@ -419,7 +425,27 @@ impl Response {
                     }
                     let _ = json::write_escaped(out, m);
                 }
-                out.push_str(r#"],"ok":true}"#);
+                out.push_str(r#"],"ok":true"#);
+                if !packs.is_empty() {
+                    out.push_str(r#","packs":["#);
+                    for (i, (key, wbits)) in packs.iter().enumerate() {
+                        if i > 0 {
+                            out.push(',');
+                        }
+                        out.push_str(r#"{"key":"#);
+                        let _ = json::write_escaped(out, key);
+                        out.push_str(r#","wbits":["#);
+                        for (k, b) in wbits.iter().enumerate() {
+                            if k > 0 {
+                                out.push(',');
+                            }
+                            let _ = write!(out, "{b}");
+                        }
+                        out.push_str("]}");
+                    }
+                    out.push(']');
+                }
+                out.push('}');
             }
             Response::Metrics { metrics } => {
                 let _ = write!(out, r#"{{"metrics":{metrics},"ok":true}}"#);
@@ -488,7 +514,32 @@ impl Response {
                 .as_arr()
                 .map(|a| a.iter().filter_map(|v| v.as_str().map(str::to_string)).collect())
                 .unwrap_or_default();
-            Ok(Response::Models { models })
+            let packs = j
+                .get("packs")
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .map(|p| {
+                            let key = p
+                                .get("key")
+                                .and_then(|v| v.as_str())
+                                .unwrap_or_default()
+                                .to_string();
+                            let wbits = p
+                                .get("wbits")
+                                .and_then(|v| v.as_arr())
+                                .map(|b| {
+                                    b.iter()
+                                        .filter_map(|v| v.as_f64().map(|n| n as u32))
+                                        .collect()
+                                })
+                                .unwrap_or_default();
+                            (key, wbits)
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            Ok(Response::Models { models, packs })
         } else if let Some(m) = j.get("metrics") {
             Ok(Response::Metrics { metrics: m.clone() })
         } else if let Some(p) = j.get("packed") {
@@ -524,6 +575,17 @@ fn write_pack(s: &PackSummary, out: &mut String) {
     let _ = json::write_num(out, s.quant_metric as f64);
     out.push_str(r#","seconds":"#);
     let _ = json::write_num(out, s.seconds);
+    // "wbits" sorts last; omitted when empty so pre-mixed lines round-trip
+    if !s.wbits.is_empty() {
+        out.push_str(r#","wbits":["#);
+        for (i, b) in s.wbits.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{b}");
+        }
+        out.push(']');
+    }
     out.push_str("}}");
 }
 
@@ -571,6 +633,11 @@ fn pack_from_json(p: &Json) -> PackSummary {
         fp32_metric: f("fp32_metric") as f32,
         quant_metric: f("quant_metric") as f32,
         seconds: f("seconds"),
+        wbits: p
+            .get("wbits")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_f64().map(|n| n as u32)).collect())
+            .unwrap_or_default(),
     }
 }
 

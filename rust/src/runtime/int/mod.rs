@@ -28,5 +28,5 @@ pub mod model;
 pub mod packed;
 pub mod session;
 
-pub use model::{pack, PackOpts, QuantizedModel};
+pub use model::{pack, weight_storage_bytes, PackOpts, QuantizedModel};
 pub use session::{ExecMode, InferResult, InferSession};

@@ -18,7 +18,9 @@
 //! The artifact records the snapped Δ vectors, so the fake-quant
 //! reference for a packed model is `eval` with `QuantizedModel::quant`.
 
-use super::packed::{f32s_to_le, i8s_to_le, le_to_f32s, le_to_i8s, pack_i4, unpack_i4};
+use super::packed::{
+    f32s_to_le, i8s_to_le, le_to_f32s, le_to_i8s, pack_i2, pack_i4, unpack_i2, unpack_i4,
+};
 use crate::quant::quantizer::round_half_even;
 use crate::quant::GridKind;
 use crate::runtime::backend::QuantParams;
@@ -114,6 +116,19 @@ fn bits_for(qmax: f32) -> Result<u32> {
         }
     }
     bail!("weight grid qmax {qmax} is not a supported ≤8-bit signed grid")
+}
+
+/// Serialized weight bytes for `n` values at `bits` (32 = FP32).  One
+/// definition shared by `packed_bytes`, the blob codecs and the
+/// mixed-precision allocator's budget, so "equal packed size" in a bench
+/// comparison means equal bytes on disk.
+pub fn weight_storage_bytes(n: usize, bits: u32) -> usize {
+    match bits {
+        0..=2 => n.div_ceil(4),
+        3..=4 => n.div_ceil(2),
+        5..=8 => n,
+        _ => n * 4,
+    }
 }
 
 /// Quantize fp32 parameters onto the calibrated grids.  `active`
@@ -255,21 +270,30 @@ pub fn pack(
 }
 
 impl QuantizedModel {
-    /// Serialized payload size (i4 nibble-packed), for compression stats.
+    /// Serialized payload size (i4 nibble-packed, i2 crumb-packed), for
+    /// compression stats.
     pub fn packed_bytes(&self) -> usize {
         self.params
             .iter()
             .map(|p| match &p.payload {
                 Payload::F32(v) => v.len() * 4,
-                Payload::Int { bits, q, .. } => {
-                    if *bits <= 4 {
-                        q.len().div_ceil(2)
-                    } else {
-                        q.len()
-                    }
-                }
+                Payload::Int { bits, q, .. } => weight_storage_bytes(q.len(), *bits),
             })
             .sum()
+    }
+
+    /// Per-quant-layer weight bit-widths as served: the `Payload::Int`
+    /// bits for quantized layers, 32 for layers left FP32.  This is the
+    /// artifact-truth bit plan echoed by `pack` summaries and
+    /// `{"cmd":"models"}`.
+    pub fn wbits(&self) -> Vec<u32> {
+        self.layers
+            .iter()
+            .map(|l| match &self.params[l.weight_param].payload {
+                Payload::Int { bits, .. } => *bits,
+                Payload::F32(_) => 32,
+            })
+            .collect()
     }
 
     /// What the same parameters occupy at fp32.
@@ -299,7 +323,10 @@ impl QuantizedModel {
                     entry.push(("enc", Json::Str("f32".into())));
                 }
                 Payload::Int { bits, q, scale } => {
-                    if *bits <= 4 {
+                    if *bits <= 2 {
+                        blob.extend_from_slice(&pack_i2(q));
+                        entry.push(("enc", Json::Str("i2".into())));
+                    } else if *bits <= 4 {
                         blob.extend_from_slice(&pack_i4(q));
                         entry.push(("enc", Json::Str("i4".into())));
                     } else {
@@ -414,8 +441,12 @@ impl QuantizedModel {
                     }
                     Payload::F32(v)
                 }
-                "i8" | "i4" => {
-                    let q = if enc == "i4" { unpack_i4(slice, numel) } else { le_to_i8s(slice) };
+                "i8" | "i4" | "i2" => {
+                    let q = match enc {
+                        "i2" => unpack_i2(slice, numel),
+                        "i4" => unpack_i4(slice, numel),
+                        _ => le_to_i8s(slice),
+                    };
                     if q.len() != numel {
                         bail!("param {name}: {} int values for shape {shape:?}", q.len());
                     }
@@ -533,6 +564,54 @@ mod tests {
         let n = spec.n_quant_layers();
         let err = pack(spec, &params, &int8_all(n), None, &PackOpts::default());
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn mixed_bits_pack_and_accounting() {
+        let m = Manifest::builtin();
+        let spec = m.model("mlp3").unwrap();
+        let params = init_params(&spec.params, 3);
+        // per-layer W8 / W2 / W4 grids (mixed-precision plan)
+        let q = QuantParams {
+            dw: vec![0.0625, 0.5, 0.125],
+            qmw: vec![127.0, 1.0, 7.0],
+            da: vec![0.25; 3],
+            qma: vec![127.0; 3],
+        };
+        let qm = pack(spec, &params, &q, None, &PackOpts::default()).unwrap();
+        assert_eq!(qm.wbits(), vec![8, 2, 4]);
+        let weight_bytes: usize = qm
+            .params
+            .iter()
+            .filter_map(|p| match &p.payload {
+                Payload::Int { bits, q, .. } => Some(weight_storage_bytes(q.len(), *bits)),
+                Payload::F32(_) => None,
+            })
+            .sum();
+        let f32_weightless: usize = qm
+            .params
+            .iter()
+            .filter_map(|p| match &p.payload {
+                Payload::F32(v) => Some(v.len() * 4),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(qm.packed_bytes(), weight_bytes + f32_weightless);
+        // ternary layer really is ternary
+        if let Payload::Int { bits, q, .. } = &qm.params[2].payload {
+            assert_eq!(*bits, 2);
+            assert!(q.iter().all(|&v| (-1..=1).contains(&v)));
+        } else {
+            panic!("layer 1 weights should be Int");
+        }
+    }
+
+    #[test]
+    fn weight_storage_bytes_densities() {
+        assert_eq!(weight_storage_bytes(9, 2), 3);
+        assert_eq!(weight_storage_bytes(9, 4), 5);
+        assert_eq!(weight_storage_bytes(9, 8), 9);
+        assert_eq!(weight_storage_bytes(9, 32), 36);
     }
 
     #[test]

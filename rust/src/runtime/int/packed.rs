@@ -1,9 +1,13 @@
 //! Byte-level codecs for the quantized-model blob: little-endian f32/i8
-//! payloads and the 2-per-byte INT4 nibble packing.
+//! payloads, the 2-per-byte INT4 nibble packing and the 4-per-byte INT2
+//! crumb packing.
 //!
 //! The in-memory representation always holds one `i8` per weight (the
-//! kernels index it directly); `pack_i4`/`unpack_i4` are the
-//! serialization form for ≤4-bit grids, halving the on-disk artifact.
+//! kernels index it directly); `pack_i4`/`unpack_i4` and
+//! `pack_i2`/`unpack_i2` are the serialization forms for ≤4-bit and
+//! ≤2-bit grids, halving resp. quartering the on-disk artifact.  The
+//! same densities drive `QuantizedModel::packed_bytes`, so the
+//! mixed-precision allocator's byte budget and the serialized size agree.
 
 /// Pack signed 4-bit values (range −8..=7; LAPQ grids use −7..=7) two per
 /// byte: even index in the low nibble, odd index in the high nibble.  An
@@ -27,6 +31,36 @@ pub fn unpack_i4(bytes: &[u8], n: usize) -> Vec<i8> {
         out.push((((b & 0x0f) << 4) as i8) >> 4);
         if out.len() < n {
             out.push((b as i8) >> 4);
+        }
+    }
+    out
+}
+
+/// Pack signed 2-bit values (range −2..=1; ternary LAPQ grids use
+/// −1..=1) four per byte, index `i` in bits `2(i mod 4)..2(i mod 4)+2`.
+/// A short tail leaves the remaining crumbs zero.
+pub fn pack_i2(q: &[i8]) -> Vec<u8> {
+    debug_assert!(q.iter().all(|&v| (-2..=1).contains(&v)), "value outside i2 range");
+    let mut out = Vec::with_capacity(q.len().div_ceil(4));
+    for quad in q.chunks(4) {
+        let mut b = 0u8;
+        for (k, &v) in quad.iter().enumerate() {
+            b |= ((v as u8) & 0x03) << (2 * k);
+        }
+        out.push(b);
+    }
+    out
+}
+
+/// Inverse of [`pack_i2`]: expand `n` sign-extended values.
+pub fn unpack_i2(bytes: &[u8], n: usize) -> Vec<i8> {
+    assert_eq!(bytes.len(), n.div_ceil(4), "i2 payload is {} bytes for {} values", bytes.len(), n);
+    let mut out = Vec::with_capacity(n);
+    for &b in bytes {
+        for k in 0..4 {
+            if out.len() < n {
+                out.push(((((b >> (2 * k)) & 0x03) << 6) as i8) >> 6);
+            }
         }
     }
     out
@@ -85,6 +119,33 @@ mod tests {
     fn i4_extremes() {
         let q = vec![-8i8, 7, -1, 0, 1, -7];
         assert_eq!(unpack_i4(&pack_i4(&q), 6), q);
+    }
+
+    #[test]
+    fn i2_roundtrip_even_and_odd() {
+        for n in [0usize, 1, 2, 3, 4, 5, 8, 17] {
+            let value = |i: usize| ((i as i64 * 3 - 2).rem_euclid(4) - 2) as i8;
+            let q: Vec<i8> = (0..n).map(value).collect();
+            let packed = pack_i2(&q);
+            assert_eq!(packed.len(), n.div_ceil(4));
+            assert_eq!(unpack_i2(&packed, n), q);
+        }
+    }
+
+    #[test]
+    fn i2_roundtrip_random() {
+        let mut rng = Pcg32::seeded(13);
+        for _ in 0..50 {
+            let n = rng.below(64) as usize;
+            let q: Vec<i8> = (0..n).map(|_| (rng.below(4) as i8) - 2).collect();
+            assert_eq!(unpack_i2(&pack_i2(&q), n), q);
+        }
+    }
+
+    #[test]
+    fn i2_extremes() {
+        let q = vec![-2i8, 1, -1, 0, 1, -2, 0];
+        assert_eq!(unpack_i2(&pack_i2(&q), 7), q);
     }
 
     #[test]

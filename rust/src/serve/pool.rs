@@ -51,6 +51,8 @@ use std::sync::{Arc, RwLock, RwLockWriteGuard};
 struct Shared {
     eng: EngineHandle,
     runner: RwLock<Runner>,
+    /// Read-path view of the packed-model LRU (same Arc the Runner fills).
+    registry: Arc<ModelRegistry>,
     batcher: Batcher,
     active_conns: Arc<AtomicUsize>,
     retry_after_ms: u64,
@@ -125,6 +127,7 @@ impl PoolServer {
         let shared = Arc::new(Shared {
             eng,
             runner: RwLock::new(runner),
+            registry: registry.clone(),
             batcher,
             active_conns,
             retry_after_ms,
@@ -284,7 +287,7 @@ fn dispatch(shared: &Shared, req: Request, writer: &mut dyn Write) -> Response {
 fn dispatch_inner(shared: &Shared, req: Request, writer: &mut dyn Write) -> Result<Response> {
     Ok(match req {
         Request::Ping => Response::Pong,
-        Request::Models => Response::models(&shared.eng),
+        Request::Models => Response::models(&shared.eng, &shared.registry),
         Request::Metrics => Response::metrics(),
         Request::Infer(ir) => {
             match shared.batcher.try_submit(&ir.key, ir.inputs) {

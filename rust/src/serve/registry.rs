@@ -38,7 +38,8 @@ struct Inner {
 }
 
 /// Thread-safe LRU of packed models, keyed by the pack key
-/// (`model:wNaM:METHOD`) with bare-model-name fallback.
+/// (`model:wNaM:METHOD`, or `model:w[8.4.2]aM:METHOD` for mixed-precision
+/// plans) with bare-model-name fallback.
 pub struct ModelRegistry {
     inner: RwLock<Inner>,
 }
@@ -113,6 +114,13 @@ impl ModelRegistry {
     /// Resident keys, most recently used first.
     pub fn keys(&self) -> Vec<String> {
         self.read().entries.iter().map(|(k, _)| k.clone()).collect()
+    }
+
+    /// Resident `(key, per-layer weight bits)` pairs, most recently used
+    /// first — what the `models` response echoes so clients can tell a
+    /// mixed pack from a uniform one without fetching the artifact.
+    pub fn entries_wbits(&self) -> Vec<(String, Vec<u32>)> {
+        self.read().entries.iter().map(|(k, qm)| (k.clone(), qm.wbits())).collect()
     }
 
     pub fn len(&self) -> usize {

@@ -29,11 +29,24 @@ fn po2_quant(
     wbits: u32,
     abits: u32,
 ) -> QuantParams {
+    po2_quant_mixed(spec, params, acts_batch, &vec![wbits; spec.n_quant_layers()], abits)
+}
+
+/// Same, but with an explicit per-layer weight width — what a
+/// mixed-precision bit plan feeds the packer.
+fn po2_quant_mixed(
+    spec: &ModelSpec,
+    params: &[HostTensor],
+    acts_batch: &[HostTensor],
+    wbits: &[u32],
+    abits: u32,
+) -> QuantParams {
     let acts = zoo::acts(spec, params, acts_batch).expect("acts");
     let n = spec.n_quant_layers();
+    assert_eq!(wbits.len(), n);
     let mut q = QuantParams {
         dw: vec![0.0; n],
-        qmw: vec![GridKind::Signed.qmax(wbits); n],
+        qmw: wbits.iter().map(|&b| GridKind::Signed.qmax(b)).collect(),
         da: vec![0.0; n],
         qma: vec![0.0; n],
     };
@@ -168,6 +181,46 @@ fn int4_mlp3_artifact_roundtrip_and_parity() {
     let sim_res = sess.infer(&[x], ExecMode::Simulated).unwrap();
     assert_eq!(int_res.int_layers, 3);
     assert_bits_equal(&int_res.logits.data, &sim_res.logits.data, "int4 logits");
+}
+
+#[test]
+fn mixed_w8_w4_mlp3_bit_exact_with_fake_quant_backend() {
+    let manifest = Manifest::builtin();
+    let spec = manifest.model("mlp3").unwrap();
+    for seed in [2u64, 13] {
+        let params = init_params(&spec.params, seed);
+        let data = SynthVision::new(seed);
+        let (x, _) = data.batch_features(0, 32, 64);
+        // a hand-written W8/W4 plan: heterogeneous widths in one artifact
+        let q = po2_quant_mixed(spec, &params, &[x.clone()], &[8, 4, 8], 8);
+        let qm = pack(spec, &params, &q, None, &PackOpts::default()).unwrap();
+        assert_eq!(qm.wbits(), vec![8, 4, 8], "seed {seed}");
+
+        // the blob round-trips with per-layer widths intact
+        let dir = tmp_dir(&format!("mixed{seed}"));
+        qm.save(&dir).unwrap();
+        let loaded = QuantizedModel::load(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(loaded, qm, "seed {seed}");
+        for p in &loaded.params {
+            if let Payload::Int { bits, q, .. } = &p.payload {
+                let qmax = GridKind::Signed.qmax(*bits) as i32;
+                assert!(
+                    q.iter().all(|&v| (-qmax..=qmax).contains(&(v as i32))),
+                    "param {} exceeds its {}-bit grid",
+                    p.name,
+                    bits
+                );
+            }
+        }
+
+        // W8 and W4 accumulators both stay under 2^24 on mlp3: bit-exact
+        let sess = InferSession::new(spec, &loaded).unwrap();
+        let int_res = sess.infer(&[x.clone()], ExecMode::Int).unwrap();
+        let sim_res = sess.infer(&[x], ExecMode::Simulated).unwrap();
+        assert_eq!(int_res.int_layers, 3, "seed {seed}");
+        assert_bits_equal(&int_res.logits.data, &sim_res.logits.data, "mixed logits");
+    }
 }
 
 #[test]

@@ -1,0 +1,193 @@
+//! Mixed-precision integration: the DP bit allocator's contract pinned
+//! on hand-checked instances, and the acceptance path end to end — a
+//! mixed pack flows calibrate → allocate → pack → save → load →
+//! [`InferSession`] → pool-server `infer` with bit-exact parity against
+//! the fake-quant reference, under its plan-embedding registry key.
+
+use lapq::config::{BitSpec, ExperimentConfig, Method, ServeCfg};
+use lapq::coordinator::jobs::Runner;
+use lapq::coordinator::service::request;
+use lapq::data::vision::SynthVision;
+use lapq::lapq::mixed::allocate;
+use lapq::runtime::int::model::Payload;
+use lapq::runtime::int::{weight_storage_bytes, ExecMode, InferSession, PackOpts, QuantizedModel};
+use lapq::runtime::EngineHandle;
+use lapq::serve::PoolServer;
+use lapq::util::json::Json;
+
+// ---------------------------------------------------------------- allocator
+
+/// Realistic byte costs for three 64-element layers at bits [2, 4, 8].
+fn costs3() -> Vec<Vec<usize>> {
+    let per = |n: usize| vec![2, 4, 8].into_iter().map(|b| weight_storage_bytes(n, b)).collect();
+    vec![per(64), per(64), per(64)]
+}
+
+#[test]
+fn allocator_is_optimal_on_a_hand_checked_instance() {
+    // sens[l][j] = loss increase at candidate j (bits ascending 2/4/8).
+    // Budget 96 B = uniform W4.  Exhaustive check over the 27 plans puts
+    // the optimum at [8, 2, 2]: 0.1 + 1.0 + 0.1 = 1.2 at exactly 96 B —
+    // the sensitive layer 0 buys its 8 bits from the insensitive tail.
+    let sens = vec![
+        vec![10.0, 2.0, 0.1],
+        vec![1.0, 0.3, 0.05],
+        vec![0.1, 0.05, 0.0],
+    ];
+    let (pick, spent) = allocate(&costs3(), &sens, 96).unwrap();
+    assert_eq!(pick, vec![2, 0, 0], "layer 0 gets 8 bits, the rest 2");
+    assert_eq!(spent, 96);
+}
+
+#[test]
+fn allocator_respects_the_budget_exactly() {
+    let sens = vec![
+        vec![10.0, 2.0, 0.1],
+        vec![1.0, 0.3, 0.05],
+        vec![0.1, 0.05, 0.0],
+    ];
+    // One byte under uniform W4: [8, 2, 2] (96 B) no longer fits, and the
+    // best ≤95 B plan is [4, 4, 2] at 80 B (2.0 + 0.3 + 0.1 = 2.4).
+    let (pick, spent) = allocate(&costs3(), &sens, 95).unwrap();
+    assert!(spent <= 95, "spent {spent}");
+    assert_eq!(pick, vec![1, 1, 0]);
+    assert_eq!(spent, 80);
+}
+
+#[test]
+fn ample_budget_degrades_to_uniform_max_bits() {
+    // With room for everything, every layer takes the widest candidate —
+    // a flat-sensitivity model must not be punished by the allocator.
+    let sens = vec![vec![1.0, 0.5, 0.1]; 3];
+    let (pick, spent) = allocate(&costs3(), &sens, 10_000).unwrap();
+    assert_eq!(pick, vec![2, 2, 2]);
+    assert_eq!(spent, 3 * weight_storage_bytes(64, 8));
+}
+
+// --------------------------------------------------------------- end to end
+
+fn assert_bits_equal(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+fn mixed_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp3".into();
+    cfg.train_steps = 60;
+    cfg.lr = 0.1;
+    cfg.calib_size = 512;
+    cfg.val_size = 1024;
+    cfg.bits = BitSpec::new(4, 4);
+    cfg.method = Method::Lapq;
+    cfg.lapq.joint.max_evals = 120;
+    cfg.lapq.joint.iters = 1;
+    // all three layers in play, or the plan has a single degree of freedom
+    cfg.lapq.exclude_first_last = false;
+    cfg.mixed.enabled = true;
+    cfg.mixed.budget_frac = 1.0;
+    cfg.mixed.sharpness_k = 2;
+    cfg
+}
+
+/// The issue's acceptance path: pack with allocation on, check the
+/// plan-embedding key and the size budget, round-trip the artifact
+/// through disk, serve it bit-exactly from an [`InferSession`] and from
+/// the concurrent pool server, and see the plan echoed by
+/// `{"cmd":"models"}`.
+#[test]
+fn mixed_pack_roundtrips_to_pool_serving_bit_exact() {
+    let eng = EngineHandle::start_default().expect("engine boots");
+    let mut runner = Runner::new(eng.clone());
+    let cfg = mixed_cfg();
+    let (sum, qm) = runner.pack(&cfg, &PackOpts::default()).unwrap();
+
+    // the registry key embeds the plan, so it can't collide with the
+    // uniform pack of the same config
+    assert!(sum.key.starts_with("mlp3:w["), "key {}", sum.key);
+    assert_ne!(sum.key, Runner::pack_key(&cfg));
+    assert_eq!(sum.wbits, qm.wbits());
+    assert_eq!(sum.wbits.len(), 3);
+    assert!(sum.wbits.iter().all(|b| [2, 4, 8].contains(b)), "{:?}", sum.wbits);
+
+    // allocation honoured the uniform-W4 byte budget
+    let (mixed_bytes, uniform_bytes) = qm
+        .params
+        .iter()
+        .filter_map(|p| match &p.payload {
+            Payload::Int { bits, q, .. } => {
+                Some((weight_storage_bytes(q.len(), *bits), weight_storage_bytes(q.len(), 4)))
+            }
+            Payload::F32(_) => None,
+        })
+        .fold((0, 0), |(m, u), (a, b)| (m + a, u + b));
+    assert!(mixed_bytes <= uniform_bytes, "{mixed_bytes} vs {uniform_bytes}");
+
+    // disk round-trip preserves the heterogeneous payloads
+    let dir = std::env::temp_dir().join(format!("lapq_mixed_e2e_{}", std::process::id()));
+    qm.save(&dir).unwrap();
+    let loaded = std::sync::Arc::new(QuantizedModel::load(&dir).unwrap());
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(*loaded, *qm);
+
+    // integer engine vs fake-quant reference: bit-for-bit on mlp3
+    let spec = runner.eng.manifest().model("mlp3").unwrap().clone();
+    let sess = InferSession::new(&spec, &loaded).unwrap();
+    let data = SynthVision::new(42);
+    let (x, _) = data.batch_features(0, 4, 64);
+    let int_res = sess.infer(&[x.clone()], ExecMode::Int).unwrap();
+    let sim_res = sess.infer(&[x.clone()], ExecMode::Simulated).unwrap();
+    assert_eq!(int_res.int_layers, 3);
+    assert_bits_equal(&int_res.logits.data, &sim_res.logits.data, "mixed logits");
+
+    // park the reloaded artifact in a pool server's registry and serve it
+    let scfg = ServeCfg {
+        workers: 2,
+        batch_window_ms: 0.0,
+        max_batch: 4,
+        queue_bound: 16,
+        registry_cap: 4,
+    };
+    let server = PoolServer::bind("127.0.0.1:0", eng, scfg).unwrap();
+    server.registry().put(sum.key.clone(), loaded);
+    let addr = server.addr;
+    let pool = std::thread::spawn(move || server.serve(2).unwrap());
+
+    // {"cmd":"models"} echoes the resident pack with its bit plan
+    let models = request(&addr, &Json::obj(vec![("cmd", Json::Str("models".into()))])).unwrap();
+    let packs = models.req("packs").as_arr().expect("packs echoed");
+    assert_eq!(packs.len(), 1);
+    assert_eq!(packs[0].req("key").as_str(), Some(sum.key.as_str()));
+    let echoed: Vec<u32> = packs[0]
+        .req("wbits")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|j| j.as_f64().map(|v| v as u32))
+        .collect();
+    assert_eq!(echoed, sum.wbits);
+
+    // infer over the wire on the mixed key: identical bits to the local
+    // session (f64 text is shortest-roundtrip, so f32 survives exactly)
+    let row: Vec<f32> = x.f()[..64].to_vec();
+    let infer = request(
+        &addr,
+        &Json::obj(vec![
+            ("cmd", Json::Str("infer".into())),
+            ("key", Json::Str(sum.key.clone())),
+            ("x", Json::Arr(vec![Json::arr_f32(&row)])),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(infer.req("ok").as_bool(), Some(true), "{infer:?}");
+    let got: Vec<f32> = infer.req("result").req("logits").as_arr().unwrap()[0]
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|j| j.as_f64().map(|v| v as f32))
+        .collect();
+    assert_bits_equal(&got, &int_res.logits.data[..got.len()], "served mixed logits");
+    pool.join().unwrap();
+}

@@ -71,7 +71,14 @@ fn response_roundtrip_every_variant() {
         Response::Pong,
         Response::Stopping,
         Response::Hello { wire: "bin1".into() },
-        Response::Models { models: vec!["mlp3".into(), "cnn6".into()] },
+        Response::Models { models: vec!["mlp3".into(), "cnn6".into()], packs: vec![] },
+        Response::Models {
+            models: vec!["mlp3".into()],
+            packs: vec![
+                ("mlp3:w8a8:LAPQ".into(), vec![32, 8, 32]),
+                ("cnn6:w[8.4.2]a4:LAPQ".into(), vec![8, 4, 2]),
+            ],
+        },
         Response::Metrics {
             metrics: Json::obj(vec![
                 ("service_requests", Json::Num(17.0)),
@@ -96,6 +103,23 @@ fn response_roundtrip_every_variant() {
                 fp32_metric: 0.875,
                 quant_metric: 0.8125,
                 seconds: 0.5,
+                wbits: vec![],
+            },
+        },
+        // a mixed-precision pack carries its per-layer plan on the wire
+        Response::Pack {
+            packed: PackSummary {
+                key: "cnn6:w[8.4.2]a4:LAPQ".into(),
+                model: "cnn6".into(),
+                bits_label: "w[8.4.2]a4".into(),
+                method: "LAPQ".into(),
+                int_params: 4321,
+                f32_bytes: 9000,
+                packed_bytes: 1500,
+                fp32_metric: 0.9,
+                quant_metric: 0.875,
+                seconds: 0.75,
+                wbits: vec![8, 4, 2],
             },
         },
         Response::Infer {
@@ -143,6 +167,22 @@ fn typed_writers_match_the_value_tree_serializer() {
     assert_eq!(unk, r#"{"cmd":"x","error":"unknown_cmd","ok":false}"#);
     let big = resp_line(&Response::TooLarge { limit_bytes: 10 });
     assert_eq!(big, r#"{"error":"too_large","limit_bytes":10,"ok":false}"#);
+
+    // the models response keeps alphabetical keys with packs present...
+    let with_packs = resp_line(&Response::Models {
+        models: vec!["mlp3".into()],
+        packs: vec![("cnn6:w[8.4.2]a4:LAPQ".into(), vec![8, 4, 2])],
+    });
+    let tree: Json = with_packs.parse().unwrap();
+    assert_eq!(tree.dump(), with_packs, "models+packs stays tree-serializer compatible");
+    assert_eq!(
+        with_packs,
+        r#"{"models":["mlp3"],"ok":true,"packs":[{"key":"cnn6:w[8.4.2]a4:LAPQ","wbits":[8,4,2]}]}"#
+    );
+    // ...and omits the key entirely when no packs are resident, so the
+    // pre-mixed wire format is emitted byte-for-byte.
+    let no_packs = resp_line(&Response::Models { models: vec!["mlp3".into()], packs: vec![] });
+    assert_eq!(no_packs, r#"{"models":["mlp3"],"ok":true}"#);
 }
 
 #[test]
