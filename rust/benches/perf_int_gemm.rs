@@ -1,17 +1,18 @@
-//! Perf: the integer path vs the f32 path — i8×i8→i32 GEMM against the
-//! f32 matmul on the same shapes (INT8 and nibble-packed INT4), plus an
-//! end-to-end INT8 `mlp3` infer against the fake-quant eval it replaces.
+//! Perf: the integer kernel tiers against each other and the f32 path —
+//! scalar reference vs blocked vs auto (SIMD when detected) i8×i8→i32
+//! GEMM, the nibble-domain INT4-direct kernel, and an end-to-end INT8
+//! `mlp3` infer against the fake-quant eval it replaces.
 //!
 //! `BENCH_SMOKE=1` runs a bounded subset (CI-sized) — either way the
-//! timings land in `bench_results/BENCH_int_infer.json`, starting the
-//! integer-path perf trajectory.
+//! timings land in `bench_results/BENCH_int_infer.json`, whose
+//! `blocked_vs_scalar_speedup` headline tracks the micro-kernel
+//! architecture's win on the heaviest shape.
 
 use lapq::benchkit::{bench, f3, Table};
 use lapq::quant::{minmax, GridKind};
 use lapq::runtime::cpu::{ops, zoo};
-use lapq::runtime::int::kernels;
+use lapq::runtime::int::kernels::{self, KernelChoice};
 use lapq::runtime::int::model::{pack, snap_po2, PackOpts};
-use lapq::runtime::int::packed::{pack_i4, unpack_i4};
 use lapq::runtime::int::{ExecMode, InferSession};
 use lapq::runtime::{Manifest, QuantParams};
 use lapq::tensor::init::init_params;
@@ -30,10 +31,15 @@ fn main() -> lapq::Result<()> {
     };
     let (warmup, iters) = if smoke { (1, 3) } else { (2, 10) };
     let mut rng = Pcg32::seeded(17);
+    let auto_name = kernels::active_kernel_name(KernelChoice::Auto);
 
-    let mut table =
-        Table::new("i8 GEMM vs f32 matmul", &["shape", "f32 ms", "i8 ms", "i4 ms", "i8 speedup"]);
+    let mut table = Table::new(
+        &format!("integer GEMM tiers vs f32 matmul (auto = {auto_name})"),
+        &["shape", "f32 ms", "scalar ms", "blocked ms", "auto ms", "i4 ms", "auto/scalar"],
+    );
     let mut gemm_rows: Vec<Json> = Vec::new();
+    let mut headline = 0.0f64;
+    let mut best_work = 0usize;
     for &(m, k, n) in shapes {
         let a8: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
         let b8: Vec<i8> = (0..k * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
@@ -42,23 +48,32 @@ fn main() -> lapq::Result<()> {
         let t_f32 = bench(&format!("f32 matmul {m}x{k}x{n}"), warmup, iters, || {
             black_box(ops::matmul(&af, &bf, m, k, n));
         });
-        let t_i8 = bench(&format!("i8 gemm {m}x{k}x{n}"), warmup, iters, || {
-            black_box(kernels::gemm(&a8, &b8, m, k, n));
+        let t_scalar = bench(&format!("i8 scalar {m}x{k}x{n}"), warmup, iters, || {
+            black_box(kernels::gemm_with(KernelChoice::Scalar, &a8, &b8, m, k, n));
         });
-        // INT4: weights stay nibble-packed in memory, unpacked per call
-        // (the bandwidth-bound deployment shape).
-        let a4: Vec<i8> = a8.iter().map(|&v| v.clamp(-7, 7)).collect();
-        let b4src: Vec<i8> = b8.iter().map(|&v| v.clamp(-7, 7)).collect();
-        let b4 = pack_i4(&b4src);
-        let t_i4 = bench(&format!("i4 unpack+gemm {m}x{k}x{n}"), warmup, iters, || {
-            let bu = unpack_i4(&b4, k * n);
-            black_box(kernels::gemm(&a4, &bu, m, k, n));
+        let t_blocked = bench(&format!("i8 blocked {m}x{k}x{n}"), warmup, iters, || {
+            black_box(kernels::gemm_with(KernelChoice::Blocked, &a8, &b8, m, k, n));
         });
-        let speedup = t_f32.mean_s / t_i8.mean_s.max(1e-12);
+        let t_auto = bench(&format!("i8 {auto_name} {m}x{k}x{n}"), warmup, iters, || {
+            black_box(kernels::gemm_with(KernelChoice::Auto, &a8, &b8, m, k, n));
+        });
+        // INT4-direct: weights stay in the nibble domain end to end —
+        // packed i4 panels, never widened to an i8 buffer.
+        let b4: Vec<i8> = b8.iter().map(|&v| v.clamp(-7, 7)).collect();
+        let t_i4 = bench(&format!("i4 direct {m}x{k}x{n}"), warmup, iters, || {
+            black_box(kernels::gemm_i4_with(KernelChoice::Auto, &a8, &b4, m, k, n));
+        });
+        let speedup = t_scalar.mean_s / t_auto.mean_s.max(1e-12);
+        if m * k * n > best_work {
+            best_work = m * k * n;
+            headline = speedup;
+        }
         table.row(&[
             format!("{m}x{k}x{n}"),
             f3(t_f32.mean_s * 1e3),
-            f3(t_i8.mean_s * 1e3),
+            f3(t_scalar.mean_s * 1e3),
+            f3(t_blocked.mean_s * 1e3),
+            f3(t_auto.mean_s * 1e3),
             f3(t_i4.mean_s * 1e3),
             format!("{speedup:.2}x"),
         ]);
@@ -67,12 +82,16 @@ fn main() -> lapq::Result<()> {
             ("k", Json::Num(k as f64)),
             ("n", Json::Num(n as f64)),
             ("f32_ms", Json::Num(t_f32.mean_s * 1e3)),
-            ("i8_ms", Json::Num(t_i8.mean_s * 1e3)),
+            ("scalar_ms", Json::Num(t_scalar.mean_s * 1e3)),
+            ("blocked_ms", Json::Num(t_blocked.mean_s * 1e3)),
+            ("auto_ms", Json::Num(t_auto.mean_s * 1e3)),
             ("i4_ms", Json::Num(t_i4.mean_s * 1e3)),
-            ("i8_speedup", Json::Num(speedup)),
+            ("auto_vs_scalar", Json::Num(speedup)),
+            ("f32_vs_auto", Json::Num(t_f32.mean_s / t_auto.mean_s.max(1e-12))),
         ]));
     }
     table.print();
+    println!("\nheadline blocked_vs_scalar_speedup ({auto_name}): {headline:.2}x");
 
     // End-to-end: packed INT8 mlp3 infer vs the fake-quant eval it
     // replaces, same batch, all layers quantized.
@@ -118,6 +137,8 @@ fn main() -> lapq::Result<()> {
     let report = Json::obj(vec![
         ("bench", Json::Str("perf_int_gemm".into())),
         ("smoke", Json::Bool(smoke)),
+        ("kernel", Json::Str(auto_name.into())),
+        ("blocked_vs_scalar_speedup", Json::Num(headline)),
         ("gemm", Json::Arr(gemm_rows)),
         (
             "infer",

@@ -21,6 +21,7 @@ use lapq::benchkit::{f3, Table};
 use lapq::config::{BitSpec, ExperimentConfig, Method, ServeCfg};
 use lapq::proto::wire::Client;
 use lapq::proto::InferRequest;
+use lapq::runtime::int::kernels::{active_kernel_name, KernelChoice};
 use lapq::runtime::EngineHandle;
 use lapq::serve::PoolServer;
 use lapq::tensor::HostTensor;
@@ -196,6 +197,7 @@ fn main() -> lapq::Result<()> {
         ("bench", Json::Str("perf_serve".into())),
         ("smoke", Json::Bool(smoke)),
         ("model", Json::Str("mlp3".into())),
+        ("kernel", Json::Str(active_kernel_name(KernelChoice::Auto).into())),
         ("requests_per_client", Json::Num(reqs as f64)),
         ("scenarios", Json::Arr(scen_json)),
         ("conc8_seq_rps", Json::Num(seq8)),

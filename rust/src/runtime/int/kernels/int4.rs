@@ -1,0 +1,31 @@
+//! Nibble-domain INT4 micro-kernel (portable scalar form).
+//!
+//! Computes directly on [`super::pack::PackedB4`] pair-bytes — one byte
+//! carries a column's `(k, k+1)` weight pair — so a ≤4-bit layer streams
+//! half the weight bytes of the i8 panel through the inner loop and
+//! never materializes a full-width i8 weight buffer.  The AVX2
+//! counterpart lives in `x86::micro_i4_avx2`; this version serves every
+//! other architecture (and the `Blocked` tier) and is bit-identical to
+//! decoding the nibbles up front.
+
+use super::pack::{MR, NR};
+use crate::runtime::int::packed::{i4_hi, i4_lo};
+
+/// Accumulate one A panel × one nibble-packed B panel into `acc`.
+pub(crate) fn micro_i4(ap: &[i16], bp4: &[u8], kp: usize, acc: &mut [[i32; NR]; MR]) {
+    for t in 0..kp / 2 {
+        let a = &ap[t * 2 * MR..t * 2 * MR + 2 * MR];
+        let b = &bp4[t * NR..t * NR + NR];
+        for (r, arow) in acc.iter_mut().enumerate() {
+            let a0 = a[2 * r] as i32;
+            let a1 = a[2 * r + 1] as i32;
+            if a0 == 0 && a1 == 0 {
+                continue;
+            }
+            for (j, o) in arow.iter_mut().enumerate() {
+                let byte = b[j];
+                *o += a0 * i4_lo(byte) as i32 + a1 * i4_hi(byte) as i32;
+            }
+        }
+    }
+}

@@ -1,0 +1,688 @@
+//! Integer forward kernels: activation quantization, the blocked
+//! i8×i8→i32 GEMM / im2col conv micro-kernel architecture, the
+//! dequantize+bias epilogue, and a fixed-point requantization multiplier
+//! for pure-integer targets.
+//!
+//! # Kernel architecture
+//!
+//! The GEMM/conv hot path is cache-blocked: activations are packed into
+//! `MR`-row A panels and weights into `NR`-column B panels ([`pack`]),
+//! and an inner micro-kernel accumulates one `MR×NR` register tile over
+//! the full k depth.  The micro-kernel is selected at runtime:
+//!
+//! | tier      | micro-kernel                                    |
+//! |-----------|--------------------------------------------------|
+//! | `scalar`  | the original unblocked reference loops ([`scalar`]) |
+//! | `blocked` | panels + scalar micro-kernel                     |
+//! | `simd`    | panels + AVX2 ([`x86`]) / NEON ([`neon`]) micro-kernel, detected at runtime |
+//!
+//! `LAPQ_KERNEL=scalar|blocked|simd` forces a tier for A/B measurement
+//! ([`kernel_choice`]); the default (`Auto`, also any unknown value) is
+//! `simd` with silent fallback to `blocked` when no extension is
+//! detected.  A fourth micro-kernel computes ≤4-bit layers directly in
+//! the nibble domain ([`int4`], AVX2 variant in [`x86`]) on pair-packed
+//! bytes, halving the weight bytes streamed per inner loop.
+//!
+//! # Exactness envelope
+//!
+//! Every tier is **bit-identical** by construction: integer addition is
+//! exactly associative, zero padding contributes zero, and the SIMD
+//! lanes form the same i32 products (no saturating shortcuts) — pinned
+//! on ~2k generated cases by `tests/kernel_diff`.  Two bounds matter:
+//!
+//! * **i32 accumulator**: a k-deep dot product of `A::MAX_ABS`-bounded
+//!   activations and i8 weights (|q| ≤ 128) is exact iff
+//!   `k · MAX_ABS · 128 ≤ i32::MAX` ([`acc_fits_i32`], debug-asserted on
+//!   every GEMM/conv call).  For u8/A8 activations that allows
+//!   k ≤ 65 807 — three orders of magnitude above the zoo's widest
+//!   reduction (`cnn6` conv5: k = 576).
+//! * **2²⁴ fake-quant envelope**: the epilogue converts the i32
+//!   accumulator to f32, which is integer-exact only below 2²⁴.  With
+//!   power-of-two scales the integer path is bit-compatible with the
+//!   fake-quant reference *within* that envelope (`mlp3`, `ncf`, and
+//!   every ≤4-bit plan: k·7·255 < 2²⁴ up to k ≈ 9 395); an INT8 `cnn6`
+//!   conv can cross it, where the f32 reference itself rounds — see
+//!   `tests/int_parity`.
+//!
+//! Numerics contract: activation quantization uses the same
+//! `round_half_even(x / Δ)` + clamp as `quant::quantizer::fake_quant_one`,
+//! and the epilogue computes `acc as f32 * (Δa·Δw[c]) + bias[c]` with
+//! plain (non-fused) f32 ops.
+
+pub mod pack;
+
+mod int4;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+mod scalar;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use crate::quant::quantizer::round_half_even;
+use crate::runtime::cpu::ops::{n_threads, par_items};
+use pack::{PackedA, PackedB, PackedB4, MR, NR};
+
+/// Quantized-activation element: `i8` (signed grids) or `u8` (post-ReLU
+/// unsigned grids, qmax ≤ 255).
+pub trait QAct: Copy + Default + Send + Sync {
+    /// Upper bound on `|widen()|`, for accumulator-overflow accounting.
+    const MAX_ABS: i32;
+    fn widen(self) -> i32;
+}
+
+impl QAct for i8 {
+    const MAX_ABS: i32 = 128;
+    fn widen(self) -> i32 {
+        self as i32
+    }
+}
+
+impl QAct for u8 {
+    const MAX_ABS: i32 = 255;
+    fn widen(self) -> i32 {
+        self as i32
+    }
+}
+
+/// True iff a `k`-deep dot product of activations bounded by `a_max`
+/// against full-range i8 weights (|q| ≤ 128) cannot overflow the i32
+/// accumulator.  Debug-asserted by every GEMM/conv entry point.
+pub fn acc_fits_i32(k: usize, a_max: i32) -> bool {
+    (k as i64) * (a_max as i64) * 128 <= i32::MAX as i64
+}
+
+/// Quantize to a signed grid: `clamp(round_half_even(x/Δ), -qmax, qmax)`.
+/// The integer returned is exactly the grid index `fake_quant_one` snaps
+/// to (it multiplies the same index back by Δ).
+pub fn quantize_signed(xs: &[f32], delta: f32, qmax: f32) -> Vec<i8> {
+    assert!(delta > 0.0 && qmax <= 127.0, "signed grid Δ={delta} qmax={qmax}");
+    xs.iter().map(|&x| round_half_even(x / delta).clamp(-qmax, qmax) as i8).collect()
+}
+
+/// Quantize to an unsigned grid: `clamp(round_half_even(x/Δ), 0, qmax)`.
+pub fn quantize_unsigned(xs: &[f32], delta: f32, qmax: f32) -> Vec<u8> {
+    assert!(delta > 0.0 && qmax <= 255.0, "unsigned grid Δ={delta} qmax={qmax}");
+    xs.iter().map(|&x| round_half_even(x / delta).clamp(0.0, qmax) as u8).collect()
+}
+
+// ------------------------------------------------------------- dispatch
+
+/// Which kernel tier executes the GEMM/conv hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Best available: SIMD when detected, else blocked.  The default.
+    Auto,
+    /// The unblocked reference loops (the bit-exactness oracle).
+    Scalar,
+    /// Panel packing + the scalar micro-kernel.
+    Blocked,
+    /// Panel packing + the SIMD micro-kernel; silently degrades to
+    /// `Blocked` when no extension is detected.
+    Simd,
+}
+
+/// Read the `LAPQ_KERNEL` override (`scalar` / `blocked` / `simd`); any
+/// other (or absent) value selects [`KernelChoice::Auto`].  Read per
+/// call, so a test or operator can flip tiers without rebuilding.
+pub fn kernel_choice() -> KernelChoice {
+    match std::env::var("LAPQ_KERNEL").as_deref() {
+        Ok("scalar") => KernelChoice::Scalar,
+        Ok("blocked") => KernelChoice::Blocked,
+        Ok("simd") => KernelChoice::Simd,
+        _ => KernelChoice::Auto,
+    }
+}
+
+/// The resolved micro-kernel for the blocked driver.
+#[derive(Clone, Copy)]
+enum Micro {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+fn micro_for(choice: KernelChoice) -> Micro {
+    match choice {
+        KernelChoice::Scalar | KernelChoice::Blocked => Micro::Scalar,
+        KernelChoice::Simd | KernelChoice::Auto => {
+            #[cfg(target_arch = "x86_64")]
+            if x86::avx2_available() {
+                return Micro::Avx2;
+            }
+            #[cfg(target_arch = "aarch64")]
+            if neon::neon_available() {
+                return Micro::Neon;
+            }
+            Micro::Scalar
+        }
+    }
+}
+
+/// Human-readable name of the tier [`KernelChoice::Auto`] resolves to on
+/// this machine — for bench labels and serve diagnostics.
+pub fn active_kernel_name(choice: KernelChoice) -> &'static str {
+    match choice {
+        KernelChoice::Scalar => "scalar",
+        KernelChoice::Blocked => "blocked",
+        KernelChoice::Simd | KernelChoice::Auto => match micro_for(choice) {
+            Micro::Scalar => "blocked",
+            #[cfg(target_arch = "x86_64")]
+            Micro::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Micro::Neon => "neon",
+        },
+    }
+}
+
+fn run_micro(m: Micro, ap: &[i16], bp: &[i8], kp: usize, acc: &mut [[i32; NR]; MR]) {
+    match m {
+        Micro::Scalar => scalar::micro_i8(ap, bp, kp, acc),
+        #[cfg(target_arch = "x86_64")]
+        Micro::Avx2 => unsafe { x86::micro_i8_avx2(ap, bp, kp, acc) },
+        #[cfg(target_arch = "aarch64")]
+        Micro::Neon => unsafe { neon::micro_i8_neon(ap, bp, kp, acc) },
+    }
+}
+
+fn run_micro_i4(m: Micro, ap: &[i16], bp4: &[u8], kp: usize, acc: &mut [[i32; NR]; MR]) {
+    match m {
+        #[cfg(target_arch = "x86_64")]
+        Micro::Avx2 => unsafe { x86::micro_i4_avx2(ap, bp4, kp, acc) },
+        _ => int4::micro_i4(ap, bp4, kp, acc),
+    }
+}
+
+// ------------------------------------------------------- blocked driver
+
+/// A packed B operand: full-width i8 panels or nibble-pair i4 panels.
+#[derive(Clone, Copy)]
+enum PanelsB<'a> {
+    I8(&'a PackedB),
+    I4(&'a PackedB4),
+}
+
+impl PanelsB<'_> {
+    fn panels(&self) -> usize {
+        match self {
+            PanelsB::I8(b) => b.panels,
+            PanelsB::I4(b) => b.panels,
+        }
+    }
+}
+
+/// Compute one A row panel against every B column panel into `slab`
+/// (the `rows × n` output block for this panel, row-major).
+fn panel_compute(pa: &PackedA, pb: PanelsB, micro: Micro, p: usize, slab: &mut [i32], n: usize) {
+    let kp = pa.kp;
+    let rows = (pa.m - p * MR).min(MR);
+    let ap = &pa.data[p * MR * kp..(p + 1) * MR * kp];
+    for cp in 0..pb.panels() {
+        let mut acc = [[0i32; NR]; MR];
+        match pb {
+            PanelsB::I8(b) => {
+                run_micro(micro, ap, &b.data[cp * NR * kp..(cp + 1) * NR * kp], kp, &mut acc)
+            }
+            PanelsB::I4(b) => {
+                let half = NR * (kp / 2);
+                run_micro_i4(micro, ap, &b.data[cp * half..(cp + 1) * half], kp, &mut acc)
+            }
+        }
+        let col0 = cp * NR;
+        let cols = (n - col0).min(NR);
+        for (r, arow) in acc.iter().enumerate().take(rows) {
+            slab[r * n + col0..r * n + col0 + cols].copy_from_slice(&arow[..cols]);
+        }
+    }
+}
+
+/// The blocked GEMM driver: pack A, then run row panels (in parallel
+/// when the work is substantial) against the pre-packed B operand.
+fn gemm_blocked<A: QAct>(
+    a: &[A],
+    pb: PanelsB,
+    micro: Micro,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let pa = pack::pack_a(a, m, k);
+    let full = m / MR;
+    if m * k * n >= (1 << 21) && n_threads() > 1 && full >= 2 {
+        let (head, tail) = out.split_at_mut(full * MR * n);
+        par_items(head, MR * n, |p, slab| panel_compute(&pa, pb, micro, p, slab, n));
+        if !tail.is_empty() {
+            panel_compute(&pa, pb, micro, full, tail, n);
+        }
+    } else {
+        for p in 0..pa.panels {
+            let lo = p * MR * n;
+            let hi = ((p + 1) * MR * n).min(m * n);
+            panel_compute(&pa, pb, micro, p, &mut out[lo..hi], n);
+        }
+    }
+    out
+}
+
+/// The blocked conv driver: B packed once, then per image (parallel,
+/// like the f32 backend) im2col + pack A + row panels.
+fn conv_blocked<A: QAct>(xq: &[A], pb: PanelsB, micro: Micro, d: &ConvShape) -> Vec<i32> {
+    let kk = d.kh * d.kw * d.ci;
+    let per_x = d.h * d.w * d.ci;
+    let per_o = d.ho * d.wo * d.co;
+    let mut out = vec![0i32; d.n * per_o];
+    if per_o == 0 {
+        return out;
+    }
+    par_items(&mut out, per_o, |img, o| {
+        let cols = im2col(&xq[img * per_x..(img + 1) * per_x], d);
+        let pa = pack::pack_a(&cols, d.ho * d.wo, kk);
+        for p in 0..pa.panels {
+            let lo = p * MR * d.co;
+            let hi = ((p + 1) * MR * d.co).min(o.len());
+            panel_compute(&pa, pb, micro, p, &mut o[lo..hi], d.co);
+        }
+    });
+    out
+}
+
+// ------------------------------------------------------- public entry points
+
+/// `(M,K) quantized acts @ (K,N) i8 weights -> (M,N) i32`, on the tier
+/// selected by [`kernel_choice`].  Every tier returns bit-identical
+/// accumulators (see module docs).
+pub fn gemm<A: QAct>(a: &[A], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    gemm_with(kernel_choice(), a, b, m, k, n)
+}
+
+/// [`gemm`] on an explicit tier — the differential harness's entry point.
+pub fn gemm_with<A: QAct>(
+    choice: KernelChoice,
+    a: &[A],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    debug_assert!(acc_fits_i32(k, A::MAX_ABS), "k={k} can overflow the i32 accumulator");
+    match choice {
+        KernelChoice::Scalar => scalar::gemm_scalar(a, b, m, k, n),
+        _ => {
+            let pb = pack::pack_b(b, k, n);
+            gemm_blocked(a, PanelsB::I8(&pb), micro_for(choice), m, k, n)
+        }
+    }
+}
+
+/// [`gemm`] for a ≤4-bit weight matrix (values in −8..=7): packs `b`
+/// into nibble-pair panels and computes in the nibble domain, never
+/// materializing a full-width i8 panel.  `Scalar` routes to the
+/// reference loops (which read `b` directly).
+pub fn gemm_i4_with<A: QAct>(
+    choice: KernelChoice,
+    a: &[A],
+    b: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    debug_assert!(acc_fits_i32(k, A::MAX_ABS), "k={k} can overflow the i32 accumulator");
+    match choice {
+        KernelChoice::Scalar => scalar::gemm_scalar(a, b, m, k, n),
+        _ => {
+            let pb4 = pack::pack_b4(b, k, n);
+            gemm_blocked(a, PanelsB::I4(&pb4), micro_for(choice), m, k, n)
+        }
+    }
+}
+
+/// SAME-padding geometry for the integer conv (groups = 1), mirroring
+/// `ops::conv_dims` exactly.
+#[derive(Clone, Debug)]
+pub struct ConvShape {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub ci: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub co: usize,
+    pub stride: usize,
+    pub ho: usize,
+    pub wo: usize,
+    pub pad_t: usize,
+    pub pad_l: usize,
+}
+
+pub fn conv_shape(xs: &[usize], ws: &[usize], stride: usize) -> ConvShape {
+    assert_eq!(xs.len(), 4, "conv input must be NHWC, got {xs:?}");
+    assert_eq!(ws.len(), 4, "conv weight must be HWIO, got {ws:?}");
+    let (n, h, w, ci) = (xs[0], xs[1], xs[2], xs[3]);
+    let (kh, kw, wci, co) = (ws[0], ws[1], ws[2], ws[3]);
+    assert_eq!(ci, wci, "channels {ci} != weight {wci} (integer conv has groups=1)");
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let pad_h = ((ho - 1) * stride + kh).saturating_sub(h);
+    let pad_w = ((wo - 1) * stride + kw).saturating_sub(w);
+    ConvShape { n, h, w, ci, kh, kw, co, stride, ho, wo, pad_t: pad_h / 2, pad_l: pad_w / 2 }
+}
+
+/// Gather one image's receptive fields into im2col rows of length
+/// `kh*kw*ci`, zero-padded at the borders (the symmetric grid has no
+/// zero-point, so padding is exactly `q = 0`).
+pub fn im2col<A: QAct>(xq: &[A], d: &ConvShape) -> Vec<A> {
+    let kk = d.kh * d.kw * d.ci;
+    let mut out = vec![A::default(); d.ho * d.wo * kk];
+    for oy in 0..d.ho {
+        for ox in 0..d.wo {
+            let rbase = (oy * d.wo + ox) * kk;
+            for ky in 0..d.kh {
+                let iy = (oy * d.stride + ky) as isize - d.pad_t as isize;
+                if iy < 0 || iy >= d.h as isize {
+                    continue;
+                }
+                for kx in 0..d.kw {
+                    let ix = (ox * d.stride + kx) as isize - d.pad_l as isize;
+                    if ix < 0 || ix >= d.w as isize {
+                        continue;
+                    }
+                    let src = (iy as usize * d.w + ix as usize) * d.ci;
+                    let dst = rbase + (ky * d.kw + kx) * d.ci;
+                    out[dst..dst + d.ci].copy_from_slice(&xq[src..src + d.ci]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Integer SAME conv over a quantized NHWC batch, on the tier selected
+/// by [`kernel_choice`].
+pub fn conv_int<A: QAct>(xq: &[A], wq: &[i8], d: &ConvShape) -> Vec<i32> {
+    conv_int_with(kernel_choice(), xq, wq, d)
+}
+
+/// [`conv_int`] on an explicit tier.
+pub fn conv_int_with<A: QAct>(
+    choice: KernelChoice,
+    xq: &[A],
+    wq: &[i8],
+    d: &ConvShape,
+) -> Vec<i32> {
+    let kk = d.kh * d.kw * d.ci;
+    assert_eq!(xq.len(), d.n * d.h * d.w * d.ci);
+    assert_eq!(wq.len(), kk * d.co);
+    debug_assert!(acc_fits_i32(kk, A::MAX_ABS), "kk={kk} can overflow the i32 accumulator");
+    match choice {
+        KernelChoice::Scalar => scalar::conv_int_scalar(xq, wq, d),
+        _ => {
+            let pb = pack::pack_b(wq, kk, d.co);
+            conv_blocked(xq, PanelsB::I8(&pb), micro_for(choice), d)
+        }
+    }
+}
+
+/// [`conv_int`] for a ≤4-bit weight tensor: nibble-domain B panels.
+pub fn conv_int_i4_with<A: QAct>(
+    choice: KernelChoice,
+    xq: &[A],
+    wq: &[i8],
+    d: &ConvShape,
+) -> Vec<i32> {
+    let kk = d.kh * d.kw * d.ci;
+    assert_eq!(xq.len(), d.n * d.h * d.w * d.ci);
+    assert_eq!(wq.len(), kk * d.co);
+    debug_assert!(acc_fits_i32(kk, A::MAX_ABS), "kk={kk} can overflow the i32 accumulator");
+    match choice {
+        KernelChoice::Scalar => scalar::conv_int_scalar(xq, wq, d),
+        _ => {
+            let pb4 = pack::pack_b4(wq, kk, d.co);
+            conv_blocked(xq, PanelsB::I4(&pb4), micro_for(choice), d)
+        }
+    }
+}
+
+// ------------------------------------------------------------- epilogue
+
+/// Dequantize+bias epilogue: `out[r,c] = acc[r,c] as f32 * combined[c] +
+/// bias[c]`, where `combined[c] = Δa · Δw[c]`.  The multiply and add are
+/// deliberately separate (no `mul_add`) so the rounding matches the
+/// reference's matmul-then-`add_bias` sequence.
+pub fn dequant_bias(acc: &[i32], co: usize, combined: &[f32], bias: &[f32], out: &mut [f32]) {
+    assert_eq!(acc.len(), out.len());
+    assert!(co > 0 && acc.len() % co == 0);
+    assert_eq!(combined.len(), co);
+    assert_eq!(bias.len(), co);
+    for (arow, orow) in acc.chunks(co).zip(out.chunks_mut(co)) {
+        for c in 0..co {
+            orow[c] = arow[c] as f32 * combined[c] + bias[c];
+        }
+    }
+}
+
+/// Right-shift with round-half-to-even on the shifted-out bits (the
+/// integer mirror of `quantizer::round_half_even`).
+pub fn rshift_rhe(x: i64, b: u32) -> i64 {
+    if b == 0 {
+        return x;
+    }
+    if b >= 63 {
+        // |x| < 2^62 everywhere we call this, so the value is < 0.5.
+        return 0;
+    }
+    let floor = x >> b;
+    let rem = x - (floor << b);
+    let half = 1i64 << (b - 1);
+    floor + if rem > half || (rem == half && (floor & 1) != 0) { 1 } else { 0 }
+}
+
+/// A positive real multiplier in fixed-point `mult · 2^-shift` form
+/// (`mult` ∈ [2³⁰, 2³¹]): the classic requantization constant for
+/// pure-integer targets that cannot afford a float epilogue.  With the
+/// power-of-two scales `pack` emits, `apply` is exact (a pure shift).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FixedMult {
+    pub mult: i64,
+    pub shift: i32,
+}
+
+impl FixedMult {
+    pub fn from_f32(m: f32) -> FixedMult {
+        assert!(m > 0.0 && m.is_finite(), "fixed-point multiplier {m}");
+        let mut v = m as f64;
+        let mut e = 0i32;
+        while v < 0.5 {
+            v *= 2.0;
+            e -= 1;
+        }
+        while v >= 1.0 {
+            v /= 2.0;
+            e += 1;
+        }
+        let mult = (v * (1u64 << 31) as f64).round() as i64;
+        FixedMult { mult, shift: 31 - e }
+    }
+
+    /// `round_half_even(acc · m)` computed entirely in integers.
+    pub fn apply(&self, acc: i32) -> i64 {
+        let p = acc as i64 * self.mult;
+        if self.shift >= 0 {
+            rshift_rhe(p, self.shift as u32)
+        } else {
+            p << (-self.shift).min(31)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantizer::fake_quant_one;
+    use crate::quant::GridKind;
+    use crate::runtime::cpu::ops::matmul;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn quantize_matches_fake_quant_grid() {
+        let mut rng = Pcg32::seeded(3);
+        let xs: Vec<f32> = (0..512).map(|_| rng.normal() * 2.0).collect();
+        let (d, qmax) = (0.125f32, 127.0f32);
+        let qs = quantize_signed(&xs, d, qmax);
+        for (&x, &q) in xs.iter().zip(&qs) {
+            assert_eq!(q as f32 * d, fake_quant_one(x, d, qmax, GridKind::Signed));
+        }
+        let qu = quantize_unsigned(&xs, d, 255.0);
+        for (&x, &q) in xs.iter().zip(&qu) {
+            assert_eq!(q as f32 * d, fake_quant_one(x, d, 255.0, GridKind::Unsigned));
+        }
+    }
+
+    #[test]
+    fn gemm_matches_f32_matmul_on_integer_data() {
+        let mut rng = Pcg32::seeded(5);
+        let (m, k, n) = (7, 33, 11);
+        let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+        let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+        let reference = matmul(&af, &bf, m, k, n);
+        for choice in
+            [KernelChoice::Auto, KernelChoice::Scalar, KernelChoice::Blocked, KernelChoice::Simd]
+        {
+            let acc = gemm_with(choice, &a, &b, m, k, n);
+            for (x, y) in acc.iter().zip(&reference) {
+                assert_eq!(*x as f32, *y, "{choice:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_unsigned_acts() {
+        let a: Vec<u8> = vec![0, 1, 2, 255, 0, 3];
+        let b: Vec<i8> = vec![1, -1, 2, -2, 3, -3];
+        // (2,3) @ (3,2)
+        for choice in [KernelChoice::Scalar, KernelChoice::Blocked, KernelChoice::Simd] {
+            assert_eq!(gemm_with(choice, &a, &b, 2, 3, 2), vec![8, -8, 264, -264], "{choice:?}");
+        }
+    }
+
+    #[test]
+    fn gemm_i4_matches_full_width_tiers() {
+        let mut rng = Pcg32::seeded(21);
+        let (m, k, n) = (5, 19, 23);
+        let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let b: Vec<i8> = (0..k * n).map(|_| (rng.below(15) as i32 - 7) as i8).collect();
+        let want = gemm_with(KernelChoice::Scalar, &a, &b, m, k, n);
+        for choice in [KernelChoice::Auto, KernelChoice::Blocked, KernelChoice::Simd] {
+            assert_eq!(gemm_i4_with(choice, &a, &b, m, k, n), want, "{choice:?}");
+        }
+    }
+
+    #[test]
+    fn conv_int_matches_f32_conv() {
+        use crate::runtime::cpu::ops::{conv2d, Arr};
+        let mut rng = Pcg32::seeded(9);
+        for stride in [1usize, 2] {
+            let (n, h, w, ci, kh, kw, co) = (2, 5, 4, 3, 3, 3, 4);
+            let mut draw = |count: usize| -> Vec<i8> {
+                (0..count).map(|_| (rng.below(15) as i32 - 7) as i8).collect()
+            };
+            let xq = draw(n * h * w * ci);
+            let wq = draw(kh * kw * ci * co);
+            let xf = Arr::new(vec![n, h, w, ci], xq.iter().map(|&v| v as f32).collect());
+            let wf = Arr::new(vec![kh, kw, ci, co], wq.iter().map(|&v| v as f32).collect());
+            let d = conv_shape(&xf.shape, &wf.shape, stride);
+            let reference = conv2d(&xf, &wf, stride, 1);
+            assert_eq!(reference.shape, vec![n, d.ho, d.wo, co]);
+            for choice in [KernelChoice::Scalar, KernelChoice::Auto] {
+                let acc = conv_int_with(choice, &xq, &wq, &d);
+                for (x, y) in acc.iter().zip(&reference.data) {
+                    assert_eq!(*x as f32, *y, "{choice:?}");
+                }
+                let acc4 = conv_int_i4_with(choice, &xq, &wq, &d);
+                assert_eq!(acc4, acc, "{choice:?} i4");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulator_bound_covers_the_zoo_and_rejects_overflow() {
+        // widest zoo reduction: cnn6 conv5, k = 3·3·64 = 576 (u8/A8 acts)
+        assert!(acc_fits_i32(576, u8::MAX_ABS));
+        assert!(acc_fits_i32(4096, i8::MAX_ABS));
+        // the bound is tight: k·MAX_ABS·128 > i32::MAX must be rejected
+        assert!(!acc_fits_i32(65808, u8::MAX_ABS));
+        assert!(acc_fits_i32(65807, u8::MAX_ABS));
+        assert!(!acc_fits_i32(1 << 24, i8::MAX_ABS));
+    }
+
+    #[test]
+    fn dequant_bias_applies_per_channel() {
+        let acc = vec![4i32, -8, 2, 0];
+        let mut out = vec![0.0f32; 4];
+        dequant_bias(&acc, 2, &[0.5, 0.25], &[1.0, -1.0], &mut out);
+        assert_eq!(out, vec![3.0, -3.0, 2.0, -1.0]);
+    }
+
+    #[test]
+    fn rshift_rhe_ties_to_even() {
+        assert_eq!(rshift_rhe(3, 1), 2); // 1.5 -> 2
+        assert_eq!(rshift_rhe(5, 1), 2); // 2.5 -> 2
+        assert_eq!(rshift_rhe(-3, 1), -2); // -1.5 -> -2
+        assert_eq!(rshift_rhe(-5, 1), -2); // -2.5 -> -2
+        assert_eq!(rshift_rhe(7, 2), 2); // 1.75 -> 2
+        assert_eq!(rshift_rhe(100, 0), 100);
+        assert_eq!(rshift_rhe(1, 63), 0);
+    }
+
+    #[test]
+    fn fixed_mult_exact_for_power_of_two() {
+        let fm = FixedMult::from_f32(2.0f32.powi(-7));
+        for acc in [-100_000i32, -129, -1, 0, 1, 64, 65, 127, 192, 100_000] {
+            let want = round_half_even(acc as f32 * 2.0f32.powi(-7)) as i64;
+            assert_eq!(fm.apply(acc), want, "acc={acc}");
+        }
+        // multiplier above 1 still lands on an exact shift
+        let fm2 = FixedMult::from_f32(4.0);
+        assert_eq!(fm2.apply(3), 12);
+    }
+
+    #[test]
+    fn fixed_mult_close_for_arbitrary_scale() {
+        let m = 0.0123456f32;
+        let fm = FixedMult::from_f32(m);
+        for acc in [-10_000i32, -7, 0, 13, 9999] {
+            let exact = acc as f64 * m as f64;
+            let got = fm.apply(acc) as f64;
+            assert!((got - exact).abs() <= 0.5 + exact.abs() * 1e-6, "{got} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn im2col_zero_pads() {
+        // 1 image 2x2x1, 3x3 kernel, stride 1 -> 4 rows of 9, corners padded
+        let xq: Vec<i8> = vec![1, 2, 3, 4];
+        let d = conv_shape(&[1, 2, 2, 1], &[3, 3, 1, 1], 1);
+        let cols = im2col(&xq, &d);
+        assert_eq!(cols.len(), 4 * 9);
+        // first output pixel (0,0): top row and left column are padding
+        assert_eq!(&cols[0..9], &[0, 0, 0, 0, 1, 2, 0, 3, 4]);
+    }
+
+    #[test]
+    fn kernel_names_are_stable() {
+        assert_eq!(active_kernel_name(KernelChoice::Scalar), "scalar");
+        assert_eq!(active_kernel_name(KernelChoice::Blocked), "blocked");
+        // Auto resolves to some real tier on every machine
+        assert!(["blocked", "avx2", "neon"].contains(&active_kernel_name(KernelChoice::Auto)));
+    }
+}

@@ -1,0 +1,64 @@
+//! NEON micro-kernel (aarch64, runtime-detected).
+//!
+//! Same pair-dot strategy as the AVX2 tier, spelled with widening
+//! multiplies: every i16 product fits (|a| ≤ 255, |b| ≤ 128 ⇒
+//! |a·b| ≤ 32640 < 2¹⁵), so `vmulq_s16` is exact, and `vpadalq_s16`
+//! widens the adjacent pair sums to i32 *before* adding — no saturation
+//! anywhere, hence bit-identical to the scalar tier.  The INT4 path on
+//! this architecture falls back to the shared blocked driver with the
+//! scalar nibble micro-kernel (`int4::micro_i4`).
+
+#![allow(unsafe_code)]
+
+use super::pack::{MR, NR};
+use core::arch::aarch64::*;
+
+/// Runtime gate for the SIMD tier on this architecture.
+pub(crate) fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+/// Accumulate one A panel × one B panel (i8 pair layout) into `acc`.
+///
+/// # Safety
+/// Caller must ensure NEON is available ([`neon_available`]) and that
+/// `ap`/`bp` hold at least `kp/2` pair groups — guaranteed by the panel
+/// packers.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn micro_i8_neon(ap: &[i16], bp: &[i8], kp: usize, acc: &mut [[i32; NR]; MR]) {
+    debug_assert!(ap.len() >= MR * kp && bp.len() >= NR * kp);
+    let mut c = [[vdupq_n_s32(0); 4]; MR];
+    for t in 0..kp / 2 {
+        let b = bp.as_ptr().add(t * 2 * NR);
+        let b01 = vld1q_s8(b); // columns 0..8, pairs interleaved
+        let b23 = vld1q_s8(b.add(16)); // columns 8..16
+        let bw = [
+            vmovl_s8(vget_low_s8(b01)),  // columns 0..4 as i16 pairs
+            vmovl_s8(vget_high_s8(b01)), // columns 4..8
+            vmovl_s8(vget_low_s8(b23)),  // columns 8..12
+            vmovl_s8(vget_high_s8(b23)), // columns 12..16
+        ];
+        let a = ap.as_ptr().add(t * 2 * MR);
+        for (r, cr) in c.iter_mut().enumerate() {
+            let a0 = *a.add(2 * r) as u16 as u32;
+            let a1 = *a.add(2 * r + 1) as u16 as u32;
+            if (a0 | a1) == 0 {
+                continue;
+            }
+            // [a0, a1, a0, a1, ...] to line up with the pair interleave
+            let av = vreinterpretq_s16_s32(vdupq_n_s32((a0 | (a1 << 16)) as i32));
+            for (g, cg) in cr.iter_mut().enumerate() {
+                *cg = vpadalq_s16(*cg, vmulq_s16(av, bw[g]));
+            }
+        }
+    }
+    for (cr, arow) in c.iter().zip(acc.iter_mut()) {
+        let mut lanes = [0i32; NR];
+        for (g, &cg) in cr.iter().enumerate() {
+            vst1q_s32(lanes.as_mut_ptr().add(4 * g), cg);
+        }
+        for (o, l) in arow.iter_mut().zip(lanes) {
+            *o += l;
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Panel packing for the blocked integer GEMM.
+//!
+//! Every micro-kernel (scalar, AVX2, NEON, nibble-domain INT4) consumes
+//! the same two panel layouts, so the tiers are interchangeable and —
+//! because i32 addition is exactly associative — bit-identical:
+//!
+//! * **A panels** ([`PackedA`]): activations in row panels of [`MR`]
+//!   rows, widened once to `i16` (covers both `i8` and `u8 ≤ 255`
+//!   grids).  Within a panel, k runs in *pairs*: for each pair index `t`,
+//!   the `MR` rows contribute `[a(r, 2t), a(r, 2t+1)]` back to back —
+//!   the unit a `pmaddwd`-style pair dot product broadcasts from.
+//! * **B panels** ([`PackedB`]): weights in column panels of [`NR`]
+//!   columns, k in the same pairs, *interleaved per column*: each pair
+//!   index `t` stores `2·NR` bytes `[b(2t, j), b(2t+1, j)]` for
+//!   `j = 0..NR` — one aligned 32-byte load per k-pair on AVX2.
+//! * **INT4 B panels** ([`PackedB4`]): same geometry, but the k-pair for
+//!   column `j` lives in *one byte* (low nibble = even k, high nibble =
+//!   odd k, the [`super::super::packed`] serialization convention), so a
+//!   4-bit layer streams half the weight bytes through the inner loop.
+//!
+//! Ragged shapes are zero-padded: a padded row/column/k-slot contributes
+//! exactly 0 to every accumulator, so padding never changes a result.
+
+use super::super::packed::i4_pair;
+use super::QAct;
+
+/// Micro-kernel row height (A panel rows).
+pub const MR: usize = 4;
+/// Micro-kernel column width (B panel columns).
+pub const NR: usize = 16;
+
+/// Activations packed into `MR`-row panels (see module docs).
+pub struct PackedA {
+    /// Logical row count (unpadded).
+    pub m: usize,
+    /// k rounded up to even (pair granularity).
+    pub kp: usize,
+    /// Number of row panels, `ceil(m / MR)`.
+    pub panels: usize,
+    /// `panels * MR * kp` widened values; panel `p` occupies
+    /// `data[p*MR*kp .. (p+1)*MR*kp]`.
+    pub data: Vec<i16>,
+}
+
+/// i8 weights packed into `NR`-column panels (see module docs).
+pub struct PackedB {
+    /// Logical column count (unpadded).
+    pub n: usize,
+    /// k rounded up to even.
+    pub kp: usize,
+    /// Number of column panels, `ceil(n / NR)`.
+    pub panels: usize,
+    /// `panels * NR * kp` bytes; panel `p` occupies
+    /// `data[p*NR*kp .. (p+1)*NR*kp]`.
+    pub data: Vec<i8>,
+}
+
+/// ≤4-bit weights packed nibble-pair-per-byte into `NR`-column panels.
+pub struct PackedB4 {
+    pub n: usize,
+    pub kp: usize,
+    pub panels: usize,
+    /// `panels * NR * kp/2` bytes; one byte holds one column's k-pair.
+    pub data: Vec<u8>,
+}
+
+/// Pack an `(m, k)` row-major activation matrix into A panels.
+pub fn pack_a<A: QAct>(a: &[A], m: usize, k: usize) -> PackedA {
+    assert_eq!(a.len(), m * k);
+    let kp = k + (k & 1);
+    let panels = m.div_ceil(MR);
+    let mut data = vec![0i16; panels * MR * kp];
+    for (row, arow) in a.chunks_exact(k.max(1)).enumerate().take(m) {
+        let base = (row / MR) * MR * kp;
+        let r = row % MR;
+        for (kk, &av) in arow.iter().enumerate() {
+            data[base + (kk / 2) * 2 * MR + 2 * r + (kk & 1)] = av.widen() as i16;
+        }
+    }
+    PackedA { m, kp, panels, data }
+}
+
+/// Pack a `(k, n)` row-major weight matrix into B panels.
+pub fn pack_b(b: &[i8], k: usize, n: usize) -> PackedB {
+    assert_eq!(b.len(), k * n);
+    let kp = k + (k & 1);
+    let panels = n.div_ceil(NR);
+    let mut data = vec![0i8; panels * NR * kp];
+    for kk in 0..k {
+        let brow = &b[kk * n..kk * n + n];
+        let (t, odd) = (kk / 2, kk & 1);
+        for (col, &bv) in brow.iter().enumerate() {
+            let base = (col / NR) * NR * kp;
+            data[base + t * 2 * NR + 2 * (col % NR) + odd] = bv;
+        }
+    }
+    PackedB { n, kp, panels, data }
+}
+
+/// Pack a `(k, n)` row-major ≤4-bit weight matrix (values in −8..=7)
+/// into nibble-pair B panels.
+pub fn pack_b4(b: &[i8], k: usize, n: usize) -> PackedB4 {
+    assert_eq!(b.len(), k * n);
+    debug_assert!(b.iter().all(|&v| (-8..=7).contains(&v)), "value outside i4 range");
+    let kp = k + (k & 1);
+    let panels = n.div_ceil(NR);
+    let mut data = vec![0u8; panels * NR * (kp / 2)];
+    for t in 0..kp / 2 {
+        let k0 = 2 * t;
+        for col in 0..n {
+            let lo = b[k0 * n + col];
+            let hi = if k0 + 1 < k { b[(k0 + 1) * n + col] } else { 0 };
+            let base = (col / NR) * NR * (kp / 2);
+            data[base + t * NR + (col % NR)] = i4_pair(lo, hi);
+        }
+    }
+    PackedB4 { n, kp, panels, data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::int::packed::{i4_hi, i4_lo};
+
+    #[test]
+    fn pack_a_pairs_rows_and_zero_pads() {
+        // 3 rows (one short of MR), k = 3 (odd)
+        let a: Vec<i8> = vec![1, 2, 3, 4, 5, 6, 7, 8, 9];
+        let pa = pack_a(&a, 3, 3);
+        assert_eq!((pa.m, pa.kp, pa.panels), (3, 4, 1));
+        assert_eq!(pa.data.len(), MR * 4);
+        // pair t=0: rows contribute [a(r,0), a(r,1)]; padded row 3 is 0
+        assert_eq!(&pa.data[..2 * MR], &[1, 2, 4, 5, 7, 8, 0, 0]);
+        // pair t=1: [a(r,2), 0] (k padded to 4)
+        assert_eq!(&pa.data[2 * MR..], &[3, 0, 6, 0, 9, 0, 0, 0]);
+    }
+
+    #[test]
+    fn pack_b_interleaves_k_pairs_per_column() {
+        // k = 2, n = NR + 1 (ragged second panel)
+        let n = NR + 1;
+        let b: Vec<i8> = (0..2 * n).map(|i| i as i8).collect();
+        let pb = pack_b(&b, 2, n);
+        assert_eq!((pb.n, pb.kp, pb.panels), (n, 2, 2));
+        // panel 0, pair 0: [b(0,j), b(1,j)] interleaved for j = 0..NR
+        for j in 0..NR {
+            assert_eq!(pb.data[2 * j], j as i8);
+            assert_eq!(pb.data[2 * j + 1], (n + j) as i8);
+        }
+        // panel 1 holds column NR then zero padding
+        let p1 = &pb.data[NR * 2..];
+        assert_eq!(p1[0], NR as i8);
+        assert_eq!(p1[1], (n + NR) as i8);
+        assert!(p1[2..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn pack_b4_matches_pack_b_after_nibble_decode() {
+        let (k, n) = (5, 19);
+        let b: Vec<i8> = (0..k * n).map(|i| ((i * 7) % 15) as i8 - 7).collect();
+        let pb = pack_b(&b, k, n);
+        let pb4 = pack_b4(&b, k, n);
+        assert_eq!((pb4.kp, pb4.panels), (pb.kp, pb.panels));
+        for p in 0..pb.panels {
+            for t in 0..pb.kp / 2 {
+                for j in 0..NR {
+                    let byte = pb4.data[p * NR * (pb4.kp / 2) + t * NR + j];
+                    let base = p * NR * pb.kp + t * 2 * NR + 2 * j;
+                    assert_eq!(i4_lo(byte), pb.data[base]);
+                    assert_eq!(i4_hi(byte), pb.data[base + 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shapes_pack_to_empty_panels() {
+        let pa = pack_a::<i8>(&[], 0, 5);
+        assert_eq!((pa.panels, pa.data.len()), (0, 0));
+        let pa0 = pack_a::<i8>(&[], 3, 0);
+        assert_eq!((pa0.kp, pa0.data.len()), (0, 0));
+        let pb = pack_b(&[], 0, 7);
+        assert_eq!((pb.kp, pb.data.len()), (0, 0));
+        let pb4 = pack_b4(&[], 4, 0);
+        assert_eq!((pb4.panels, pb4.data.len()), (0, 0));
+    }
+}

@@ -1,0 +1,77 @@
+//! Scalar tier: the original triple-loop GEMM/conv (the *reference*
+//! every other tier is pinned against by `tests/kernel_diff`) and the
+//! scalar micro-kernel that runs the blocked path on machines without a
+//! detected SIMD extension.
+
+use super::pack::{MR, NR};
+use super::{im2col, ConvShape, QAct};
+use crate::runtime::cpu::ops::{n_threads, par_items};
+
+/// One output row of the reference GEMM: `out[j] += Σ_k a[k]·b[k,j]`,
+/// skipping zero activations (common post-ReLU).
+pub(crate) fn gemm_row<A: QAct>(a_row: &[A], b: &[i8], n: usize, out: &mut [i32]) {
+    for (k, &av) in a_row.iter().enumerate() {
+        let a = av.widen();
+        if a != 0 {
+            let b_row = &b[k * n..k * n + n];
+            for (o, &bv) in out.iter_mut().zip(b_row) {
+                *o += a * bv as i32;
+            }
+        }
+    }
+}
+
+/// The unblocked reference GEMM — row-parallel when substantial,
+/// otherwise plain loops.  [`super::gemm_with`] routes here for
+/// [`super::KernelChoice::Scalar`].
+pub(crate) fn gemm_scalar<A: QAct>(a: &[A], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    if m == 0 || n == 0 {
+        return out;
+    }
+    if m * k * n >= (1 << 21) && n_threads() > 1 {
+        par_items(&mut out, n, |row, o| gemm_row(&a[row * k..(row + 1) * k], b, n, o));
+    } else {
+        for (row, o) in out.chunks_mut(n).enumerate() {
+            gemm_row(&a[row * k..(row + 1) * k], b, n, o);
+        }
+    }
+    out
+}
+
+/// The unblocked reference conv: per image, im2col + [`gemm_row`],
+/// parallel over images.
+pub(crate) fn conv_int_scalar<A: QAct>(xq: &[A], wq: &[i8], d: &ConvShape) -> Vec<i32> {
+    let kk = d.kh * d.kw * d.ci;
+    let per_x = d.h * d.w * d.ci;
+    let per_o = d.ho * d.wo * d.co;
+    let mut out = vec![0i32; d.n * per_o];
+    par_items(&mut out, per_o, |img, o| {
+        let cols = im2col(&xq[img * per_x..(img + 1) * per_x], d);
+        for (row, orow) in o.chunks_mut(d.co).enumerate() {
+            gemm_row(&cols[row * kk..(row + 1) * kk], wq, d.co, orow);
+        }
+    });
+    out
+}
+
+/// Scalar micro-kernel over one A panel × one B panel: accumulates the
+/// full `kp` depth into the `MR×NR` register tile.  Consumes exactly the
+/// pair layout the SIMD tiers read, so it is also their drop-in
+/// replacement on ragged tails and unsupported CPUs.
+pub(crate) fn micro_i8(ap: &[i16], bp: &[i8], kp: usize, acc: &mut [[i32; NR]; MR]) {
+    for t in 0..kp / 2 {
+        let a = &ap[t * 2 * MR..t * 2 * MR + 2 * MR];
+        let b = &bp[t * 2 * NR..t * 2 * NR + 2 * NR];
+        for (r, arow) in acc.iter_mut().enumerate() {
+            let a0 = a[2 * r] as i32;
+            let a1 = a[2 * r + 1] as i32;
+            if a0 == 0 && a1 == 0 {
+                continue;
+            }
+            for (j, o) in arow.iter_mut().enumerate() {
+                *o += a0 * b[2 * j] as i32 + a1 * b[2 * j + 1] as i32;
+            }
+        }
+    }
+}

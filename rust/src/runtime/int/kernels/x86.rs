@@ -1,0 +1,106 @@
+//! AVX2 micro-kernels (x86-64, runtime-detected).
+//!
+//! Strategy: widening pair dot products.  Each k-pair of a B panel is
+//! one 32-byte load whose halves sign-extend to 16-bit lanes ordered
+//! `[b(2t,j), b(2t+1,j)]` per column; each A row broadcasts its widened
+//! pair `(a0, a1)` into every 32-bit lane, and `_mm256_madd_epi16`
+//! produces `a0·b0 + a1·b1` per column — **exactly**, because the i16
+//! products are formed at i32 precision inside `madd` (the
+//! `_mm256_maddubs_epi16` shortcut is rejected here: it saturates its
+//! i16 pair sums, e.g. `255·127 + 255·127`, silently corrupting u8
+//! activations).  All accumulation is i32 adds, so results are
+//! bit-identical to the scalar tier.
+//!
+//! The INT4 kernel computes in the nibble domain: it loads 16
+//! pair-bytes, sign-extends both nibbles with the `(x ^ 8) − 8` trick,
+//! re-interleaves them into the same pair layout, and reuses the i8
+//! inner step — the full-width i8 weight buffer is never materialized.
+
+#![allow(unsafe_code)]
+
+use super::pack::{MR, NR};
+#[cfg(target_arch = "x86_64")]
+use core::arch::x86_64::*;
+
+/// Runtime gate for the SIMD tier on this architecture.
+pub(crate) fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+/// Accumulate one A panel × one B panel (i8 pair layout) into `acc`.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available ([`avx2_available`]) and that
+/// `ap`/`bp` hold at least `kp/2` pair groups (`2·MR` i16 / `2·NR` i8
+/// each) — guaranteed by the panel packers.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn micro_i8_avx2(ap: &[i16], bp: &[i8], kp: usize, acc: &mut [[i32; NR]; MR]) {
+    debug_assert!(ap.len() >= MR * kp && bp.len() >= NR * kp);
+    let mut c = [[_mm256_setzero_si256(); 2]; MR];
+    for t in 0..kp / 2 {
+        let raw = _mm256_loadu_si256(bp.as_ptr().add(t * 2 * NR) as *const __m256i);
+        let b_lo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(raw)); // columns 0..8
+        let b_hi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(raw)); // columns 8..16
+        let a = ap.as_ptr().add(t * 2 * MR);
+        for (r, cr) in c.iter_mut().enumerate() {
+            let a0 = *a.add(2 * r) as u16 as u32;
+            let a1 = *a.add(2 * r + 1) as u16 as u32;
+            if (a0 | a1) == 0 {
+                continue;
+            }
+            let av = _mm256_set1_epi32((a0 | (a1 << 16)) as i32);
+            cr[0] = _mm256_add_epi32(cr[0], _mm256_madd_epi16(av, b_lo));
+            cr[1] = _mm256_add_epi32(cr[1], _mm256_madd_epi16(av, b_hi));
+        }
+    }
+    spill(&c, acc);
+}
+
+/// Accumulate one A panel × one nibble-packed B panel into `acc`,
+/// decoding i4 pairs in-register.
+///
+/// # Safety
+/// Same contract as [`micro_i8_avx2`]; `bp4` holds `kp/2` groups of `NR`
+/// pair-bytes.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn micro_i4_avx2(ap: &[i16], bp4: &[u8], kp: usize, acc: &mut [[i32; NR]; MR]) {
+    debug_assert!(ap.len() >= MR * kp && bp4.len() >= NR * kp / 2);
+    let mask = _mm_set1_epi8(0x0f);
+    let bias = _mm_set1_epi8(8);
+    let mut c = [[_mm256_setzero_si256(); 2]; MR];
+    for t in 0..kp / 2 {
+        let raw = _mm_loadu_si128(bp4.as_ptr().add(t * NR) as *const __m128i);
+        // sign-extend both nibbles of every byte: (x & 0xF ^ 8) - 8
+        let lo = _mm_sub_epi8(_mm_xor_si128(_mm_and_si128(raw, mask), bias), bias);
+        let hi4 = _mm_and_si128(_mm_srli_epi16::<4>(raw), mask);
+        let hi = _mm_sub_epi8(_mm_xor_si128(hi4, bias), bias);
+        // restore the i8 pair interleave, then the i8 inner step applies
+        let b_lo = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(lo, hi));
+        let b_hi = _mm256_cvtepi8_epi16(_mm_unpackhi_epi8(lo, hi));
+        let a = ap.as_ptr().add(t * 2 * MR);
+        for (r, cr) in c.iter_mut().enumerate() {
+            let a0 = *a.add(2 * r) as u16 as u32;
+            let a1 = *a.add(2 * r + 1) as u16 as u32;
+            if (a0 | a1) == 0 {
+                continue;
+            }
+            let av = _mm256_set1_epi32((a0 | (a1 << 16)) as i32);
+            cr[0] = _mm256_add_epi32(cr[0], _mm256_madd_epi16(av, b_lo));
+            cr[1] = _mm256_add_epi32(cr[1], _mm256_madd_epi16(av, b_hi));
+        }
+    }
+    spill(&c, acc);
+}
+
+/// Add the register tile into the caller's accumulator.
+#[target_feature(enable = "avx2")]
+unsafe fn spill(c: &[[__m256i; 2]; MR], acc: &mut [[i32; NR]; MR]) {
+    for (cr, arow) in c.iter().zip(acc.iter_mut()) {
+        let mut lanes = [0i32; NR];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, cr[0]);
+        _mm256_storeu_si256(lanes.as_mut_ptr().add(8) as *mut __m256i, cr[1]);
+        for (o, l) in arow.iter_mut().zip(lanes) {
+            *o += l;
+        }
+    }
+}

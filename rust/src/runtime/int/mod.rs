@@ -11,10 +11,13 @@
 //!   per-output-channel scales, i32 bias), producing a
 //!   [`model::QuantizedModel`] that serializes to `quantized.json` +
 //!   `weights.bin`.
-//! * [`kernels`] — i8×i8→i32 GEMM, im2col conv and embedding gather,
-//!   batch-parallel on scoped threads; activation quantization and the
-//!   requantization epilogue are round-half-even, bit-compatible with
-//!   `quant::quantizer`.
+//! * [`kernels`] — the blocked i8×i8→i32 GEMM / im2col conv micro-kernel
+//!   architecture: A/B panel packing (`kernels::pack`), runtime-dispatched
+//!   scalar / AVX2 / NEON micro-kernels plus a nibble-domain INT4 kernel
+//!   (`LAPQ_KERNEL=scalar|blocked|simd` forces a tier), batch-parallel on
+//!   scoped threads — every tier bit-identical; activation quantization
+//!   and the requantization epilogue are round-half-even, bit-compatible
+//!   with `quant::quantizer`.
 //! * [`session`] — [`session::InferSession`] walks the zoo graphs
 //!   (`mlp3`, `cnn6`, `ncf`) over a packed model, integer kernels where
 //!   both sides are quantized, fake-quant f32 fallback elsewhere.

@@ -9,6 +9,24 @@
 //! same densities drive `QuantizedModel::packed_bytes`, so the
 //! mixed-precision allocator's byte budget and the serialized size agree.
 
+/// Pack two signed 4-bit values (range −8..=7) into one byte: `lo` in
+/// the low nibble, `hi` in the high nibble — the single convention
+/// shared by the serialized stream ([`pack_i4`]: even index low) and the
+/// GEMM panel layout (`kernels::pack::PackedB4`: even k low).
+pub fn i4_pair(lo: i8, hi: i8) -> u8 {
+    ((lo as u8) & 0x0f) | (((hi as u8) & 0x0f) << 4)
+}
+
+/// Sign-extend the low nibble of an [`i4_pair`] byte.
+pub fn i4_lo(b: u8) -> i8 {
+    (((b & 0x0f) << 4) as i8) >> 4
+}
+
+/// Sign-extend the high nibble of an [`i4_pair`] byte.
+pub fn i4_hi(b: u8) -> i8 {
+    (b as i8) >> 4
+}
+
 /// Pack signed 4-bit values (range −8..=7; LAPQ grids use −7..=7) two per
 /// byte: even index in the low nibble, odd index in the high nibble.  An
 /// odd-length tail leaves the final high nibble zero.
@@ -16,9 +34,7 @@ pub fn pack_i4(q: &[i8]) -> Vec<u8> {
     debug_assert!(q.iter().all(|&v| (-8..=7).contains(&v)), "value outside i4 range");
     let mut out = Vec::with_capacity(q.len().div_ceil(2));
     for pair in q.chunks(2) {
-        let lo = (pair[0] as u8) & 0x0f;
-        let hi = if pair.len() > 1 { (pair[1] as u8) & 0x0f } else { 0 };
-        out.push(lo | (hi << 4));
+        out.push(i4_pair(pair[0], if pair.len() > 1 { pair[1] } else { 0 }));
     }
     out
 }
@@ -28,9 +44,9 @@ pub fn unpack_i4(bytes: &[u8], n: usize) -> Vec<i8> {
     assert_eq!(bytes.len(), n.div_ceil(2), "i4 payload is {} bytes for {} values", bytes.len(), n);
     let mut out = Vec::with_capacity(n);
     for &b in bytes {
-        out.push((((b & 0x0f) << 4) as i8) >> 4);
+        out.push(i4_lo(b));
         if out.len() < n {
-            out.push((b as i8) >> 4);
+            out.push(i4_hi(b));
         }
     }
     out
@@ -119,6 +135,16 @@ mod tests {
     fn i4_extremes() {
         let q = vec![-8i8, 7, -1, 0, 1, -7];
         assert_eq!(unpack_i4(&pack_i4(&q), 6), q);
+    }
+
+    #[test]
+    fn i4_pair_roundtrips_both_nibbles() {
+        for lo in -8i8..=7 {
+            for hi in -8i8..=7 {
+                let b = i4_pair(lo, hi);
+                assert_eq!((i4_lo(b), i4_hi(b)), (lo, hi), "byte {b:#04x}");
+            }
+        }
     }
 
     #[test]

@@ -6,9 +6,13 @@
 //! * [`ExecMode::Int`] — layers whose weights *and* input activations are
 //!   quantized run the integer kernels: quantize the f32 input onto its
 //!   grid, i8×i8→i32 GEMM / im2col conv / i8 embedding gather, then the
-//!   dequantize+bias epilogue.  Everything else (first/last layers the
-//!   paper leaves at FP32, pooling, residual glue) falls back to the
-//!   fake-quant f32 path.
+//!   dequantize+bias epilogue.  GEMM and conv route through the blocked
+//!   micro-kernel dispatcher (`kernels::kernel_choice`, overridable with
+//!   `LAPQ_KERNEL=scalar|blocked|simd`); ≤4-bit weight payloads take the
+//!   nibble-domain INT4 micro-kernel.  Every tier is bit-identical, so
+//!   the choice never changes a logit.  Everything else (first/last
+//!   layers the paper leaves at FP32, pooling, residual glue) falls back
+//!   to the fake-quant f32 path.
 //! * [`ExecMode::Simulated`] — the fake-quant reference, computed with
 //!   the exact ops (`ops::matmul`, `ops::conv2d`, `fake_quant_one`) and
 //!   accumulation order of the CPU backend, so it is bit-identical to
@@ -357,16 +361,34 @@ impl<'a> InferSession<'a> {
         let signed = self.spec.quant_layers[qi].act_signed;
 
         if mode == ExecMode::Int && da > 0.0 {
-            if let Payload::Int { q, scale, .. } = &wp.payload {
+            if let Payload::Int { bits, q, scale } = &wp.payload {
+                // ≤4-bit payloads take the nibble-domain micro-kernel;
+                // either way the accumulators are bit-identical across
+                // tiers (tests/kernel_diff), so the tap contract holds.
+                let choice = kernels::kernel_choice();
+                let matmul_q = |qxv: &[i8]| {
+                    if *bits <= 4 {
+                        kernels::gemm_i4_with(choice, qxv, q, m, k, n)
+                    } else {
+                        kernels::gemm_with(choice, qxv, q, m, k, n)
+                    }
+                };
+                let matmul_qu = |qxv: &[u8]| {
+                    if *bits <= 4 {
+                        kernels::gemm_i4_with(choice, qxv, q, m, k, n)
+                    } else {
+                        kernels::gemm_with(choice, qxv, q, m, k, n)
+                    }
+                };
                 let combined: Vec<f32> = scale.iter().map(|&s| s * da).collect();
                 let (acc, qx) = if signed {
                     let qxv = kernels::quantize_signed(&x.data, da, qma);
                     let tap = tap_ints(run, &qxv);
-                    (kernels::gemm(&qxv, q, m, k, n), tap)
+                    (matmul_q(&qxv), tap)
                 } else {
                     let qxv = kernels::quantize_unsigned(&x.data, da, qma);
                     let tap = tap_ints(run, &qxv);
-                    (kernels::gemm(&qxv, q, m, k, n), tap)
+                    (matmul_qu(&qxv), tap)
                 };
                 let mut y = Arr::zeros(vec![m, n]);
                 kernels::dequant_bias(&acc, n, &combined, &bias, &mut y.data);
@@ -406,16 +428,31 @@ impl<'a> InferSession<'a> {
         let signed = self.spec.quant_layers[qi].act_signed;
 
         if mode == ExecMode::Int && da > 0.0 {
-            if let Payload::Int { q, scale, .. } = &wp.payload {
+            if let Payload::Int { bits, q, scale } = &wp.payload {
+                let choice = kernels::kernel_choice();
+                let conv_q = |qxv: &[i8]| {
+                    if *bits <= 4 {
+                        kernels::conv_int_i4_with(choice, qxv, q, &d)
+                    } else {
+                        kernels::conv_int_with(choice, qxv, q, &d)
+                    }
+                };
+                let conv_qu = |qxv: &[u8]| {
+                    if *bits <= 4 {
+                        kernels::conv_int_i4_with(choice, qxv, q, &d)
+                    } else {
+                        kernels::conv_int_with(choice, qxv, q, &d)
+                    }
+                };
                 let combined: Vec<f32> = scale.iter().map(|&s| s * da).collect();
                 let (acc, qx) = if signed {
                     let qxv = kernels::quantize_signed(&x.data, da, qma);
                     let tap = tap_ints(run, &qxv);
-                    (kernels::conv_int(&qxv, q, &d), tap)
+                    (conv_q(&qxv), tap)
                 } else {
                     let qxv = kernels::quantize_unsigned(&x.data, da, qma);
                     let tap = tap_ints(run, &qxv);
-                    (kernels::conv_int(&qxv, q, &d), tap)
+                    (conv_qu(&qxv), tap)
                 };
                 let mut y = Arr::zeros(vec![d.n, d.ho, d.wo, d.co]);
                 kernels::dequant_bias(&acc, d.co, &combined, &bias, &mut y.data);

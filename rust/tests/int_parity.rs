@@ -8,8 +8,9 @@
 //! so its per-layer quantized activations are allowed to differ by one
 //! grid step.
 
-use lapq::config::{BitSpec, ExperimentConfig, Method};
+use lapq::config::{BitSpec, ExperimentConfig, Method, ServeCfg};
 use lapq::coordinator::jobs::Runner;
+use lapq::coordinator::service::request;
 use lapq::data::ncf::SynthNcf;
 use lapq::data::vision::SynthVision;
 use lapq::quant::{minmax, GridKind};
@@ -17,8 +18,10 @@ use lapq::runtime::cpu::{ops, zoo};
 use lapq::runtime::int::model::{pack, snap_po2, PackOpts, Payload, QuantizedModel};
 use lapq::runtime::int::{ExecMode, InferSession};
 use lapq::runtime::{EngineHandle, Manifest, ModelSpec, QuantParams};
+use lapq::serve::PoolServer;
 use lapq::tensor::init::init_params;
 use lapq::tensor::HostTensor;
+use lapq::util::json::Json;
 
 /// Per-layer power-of-two grids from the actual weight/activation ranges
 /// (min-max, snapped) — what a calibration-then-pack run would produce.
@@ -221,6 +224,85 @@ fn mixed_w8_w4_mlp3_bit_exact_with_fake_quant_backend() {
         assert_eq!(int_res.int_layers, 3, "seed {seed}");
         assert_bits_equal(&int_res.logits.data, &sim_res.logits.data, "mixed logits");
     }
+}
+
+/// The nibble-domain kernel end to end: a mixed ≤4-bit plan on `cnn6`
+/// keeps every accumulator far below 2²⁴ (k·7·255 < 2²⁴ up to k ≈ 9395),
+/// so unlike INT8 `cnn6` the fake-quant reference is exact and the
+/// int4-direct path must match it **bit-for-bit** — through pack, the
+/// disk round-trip, an [`InferSession`], and a pool-server `infer` fed
+/// one NHWC image as flat `"x"` + `"shape"`.
+#[test]
+fn int4_direct_cnn6_bit_exact_through_pool_serving() {
+    let manifest = Manifest::builtin();
+    let spec = manifest.model("cnn6").unwrap();
+    let params = init_params(&spec.params, 17);
+    let data = SynthVision::new(17);
+    let (x, _) = data.batch(0, 2);
+    let wbits = [4u32, 2, 4, 4, 2, 4];
+    let q = po2_quant_mixed(spec, &params, &[x.clone()], &wbits, 8);
+    let qm = pack(spec, &params, &q, None, &PackOpts::default()).unwrap();
+    assert_eq!(qm.wbits(), wbits.to_vec());
+
+    let dir = tmp_dir("i4cnn");
+    qm.save(&dir).unwrap();
+    let loaded = QuantizedModel::load(&dir).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(loaded, qm);
+    for p in &loaded.params {
+        if let Payload::Int { bits, q, .. } = &p.payload {
+            assert!(*bits <= 4, "param {} is {} bits", p.name, bits);
+            assert!(q.iter().all(|&v| (-7..=7).contains(&v)), "param {}", p.name);
+        }
+    }
+
+    // every layer routes through the int4-direct kernel (bits ≤ 4), and
+    // the result is bit-exact against the fake-quant reference
+    let mut sess = InferSession::new(spec, &loaded).unwrap();
+    sess.record_taps = true;
+    let int_res = sess.infer(&[x.clone()], ExecMode::Int).unwrap();
+    let sim_res = sess.infer(&[x.clone()], ExecMode::Simulated).unwrap();
+    assert_eq!(int_res.int_layers, 6);
+    for (ti, si) in int_res.taps.iter().zip(&sim_res.taps) {
+        assert_eq!(ti.qx, si.qx, "layer {} quantized inputs", ti.name);
+        assert_bits_equal(&ti.y.data, &si.y.data, &format!("layer {}", ti.name));
+    }
+    assert_bits_equal(&int_res.logits.data, &sim_res.logits.data, "int4 cnn6 logits");
+
+    // ...and over the wire: one image as flat "x" + "shape" [1,32,32,3]
+    let one = data.batch(0, 1).0;
+    let want = sess.infer(&[one.clone()], ExecMode::Int).unwrap();
+    let eng = EngineHandle::start_default().unwrap();
+    let scfg = ServeCfg {
+        workers: 2,
+        batch_window_ms: 0.0,
+        max_batch: 4,
+        queue_bound: 16,
+        registry_cap: 4,
+    };
+    let server = PoolServer::bind("127.0.0.1:0", eng, scfg).unwrap();
+    server.registry().put("cnn6:int4".to_string(), std::sync::Arc::new(loaded));
+    let addr = server.addr;
+    let pool = std::thread::spawn(move || server.serve(1).unwrap());
+    let reply = request(
+        &addr,
+        &Json::obj(vec![
+            ("cmd", Json::Str("infer".into())),
+            ("key", Json::Str("cnn6:int4".into())),
+            ("x", Json::arr_f32(one.f())),
+            ("shape", Json::Arr([1, 32, 32, 3].iter().map(|&v| Json::Num(v as f64)).collect())),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(reply.req("ok").as_bool(), Some(true), "{reply:?}");
+    let got: Vec<f32> = reply.req("result").req("logits").as_arr().unwrap()[0]
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|j| j.as_f64().map(|v| v as f32))
+        .collect();
+    assert_bits_equal(&got, &want.logits.data, "served int4 logits");
+    pool.join().unwrap();
 }
 
 #[test]

@@ -1,0 +1,215 @@
+//! Differential kernel harness: every dispatch tier of the integer
+//! GEMM/conv (blocked, SIMD-when-detected, nibble-domain INT4) must be
+//! **bit-identical** to the scalar reference loops — the property the
+//! whole integer engine's parity story rests on.
+//!
+//! ~2k seeded generated cases: random (m, k, n) with k not divisible by
+//! the pair/panel widths, the m = 1 serving shape, zero-size and
+//! single-element inputs, saturating ±127/±128-adjacent values, both
+//! `i8` and `u8` activations, and strided conv geometries with ragged
+//! channel counts.
+
+use lapq::runtime::int::kernels::pack::{MR, NR};
+use lapq::runtime::int::kernels::{
+    acc_fits_i32, conv_int_i4_with, conv_int_with, conv_shape, gemm_i4_with, gemm_with,
+    KernelChoice, QAct,
+};
+use lapq::util::rng::Pcg32;
+
+/// The non-reference tiers, each pinned against `Scalar`.  `Simd`
+/// silently degrades to `Blocked` on machines without a detected
+/// extension — the assertion holds either way.
+const TIERS: [KernelChoice; 3] = [KernelChoice::Blocked, KernelChoice::Simd, KernelChoice::Auto];
+
+fn draw_w8(rng: &mut Pcg32, count: usize) -> Vec<i8> {
+    (0..count)
+        .map(|_| match rng.below(8) {
+            // keep the saturating corners hot: full-range i8 weights,
+            // including -128 (beyond the symmetric grid, still exact)
+            0 => [-128i8, -127, -126, 126, 127][rng.below(5) as usize],
+            _ => (rng.below(256) as i32 - 128) as i8,
+        })
+        .collect()
+}
+
+fn draw_w4(rng: &mut Pcg32, count: usize) -> Vec<i8> {
+    (0..count)
+        .map(|_| match rng.below(8) {
+            0 => [-8i8, -7, 7][rng.below(3) as usize],
+            _ => (rng.below(16) as i32 - 8) as i8,
+        })
+        .collect()
+}
+
+fn draw_a8(rng: &mut Pcg32, count: usize) -> Vec<i8> {
+    (0..count)
+        .map(|_| match rng.below(8) {
+            0 => [-128i8, -127, 0, 126, 127][rng.below(5) as usize],
+            _ => (rng.below(256) as i32 - 128) as i8,
+        })
+        .collect()
+}
+
+fn draw_u8(rng: &mut Pcg32, count: usize) -> Vec<u8> {
+    (0..count)
+        .map(|_| match rng.below(8) {
+            0 => [0u8, 1, 254, 255][rng.below(4) as usize],
+            _ => rng.below(256) as u8,
+        })
+        .collect()
+}
+
+/// Shapes that stress the panel geometry: ragged against `MR`/`NR`, odd
+/// k (not divisible by the pair width), m = 1 serving rows, zero-size
+/// and single-element operands.
+fn edge_shapes() -> Vec<(usize, usize, usize)> {
+    vec![
+        (0, 0, 0),
+        (0, 5, 3),
+        (2, 0, 7),
+        (3, 4, 0),
+        (1, 1, 1),
+        (1, 17, 1),
+        (1, 64, NR),
+        (1, 63, NR + 1),
+        (MR, 2, NR),
+        (MR + 1, 3, NR - 1),
+        (MR - 1, 5, 2 * NR + 3),
+        (2 * MR, 7, NR),
+        (5, 33, 17),
+        (7, 96, 31),
+    ]
+}
+
+fn random_shape(rng: &mut Pcg32) -> (usize, usize, usize) {
+    let m = match rng.below(4) {
+        0 => 1, // the serving shape stays hot
+        _ => 1 + rng.below(32) as usize,
+    };
+    let k = match rng.below(4) {
+        0 => 2 * rng.below(48) as usize + 1, // odd: pair-ragged
+        _ => 1 + rng.below(96) as usize,
+    };
+    let n = match rng.below(4) {
+        0 => 1 + NR * (1 + rng.below(3) as usize), // panel-aligned
+        _ => 1 + rng.below(80) as usize,
+    };
+    (m, k, n)
+}
+
+fn check_gemm<A: QAct>(a: &[A], b: &[i8], (m, k, n): (usize, usize, usize), what: &str) {
+    let want = gemm_with(KernelChoice::Scalar, a, b, m, k, n);
+    for choice in TIERS {
+        let got = gemm_with(choice, a, b, m, k, n);
+        assert_eq!(got, want, "{what} {choice:?} vs scalar at ({m},{k},{n})");
+    }
+}
+
+fn check_gemm_i4<A: QAct>(a: &[A], b4: &[i8], (m, k, n): (usize, usize, usize), what: &str) {
+    let want = gemm_i4_with(KernelChoice::Scalar, a, b4, m, k, n);
+    for choice in TIERS {
+        let got = gemm_i4_with(choice, a, b4, m, k, n);
+        assert_eq!(got, want, "{what} i4 {choice:?} vs scalar at ({m},{k},{n})");
+    }
+}
+
+#[test]
+fn gemm_tiers_bit_identical_i8_activations() {
+    let mut rng = Pcg32::seeded(101);
+    let shapes: Vec<_> =
+        edge_shapes().into_iter().chain((0..200).map(|_| random_shape(&mut rng))).collect();
+    for &(m, k, n) in &shapes {
+        let a = draw_a8(&mut rng, m * k);
+        let b = draw_w8(&mut rng, k * n);
+        check_gemm(&a, &b, (m, k, n), "i8");
+    }
+}
+
+#[test]
+fn gemm_tiers_bit_identical_u8_activations() {
+    let mut rng = Pcg32::seeded(103);
+    let shapes: Vec<_> =
+        edge_shapes().into_iter().chain((0..200).map(|_| random_shape(&mut rng))).collect();
+    for &(m, k, n) in &shapes {
+        let a = draw_u8(&mut rng, m * k);
+        let b = draw_w8(&mut rng, k * n);
+        check_gemm(&a, &b, (m, k, n), "u8");
+    }
+}
+
+#[test]
+fn gemm_int4_direct_bit_identical_both_activation_types() {
+    let mut rng = Pcg32::seeded(107);
+    let shapes: Vec<_> =
+        edge_shapes().into_iter().chain((0..150).map(|_| random_shape(&mut rng))).collect();
+    for &(m, k, n) in &shapes {
+        let b4 = draw_w4(&mut rng, k * n);
+        let a = draw_a8(&mut rng, m * k);
+        check_gemm_i4(&a, &b4, (m, k, n), "i8-acts");
+        let au = draw_u8(&mut rng, m * k);
+        check_gemm_i4(&au, &b4, (m, k, n), "u8-acts");
+    }
+}
+
+/// One shape above the `1 << 21` work threshold, so the row-panel
+/// parallel driver path (and the reference's row-parallel path) is
+/// exercised, not just the serial loops.
+#[test]
+fn gemm_tiers_bit_identical_on_the_parallel_path() {
+    let mut rng = Pcg32::seeded(109);
+    let (m, k, n) = (160, 96, 144); // 2.2M > 2^21
+    let a = draw_a8(&mut rng, m * k);
+    let b = draw_w8(&mut rng, k * n);
+    check_gemm(&a, &b, (m, k, n), "parallel i8");
+    let b4 = draw_w4(&mut rng, k * n);
+    let au = draw_u8(&mut rng, m * k);
+    check_gemm_i4(&au, &b4, (m, k, n), "parallel u8");
+}
+
+#[test]
+fn conv_tiers_bit_identical_all_strides() {
+    let mut rng = Pcg32::seeded(113);
+    for case in 0..60 {
+        let n = 1 + rng.below(3) as usize;
+        let h = 1 + rng.below(8) as usize;
+        let w = 1 + rng.below(8) as usize;
+        let ci = 1 + rng.below(5) as usize;
+        let kh = 1 + rng.below(4) as usize;
+        let kw = 1 + rng.below(4) as usize;
+        let co = 1 + rng.below(NR as u32 + 4) as usize;
+        let stride = 1 + rng.below(3) as usize;
+        let d = conv_shape(&[n, h, w, ci], &[kh, kw, ci, co], stride);
+        let kk = kh * kw * ci;
+        let w8 = draw_w8(&mut rng, kk * co);
+        let w4 = draw_w4(&mut rng, kk * co);
+        let what = format!("conv#{case} n{n} {h}x{w}x{ci} k{kh}x{kw} co{co} s{stride}");
+
+        let xq = draw_a8(&mut rng, n * h * w * ci);
+        let want = conv_int_with(KernelChoice::Scalar, &xq, &w8, &d);
+        let want4 = conv_int_i4_with(KernelChoice::Scalar, &xq, &w4, &d);
+        for choice in TIERS {
+            assert_eq!(conv_int_with(choice, &xq, &w8, &d), want, "{what} {choice:?}");
+            assert_eq!(conv_int_i4_with(choice, &xq, &w4, &d), want4, "{what} i4 {choice:?}");
+        }
+
+        let xu = draw_u8(&mut rng, n * h * w * ci);
+        let want_u = conv_int_with(KernelChoice::Scalar, &xu, &w8, &d);
+        for choice in TIERS {
+            assert_eq!(conv_int_with(choice, &xu, &w8, &d), want_u, "{what} u8 {choice:?}");
+        }
+    }
+}
+
+/// The overflow blind spot the blocked rewrite closed: the zoo's widest
+/// reductions sit far inside the i32 accumulator envelope, and the bound
+/// itself is tight (`k · MAX_ABS · 128 ≤ i32::MAX`).
+#[test]
+fn accumulator_envelope_covers_every_zoo_reduction() {
+    // (k, activation bound) per zoo layer family: mlp3 dense (k ≤ 64),
+    // cnn6 convs (k = 27..576, u8 acts), ncf dense (k ≤ 96)
+    for (k, a_max) in [(64, 128), (27, 255), (576, 255), (96, 128)] {
+        assert!(acc_fits_i32(k, a_max), "k={k} a_max={a_max}");
+    }
+    assert!(acc_fits_i32(65807, 255));
+    assert!(!acc_fits_i32(65808, 255));
+}

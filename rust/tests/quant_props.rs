@@ -3,6 +3,7 @@
 
 use lapq::prop::{forall, Shrink};
 use lapq::quant::lp::lp_error_sum;
+use lapq::runtime::int::kernels::{rshift_rhe, FixedMult};
 use lapq::quant::minmax::minmax_delta;
 use lapq::quant::mmse::{lp_optimal_delta, LpSearch};
 use lapq::quant::quantizer::{fake_quant, fake_quant_one};
@@ -152,6 +153,162 @@ fn prop_json_roundtrip() {
             j.dump().parse::<Json>() == Ok(j)
         },
     );
+}
+
+// ---------------------------------------------------------------------
+// Requantization arithmetic: `rshift_rhe` and `FixedMult::apply`
+// ---------------------------------------------------------------------
+
+/// A shifted-rounding case: `x / 2^b`, `|x| < 2^62` (the documented
+/// domain of `rshift_rhe`), with exact `.5` ties injected deliberately.
+#[derive(Clone, Debug)]
+struct ShiftCase {
+    x: i64,
+    b: u32,
+}
+
+impl Shrink for ShiftCase {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.x != 0 {
+            out.push(ShiftCase { x: self.x / 2, b: self.b });
+        }
+        if self.b > 0 {
+            out.push(ShiftCase { x: self.x, b: self.b / 2 });
+        }
+        out
+    }
+}
+
+fn shift_gen(rng: &mut Pcg32) -> ShiftCase {
+    let b = rng.below(64);
+    // up to 62 random bits, magnitude spread across every width
+    let raw = ((rng.below(1 << 31) as i64) << 31) | rng.below(1 << 31) as i64;
+    let width = rng.below(63);
+    let mut x = raw & ((1i64 << width) - 1);
+    if b > 0 && b < 63 && rng.below(4) == 0 {
+        // land exactly on a round-half tie
+        x = (x >> b << b) | (1i64 << (b - 1));
+    }
+    if rng.below(2) == 1 {
+        x = -x;
+    }
+    ShiftCase { x, b }
+}
+
+/// Independent round-half-even reference for `x / 2^b`, in i128 euclid
+/// arithmetic (f64 cannot represent the 62-bit operands exactly).
+fn rhe_shift_ref(x: i64, b: u32) -> i64 {
+    let d = 1i128 << b;
+    let q = (x as i128).div_euclid(d);
+    let r = (x as i128).rem_euclid(d);
+    let half = d / 2;
+    (q + if b > 0 && (r > half || (r == half && q & 1 != 0)) { 1 } else { 0 }) as i64
+}
+
+/// f64 round-half-to-even (MSRV predates `round_ties_even`).
+fn rhe64(v: f64) -> f64 {
+    let r = v.round();
+    if (v - v.trunc()).abs() == 0.5 && r % 2.0 != 0.0 {
+        r - v.signum()
+    } else {
+        r
+    }
+}
+
+#[test]
+fn prop_rshift_rhe_matches_euclid_reference() {
+    forall(21, 600, shift_gen, |c: &ShiftCase| rshift_rhe(c.x, c.b) == rhe_shift_ref(c.x, c.b));
+}
+
+#[test]
+fn prop_rshift_rhe_monotone_and_half_ulp_close() {
+    forall(22, 500, shift_gen, |c: &ShiftCase| {
+        let y = rshift_rhe(c.x, c.b);
+        if rshift_rhe(c.x.saturating_add(1), c.b) < y {
+            return false; // rounding must be monotone in x
+        }
+        if c.b == 0 || c.b >= 63 {
+            return y == rhe_shift_ref(c.x, c.b);
+        }
+        // the rounded quotient is within half an output ulp of x/2^b
+        ((y as i128) << c.b).abs_diff(c.x as i128) <= 1u128 << (c.b - 1)
+    });
+}
+
+#[test]
+fn prop_rshift_rhe_agrees_with_f64_where_f64_is_exact() {
+    forall(23, 500, shift_gen, |c: &ShiftCase| {
+        // restrict to the regime where both x and x/2^b are exact in f64
+        let x = c.x % (1i64 << 52);
+        let b = c.b.min(40);
+        rshift_rhe(x, b) == rhe64(x as f64 / f64::powi(2.0, b as i32)) as i64
+    });
+}
+
+/// i32 accumulators sampled at the boundaries of the range, plus noise.
+fn acc_gen(rng: &mut Pcg32) -> i32 {
+    match rng.below(3) {
+        0 => [i32::MIN, i32::MIN + 1, -1, 0, 1, i32::MAX - 1, i32::MAX][rng.below(7) as usize],
+        _ => rng.below(u32::MAX) as i32,
+    }
+}
+
+#[derive(Clone, Debug)]
+struct MultCase {
+    exp: i32,
+    frac: f32,
+    acc: i32,
+    acc2: i32,
+}
+
+impl Shrink for MultCase {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.acc != 0 {
+            out.push(MultCase { acc: self.acc / 2, ..self.clone() });
+        }
+        if self.exp != 0 {
+            out.push(MultCase { exp: self.exp / 2, ..self.clone() });
+        }
+        out
+    }
+}
+
+fn mult_gen(rng: &mut Pcg32) -> MultCase {
+    MultCase {
+        exp: rng.below(26) as i32 - 20,
+        frac: rng.range(0.5, 1.0),
+        acc: acc_gen(rng),
+        acc2: acc_gen(rng),
+    }
+}
+
+#[test]
+fn prop_fixed_mult_power_of_two_is_an_exact_shift() {
+    forall(24, 400, mult_gen, |c: &MultCase| {
+        let fm = FixedMult::from_f32(f32::powi(2.0, c.exp));
+        let want = if c.exp >= 0 {
+            (c.acc as i64) << c.exp
+        } else {
+            rhe_shift_ref(c.acc as i64, (-c.exp) as u32)
+        };
+        fm.apply(c.acc) == want
+    });
+}
+
+#[test]
+fn prop_fixed_mult_close_to_f64_product_and_monotone() {
+    forall(25, 400, mult_gen, |c: &MultCase| {
+        let m = c.frac * f32::powi(2.0, c.exp);
+        let fm = FixedMult::from_f32(m);
+        let (lo, hi) = (c.acc.min(c.acc2), c.acc.max(c.acc2));
+        if fm.apply(lo) > fm.apply(hi) {
+            return false; // positive multiplier: monotone in acc
+        }
+        let exact = c.acc as f64 * m as f64;
+        (fm.apply(c.acc) as f64 - exact).abs() <= 0.5 + exact.abs() * 1e-6
+    });
 }
 
 #[test]
