@@ -2,13 +2,18 @@
 
 CARGO ?= cargo
 
-.PHONY: build test fmt fmt-check clippy verify bench-smoke artifacts clean
+.PHONY: build test test-poll fmt fmt-check clippy verify bench-smoke artifacts clean
 
 build:
 	$(CARGO) build --release
 
 test:
 	$(CARGO) test -q
+
+# The same suite against the readiness-polled serving transport (CI runs
+# both this and the LAPQ_KERNEL=scalar pass after the default tier).
+test-poll:
+	LAPQ_SERVE_IO=poll $(CARGO) test -q
 
 fmt:
 	$(CARGO) fmt

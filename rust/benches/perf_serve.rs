@@ -13,14 +13,24 @@
 //! * `pool_batch_bin1` — the same pool, clients negotiated onto the
 //!   bin1 binary frames (`proto::frame`) instead of JSON lines.
 //!
+//! Two more probe the event-driven core:
+//!
+//! * **idle connections** — a `serve.io = poll` server holding hundreds
+//!   (thousands, in full runs) of idle sockets: RSS and thread-count
+//!   deltas per connection, plus ping latency through the loaded poll
+//!   set (`idle_rss_kib` / `idle_thread_delta` headline keys).
+//! * **per-model lanes** — two hot packed models behind `max_lanes` 1
+//!   vs 4: the `two_model_lane_speedup` headline is the throughput
+//!   ratio once each model coalesces on its own batcher thread.
+//!
 //! `BENCH_SMOKE=1` runs a bounded subset (CI-sized) — either way the
 //! numbers land in `bench_results/BENCH_serve.json`, next to
 //! `BENCH_hotpath.json` / `BENCH_int_infer.json` / `BENCH_calib.json`.
 
 use lapq::benchkit::{f3, Table};
-use lapq::config::{BitSpec, ExperimentConfig, Method, ServeCfg};
+use lapq::config::{BitSpec, ExperimentConfig, IoMode, Method, ServeCfg};
 use lapq::proto::wire::Client;
-use lapq::proto::InferRequest;
+use lapq::proto::{InferRequest, Request};
 use lapq::runtime::int::kernels::{active_kernel_name, KernelChoice};
 use lapq::runtime::EngineHandle;
 use lapq::serve::PoolServer;
@@ -40,14 +50,44 @@ fn infer_req(key: &str, row: &[f32]) -> String {
     .dump()
 }
 
+/// A numeric field out of `/proc/self/status` (kB for `Vm*` fields,
+/// a plain count for `Threads:`); 0.0 where procfs is unavailable.
+fn proc_status(field: &str) -> f64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with(field))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(0.0)
+}
+
+/// One counter out of the server's `{"cmd":"metrics"}` endpoint.
+fn counter(c: &mut Client, name: &str) -> f64 {
+    c.call(&Request::Metrics)
+        .ok()
+        .and_then(|j| j.req("metrics").get(name).and_then(|v| v.as_f64()))
+        .unwrap_or(0.0)
+}
+
 /// `clients` persistent connections, each issuing `reqs` sequential
 /// single-row infer requests over JSON lines or — after the hello
-/// handshake — bin1 frames.  Returns (throughput req/s, latencies s).
-fn run_load(addr: SocketAddr, key: &str, clients: usize, reqs: usize, bin: bool) -> (f64, Vec<f32>) {
+/// handshake — bin1 frames.  Client `ci` targets `keys[ci % len]`, so
+/// passing two keys splits the load across two packed models.
+/// Returns (throughput req/s, latencies s).
+fn run_load(
+    addr: SocketAddr,
+    keys: &[String],
+    clients: usize,
+    reqs: usize,
+    bin: bool,
+) -> (f64, Vec<f32>) {
     let t0 = Instant::now();
     let mut handles = Vec::with_capacity(clients);
     for ci in 0..clients {
-        let key = key.to_string();
+        let key = keys[ci % keys.len()].clone();
         handles.push(std::thread::spawn(move || {
             // deterministic, distinct per client
             let row: Vec<f32> =
@@ -141,7 +181,7 @@ fn main() -> lapq::Result<()> {
         let srv = std::thread::spawn(move || server.serve(total_conns));
         let mut runs = Vec::new();
         for &c in concurrencies {
-            let (rps, lat) = run_load(addr, &key, c, reqs, *bin);
+            let (rps, lat) = run_load(addr, std::slice::from_ref(&key), c, reqs, *bin);
             let p50 = stats::percentile(&lat, 50.0) as f64 * 1e3;
             let p95 = stats::percentile(&lat, 95.0) as f64 * 1e3;
             let p99 = stats::percentile(&lat, 99.0) as f64 * 1e3;
@@ -193,6 +233,89 @@ fn main() -> lapq::Result<()> {
         "concurrency {top}: bin1 {bin_top:.0} req/s vs JSON {json_top:.0} req/s ({wire_speedup:.2}x)"
     );
 
+    // -- idle connections under the readiness-polled reactor ---------------
+    // The core claim of `serve.io = poll`: idle sockets cost reactor
+    // bookkeeping, not threads.  Hold `n_idle` open connections and
+    // measure the process-wide RSS and thread-count deltas.
+    let n_idle: usize = if smoke { 256 } else { 2048 };
+    // both ends of every idle connection live in this process
+    let _ = poll_shim::raise_nofile((2 * n_idle + 512) as u64);
+    let idle_cfg = ServeCfg {
+        io: IoMode::Poll,
+        workers: 2,
+        batch_window_ms: 0.0,
+        max_batch: 8,
+        queue_bound: 256,
+        registry_cap: 4,
+        max_conns: n_idle + 64,
+        ..Default::default()
+    };
+    let server = PoolServer::bind("127.0.0.1:0", eng.clone(), idle_cfg)?;
+    let addr = server.addr;
+    let handle = server.shutdown_handle();
+    let srv = std::thread::spawn(move || server.serve(usize::MAX));
+    let mut probe = Client::connect(&addr)?;
+    probe.call(&Request::Ping)?; // reactor + its workers are up
+    let conns0 = counter(&mut probe, "serve_conns");
+    let (rss0, thr0) = (proc_status("VmRSS:"), proc_status("Threads:"));
+    let mut idles = Vec::with_capacity(n_idle);
+    for _ in 0..n_idle {
+        idles.push(TcpStream::connect(addr)?);
+    }
+    // the accept counter says when the reactor has swept them all in
+    while counter(&mut probe, "serve_conns") < conns0 + n_idle as f64 {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let (rss1, thr1) = (proc_status("VmRSS:"), proc_status("Threads:"));
+    let idle_rss_kib = (rss1 - rss0).max(0.0);
+    let idle_thread_delta = thr1 - thr0;
+    let mut lat = Vec::with_capacity(50);
+    for _ in 0..50 {
+        let t = Instant::now();
+        probe.call(&Request::Ping)?;
+        lat.push(t.elapsed().as_secs_f64() as f32 * 1e3);
+    }
+    let idle_ping_p50_ms = stats::percentile(&lat, 50.0) as f64;
+    drop(idles);
+    drop(probe);
+    handle.shutdown();
+    srv.join().expect("idle server")?;
+    println!(
+        "idle {n_idle} conns (io poll): +{idle_rss_kib:.0} KiB RSS ({:.2} KiB/conn), \
+         +{idle_thread_delta:.0} threads, ping p50 {idle_ping_p50_ms:.3} ms",
+        idle_rss_kib / n_idle.max(1) as f64
+    );
+
+    // -- per-model batcher lanes -------------------------------------------
+    // Two hot models, eight clients split across them: with one lane
+    // both models coalesce on a single batcher thread; with four each
+    // model gets its own.
+    let pack_cfg4 = ExperimentConfig { bits: BitSpec::new(4, 4), ..pack_cfg.clone() };
+    let mut lane_rps = Vec::new();
+    for max_lanes in [1usize, 4] {
+        let scfg = ServeCfg {
+            workers: 16,
+            batch_window_ms: 0.5,
+            max_batch: 32,
+            queue_bound: 256,
+            registry_cap: 4,
+            max_lanes,
+            ..Default::default()
+        };
+        let server = PoolServer::bind("127.0.0.1:0", eng.clone(), scfg)?;
+        let keys = server.preload(&[pack_cfg.clone(), pack_cfg4.clone()])?;
+        let addr = server.addr;
+        let srv = std::thread::spawn(move || server.serve(8));
+        let (rps, _lat) = run_load(addr, &keys, 8, reqs, false);
+        srv.join().expect("lane server")?;
+        lane_rps.push(rps);
+    }
+    let two_model_lane_speedup = lane_rps[1] / lane_rps[0].max(1e-9);
+    println!(
+        "two-model lanes: 4 lanes {:.0} req/s vs 1 lane {:.0} req/s ({two_model_lane_speedup:.2}x)",
+        lane_rps[1], lane_rps[0]
+    );
+
     let report = Json::obj(vec![
         ("bench", Json::Str("perf_serve".into())),
         ("smoke", Json::Bool(smoke)),
@@ -207,6 +330,14 @@ fn main() -> lapq::Result<()> {
         ("wire_top_json_rps", Json::Num(json_top)),
         ("wire_top_bin1_rps", Json::Num(bin_top)),
         ("wire_top_speedup", Json::Num(wire_speedup)),
+        ("idle_conns", Json::Num(n_idle as f64)),
+        ("idle_rss_kib", Json::Num(idle_rss_kib)),
+        ("idle_rss_per_conn_kib", Json::Num(idle_rss_kib / n_idle.max(1) as f64)),
+        ("idle_thread_delta", Json::Num(idle_thread_delta)),
+        ("idle_ping_p50_ms", Json::Num(idle_ping_p50_ms)),
+        ("lane1_two_model_rps", Json::Num(lane_rps[0])),
+        ("lane4_two_model_rps", Json::Num(lane_rps[1])),
+        ("two_model_lane_speedup", Json::Num(two_model_lane_speedup)),
     ]);
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
     std::fs::create_dir_all(&dir)?;

@@ -3,7 +3,7 @@
 
 pub mod parser;
 
-use crate::config::{ExperimentConfig, Method, OVERRIDES};
+use crate::config::{ExperimentConfig, IoMode, Method, OVERRIDES};
 use crate::coordinator::jobs::Runner;
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::service::Service;
@@ -39,12 +39,16 @@ COMMANDS:
                                 run the packed integer engine on synthetic
                                 val batches; --check verifies against the
                                 fake-quant reference (bit-exact at tol 0)
-  serve      [--addr HOST:PORT] [--workers N] [--batch-window-ms F]
-             [--max-batch N] [--queue-bound N] [--registry-cap N]
-             [--preload M1,M2] [--seq]
+  serve      [--addr HOST:PORT] [--io threads|poll] [--workers N]
+             [--batch-window-ms F] [--max-batch N] [--queue-bound N]
+             [--registry-cap N] [--max-conns N] [--out-queue-kib N]
+             [--max-lanes N] [--preload M1,M2] [--seq]
                                 start the TCP job service: concurrent
                                 worker pool + infer micro-batching by
                                 default, strictly sequential with --seq;
+                                --io poll serves every connection from one
+                                readiness-polled reactor thread (idle
+                                connections cost an fd, not a thread);
                                 --preload packs models into the registry
                                 before taking traffic
   metrics                       dump the metrics registry
@@ -291,8 +295,18 @@ fn serve(args: &Args) -> Result<()> {
         // The blocking reference server: one connection at a time.
         // Pool-only knobs would be silently dead here — reject both
         // their --flag and `-s serve.*` spellings.
-        let pool_flags =
-            ["workers", "batch-window-ms", "max-batch", "queue-bound", "registry-cap", "preload"];
+        let pool_flags = [
+            "workers",
+            "batch-window-ms",
+            "max-batch",
+            "queue-bound",
+            "registry-cap",
+            "preload",
+            "io",
+            "max-conns",
+            "out-queue-kib",
+            "max-lanes",
+        ];
         for f in pool_flags {
             if args.flag(f).is_some() {
                 bail!("--{f} has no effect with --seq (the sequential server has no pool)");
@@ -323,6 +337,18 @@ fn serve(args: &Args) -> Result<()> {
     if let Some(v) = args.flag("registry-cap") {
         scfg.registry_cap = v.parse()?;
     }
+    if let Some(v) = args.flag("io") {
+        scfg.io = IoMode::parse(v)?;
+    }
+    if let Some(v) = args.flag("max-conns") {
+        scfg.max_conns = v.parse()?;
+    }
+    if let Some(v) = args.flag("out-queue-kib") {
+        scfg.out_queue_kib = v.parse()?;
+    }
+    if let Some(v) = args.flag("max-lanes") {
+        scfg.max_lanes = v.parse()?;
+    }
     let server = PoolServer::bind(addr, eng, scfg.clone())?;
     if let Some(models) = args.flag("preload") {
         let cfgs: Vec<ExperimentConfig> = models
@@ -338,13 +364,16 @@ fn serve(args: &Args) -> Result<()> {
         println!("preloaded: {}", keys.join(", "));
     }
     println!(
-        "serving on {} ({} workers, batch window {} ms, max batch {}, queue bound {}, registry cap {})",
+        "serving on {} (io {}, {} workers, batch window {} ms, max batch {}, queue bound {}, registry cap {}, max conns {}, max lanes {})",
         server.addr,
+        scfg.io.key(),
         scfg.workers,
         scfg.batch_window_ms,
         scfg.max_batch,
         scfg.queue_bound,
         scfg.registry_cap,
+        scfg.max_conns,
+        scfg.max_lanes,
     );
     server.serve(usize::MAX)
 }

@@ -176,13 +176,58 @@ impl Default for LapqCfg {
 /// module both can depend on.
 pub const DEFAULT_REGISTRY_CAP: usize = 4;
 
-/// Concurrent-serving knobs (`rust/src/serve/`): worker pool width,
-/// micro-batching, admission bound, registry capacity.  Part of the
-/// lossless config surface so a deployment is reproducible from its
-/// config echo, and overridable with `-s serve.*` keys.
+/// How the pool server owns connection I/O.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoMode {
+    /// Thread-per-connection: each worker blocks on one socket at a
+    /// time, so `workers` caps concurrently-open connections.
+    Threads,
+    /// Readiness-polled reactor (`serve::event`): one poller thread
+    /// owns every socket's reads/writes and only decoded requests hit
+    /// the worker pool — idle connections cost ~0 threads.
+    Poll,
+}
+
+impl IoMode {
+    pub fn parse(s: &str) -> Result<IoMode> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "threads" | "thread" => IoMode::Threads,
+            "poll" | "event" => IoMode::Poll,
+            other => bail!("unknown serve.io '{other}' (threads|poll)"),
+        })
+    }
+
+    /// Canonical wire/override key.
+    pub fn key(&self) -> &'static str {
+        match self {
+            IoMode::Threads => "threads",
+            IoMode::Poll => "poll",
+        }
+    }
+
+    /// The default mode, overridable by `LAPQ_SERVE_IO=poll|threads` so
+    /// CI can run the whole serve suite under the reactor (mirroring
+    /// the `LAPQ_KERNEL=scalar` second pass).
+    fn env_default() -> IoMode {
+        match std::env::var("LAPQ_SERVE_IO").as_deref() {
+            Ok("poll") | Ok("event") => IoMode::Poll,
+            _ => IoMode::Threads,
+        }
+    }
+}
+
+/// Concurrent-serving knobs (`rust/src/serve/`): connection I/O mode,
+/// worker pool width, micro-batching lanes, admission bound, registry
+/// capacity.  Part of the lossless config surface so a deployment is
+/// reproducible from its config echo, and overridable with `-s serve.*`
+/// keys.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeCfg {
-    /// Worker threads = max concurrently-served (persistent) connections.
+    /// Connection I/O: blocking thread-per-connection or the
+    /// readiness-polled reactor.
+    pub io: IoMode,
+    /// Worker threads; under `io=threads` also the max
+    /// concurrently-served (persistent) connections.
     pub workers: usize,
     /// Micro-batch coalescing window in milliseconds (0 disables).
     pub batch_window_ms: f64,
@@ -192,16 +237,30 @@ pub struct ServeCfg {
     pub queue_bound: usize,
     /// Packed-model registry (LRU) capacity.
     pub registry_cap: usize,
+    /// Max concurrently-open connections under `io=poll` (excess is
+    /// shed with the typed `overloaded` response).
+    pub max_conns: usize,
+    /// Per-connection output-queue cap in KiB under `io=poll`: a client
+    /// that never reads gets a typed shed + close once its queued
+    /// output would exceed this.
+    pub out_queue_kib: usize,
+    /// Max per-model batcher lanes; hot keys past the cap hash onto an
+    /// existing lane (1 reproduces the single global batcher).
+    pub max_lanes: usize,
 }
 
 impl Default for ServeCfg {
     fn default() -> Self {
         ServeCfg {
+            io: IoMode::env_default(),
             workers: 8,
             batch_window_ms: 2.0,
             max_batch: 16,
             queue_bound: 64,
             registry_cap: DEFAULT_REGISTRY_CAP,
+            max_conns: 4096,
+            out_queue_kib: 256,
+            max_lanes: 4,
         }
     }
 }
@@ -527,6 +586,42 @@ pub const OVERRIDES: &[OverrideSpec] = &[
         },
     },
     OverrideSpec {
+        key: "serve.io",
+        help: "connection I/O mode (threads|poll)",
+        example: "poll",
+        apply: |c, v| {
+            c.serve.io = IoMode::parse(v)?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "serve.max_conns",
+        help: "max open connections under io=poll before shedding",
+        example: "4096",
+        apply: |c, v| {
+            c.serve.max_conns = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "serve.out_queue_kib",
+        help: "per-connection output-queue cap in KiB under io=poll",
+        example: "256",
+        apply: |c, v| {
+            c.serve.out_queue_kib = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "serve.max_lanes",
+        help: "max per-model batcher lanes (1 = single global batcher)",
+        example: "4",
+        apply: |c, v| {
+            c.serve.max_lanes = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
         key: "mixed.enabled",
         help: "per-layer weight bit allocation under a size budget (true|false)",
         example: "true",
@@ -702,6 +797,18 @@ impl ExperimentConfig {
             if let Some(v) = s.get("registry_cap").and_then(|v| v.as_f64()) {
                 cfg.serve.registry_cap = v as usize;
             }
+            if let Some(v) = s.get("io").and_then(|v| v.as_str()) {
+                cfg.serve.io = IoMode::parse(v)?;
+            }
+            if let Some(v) = s.get("max_conns").and_then(|v| v.as_f64()) {
+                cfg.serve.max_conns = v as usize;
+            }
+            if let Some(v) = s.get("out_queue_kib").and_then(|v| v.as_f64()) {
+                cfg.serve.out_queue_kib = v as usize;
+            }
+            if let Some(v) = s.get("max_lanes").and_then(|v| v.as_f64()) {
+                cfg.serve.max_lanes = v as usize;
+            }
         }
         if let Some(m) = j.get("mixed") {
             if let Some(v) = m.get("enabled").and_then(|v| v.as_bool()) {
@@ -776,11 +883,18 @@ impl ExperimentConfig {
             (
                 "serve",
                 Json::obj(vec![
+                    // `io` is always serialized so a config echo pins the
+                    // mode even when it came from the LAPQ_SERVE_IO env
+                    // default.
+                    ("io", Json::Str(self.serve.io.key().into())),
                     ("workers", Json::Num(self.serve.workers as f64)),
                     ("batch_window_ms", Json::Num(self.serve.batch_window_ms)),
                     ("max_batch", Json::Num(self.serve.max_batch as f64)),
                     ("queue_bound", Json::Num(self.serve.queue_bound as f64)),
                     ("registry_cap", Json::Num(self.serve.registry_cap as f64)),
+                    ("max_conns", Json::Num(self.serve.max_conns as f64)),
+                    ("out_queue_kib", Json::Num(self.serve.out_queue_kib as f64)),
+                    ("max_lanes", Json::Num(self.serve.max_lanes as f64)),
                 ]),
             ),
             (
@@ -908,11 +1022,15 @@ mod tests {
     #[test]
     fn json_roundtrip_serve_subconfig() {
         let serve = ServeCfg {
+            io: IoMode::Poll,
             workers: 3,
             batch_window_ms: 7.5,
             max_batch: 11,
             queue_bound: 17,
             registry_cap: 2,
+            max_conns: 123,
+            out_queue_kib: 33,
+            max_lanes: 2,
         };
         let c = ExperimentConfig { serve, ..Default::default() };
         let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
@@ -928,6 +1046,10 @@ mod tests {
             "serve.max_batch=4".into(),
             "serve.queue_bound=9".into(),
             "serve.registry_cap=1".into(),
+            "serve.io=poll".into(),
+            "serve.max_conns=77".into(),
+            "serve.out_queue_kib=16".into(),
+            "serve.max_lanes=3".into(),
         ])
         .unwrap();
         assert_eq!(c.serve.workers, 2);
@@ -935,7 +1057,14 @@ mod tests {
         assert_eq!(c.serve.max_batch, 4);
         assert_eq!(c.serve.queue_bound, 9);
         assert_eq!(c.serve.registry_cap, 1);
+        assert_eq!(c.serve.io, IoMode::Poll);
+        assert_eq!(c.serve.max_conns, 77);
+        assert_eq!(c.serve.out_queue_kib, 16);
+        assert_eq!(c.serve.max_lanes, 3);
         assert!(c.apply_overrides(&["serve.workers=x".into()]).is_err());
+        assert!(c.apply_overrides(&["serve.io=uring".into()]).is_err());
+        c.apply_overrides(&["serve.io=threads".into()]).unwrap();
+        assert_eq!(c.serve.io, IoMode::Threads);
     }
 
     /// The mixed-precision sub-config joins the lossless surface.

@@ -44,10 +44,19 @@ pub const CRC_LEN: usize = 4;
 /// Frame kinds.
 pub const KIND_INFER_REQ: u8 = 1;
 pub const KIND_INFER_REP: u8 = 2;
+/// One chunk of a streamed infer reply (negotiated by
+/// `{"cmd":"hello","wire":"bin1","stream":true}`); the terminal frame
+/// is a regular `KIND_INFER_REP` with empty logits.
+pub const KIND_INFER_CHUNK: u8 = 3;
 
 const DTYPE_F32: u8 = 0;
 const DTYPE_I32: u8 = 1;
 const MAX_NDIM: usize = 8;
+
+/// Tags for the optional trailing request id (absent entirely on
+/// id-less frames, so pre-multiplex payloads decode unchanged).
+const ID_NUM: u8 = 0;
+const ID_STR: u8 = 1;
 
 // -- CRC32 (IEEE 802.3, poly 0xEDB88320) ------------------------------------
 
@@ -134,19 +143,61 @@ fn put_tensor(out: &mut Vec<u8>, shape: &[usize], data: &Data) {
     }
 }
 
+fn put_id(out: &mut Vec<u8>, id: Option<&super::ReqId>) {
+    match id {
+        None => {}
+        Some(super::ReqId::Num(n)) => {
+            out.push(ID_NUM);
+            out.extend_from_slice(&n.to_le_bytes());
+        }
+        Some(super::ReqId::Str(s)) => {
+            out.push(ID_STR);
+            put_str(out, s);
+        }
+    }
+}
+
+/// Read the optional trailing id: only present if payload bytes remain.
+fn read_opt_id(r: &mut ByteReader) -> Result<Option<super::ReqId>, String> {
+    if r.remaining() == 0 {
+        return Ok(None);
+    }
+    match r.u8()? {
+        ID_NUM => Ok(Some(super::ReqId::Num(r.f64()?))),
+        ID_STR => Ok(Some(super::ReqId::Str(r.str()?.to_string()))),
+        other => Err(format!("unknown id tag {other}")),
+    }
+}
+
 /// Encode a complete infer-request frame into `out` (cleared first).
 pub fn encode_infer_request(req: &InferRequest, out: &mut Vec<u8>) {
+    encode_infer_request_id(req, None, out);
+}
+
+/// Infer-request frame with an optional multiplexing id appended.
+pub fn encode_infer_request_id(
+    req: &InferRequest,
+    id: Option<&super::ReqId>,
+    out: &mut Vec<u8>,
+) {
     begin(out, KIND_INFER_REQ);
     put_str(out, &req.key);
     out.push(req.inputs.len() as u8);
     for t in &req.inputs {
         put_tensor(out, &t.shape, &t.data);
     }
+    put_id(out, id);
     finish(out);
 }
 
 /// Encode a complete infer-reply frame into `out` (cleared first).
 pub fn encode_infer_reply(reply: &InferReply, out: &mut Vec<u8>) {
+    encode_infer_reply_id(reply, None, out);
+}
+
+/// Infer-reply frame with the echoed request id appended (absent when
+/// the request carried none, keeping pre-multiplex frames byte-stable).
+pub fn encode_infer_reply_id(reply: &InferReply, id: Option<&super::ReqId>, out: &mut Vec<u8>) {
     begin(out, KIND_INFER_REP);
     put_str(out, &reply.key);
     put_u32(out, reply.rows as u32);
@@ -163,7 +214,67 @@ pub fn encode_infer_reply(reply: &InferReply, out: &mut Vec<u8>) {
     for p in &preds {
         out.extend_from_slice(&p.to_le_bytes());
     }
+    put_id(out, id);
     finish(out);
+}
+
+/// One decoded streamed-reply chunk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferChunk {
+    pub key: String,
+    pub chunk: usize,
+    pub chunks: usize,
+    /// Row-major logits, `[nrows, cols]`.
+    pub logits: Arr,
+    pub preds: Vec<i32>,
+    pub id: Option<super::ReqId>,
+}
+
+/// Encode one streamed-reply chunk: `rows` holds `nrows * cols`
+/// row-major logits of this chunk.
+pub fn encode_infer_chunk(
+    key: &str,
+    chunk: usize,
+    chunks: usize,
+    rows: &[f32],
+    cols: usize,
+    id: Option<&super::ReqId>,
+    out: &mut Vec<u8>,
+) {
+    let c = cols.max(1);
+    begin(out, KIND_INFER_CHUNK);
+    put_str(out, key);
+    put_u32(out, chunk as u32);
+    put_u32(out, chunks as u32);
+    put_tensor_header(out, DTYPE_F32, &[rows.len() / c, c]);
+    for x in rows {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    let preds: Vec<i32> = rows.chunks(c).map(|row| super::predict_row(row) as i32).collect();
+    put_u32(out, preds.len() as u32);
+    for p in &preds {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    put_id(out, id);
+    finish(out);
+}
+
+/// Decode a streamed-reply chunk payload.
+pub fn decode_infer_chunk(payload: &[u8]) -> Result<InferChunk, String> {
+    let mut r = ByteReader::new(payload);
+    let key = r.str()?.to_string();
+    let chunk = r.u32()? as usize;
+    let chunks = r.u32()? as usize;
+    let (dtype, shape, n) = read_shape(&mut r)?;
+    if dtype != DTYPE_F32 {
+        return Err("chunk logits must be f32".into());
+    }
+    let logits = Arr::new(shape, r.f32s(n)?);
+    let npred = r.u32()? as usize;
+    let preds = r.i32s(npred)?;
+    let id = read_opt_id(&mut r)?;
+    r.expect_end()?;
+    Ok(InferChunk { key, chunk, chunks, logits, preds, id })
 }
 
 // -- payload readers ---------------------------------------------------------
@@ -219,6 +330,12 @@ impl<'a> ByteReader<'a> {
         Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
+    /// Unconsumed payload bytes (the optional trailing id is present
+    /// iff this is nonzero after the fixed fields).
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
     /// Every payload byte must be consumed: trailing garbage is corruption.
     pub fn expect_end(&self) -> Result<(), String> {
         if self.i != self.b.len() {
@@ -253,8 +370,16 @@ fn read_tensor(r: &mut ByteReader) -> Result<HostTensor, String> {
     }
 }
 
-/// Decode an infer-request payload (the bytes between header and CRC).
+/// Decode an infer-request payload (the bytes between header and CRC),
+/// dropping any multiplexing id.
 pub fn decode_infer_request(payload: &[u8]) -> Result<InferRequest, String> {
+    Ok(decode_infer_request_id(payload)?.0)
+}
+
+/// Decode an infer-request payload plus its optional trailing id.
+pub fn decode_infer_request_id(
+    payload: &[u8],
+) -> Result<(InferRequest, Option<super::ReqId>), String> {
     let mut r = ByteReader::new(payload);
     let key = r.str()?.to_string();
     let ntensors = r.u8()? as usize;
@@ -262,14 +387,25 @@ pub fn decode_infer_request(payload: &[u8]) -> Result<InferRequest, String> {
     for _ in 0..ntensors {
         inputs.push(read_tensor(&mut r)?);
     }
+    let id = read_opt_id(&mut r)?;
     r.expect_end()?;
-    Ok(InferRequest { key, inputs })
+    Ok((InferRequest { key, inputs }, id))
 }
 
 /// Decode an infer-reply payload; returns the reply plus the
 /// server-computed predictions (the JSON path derives them from the
-/// logits, so clients get the same values either way).
+/// logits, so clients get the same values either way).  Any echoed id
+/// is dropped — see [`decode_infer_reply_id`].
 pub fn decode_infer_reply(payload: &[u8]) -> Result<(InferReply, Vec<i32>), String> {
+    let (reply, preds, _id) = decode_infer_reply_id(payload)?;
+    Ok((reply, preds))
+}
+
+/// Decode an infer-reply payload plus its optional echoed id.
+#[allow(clippy::type_complexity)]
+pub fn decode_infer_reply_id(
+    payload: &[u8],
+) -> Result<(InferReply, Vec<i32>, Option<super::ReqId>), String> {
     let mut r = ByteReader::new(payload);
     let key = r.str()?.to_string();
     let rows = r.u32()? as usize;
@@ -282,8 +418,9 @@ pub fn decode_infer_reply(payload: &[u8]) -> Result<(InferReply, Vec<i32>), Stri
     let logits = Arr::new(shape, r.f32s(n)?);
     let npred = r.u32()? as usize;
     let preds = r.i32s(npred)?;
+    let id = read_opt_id(&mut r)?;
     r.expect_end()?;
-    Ok((InferReply { key, logits, rows, int_layers, seconds }, preds))
+    Ok((InferReply { key, logits, rows, int_layers, seconds }, preds, id))
 }
 
 #[cfg(test)]
@@ -342,6 +479,57 @@ mod tests {
         let want: Vec<u32> = reply.logits.data.iter().map(|v| v.to_bits()).collect();
         assert_eq!(bits, want);
         assert_eq!(preds, vec![1, 1], "argmax per row");
+    }
+
+    #[test]
+    fn request_and_reply_ids_roundtrip() {
+        use crate::proto::ReqId;
+        let req = InferRequest { key: "k".into(), inputs: vec![HostTensor::f32(vec![1], vec![1.0])] };
+        for id in [ReqId::Num(42.0), ReqId::Str("abc-7".into())] {
+            let mut buf = Vec::new();
+            encode_infer_request_id(&req, Some(&id), &mut buf);
+            let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+            let (back, got) = decode_infer_request_id(&buf[HEADER_LEN..HEADER_LEN + len]).unwrap();
+            assert_eq!(back.key, req.key);
+            assert_eq!(got.as_ref(), Some(&id));
+        }
+        let reply = InferReply {
+            key: "k".into(),
+            logits: Arr::new(vec![1, 2], vec![0.5, -0.5]),
+            rows: 1,
+            int_layers: 1,
+            seconds: 0.25,
+        };
+        let mut buf = Vec::new();
+        encode_infer_reply_id(&reply, Some(&ReqId::Str("r1".into())), &mut buf);
+        let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+        let (_, _, id) = decode_infer_reply_id(&buf[HEADER_LEN..HEADER_LEN + len]).unwrap();
+        assert_eq!(id, Some(ReqId::Str("r1".into())));
+        // id-less frames still decode through the tolerant wrappers
+        let mut plain = Vec::new();
+        encode_infer_reply(&reply, &mut plain);
+        let len = u32::from_le_bytes(plain[4..8].try_into().unwrap()) as usize;
+        let (_, _, id) = decode_infer_reply_id(&plain[HEADER_LEN..HEADER_LEN + len]).unwrap();
+        assert_eq!(id, None);
+    }
+
+    #[test]
+    fn chunk_frame_roundtrip() {
+        use crate::proto::ReqId;
+        let rows = vec![0.1f32, 0.9, -1.0, 2.0, 0.0, 0.5];
+        let mut buf = Vec::new();
+        encode_infer_chunk("k", 1, 3, &rows, 2, Some(&ReqId::Num(5.0)), &mut buf);
+        assert_eq!(buf[3], KIND_INFER_CHUNK);
+        let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+        let c = decode_infer_chunk(&buf[HEADER_LEN..HEADER_LEN + len]).unwrap();
+        assert_eq!(c.key, "k");
+        assert_eq!((c.chunk, c.chunks), (1, 3));
+        assert_eq!(c.logits.shape, vec![3, 2]);
+        let bits: Vec<u32> = c.logits.data.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = rows.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, want, "chunk logits are bit-exact");
+        assert_eq!(c.preds, vec![1, 1, 1], "argmax per chunk row");
+        assert_eq!(c.id, Some(ReqId::Num(5.0)));
     }
 
     #[test]

@@ -40,14 +40,41 @@ pub const MAX_FRAME_BYTES: usize = 64 << 20;
 /// The wire value of the shed response's `error` field.
 pub const OVERLOADED: &str = "overloaded";
 
+/// Row threshold past which a stream-negotiated connection gets its
+/// infer reply as chunked frames instead of one monolithic response.
+pub const STREAM_CHUNK_ROWS: usize = 32;
+
+/// An optional client-supplied request id, echoed verbatim on the
+/// response so one connection can multiplex pipelined requests.
+/// Strings and numbers only (anything else is treated as absent).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReqId {
+    Num(f64),
+    Str(String),
+}
+
+impl ReqId {
+    pub fn write_json(&self, out: &mut String) {
+        match self {
+            ReqId::Num(n) => {
+                let _ = json::write_num(out, *n);
+            }
+            ReqId::Str(s) => {
+                let _ = json::write_escaped(out, s);
+            }
+        }
+    }
+}
+
 /// A parsed request — every command both servers accept.
 #[derive(Debug, Clone)]
 pub enum Request {
     Ping,
     Models,
     Metrics,
-    /// Wire negotiation; handled inside the connection loop.
-    Hello { wire: String },
+    /// Wire negotiation; handled inside the connection loop.  `stream`
+    /// opts in to chunked infer replies for large batches.
+    Hello { wire: String, stream: bool },
     Quantize { cfg: Box<ExperimentConfig>, stream: bool },
     Pack { cfg: Box<ExperimentConfig>, po2: bool },
     Infer(InferRequest),
@@ -64,13 +91,23 @@ pub struct InferRequest {
 }
 
 impl Request {
-    /// Parse one JSON line.  `infer` goes through the borrowing reader
-    /// straight into [`InferRequest`] (no `Json` tree); `quantize` /
-    /// `pack` build the owned tree because [`ExperimentConfig`] decodes
-    /// from one (cold path: those jobs run for seconds to minutes).
+    /// Parse one JSON line (discarding any request id) — see
+    /// [`Request::parse_line`] for the id-aware entry point.
     pub fn from_line(line: &str) -> Result<Request> {
+        Ok(Request::parse_line(line)?.0)
+    }
+
+    /// Parse one JSON line plus its optional `"id"` (string or number;
+    /// anything else is treated as absent).  `infer` goes through the
+    /// borrowing reader straight into [`InferRequest`] (no `Json`
+    /// tree); `quantize` / `pack` build the owned tree because
+    /// [`ExperimentConfig`] decodes from one (cold path: those jobs run
+    /// for seconds to minutes).
+    pub fn parse_line(line: &str) -> Result<(Request, Option<ReqId>)> {
         let mut cmd = String::new();
         let mut hello_wire: Option<String> = None;
+        let mut stream_flag = false;
+        let mut id: Option<ReqId> = None;
         let mut r = Reader::new(line);
         let scan = r
             .obj(|r, k| match k {
@@ -82,16 +119,36 @@ impl Request {
                     hello_wire = Some(r.string_cow()?.into_owned());
                     Ok(())
                 }
+                "stream" => {
+                    // peek, then skip: `quantize` re-reads it from the
+                    // owned tree, `hello` wants just the bool.
+                    stream_flag = r.peek() == Some(b't');
+                    r.skip_value(0)
+                }
+                "id" => match r.peek() {
+                    Some(b'"') => {
+                        id = Some(ReqId::Str(r.string_cow()?.into_owned()));
+                        Ok(())
+                    }
+                    Some(c) if c == b'-' || c.is_ascii_digit() => {
+                        id = Some(ReqId::Num(r.number()?));
+                        Ok(())
+                    }
+                    _ => r.skip_value(0),
+                },
                 _ => r.skip_value(0),
             })
             .and_then(|_| r.expect_end());
         scan.map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
-        Ok(match cmd.as_str() {
+        let req = match cmd.as_str() {
             "ping" => Request::Ping,
             "models" => Request::Models,
             "metrics" => Request::Metrics,
             "shutdown" => Request::Shutdown,
-            "hello" => Request::Hello { wire: hello_wire.unwrap_or_else(|| "json".into()) },
+            "hello" => Request::Hello {
+                wire: hello_wire.unwrap_or_else(|| "json".into()),
+                stream: stream_flag,
+            },
             "infer" => Request::Infer(parse_infer(line)?),
             "quantize" => {
                 let req: Json =
@@ -108,7 +165,8 @@ impl Request {
                 Request::Pack { cfg: Box::new(cfg), po2 }
             }
             _ => Request::Unknown { cmd },
-        })
+        };
+        Ok((req, id))
     }
 
     /// Serialize to one JSON line (no trailing newline) — the client
@@ -119,8 +177,14 @@ impl Request {
             Request::Models => out.push_str(r#"{"cmd":"models"}"#),
             Request::Metrics => out.push_str(r#"{"cmd":"metrics"}"#),
             Request::Shutdown => out.push_str(r#"{"cmd":"shutdown"}"#),
-            Request::Hello { wire } => {
-                out.push_str(r#"{"cmd":"hello","wire":"#);
+            Request::Hello { wire, stream } => {
+                // "stream" is omitted when false so pre-streaming hello
+                // lines round-trip byte for byte.
+                out.push_str(r#"{"cmd":"hello","#);
+                if *stream {
+                    out.push_str(r#""stream":true,"#);
+                }
+                out.push_str(r#""wire":"#);
                 let _ = json::write_escaped(out, wire);
                 out.push('}');
             }
@@ -351,7 +415,7 @@ pub enum Response {
     Quantize { result: Json },
     Pack { packed: PackSummary },
     Infer { reply: InferReply },
-    Hello { wire: String },
+    Hello { wire: String, stream: bool },
     Stopping,
     Error { msg: String },
     UnknownCmd { cmd: String },
@@ -409,16 +473,55 @@ impl Response {
     /// caller-reused buffer.  Object keys are alphabetical, matching
     /// the `Json::Obj` (BTreeMap) dumps this replaces byte for byte.
     pub fn write_json(&self, out: &mut String) {
+        self.write_json_id(None, out);
+    }
+
+    /// Like [`Response::write_json`] but echoing the client's request
+    /// id (`"id"` stays in alphabetical key position; with `None` the
+    /// output is byte-identical to the id-less wire format).
+    pub fn write_json_id(&self, id: Option<&ReqId>, out: &mut String) {
+        // "id" sorts after "cmd"/"error" and before every other key the
+        // ok-responses emit, so it lands right after `{` on the ok arms
+        // and right after the error discriminant on the error arms.
+        let put_id_lead = |out: &mut String, id: Option<&ReqId>| {
+            if let Some(id) = id {
+                out.push_str(r#""id":"#);
+                id.write_json(out);
+                out.push(',');
+            }
+        };
+        let put_id_mid = |out: &mut String, id: Option<&ReqId>| {
+            if let Some(id) = id {
+                out.push_str(r#","id":"#);
+                id.write_json(out);
+            }
+        };
         match self {
-            Response::Pong => out.push_str(r#"{"ok":true,"pong":true}"#),
-            Response::Stopping => out.push_str(r#"{"ok":true,"stopping":true}"#),
-            Response::Hello { wire } => {
-                out.push_str(r#"{"ok":true,"wire":"#);
+            Response::Pong => {
+                out.push('{');
+                put_id_lead(out, id);
+                out.push_str(r#""ok":true,"pong":true}"#);
+            }
+            Response::Stopping => {
+                out.push('{');
+                put_id_lead(out, id);
+                out.push_str(r#""ok":true,"stopping":true}"#);
+            }
+            Response::Hello { wire, stream } => {
+                out.push('{');
+                put_id_lead(out, id);
+                out.push_str(r#""ok":true,"#);
+                if *stream {
+                    out.push_str(r#""stream":true,"#);
+                }
+                out.push_str(r#""wire":"#);
                 let _ = json::write_escaped(out, wire);
                 out.push('}');
             }
             Response::Models { models, packs } => {
-                out.push_str(r#"{"models":["#);
+                out.push('{');
+                put_id_lead(out, id);
+                out.push_str(r#""models":["#);
                 for (i, m) in models.iter().enumerate() {
                     if i > 0 {
                         out.push(',');
@@ -448,34 +551,47 @@ impl Response {
                 out.push('}');
             }
             Response::Metrics { metrics } => {
-                let _ = write!(out, r#"{{"metrics":{metrics},"ok":true}}"#);
+                out.push('{');
+                put_id_lead(out, id);
+                let _ = write!(out, r#""metrics":{metrics},"ok":true}}"#);
             }
             Response::Quantize { result } => {
-                let _ = write!(out, r#"{{"ok":true,"result":{result}}}"#);
+                out.push('{');
+                put_id_lead(out, id);
+                let _ = write!(out, r#""ok":true,"result":{result}}}"#);
             }
-            Response::Pack { packed } => write_pack(packed, out),
-            Response::Infer { reply } => write_infer_reply(reply, out),
+            Response::Pack { packed } => {
+                out.push('{');
+                put_id_lead(out, id);
+                write_pack(packed, out);
+            }
+            Response::Infer { reply } => {
+                out.push('{');
+                put_id_lead(out, id);
+                write_infer_reply(reply, out);
+            }
             Response::Error { msg } => {
                 out.push_str(r#"{"error":"#);
                 let _ = json::write_escaped(out, msg);
+                put_id_mid(out, id);
                 out.push_str(r#","ok":false}"#);
             }
             Response::UnknownCmd { cmd } => {
                 out.push_str(r#"{"cmd":"#);
                 let _ = json::write_escaped(out, cmd);
-                out.push_str(r#","error":"unknown_cmd","ok":false}"#);
+                out.push_str(r#","error":"unknown_cmd""#);
+                put_id_mid(out, id);
+                out.push_str(r#","ok":false}"#);
             }
             Response::TooLarge { limit_bytes } => {
-                let _ = write!(
-                    out,
-                    r#"{{"error":"too_large","limit_bytes":{limit_bytes},"ok":false}}"#
-                );
+                out.push_str(r#"{"error":"too_large""#);
+                put_id_mid(out, id);
+                let _ = write!(out, r#","limit_bytes":{limit_bytes},"ok":false}}"#);
             }
             Response::Overloaded { retry_after_ms } => {
-                let _ = write!(
-                    out,
-                    r#"{{"error":"overloaded","ok":false,"retry_after_ms":{retry_after_ms}}}"#
-                );
+                out.push_str(r#"{"error":"overloaded""#);
+                put_id_mid(out, id);
+                let _ = write!(out, r#","ok":false,"retry_after_ms":{retry_after_ms}}}"#);
             }
         }
     }
@@ -508,7 +624,10 @@ impl Response {
         } else if j.get("stopping").is_some() {
             Ok(Response::Stopping)
         } else if let Some(w) = j.get("wire") {
-            Ok(Response::Hello { wire: w.as_str().unwrap_or_default().to_string() })
+            Ok(Response::Hello {
+                wire: w.as_str().unwrap_or_default().to_string(),
+                stream: j.get("stream").and_then(|v| v.as_bool()).unwrap_or(false),
+            })
         } else if let Some(m) = j.get("models") {
             let models = m
                 .as_arr()
@@ -556,9 +675,10 @@ impl Response {
     }
 }
 
-/// `{"ok":true,"packed":{...}}` — keys alphabetical.
+/// `"ok":true,"packed":{...}}` — keys alphabetical; the caller has
+/// already opened the object (and possibly written `"id"`).
 fn write_pack(s: &PackSummary, out: &mut String) {
-    out.push_str(r#"{"ok":true,"packed":{"bits":"#);
+    out.push_str(r#""ok":true,"packed":{"bits":"#);
     let _ = json::write_escaped(out, &s.bits_label);
     let _ = write!(out, r#","f32_bytes":{}"#, s.f32_bytes);
     out.push_str(r#","fp32_metric":"#);
@@ -589,12 +709,13 @@ fn write_pack(s: &PackSummary, out: &mut String) {
     out.push_str("}}");
 }
 
-/// `{"ok":true,"result":{...}}` for infer — keys alphabetical
+/// `"ok":true,"result":{...}}` for infer — keys alphabetical
 /// (`int_layers`, `key`, `logits`, `predictions`, `rows`, `seconds`),
 /// written straight into the reusable buffer: no `Json` tree per reply.
+/// The caller has already opened the object.
 fn write_infer_reply(reply: &InferReply, out: &mut String) {
     let c = reply.logits.last_dim().max(1);
-    let _ = write!(out, r#"{{"ok":true,"result":{{"int_layers":{}"#, reply.int_layers);
+    let _ = write!(out, r#""ok":true,"result":{{"int_layers":{}"#, reply.int_layers);
     out.push_str(r#","key":"#);
     let _ = json::write_escaped(out, &reply.key);
     out.push_str(r#","logits":["#);
@@ -616,6 +737,64 @@ fn write_infer_reply(reply: &InferReply, out: &mut String) {
     let _ = write!(out, r#"],"rows":{},"seconds":"#, reply.rows);
     let _ = json::write_num(out, reply.seconds);
     out.push_str("}}");
+}
+
+/// One chunk of a streamed infer reply, mirroring the quantize
+/// `{"event":...}` stream: no `"ok"` key (the final frame carries it),
+/// keys alphabetical (`chunk`, `chunks`, `id?`, `key`, `logits`,
+/// `predictions`).  `rows` holds `nrows * cols` row-major logits.
+pub fn write_infer_chunk_json(
+    key: &str,
+    chunk: usize,
+    chunks: usize,
+    rows: &[f32],
+    cols: usize,
+    id: Option<&ReqId>,
+    out: &mut String,
+) {
+    let c = cols.max(1);
+    let _ = write!(out, r#"{{"chunk":{chunk},"chunks":{chunks}"#);
+    if let Some(id) = id {
+        out.push_str(r#","id":"#);
+        id.write_json(out);
+    }
+    out.push_str(r#","key":"#);
+    let _ = json::write_escaped(out, key);
+    out.push_str(r#","logits":["#);
+    let mut preds: Vec<i64> = Vec::with_capacity(rows.len() / c + 1);
+    for (i, row) in rows.chunks(c).enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        write_f32_arr(row, out);
+        preds.push(predict_row(row));
+    }
+    out.push_str(r#"],"predictions":["#);
+    for (i, p) in preds.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{p}");
+    }
+    out.push_str("]}");
+}
+
+/// The terminal frame of a streamed infer reply: the usual
+/// `{"ok":true,"result":{...}}` envelope minus the logits (already
+/// streamed), with `"streamed":true` marking the shape.
+pub fn write_infer_final_json(reply: &InferReply, id: Option<&ReqId>, out: &mut String) {
+    out.push('{');
+    if let Some(id) = id {
+        out.push_str(r#""id":"#);
+        id.write_json(out);
+        out.push(',');
+    }
+    let _ = write!(out, r#""ok":true,"result":{{"int_layers":{}"#, reply.int_layers);
+    out.push_str(r#","key":"#);
+    let _ = json::write_escaped(out, &reply.key);
+    let _ = write!(out, r#","rows":{},"seconds":"#, reply.rows);
+    let _ = json::write_num(out, reply.seconds);
+    out.push_str(r#","streamed":true}}"#);
 }
 
 fn pack_from_json(p: &Json) -> PackSummary {

@@ -14,9 +14,10 @@
 //! without reading it, which is exactly the OOM this cap prevents).
 
 use super::frame;
-use super::{Request, Response, MAX_FRAME_BYTES, MAX_LINE_BYTES};
+use super::{ReqId, Request, Response, MAX_FRAME_BYTES, MAX_LINE_BYTES};
 use crate::coordinator::jobs::InferReply;
 use crate::coordinator::metrics;
+use crate::runtime::cpu::ops::Arr;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
@@ -159,6 +160,126 @@ impl<R: Read> WireReader<R> {
     }
 }
 
+/// One unit decoded by [`FeedDecoder::next`].
+pub enum Feed {
+    /// A complete JSON line (no terminator, `\r` stripped).
+    Line(String),
+    /// A CRC-verified bin1 frame.
+    Frame { kind: u8, payload: Vec<u8> },
+    /// The line/frame exceeded its cap; reply `too_large`, then close.
+    TooLarge { limit_bytes: usize },
+    /// Undecodable input — reply, then close (no resync possible).
+    Corrupt(String),
+    /// Nothing complete buffered yet; push more bytes.
+    More,
+}
+
+/// Push-based twin of [`WireReader`] for the nonblocking reactor: the
+/// event loop feeds whatever bytes the socket had, and pulls complete
+/// lines/frames out — same grammar, same caps, same corruption rules as
+/// the blocking path, so the two I/O modes cannot drift on framing.
+#[derive(Default)]
+pub struct FeedDecoder {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl FeedDecoder {
+    pub fn new() -> FeedDecoder {
+        FeedDecoder::default()
+    }
+
+    /// Append bytes read from the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet decoded.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn compact(&mut self) {
+        // Reclaim consumed prefix once it dominates the buffer; amortized
+        // O(1) per byte.
+        if self.pos > 64 * 1024 && self.pos * 2 >= self.buf.len() {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+
+    /// Decode the next complete unit, or report why there is none.
+    /// After `TooLarge`/`Corrupt` the stream cannot be resynchronized —
+    /// the caller replies and closes, exactly like the blocking path.
+    pub fn next(&mut self) -> Feed {
+        self.compact();
+        let avail = &self.buf[self.pos..];
+        let Some(&first) = avail.first() else {
+            return Feed::More;
+        };
+        if first == frame::MARKER {
+            self.next_frame()
+        } else {
+            self.next_line()
+        }
+    }
+
+    fn next_line(&mut self) -> Feed {
+        let avail = &self.buf[self.pos..];
+        let Some(p) = avail.iter().position(|&b| b == b'\n') else {
+            if avail.len() > MAX_LINE_BYTES {
+                return Feed::TooLarge { limit_bytes: MAX_LINE_BYTES };
+            }
+            return Feed::More;
+        };
+        let mut line = &avail[..p];
+        if line.last() == Some(&b'\r') {
+            line = &line[..line.len() - 1];
+        }
+        if line.len() > MAX_LINE_BYTES {
+            return Feed::TooLarge { limit_bytes: MAX_LINE_BYTES };
+        }
+        let Ok(text) = std::str::from_utf8(line) else {
+            return Feed::Corrupt("request line is not UTF-8".into());
+        };
+        let text = text.to_string();
+        self.pos += p + 1;
+        Feed::Line(text)
+    }
+
+    fn next_frame(&mut self) -> Feed {
+        let avail = &self.buf[self.pos..];
+        if avail.len() < frame::HEADER_LEN {
+            return Feed::More;
+        }
+        if avail[0] != frame::MARKER || avail[1] != frame::MAGIC2 {
+            return Feed::Corrupt("bad frame magic".into());
+        }
+        if avail[2] != frame::VERSION {
+            return Feed::Corrupt(format!("unsupported frame version {}", avail[2]));
+        }
+        let kind = avail[3];
+        let len = u32::from_le_bytes(avail[4..8].try_into().unwrap()) as usize;
+        // The cap is enforced from the header alone, before buffering
+        // the body — an attacker cannot make the reactor hold 64 MB.
+        if len > MAX_FRAME_BYTES {
+            return Feed::TooLarge { limit_bytes: MAX_FRAME_BYTES };
+        }
+        let total = frame::HEADER_LEN + len + frame::CRC_LEN;
+        if avail.len() < total {
+            return Feed::More;
+        }
+        let payload = &avail[frame::HEADER_LEN..frame::HEADER_LEN + len];
+        let crc = u32::from_le_bytes(avail[frame::HEADER_LEN + len..total].try_into().unwrap());
+        if crc != frame::crc32(payload) {
+            return Feed::Corrupt("frame crc mismatch".into());
+        }
+        let payload = payload.to_vec();
+        self.pos += total;
+        Feed::Frame { kind, payload }
+    }
+}
+
 /// Serve one connection to EOF (or `budget` requests): the loop both
 /// servers run.  `handle` turns a parsed [`Request`] into a
 /// [`Response`]; the raw writer it also receives is for mid-request
@@ -180,34 +301,49 @@ where
     };
     let mut reader = WireReader::new(stream);
     let mut mode = WireMode::Json;
+    let mut stream_replies = false;
     // Reused across the connection: the JSON response text and the bin1
     // frame bytes — zero steady-state allocation on the reply path.
     let mut out = String::new();
     let mut bin: Vec<u8> = Vec::new();
     let mut handled = 0usize;
     while handled < budget {
-        let (resp, fatal) = match reader.next() {
+        let (resp, id, fatal) = match reader.next() {
             Incoming::Eof => break,
-            Incoming::TooLarge { limit_bytes } => (Response::TooLarge { limit_bytes }, true),
-            Incoming::Corrupt(msg) => (Response::error(msg), true),
+            Incoming::TooLarge { limit_bytes } => (Response::TooLarge { limit_bytes }, None, true),
+            Incoming::Corrupt(msg) => (Response::error(msg), None, true),
             Incoming::Line => {
                 if reader.line().trim().is_empty() {
                     continue;
                 }
                 metrics::inc("service_requests");
-                let resp = dispatch_caught(reader.line(), None, &mut mode, &mut handle, &mut writer);
-                (resp, false)
+                let (resp, id) = dispatch_caught(
+                    reader.line(),
+                    None,
+                    &mut mode,
+                    &mut stream_replies,
+                    &mut handle,
+                    &mut writer,
+                );
+                (resp, id, false)
             }
             Incoming::Frame(kind) => {
                 metrics::inc("service_requests");
-                let resp = if mode != WireMode::Bin1 {
-                    Response::error("binary frame before a successful hello/bin1 handshake")
+                let (resp, id) = if mode != WireMode::Bin1 {
+                    (Response::error("binary frame before a successful hello/bin1 handshake"), None)
                 } else if kind != frame::KIND_INFER_REQ {
-                    Response::error(format!("unexpected frame kind {kind}"))
+                    (Response::error(format!("unexpected frame kind {kind}")), None)
                 } else {
-                    dispatch_caught("", Some(reader.payload()), &mut mode, &mut handle, &mut writer)
+                    dispatch_caught(
+                        "",
+                        Some(reader.payload()),
+                        &mut mode,
+                        &mut stream_replies,
+                        &mut handle,
+                        &mut writer,
+                    )
                 };
-                (resp, false)
+                (resp, id, false)
             }
         };
         if matches!(
@@ -216,7 +352,16 @@ where
         ) {
             metrics::inc("service_errors");
         }
-        if let Err(e) = write_response(&mut writer, &resp, mode, &mut out, &mut bin) {
+        let wrote = write_response_ex(
+            &mut writer,
+            &resp,
+            mode,
+            stream_replies,
+            id.as_ref(),
+            &mut out,
+            &mut bin,
+        );
+        if let Err(e) = wrote {
             log::warn!("conn {peer}: write failed: {e}");
             break;
         }
@@ -228,6 +373,29 @@ where
     handled
 }
 
+/// The `hello` handshake both I/O paths share: mutates the negotiated
+/// mode/stream flags and answers with the matching [`Response::Hello`].
+pub(crate) fn negotiate(
+    wire: &str,
+    want_stream: bool,
+    mode: &mut WireMode,
+    stream: &mut bool,
+) -> Response {
+    match wire {
+        "bin1" => {
+            *mode = WireMode::Bin1;
+            *stream = want_stream;
+            Response::Hello { wire: "bin1".into(), stream: want_stream }
+        }
+        "json" => {
+            *mode = WireMode::Json;
+            *stream = want_stream;
+            Response::Hello { wire: "json".into(), stream: want_stream }
+        }
+        other => Response::error(format!("unknown wire '{other}' (want json or bin1)")),
+    }
+}
+
 /// Parse + handle under one `catch_unwind`: a panic anywhere in the
 /// request path becomes a structured error, and the connection (and
 /// server) keep going.
@@ -235,63 +403,98 @@ fn dispatch_caught<F>(
     line: &str,
     frame_payload: Option<&[u8]>,
     mode: &mut WireMode,
+    stream: &mut bool,
     handle: &mut F,
     writer: &mut TcpStream,
-) -> Response
+) -> (Response, Option<ReqId>)
 where
     F: FnMut(Request, &mut dyn Write) -> Response,
 {
     let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        let req = match frame_payload {
-            Some(payload) => match frame::decode_infer_request(payload) {
-                Ok(ir) => Request::Infer(ir),
-                Err(e) => return Response::error(format!("bad frame: {e}")),
+        let (req, id) = match frame_payload {
+            Some(payload) => match frame::decode_infer_request_id(payload) {
+                Ok((ir, id)) => (Request::Infer(ir), id),
+                Err(e) => return (Response::error(format!("bad frame: {e}")), None),
             },
-            None => match Request::from_line(line) {
-                Ok(r) => r,
-                Err(e) => return Response::error(format!("{e:#}")),
+            None => match Request::parse_line(line) {
+                Ok(pair) => pair,
+                Err(e) => return (Response::error(format!("{e:#}")), None),
             },
         };
-        if let Request::Hello { wire } = &req {
-            return match wire.as_str() {
-                "bin1" => {
-                    *mode = WireMode::Bin1;
-                    Response::Hello { wire: "bin1".into() }
-                }
-                "json" => {
-                    *mode = WireMode::Json;
-                    Response::Hello { wire: "json".into() }
-                }
-                other => Response::error(format!("unknown wire '{other}' (want json or bin1)")),
-            };
+        if let Request::Hello { wire, stream: want_stream } = &req {
+            return (negotiate(wire, *want_stream, mode, stream), id);
         }
-        handle(req, writer)
+        (handle(req, writer), id)
     }));
     match caught {
-        Ok(resp) => resp,
-        Err(p) => Response::error(format!("internal panic: {}", panic_text(p.as_ref()))),
+        Ok(pair) => pair,
+        Err(p) => (Response::error(format!("internal panic: {}", panic_text(p.as_ref()))), None),
     }
 }
 
-/// Write one response in the negotiated encoding.  Only a successful
-/// infer reply is ever framed; everything else (including every error)
-/// is a JSON line in both modes.
-fn write_response(
+/// Write one response in the negotiated encoding, echoing the request
+/// id.  Only a successful infer reply is ever framed; everything else
+/// (including every error) is a JSON line in both modes.  With `stream`
+/// negotiated, an infer reply larger than
+/// [`super::STREAM_CHUNK_ROWS`] rows goes out as chunk frames (JSON
+/// lines or `KIND_INFER_CHUNK`) followed by a logits-free terminal
+/// response — chunk contents are bit-identical to the monolithic reply
+/// by construction (same floats, same writers).
+pub fn write_response_ex(
     w: &mut dyn Write,
     resp: &Response,
     mode: WireMode,
+    stream: bool,
+    id: Option<&ReqId>,
     out: &mut String,
     bin: &mut Vec<u8>,
 ) -> std::io::Result<()> {
-    if mode == WireMode::Bin1 {
-        if let Response::Infer { reply } = resp {
-            frame::encode_infer_reply(reply, bin);
+    if let Response::Infer { reply } = resp {
+        let cols = reply.logits.last_dim().max(1);
+        let nrows = reply.logits.data.len() / cols;
+        if stream && nrows > super::STREAM_CHUNK_ROWS {
+            let per = cols * super::STREAM_CHUNK_ROWS;
+            let chunks = nrows.div_ceil(super::STREAM_CHUNK_ROWS);
+            for (i, rows) in reply.logits.data.chunks(per).enumerate() {
+                if mode == WireMode::Bin1 {
+                    frame::encode_infer_chunk(&reply.key, i, chunks, rows, cols, id, bin);
+                    w.write_all(bin)?;
+                } else {
+                    out.clear();
+                    super::write_infer_chunk_json(&reply.key, i, chunks, rows, cols, id, out);
+                    out.push('\n');
+                    w.write_all(out.as_bytes())?;
+                }
+                // flush per chunk: the point of streaming is that early
+                // rows reach the client before late rows are serialized
+                w.flush()?;
+            }
+            if mode == WireMode::Bin1 {
+                let fin = InferReply {
+                    key: reply.key.clone(),
+                    logits: Arr::new(vec![0, cols], Vec::new()),
+                    rows: reply.rows,
+                    int_layers: reply.int_layers,
+                    seconds: reply.seconds,
+                };
+                frame::encode_infer_reply_id(&fin, id, bin);
+                w.write_all(bin)?;
+            } else {
+                out.clear();
+                super::write_infer_final_json(reply, id, out);
+                out.push('\n');
+                w.write_all(out.as_bytes())?;
+            }
+            return w.flush();
+        }
+        if mode == WireMode::Bin1 {
+            frame::encode_infer_reply_id(reply, id, bin);
             w.write_all(bin)?;
             return w.flush();
         }
     }
     out.clear();
-    resp.write_json(out);
+    resp.write_json_id(id, out);
     out.push('\n');
     w.write_all(out.as_bytes())?;
     w.flush()
@@ -347,9 +550,17 @@ impl Client {
 
     /// Negotiate bin1 on this connection.
     pub fn hello_bin1(&mut self) -> Result<()> {
-        let resp = self.call(&Request::Hello { wire: "bin1".into() })?;
-        if resp.get("wire").and_then(|v| v.as_str()) != Some("bin1") {
+        self.hello_opts("bin1", false)
+    }
+
+    /// Negotiate wire + streaming on this connection.
+    pub fn hello_opts(&mut self, wire: &str, stream: bool) -> Result<()> {
+        let resp = self.call(&Request::Hello { wire: wire.into(), stream })?;
+        if resp.get("wire").and_then(|v| v.as_str()) != Some(wire) {
             anyhow::bail!("handshake refused: {resp:?}");
+        }
+        if stream && resp.get("stream").and_then(|v| v.as_bool()) != Some(true) {
+            anyhow::bail!("stream negotiation refused: {resp:?}");
         }
         Ok(())
     }
@@ -383,6 +594,65 @@ impl Client {
             Incoming::Eof => anyhow::bail!("connection closed"),
             Incoming::TooLarge { .. } => anyhow::bail!("oversized response"),
             Incoming::Corrupt(e) => anyhow::bail!("corrupt response: {e}"),
+        }
+    }
+
+    /// Streamed framed infer: send one request (optionally with a
+    /// multiplexing id), collect `KIND_INFER_CHUNK` frames until the
+    /// terminal `KIND_INFER_REP`, and reassemble the full reply.
+    /// Returns the reply, the concatenated predictions, and the raw
+    /// chunks (so tests can pin the chunking itself).
+    #[allow(clippy::type_complexity)]
+    pub fn infer_bin_stream(
+        &mut self,
+        req: &super::InferRequest,
+        id: Option<&ReqId>,
+    ) -> Result<(InferReply, Vec<i32>, Vec<frame::InferChunk>)> {
+        let mut buf = Vec::new();
+        frame::encode_infer_request_id(req, id, &mut buf);
+        self.writer.write_all(&buf)?;
+        self.writer.flush()?;
+        let mut chunks: Vec<frame::InferChunk> = Vec::new();
+        loop {
+            match self.reader.next() {
+                Incoming::Frame(frame::KIND_INFER_CHUNK) => {
+                    let c = frame::decode_infer_chunk(self.reader.payload())
+                        .map_err(|e| anyhow::anyhow!("bad chunk frame: {e}"))?;
+                    chunks.push(c);
+                }
+                Incoming::Frame(frame::KIND_INFER_REP) => {
+                    let (mut reply, mut preds, _id) =
+                        frame::decode_infer_reply_id(self.reader.payload())
+                            .map_err(|e| anyhow::anyhow!("bad reply frame: {e}"))?;
+                    if !chunks.is_empty() {
+                        let cols = chunks[0].logits.last_dim().max(1);
+                        let mut data = Vec::new();
+                        let mut all = Vec::new();
+                        for c in &chunks {
+                            data.extend_from_slice(&c.logits.data);
+                            all.extend_from_slice(&c.preds);
+                        }
+                        reply.logits = Arr::new(vec![data.len() / cols, cols], data);
+                        preds = all;
+                    }
+                    return Ok((reply, preds, chunks));
+                }
+                Incoming::Frame(k) => anyhow::bail!("unexpected frame kind {k}"),
+                Incoming::Line => {
+                    let j: Json = self
+                        .reader
+                        .line()
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+                    anyhow::bail!(
+                        "infer failed: {}",
+                        j.get("error").and_then(|v| v.as_str()).unwrap_or("unknown error")
+                    )
+                }
+                Incoming::Eof => anyhow::bail!("connection closed"),
+                Incoming::TooLarge { .. } => anyhow::bail!("oversized response"),
+                Incoming::Corrupt(e) => anyhow::bail!("corrupt response: {e}"),
+            }
         }
     }
 }

@@ -55,13 +55,33 @@ impl Batcher {
         cfg: &ServeCfg,
         active_conns: Arc<AtomicUsize>,
     ) -> Result<Batcher> {
+        Batcher::start_named(
+            eng,
+            registry,
+            cfg,
+            active_conns,
+            "serve_infer_queue_depth",
+            "serve-batcher".into(),
+        )
+    }
+
+    /// [`Batcher::start`] with explicit gauge/thread names, so
+    /// per-model lanes ([`super::lanes::LaneSet`]) each publish their
+    /// own queue depth instead of fighting over one metric.
+    pub fn start_named(
+        eng: EngineHandle,
+        registry: Arc<ModelRegistry>,
+        cfg: &ServeCfg,
+        active_conns: Arc<AtomicUsize>,
+        gauge: &'static str,
+        thread_name: String,
+    ) -> Result<Batcher> {
         // The same depth-tracked bounded queue the accept loop uses.
-        let (queue, rx) =
-            admission::bounded::<InferJob>(cfg.queue_bound.max(1), "serve_infer_queue_depth");
+        let (queue, rx) = admission::bounded::<InferJob>(cfg.queue_bound.max(1), gauge);
         let window = Duration::from_secs_f64(cfg.batch_window_ms.max(0.0) / 1e3);
         let max_batch = cfg.max_batch.max(1);
         let thread = std::thread::Builder::new()
-            .name("serve-batcher".into())
+            .name(thread_name)
             .spawn(move || run(eng, registry, window, max_batch, active_conns, rx))
             .context("spawning batcher thread")?;
         Ok(Batcher { queue: Some(queue), thread: Some(thread) })

@@ -1,0 +1,235 @@
+//! Per-connection state for the reactor: the push-based decoder, the
+//! queue of decoded-but-undispatched inputs, and the cursor-tracked
+//! output buffer that makes partial `write(2)`s safe.
+//!
+//! The output buffer is the nonblocking twin of `write_all`: a short
+//! write advances a cursor and the remainder stays queued for the next
+//! `POLLOUT`, so a response is delivered whole or the connection dies —
+//! never silently truncated.  Workers append through [`ConnWriter`]
+//! (behind the mutex), the reactor alone writes to the socket.
+//!
+//! Two offsets guard the bytes:
+//!
+//! * `committed` — end of the last *complete* response (or stream
+//!   chunk): [`ConnWriter::flush`] is the commit point, mirroring the
+//!   per-response / per-chunk `flush()` calls in
+//!   [`crate::proto::wire::write_response_ex`].  The reactor flushes
+//!   only committed bytes, so a half-serialized response never reaches
+//!   the socket.
+//! * `cursor` — how far the socket has accepted committed bytes.
+//!
+//! Backpressure: once a connection buffers `cap` bytes the writer
+//! latches `overflowed` and refuses further appends (the uncommitted
+//! tail is rolled back to the last response boundary).  The reactor
+//! then sheds the connection with the typed `overloaded` line — the
+//! never-reading-client defense, pinned by `tests/event_serve.rs`.
+
+use crate::proto::wire::{FeedDecoder, WireMode};
+use crate::proto::{ReqId, Request, Response};
+use std::collections::VecDeque;
+use std::io::{self, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Queued output for one connection.
+pub struct OutBuf {
+    buf: Vec<u8>,
+    /// Bytes before `cursor` have been accepted by the socket.
+    cursor: usize,
+    /// Bytes before `committed` form complete responses/chunks; only
+    /// these are eligible for the socket.
+    committed: usize,
+    /// Backpressure cap on buffered-but-unsent bytes (soft: a single
+    /// response may finish past it; the *next* append overflows).
+    cap: usize,
+    /// Latched on overflow; every later append is refused.
+    pub overflowed: bool,
+}
+
+impl OutBuf {
+    pub fn new(cap: usize) -> OutBuf {
+        OutBuf { buf: Vec::new(), cursor: 0, committed: 0, cap: cap.max(1), overflowed: false }
+    }
+
+    /// Committed bytes the socket has not accepted yet.
+    pub fn flushable(&self) -> usize {
+        self.committed - self.cursor
+    }
+
+    /// Everything buffered past the socket cursor (committed or not).
+    fn buffered(&self) -> usize {
+        self.buf.len() - self.cursor
+    }
+
+    /// True once every committed byte reached the socket and nothing
+    /// uncommitted is pending behind it.
+    pub fn is_drained(&self) -> bool {
+        self.cursor == self.buf.len()
+    }
+
+    /// Append a complete, already-serialized line past the cap check:
+    /// the overflow shed notice must go out even though the queue is
+    /// full by definition when it is needed.
+    pub fn force_committed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+        self.committed = self.buf.len();
+    }
+
+    /// Reclaim consumed prefix; amortized O(1) per byte.
+    fn reclaim(&mut self) {
+        if self.cursor == self.buf.len() {
+            self.buf.clear();
+            self.cursor = 0;
+            self.committed = 0;
+        } else if self.cursor > 64 * 1024 {
+            self.buf.drain(..self.cursor);
+            self.committed -= self.cursor;
+            self.cursor = 0;
+        }
+    }
+}
+
+fn lock(out: &Mutex<OutBuf>) -> MutexGuard<'_, OutBuf> {
+    out.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// The `Write` handle workers (and mid-request stream observers) use:
+/// appends under the mutex, commits on `flush`, and wakes the reactor
+/// so committed bytes leave promptly.
+pub struct ConnWriter {
+    pub out: Arc<Mutex<OutBuf>>,
+    pub waker: Arc<poll_shim::WakePipe>,
+}
+
+impl Write for ConnWriter {
+    fn write(&mut self, bytes: &[u8]) -> io::Result<usize> {
+        let mut o = lock(&self.out);
+        if o.overflowed || o.buffered() >= o.cap {
+            // Roll the uncommitted tail back to the last response
+            // boundary so the shed line lands on a clean frame edge.
+            let committed = o.committed;
+            o.buf.truncate(committed);
+            o.overflowed = true;
+            return Err(io::Error::new(
+                io::ErrorKind::BrokenPipe,
+                "output queue overflow (client not reading)",
+            ));
+        }
+        o.buf.extend_from_slice(bytes);
+        Ok(bytes.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        {
+            let mut o = lock(&self.out);
+            o.committed = o.buf.len();
+        }
+        self.waker.wake();
+        Ok(())
+    }
+}
+
+/// One decoded unit waiting for in-order dispatch.  Dispatch order is
+/// what keeps pipelined `hello` negotiation and response ordering
+/// byte-identical to the blocking path: nothing here is interpreted
+/// until everything before it has been.
+pub enum Pending {
+    /// A complete JSON line (may still fail to parse — at dispatch
+    /// time, under the current negotiated mode).
+    Line(String),
+    /// A CRC-verified bin1 frame.
+    Frame { kind: u8, payload: Vec<u8> },
+    /// Reader-level failure (`too_large` / corrupt): write the typed
+    /// response, then close — same as the blocking path's fatal exits.
+    Fatal(Response),
+}
+
+/// A request handed to the worker pool, with everything needed to
+/// serialize its response without touching the reactor's state.
+pub struct WorkItem {
+    pub slot: usize,
+    pub gen: u64,
+    pub req: Request,
+    pub id: Option<ReqId>,
+    pub mode: WireMode,
+    pub stream: bool,
+    pub out: Arc<Mutex<OutBuf>>,
+}
+
+/// One reactor-owned connection.
+pub struct Conn {
+    pub sock: TcpStream,
+    pub peer: String,
+    /// Generation of this slot: stale completions (for a conn that died
+    /// and whose slot was reused) are ignored by comparing this.
+    pub gen: u64,
+    pub decoder: FeedDecoder,
+    pub pending: VecDeque<Pending>,
+    pub out: Arc<Mutex<OutBuf>>,
+    pub mode: WireMode,
+    pub stream_replies: bool,
+    /// One request in flight per connection (response-order guarantee).
+    pub busy: bool,
+    /// Client half-closed (EOF) or input abandoned (fatal/drain).
+    pub read_closed: bool,
+    /// Flush what is queued, then close (fatal reply or overflow shed).
+    pub close_after_flush: bool,
+}
+
+impl Conn {
+    pub fn new(sock: TcpStream, peer: String, gen: u64, out_cap: usize) -> Conn {
+        Conn {
+            sock,
+            peer,
+            gen,
+            decoder: FeedDecoder::new(),
+            pending: VecDeque::new(),
+            out: Arc::new(Mutex::new(OutBuf::new(out_cap))),
+            mode: WireMode::Json,
+            stream_replies: false,
+            busy: false,
+            read_closed: false,
+            close_after_flush: false,
+        }
+    }
+
+    /// Committed-but-unsent bytes (drives `POLLOUT` registration).
+    pub fn out_flushable(&self) -> usize {
+        lock(&self.out).flushable()
+    }
+
+    /// The writer latched overflow: this client is not reading.
+    pub fn out_overflowed(&self) -> bool {
+        lock(&self.out).overflowed
+    }
+
+    /// Append a complete response line past the cap (the shed notice).
+    pub fn force_line(&mut self, bytes: &[u8]) {
+        lock(&self.out).force_committed(bytes);
+    }
+
+    /// Push committed bytes into the socket until it would block.
+    /// `Ok(true)` means everything queued (committed *and* pending
+    /// serialization) is on the wire.
+    pub fn flush(&mut self) -> io::Result<bool> {
+        let mut o = lock(&self.out);
+        while o.cursor < o.committed {
+            match self.sock.write(&o.buf[o.cursor..o.committed]) {
+                Ok(0) => {
+                    return Err(io::Error::new(io::ErrorKind::WriteZero, "socket wrote zero"))
+                }
+                Ok(n) => o.cursor += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e),
+            }
+        }
+        o.reclaim();
+        Ok(o.is_drained())
+    }
+
+    /// Nothing left to do for this connection (used by drain/close).
+    pub fn is_idle(&self) -> bool {
+        !self.busy && self.pending.is_empty()
+    }
+}

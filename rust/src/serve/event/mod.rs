@@ -1,0 +1,38 @@
+//! The readiness-polled serving transport (`serve.io = poll`): one
+//! reactor thread owns every socket, a small worker pool runs the
+//! requests, and idle connections cost nothing but an fd.
+//!
+//! Layout:
+//!
+//! * [`conn`] — per-connection state: the push-based
+//!   [`crate::proto::wire::FeedDecoder`], the decoded-but-undispatched
+//!   queue, and the cursor-tracked output buffer whose partial writes
+//!   make short `write(2)`s queue remainders instead of truncating.
+//! * [`reactor`] — the poll loop itself: nonblocking accept, reads,
+//!   decode, in-order dispatch to the worker queue, opportunistic and
+//!   `POLLOUT`-driven flushing, backpressure shedding, graceful drain.
+//!
+//! The contract with the `threads` transport is **byte identity**: both
+//! modes parse with the same grammar, dispatch through
+//! [`super::pool::dispatch`], and serialize through
+//! [`crate::proto::wire::write_response_ex`] — the only thing that
+//! changes is who blocks where.  `tests/event_serve.rs` pins this by
+//! diffing the two modes' bytes under concurrent load.
+
+#[cfg(unix)]
+pub mod conn;
+#[cfg(unix)]
+pub mod reactor;
+
+#[cfg(unix)]
+pub(crate) use reactor::serve_poll;
+
+#[cfg(not(unix))]
+pub(crate) fn serve_poll(
+    _listener: std::net::TcpListener,
+    _shared: std::sync::Arc<super::pool::Shared>,
+    _cfg: crate::config::ServeCfg,
+    _max_conns: usize,
+) -> anyhow::Result<()> {
+    anyhow::bail!("serve.io=poll requires a unix platform (use serve.io=threads)")
+}

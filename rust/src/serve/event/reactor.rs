@@ -1,0 +1,520 @@
+//! The poll loop: one thread owns the listener, every connection
+//! socket, and the self-pipe waker; `cfg.workers` threads run the
+//! requests.  Idle connections are just fds in the poll set — 10k of
+//! them cost zero threads and zero per-connection buffers beyond the
+//! (empty) decoder.
+//!
+//! Data path per wakeup:
+//!
+//! 1. drain the waker, apply worker completions (`busy = false`),
+//! 2. accept (nonblocking) up to `serve.max_conns` live sockets,
+//! 3. per readable conn: read until `WouldBlock` (bounded for
+//!    fairness), push into its [`crate::proto::wire::FeedDecoder`],
+//! 4. decode complete lines/frames into the conn's pending queue,
+//! 5. dispatch in order while the conn has no request in flight:
+//!    `hello` negotiates inline, `shutdown` starts the drain, fatal
+//!    reader errors get their typed reply and close the conn after the
+//!    flush; everything else becomes a [`WorkItem`] for the workers —
+//!    which run the *same* [`pool::dispatch`] and serialize with the
+//!    *same* `write_response_ex` as the blocking transport,
+//! 6. flush committed output (partial writes keep their cursor), shed
+//!    connections whose output queue overflowed, close what is done.
+//!
+//! One request in flight per connection preserves the blocking path's
+//! response ordering, which is what makes the two `serve.io` modes
+//! byte-identical under pipelining.
+
+use super::super::admission::{self, PushError};
+use super::super::pool::{self, Shared};
+use super::conn::{Conn, ConnWriter, Pending, WorkItem};
+use crate::config::ServeCfg;
+use crate::coordinator::metrics;
+use crate::proto::wire::{self, Feed, WireMode};
+use crate::proto::{frame, ReqId, Request, Response};
+use anyhow::{Context, Result};
+use poll_shim::{PollFd, WakePipe, POLLIN, POLLOUT};
+use std::io::Read;
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+/// Decoded-but-undispatched units a single connection may hold before
+/// the reactor stops reading from it (pipelining backpressure).
+const PENDING_CAP: usize = 64;
+/// Socket read chunk.
+const READ_CHUNK: usize = 64 * 1024;
+/// Per-connection read budget per wakeup: one firehosing client must
+/// not starve the rest of the poll set.
+const READ_FAIR: usize = 1 << 20;
+/// Poll timeout: the stop flag is re-checked at least this often even
+/// if no fd ever becomes ready.
+const POLL_TICK_MS: i32 = 1000;
+
+/// Serve the listener in readiness-polled mode.  Same exit contract as
+/// the threads transport: returns once `max_accept` connections have
+/// been accepted and finished, the shutdown flag drained every
+/// connection, or the transport failed irrecoverably.
+pub(crate) fn serve_poll(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    cfg: ServeCfg,
+    max_accept: usize,
+) -> Result<()> {
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let max_conns = cfg.max_conns.max(8);
+    // Best-effort: the fd budget must cover the connection budget.
+    let _ = poll_shim::raise_nofile(max_conns as u64 + 64);
+    let waker = Arc::new(WakePipe::new().context("reactor wake pipe")?);
+    let completions: Arc<Mutex<Vec<(usize, u64)>>> = Arc::new(Mutex::new(Vec::new()));
+    let (queue, rx) =
+        admission::bounded::<WorkItem>(cfg.queue_bound.max(1), "serve_event_queue_depth");
+    let workers = cfg.workers.max(1);
+    let mut pool_threads = Vec::with_capacity(workers);
+    for i in 0..workers {
+        let shared = shared.clone();
+        let rx = rx.clone();
+        let waker = waker.clone();
+        let completions = completions.clone();
+        pool_threads.push(
+            std::thread::Builder::new()
+                .name(format!("serve-eworker-{i}"))
+                .spawn(move || worker_loop(shared, rx, waker, completions))
+                .context("spawning event worker")?,
+        );
+    }
+    // Workers hold the only receiver clones: a dead pool surfaces as
+    // PushError::Closed instead of a silently growing queue.
+    drop(rx);
+    log::info!(
+        "reactor on {}: {} workers, {} max conns, {} KiB out queue",
+        shared.addr,
+        workers,
+        max_conns,
+        cfg.out_queue_kib.max(1)
+    );
+
+    let out_cap = cfg.out_queue_kib.max(1) * 1024;
+    let mut slots: Vec<Option<Conn>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut gen_counter: u64 = 0;
+    let mut accepted = 0usize;
+    let mut live = 0usize;
+    let mut draining = false;
+    let mut pool_gone = false;
+    let mut pollfds: Vec<PollFd> = Vec::new();
+    let mut poll_map: Vec<usize> = Vec::new();
+    let mut scratch = vec![0u8; READ_CHUNK];
+    // Reused serialization buffers (same idea as serve_conn).
+    let mut out = String::new();
+    let mut bin: Vec<u8> = Vec::new();
+
+    loop {
+        if (shared.stop.load(Ordering::SeqCst) || pool_gone) && !draining {
+            draining = true;
+            for conn in slots.iter_mut().flatten() {
+                // Graceful drain: no new input, in-flight requests
+                // finish, queued output flushes, then the socket closes.
+                conn.read_closed = true;
+                conn.pending.clear();
+            }
+        }
+        let accepting = !draining && accepted < max_accept;
+        if !accepting && live == 0 {
+            break;
+        }
+
+        // ---- build the poll set: waker, listener, every live conn ----
+        pollfds.clear();
+        poll_map.clear();
+        pollfds.push(PollFd::new(waker.read_fd(), POLLIN));
+        // The listener stays registered even when not accepting so a
+        // shutdown-handle connect() always wakes the loop; such
+        // connections are accepted and dropped below.
+        pollfds.push(PollFd::new(listener.as_raw_fd(), POLLIN));
+        for (idx, slot) in slots.iter().enumerate() {
+            let Some(c) = slot else { continue };
+            let mut ev: i16 = 0;
+            if !c.read_closed && c.pending.len() < PENDING_CAP {
+                ev |= POLLIN;
+            }
+            if c.out_flushable() > 0 {
+                ev |= POLLOUT;
+            }
+            // ev == 0 still reports POLLERR/POLLHUP, which is all we
+            // need from a conn that is mid-request with nothing queued.
+            pollfds.push(PollFd::new(c.sock.as_raw_fd(), ev));
+            poll_map.push(idx);
+        }
+        poll_shim::poll(&mut pollfds, POLL_TICK_MS).context("poll(2)")?;
+        waker.drain();
+
+        // Readiness per slot (conns accepted later this iteration
+        // default to not-ready and are polled next time around).
+        let mut ready: Vec<(bool, bool)> = vec![(false, false); slots.len()];
+        for (pi, &idx) in poll_map.iter().enumerate() {
+            let pfd = &pollfds[pi + 2];
+            ready[idx] = (pfd.readable() || pfd.invalid(), pfd.writable());
+        }
+
+        // ---- worker completions: the conn may dispatch its next unit ----
+        {
+            let mut done = completions.lock().unwrap_or_else(|p| p.into_inner());
+            for (idx, gen) in done.drain(..) {
+                if let Some(Some(c)) = slots.get_mut(idx) {
+                    if c.gen == gen {
+                        c.busy = false;
+                    }
+                }
+            }
+        }
+
+        // ---- accept everything pending ----
+        loop {
+            match listener.accept() {
+                Ok((sock, peer)) => {
+                    if !accepting || accepted >= max_accept {
+                        drop(sock); // drain-phase wakeup connection
+                        continue;
+                    }
+                    accepted += 1;
+                    metrics::inc("serve_conns");
+                    if live >= max_conns {
+                        // Typed shed while the socket is still blocking.
+                        pool::shed(sock, shared.retry_hint_ms());
+                        continue;
+                    }
+                    if let Err(e) = sock.set_nonblocking(true) {
+                        log::warn!("conn from {peer}: nonblocking failed: {e}");
+                        continue;
+                    }
+                    gen_counter += 1;
+                    log::info!("conn from {peer}");
+                    let conn = Conn::new(sock, peer.to_string(), gen_counter, out_cap);
+                    shared.active_conns.fetch_add(1, Ordering::SeqCst);
+                    live += 1;
+                    match free.pop() {
+                        Some(i) => slots[i] = Some(conn),
+                        None => slots.push(Some(conn)),
+                    }
+                    if accepted >= max_accept {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    // Transient accept failures self-heal on the next
+                    // wakeup; the listener itself keeps polling.
+                    log::warn!("accept failed: {e}");
+                    break;
+                }
+            }
+        }
+
+        // ---- per-connection work ----
+        for idx in 0..slots.len() {
+            let Some(mut conn) = slots[idx].take() else { continue };
+            let (can_read, _can_write) = ready.get(idx).copied().unwrap_or((false, false));
+            let mut dead = false;
+            if can_read && !conn.read_closed && conn.pending.len() < PENDING_CAP {
+                if let Err(e) = read_some(&mut conn, &mut scratch) {
+                    log::debug!("conn {}: read failed: {e}", conn.peer);
+                    dead = true;
+                }
+            }
+            if !dead {
+                pump(&mut conn);
+                dispatch(
+                    &mut conn,
+                    &shared,
+                    &queue,
+                    &waker,
+                    idx,
+                    &mut pool_gone,
+                    &mut out,
+                    &mut bin,
+                );
+                if conn.out_overflowed() && !conn.close_after_flush {
+                    // Never-reading client: typed shed past the cap, one
+                    // best-effort flush, then close — holding the queue
+                    // open would just leak the buffer.
+                    metrics::inc("serve_shed");
+                    let mut line = String::new();
+                    Response::Overloaded { retry_after_ms: shared.retry_hint_ms() }
+                        .write_json(&mut line);
+                    line.push('\n');
+                    conn.force_line(line.as_bytes());
+                    conn.pending.clear();
+                    conn.read_closed = true;
+                    conn.close_after_flush = true;
+                    let _ = conn.flush();
+                    log::info!("conn {}: output queue overflow, shedding", conn.peer);
+                    dead = true;
+                }
+            }
+            if !dead {
+                match conn.flush() {
+                    Err(e) => {
+                        log::debug!("conn {}: write failed: {e}", conn.peer);
+                        dead = true;
+                    }
+                    Ok(flushed) => {
+                        let finished = conn.close_after_flush || conn.read_closed || draining;
+                        if flushed && conn.is_idle() && finished {
+                            dead = true;
+                        }
+                    }
+                }
+            }
+            if dead {
+                live -= 1;
+                shared.active_conns.fetch_sub(1, Ordering::SeqCst);
+                free.push(idx);
+                // conn (and its socket) drops here
+            } else {
+                slots[idx] = Some(conn);
+            }
+        }
+    }
+
+    // Joining after the queue closes lets workers finish in-flight
+    // requests (their conns are already gone; the writes are no-ops).
+    drop(queue);
+    for t in pool_threads {
+        let _ = t.join();
+    }
+    if pool_gone {
+        anyhow::bail!("connection queue closed: worker pool is gone");
+    }
+    Ok(())
+}
+
+/// Read until the socket would block (or EOF, or the fairness budget).
+fn read_some(conn: &mut Conn, scratch: &mut [u8]) -> std::io::Result<()> {
+    let mut total = 0usize;
+    loop {
+        if conn.pending.len() >= PENDING_CAP {
+            break;
+        }
+        match conn.sock.read(scratch) {
+            Ok(0) => {
+                conn.read_closed = true;
+                break;
+            }
+            Ok(n) => {
+                conn.decoder.push(&scratch[..n]);
+                total += n;
+                if total >= READ_FAIR {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Decode buffered bytes into pending units (bounded by PENDING_CAP).
+fn pump(conn: &mut Conn) {
+    while conn.pending.len() < PENDING_CAP {
+        match conn.decoder.next() {
+            Feed::More => break,
+            Feed::Line(l) => {
+                if l.trim().is_empty() {
+                    continue; // keep-alive blank lines, as in serve_conn
+                }
+                metrics::inc("service_requests");
+                conn.pending.push_back(Pending::Line(l));
+            }
+            Feed::Frame { kind, payload } => {
+                metrics::inc("service_requests");
+                conn.pending.push_back(Pending::Frame { kind, payload });
+            }
+            Feed::TooLarge { limit_bytes } => {
+                conn.pending.push_back(Pending::Fatal(Response::TooLarge { limit_bytes }));
+                conn.read_closed = true;
+                break;
+            }
+            Feed::Corrupt(msg) => {
+                conn.pending.push_back(Pending::Fatal(Response::error(msg)));
+                conn.read_closed = true;
+                break;
+            }
+        }
+    }
+}
+
+/// serve_conn's error accounting, shared by reactor and workers.
+fn count_error(resp: &Response) {
+    if matches!(
+        resp,
+        Response::Error { .. } | Response::UnknownCmd { .. } | Response::TooLarge { .. }
+    ) {
+        metrics::inc("service_errors");
+    }
+}
+
+/// Serialize a reactor-produced response straight into the conn's
+/// output queue (same writer the workers use → same bytes).
+#[allow(clippy::too_many_arguments)]
+fn push_response(
+    conn: &mut Conn,
+    resp: &Response,
+    id: Option<&ReqId>,
+    waker: &Arc<WakePipe>,
+    out: &mut String,
+    bin: &mut Vec<u8>,
+) {
+    count_error(resp);
+    let mut w = ConnWriter { out: conn.out.clone(), waker: waker.clone() };
+    // An overflow error here latches `overflowed`; the sweep sheds.
+    let _ = wire::write_response_ex(&mut w, resp, conn.mode, conn.stream_replies, id, out, bin);
+}
+
+/// In-order dispatch: pop pending units until the conn has a request in
+/// flight (or nothing left).  Mirrors one iteration of serve_conn per
+/// unit.
+#[allow(clippy::too_many_arguments)]
+fn dispatch(
+    conn: &mut Conn,
+    shared: &Shared,
+    queue: &admission::BoundedQueue<WorkItem>,
+    waker: &Arc<WakePipe>,
+    slot: usize,
+    pool_gone: &mut bool,
+    out: &mut String,
+    bin: &mut Vec<u8>,
+) {
+    while !conn.busy && !conn.close_after_flush {
+        let Some(unit) = conn.pending.pop_front() else { break };
+        let (req, id) = match unit {
+            Pending::Fatal(resp) => {
+                push_response(conn, &resp, None, waker, out, bin);
+                conn.pending.clear();
+                conn.close_after_flush = true;
+                return;
+            }
+            Pending::Line(line) => {
+                let parsed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    Request::parse_line(&line)
+                }));
+                match parsed {
+                    Ok(Ok(pair)) => pair,
+                    Ok(Err(e)) => {
+                        let resp = Response::error(format!("{e:#}"));
+                        push_response(conn, &resp, None, waker, out, bin);
+                        continue;
+                    }
+                    Err(p) => {
+                        let msg = format!("internal panic: {}", wire::panic_text(p.as_ref()));
+                        push_response(conn, &Response::error(msg), None, waker, out, bin);
+                        continue;
+                    }
+                }
+            }
+            Pending::Frame { kind, payload } => {
+                if conn.mode != WireMode::Bin1 {
+                    let resp =
+                        Response::error("binary frame before a successful hello/bin1 handshake");
+                    push_response(conn, &resp, None, waker, out, bin);
+                    continue;
+                }
+                if kind != frame::KIND_INFER_REQ {
+                    let resp = Response::error(format!("unexpected frame kind {kind}"));
+                    push_response(conn, &resp, None, waker, out, bin);
+                    continue;
+                }
+                match frame::decode_infer_request_id(&payload) {
+                    Ok((ir, id)) => (Request::Infer(ir), id),
+                    Err(e) => {
+                        let resp = Response::error(format!("bad frame: {e}"));
+                        push_response(conn, &resp, None, waker, out, bin);
+                        continue;
+                    }
+                }
+            }
+        };
+        match req {
+            // Negotiation mutates the conn's mode/stream *before* the
+            // reply serializes — identical ordering to the blocking
+            // path's dispatch_caught.
+            Request::Hello { wire: w, stream: want_stream } => {
+                let resp =
+                    wire::negotiate(&w, want_stream, &mut conn.mode, &mut conn.stream_replies);
+                push_response(conn, &resp, id.as_ref(), waker, out, bin);
+            }
+            Request::Shutdown => {
+                shared.stop.store(true, Ordering::SeqCst);
+                push_response(conn, &Response::Stopping, id.as_ref(), waker, out, bin);
+            }
+            req => {
+                let item = WorkItem {
+                    slot,
+                    gen: conn.gen,
+                    req,
+                    id,
+                    mode: conn.mode,
+                    stream: conn.stream_replies,
+                    out: conn.out.clone(),
+                };
+                match queue.push(item) {
+                    Ok(()) => conn.busy = true,
+                    Err(PushError::Full(item)) => {
+                        // Request-level shed: the conn survives, exactly
+                        // like the threads path's batcher-full shed.
+                        metrics::inc("serve_shed");
+                        let resp =
+                            Response::Overloaded { retry_after_ms: shared.retry_hint_ms() };
+                        push_response(conn, &resp, item.id.as_ref(), waker, out, bin);
+                    }
+                    Err(PushError::Closed(item)) => {
+                        let resp = Response::error("worker pool is gone");
+                        push_response(conn, &resp, item.id.as_ref(), waker, out, bin);
+                        conn.close_after_flush = true;
+                        *pool_gone = true;
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    shared: Arc<Shared>,
+    rx: admission::SharedReceiver<WorkItem>,
+    waker: Arc<WakePipe>,
+    completions: Arc<Mutex<Vec<(usize, u64)>>>,
+) {
+    let mut out = String::new();
+    let mut bin: Vec<u8> = Vec::new();
+    while let Some(item) = rx.recv() {
+        let WorkItem { slot, gen, req, id, mode, stream, out: oq } = item;
+        let mut writer = ConnWriter { out: oq, waker: waker.clone() };
+        let resp = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool::dispatch(&shared, req, &mut writer)
+        })) {
+            Ok(r) => r,
+            Err(p) => {
+                Response::error(format!("internal panic: {}", wire::panic_text(p.as_ref())))
+            }
+        };
+        count_error(&resp);
+        // Write errors (overflowed queue, vanished conn) are the
+        // reactor's problem; the completion must be recorded regardless.
+        let _ = wire::write_response_ex(
+            &mut writer,
+            &resp,
+            mode,
+            stream,
+            id.as_ref(),
+            &mut out,
+            &mut bin,
+        );
+        completions.lock().unwrap_or_else(|p| p.into_inner()).push((slot, gen));
+        waker.wake();
+    }
+}

@@ -1,0 +1,177 @@
+//! Per-model batcher lanes: one coalescing micro-batch lane per hot
+//! registry key, so two models batch concurrently instead of
+//! head-of-line blocking each other through the single global batcher.
+//!
+//! Lanes are created lazily, first-come first-served, up to
+//! `serve.max_lanes`; once the cap is reached, further keys hash onto
+//! an existing lane (stable per key, so a key's requests always share
+//! one coalescing point and the batcher's compatibility check keeps
+//! mixed traffic from cross-batching).  `max_lanes = 1` reproduces the
+//! old single-batcher behaviour exactly.
+//!
+//! Each lane is a plain [`Batcher`] with its own thread and its own
+//! depth gauge (`serve_infer_queue_depth_lane<N>`); the submit contract
+//! is identical, so [`super::pool`] treats a `LaneSet` exactly like the
+//! single batcher it replaces.
+
+use super::batcher::Batcher;
+use super::registry::ModelRegistry;
+use crate::config::ServeCfg;
+use crate::coordinator::jobs::InferReply;
+use crate::runtime::EngineHandle;
+use crate::tensor::HostTensor;
+use anyhow::Result;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::AtomicUsize;
+use std::sync::{Arc, Mutex};
+
+pub struct LaneSet {
+    eng: EngineHandle,
+    registry: Arc<ModelRegistry>,
+    cfg: ServeCfg,
+    active_conns: Arc<AtomicUsize>,
+    max_lanes: usize,
+    /// key -> index into `pool` (first-come assignment).
+    assign: Mutex<HashMap<String, usize>>,
+    /// The live lanes; grows up to `max_lanes`, never shrinks.
+    pool: Mutex<Vec<Arc<Batcher>>>,
+}
+
+impl LaneSet {
+    pub fn start(
+        eng: EngineHandle,
+        registry: Arc<ModelRegistry>,
+        cfg: &ServeCfg,
+        active_conns: Arc<AtomicUsize>,
+    ) -> Result<LaneSet> {
+        let lanes = LaneSet {
+            eng,
+            registry,
+            cfg: cfg.clone(),
+            active_conns,
+            max_lanes: cfg.max_lanes.max(1),
+            assign: Mutex::new(HashMap::new()),
+            pool: Mutex::new(Vec::new()),
+        };
+        // Lane 0 exists up front: the common single-model deployment
+        // never takes the lane-creation path at all.
+        lanes.spawn_lane(0)?;
+        Ok(lanes)
+    }
+
+    fn spawn_lane(&self, idx: usize) -> Result<Arc<Batcher>> {
+        // Lane gauges are keyed by a 'static name (the metrics registry
+        // contract); lanes are bounded by max_lanes and live for the
+        // server's lifetime, so one leaked name per lane is finite.
+        let gauge: &'static str = match idx {
+            0 => "serve_infer_queue_depth",
+            _ => Box::leak(format!("serve_infer_queue_depth_lane{idx}").into_boxed_str()),
+        };
+        let b = Arc::new(Batcher::start_named(
+            self.eng.clone(),
+            self.registry.clone(),
+            &self.cfg,
+            self.active_conns.clone(),
+            gauge,
+            format!("serve-batcher-{idx}"),
+        )?);
+        let mut pool = self.pool.lock().unwrap_or_else(|p| p.into_inner());
+        debug_assert_eq!(pool.len(), idx);
+        pool.push(b.clone());
+        Ok(b)
+    }
+
+    /// The lane serving `key`: the key's assigned lane, a fresh lane if
+    /// there is still room, or a stable hash pick among the existing
+    /// lanes once the cap is reached.
+    fn lane_for(&self, key: &str) -> Result<Arc<Batcher>> {
+        let idx = {
+            let mut assign = self.assign.lock().unwrap_or_else(|p| p.into_inner());
+            match assign.get(key) {
+                Some(&i) => i,
+                None => {
+                    let next = assign.len();
+                    let i = if next < self.max_lanes {
+                        next
+                    } else {
+                        let mut h = DefaultHasher::new();
+                        key.hash(&mut h);
+                        (h.finish() as usize) % self.max_lanes
+                    };
+                    assign.insert(key.to_string(), i);
+                    i
+                }
+            }
+        };
+        // Lane 0 is pre-spawned; later lanes spawn on first assignment.
+        // The spawn happens outside the assign lock but the pool lock
+        // serializes it; a racing submitter for the same new key waits
+        // on `pool` and then finds the lane present.
+        loop {
+            {
+                let pool = self.pool.lock().unwrap_or_else(|p| p.into_inner());
+                if let Some(b) = pool.get(idx) {
+                    return Ok(b.clone());
+                }
+                // Lanes are assigned densely (next == assign.len()), so
+                // at most one lane is missing and it is ours to create.
+            }
+            self.spawn_lane(idx)?;
+        }
+    }
+
+    /// Same contract as [`Batcher::try_submit`]: `None` means the
+    /// lane's queue is full — shed with the typed overload response.
+    pub fn try_submit(&self, key: &str, inputs: Vec<HostTensor>) -> Option<Result<InferReply>> {
+        match self.lane_for(key) {
+            Ok(lane) => lane.try_submit(key, inputs),
+            Err(e) => Some(Err(e)),
+        }
+    }
+
+    /// Live lane count (for logs/tests).
+    pub fn lanes(&self) -> usize {
+        self.pool.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(max_lanes: usize) -> LaneSet {
+        let eng = EngineHandle::cpu().unwrap();
+        let registry = Arc::new(ModelRegistry::new(2));
+        let cfg = ServeCfg { max_lanes, ..Default::default() };
+        LaneSet::start(eng, registry, &cfg, Arc::new(AtomicUsize::new(1))).unwrap()
+    }
+
+    #[test]
+    fn lanes_grow_to_cap_then_hash() {
+        let ls = mk(2);
+        assert_eq!(ls.lanes(), 1, "lane 0 pre-spawned");
+        // distinct keys claim distinct lanes up to the cap
+        let _ = ls.try_submit("a", vec![HostTensor::zeros(vec![1, 4])]);
+        let _ = ls.try_submit("b", vec![HostTensor::zeros(vec![1, 4])]);
+        assert_eq!(ls.lanes(), 2);
+        // past the cap: no new lanes, keys still served
+        let r = ls.try_submit("c", vec![HostTensor::zeros(vec![1, 4])]);
+        assert!(r.is_some(), "hashed lane accepts the request");
+        assert_eq!(ls.lanes(), 2, "cap holds");
+        // assignment is stable
+        let a1 = ls.lane_for("c").unwrap();
+        let a2 = ls.lane_for("c").unwrap();
+        assert!(Arc::ptr_eq(&a1, &a2));
+    }
+
+    #[test]
+    fn single_lane_reproduces_global_batcher() {
+        let ls = mk(1);
+        let r = ls.try_submit("nope", vec![HostTensor::zeros(vec![1, 64])]).unwrap();
+        let e = r.expect_err("missing model must error");
+        assert!(format!("{e:#}").contains("no packed model"), "{e:#}");
+        assert_eq!(ls.lanes(), 1);
+    }
+}

@@ -25,16 +25,29 @@
 //!   `{"error":"overloaded","retry_after_ms":..}` shed response,
 //!   graceful drain-and-shutdown, and the shared accept-retry
 //!   exponential backoff.
+//! * [`lanes`] — [`lanes::LaneSet`]: per-model batcher lanes, so two
+//!   hot models coalesce concurrently instead of head-of-line blocking
+//!   each other through one batcher thread (`serve.max_lanes`).
+//! * [`event`] — the readiness-polled reactor (`serve.io = poll`): one
+//!   thread polls every connection for readability/writability over the
+//!   vendored `poll(2)` shim, assembles partial reads, queues partial
+//!   writes, and feeds decoded requests to a small worker pool — so 10k
+//!   idle connections cost one polling thread, not 10k blocked ones.
+//!   Byte-identical to the `threads` transport (same dispatch, same
+//!   writers), pinned by the cross-mode tests.
 //!
 //! Knobs live in [`crate::config::ServeCfg`] (`-s serve.*` overrides,
-//! `repro serve --workers/--batch-window-ms/...`); load behaviour is
-//! tracked by `benches/perf_serve.rs` (`BENCH_serve.json`).
+//! `repro serve --io/--workers/--batch-window-ms/...`); load behaviour
+//! is tracked by `benches/perf_serve.rs` (`BENCH_serve.json`).
 
 pub mod admission;
 pub mod batcher;
+pub mod event;
+pub mod lanes;
 pub mod pool;
 pub mod registry;
 
 pub use batcher::Batcher;
+pub use lanes::LaneSet;
 pub use pool::{PoolHandle, PoolServer};
 pub use registry::{ModelRegistry, RegistryStats};

@@ -16,13 +16,13 @@
 //!   connections.
 //! * **Read path** (`ping` / `models` / `metrics` / `infer`) never
 //!   touches the Runner lock: `infer` goes through the shared
-//!   [`ModelRegistry`] + micro-[`Batcher`], `models` reads the engine
-//!   manifest directly.  Note that while connections (parse, I/O,
-//!   waiting) are handled in parallel across workers, infer *compute*
-//!   executes on the single batcher thread — by design, since the
+//!   [`ModelRegistry`] + per-model batcher lanes
+//!   ([`super::lanes::LaneSet`]), `models` reads the engine manifest
+//!   directly.  Note that while connections (parse, I/O, waiting) are
+//!   handled in parallel across workers, each model's infer *compute*
+//!   executes on its lane's batcher thread — by design, since the
 //!   integer kernels are already batch-parallel across cores and one
-//!   coalesced execution saturates the machine.  Per-model batcher
-//!   lanes are a ROADMAP follow-on.
+//!   coalesced execution saturates the machine.
 //! * **Exclusive path** (`quantize` / `pack`) takes the write half of
 //!   the `RwLock<Runner>`: those jobs own the engine for seconds to
 //!   minutes and keep exactly the sequential semantics of the blocking
@@ -31,7 +31,7 @@
 //!   accepting, drains admitted connections, joins the workers.
 
 use super::admission::{self, Backoff};
-use super::batcher::Batcher;
+use super::lanes::LaneSet;
 use super::registry::ModelRegistry;
 use crate::config::{ExperimentConfig, ServeCfg};
 use crate::coordinator::jobs::Runner;
@@ -47,17 +47,19 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock, RwLockWriteGuard};
 
 /// Shared state every worker holds: the exclusive Runner behind an
-/// `RwLock`, the read path's registry + batcher, and the shutdown flag.
-struct Shared {
-    eng: EngineHandle,
-    runner: RwLock<Runner>,
+/// `RwLock`, the read path's registry + batcher lanes, and the shutdown
+/// flag.  `pub(crate)` so the readiness-polled reactor
+/// ([`super::event`]) serves from the exact same state.
+pub(crate) struct Shared {
+    pub(crate) eng: EngineHandle,
+    pub(crate) runner: RwLock<Runner>,
     /// Read-path view of the packed-model LRU (same Arc the Runner fills).
-    registry: Arc<ModelRegistry>,
-    batcher: Batcher,
-    active_conns: Arc<AtomicUsize>,
-    retry_after_ms: u64,
-    stop: Arc<AtomicBool>,
-    addr: SocketAddr,
+    pub(crate) registry: Arc<ModelRegistry>,
+    pub(crate) lanes: LaneSet,
+    pub(crate) active_conns: Arc<AtomicUsize>,
+    pub(crate) retry_after_ms: u64,
+    pub(crate) stop: Arc<AtomicBool>,
+    pub(crate) addr: SocketAddr,
 }
 
 impl Shared {
@@ -72,7 +74,7 @@ impl Shared {
     /// pack) holds the Runner, the stall is seconds-to-minutes — a
     /// batch-window-sized hint would invite a retry storm; tell clients
     /// to back off much longer instead.
-    fn retry_hint_ms(&self) -> u64 {
+    pub(crate) fn retry_hint_ms(&self) -> u64 {
         let exclusive_busy =
             matches!(self.runner.try_write(), Err(std::sync::TryLockError::WouldBlock));
         if exclusive_busy {
@@ -120,7 +122,7 @@ impl PoolServer {
         let registry = Arc::new(ModelRegistry::new(cfg.registry_cap));
         let runner = Runner::with_registry(eng.clone(), registry.clone());
         let active_conns = Arc::new(AtomicUsize::new(0));
-        let batcher = Batcher::start(eng.clone(), registry.clone(), &cfg, active_conns.clone())?;
+        let lanes = LaneSet::start(eng.clone(), registry.clone(), &cfg, active_conns.clone())?;
         let retry_after_ms = (cfg.batch_window_ms.max(0.0) * 2.0) as u64 + 10;
         // `Shared.stop` is the single shutdown flag: handles, the accept
         // loop and the `shutdown` command all share it through `shared`.
@@ -128,19 +130,21 @@ impl PoolServer {
             eng,
             runner: RwLock::new(runner),
             registry: registry.clone(),
-            batcher,
+            lanes,
             active_conns,
             retry_after_ms,
             stop: Arc::new(AtomicBool::new(false)),
             addr,
         });
         log::info!(
-            "pool server on {addr}: {} workers, batch window {} ms, max batch {}, queue {}, registry cap {}",
+            "pool server on {addr} (io {}): {} workers, batch window {} ms, max batch {}, queue {}, registry cap {}, max lanes {}",
+            cfg.io.key(),
             cfg.workers.max(1),
             cfg.batch_window_ms,
             cfg.max_batch,
             cfg.queue_bound,
-            cfg.registry_cap
+            cfg.registry_cap,
+            cfg.max_lanes.max(1)
         );
         Ok(PoolServer { listener, addr, shared, registry, cfg })
     }
@@ -174,7 +178,17 @@ impl PoolServer {
     /// (`usize::MAX` for forever), the shutdown flag is raised, or the
     /// accept-failure budget is exhausted.  All three exits drain the
     /// admitted queue and join the workers before returning.
+    ///
+    /// `serve.io` picks the connection transport: `threads` runs the
+    /// blocking one-worker-per-connection loop below; `poll` hands the
+    /// listener to the readiness-polled reactor ([`super::event`]),
+    /// which serves the same `Shared` state through the same dispatch,
+    /// byte-identically.
     pub fn serve(self, max_conns: usize) -> Result<()> {
+        if matches!(self.cfg.io, crate::config::IoMode::Poll) {
+            let PoolServer { listener, shared, cfg, .. } = self;
+            return super::event::serve_poll(listener, shared, cfg, max_conns);
+        }
         let workers = self.cfg.workers.max(1);
         let (queue, srx) =
             admission::bounded::<TcpStream>(self.cfg.queue_bound, "serve_queue_depth");
@@ -251,7 +265,16 @@ impl PoolServer {
 /// Write one JSON-line response outside the connection loop (the shed
 /// path and the dead-pool path run on the accept thread, before any
 /// worker owns the connection).
-fn write_line(w: &mut dyn Write, resp: &Response) -> std::io::Result<()> {
+///
+/// Short-write audit: on the blocking path `write_all` already loops
+/// over partial writes and retries `Interrupted`, so a line is written
+/// whole or errors — never truncated.  Only call this on *blocking*
+/// sockets; a nonblocking socket can return `WouldBlock` mid-line,
+/// which `write_all` surfaces as an error after a partial write.  The
+/// reactor never uses this: its writes go through the cursor-tracked
+/// output queue ([`super::event`]), which is the nonblocking-safe
+/// equivalent.
+pub(crate) fn write_line(w: &mut dyn Write, resp: &Response) -> std::io::Result<()> {
     let mut line = String::new();
     resp.write_json(&mut line);
     line.push('\n');
@@ -261,7 +284,7 @@ fn write_line(w: &mut dyn Write, resp: &Response) -> std::io::Result<()> {
 
 /// Overload path: typed response, then close.  The client learns *why*
 /// and *when to retry* instead of seeing a silent hang or reset.
-fn shed(mut stream: TcpStream, retry_after_ms: u64) {
+pub(crate) fn shed(mut stream: TcpStream, retry_after_ms: u64) {
     metrics::inc("serve_shed");
     let _ = write_line(&mut stream, &Response::Overloaded { retry_after_ms });
 }
@@ -276,8 +299,9 @@ fn worker_loop(shared: Arc<Shared>, rx: admission::SharedReceiver<TcpStream>) {
 
 /// Same contract as the blocking service: job and validation failures
 /// become structured `{"ok":false}` errors (panics are contained by the
-/// connection loop).
-fn dispatch(shared: &Shared, req: Request, writer: &mut dyn Write) -> Response {
+/// connection loop).  Shared verbatim with the reactor's worker pool,
+/// which is what makes the two `serve.io` modes byte-identical.
+pub(crate) fn dispatch(shared: &Shared, req: Request, writer: &mut dyn Write) -> Response {
     match dispatch_inner(shared, req, writer) {
         Ok(resp) => resp,
         Err(e) => Response::error(format!("{e:#}")),
@@ -290,7 +314,7 @@ fn dispatch_inner(shared: &Shared, req: Request, writer: &mut dyn Write) -> Resu
         Request::Models => Response::models(&shared.eng, &shared.registry),
         Request::Metrics => Response::metrics(),
         Request::Infer(ir) => {
-            match shared.batcher.try_submit(&ir.key, ir.inputs) {
+            match shared.lanes.try_submit(&ir.key, ir.inputs) {
                 // Batcher queue full: typed shed on the request, the
                 // connection itself stays up.
                 None => {

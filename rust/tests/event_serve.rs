@@ -1,0 +1,479 @@
+//! The readiness-polled serving core (`serve.io = poll`) under hostile
+//! and high-fan-in clients: slow-loris partial lines, a never-reading
+//! client tripping the output-queue cap, oversized inputs, pipelined
+//! request-id multiplexing, graceful drain in both io modes, and the
+//! acceptance test — dozens of idle connections plus eight active
+//! clients whose JSON / bin1 / streamed / multiplexed responses are
+//! byte-identical to the blocking service's.
+#![cfg(unix)]
+
+use lapq::config::{BitSpec, ExperimentConfig, IoMode, Method, ServeCfg};
+use lapq::coordinator::jobs::Runner;
+use lapq::coordinator::service::Service;
+use lapq::proto::wire::{Client, Incoming, WireReader};
+use lapq::proto::{frame, InferRequest, ReqId, Request};
+use lapq::runtime::EngineHandle;
+use lapq::serve::PoolServer;
+use lapq::tensor::HostTensor;
+use lapq::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+fn poll_cfg() -> ServeCfg {
+    ServeCfg {
+        io: IoMode::Poll,
+        workers: 2,
+        batch_window_ms: 0.0,
+        max_batch: 8,
+        queue_bound: 64,
+        registry_cap: 4,
+        ..Default::default()
+    }
+}
+
+/// A raw wire connection: bytes out, lines / frames in.  Unlike
+/// [`Client`] it hands back the exact payload bytes, which is what the
+/// byte-identity assertions need.
+struct Raw {
+    w: TcpStream,
+    r: WireReader<TcpStream>,
+}
+
+impl Raw {
+    fn connect(addr: &SocketAddr) -> Raw {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        s.set_write_timeout(Some(Duration::from_secs(120))).unwrap();
+        let w = s.try_clone().unwrap();
+        Raw { w, r: WireReader::new(s) }
+    }
+
+    fn send(&mut self, bytes: &[u8]) {
+        self.w.write_all(bytes).unwrap();
+        self.w.flush().unwrap();
+    }
+
+    fn line(&mut self) -> String {
+        match self.r.next() {
+            Incoming::Line => self.r.line().to_string(),
+            Incoming::Frame(k) => panic!("expected line, got frame kind {k}"),
+            Incoming::Eof => panic!("expected line, got eof"),
+            Incoming::TooLarge { .. } => panic!("expected line, got too-large"),
+            Incoming::Corrupt(e) => panic!("expected line, got corrupt: {e}"),
+        }
+    }
+
+    fn frame(&mut self) -> (u8, Vec<u8>) {
+        match self.r.next() {
+            Incoming::Frame(k) => (k, self.r.payload().to_vec()),
+            Incoming::Line => panic!("expected frame, got line {}", self.r.line()),
+            Incoming::Eof => panic!("expected frame, got eof"),
+            Incoming::TooLarge { .. } => panic!("expected frame, got too-large"),
+            Incoming::Corrupt(e) => panic!("expected frame, got corrupt: {e}"),
+        }
+    }
+}
+
+/// Zero the wall-clock `"seconds"` value in a JSON reply so the rest of
+/// the response can be compared byte for byte across servers.
+fn normalize_seconds(line: &str) -> String {
+    match line.find("\"seconds\":") {
+        None => line.to_string(),
+        Some(i) => {
+            let start = i + "\"seconds\":".len();
+            let end = line[start..]
+                .find([',', '}'])
+                .map(|j| start + j)
+                .expect("seconds value is delimited");
+            format!("{}0{}", &line[..start], &line[end..])
+        }
+    }
+}
+
+/// Zero the f64 `seconds` field inside a bin1 `KIND_INFER_REP` payload
+/// (it sits after the length-prefixed key, `rows` and `int_layers`).
+fn normalize_rep_payload(mut payload: Vec<u8>) -> Vec<u8> {
+    let keylen = u16::from_le_bytes([payload[0], payload[1]]) as usize;
+    let off = 2 + keylen + 4 + 4;
+    payload[off..off + 8].fill(0);
+    payload
+}
+
+// ------------------------------------------------------------ adversarial
+
+/// A slow-loris client drips one byte at a time; the reactor's feed
+/// decoder must assemble the line across reads and answer normally.
+/// Pipelined id-tagged requests split at an awkward boundary come back
+/// in order, each echoing its id.  A `shutdown` on the same connection
+/// gets the typed `stopping` reply, the output is flushed, and the
+/// reactor closes the socket (graceful drain covers reactor-owned
+/// connections).
+#[test]
+fn slow_loris_lines_are_assembled_and_answered() {
+    let eng = EngineHandle::start_default().expect("engine boots");
+    let server = PoolServer::bind("127.0.0.1:0", eng, poll_cfg()).unwrap();
+    let addr = server.addr;
+    let pool = std::thread::spawn(move || server.serve(usize::MAX).unwrap());
+
+    let mut c = Raw::connect(&addr);
+    for b in b"{\"cmd\":\"ping\"}\n" {
+        c.send(std::slice::from_ref(b));
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let pong = c.line();
+    assert_eq!(pong, "{\"ok\":true,\"pong\":true}");
+
+    // two pipelined requests, the split landing mid-way through the
+    // second line: both answered, in order, ids echoed
+    let two = b"{\"cmd\":\"ping\",\"id\":1}\n{\"cmd\":\"ping\",\"id\":2}\n";
+    let cut = two.len() - 7;
+    c.send(&two[..cut]);
+    std::thread::sleep(Duration::from_millis(20));
+    c.send(&two[cut..]);
+    assert_eq!(c.line(), "{\"id\":1,\"ok\":true,\"pong\":true}");
+    assert_eq!(c.line(), "{\"id\":2,\"ok\":true,\"pong\":true}");
+
+    // shutdown over the wire: stopping reply, flush, server-side close
+    c.send(b"{\"cmd\":\"shutdown\"}\n");
+    let stopping = c.line();
+    assert!(stopping.contains("\"stopping\":true"), "{stopping}");
+    assert!(matches!(c.r.next(), Incoming::Eof), "drained connection must close");
+    pool.join().unwrap();
+}
+
+/// A client that writes forever but never reads: once the kernel socket
+/// buffers fill, responses back up in the connection's output queue
+/// until the `out_queue_kib` cap trips — then the reactor sheds the
+/// connection (typed overload, best-effort flush, close) instead of
+/// buffering without bound.  The server stays healthy for new clients.
+#[test]
+fn never_reading_client_is_capped_and_closed() {
+    let eng = EngineHandle::start_default().expect("engine boots");
+    let cfg = ServeCfg { out_queue_kib: 1, ..poll_cfg() };
+    let server = PoolServer::bind("127.0.0.1:0", eng, cfg).unwrap();
+    let addr = server.addr;
+    let handle = server.shutdown_handle();
+    let pool = std::thread::spawn(move || server.serve(usize::MAX).unwrap());
+
+    // Each unknown-cmd request echoes its ~1 KiB id, so every line sent
+    // comes back about as big; a few thousand of them overwhelm any
+    // kernel buffering long before the sender runs out.
+    let big_id = "x".repeat(1024);
+    let req = format!("{{\"cmd\":\"nope\",\"id\":\"{big_id}\"}}\n");
+    let chunk = req.repeat(100).into_bytes();
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    s.set_write_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut w = s.try_clone().unwrap();
+    let mut closed_while_writing = false;
+    for _ in 0..400 {
+        // ~40 MiB if the server never pushed back — it must close long
+        // before that, surfacing here as a write error
+        if w.write_all(&chunk).is_err() {
+            closed_while_writing = true;
+            break;
+        }
+    }
+    // Drain whatever the server managed to flush (possibly including
+    // the typed overload line — delivery isn't guaranteed once the
+    // connection is torn down) and require the close itself.
+    let mut r = BufReader::new(s);
+    let mut saw_close = closed_while_writing;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match r.read_line(&mut line) {
+            Ok(0) => {
+                saw_close = true;
+                break;
+            }
+            Ok(_) => continue,
+            Err(_) => {
+                saw_close = true;
+                break;
+            }
+        }
+    }
+    assert!(saw_close, "server must close a connection that never reads");
+    drop(w);
+
+    // the reactor itself is unharmed: a fresh client gets served
+    let mut fresh = Client::connect(&addr).unwrap();
+    let pong = fresh.call(&Request::Ping).unwrap();
+    assert_eq!(pong.req("pong").as_bool(), Some(true));
+    drop(fresh);
+    handle.shutdown();
+    pool.join().unwrap();
+}
+
+/// Oversized inputs under the reactor: an endless line and a frame
+/// header promising more than the frame cap both get the typed
+/// `too_large` reply before the connection closes — same contract the
+/// blocking path pins in `wire_bin.rs`.
+#[test]
+fn oversized_inputs_get_typed_replies_under_poll() {
+    use lapq::proto::{MAX_FRAME_BYTES, MAX_LINE_BYTES};
+    let eng = EngineHandle::start_default().expect("engine boots");
+    let server = PoolServer::bind("127.0.0.1:0", eng, poll_cfg()).unwrap();
+    let addr = server.addr;
+    let handle = server.shutdown_handle();
+    let pool = std::thread::spawn(move || server.serve(usize::MAX).unwrap());
+
+    // endless line: typed reply as soon as the cap is crossed, then close
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    s.set_write_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut w = s.try_clone().unwrap();
+    let mut r = BufReader::new(s);
+    let chunk = vec![b'x'; 8 * 1024];
+    let mut sent = 0usize;
+    while sent <= MAX_LINE_BYTES + chunk.len() {
+        if w.write_all(&chunk).is_err() {
+            break;
+        }
+        sent += chunk.len();
+    }
+    let _ = w.flush();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let j: Json = line.parse().expect("typed too_large reply");
+    assert_eq!(j.req("error").as_str(), Some("too_large"), "{j:?}");
+    assert_eq!(j.req("limit_bytes").as_f64(), Some(MAX_LINE_BYTES as f64), "{j:?}");
+    line.clear();
+    assert_eq!(r.read_line(&mut line).unwrap(), 0, "oversized line closes the connection");
+    drop(w);
+
+    // oversized frame header: refused from the 8 header bytes alone
+    let mut c = Raw::connect(&addr);
+    let mut hdr = vec![frame::MARKER, frame::MAGIC2, frame::VERSION, frame::KIND_INFER_REQ];
+    hdr.extend_from_slice(&((MAX_FRAME_BYTES as u32) + 1).to_le_bytes());
+    c.send(&hdr);
+    let j: Json = c.line().parse().expect("typed too_large reply");
+    assert_eq!(j.req("error").as_str(), Some("too_large"), "{j:?}");
+    assert_eq!(j.req("limit_bytes").as_f64(), Some(MAX_FRAME_BYTES as f64), "{j:?}");
+    assert!(matches!(c.r.next(), Incoming::Eof), "oversized frame closes the connection");
+
+    handle.shutdown();
+    pool.join().unwrap();
+}
+
+/// Request-id multiplexing on one pipelined connection: three requests
+/// with distinct ids (number, string, and an id on a failing request)
+/// come back in submission order, each echoing its own id.
+#[test]
+fn pipelined_ids_are_echoed_in_order() {
+    let eng = EngineHandle::start_default().expect("engine boots");
+    let server = PoolServer::bind("127.0.0.1:0", eng, poll_cfg()).unwrap();
+    let addr = server.addr;
+    let handle = server.shutdown_handle();
+    let pool = std::thread::spawn(move || server.serve(usize::MAX).unwrap());
+
+    let mut c = Raw::connect(&addr);
+    c.send(
+        b"{\"cmd\":\"ping\",\"id\":7}\n\
+          {\"cmd\":\"bogus\",\"id\":\"a\"}\n\
+          {\"cmd\":\"infer\",\"id\":3,\"key\":\"nope\",\"x\":[[0.5]]}\n",
+    );
+    assert_eq!(c.line(), "{\"id\":7,\"ok\":true,\"pong\":true}");
+    assert_eq!(c.line(), "{\"cmd\":\"bogus\",\"error\":\"unknown_cmd\",\"id\":\"a\",\"ok\":false}");
+    let third = c.line();
+    assert!(third.contains("\"id\":3"), "{third}");
+    assert!(third.contains("no packed model"), "{third}");
+    drop(c);
+    handle.shutdown();
+    pool.join().unwrap();
+}
+
+// -------------------------------------------------------------- drain
+
+/// `{"cmd":"shutdown"}` drains gracefully in both io modes: in-flight
+/// requests finish, outputs flush, and the server thread joins.  The
+/// reactor also closes its idle connections itself; the threads mode
+/// needs the clients to hang up (each blocking worker owns its socket).
+#[test]
+fn graceful_drain_covers_both_io_modes() {
+    for io in [IoMode::Threads, IoMode::Poll] {
+        let eng = EngineHandle::start_default().expect("engine boots");
+        let cfg = ServeCfg { io, ..poll_cfg() };
+        let server = PoolServer::bind("127.0.0.1:0", eng, cfg).unwrap();
+        let addr = server.addr;
+        let pool = std::thread::spawn(move || server.serve(usize::MAX).unwrap());
+
+        let mut idle = Raw::connect(&addr);
+        idle.send(b"{\"cmd\":\"ping\"}\n");
+        assert_eq!(idle.line(), "{\"ok\":true,\"pong\":true}", "{io:?}: idle warm-up");
+
+        let mut c = Raw::connect(&addr);
+        c.send(b"{\"cmd\":\"shutdown\"}\n");
+        let stopping = c.line();
+        assert!(stopping.contains("\"stopping\":true"), "{io:?}: {stopping}");
+
+        if matches!(io, IoMode::Poll) {
+            // the reactor finishes the flush and closes both sockets
+            assert!(matches!(c.r.next(), Incoming::Eof), "poll closes the shutdown conn");
+            assert!(matches!(idle.r.next(), Incoming::Eof), "poll closes idle conns on drain");
+        } else {
+            // blocking workers sit in read() until their clients leave
+            drop(c);
+            drop(idle);
+        }
+        pool.join().unwrap();
+    }
+}
+
+// ---------------------------------------------------------- acceptance
+
+/// The tentpole acceptance test: a poll server carrying 64 idle
+/// connections and 8 concurrent active clients answers JSON, streamed
+/// JSON, and streamed+multiplexed bin1 infers **byte-identically** to
+/// the blocking service over the same packed model (wall-clock
+/// `seconds` zeroed on both sides).  The idle connections stay live
+/// through all of it.
+#[test]
+fn idle_fanin_active_clients_match_blocking_byte_for_byte() {
+    const IDLE: usize = 64;
+    const ACTIVE: usize = 8;
+    const ROWS: usize = 40; // past STREAM_CHUNK_ROWS, so streams chunk
+
+    let eng = EngineHandle::start_default().expect("engine boots");
+    let cfg = ServeCfg { max_conns: 256, ..poll_cfg() };
+    let server = PoolServer::bind("127.0.0.1:0", eng.clone(), cfg).unwrap();
+    let pack = ExperimentConfig {
+        model: "mlp3".into(),
+        train_steps: 40,
+        lr: 0.1,
+        val_size: 512,
+        bits: BitSpec::new(8, 8),
+        method: Method::Mmse,
+        ..Default::default()
+    };
+    let key = server.preload(std::slice::from_ref(&pack)).unwrap().remove(0);
+    let registry = server.registry();
+    let addr = server.addr;
+    let handle = server.shutdown_handle();
+    let pool = std::thread::spawn(move || server.serve(usize::MAX).unwrap());
+
+    // the blocking reference serves the same registry; every active
+    // client opens 3 connections against it
+    let seq = Service::bind("127.0.0.1:0").unwrap();
+    let seq_addr = seq.addr;
+    let seq_thread = std::thread::spawn(move || {
+        let mut runner = Runner::with_registry(eng, registry);
+        seq.serve(&mut runner, ACTIVE * 3).unwrap();
+    });
+
+    let mut idles: Vec<Raw> = (0..IDLE).map(|_| Raw::connect(&addr)).collect();
+
+    let workers: Vec<_> = (0..ACTIVE)
+        .map(|t| {
+            let key = key.clone();
+            std::thread::spawn(move || {
+                let data: Vec<f32> =
+                    (0..ROWS * 64).map(|j| ((j * 31 + t * 7) % 17) as f32 * 0.125 - 1.0).collect();
+                let ir = InferRequest {
+                    key: key.clone(),
+                    inputs: vec![HostTensor::f32(vec![ROWS, 64], data)],
+                };
+                let mut line = String::new();
+                Request::Infer(ir.clone()).write_json(&mut line);
+
+                // (a) plain JSON infer, id-tagged
+                let with_id = format!("{{\"id\":{t},{}", &line[1..]);
+                let reply = |addr: &SocketAddr| {
+                    let mut c = Raw::connect(addr);
+                    c.send(with_id.as_bytes());
+                    c.send(b"\n");
+                    c.line()
+                };
+                let got = reply(&addr);
+                let want = reply(&seq_addr);
+                assert!(got.contains(&format!("\"id\":{t}")), "{got}");
+                assert_eq!(normalize_seconds(&got), normalize_seconds(&want), "JSON infer");
+
+                // (b) streamed JSON: hello json+stream, then chunk lines
+                // and the terminal line, all byte-compared
+                let stream_json = |addr: &SocketAddr| -> (String, Vec<String>) {
+                    let mut c = Raw::connect(addr);
+                    c.send(b"{\"cmd\":\"hello\",\"wire\":\"json\",\"stream\":true}\n");
+                    let hello = c.line();
+                    c.send(with_id.as_bytes());
+                    c.send(b"\n");
+                    let mut lines = Vec::new();
+                    loop {
+                        let l = c.line();
+                        let done = l.parse::<Json>().unwrap().get("ok").is_some();
+                        lines.push(l);
+                        if done {
+                            break;
+                        }
+                    }
+                    (hello, lines)
+                };
+                let (ph, plines) = stream_json(&addr);
+                let (sh, slines) = stream_json(&seq_addr);
+                assert_eq!(ph, sh, "stream hello");
+                assert_eq!(plines.len(), 3, "two chunks + terminal for {ROWS} rows: {plines:?}");
+                let norm = |v: &[String]| -> Vec<String> {
+                    v.iter().map(|l| normalize_seconds(l)).collect()
+                };
+                assert_eq!(norm(&plines), norm(&slines), "streamed JSON lines");
+
+                // (c) streamed bin1 with a string id: chunk frames
+                // verbatim, terminal reply with seconds zeroed
+                let id = ReqId::Str(format!("t{t}"));
+                let mut fbuf = Vec::new();
+                frame::encode_infer_request_id(&ir, Some(&id), &mut fbuf);
+                let stream_bin = |addr: &SocketAddr| -> (String, Vec<(u8, Vec<u8>)>) {
+                    let mut c = Raw::connect(addr);
+                    c.send(b"{\"cmd\":\"hello\",\"wire\":\"bin1\",\"stream\":true}\n");
+                    let hello = c.line();
+                    c.send(&fbuf);
+                    let mut frames = Vec::new();
+                    loop {
+                        let (kind, payload) = c.frame();
+                        let done = kind == frame::KIND_INFER_REP;
+                        frames.push((kind, payload));
+                        if done {
+                            break;
+                        }
+                    }
+                    (hello, frames)
+                };
+                let (ph, pframes) = stream_bin(&addr);
+                let (sh, sframes) = stream_bin(&seq_addr);
+                assert_eq!(ph, sh, "bin1 stream hello");
+                assert_eq!(pframes.len(), 3, "two chunk frames + terminal: {}", pframes.len());
+                assert_eq!(pframes.len(), sframes.len());
+                for (i, ((pk, pp), (sk, sp))) in pframes.into_iter().zip(sframes).enumerate() {
+                    assert_eq!(pk, sk, "frame {i} kind");
+                    if pk == frame::KIND_INFER_REP {
+                        assert_eq!(
+                            normalize_rep_payload(pp),
+                            normalize_rep_payload(sp),
+                            "terminal reply payload"
+                        );
+                    } else {
+                        assert_eq!(pk, frame::KIND_INFER_CHUNK);
+                        assert_eq!(pp, sp, "chunk frame {i} payload");
+                    }
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    seq_thread.join().unwrap();
+
+    // the fan-in never displaced the idle connections: each still
+    // answers on the same socket it opened before the storm
+    for (i, idle) in idles.iter_mut().enumerate() {
+        if i % 16 == 0 {
+            idle.send(b"{\"cmd\":\"ping\"}\n");
+            assert_eq!(idle.line(), "{\"ok\":true,\"pong\":true}", "idle conn {i}");
+        }
+    }
+    handle.shutdown();
+    pool.join().unwrap();
+}

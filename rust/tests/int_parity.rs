@@ -279,6 +279,7 @@ fn int4_direct_cnn6_bit_exact_through_pool_serving() {
         max_batch: 4,
         queue_bound: 16,
         registry_cap: 4,
+        ..Default::default()
     };
     let server = PoolServer::bind("127.0.0.1:0", eng, scfg).unwrap();
     server.registry().put("cnn6:int4".to_string(), std::sync::Arc::new(loaded));

@@ -149,6 +149,7 @@ fn mixed_pack_roundtrips_to_pool_serving_bit_exact() {
         max_batch: 4,
         queue_bound: 16,
         registry_cap: 4,
+        ..Default::default()
     };
     let server = PoolServer::bind("127.0.0.1:0", eng, scfg).unwrap();
     server.registry().put(sum.key.clone(), loaded);

@@ -31,7 +31,8 @@ fn request_roundtrip_every_variant() {
         Request::Models,
         Request::Metrics,
         Request::Shutdown,
-        Request::Hello { wire: "bin1".into() },
+        Request::Hello { wire: "bin1".into(), stream: false },
+        Request::Hello { wire: "json".into(), stream: true },
         Request::Quantize { cfg: Box::new(cfg.clone()), stream: true },
         Request::Quantize { cfg: Box::new(cfg.clone()), stream: false },
         Request::Pack { cfg: Box::new(cfg), po2: false },
@@ -70,7 +71,8 @@ fn response_roundtrip_every_variant() {
     let resps = vec![
         Response::Pong,
         Response::Stopping,
-        Response::Hello { wire: "bin1".into() },
+        Response::Hello { wire: "bin1".into(), stream: false },
+        Response::Hello { wire: "json".into(), stream: true },
         Response::Models { models: vec!["mlp3".into(), "cnn6".into()], packs: vec![] },
         Response::Models {
             models: vec!["mlp3".into()],
@@ -200,6 +202,156 @@ fn infer_parse_errors_stay_typed() {
         let err = Request::from_line(line).expect_err(line).to_string();
         assert!(err.contains(want), "{line}: {err}");
     }
+}
+
+#[test]
+fn request_ids_parse_and_echo() {
+    use lapq::proto::ReqId;
+    // numeric and string ids ride along with any command
+    let (req, id) = Request::parse_line(r#"{"cmd":"ping","id":7}"#).unwrap();
+    assert!(matches!(req, Request::Ping));
+    assert_eq!(id, Some(ReqId::Num(7.0)));
+    let (_, id) = Request::parse_line(r#"{"cmd":"ping","id":"req-1"}"#).unwrap();
+    assert_eq!(id, Some(ReqId::Str("req-1".into())));
+    // non-scalar ids are treated as absent, not an error
+    let (_, id) = Request::parse_line(r#"{"cmd":"ping","id":[1]}"#).unwrap();
+    assert_eq!(id, None);
+    // id-less parse is unchanged
+    let (_, id) = Request::parse_line(r#"{"cmd":"ping"}"#).unwrap();
+    assert_eq!(id, None);
+
+    // echo placement keeps alphabetical key order on every arm, so the
+    // lines stay byte-compatible with a Json tree dump
+    let cases: Vec<(Response, &str)> = vec![
+        (Response::Pong, r#"{"id":7,"ok":true,"pong":true}"#),
+        (
+            Response::Overloaded { retry_after_ms: 40 },
+            r#"{"error":"overloaded","id":7,"ok":false,"retry_after_ms":40}"#,
+        ),
+        (
+            Response::TooLarge { limit_bytes: 10 },
+            r#"{"error":"too_large","id":7,"limit_bytes":10,"ok":false}"#,
+        ),
+        (
+            Response::UnknownCmd { cmd: "x".into() },
+            r#"{"cmd":"x","error":"unknown_cmd","id":7,"ok":false}"#,
+        ),
+        (Response::Error { msg: "boom".into() }, r#"{"error":"boom","id":7,"ok":false}"#),
+    ];
+    for (resp, want) in cases {
+        let mut s = String::new();
+        resp.write_json_id(Some(&ReqId::Num(7.0)), &mut s);
+        assert_eq!(s, want);
+        let tree: Json = s.parse().unwrap();
+        assert_eq!(tree.dump(), s, "id echo keeps tree-serializer byte compatibility");
+        // and with no id, the historical bytes come out verbatim
+        let mut bare = String::new();
+        resp.write_json_id(None, &mut bare);
+        assert_eq!(bare, resp_line(&resp));
+    }
+}
+
+#[test]
+fn stream_chunk_lines_are_tree_compatible() {
+    use lapq::proto::{write_infer_chunk_json, write_infer_final_json, ReqId};
+    let mut s = String::new();
+    write_infer_chunk_json("k", 0, 2, &[0.5, -1.5, 2.0, 0.25], 2, None, &mut s);
+    assert!(s.starts_with(r#"{"chunk":0,"chunks":2,"key":"k","logits":[["#), "{s}");
+    assert!(!s.contains(r#""ok""#), "chunk frames carry no ok (the final does): {s}");
+    let tree: Json = s.parse().unwrap();
+    assert_eq!(tree.dump(), s, "chunk lines stay tree-serializer compatible");
+
+    let mut s = String::new();
+    write_infer_chunk_json("k", 1, 2, &[0.5], 1, Some(&ReqId::Str("a".into())), &mut s);
+    assert!(s.starts_with(r#"{"chunk":1,"chunks":2,"id":"a","key":"k""#), "{s}");
+    let tree: Json = s.parse().unwrap();
+    assert_eq!(tree.dump(), s);
+
+    let reply = InferReply {
+        key: "k".into(),
+        logits: Arr::new(vec![0, 2], vec![]),
+        rows: 64,
+        int_layers: 3,
+        seconds: 0.5,
+    };
+    let mut f = String::new();
+    write_infer_final_json(&reply, Some(&ReqId::Num(5.0)), &mut f);
+    assert_eq!(
+        f,
+        r#"{"id":5,"ok":true,"result":{"int_layers":3,"key":"k","rows":64,"seconds":0.5,"streamed":true}}"#
+    );
+    let tree: Json = f.parse().unwrap();
+    assert_eq!(tree.dump(), f);
+}
+
+#[test]
+fn feed_decoder_matches_blocking_grammar() {
+    use lapq::proto::frame;
+    use lapq::proto::wire::{Feed, FeedDecoder};
+    let mut d = FeedDecoder::new();
+    // byte-at-a-time slow-loris still yields the exact line
+    for b in b"{\"cmd\":\"ping\"}\r\n" {
+        assert!(matches!(d.next(), Feed::More));
+        d.push(&[*b]);
+    }
+    match d.next() {
+        Feed::Line(l) => assert_eq!(l, r#"{"cmd":"ping"}"#, "\\r\\n stripped"),
+        _ => panic!("expected a complete line"),
+    }
+    // pipelined lines come out in order from one push
+    d.push(b"one\ntwo\n");
+    assert!(matches!(d.next(), Feed::Line(l) if l == "one"));
+    assert!(matches!(d.next(), Feed::Line(l) if l == "two"));
+    assert!(matches!(d.next(), Feed::More));
+
+    // a bin1 frame split at an arbitrary byte boundary reassembles
+    let req = InferRequest {
+        key: "k".into(),
+        inputs: vec![HostTensor::f32(vec![1, 2], vec![0.5, -1.0])],
+    };
+    let mut buf = Vec::new();
+    frame::encode_infer_request(&req, &mut buf);
+    let split = buf.len() / 2;
+    d.push(&buf[..split]);
+    assert!(matches!(d.next(), Feed::More));
+    d.push(&buf[split..]);
+    match d.next() {
+        Feed::Frame { kind, payload } => {
+            assert_eq!(kind, frame::KIND_INFER_REQ);
+            let (back, id) = frame::decode_infer_request_id(&payload).unwrap();
+            assert_eq!(back.key, "k");
+            assert_eq!(id, None);
+        }
+        _ => panic!("expected a complete frame"),
+    }
+
+    // corrupt CRC is fatal, exactly like the blocking reader
+    let mut bad = buf.clone();
+    let n = bad.len();
+    bad[n - 1] ^= 0xFF;
+    let mut d = FeedDecoder::new();
+    d.push(&bad);
+    assert!(matches!(d.next(), Feed::Corrupt(_)));
+
+    // invalid UTF-8 in a line is corrupt, not a panic
+    let mut d = FeedDecoder::new();
+    d.push(&[0xC3, 0x28, b'\n']);
+    assert!(matches!(d.next(), Feed::Corrupt(_)));
+
+    // an unterminated line beyond the cap is too_large from the header
+    // of the buffer alone (no newline required to detect the attack)
+    let mut d = FeedDecoder::new();
+    d.push(&vec![b'x'; lapq::proto::MAX_LINE_BYTES + 2]);
+    assert!(matches!(d.next(), Feed::TooLarge { .. }));
+
+    // an oversized frame is rejected from its 8-byte header, before any
+    // body is buffered
+    let mut d = FeedDecoder::new();
+    let huge = (lapq::proto::MAX_FRAME_BYTES as u32) + 1;
+    let mut hdr = vec![0xBF, b'Q', 1, 1];
+    hdr.extend_from_slice(&huge.to_le_bytes());
+    d.push(&hdr);
+    assert!(matches!(d.next(), Feed::TooLarge { .. }));
 }
 
 /// Validate with the borrowing reader only (what the hot path does for

@@ -292,12 +292,15 @@ fn infer_request(key: &str, row: &[f32]) -> Json {
 #[test]
 fn concurrent_infer_matches_sequential_bit_for_bit() {
     let eng = EngineHandle::start_default().expect("engine boots");
+    // `io` comes from the default (LAPQ_SERVE_IO in CI's second pass),
+    // so this bit-for-bit contract pins both transports.
     let scfg = ServeCfg {
         workers: 8,
         batch_window_ms: 2.0,
         max_batch: 16,
         queue_bound: 64,
         registry_cap: 4,
+        ..Default::default()
     };
     let server = PoolServer::bind("127.0.0.1:0", eng.clone(), scfg).unwrap();
     let key = server.preload(std::slice::from_ref(&fast_pack_cfg())).unwrap().remove(0);
@@ -361,12 +364,18 @@ fn concurrent_infer_matches_sequential_bit_for_bit() {
 #[test]
 fn overload_sheds_with_typed_response() {
     let eng = EngineHandle::start_default().expect("engine boots");
+    // Pinned to the threads transport: the choreography below parks the
+    // single blocking worker on a partial line, which is meaningless
+    // for the reactor (it never blocks on a read) — the reactor's shed
+    // paths are pinned by tests/event_serve.rs instead.
     let scfg = ServeCfg {
         workers: 1,
         batch_window_ms: 0.0,
         max_batch: 1,
         queue_bound: 1,
         registry_cap: 4,
+        io: lapq::config::IoMode::Threads,
+        ..Default::default()
     };
     let server = PoolServer::bind("127.0.0.1:0", eng, scfg).unwrap();
     let addr = server.addr;

@@ -65,6 +65,7 @@ fn bin1_and_json_infer_are_bit_identical_across_servers() {
         max_batch: 4,
         queue_bound: 16,
         registry_cap: 4,
+        ..Default::default()
     };
     let server = PoolServer::bind("127.0.0.1:0", eng.clone(), scfg).unwrap();
     let key = server.preload(std::slice::from_ref(&fast_pack_cfg())).unwrap().remove(0);
@@ -133,6 +134,7 @@ fn frames_require_handshake_and_corruption_closes() {
         max_batch: 1,
         queue_bound: 4,
         registry_cap: 2,
+        ..Default::default()
     };
     let server = PoolServer::bind("127.0.0.1:0", eng, scfg).unwrap();
     let addr = server.addr;
@@ -208,6 +210,7 @@ fn oversized_inputs_get_typed_replies_then_close() {
         max_batch: 1,
         queue_bound: 4,
         registry_cap: 2,
+        ..Default::default()
     };
     let server = PoolServer::bind("127.0.0.1:0", eng, scfg).unwrap();
     let addr = server.addr;

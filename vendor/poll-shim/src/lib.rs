@@ -1,0 +1,282 @@
+//! Hermetic `poll(2)` bindings: the minimal raw-FFI surface the
+//! event-driven serving core needs, vendored so the fully-offline build
+//! keeps working without the `libc` crate.
+//!
+//! Scope is deliberately tiny — readiness polling, a self-pipe waker,
+//! and an fd-limit raise for the idle-connection bench:
+//!
+//! * [`poll`] over `#[repr(C)]` [`PollFd`] entries (`EINTR` is absorbed
+//!   into an empty wakeup, so callers never see it).
+//! * [`WakePipe`]: a nonblocking self-pipe whose read end sits in the
+//!   poll set; any thread calls [`WakePipe::wake`] to interrupt a
+//!   blocked reactor.
+//! * [`raise_nofile`]: best-effort `RLIMIT_NOFILE` bump toward a target
+//!   (10k sockets need more than the common 1024 soft default).
+//!
+//! Everything is `cfg(unix)`; non-unix builds get stubs that return
+//! `ErrorKind::Unsupported`, and the reactor refuses `serve.io=poll`
+//! there before any of this is reached.
+
+use std::io;
+
+/// One entry in the poll set, matching the kernel's `struct pollfd`.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct PollFd {
+    pub fd: i32,
+    pub events: i16,
+    pub revents: i16,
+}
+
+impl PollFd {
+    pub fn new(fd: i32, events: i16) -> PollFd {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLHUP | POLLERR) != 0
+    }
+
+    pub fn writable(&self) -> bool {
+        self.revents & (POLLOUT | POLLHUP | POLLERR) != 0
+    }
+
+    /// The fd itself is invalid (closed out from under the set).
+    pub fn invalid(&self) -> bool {
+        self.revents & POLLNVAL != 0
+    }
+}
+
+// Event bits — identical values on Linux and the BSDs (incl. macOS).
+pub const POLLIN: i16 = 0x001;
+pub const POLLOUT: i16 = 0x004;
+pub const POLLERR: i16 = 0x008;
+pub const POLLHUP: i16 = 0x010;
+pub const POLLNVAL: i16 = 0x020;
+
+#[cfg(unix)]
+mod sys {
+    use super::*;
+
+    #[cfg(target_os = "linux")]
+    type NfdsT = usize; // nfds_t is unsigned long on Linux
+    #[cfg(not(target_os = "linux"))]
+    type NfdsT = u32;
+
+    #[cfg(target_os = "linux")]
+    const O_NONBLOCK: i32 = 0o4000;
+    #[cfg(not(target_os = "linux"))]
+    const O_NONBLOCK: i32 = 0x0004;
+
+    #[cfg(target_os = "linux")]
+    const RLIMIT_NOFILE: i32 = 7;
+    #[cfg(not(target_os = "linux"))]
+    const RLIMIT_NOFILE: i32 = 8;
+
+    const F_GETFL: i32 = 3;
+    const F_SETFL: i32 = 4;
+
+    #[repr(C)]
+    struct Rlimit {
+        rlim_cur: u64,
+        rlim_max: u64,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: i32) -> i32;
+        fn pipe(fds: *mut i32) -> i32;
+        fn fcntl(fd: i32, cmd: i32, arg: i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        fn close(fd: i32) -> i32;
+        fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+
+    /// Block until any fd is ready or `timeout_ms` elapses (-1 = forever).
+    /// Returns how many entries have nonzero `revents`; an interrupted
+    /// call (`EINTR`) reports 0 ready fds instead of an error.
+    pub fn poll_impl(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+        let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(e);
+        }
+        Ok(n as usize)
+    }
+
+    fn set_nonblocking(fd: i32) -> io::Result<()> {
+        let flags = unsafe { fcntl(fd, F_GETFL, 0) };
+        if flags < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        if unsafe { fcntl(fd, F_SETFL, flags | O_NONBLOCK) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    pub struct WakePipeImpl {
+        r: i32,
+        w: i32,
+    }
+
+    impl WakePipeImpl {
+        pub fn new() -> io::Result<WakePipeImpl> {
+            let mut fds = [0i32; 2];
+            if unsafe { pipe(fds.as_mut_ptr()) } < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            let p = WakePipeImpl { r: fds[0], w: fds[1] };
+            // Nonblocking on both ends: a full pipe must not block the
+            // waker, a drained pipe must not block the reactor.
+            set_nonblocking(p.r)?;
+            set_nonblocking(p.w)?;
+            Ok(p)
+        }
+
+        pub fn read_fd(&self) -> i32 {
+            self.r
+        }
+
+        /// Nudge the poller.  A full pipe (EAGAIN) already guarantees a
+        /// pending wakeup, so the result is ignored.
+        pub fn wake(&self) {
+            let b = [1u8];
+            unsafe { write(self.w, b.as_ptr(), 1) };
+        }
+
+        /// Swallow every queued wake byte.
+        pub fn drain(&self) {
+            let mut buf = [0u8; 64];
+            loop {
+                let n = unsafe { read(self.r, buf.as_mut_ptr(), buf.len()) };
+                if n <= 0 {
+                    return;
+                }
+            }
+        }
+    }
+
+    impl Drop for WakePipeImpl {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.r);
+                close(self.w);
+            }
+        }
+    }
+
+    /// Raise the soft `RLIMIT_NOFILE` toward `target` (clamped at the
+    /// hard limit).  Returns the resulting soft limit.
+    pub fn raise_nofile_impl(target: u64) -> io::Result<u64> {
+        let mut lim = Rlimit { rlim_cur: 0, rlim_max: 0 };
+        if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        if lim.rlim_cur >= target {
+            return Ok(lim.rlim_cur);
+        }
+        let want = target.min(lim.rlim_max);
+        let new = Rlimit { rlim_cur: want, rlim_max: lim.rlim_max };
+        if unsafe { setrlimit(RLIMIT_NOFILE, &new) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(want)
+    }
+}
+
+#[cfg(unix)]
+pub fn poll(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    sys::poll_impl(fds, timeout_ms)
+}
+
+#[cfg(not(unix))]
+pub fn poll(_fds: &mut [PollFd], _timeout_ms: i32) -> io::Result<usize> {
+    Err(io::Error::new(io::ErrorKind::Unsupported, "poll(2) requires a unix platform"))
+}
+
+/// Self-pipe waker: the read end lives in the reactor's poll set, any
+/// thread writes one byte to interrupt a blocked `poll`.
+pub struct WakePipe {
+    #[cfg(unix)]
+    inner: sys::WakePipeImpl,
+}
+
+impl WakePipe {
+    #[cfg(unix)]
+    pub fn new() -> io::Result<WakePipe> {
+        Ok(WakePipe { inner: sys::WakePipeImpl::new()? })
+    }
+
+    #[cfg(not(unix))]
+    pub fn new() -> io::Result<WakePipe> {
+        Err(io::Error::new(io::ErrorKind::Unsupported, "self-pipe requires a unix platform"))
+    }
+
+    /// The fd to register with `POLLIN`.
+    pub fn read_fd(&self) -> i32 {
+        #[cfg(unix)]
+        {
+            self.inner.read_fd()
+        }
+        #[cfg(not(unix))]
+        {
+            -1
+        }
+    }
+
+    pub fn wake(&self) {
+        #[cfg(unix)]
+        self.inner.wake();
+    }
+
+    pub fn drain(&self) {
+        #[cfg(unix)]
+        self.inner.drain();
+    }
+}
+
+/// Best-effort soft fd-limit raise toward `target`; returns the new
+/// (or already-sufficient) soft limit.
+#[cfg(unix)]
+pub fn raise_nofile(target: u64) -> io::Result<u64> {
+    sys::raise_nofile_impl(target)
+}
+
+#[cfg(not(unix))]
+pub fn raise_nofile(_target: u64) -> io::Result<u64> {
+    Err(io::Error::new(io::ErrorKind::Unsupported, "rlimit requires a unix platform"))
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wake_pipe_reports_readable_then_drains() {
+        let p = WakePipe::new().unwrap();
+        let mut fds = [PollFd::new(p.read_fd(), POLLIN)];
+        // nothing pending: an immediate poll times out with 0 ready
+        assert_eq!(poll(&mut fds, 0).unwrap(), 0);
+        p.wake();
+        p.wake();
+        fds[0].revents = 0;
+        assert_eq!(poll(&mut fds, 1000).unwrap(), 1);
+        assert!(fds[0].readable());
+        p.drain();
+        fds[0].revents = 0;
+        assert_eq!(poll(&mut fds, 0).unwrap(), 0, "drained pipe is quiet");
+    }
+
+    #[test]
+    fn raise_nofile_is_monotone() {
+        let cur = raise_nofile(0).unwrap();
+        assert!(cur > 0);
+        let again = raise_nofile(cur).unwrap();
+        assert!(again >= cur);
+    }
+}
