@@ -30,8 +30,8 @@ verify: build test
 
 # Perf trajectory smoke: bounded perf runs that write
 # rust/bench_results/BENCH_hotpath.json, BENCH_int_infer.json,
-# BENCH_calib.json, BENCH_mixed.json, BENCH_serve.json and
-# BENCH_wire.json (uploaded as CI artifacts).
+# BENCH_calib.json, BENCH_mixed.json, BENCH_serve.json, BENCH_wire.json
+# and BENCH_fleet.json (uploaded as CI artifacts).
 bench-smoke:
 	BENCH_SMOKE=1 $(CARGO) bench --bench perf_hotpath
 	BENCH_SMOKE=1 $(CARGO) bench --bench perf_int_gemm
@@ -39,6 +39,7 @@ bench-smoke:
 	BENCH_SMOKE=1 $(CARGO) bench --bench perf_mixed
 	BENCH_SMOKE=1 $(CARGO) bench --bench perf_serve
 	BENCH_SMOKE=1 $(CARGO) bench --bench perf_wire
+	BENCH_SMOKE=1 $(CARGO) bench --bench perf_fleet
 
 # Layer-1/2 AOT artifacts (optional; requires Python + JAX).  The default
 # build never needs them: the CPU backend executes the model zoo natively.

@@ -1,0 +1,254 @@
+//! Perf: the fleet tier — throughput and tail latency of single-row
+//! INT8/INT4 `mlp3` infer requests through the consistent-hash router,
+//! 1 replica vs 3 replicas, plus the latency cost of losing a replica
+//! mid-load.
+//!
+//! Scenarios:
+//!
+//! * `fleet1` / `fleet3` — the same client load (concurrency 32 in full
+//!   runs) against a router fronting 1 vs 3 pool-server replicas, two
+//!   routing keys (mlp3 w8a8 / w4a4) spread over the ring.  The
+//!   `fleet_speedup` headline is the throughput ratio.
+//! * **failover** — a 3-replica fleet where one replica is shut down
+//!   mid-load: every request must still be answered (transport failures
+//!   retry on the next ring candidate), and `failover_p99_ms` records
+//!   the tail latency including the failover spike.
+//!
+//! `BENCH_SMOKE=1` runs a bounded subset (CI-sized) — either way the
+//! numbers land in `bench_results/BENCH_fleet.json`.
+
+use lapq::benchkit::{f3, Table};
+use lapq::config::{BitSpec, ExperimentConfig, FleetCfg, Method, ServeCfg};
+use lapq::runtime::int::kernels::{active_kernel_name, KernelChoice};
+use lapq::runtime::EngineHandle;
+use lapq::serve::{PoolHandle, PoolServer, Router, RouterHandle};
+use lapq::util::json::Json;
+use lapq::util::stats;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+fn infer_req(key: &str, row: &[f32]) -> String {
+    Json::obj(vec![
+        ("cmd", Json::Str("infer".into())),
+        ("key", Json::Str(key.into())),
+        ("x", Json::Arr(vec![Json::arr_f32(row)])),
+    ])
+    .dump()
+}
+
+/// One pool-server replica running on its own thread.
+struct Cell {
+    addr: SocketAddr,
+    handle: PoolHandle,
+    thread: std::thread::JoinHandle<lapq::Result<()>>,
+}
+
+impl Cell {
+    fn stop(self) {
+        self.handle.shutdown();
+        self.thread.join().expect("replica thread").expect("replica serve");
+    }
+}
+
+/// Start `n` replicas, each preloading the same packed artifacts
+/// (deterministic configs → bit-identical models on every cell).
+fn start_fleet(
+    eng: &EngineHandle,
+    n: usize,
+    packs: &[ExperimentConfig],
+) -> lapq::Result<(Vec<Cell>, Vec<String>)> {
+    let scfg = ServeCfg {
+        workers: 8,
+        batch_window_ms: 0.5,
+        max_batch: 32,
+        queue_bound: 256,
+        registry_cap: 4,
+        ..Default::default()
+    };
+    let mut cells = Vec::with_capacity(n);
+    let mut keys = Vec::new();
+    for _ in 0..n {
+        let server = PoolServer::bind("127.0.0.1:0", eng.clone(), scfg.clone())?;
+        keys = server.preload(packs)?;
+        let addr = server.addr;
+        let handle = server.shutdown_handle();
+        let thread = std::thread::spawn(move || server.serve(usize::MAX));
+        cells.push(Cell { addr, handle, thread });
+    }
+    Ok((cells, keys))
+}
+
+fn start_router(
+    cells: &[Cell],
+) -> lapq::Result<(SocketAddr, RouterHandle, std::thread::JoinHandle<lapq::Result<()>>)> {
+    let fcfg = FleetCfg {
+        replicas: cells.iter().map(|c| c.addr.to_string()).collect(),
+        vnodes: 64,
+        ping_interval_ms: 100,
+        fail_threshold: 2,
+        eject_ms: 2000,
+    };
+    let router = Router::bind("127.0.0.1:0", &fcfg)?;
+    let addr = router.addr;
+    let handle = router.shutdown_handle();
+    let thread = std::thread::spawn(move || router.serve(usize::MAX));
+    Ok((addr, handle, thread))
+}
+
+/// `clients` persistent connections through `addr`, each issuing `reqs`
+/// sequential single-row infer requests (client `ci` targets
+/// `keys[ci % len]`).  Returns (throughput req/s, latencies s).
+fn run_load(addr: SocketAddr, keys: &[String], clients: usize, reqs: usize) -> (f64, Vec<f32>) {
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(clients);
+    for ci in 0..clients {
+        let key = keys[ci % keys.len()].clone();
+        handles.push(std::thread::spawn(move || {
+            let row: Vec<f32> =
+                (0..64).map(|j| ((ci * 31 + j * 7) % 23) as f32 * 0.04 - 0.4).collect();
+            let stream = TcpStream::connect(addr).expect("connect");
+            let mut w = stream.try_clone().expect("clone");
+            let mut r = BufReader::new(stream);
+            let req = infer_req(&key, &row);
+            let mut lat = Vec::with_capacity(reqs);
+            let mut line = String::new();
+            for _ in 0..reqs {
+                let t = Instant::now();
+                w.write_all(req.as_bytes()).expect("write");
+                w.write_all(b"\n").expect("write");
+                w.flush().expect("flush");
+                line.clear();
+                r.read_line(&mut line).expect("read");
+                lat.push(t.elapsed().as_secs_f64() as f32);
+                let resp = line.parse::<Json>().expect("json response");
+                assert_eq!(resp.req("ok").as_bool(), Some(true), "{resp:?}");
+            }
+            lat
+        }));
+    }
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().expect("client thread"));
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    ((clients * reqs) as f64 / wall, all)
+}
+
+fn main() -> lapq::Result<()> {
+    lapq::util::logging::init();
+    let smoke_var = std::env::var("BENCH_SMOKE");
+    let smoke = matches!(smoke_var.as_deref(), Ok(v) if !v.is_empty() && v != "0");
+    let conc = if smoke { 8 } else { 32 };
+    let reqs = if smoke { 20 } else { 100 };
+
+    // Two routing keys spread over the ring: the same mlp3 at w8a8 and
+    // w4a4 (both cheap to pack, deterministic across replicas).
+    let pack8 = ExperimentConfig {
+        model: "mlp3".into(),
+        train_steps: if smoke { 40 } else { 120 },
+        lr: 0.1,
+        val_size: 512,
+        bits: BitSpec::new(8, 8),
+        method: Method::Mmse,
+        ..Default::default()
+    };
+    let pack4 = ExperimentConfig { bits: BitSpec::new(4, 4), ..pack8.clone() };
+    let packs = [pack8, pack4];
+    let eng = EngineHandle::start_default()?;
+
+    let mut table = Table::new(
+        "fleet tier: routed throughput + tail latency (INT8/INT4 mlp3, 1-row requests)",
+        &["fleet", "conc", "req/s", "p50 ms", "p95 ms", "p99 ms"],
+    );
+    let mut sizes_json = Vec::new();
+    let mut rps_by_n = Vec::new();
+    for n in [1usize, 3] {
+        let (cells, keys) = start_fleet(&eng, n, &packs)?;
+        let (raddr, rhandle, rthread) = start_router(&cells)?;
+        let (rps, lat) = run_load(raddr, &keys, conc, reqs);
+        rhandle.shutdown();
+        rthread.join().expect("router thread")?;
+        for c in cells {
+            c.stop();
+        }
+        let p50 = stats::percentile(&lat, 50.0) as f64 * 1e3;
+        let p95 = stats::percentile(&lat, 95.0) as f64 * 1e3;
+        let p99 = stats::percentile(&lat, 99.0) as f64 * 1e3;
+        table.row(&[
+            format!("fleet{n}"),
+            conc.to_string(),
+            format!("{rps:.0}"),
+            f3(p50),
+            f3(p95),
+            f3(p99),
+        ]);
+        rps_by_n.push(rps);
+        sizes_json.push(Json::obj(vec![
+            ("replicas", Json::Num(n as f64)),
+            ("concurrency", Json::Num(conc as f64)),
+            ("requests", Json::Num((conc * reqs) as f64)),
+            ("throughput_rps", Json::Num(rps)),
+            ("p50_ms", Json::Num(p50)),
+            ("p95_ms", Json::Num(p95)),
+            ("p99_ms", Json::Num(p99)),
+        ]));
+    }
+    table.print();
+    let fleet_speedup = rps_by_n[1] / rps_by_n[0].max(1e-9);
+    println!(
+        "\nconcurrency {conc}: fleet3 {:.0} req/s vs fleet1 {:.0} req/s ({fleet_speedup:.2}x)",
+        rps_by_n[1], rps_by_n[0]
+    );
+
+    // -- failover under load ------------------------------------------------
+    // 3 replicas, same load; one replica is shut down once the load is
+    // in flight.  Every request must still be answered (the router
+    // retries transport failures on the next ring candidate); the p99
+    // includes the failover spike.
+    let (mut cells, keys) = start_fleet(&eng, 3, &packs)?;
+    let (raddr, rhandle, rthread) = start_router(&cells)?;
+    let killer = {
+        let victim = cells.remove(0);
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(if smoke { 100 } else { 300 }));
+            victim.stop();
+        })
+    };
+    let (failover_rps, lat) = run_load(raddr, &keys, conc, reqs);
+    killer.join().expect("killer thread");
+    rhandle.shutdown();
+    rthread.join().expect("router thread")?;
+    for c in cells {
+        c.stop();
+    }
+    let failover_p50_ms = stats::percentile(&lat, 50.0) as f64 * 1e3;
+    let failover_p99_ms = stats::percentile(&lat, 99.0) as f64 * 1e3;
+    println!(
+        "failover (1 of 3 replicas killed mid-load): {failover_rps:.0} req/s, \
+         p50 {failover_p50_ms:.3} ms, p99 {failover_p99_ms:.3} ms, all {} requests answered",
+        conc * reqs
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("perf_fleet".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("model", Json::Str("mlp3".into())),
+        ("kernel", Json::Str(active_kernel_name(KernelChoice::Auto).into())),
+        ("concurrency", Json::Num(conc as f64)),
+        ("requests_per_client", Json::Num(reqs as f64)),
+        ("fleets", Json::Arr(sizes_json)),
+        ("fleet1_rps", Json::Num(rps_by_n[0])),
+        ("fleet3_rps", Json::Num(rps_by_n[1])),
+        ("fleet_speedup", Json::Num(fleet_speedup)),
+        ("failover_rps", Json::Num(failover_rps)),
+        ("failover_p50_ms", Json::Num(failover_p50_ms)),
+        ("failover_p99_ms", Json::Num(failover_p99_ms)),
+    ]);
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("BENCH_fleet.json");
+    std::fs::write(&path, report.dump())?;
+    println!("[json] wrote {path:?}");
+    Ok(())
+}

@@ -12,7 +12,7 @@ use crate::lapq::events::LogObserver;
 use crate::runtime::cpu::ops::{argmax_correct, bce_correct};
 use crate::runtime::int::{ExecMode, InferSession, PackOpts, QuantizedModel};
 use crate::runtime::{EngineHandle, Manifest};
-use crate::serve::PoolServer;
+use crate::serve::{PoolServer, Router};
 use anyhow::{bail, Context, Result};
 use parser::Args;
 use std::path::{Path, PathBuf};
@@ -41,7 +41,8 @@ COMMANDS:
                                 fake-quant reference (bit-exact at tol 0)
   serve      [--addr HOST:PORT] [--io threads|poll] [--workers N]
              [--batch-window-ms F] [--max-batch N] [--queue-bound N]
-             [--registry-cap N] [--max-conns N] [--out-queue-kib N]
+             [--registry-cap N] [--registry-shards N] [--spill-dir DIR]
+             [--max-conns N] [--out-queue-kib N]
              [--max-lanes N] [--preload M1,M2] [--seq]
                                 start the TCP job service: concurrent
                                 worker pool + infer micro-batching by
@@ -50,7 +51,15 @@ COMMANDS:
                                 readiness-polled reactor thread (idle
                                 connections cost an fd, not a thread);
                                 --preload packs models into the registry
-                                before taking traffic
+                                before taking traffic; --spill-dir keeps
+                                evicted packed models on disk for
+                                transparent reload
+  route      --replicas A1,A2 [--addr HOST:PORT] [--vnodes N]
+             [--ping-interval-ms N] [--fail-threshold N] [--eject-ms N]
+                                start the fleet front tier: consistent-hash
+                                routing of pack keys across pool-server
+                                replicas with health checks, ejection and
+                                overload-aware retry
   metrics                       dump the metrics registry
 ";
 
@@ -81,6 +90,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         Some("pack") => pack(&args),
         Some("infer") => infer(&args),
         Some("serve") => serve(&args),
+        Some("route") => route(&args),
         Some("metrics") => {
             println!("{}", crate::coordinator::metrics::dump().dump());
             Ok(())
@@ -301,6 +311,8 @@ fn serve(args: &Args) -> Result<()> {
             "max-batch",
             "queue-bound",
             "registry-cap",
+            "registry-shards",
+            "spill-dir",
             "preload",
             "io",
             "max-conns",
@@ -336,6 +348,12 @@ fn serve(args: &Args) -> Result<()> {
     }
     if let Some(v) = args.flag("registry-cap") {
         scfg.registry_cap = v.parse()?;
+    }
+    if let Some(v) = args.flag("registry-shards") {
+        scfg.registry_shards = v.parse()?;
+    }
+    if let Some(v) = args.flag("spill-dir") {
+        scfg.spill_dir = Some(v.to_string());
     }
     if let Some(v) = args.flag("io") {
         scfg.io = IoMode::parse(v)?;
@@ -376,4 +394,44 @@ fn serve(args: &Args) -> Result<()> {
         scfg.max_lanes,
     );
     server.serve(usize::MAX)
+}
+
+/// `repro route`: the fleet front tier.  Consistent-hash routing of
+/// pack keys across pool-server replicas (started separately with
+/// `repro serve`), with periodic pings, ejection and overload-aware
+/// retry.  Config file / `-s fleet.*` first, explicit flags win.
+fn route(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let addr = args.flag("addr").unwrap_or("127.0.0.1:7170");
+    let mut fcfg = cfg.fleet.clone();
+    if let Some(v) = args.flag("replicas") {
+        fcfg.replicas = v
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+    }
+    if let Some(v) = args.flag("vnodes") {
+        fcfg.vnodes = v.parse()?;
+    }
+    if let Some(v) = args.flag("ping-interval-ms") {
+        fcfg.ping_interval_ms = v.parse()?;
+    }
+    if let Some(v) = args.flag("fail-threshold") {
+        fcfg.fail_threshold = v.parse()?;
+    }
+    if let Some(v) = args.flag("eject-ms") {
+        fcfg.eject_ms = v.parse()?;
+    }
+    let router = Router::bind(addr, &fcfg)?;
+    println!(
+        "routing on {} ({} replicas, {} vnodes, ping {} ms, eject after {} failures for {} ms)",
+        router.addr,
+        fcfg.replicas.len(),
+        fcfg.vnodes,
+        fcfg.ping_interval_ms,
+        fcfg.fail_threshold,
+        fcfg.eject_ms,
+    );
+    router.serve(usize::MAX)
 }

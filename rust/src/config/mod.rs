@@ -176,6 +176,10 @@ impl Default for LapqCfg {
 /// module both can depend on.
 pub const DEFAULT_REGISTRY_CAP: usize = 4;
 
+/// Default registry hash-shard count for pool deployments (the unit
+/// constructor `ModelRegistry::new` stays single-shard).
+pub const DEFAULT_REGISTRY_SHARDS: usize = 4;
+
 /// How the pool server owns connection I/O.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum IoMode {
@@ -247,6 +251,12 @@ pub struct ServeCfg {
     /// Max per-model batcher lanes; hot keys past the cap hash onto an
     /// existing lane (1 reproduces the single global batcher).
     pub max_lanes: usize,
+    /// Registry hash shards under the one `registry_cap` budget
+    /// (1 reproduces the single global LRU lock).
+    pub registry_shards: usize,
+    /// Spill directory for evicted packed models (`None` disables
+    /// spill: an evicted model is gone until re-packed).
+    pub spill_dir: Option<String>,
 }
 
 impl Default for ServeCfg {
@@ -261,6 +271,39 @@ impl Default for ServeCfg {
             max_conns: 4096,
             out_queue_kib: 256,
             max_lanes: 4,
+            registry_shards: DEFAULT_REGISTRY_SHARDS,
+            spill_dir: None,
+        }
+    }
+}
+
+/// Fleet-tier knobs (`rust/src/serve/fleet/`): the consistent-hash
+/// front-tier router over N pool-server replicas.  Part of the lossless
+/// config surface with `-s fleet.*` overrides; `repro route` reads it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FleetCfg {
+    /// Pool-server replica addresses (`host:port`).  Empty means "no
+    /// fleet": the `route` command requires at least one.
+    pub replicas: Vec<String>,
+    /// Virtual nodes per replica on the hash ring (more = smoother key
+    /// spread).
+    pub vnodes: usize,
+    /// Health-probe interval in milliseconds.
+    pub ping_interval_ms: u64,
+    /// Consecutive transport failures before a replica is ejected.
+    pub fail_threshold: u32,
+    /// Ejection window in milliseconds before probational re-admission.
+    pub eject_ms: u64,
+}
+
+impl Default for FleetCfg {
+    fn default() -> Self {
+        FleetCfg {
+            replicas: Vec::new(),
+            vnodes: 64,
+            ping_interval_ms: 500,
+            fail_threshold: 3,
+            eject_ms: 2000,
         }
     }
 }
@@ -345,6 +388,7 @@ pub struct ExperimentConfig {
     pub lapq: LapqCfg,
     pub serve: ServeCfg,
     pub mixed: MixedCfg,
+    pub fleet: FleetCfg,
 }
 
 impl Default for ExperimentConfig {
@@ -361,6 +405,7 @@ impl Default for ExperimentConfig {
             lapq: LapqCfg::default(),
             serve: ServeCfg::default(),
             mixed: MixedCfg::default(),
+            fleet: FleetCfg::default(),
         }
     }
 }
@@ -622,6 +667,70 @@ pub const OVERRIDES: &[OverrideSpec] = &[
         },
     },
     OverrideSpec {
+        key: "registry.shards",
+        help: "registry hash shards under one capacity budget (1 = single lock)",
+        example: "4",
+        apply: |c, v| {
+            c.serve.registry_shards = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "registry.spill_dir",
+        help: "spill directory for evicted packed models (reload on miss)",
+        example: "packed/spill",
+        apply: |c, v| {
+            c.serve.spill_dir = Some(v.to_string());
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "fleet.replicas",
+        help: "comma-separated pool-server replica addresses for the router",
+        example: "127.0.0.1:7071,127.0.0.1:7072",
+        apply: |c, v| {
+            c.fleet.replicas =
+                v.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "fleet.vnodes",
+        help: "virtual nodes per replica on the consistent-hash ring",
+        example: "64",
+        apply: |c, v| {
+            c.fleet.vnodes = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "fleet.ping_interval_ms",
+        help: "router health-probe interval in ms",
+        example: "500",
+        apply: |c, v| {
+            c.fleet.ping_interval_ms = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "fleet.fail_threshold",
+        help: "consecutive transport failures before replica ejection",
+        example: "3",
+        apply: |c, v| {
+            c.fleet.fail_threshold = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
+        key: "fleet.eject_ms",
+        help: "replica ejection window in ms before probational re-admission",
+        example: "2000",
+        apply: |c, v| {
+            c.fleet.eject_ms = v.parse()?;
+            Ok(())
+        },
+    },
+    OverrideSpec {
         key: "mixed.enabled",
         help: "per-layer weight bit allocation under a size budget (true|false)",
         example: "true",
@@ -810,6 +919,32 @@ impl ExperimentConfig {
                 cfg.serve.max_lanes = v as usize;
             }
         }
+        if let Some(r) = j.get("registry") {
+            if let Some(v) = r.get("shards").and_then(|v| v.as_f64()) {
+                cfg.serve.registry_shards = v as usize;
+            }
+            if let Some(v) = r.get("spill_dir").and_then(|v| v.as_str()) {
+                cfg.serve.spill_dir = Some(v.to_string());
+            }
+        }
+        if let Some(f) = j.get("fleet") {
+            if let Some(arr) = f.get("replicas").and_then(|v| v.as_arr()) {
+                cfg.fleet.replicas =
+                    arr.iter().filter_map(|x| x.as_str().map(str::to_string)).collect();
+            }
+            if let Some(v) = f.get("vnodes").and_then(|v| v.as_f64()) {
+                cfg.fleet.vnodes = v as usize;
+            }
+            if let Some(v) = f.get("ping_interval_ms").and_then(|v| v.as_f64()) {
+                cfg.fleet.ping_interval_ms = v as u64;
+            }
+            if let Some(v) = f.get("fail_threshold").and_then(|v| v.as_f64()) {
+                cfg.fleet.fail_threshold = v as u32;
+            }
+            if let Some(v) = f.get("eject_ms").and_then(|v| v.as_f64()) {
+                cfg.fleet.eject_ms = v as u64;
+            }
+        }
         if let Some(m) = j.get("mixed") {
             if let Some(v) = m.get("enabled").and_then(|v| v.as_bool()) {
                 cfg.mixed.enabled = v;
@@ -895,6 +1030,33 @@ impl ExperimentConfig {
                     ("max_conns", Json::Num(self.serve.max_conns as f64)),
                     ("out_queue_kib", Json::Num(self.serve.out_queue_kib as f64)),
                     ("max_lanes", Json::Num(self.serve.max_lanes as f64)),
+                ]),
+            ),
+            (
+                "registry",
+                Json::obj({
+                    let mut kv =
+                        vec![("shards", Json::Num(self.serve.registry_shards as f64))];
+                    // omitted when None so spill-less configs round-trip
+                    if let Some(d) = &self.serve.spill_dir {
+                        kv.push(("spill_dir", Json::Str(d.clone())));
+                    }
+                    kv
+                }),
+            ),
+            (
+                "fleet",
+                Json::obj(vec![
+                    (
+                        "replicas",
+                        Json::Arr(
+                            self.fleet.replicas.iter().map(|r| Json::Str(r.clone())).collect(),
+                        ),
+                    ),
+                    ("vnodes", Json::Num(self.fleet.vnodes as f64)),
+                    ("ping_interval_ms", Json::Num(self.fleet.ping_interval_ms as f64)),
+                    ("fail_threshold", Json::Num(self.fleet.fail_threshold as f64)),
+                    ("eject_ms", Json::Num(self.fleet.eject_ms as f64)),
                 ]),
             ),
             (
@@ -1031,10 +1193,54 @@ mod tests {
             max_conns: 123,
             out_queue_kib: 33,
             max_lanes: 2,
+            registry_shards: 5,
+            spill_dir: Some("packed/spill-test".into()),
         };
         let c = ExperimentConfig { serve, ..Default::default() };
         let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c2, c, "serve sub-config must round-trip losslessly");
+        // spill_dir = None must round-trip too (the key is omitted)
+        let c3 = ExperimentConfig::default();
+        assert_eq!(ExperimentConfig::from_json(&c3.to_json()).unwrap(), c3);
+    }
+
+    /// The fleet sub-config joins the lossless surface.
+    #[test]
+    fn json_roundtrip_fleet_subconfig() {
+        let fleet = FleetCfg {
+            replicas: vec!["127.0.0.1:7071".into(), "127.0.0.1:7072".into()],
+            vnodes: 17,
+            ping_interval_ms: 250,
+            fail_threshold: 5,
+            eject_ms: 900,
+        };
+        let c = ExperimentConfig { fleet, ..Default::default() };
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2, c, "fleet sub-config must round-trip losslessly");
+    }
+
+    #[test]
+    fn registry_and_fleet_overrides_apply() {
+        let mut c = ExperimentConfig::default();
+        c.apply_overrides(&[
+            "registry.shards=8".into(),
+            "registry.spill_dir=/tmp/spill".into(),
+            "fleet.replicas=127.0.0.1:7071, 127.0.0.1:7072".into(),
+            "fleet.vnodes=32".into(),
+            "fleet.ping_interval_ms=100".into(),
+            "fleet.fail_threshold=2".into(),
+            "fleet.eject_ms=500".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.serve.registry_shards, 8);
+        assert_eq!(c.serve.spill_dir.as_deref(), Some("/tmp/spill"));
+        assert_eq!(c.fleet.replicas, vec!["127.0.0.1:7071", "127.0.0.1:7072"]);
+        assert_eq!(c.fleet.vnodes, 32);
+        assert_eq!(c.fleet.ping_interval_ms, 100);
+        assert_eq!(c.fleet.fail_threshold, 2);
+        assert_eq!(c.fleet.eject_ms, 500);
+        assert!(c.apply_overrides(&["registry.shards=x".into()]).is_err());
+        assert!(c.apply_overrides(&["fleet.nope=1".into()]).is_err());
     }
 
     #[test]

@@ -351,15 +351,22 @@ impl Runner {
 }
 
 /// Resolve `key` to its packed artifact + model spec (the shared
-/// lookup both read-path entry points start from).
+/// lookup both read-path entry points start from).  A miss first tries
+/// the registry's disk spill (transparent reload); only a key that was
+/// never packed — or whose spill is gone — errors, carrying the
+/// [`crate::proto::MODEL_NOT_PACKED`] token so dispatchers can answer
+/// with the typed response instead of a generic error.
 fn packed_for<'e>(
     eng: &'e EngineHandle,
     registry: &ModelRegistry,
     key: &str,
 ) -> Result<(&'e crate::runtime::ModelSpec, Arc<QuantizedModel>)> {
-    let qm = registry
-        .get(key)
-        .ok_or_else(|| anyhow::anyhow!("no packed model '{key}' in cache (run pack first)"))?;
+    let qm = registry.get_or_reload(key).ok_or_else(|| {
+        anyhow::anyhow!(
+            "{}: no packed model '{key}' in registry or spill (run pack first)",
+            crate::proto::MODEL_NOT_PACKED
+        )
+    })?;
     let spec = eng.manifest().model(&qm.model)?;
     Ok((spec, qm))
 }

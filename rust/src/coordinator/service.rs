@@ -171,10 +171,15 @@ fn dispatch_inner(
             let (sum, _qm) = runner.pack(&cfg, &opts)?;
             Response::Pack { packed: sum }
         }
-        Request::Infer(ir) => {
-            let reply = runner.infer(&ir.key, &ir.inputs)?;
-            Response::Infer { reply }
-        }
+        Request::Infer(ir) => match runner.infer(&ir.key, &ir.inputs) {
+            Ok(reply) => Response::Infer { reply },
+            // Typed miss: the key was never packed and has no spill to
+            // reload from, so clients don't string-match the error.
+            Err(e) if crate::proto::is_model_not_packed(&e) => {
+                Response::ModelNotPacked { key: ir.key }
+            }
+            Err(e) => return Err(e),
+        },
         Request::Shutdown => {
             Response::error("shutdown is not supported on the blocking service")
         }

@@ -40,6 +40,19 @@ pub const MAX_FRAME_BYTES: usize = 64 << 20;
 /// The wire value of the shed response's `error` field.
 pub const OVERLOADED: &str = "overloaded";
 
+/// The wire value of the registry-miss response's `error` field, and
+/// the stable prefix token carried by the internal error it is mapped
+/// from (the vendored `anyhow` shim has no downcasting, so the typed
+/// classification rides on the message prefix).
+pub const MODEL_NOT_PACKED: &str = "model_not_packed";
+
+/// Does this error chain bottom out in a registry miss?  Both servers'
+/// dispatchers use this to turn the `Runner::infer` failure into the
+/// typed [`Response::ModelNotPacked`] instead of a generic error.
+pub fn is_model_not_packed(e: &anyhow::Error) -> bool {
+    e.root_cause().to_string().starts_with(MODEL_NOT_PACKED)
+}
+
 /// Row threshold past which a stream-negotiated connection gets its
 /// infer reply as chunked frames instead of one monolithic response.
 pub const STREAM_CHUNK_ROWS: usize = 32;
@@ -421,6 +434,10 @@ pub enum Response {
     UnknownCmd { cmd: String },
     TooLarge { limit_bytes: usize },
     Overloaded { retry_after_ms: u64 },
+    /// `infer` named a key that is neither resident nor spilled —
+    /// typed so clients can react (pack it, try another key) without
+    /// parsing prose.
+    ModelNotPacked { key: String },
 }
 
 impl Response {
@@ -593,6 +610,13 @@ impl Response {
                 put_id_mid(out, id);
                 let _ = write!(out, r#","ok":false,"retry_after_ms":{retry_after_ms}}}"#);
             }
+            Response::ModelNotPacked { key } => {
+                out.push_str(r#"{"error":"model_not_packed""#);
+                put_id_mid(out, id);
+                out.push_str(r#","key":"#);
+                let _ = json::write_escaped(out, key);
+                out.push_str(r#","ok":false}"#);
+            }
         }
     }
 
@@ -616,6 +640,7 @@ impl Response {
                         .and_then(|v| v.as_f64())
                         .unwrap_or(0.0) as u64,
                 },
+                MODEL_NOT_PACKED => Response::ModelNotPacked { key: str_of(&j, "key") },
                 _ => Response::Error { msg: err },
             });
         }

@@ -1,0 +1,164 @@
+//! Replica health tracking for the front-tier router.
+//!
+//! Every routed request reports its transport outcome here, and a
+//! background pinger probes each replica with `{"cmd":"ping"}` on a
+//! fixed interval.  `fail_threshold` consecutive failures eject a
+//! replica for `eject_ms`; after that window it re-enters on probation
+//! (one success resets it fully, one more failure re-ejects
+//! immediately).  Ejection only reorders routing — an ejected replica
+//! is still tried as a last resort when every healthy candidate fails,
+//! so a fleet that is entirely "down" still gets one best-effort
+//! attempt per request.
+
+use crate::coordinator::metrics;
+use crate::proto::wire::Client;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+struct Slot {
+    consecutive_failures: u32,
+    ejected_until: Option<Instant>,
+}
+
+/// Shared replica health state (router connections + pinger thread).
+pub struct HealthTable {
+    slots: Vec<Mutex<Slot>>,
+    fail_threshold: u32,
+    eject: Duration,
+}
+
+impl HealthTable {
+    pub fn new(n: usize, fail_threshold: u32, eject_ms: u64) -> HealthTable {
+        HealthTable {
+            slots: (0..n)
+                .map(|_| Mutex::new(Slot { consecutive_failures: 0, ejected_until: None }))
+                .collect(),
+            fail_threshold: fail_threshold.max(1),
+            eject: Duration::from_millis(eject_ms),
+        }
+    }
+
+    fn slot(&self, i: usize) -> std::sync::MutexGuard<'_, Slot> {
+        self.slots[i].lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Routable right now?  An elapsed ejection window counts as ok
+    /// (probation) — the next failure re-ejects without waiting for
+    /// the threshold again.
+    pub fn ok(&self, i: usize) -> bool {
+        match self.slot(i).ejected_until {
+            Some(until) => Instant::now() >= until,
+            None => true,
+        }
+    }
+
+    /// A request or ping succeeded: full reset (clears probation too).
+    pub fn on_success(&self, i: usize) {
+        let mut s = self.slot(i);
+        if s.ejected_until.is_some() {
+            log::info!("fleet replica {i} re-admitted");
+        }
+        s.consecutive_failures = 0;
+        s.ejected_until = None;
+    }
+
+    /// A request or ping failed at the transport level (connect error,
+    /// EOF, corrupt frame) — sheds don't count, they are the replica
+    /// protecting itself, not dying.
+    pub fn on_failure(&self, i: usize) {
+        let mut s = self.slot(i);
+        s.consecutive_failures += 1;
+        let on_probation = s.ejected_until.is_some_and(|u| Instant::now() >= u);
+        if s.consecutive_failures >= self.fail_threshold || on_probation {
+            s.ejected_until = Some(Instant::now() + self.eject);
+            metrics::inc("router_ejections");
+            log::warn!(
+                "fleet replica {i} ejected for {:?} after {} consecutive failures",
+                self.eject,
+                s.consecutive_failures
+            );
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Healthy replica count (for the router's `models` fan-out and
+    /// metrics).
+    pub fn healthy(&self) -> usize {
+        (0..self.slots.len()).filter(|&i| self.ok(i)).count()
+    }
+}
+
+/// Probe every replica each `interval` with a fresh connection and one
+/// `ping`, feeding the shared table, until `stop` flips.  Fresh
+/// connections on purpose: the probe then exercises the same accept
+/// path a new client would, catching listeners that still hold old
+/// connections but no longer accept.
+pub fn spawn_pinger(
+    addrs: Vec<SocketAddr>,
+    table: Arc<HealthTable>,
+    interval: Duration,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("fleet-pinger".into())
+        .spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                for (i, addr) in addrs.iter().enumerate() {
+                    let up = Client::connect(addr)
+                        .and_then(|mut c| c.call_raw("{\"cmd\":\"ping\"}"))
+                        .is_ok();
+                    if up {
+                        table.on_success(i);
+                    } else {
+                        table.on_failure(i);
+                    }
+                }
+                metrics::set("router_healthy_replicas", table.healthy() as f64);
+                std::thread::sleep(interval);
+            }
+        })
+        .expect("spawn fleet-pinger")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_ejects_and_window_readmits() {
+        let t = HealthTable::new(2, 3, 20);
+        assert!(t.ok(0));
+        t.on_failure(0);
+        t.on_failure(0);
+        assert!(t.ok(0), "below threshold stays routable");
+        t.on_failure(0);
+        assert!(!t.ok(0), "threshold reached ejects");
+        assert!(t.ok(1), "other replicas unaffected");
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(t.ok(0), "elapsed window re-admits on probation");
+        t.on_failure(0);
+        assert!(!t.ok(0), "probation failure re-ejects immediately");
+    }
+
+    #[test]
+    fn success_resets_streak() {
+        let t = HealthTable::new(1, 2, 1000);
+        t.on_failure(0);
+        t.on_success(0);
+        t.on_failure(0);
+        assert!(t.ok(0), "streak was reset by the success");
+        t.on_failure(0);
+        assert!(!t.ok(0));
+        t.on_success(0);
+        assert!(t.ok(0), "success during ejection re-admits");
+    }
+}

@@ -1,0 +1,31 @@
+//! The fleet tier: one router process in front of N pool-server
+//! replicas, turning the single-process pool into one cell of a
+//! horizontally-scaled deployment.
+//!
+//! * [`ring`] — consistent-hash ring (FNV-1a, virtual nodes): stable
+//!   key→replica placement and a deterministic failover order; also the
+//!   home of the hash the sharded [`crate::serve::registry`] selects
+//!   shards with, so the two layers agree on what "the key's home" is.
+//! * [`health`] — per-replica failure streaks, threshold ejection with
+//!   timed re-admission, and the background `ping` prober.
+//! * [`router`] — [`router::Router`]: the front-tier listener.  Speaks
+//!   the ordinary JSON/bin1 wire on both sides and relays raw bytes, so
+//!   a fleet's responses are byte-identical to a single pool server's;
+//!   sheds retry onto the next ring candidate, transport failures fail
+//!   over and feed the health table.
+//!
+//! Deterministic training + packing is what makes transparent failover
+//! sound: every replica packs bit-identical artifacts from the same
+//! config, so any replica can answer for any key.
+//!
+//! Knobs live in [`crate::config::FleetCfg`] (`-s fleet.*` overrides,
+//! `repro route --replicas ...`); fleet behaviour is tracked by
+//! `benches/perf_fleet.rs` (`BENCH_fleet.json`).
+
+pub mod health;
+pub mod ring;
+pub mod router;
+
+pub use health::HealthTable;
+pub use ring::Ring;
+pub use router::{Router, RouterHandle};

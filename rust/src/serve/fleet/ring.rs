@@ -1,0 +1,136 @@
+//! Consistent-hash ring over pool-server replicas.
+//!
+//! The router places every replica at `vnodes` pseudo-random points on
+//! a 64-bit ring (FNV-1a of `"{replica}#{vnode}"`); a request's routing
+//! key hashes to a point and walks clockwise, yielding replicas in ring
+//! order.  Properties the fleet tier leans on:
+//!
+//! - **Stability** — the same key always lands on the same replica (so
+//!   a replica's registry shard stays hot for "its" models), and adding
+//!   or removing one replica only remaps ~1/N of the key space.
+//! - **Failover order is deterministic** — [`Ring::candidates`] yields
+//!   *every* replica exactly once, in the key's ring order, so retry
+//!   (after an overload shed or a transport failure) walks a stable
+//!   sequence instead of picking randomly.
+
+/// FNV-1a 64-bit — the crate's dependency-free stable hash, shared by
+/// the registry's shard selector and the router's ring placement.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// `points` is sorted by hash; each point names a replica index in
+/// `0..n`.
+pub struct Ring {
+    points: Vec<(u64, usize)>,
+    n: usize,
+}
+
+impl Ring {
+    /// A ring over `n` replicas (min 1) with `vnodes` points each
+    /// (min 1).  More vnodes → smoother key spread at O(n·vnodes)
+    /// memory; 64 keeps the spread within a few percent for small
+    /// fleets.
+    pub fn new(n: usize, vnodes: usize) -> Ring {
+        let n = n.max(1);
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(n * vnodes);
+        for i in 0..n {
+            for v in 0..vnodes {
+                points.push((fnv1a(format!("replica{i}#vnode{v}").as_bytes()), i));
+            }
+        }
+        points.sort_unstable();
+        Ring { points, n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// All replica indices in the key's ring order: the owner first,
+    /// then each distinct successor walking clockwise.  Always yields
+    /// every replica exactly once.
+    pub fn candidates(&self, key: &str) -> Vec<usize> {
+        let h = fnv1a(key.as_bytes());
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        let mut seen = vec![false; self.n];
+        let mut out = Vec::with_capacity(self.n);
+        for k in 0..self.points.len() {
+            let (_, i) = self.points[(start + k) % self.points.len()];
+            if !seen[i] {
+                seen[i] = true;
+                out.push(i);
+                if out.len() == self.n {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// The key's owning replica (first ring candidate).
+    pub fn owner(&self, key: &str) -> usize {
+        self.candidates(key)[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidates_cover_all_replicas_once() {
+        let ring = Ring::new(5, 64);
+        for key in ["mlp3", "cnn6:w8a8:LAPQ", "ncf:w[8.4.2]a4:LAPQ", "x"] {
+            let c = ring.candidates(key);
+            let mut sorted = c.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3, 4], "key {key}: {c:?}");
+        }
+    }
+
+    #[test]
+    fn candidates_are_deterministic() {
+        let a = Ring::new(3, 64);
+        let b = Ring::new(3, 64);
+        for key in ["mlp3", "cnn6", "mlp3:w8a8:MinMax"] {
+            assert_eq!(a.candidates(key), b.candidates(key));
+        }
+    }
+
+    #[test]
+    fn keys_spread_across_replicas() {
+        let ring = Ring::new(4, 64);
+        let mut counts = [0usize; 4];
+        for i in 0..256 {
+            counts[ring.owner(&format!("model{i}:w8a8:LAPQ"))] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 16, "replica {i} starved: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn single_replica_ring() {
+        let ring = Ring::new(1, 8);
+        assert_eq!(ring.candidates("anything"), vec![0]);
+    }
+
+    #[test]
+    fn fnv1a_is_the_reference_function() {
+        // Pinned reference vectors so the registry's shard mapping and
+        // the ring's placement can never silently drift.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -1,0 +1,678 @@
+//! The front-tier router: one thin process that makes N pool servers
+//! look like one.
+//!
+//! Clients speak the ordinary JSON-lines / bin1 wire to the router; the
+//! router consistent-hashes each request's routing key (`key` for
+//! `infer`, `model` for `pack`/`quantize`) over the replica ring
+//! ([`super::ring::Ring`]) and relays raw wire bytes both ways — it
+//! never re-serializes a replica's response, which is what makes the
+//! fleet answer byte-identical to a single pool server.
+//!
+//! Fault handling per request, walking the key's ring order (healthy
+//! replicas first, ejected ones as a last resort):
+//!
+//! * **Transport failure** (connect refused, EOF, corrupt frame) before
+//!   any response byte was relayed → feed [`super::health`], drop the
+//!   cached upstream connection, try the next candidate
+//!   (`router_failovers`).  Deterministic replicas make this safe: every
+//!   replica packs bit-identical artifacts from the same config.
+//! * **Overload shed** (`{"error":"overloaded"...}`) → the replica is
+//!   alive but saturated; sleep on the shared [`Backoff`] and try the
+//!   next candidate (`router_shed_retries`).  When every candidate
+//!   sheds (or the retry budget is spent), the last shed line is
+//!   relayed verbatim so the client sees the normal typed overload
+//!   response.
+//! * Mid-response failure cannot be retried transparently (part of the
+//!   reply is already on the client's socket): the client gets a
+//!   structured error line and keeps its connection.
+//!
+//! `ping` / `metrics` / `hello` / unknown commands are answered
+//! locally (the router has its own metrics); `models` fans out to every
+//! healthy replica and merges; `shutdown` stops the router itself, not
+//! the replicas.
+
+use super::health::{self, HealthTable};
+use super::ring::Ring;
+use crate::config::FleetCfg;
+use crate::coordinator::metrics;
+use crate::proto::wire::{negotiate, Incoming, WireMode, WireReader};
+use crate::proto::{frame, ReqId, Request, Response};
+use crate::serve::admission::Backoff;
+use crate::util::json::Reader;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The first bytes of a shed response line (alphabetical-key writers
+/// make this prefix stable, with or without an `"id"` echo).
+const SHED_PREFIX: &str = "{\"error\":\"overloaded\"";
+
+/// State shared by every router connection thread and the pinger.
+struct RouterCtx {
+    replicas: Vec<SocketAddr>,
+    ring: Ring,
+    health: Arc<HealthTable>,
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+/// Handle for stopping a running [`Router`] from another thread.
+#[derive(Clone)]
+pub struct RouterHandle {
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl RouterHandle {
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the accept loop if it is blocked in accept().
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// The front-tier listener plus its replica ring.
+pub struct Router {
+    listener: TcpListener,
+    pub addr: SocketAddr,
+    ctx: Arc<RouterCtx>,
+    ping_interval: Duration,
+}
+
+impl Router {
+    /// Bind the front-tier listener (`addr`, port 0 for ephemeral) over
+    /// the replicas named by `cfg.replicas`.  Nothing runs until
+    /// [`Router::serve`].
+    pub fn bind(addr: &str, cfg: &FleetCfg) -> Result<Router> {
+        if cfg.replicas.is_empty() {
+            anyhow::bail!("fleet.replicas is empty (need at least one pool server address)");
+        }
+        let mut replicas = Vec::with_capacity(cfg.replicas.len());
+        for spec in &cfg.replicas {
+            let a = spec
+                .to_socket_addrs()
+                .with_context(|| format!("resolve replica '{spec}'"))?
+                .next()
+                .with_context(|| format!("replica '{spec}' resolved to nothing"))?;
+            replicas.push(a);
+        }
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let addr = listener.local_addr()?;
+        let n = replicas.len();
+        let ctx = Arc::new(RouterCtx {
+            replicas,
+            ring: Ring::new(n, cfg.vnodes),
+            health: Arc::new(HealthTable::new(n, cfg.fail_threshold, cfg.eject_ms)),
+            stop: Arc::new(AtomicBool::new(false)),
+            addr,
+        });
+        log::info!(
+            "router on {addr}: {n} replicas, {} vnodes, ping every {} ms, eject after {} failures for {} ms",
+            cfg.vnodes.max(1),
+            cfg.ping_interval_ms,
+            cfg.fail_threshold.max(1),
+            cfg.eject_ms
+        );
+        Ok(Router {
+            listener,
+            addr,
+            ctx,
+            ping_interval: Duration::from_millis(cfg.ping_interval_ms.max(1)),
+        })
+    }
+
+    pub fn shutdown_handle(&self) -> RouterHandle {
+        RouterHandle { stop: self.ctx.stop.clone(), addr: self.addr }
+    }
+
+    /// Serve until `max_conns` connections have been accepted
+    /// (`usize::MAX` for forever), the shutdown flag is raised, or the
+    /// accept-failure budget is exhausted.  Thread per connection: the
+    /// router does no compute, a connection thread is mostly parked in
+    /// `read`, and the replicas behind it enforce the real admission
+    /// limits.
+    pub fn serve(self, max_conns: usize) -> Result<()> {
+        let pinger = health::spawn_pinger(
+            self.ctx.replicas.clone(),
+            self.ctx.health.clone(),
+            self.ping_interval,
+            self.ctx.stop.clone(),
+        );
+        let mut backoff = Backoff::accept_loop();
+        let mut accepted = 0usize;
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut result = Ok(());
+        for stream in self.listener.incoming() {
+            if self.ctx.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(e) => match backoff.on_failure() {
+                    Some(delay) => {
+                        log::warn!(
+                            "router accept failed ({} in window): {e}; retrying in {delay:?}",
+                            backoff.failures()
+                        );
+                        std::thread::sleep(delay);
+                        continue;
+                    }
+                    None => {
+                        result = Err(e).context("router accept failing persistently");
+                        break;
+                    }
+                },
+            };
+            accepted += 1;
+            metrics::inc("router_conns");
+            let ctx = self.ctx.clone();
+            conns.push(std::thread::spawn(move || {
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    handle_conn(&ctx, stream)
+                }));
+            }));
+            // Reap finished connection threads so a long-lived router
+            // does not accumulate handles.
+            conns.retain(|h| !h.is_finished());
+            if accepted >= max_conns {
+                break;
+            }
+        }
+        self.ctx.stop.store(true, Ordering::SeqCst);
+        for h in conns {
+            let _ = h.join();
+        }
+        let _ = pinger.join();
+        result
+    }
+}
+
+/// What the light request scan extracts: enough to route, never the
+/// tensor payloads (those relay as raw bytes).
+#[derive(Default)]
+struct Scan {
+    cmd: String,
+    key: Option<String>,
+    model: Option<String>,
+    id: Option<ReqId>,
+}
+
+fn scan_request(line: &str) -> Result<Scan, String> {
+    let mut s = Scan::default();
+    let mut r = Reader::new(line);
+    r.obj(|r, k| match k {
+        "cmd" => {
+            s.cmd = r.string_cow()?.into_owned();
+            Ok(())
+        }
+        "key" => {
+            s.key = Some(r.string_cow()?.into_owned());
+            Ok(())
+        }
+        "model" => {
+            s.model = Some(r.string_cow()?.into_owned());
+            Ok(())
+        }
+        "id" => match r.peek() {
+            Some(b'"') => {
+                s.id = Some(ReqId::Str(r.string_cow()?.into_owned()));
+                Ok(())
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                s.id = Some(ReqId::Num(r.number()?));
+                Ok(())
+            }
+            _ => r.skip_value(0),
+        },
+        _ => r.skip_value(0),
+    })?;
+    r.expect_end()?;
+    Ok(s)
+}
+
+/// A relayed response unit is terminal when it carries a top-level
+/// `"ok"` — stream chunks (`{"chunk":...}`) and quantize events
+/// (`{"event":...}`) don't, the final reply and every error do.  An
+/// unparseable line is treated as terminal so a misbehaving replica
+/// cannot wedge the relay loop.
+fn line_is_terminal(line: &str) -> bool {
+    let mut has_ok = false;
+    let mut r = Reader::new(line);
+    let scan = r.obj(|r, k| {
+        if k == "ok" {
+            has_ok = true;
+        }
+        r.skip_value(0)
+    });
+    scan.is_err() || has_ok
+}
+
+/// One request unit headed upstream, by reference to the client
+/// reader's buffer — re-sent verbatim to each retry candidate.
+enum Unit<'a> {
+    Line(&'a str),
+    Frame { kind: u8, payload: &'a [u8] },
+}
+
+/// One cached connection to a replica.  Cached per client connection
+/// (not pooled globally) so the upstream's negotiated wire mode always
+/// mirrors this client's.
+struct Upstream {
+    writer: TcpStream,
+    reader: WireReader<TcpStream>,
+}
+
+impl Upstream {
+    /// Connect and replay the client's latest `hello`, if any, so the
+    /// replica's negotiated mode matches what the client expects.
+    fn connect(addr: &SocketAddr, hello_line: Option<&str>) -> Result<Upstream> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let writer = stream.try_clone().context("clone stream")?;
+        let mut up = Upstream { writer, reader: WireReader::new(stream) };
+        if let Some(h) = hello_line {
+            up.send_line(h)?;
+            match up.reader.next() {
+                Incoming::Line => {}
+                _ => anyhow::bail!("replica {addr} rejected hello replay"),
+            }
+        }
+        Ok(up)
+    }
+
+    fn send_line(&mut self, line: &str) -> Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn send_frame(&mut self, kind: u8, payload: &[u8], buf: &mut Vec<u8>) -> Result<()> {
+        rewrap_frame(kind, payload, buf);
+        self.writer.write_all(buf)?;
+        self.writer.flush()?;
+        Ok(())
+    }
+}
+
+/// Rebuild the exact wire bytes of a frame from its verified payload
+/// (the reader strips header + CRC; both are deterministic functions of
+/// kind + payload, so this is byte-identical to what was read).
+fn rewrap_frame(kind: u8, payload: &[u8], buf: &mut Vec<u8>) {
+    buf.clear();
+    frame::begin(buf, kind);
+    buf.extend_from_slice(payload);
+    frame::finish(buf);
+}
+
+fn write_resp(
+    w: &mut TcpStream,
+    resp: &Response,
+    id: Option<&ReqId>,
+    out: &mut String,
+) -> std::io::Result<()> {
+    out.clear();
+    resp.write_json_id(id, out);
+    out.push('\n');
+    w.write_all(out.as_bytes())?;
+    w.flush()
+}
+
+/// Outcome of one relay attempt against one replica.
+enum Attempt {
+    /// Terminal unit relayed; the request is done.
+    Done,
+    /// The replica shed before sending anything else — retryable.
+    Shed,
+    /// Transport died; `mid_response` means bytes already reached the
+    /// client, so no transparent retry is possible.
+    Failed { mid_response: bool },
+}
+
+/// One client connection: scan, route, relay, until EOF.
+fn handle_conn(ctx: &RouterCtx, stream: TcpStream) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "<unknown>".into());
+    log::info!("router conn from {peer}");
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => {
+            log::warn!("router conn {peer}: clone failed: {e}");
+            return;
+        }
+    };
+    let mut reader = WireReader::new(stream);
+    let mut mode = WireMode::Json;
+    let mut stream_replies = false;
+    let mut hello_line: Option<String> = None;
+    let mut upstreams: HashMap<usize, Upstream> = HashMap::new();
+    // Shed-retry pacing, shared across this connection's requests: a
+    // shed storm exhausts the budget and the client gets the shed.
+    let mut backoff = Backoff::new(
+        Duration::from_millis(5),
+        Duration::from_millis(100),
+        Duration::from_secs(1),
+        8,
+    );
+    let mut out = String::new();
+    let mut bin: Vec<u8> = Vec::new();
+    loop {
+        let sent = match reader.next() {
+            Incoming::Eof => break,
+            Incoming::TooLarge { limit_bytes } => {
+                let _ = write_resp(&mut writer, &Response::TooLarge { limit_bytes }, None, &mut out);
+                break;
+            }
+            Incoming::Corrupt(msg) => {
+                let _ = write_resp(&mut writer, &Response::error(msg), None, &mut out);
+                break;
+            }
+            Incoming::Line => {
+                if reader.line().trim().is_empty() {
+                    continue;
+                }
+                metrics::inc("router_requests");
+                let line = reader.line();
+                let scan = match scan_request(line) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        let resp = Response::error(format!("bad request: {e}"));
+                        if write_resp(&mut writer, &resp, None, &mut out).is_err() {
+                            break;
+                        }
+                        continue;
+                    }
+                };
+                match scan.cmd.as_str() {
+                    "ping" => {
+                        write_resp(&mut writer, &Response::Pong, scan.id.as_ref(), &mut out)
+                    }
+                    "metrics" => {
+                        write_resp(&mut writer, &Response::metrics(), scan.id.as_ref(), &mut out)
+                    }
+                    "hello" => {
+                        let resp = match Request::parse_line(line) {
+                            Ok((Request::Hello { wire, stream }, _)) => {
+                                let resp =
+                                    negotiate(&wire, stream, &mut mode, &mut stream_replies);
+                                if matches!(resp, Response::Hello { .. }) {
+                                    hello_line = Some(line.to_string());
+                                    renegotiate_upstreams(&mut upstreams, line);
+                                }
+                                resp
+                            }
+                            Ok(_) => Response::error("hello line did not parse as hello"),
+                            Err(e) => Response::error(format!("{e:#}")),
+                        };
+                        write_resp(&mut writer, &resp, scan.id.as_ref(), &mut out)
+                    }
+                    "shutdown" => {
+                        let _ = write_resp(
+                            &mut writer,
+                            &Response::Stopping,
+                            scan.id.as_ref(),
+                            &mut out,
+                        );
+                        ctx.stop.store(true, Ordering::SeqCst);
+                        let _ = TcpStream::connect(ctx.addr); // wake the accept loop
+                        break;
+                    }
+                    "models" => {
+                        let resp =
+                            merged_models(ctx, &mut upstreams, hello_line.as_deref());
+                        write_resp(&mut writer, &resp, scan.id.as_ref(), &mut out)
+                    }
+                    "infer" | "pack" | "quantize" => {
+                        let key = scan.key.or(scan.model).unwrap_or_default();
+                        relay(
+                            ctx,
+                            &mut upstreams,
+                            hello_line.as_deref(),
+                            &key,
+                            Unit::Line(line),
+                            scan.id.as_ref(),
+                            &mut writer,
+                            &mut backoff,
+                            &mut out,
+                            &mut bin,
+                        )
+                    }
+                    _ => write_resp(
+                        &mut writer,
+                        &Response::UnknownCmd { cmd: scan.cmd },
+                        scan.id.as_ref(),
+                        &mut out,
+                    ),
+                }
+            }
+            Incoming::Frame(kind) => {
+                metrics::inc("router_requests");
+                if mode != WireMode::Bin1 {
+                    let resp = Response::error(
+                        "binary frame before a successful hello/bin1 handshake",
+                    );
+                    write_resp(&mut writer, &resp, None, &mut out)
+                } else if kind != frame::KIND_INFER_REQ {
+                    let resp = Response::error(format!("unexpected frame kind {kind}"));
+                    write_resp(&mut writer, &resp, None, &mut out)
+                } else {
+                    match frame::decode_infer_request_id(reader.payload()) {
+                        Err(e) => {
+                            let resp = Response::error(format!("bad frame: {e}"));
+                            write_resp(&mut writer, &resp, None, &mut out)
+                        }
+                        Ok((ir, id)) => relay(
+                            ctx,
+                            &mut upstreams,
+                            hello_line.as_deref(),
+                            &ir.key,
+                            Unit::Frame { kind, payload: reader.payload() },
+                            id.as_ref(),
+                            &mut writer,
+                            &mut backoff,
+                            &mut out,
+                            &mut bin,
+                        ),
+                    }
+                }
+            }
+        };
+        if let Err(e) = sent {
+            log::warn!("router conn {peer}: write failed: {e}");
+            break;
+        }
+    }
+}
+
+/// Replay a fresh `hello` on every cached upstream so their negotiated
+/// modes track the client's; an upstream that fails the replay is
+/// dropped and will reconnect (with the replay) on next use.
+fn renegotiate_upstreams(upstreams: &mut HashMap<usize, Upstream>, hello_line: &str) {
+    upstreams.retain(|_, up| {
+        up.send_line(hello_line).is_ok() && matches!(up.reader.next(), Incoming::Line)
+    });
+}
+
+/// Fan `models` out to every healthy replica and merge: union of model
+/// zoos (sorted), union of packed artifacts (first replica seen wins a
+/// duplicate key).
+fn merged_models(
+    ctx: &RouterCtx,
+    upstreams: &mut HashMap<usize, Upstream>,
+    hello_line: Option<&str>,
+) -> Response {
+    let mut models: Vec<String> = Vec::new();
+    let mut packs: Vec<(String, Vec<u32>)> = Vec::new();
+    let mut answered = 0usize;
+    for i in 0..ctx.replicas.len() {
+        if !ctx.health.ok(i) {
+            continue;
+        }
+        let resp = ask_models(ctx, upstreams, hello_line, i);
+        match resp {
+            Some(Response::Models { models: m, packs: p }) => {
+                answered += 1;
+                ctx.health.on_success(i);
+                models.extend(m);
+                for pack in p {
+                    if !packs.iter().any(|(k, _)| *k == pack.0) {
+                        packs.push(pack);
+                    }
+                }
+            }
+            _ => {
+                upstreams.remove(&i);
+                ctx.health.on_failure(i);
+            }
+        }
+    }
+    if answered == 0 {
+        return Response::error("no healthy replica answered models");
+    }
+    models.sort();
+    models.dedup();
+    packs.sort_by(|a, b| a.0.cmp(&b.0));
+    Response::Models { models, packs }
+}
+
+fn ask_models(
+    ctx: &RouterCtx,
+    upstreams: &mut HashMap<usize, Upstream>,
+    hello_line: Option<&str>,
+    i: usize,
+) -> Option<Response> {
+    if !upstreams.contains_key(&i) {
+        let up = Upstream::connect(&ctx.replicas[i], hello_line).ok()?;
+        upstreams.insert(i, up);
+    }
+    let up = upstreams.get_mut(&i)?;
+    up.send_line("{\"cmd\":\"models\"}").ok()?;
+    match up.reader.next() {
+        Incoming::Line => Response::from_line(up.reader.line()).ok(),
+        _ => None,
+    }
+}
+
+/// Route one request unit: walk the key's ring candidates (healthy
+/// first), send the raw unit, relay response units until terminal.
+/// Returns an `Err` only for *client-side* write failures (which end
+/// the connection); replica failures are handled internally.
+#[allow(clippy::too_many_arguments)]
+fn relay(
+    ctx: &RouterCtx,
+    upstreams: &mut HashMap<usize, Upstream>,
+    hello_line: Option<&str>,
+    route_key: &str,
+    unit: Unit<'_>,
+    id: Option<&ReqId>,
+    client: &mut TcpStream,
+    backoff: &mut Backoff,
+    out: &mut String,
+    bin: &mut Vec<u8>,
+) -> std::io::Result<()> {
+    let mut order = ctx.ring.candidates(route_key);
+    // Stable partition: healthy candidates keep ring order up front,
+    // ejected ones trail as a last resort.
+    order.sort_by_key(|&i| !ctx.health.ok(i));
+    let mut last_shed: Option<String> = None;
+    let mut frame_buf: Vec<u8> = Vec::new();
+    for &i in &order {
+        if !upstreams.contains_key(&i) {
+            match Upstream::connect(&ctx.replicas[i], hello_line) {
+                Ok(up) => {
+                    upstreams.insert(i, up);
+                }
+                Err(e) => {
+                    log::warn!("router: replica {i} ({}) unreachable: {e:#}", ctx.replicas[i]);
+                    ctx.health.on_failure(i);
+                    metrics::inc("router_failovers");
+                    continue;
+                }
+            }
+        }
+        let up = upstreams.get_mut(&i).expect("just inserted");
+        let sent = match &unit {
+            Unit::Line(l) => up.send_line(l),
+            Unit::Frame { kind, payload } => up.send_frame(*kind, payload, &mut frame_buf),
+        };
+        if sent.is_err() {
+            upstreams.remove(&i);
+            ctx.health.on_failure(i);
+            metrics::inc("router_failovers");
+            continue;
+        }
+        let mut relayed_any = false;
+        let attempt = loop {
+            match up.reader.next() {
+                Incoming::Line => {
+                    let rl = up.reader.line();
+                    if !relayed_any && rl.starts_with(SHED_PREFIX) {
+                        last_shed = Some(rl.to_string());
+                        break Attempt::Shed;
+                    }
+                    out.clear();
+                    out.push_str(rl);
+                    out.push('\n');
+                    let terminal = line_is_terminal(rl);
+                    client.write_all(out.as_bytes())?;
+                    client.flush()?;
+                    relayed_any = true;
+                    if terminal {
+                        break Attempt::Done;
+                    }
+                }
+                Incoming::Frame(kind) => {
+                    rewrap_frame(kind, up.reader.payload(), bin);
+                    client.write_all(bin)?;
+                    client.flush()?;
+                    relayed_any = true;
+                    if kind != frame::KIND_INFER_CHUNK {
+                        break Attempt::Done;
+                    }
+                }
+                Incoming::Eof | Incoming::Corrupt(_) | Incoming::TooLarge { .. } => {
+                    break Attempt::Failed { mid_response: relayed_any };
+                }
+            }
+        };
+        match attempt {
+            Attempt::Done => {
+                ctx.health.on_success(i);
+                metrics::inc("router_relayed");
+                return Ok(());
+            }
+            Attempt::Shed => {
+                // Alive-but-saturated: not a health failure.  Pace the
+                // retry; a spent budget means the whole fleet is
+                // saturated — surface the shed.
+                metrics::inc("router_shed_retries");
+                match backoff.on_failure() {
+                    Some(delay) => std::thread::sleep(delay),
+                    None => break,
+                }
+            }
+            Attempt::Failed { mid_response } => {
+                upstreams.remove(&i);
+                ctx.health.on_failure(i);
+                metrics::inc("router_failovers");
+                if mid_response {
+                    let resp = Response::error(format!(
+                        "replica failed mid-response for '{route_key}'"
+                    ));
+                    return write_resp(client, &resp, id, out);
+                }
+            }
+        }
+    }
+    if let Some(shed) = last_shed {
+        out.clear();
+        out.push_str(&shed);
+        out.push('\n');
+        client.write_all(out.as_bytes())?;
+        return client.flush();
+    }
+    metrics::inc("router_no_replica");
+    write_resp(client, &Response::error(format!("no healthy replica for '{route_key}'")), id, out)
+}

@@ -28,6 +28,12 @@
 //! * [`lanes`] — [`lanes::LaneSet`]: per-model batcher lanes, so two
 //!   hot models coalesce concurrently instead of head-of-line blocking
 //!   each other through one batcher thread (`serve.max_lanes`).
+//! * [`fleet`] — the fleet tier: a consistent-hash front-tier router
+//!   over N pool-server replicas with health checks, ejection and
+//!   overload-aware retry ([`fleet::Router`]), plus the hash ring the
+//!   sharded registry and the router share.  The registry itself is
+//!   hash-sharded with one global LRU budget and spills evicted
+//!   artifacts to disk for transparent reload.
 //! * [`event`] — the readiness-polled reactor (`serve.io = poll`): one
 //!   thread polls every connection for readability/writability over the
 //!   vendored `poll(2)` shim, assembles partial reads, queues partial
@@ -43,11 +49,13 @@
 pub mod admission;
 pub mod batcher;
 pub mod event;
+pub mod fleet;
 pub mod lanes;
 pub mod pool;
 pub mod registry;
 
 pub use batcher::Batcher;
+pub use fleet::{Router, RouterHandle};
 pub use lanes::LaneSet;
 pub use pool::{PoolHandle, PoolServer};
 pub use registry::{ModelRegistry, RegistryStats};

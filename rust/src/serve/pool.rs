@@ -119,7 +119,11 @@ impl PoolServer {
     pub fn bind(addr: &str, eng: EngineHandle, cfg: ServeCfg) -> Result<PoolServer> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let addr = listener.local_addr()?;
-        let registry = Arc::new(ModelRegistry::new(cfg.registry_cap));
+        let registry = Arc::new(ModelRegistry::with_options(
+            cfg.registry_cap,
+            cfg.registry_shards,
+            cfg.spill_dir.as_ref().map(std::path::PathBuf::from),
+        ));
         let runner = Runner::with_registry(eng.clone(), registry.clone());
         let active_conns = Arc::new(AtomicUsize::new(0));
         let lanes = LaneSet::start(eng.clone(), registry.clone(), &cfg, active_conns.clone())?;
@@ -137,13 +141,18 @@ impl PoolServer {
             addr,
         });
         log::info!(
-            "pool server on {addr} (io {}): {} workers, batch window {} ms, max batch {}, queue {}, registry cap {}, max lanes {}",
+            "pool server on {addr} (io {}): {} workers, batch window {} ms, max batch {}, queue {}, registry cap {} x{} shards{}, max lanes {}",
             cfg.io.key(),
             cfg.workers.max(1),
             cfg.batch_window_ms,
             cfg.max_batch,
             cfg.queue_bound,
             cfg.registry_cap,
+            cfg.registry_shards.max(1),
+            match &cfg.spill_dir {
+                Some(d) => format!(" (spill {d})"),
+                None => String::new(),
+            },
             cfg.max_lanes.max(1)
         );
         Ok(PoolServer { listener, addr, shared, registry, cfg })
@@ -314,12 +323,19 @@ fn dispatch_inner(shared: &Shared, req: Request, writer: &mut dyn Write) -> Resu
         Request::Models => Response::models(&shared.eng, &shared.registry),
         Request::Metrics => Response::metrics(),
         Request::Infer(ir) => {
-            match shared.lanes.try_submit(&ir.key, ir.inputs) {
+            let crate::proto::InferRequest { key, inputs } = ir;
+            match shared.lanes.try_submit(&key, inputs) {
                 // Batcher queue full: typed shed on the request, the
                 // connection itself stays up.
                 None => {
                     metrics::inc("serve_shed");
                     Response::Overloaded { retry_after_ms: shared.retry_hint_ms() }
+                }
+                // A key that was never packed (and has no spill to
+                // reload) gets the typed miss, so clients can react
+                // without string-matching the generic error.
+                Some(Err(e)) if crate::proto::is_model_not_packed(&e) => {
+                    Response::ModelNotPacked { key }
                 }
                 Some(reply) => Response::Infer { reply: reply? },
             }

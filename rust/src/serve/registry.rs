@@ -4,148 +4,374 @@
 //!
 //! The registry is `Arc`-shared between the [`crate::coordinator::jobs::
 //! Runner`] (which fills it from `pack` jobs) and the concurrent read
-//! path (pool workers + micro-batcher, which only `get`).  Internally an
-//! `RwLock` guards the LRU order; lookups take the write lock too (a
-//! hit refreshes recency), but the critical section is a few pointer
-//! moves — microseconds against the milliseconds of an infer call.
+//! path (pool workers + micro-batcher, which only `get`).
 //!
-//! The `registry_size` / `registry_hits` / `registry_misses` /
-//! `registry_evictions` gauges are kept current (each op publishes the
-//! counters it changed, after releasing the lock), so the
-//! `{"cmd":"metrics"}` endpoint always reflects cache behaviour.
+//! **Sharding.**  Entries live in N independent shards selected by the
+//! FNV-1a hash of the pack key, each behind its own `RwLock` — so two
+//! hot models churning concurrently contend on different locks instead
+//! of one.  Recency is global: a monotonic tick (`AtomicU64`) stamps
+//! every touch, and eviction removes the entry whose *tick* is globally
+//! oldest (each shard keeps its own MRU→LRU order, so the victim is
+//! the oldest shard tail).  The observable semantics are therefore
+//! exactly those of one global LRU under one capacity budget — sharding
+//! is purely a contention optimization, and `ModelRegistry::new(cap)`
+//! (one shard) reproduces the historical behaviour bit for bit.
+//!
+//! **Disk spill.**  With a spill directory configured, evicted models
+//! are persisted via [`QuantizedModel::save`] and
+//! [`ModelRegistry::get_or_reload`] transparently reloads them on a
+//! miss (miss → load → re-admit) instead of surfacing an error — the
+//! fleet tier's answer to "the registry is smaller than the model
+//! catalog".  `registry_spill_*` / `registry_reload_*` counters track
+//! both directions.
+//!
+//! The aggregate `registry_size` / `registry_hits` / `registry_misses`
+//! / `registry_evictions` gauges keep their historical names (each op
+//! publishes the counters it changed, after releasing the shard lock);
+//! per-shard behaviour is additionally published as
+//! `registry_hits_shard{i}` / `registry_misses_shard{i}` /
+//! `registry_evictions_shard{i}`, so the `{"cmd":"metrics"}` endpoint
+//! shows both the cache and its contention profile.
 
+use super::fleet::ring::fnv1a;
 use crate::coordinator::metrics;
 use crate::runtime::int::QuantizedModel;
-use std::sync::{Arc, RwLock};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+pub use crate::config::DEFAULT_REGISTRY_SHARDS;
 
 /// Counter snapshot (also mirrored into the metrics registry).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RegistryStats {
     pub size: usize,
     pub capacity: usize,
+    pub shards: usize,
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    pub spills: u64,
+    pub reloads: u64,
 }
 
-struct Inner {
-    cap: usize,
-    /// front = most recently used
-    entries: Vec<(String, Arc<QuantizedModel>)>,
-    hits: u64,
-    misses: u64,
-    evictions: u64,
+/// One resident entry: pack key, artifact, last-used global tick.
+type Entry = (String, Arc<QuantizedModel>, u64);
+
+/// front = most recently used (within the shard; ticks give the global
+/// order).
+#[derive(Default)]
+struct Shard {
+    entries: Vec<Entry>,
 }
 
-/// Thread-safe LRU of packed models, keyed by the pack key
+/// A spilled artifact we can transparently reload: its pack key, the
+/// bare model name (for the fallback lookup) and where it was saved.
+struct SpillRecord {
+    key: String,
+    model: String,
+    dir: PathBuf,
+}
+
+/// Thread-safe sharded LRU of packed models, keyed by the pack key
 /// (`model:wNaM:METHOD`, or `model:w[8.4.2]aM:METHOD` for mixed-precision
-/// plans) with bare-model-name fallback.
+/// plans) with bare-model-name fallback, under one global capacity
+/// budget, with optional disk spill of evicted artifacts.
 pub struct ModelRegistry {
-    inner: RwLock<Inner>,
+    shards: Vec<RwLock<Shard>>,
+    cap: usize,
+    /// Global recency clock: every touch stamps the entry.
+    tick: AtomicU64,
+    hits: Vec<AtomicU64>,
+    misses: Vec<AtomicU64>,
+    evictions: Vec<AtomicU64>,
+    spills: AtomicU64,
+    reloads: AtomicU64,
+    spill_dir: Option<PathBuf>,
+    /// Most recently spilled first (same winner rule as the LRU lookup).
+    spilled: Mutex<Vec<SpillRecord>>,
 }
 
 impl ModelRegistry {
-    /// An empty registry holding at most `cap` models (min 1).
+    /// An empty single-shard registry holding at most `cap` models
+    /// (min 1) — the historical constructor, exact-LRU semantics.
     pub fn new(cap: usize) -> ModelRegistry {
-        let inner =
-            Inner { cap: cap.max(1), entries: Vec::new(), hits: 0, misses: 0, evictions: 0 };
-        ModelRegistry { inner: RwLock::new(inner) }
+        ModelRegistry::with_options(cap, 1, None)
+    }
+
+    /// An empty registry with `shards` hash shards (min 1) under one
+    /// global `cap` budget (min 1), spilling evicted artifacts into
+    /// `spill_dir` when given.
+    pub fn with_options(
+        cap: usize,
+        shards: usize,
+        spill_dir: Option<PathBuf>,
+    ) -> ModelRegistry {
+        let n = shards.max(1);
+        ModelRegistry {
+            shards: (0..n).map(|_| RwLock::new(Shard::default())).collect(),
+            cap: cap.max(1),
+            tick: AtomicU64::new(0),
+            hits: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            misses: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            evictions: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            spills: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+            spill_dir,
+            spilled: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn shard_of(&self, key: &str) -> usize {
+        (fnv1a(key.as_bytes()) % self.shards.len() as u64) as usize
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
     }
 
     /// Recover the guard even if a panicking holder poisoned the lock —
-    /// the registry's state is a plain LRU list, always consistent.
-    fn write(&self) -> std::sync::RwLockWriteGuard<'_, Inner> {
-        self.inner.write().unwrap_or_else(|p| p.into_inner())
+    /// each shard's state is a plain LRU list, always consistent.
+    fn write(&self, i: usize) -> std::sync::RwLockWriteGuard<'_, Shard> {
+        self.shards[i].write().unwrap_or_else(|p| p.into_inner())
     }
 
-    fn read(&self) -> std::sync::RwLockReadGuard<'_, Inner> {
-        self.inner.read().unwrap_or_else(|p| p.into_inner())
+    fn read(&self, i: usize) -> std::sync::RwLockReadGuard<'_, Shard> {
+        self.shards[i].read().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn spill_log(&self) -> std::sync::MutexGuard<'_, Vec<SpillRecord>> {
+        self.spilled.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn sum(counters: &[AtomicU64]) -> u64 {
+        counters.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Find the live entry matching `key` (exact key or bare model
+    /// name) with the *globally* newest tick, refresh it, and return
+    /// the artifact plus its shard.  Never holds two shard locks.
+    fn lookup_touch(&self, key: &str) -> Option<(usize, Arc<QuantizedModel>)> {
+        let matches = |e: &Entry| e.0 == key || e.1.model == key;
+        // Pass 1 (read locks, one shard at a time): most recent match.
+        let mut best: Option<(usize, u64)> = None;
+        for i in 0..self.shards.len() {
+            if let Some(e) = self.read(i).entries.iter().find(|e| matches(e)) {
+                if best.map_or(true, |(_, t)| e.2 > t) {
+                    best = Some((i, e.2));
+                }
+            }
+        }
+        let (si, _) = best?;
+        // Pass 2: re-find under the write lock (the entry may have
+        // moved or been evicted in between — then it is simply a miss).
+        let mut shard = self.write(si);
+        let pos = shard.entries.iter().position(matches)?;
+        let mut entry = shard.entries.remove(pos);
+        entry.2 = self.next_tick();
+        let qm = entry.1.clone();
+        shard.entries.insert(0, entry);
+        Some((si, qm))
     }
 
     /// Look up by exact key or bare model name (most recently used
     /// wins), refreshing the entry's recency on a hit.  This is the
-    /// serving hot path: exactly one gauge update per call, issued
-    /// after the registry lock is released.
+    /// serving hot path: the aggregate gauge plus the touched shard's
+    /// gauge are published after every shard lock is released.
     pub fn get(&self, key: &str) -> Option<Arc<QuantizedModel>> {
-        let mut m = self.write();
-        let pos = m.entries.iter().position(|(k, qm)| k == key || qm.model == key);
-        let (out, gauge, count) = match pos {
-            Some(p) => {
-                let entry = m.entries.remove(p);
-                let qm = entry.1.clone();
-                m.entries.insert(0, entry);
-                m.hits += 1;
-                (Some(qm), "registry_hits", m.hits)
+        match self.lookup_touch(key) {
+            Some((si, qm)) => {
+                let n = self.hits[si].fetch_add(1, Ordering::Relaxed) + 1;
+                metrics::set("registry_hits", Self::sum(&self.hits) as f64);
+                metrics::set(&format!("registry_hits_shard{si}"), n as f64);
+                Some(qm)
             }
             None => {
-                m.misses += 1;
-                (None, "registry_misses", m.misses)
+                let si = self.shard_of(key);
+                let n = self.misses[si].fetch_add(1, Ordering::Relaxed) + 1;
+                metrics::set("registry_misses", Self::sum(&self.misses) as f64);
+                metrics::set(&format!("registry_misses_shard{si}"), n as f64);
+                None
             }
-        };
-        drop(m);
-        metrics::set(gauge, count as f64);
-        out
+        }
     }
 
-    /// Insert (or refresh) `key`, evicting least-recently-used entries
-    /// beyond capacity.  Cold path (one `pack` job per call): the full
-    /// gauge set is republished, outside the lock.
-    pub fn put(&self, key: String, qm: Arc<QuantizedModel>) {
-        let mut m = self.write();
-        m.entries.retain(|(k, _)| *k != key);
-        m.entries.insert(0, (key, qm));
-        while m.entries.len() > m.cap {
-            let (evicted, _) = m.entries.pop().expect("non-empty");
-            m.evictions += 1;
-            log::info!("registry evicted {evicted}");
+    /// [`ModelRegistry::get`] with transparent spill reload: a miss on
+    /// a key that was evicted to disk loads the artifact back
+    /// ([`QuantizedModel::load`]), re-admits it under its original pack
+    /// key and returns it — the caller cannot tell a reload from a hit
+    /// except through the `registry_reload*` counters.  Disk I/O runs
+    /// outside every shard lock.
+    pub fn get_or_reload(&self, key: &str) -> Option<Arc<QuantizedModel>> {
+        if let Some(qm) = self.get(key) {
+            return Some(qm);
         }
-        let (size, evictions) = (m.entries.len(), m.evictions);
-        drop(m);
-        metrics::set("registry_size", size as f64);
-        metrics::set("registry_evictions", evictions as f64);
+        let (spill_key, dir) = {
+            let log = self.spill_log();
+            let rec = log.iter().find(|r| r.key == key || r.model == key)?;
+            (rec.key.clone(), rec.dir.clone())
+        };
+        match QuantizedModel::load(&dir) {
+            Ok(qm) => {
+                let arc = Arc::new(qm);
+                let n = self.reloads.fetch_add(1, Ordering::Relaxed) + 1;
+                metrics::set("registry_reloads", n as f64);
+                log::info!("registry reloaded {spill_key} from {dir:?}");
+                self.put(spill_key, arc.clone());
+                Some(arc)
+            }
+            Err(e) => {
+                metrics::inc("registry_reload_errors");
+                log::warn!("registry reload of {spill_key} from {dir:?} failed: {e:#}");
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) `key`, evicting globally-least-recently-used
+    /// entries beyond the capacity budget (spilling them to disk when a
+    /// spill directory is configured).  Cold path (one `pack` job per
+    /// call): the full gauge set is republished, outside the locks.
+    pub fn put(&self, key: String, qm: Arc<QuantizedModel>) {
+        let si = self.shard_of(&key);
+        {
+            let mut shard = self.write(si);
+            shard.entries.retain(|(k, _, _)| *k != key);
+            let tick = self.next_tick();
+            shard.entries.insert(0, (key, qm, tick));
+        }
+        self.enforce_cap();
+        metrics::set("registry_size", self.len() as f64);
+        metrics::set("registry_evictions", Self::sum(&self.evictions) as f64);
+    }
+
+    /// Pop globally-oldest entries until the budget holds.  Each shard's
+    /// tail is its least-recent entry, so the global victim is the tail
+    /// with the smallest tick.  Locks are taken one shard at a time;
+    /// spill I/O happens with no lock held.
+    fn enforce_cap(&self) {
+        loop {
+            let total: usize = (0..self.shards.len()).map(|i| self.read(i).entries.len()).sum();
+            if total <= self.cap {
+                return;
+            }
+            let mut victim: Option<(usize, u64)> = None;
+            for i in 0..self.shards.len() {
+                if let Some(e) = self.read(i).entries.last() {
+                    if victim.map_or(true, |(_, t)| e.2 < t) {
+                        victim = Some((i, e.2));
+                    }
+                }
+            }
+            let Some((vi, _)) = victim else { return };
+            let Some((key, qm, _)) = self.write(vi).entries.pop() else { continue };
+            let n = self.evictions[vi].fetch_add(1, Ordering::Relaxed) + 1;
+            metrics::set(&format!("registry_evictions_shard{vi}"), n as f64);
+            self.spill(&key, &qm);
+            log::info!("registry evicted {key}");
+        }
+    }
+
+    /// Persist an evicted artifact for later [`Self::get_or_reload`].
+    /// A save failure is logged and counted, never fatal: the registry
+    /// degrades to the historical evict-means-gone behaviour.
+    fn spill(&self, key: &str, qm: &QuantizedModel) {
+        let Some(base) = &self.spill_dir else { return };
+        let dir = base.join(spill_dir_name(key));
+        match qm.save(&dir) {
+            Ok(()) => {
+                let n = self.spills.fetch_add(1, Ordering::Relaxed) + 1;
+                metrics::set("registry_spills", n as f64);
+                let mut log = self.spill_log();
+                log.retain(|r| r.key != key);
+                log.insert(
+                    0,
+                    SpillRecord { key: key.to_string(), model: qm.model.clone(), dir },
+                );
+            }
+            Err(e) => {
+                metrics::inc("registry_spill_errors");
+                log::warn!("registry spill of {key} failed: {e:#}");
+            }
+        }
     }
 
     /// Whether `key` (exact or bare model name) is resident, without
     /// touching recency or the hit/miss counters.
     pub fn contains(&self, key: &str) -> bool {
-        self.read().entries.iter().any(|(k, qm)| k == key || qm.model == key)
+        (0..self.shards.len())
+            .any(|i| self.read(i).entries.iter().any(|(k, qm, _)| k == key || qm.model == key))
+    }
+
+    /// Every entry across shards, most recently used first (by global
+    /// tick).
+    fn collect_sorted<T>(&self, f: impl Fn(&Entry) -> T) -> Vec<T> {
+        let mut all: Vec<(u64, T)> = Vec::new();
+        for i in 0..self.shards.len() {
+            all.extend(self.read(i).entries.iter().map(|e| (e.2, f(e))));
+        }
+        all.sort_by(|a, b| b.0.cmp(&a.0));
+        all.into_iter().map(|(_, t)| t).collect()
     }
 
     /// Resident keys, most recently used first.
     pub fn keys(&self) -> Vec<String> {
-        self.read().entries.iter().map(|(k, _)| k.clone()).collect()
+        self.collect_sorted(|e| e.0.clone())
     }
 
     /// Resident `(key, per-layer weight bits)` pairs, most recently used
     /// first — what the `models` response echoes so clients can tell a
     /// mixed pack from a uniform one without fetching the artifact.
     pub fn entries_wbits(&self) -> Vec<(String, Vec<u32>)> {
-        self.read().entries.iter().map(|(k, qm)| (k.clone(), qm.wbits())).collect()
+        self.collect_sorted(|e| (e.0.clone(), e.1.wbits()))
     }
 
     pub fn len(&self) -> usize {
-        self.read().entries.len()
+        (0..self.shards.len()).map(|i| self.read(i).entries.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.read().entries.is_empty()
+        self.len() == 0
     }
 
     pub fn capacity(&self) -> usize {
-        self.read().cap
+        self.cap
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The spill directory, when spilling is configured.
+    pub fn spill_dir(&self) -> Option<&PathBuf> {
+        self.spill_dir.as_ref()
     }
 
     /// Counter snapshot for tests and the service response.
     pub fn stats(&self) -> RegistryStats {
-        let m = self.read();
         RegistryStats {
-            size: m.entries.len(),
-            capacity: m.cap,
-            hits: m.hits,
-            misses: m.misses,
-            evictions: m.evictions,
+            size: self.len(),
+            capacity: self.cap,
+            shards: self.shards.len(),
+            hits: Self::sum(&self.hits),
+            misses: Self::sum(&self.misses),
+            evictions: Self::sum(&self.evictions),
+            spills: self.spills.load(Ordering::Relaxed),
+            reloads: self.reloads.load(Ordering::Relaxed),
         }
     }
+}
+
+/// Filesystem-safe directory name for a spilled pack key: sanitized
+/// text for humans plus the FNV hash so distinct keys (`cnn6:w[8.4]a4`
+/// vs `cnn6:w[8,4]a4`-style collisions after sanitizing) can never
+/// share a directory.
+fn spill_dir_name(key: &str) -> String {
+    let san: String = key
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '_' })
+        .collect();
+    format!("{san}-{:08x}", fnv1a(key.as_bytes()) as u32)
 }
 
 #[cfg(test)]
@@ -211,5 +437,74 @@ mod tests {
         r.put("a".into(), dummy("a"));
         r.put("b".into(), dummy("b"));
         assert_eq!(r.len(), 1);
+    }
+
+    /// The sharded registry must behave exactly like one global LRU:
+    /// whatever shard an entry hashes to, the *globally* least recently
+    /// touched entry is the victim.
+    #[test]
+    fn sharded_eviction_is_globally_lru() {
+        let r = ModelRegistry::with_options(2, 4, None);
+        assert_eq!(r.shard_count(), 4);
+        r.put("a:w8a8:MMSE".into(), dummy("a"));
+        r.put("b:w8a8:MMSE".into(), dummy("b"));
+        assert!(r.get("a:w8a8:MMSE").is_some());
+        r.put("c:w8a8:MMSE".into(), dummy("c"));
+        assert_eq!(r.len(), 2);
+        assert!(r.contains("a:w8a8:MMSE"), "recently touched entry survived: {:?}", r.keys());
+        assert!(r.contains("c:w8a8:MMSE"));
+        assert!(!r.contains("b:w8a8:MMSE"), "global LRU victim: {:?}", r.keys());
+        // keys() reports the global recency order across shards
+        assert_eq!(r.keys(), vec!["c:w8a8:MMSE".to_string(), "a:w8a8:MMSE".to_string()]);
+        assert_eq!(r.stats().evictions, 1);
+        assert_eq!(r.stats().shards, 4);
+    }
+
+    #[test]
+    fn bare_name_resolves_across_shards_most_recent_wins() {
+        let r = ModelRegistry::with_options(8, 8, None);
+        // Same model under two pack keys, which land on (likely)
+        // different shards; the later-touched one must win.
+        r.put("mlp3:w8a8:LAPQ".into(), dummy("mlp3"));
+        r.put("mlp3:w4a4:MMSE".into(), dummy("mlp3"));
+        assert_eq!(r.get("mlp3").unwrap().model, "mlp3");
+        assert_eq!(r.keys()[0], "mlp3:w4a4:MMSE");
+        assert!(r.get("mlp3:w8a8:LAPQ").is_some());
+        assert_eq!(r.keys()[0], "mlp3:w8a8:LAPQ");
+    }
+
+    #[test]
+    fn spill_and_reload_roundtrip() {
+        let base =
+            std::env::temp_dir().join(format!("lapq_registry_spill_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let r = ModelRegistry::with_options(1, 2, Some(base.clone()));
+        r.put("mlp3:w8a8:MMSE".into(), dummy("mlp3"));
+        r.put("cnn6:w8a8:MMSE".into(), dummy("cnn6"));
+        // mlp3 was evicted and spilled ...
+        assert!(!r.contains("mlp3:w8a8:MMSE"));
+        assert_eq!(r.stats().spills, 1);
+        // ... plain get still misses ...
+        assert!(r.get("mlp3:w8a8:MMSE").is_none());
+        // ... but get_or_reload brings it back (evicting cnn6 in turn).
+        let qm = r.get_or_reload("mlp3:w8a8:MMSE").expect("reload from spill");
+        assert_eq!(qm.model, "mlp3");
+        assert!(r.contains("mlp3:w8a8:MMSE"));
+        let s = r.stats();
+        assert_eq!(s.reloads, 1);
+        assert!(s.spills >= 2, "cnn6's eviction must spill too: {s:?}");
+        // bare-model-name fallback resolves through the spill log too
+        assert!(r.get_or_reload("cnn6").is_some());
+        assert_eq!(r.stats().reloads, 2);
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn reload_without_spill_dir_is_a_plain_miss() {
+        let r = ModelRegistry::with_options(1, 2, None);
+        r.put("a".into(), dummy("a"));
+        r.put("b".into(), dummy("b"));
+        assert!(r.get_or_reload("a").is_none());
+        assert_eq!(r.stats().reloads, 0);
     }
 }

@@ -1,0 +1,330 @@
+//! End-to-end tests for the fleet tier.
+//!
+//! 1. Registry disk spill: a model evicted from a tiny sharded registry
+//!    is transparently reloaded on the next infer, bit-identical.
+//! 2. The consistent-hash router over two *child-process* pool replicas
+//!    (spawned through the real CLI) answers byte-identical to a single
+//!    pool server — before and after one replica is killed.
+//! 3. An overload shed from the key's owning replica is retried on the
+//!    next ring candidate instead of surfacing to the client.
+
+use lapq::config::{BitSpec, ExperimentConfig, FleetCfg, Method};
+use lapq::coordinator::jobs::Runner;
+use lapq::proto::{InferRequest, Request};
+use lapq::runtime::int::PackOpts;
+use lapq::runtime::EngineHandle;
+use lapq::serve::fleet::Ring;
+use lapq::serve::{ModelRegistry, Router};
+use lapq::tensor::HostTensor;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn fast_cfg(method: Method) -> ExperimentConfig {
+    ExperimentConfig {
+        model: "mlp3".into(),
+        train_steps: 40,
+        lr: 0.1,
+        val_size: 512,
+        bits: BitSpec::new(8, 8),
+        method,
+        ..Default::default()
+    }
+}
+
+fn inputs_for(t: usize) -> Vec<HostTensor> {
+    let data: Vec<f32> =
+        (0..2 * 64).map(|j| ((j * 31 + t * 7) % 17) as f32 * 0.125 - 1.0).collect();
+    vec![HostTensor::f32(vec![2, 64], data)]
+}
+
+fn infer_line(key: &str, t: usize) -> String {
+    let ir = InferRequest { key: key.into(), inputs: inputs_for(t) };
+    let mut line = String::new();
+    Request::Infer(ir).write_json(&mut line);
+    line
+}
+
+/// Zero the wall-clock `"seconds"` value in a JSON reply so the rest of
+/// the response can be compared byte for byte across servers.
+fn normalize_seconds(line: &str) -> String {
+    match line.find("\"seconds\":") {
+        None => line.to_string(),
+        Some(i) => {
+            let start = i + "\"seconds\":".len();
+            let end = line[start..]
+                .find([',', '}'])
+                .map(|j| start + j)
+                .expect("seconds value is delimited");
+            format!("{}0{}", &line[..start], &line[end..])
+        }
+    }
+}
+
+// ---------------------------------------------------------------- spill
+
+#[test]
+fn evicted_model_reloads_from_spill_bit_identical() {
+    let dir = std::env::temp_dir().join(format!("lapq_fleet_spill_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let eng = EngineHandle::start_default().expect("engine boots");
+    // cap 1 over 2 shards: the second pack must evict (and spill) the
+    // first, wherever the two keys hash.
+    let registry = Arc::new(ModelRegistry::with_options(1, 2, Some(dir.clone())));
+    let mut runner = Runner::with_registry(eng, registry.clone());
+
+    let cfg_a = fast_cfg(Method::Mmse);
+    let key_a = Runner::pack_key(&cfg_a);
+    runner.pack(&cfg_a, &PackOpts::default()).expect("pack a");
+    let before = runner.infer(&key_a, &inputs_for(0)).expect("infer before eviction");
+
+    let cfg_b = fast_cfg(Method::MinMax);
+    runner.pack(&cfg_b, &PackOpts::default()).expect("pack b");
+    let stats = registry.stats();
+    assert!(stats.evictions >= 1, "cap 1 must evict: {stats:?}");
+    assert!(stats.spills >= 1, "eviction must spill to disk: {stats:?}");
+
+    // The evicted key infers again: transparently reloaded, same bits.
+    let after = runner.infer(&key_a, &inputs_for(0)).expect("infer after eviction reloads");
+    let bits = |r: &lapq::coordinator::jobs::InferReply| -> Vec<u32> {
+        r.logits.data.iter().map(|v| v.to_bits()).collect()
+    };
+    assert_eq!(bits(&before), bits(&after), "reloaded logits are bit-identical");
+    assert!(registry.stats().reloads >= 1, "reload counter bumps: {:?}", registry.stats());
+
+    // A key that was never packed still fails — with the typed token.
+    let err = runner.infer("ghost:w8a8:MinMax", &inputs_for(0)).expect_err("ghost key");
+    assert!(lapq::proto::is_model_not_packed(&err), "typed miss, got: {err:#}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --------------------------------------------------------- child fleet
+
+/// A pool-server replica spawned through the real CLI, killed on drop.
+struct Replica {
+    child: Child,
+    addr: SocketAddr,
+    key: String,
+}
+
+impl Drop for Replica {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_replica() -> Replica {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--preload",
+            "mlp3",
+            "--workers",
+            "2",
+            "-s",
+            "train_steps=40",
+            "-s",
+            "lr=0.1",
+            "-s",
+            "val_size=512",
+            "-s",
+            "bits_w=8",
+            "-s",
+            "bits_a=8",
+            "-s",
+            "method=mmse",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn replica (CARGO_BIN_EXE_repro)");
+    let stdout = child.stdout.take().expect("stdout piped");
+    let mut lines = BufReader::new(stdout).lines();
+    let mut key = String::new();
+    let addr = loop {
+        let line = lines
+            .next()
+            .expect("replica exited before 'serving on'")
+            .expect("replica stdout read");
+        if let Some(rest) = line.strip_prefix("preloaded: ") {
+            key = rest.trim().to_string();
+        } else if let Some(rest) = line.strip_prefix("serving on ") {
+            let tok = rest.split_whitespace().next().expect("addr token");
+            break tok.parse().expect("replica addr parses");
+        }
+    };
+    assert!(!key.is_empty(), "replica printed no preloaded key");
+    // Drain the rest of stdout forever so the child can never block on
+    // a full pipe.
+    std::thread::spawn(move || for _ in lines {});
+    Replica { child, addr, key }
+}
+
+/// A persistent raw JSON-lines connection (requests and responses are
+/// exact lines; responses compared byte-for-byte).
+struct Conn {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Conn {
+    fn connect(addr: &SocketAddr) -> Conn {
+        let s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        s.set_write_timeout(Some(Duration::from_secs(120))).unwrap();
+        let w = s.try_clone().unwrap();
+        Conn { w, r: BufReader::new(s) }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> String {
+        self.w.write_all(line.as_bytes()).unwrap();
+        self.w.write_all(b"\n").unwrap();
+        self.w.flush().unwrap();
+        let mut out = String::new();
+        self.r.read_line(&mut out).expect("read response line");
+        out
+    }
+}
+
+fn oneshot(addr: &SocketAddr, line: &str) -> String {
+    Conn::connect(addr).roundtrip(line)
+}
+
+#[test]
+fn router_matches_single_pool_and_fails_over() {
+    let mut reps = vec![spawn_replica(), spawn_replica()];
+    assert_eq!(reps[0].key, reps[1].key, "replicas pack deterministically");
+    let key = reps[0].key.clone();
+
+    let fcfg = FleetCfg {
+        replicas: vec![reps[0].addr.to_string(), reps[1].addr.to_string()],
+        vnodes: 64,
+        ping_interval_ms: 100,
+        fail_threshold: 2,
+        eject_ms: 500,
+    };
+    let router = Router::bind("127.0.0.1:0", &fcfg).expect("router binds");
+    let raddr = router.addr;
+    let handle = router.shutdown_handle();
+    let rt = std::thread::spawn(move || router.serve(usize::MAX).unwrap());
+
+    let mut through = Conn::connect(&raddr);
+
+    // ping and models are the router's own answers
+    let pong = through.roundtrip("{\"cmd\":\"ping\"}");
+    assert!(pong.contains("\"ok\":true"), "{pong}");
+    let models = through.roundtrip("{\"cmd\":\"models\"}");
+    assert!(models.contains(&key), "merged models lists the pack: {models}");
+
+    // full fleet: every routed infer is byte-identical to one pool
+    for t in 0..4 {
+        let line = infer_line(&key, t);
+        let got = through.roundtrip(&line);
+        let want = oneshot(&reps[0].addr, &line);
+        assert!(got.contains("\"ok\":true"), "routed infer failed: {got}");
+        assert_eq!(normalize_seconds(&got), normalize_seconds(&want), "request {t}");
+    }
+
+    // the typed registry miss relays through untouched
+    let ghost = infer_line("ghost:w8a8:MinMax", 0);
+    let miss = through.roundtrip(&ghost);
+    assert!(
+        miss.starts_with("{\"error\":\"model_not_packed\""),
+        "typed miss through the router: {miss}"
+    );
+
+    // Kill the key's *owning* replica: the same persistent client
+    // connection (with its cached upstream) must fail over and stay
+    // byte-identical to the survivor.
+    let owner = Ring::new(2, fcfg.vnodes).candidates(&key)[0];
+    let survivor = reps[1 - owner].addr;
+    drop(reps.remove(owner));
+    for t in 4..10 {
+        let line = infer_line(&key, t);
+        let got = through.roundtrip(&line);
+        let want = oneshot(&survivor, &line);
+        assert!(got.contains("\"ok\":true"), "post-kill routed infer failed: {got}");
+        assert_eq!(normalize_seconds(&got), normalize_seconds(&want), "request {t} after kill");
+    }
+
+    drop(through);
+    handle.shutdown();
+    rt.join().unwrap();
+}
+
+// ------------------------------------------------------------- sheds
+
+/// A fake replica that answers pings but sheds every other request,
+/// counting the sheds it served.
+fn spawn_shedding_replica(shed_count: Arc<AtomicUsize>) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind fake replica");
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let shed_count = shed_count.clone();
+            std::thread::spawn(move || {
+                let mut w = stream.try_clone().unwrap();
+                let r = BufReader::new(stream);
+                for line in r.lines() {
+                    let Ok(line) = line else { break };
+                    let reply = if line.contains("\"cmd\":\"ping\"") {
+                        "{\"ok\":true,\"pong\":true}\n".to_string()
+                    } else {
+                        shed_count.fetch_add(1, Ordering::SeqCst);
+                        "{\"error\":\"overloaded\",\"ok\":false,\"retry_after_ms\":5}\n".into()
+                    };
+                    if w.write_all(reply.as_bytes()).and_then(|_| w.flush()).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    addr
+}
+
+#[test]
+fn overload_shed_retries_on_the_next_ring_candidate() {
+    let real = spawn_replica();
+    let key = real.key.clone();
+    let sheds = Arc::new(AtomicUsize::new(0));
+    let fake = spawn_shedding_replica(sheds.clone());
+
+    // Place the always-shedding fake at the key's owning ring slot so
+    // the router *must* hit it first and retry onto the real replica.
+    let owner = Ring::new(2, 64).candidates(&key)[0];
+    let mut replicas = vec![String::new(), String::new()];
+    replicas[owner] = fake.to_string();
+    replicas[1 - owner] = real.addr.to_string();
+
+    let fcfg = FleetCfg {
+        replicas,
+        vnodes: 64,
+        ping_interval_ms: 100,
+        fail_threshold: 3,
+        eject_ms: 1000,
+    };
+    let router = Router::bind("127.0.0.1:0", &fcfg).expect("router binds");
+    let raddr = router.addr;
+    let handle = router.shutdown_handle();
+    let rt = std::thread::spawn(move || router.serve(usize::MAX).unwrap());
+
+    let line = infer_line(&key, 1);
+    let got = oneshot(&raddr, &line);
+    let want = oneshot(&real.addr, &line);
+    assert!(got.contains("\"ok\":true"), "shed must be retried, not surfaced: {got}");
+    assert_eq!(normalize_seconds(&got), normalize_seconds(&want), "retried reply matches");
+    assert!(sheds.load(Ordering::SeqCst) >= 1, "the owning replica did shed first");
+
+    handle.shutdown();
+    rt.join().unwrap();
+}

@@ -137,6 +137,7 @@ fn response_roundtrip_every_variant() {
         Response::UnknownCmd { cmd: "frobnicate".into() },
         Response::TooLarge { limit_bytes: 8 << 20 },
         Response::Overloaded { retry_after_ms: 25 },
+        Response::ModelNotPacked { key: "ghost:w8a8:MMSE".into() },
     ];
     for resp in resps {
         let line = resp_line(&resp);
